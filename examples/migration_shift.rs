@@ -1,0 +1,28 @@
+//! The paper's **migration study** (Fig. 7) as a runnable scenario: serve
+//! DeepSeek-V2-Lite through a workload shift (MultiData → BigBench) with
+//! and without the migration mechanism, and print the local-compute-ratio
+//! timelines plus the migration events.
+//!
+//! ```bash
+//! cargo run --release --example migration_shift
+//! ```
+
+use dancemoe::exp::fig7;
+
+fn main() {
+    let f = fig7::run(120, 7);
+    println!("{}", f.render());
+
+    let w = f.arm("w/ ");
+    let wo = f.arm("w/o");
+    let gain = 1.0 - w.avg_latency / wo.avg_latency;
+    println!(
+        "\nmigration reduced average latency {:.2}s -> {:.2}s ({:.1}%)",
+        wo.avg_latency,
+        w.avg_latency,
+        gain * 100.0
+    );
+    println!(
+        "(paper observed 7.48s -> 6.73s, a 10% reduction, with 3 migrations)"
+    );
+}

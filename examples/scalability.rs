@@ -1,0 +1,19 @@
+//! The paper's **scalability study** (Fig. 8) as a runnable scenario:
+//! sweep GPU count and bandwidth with the event-driven engine and print
+//! both panels.
+//!
+//! ```bash
+//! cargo run --release --example scalability
+//! ```
+
+use dancemoe::exp::fig8;
+
+fn main() {
+    // shorter horizon than the bench for interactive runtimes
+    let f = fig8::run(300.0, 7);
+    println!("{}", f.render());
+    println!(
+        "(paper: 9-19% improvement with GPU scale; >55% from bandwidth at \
+         4 GPUs, ~35% at 256 GPUs)"
+    );
+}

@@ -1,0 +1,75 @@
+"""L1 Pallas kernels: gating network and the non-MoE mixer block.
+
+Both are small single-step kernels (the gate is an [B,H]x[H,E] GEMM + row
+softmax; the mixer is RMSNorm + [B,H]x[H,H] GEMM + GELU residual). They are
+kept as Pallas kernels so the *entire* per-layer compute the Rust engine
+executes is Pallas-authored and lowers into the same HLO artifact set as the
+expert FFN.
+
+interpret=True for the CPU PJRT path — see moe_ffn.py for the rationale.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gate_kernel(h_ref, wg_ref, o_ref):
+    """logits = h @ wg; numerically-stable row softmax."""
+    logits = jnp.dot(h_ref[...], wg_ref[...], preferred_element_type=jnp.float32)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    z = jnp.exp(logits - m)
+    o_ref[...] = (z / jnp.sum(z, axis=-1, keepdims=True)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gate(h: jax.Array, wg: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """Gating probabilities: row-softmax of ``h @ wg``.
+
+    Shapes: h[B,H], wg[H,E] -> probs[B,E]. E is at most 64 in the paper's
+    models (DeepSeek-V2-Lite), so a single VMEM-resident step suffices.
+    """
+    b, hd = h.shape
+    e = wg.shape[1]
+    if wg.shape[0] != hd:
+        raise ValueError(f"gate shapes mismatch: h{h.shape} wg{wg.shape}")
+    return pl.pallas_call(
+        _gate_kernel,
+        out_shape=jax.ShapeDtypeStruct((b, e), h.dtype),
+        interpret=interpret,
+    )(h, wg)
+
+
+def _nonmoe_kernel(x_ref, wm_ref, s_ref, o_ref):
+    """y = x + gelu(rmsnorm(x, s) @ wm), all in f32 internally."""
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    hn = x * jax.lax.rsqrt(var + 1e-6) * s_ref[...]
+    y = jnp.dot(
+        hn.astype(x_ref.dtype), wm_ref[...], preferred_element_type=jnp.float32
+    )
+    o_ref[...] = (x + jax.nn.gelu(y)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def nonmoe(
+    x: jax.Array, wm: jax.Array, scale: jax.Array, *, interpret: bool = True
+) -> jax.Array:
+    """Non-MoE mixer block (attention stand-in): ``x + gelu(rmsnorm(x)@wm)``.
+
+    Shapes: x[B,H], wm[H,H], scale[H] -> y[B,H].
+    """
+    b, hd = x.shape
+    if wm.shape != (hd, hd) or scale.shape != (hd,):
+        raise ValueError(
+            f"nonmoe shapes mismatch: x{x.shape} wm{wm.shape} s{scale.shape}"
+        )
+    return pl.pallas_call(
+        _nonmoe_kernel,
+        out_shape=jax.ShapeDtypeStruct((b, hd), x.dtype),
+        interpret=interpret,
+    )(x, wm, scale)

@@ -1,0 +1,107 @@
+"""L1 Pallas kernel: grouped expert FFN (all experts of a layer in one
+launch).
+
+The per-expert kernel in ``moe_ffn.py`` is the minimal serving unit; real
+MoE layers batch *all* routed tokens of a layer through one grouped launch
+so the MXU never drains between experts. This kernel computes, for stacked
+weights ``w1/w3/w2[E, ...]`` and a token matrix grouped by expert (tokens of
+expert 0 first, then expert 1, ...), the SwiGLU FFN of every token against
+its group's expert.
+
+Grouping metadata is a dense per-token expert index (``sizes`` prefix sums
+are computed by the caller). The kernel grid iterates experts; each step
+masks rows not belonging to the current expert and accumulates — the Pallas
+analogue of a grouped GEMM with row masking (TPU-friendly: no gather, all
+shapes static).
+
+interpret=True for the CPU PJRT path, as everywhere in this repo.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _grouped_kernel(x_ref, seg_ref, w1_ref, w3_ref, w2_ref, o_ref):
+    """Grid step e: accumulate SwiGLU(x) @ w2 for rows with seg == e."""
+    e = pl.program_id(0)
+
+    @pl.when(e == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]
+    # row mask for this expert's segment
+    mask = (seg_ref[...] == e).astype(x.dtype)[:, None]  # [B,1]
+    h1 = jnp.dot(x, w1_ref[0], preferred_element_type=jnp.float32)
+    h3 = jnp.dot(x, w3_ref[0], preferred_element_type=jnp.float32)
+    g = (h1 * jax.nn.sigmoid(h1)) * h3
+    y = jnp.dot(
+        g.astype(x.dtype), w2_ref[0], preferred_element_type=jnp.float32
+    )
+    o_ref[...] += (y * mask).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def grouped_ffn(
+    x: jax.Array,
+    seg: jax.Array,
+    w1: jax.Array,
+    w3: jax.Array,
+    w2: jax.Array,
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    """Grouped SwiGLU FFN.
+
+    Shapes: x[B,H], seg[B] (int32 expert id per row), w1[E,H,F], w3[E,H,F],
+    w2[E,F,H] -> y[B,H] where row b is FFN_{seg[b]}(x[b]).
+
+    The grid axis is the expert index; BlockSpecs stream one expert's weight
+    panels per step while the token block stays VMEM-resident.
+    """
+    b, h = x.shape
+    e, hh, f = w1.shape
+    if hh != h or w3.shape != (e, h, f) or w2.shape != (e, f, h):
+        raise ValueError(
+            f"inconsistent shapes: x{x.shape} w1{w1.shape} w3{w3.shape} "
+            f"w2{w2.shape}"
+        )
+    if seg.shape != (b,):
+        raise ValueError(f"seg shape {seg.shape} != ({b},)")
+    return pl.pallas_call(
+        _grouped_kernel,
+        grid=(e,),
+        in_specs=[
+            pl.BlockSpec((b, h), lambda i: (0, 0)),   # tokens resident
+            pl.BlockSpec((b,), lambda i: (0,)),       # segment ids resident
+            pl.BlockSpec((1, h, f), lambda i: (i, 0, 0)),  # expert i panels
+            pl.BlockSpec((1, h, f), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, f, h), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, h), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h), x.dtype),
+        interpret=interpret,
+    )(x, seg.astype(jnp.int32), w1, w3, w2)
+
+
+def grouped_ffn_ref(
+    x: jax.Array,
+    seg: jax.Array,
+    w1: jax.Array,
+    w3: jax.Array,
+    w2: jax.Array,
+) -> jax.Array:
+    """Oracle: per-row expert FFN via dense compute + one-hot select."""
+    from compile.kernels import ref
+
+    e = w1.shape[0]
+    ys = jax.vmap(lambda a, c, d: ref.expert_ffn_ref(x, a, c, d))(
+        w1, w3, w2
+    )  # [E,B,H]
+    onehot = jax.nn.one_hot(seg, e, dtype=x.dtype)  # [B,E]
+    return jnp.einsum("be,ebh->bh", onehot, ys).astype(x.dtype)

@@ -1,0 +1,130 @@
+"""L1 Pallas kernel: tiled SwiGLU expert FFN (the MoE compute hot-spot).
+
+The paper's expert hot path on A100s is a pair of dense GEMMs per expert.
+Re-thought for TPU (see DESIGN.md §Hardware-Adaptation):
+
+- the FFN (``F``) dimension is the grid axis; each grid step streams one
+  (H × block_f) panel of ``w1``/``w3`` and one (block_f × H) panel of ``w2``
+  from HBM into VMEM via ``BlockSpec`` index maps — the declarative analogue
+  of the CUDA threadblock schedule;
+- the activation tile x[block_b, H] stays resident in VMEM across the grid
+  (its index map is constant in the F axis);
+- both GEMMs use ``preferred_element_type=f32`` over MXU-aligned tiles so
+  Mosaic maps them onto the 128×128 systolic array;
+- the second GEMM accumulates partial (block_b × H) results into the output
+  ref across grid steps — a split-K-style reduction expressed with
+  ``pl.when(j == 0)`` initialization.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so interpret mode is the correctness (and AOT) path; real-TPU
+efficiency is estimated from the tile geometry in DESIGN.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes. 128 matches the MXU native lane width; block_b is
+# clamped to the batch. For the scaled-down serving shapes (H=64, F=128) the
+# grid collapses to a single step, which is exactly right for VMEM: the whole
+# working set is ~200 KB.
+DEFAULT_BLOCK_F = 128
+
+
+def _ffn_kernel(x_ref, w1_ref, w3_ref, w2_ref, o_ref):
+    """One grid step: partial SwiGLU over a block_f-wide panel of the FFN dim."""
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]
+    # GEMM 1a/1b: [B,H] @ [H,bf] -> [B,bf], f32 accumulation on the MXU.
+    h1 = jnp.dot(x, w1_ref[...], preferred_element_type=jnp.float32)
+    h3 = jnp.dot(x, w3_ref[...], preferred_element_type=jnp.float32)
+    g = (h1 * jax.nn.sigmoid(h1)) * h3
+    # GEMM 2 (partial): [B,bf] @ [bf,H] -> [B,H], accumulated across the grid.
+    o_ref[...] += jnp.dot(
+        g.astype(x.dtype), w2_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_f", "interpret"))
+def expert_ffn(
+    x: jax.Array,
+    w1: jax.Array,
+    w3: jax.Array,
+    w2: jax.Array,
+    *,
+    block_f: int = DEFAULT_BLOCK_F,
+    interpret: bool = True,
+) -> jax.Array:
+    """SwiGLU expert FFN ``(silu(x@w1) * (x@w3)) @ w2`` as a Pallas kernel.
+
+    Shapes: x[B,H], w1[H,F], w3[H,F], w2[F,H] -> y[B,H]. ``F`` must be
+    divisible by ``block_f`` (callers pick block_f = min(F, 128) or pad).
+    """
+    b, h = x.shape
+    f = w1.shape[1]
+    if w1.shape != (h, f) or w3.shape != (h, f) or w2.shape != (f, h):
+        raise ValueError(
+            f"inconsistent FFN shapes: x{x.shape} w1{w1.shape} "
+            f"w3{w3.shape} w2{w2.shape}"
+        )
+    block_f = min(block_f, f)
+    if f % block_f != 0:
+        raise ValueError(f"F={f} not divisible by block_f={block_f}")
+    grid = (f // block_f,)
+    return pl.pallas_call(
+        _ffn_kernel,
+        grid=grid,
+        in_specs=[
+            # x: resident across the whole grid (constant index map).
+            pl.BlockSpec((b, h), lambda j: (0, 0)),
+            # w1/w3: stream the j-th (H, block_f) panel.
+            pl.BlockSpec((h, block_f), lambda j: (0, j)),
+            pl.BlockSpec((h, block_f), lambda j: (0, j)),
+            # w2: stream the j-th (block_f, H) panel.
+            pl.BlockSpec((block_f, h), lambda j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, h), lambda j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h), x.dtype),
+        interpret=interpret,
+    )(x, w1, w3, w2)
+
+
+def vmem_bytes(b: int, h: int, f: int, block_f: int, itemsize: int = 4) -> int:
+    """Estimated VMEM working set of one grid step (for DESIGN.md §Perf).
+
+    x tile + w1 panel + w3 panel + w2 panel + gated intermediate + output
+    accumulator, all resident simultaneously.
+    """
+    bf = min(block_f, f)
+    return itemsize * (
+        b * h          # x
+        + 2 * h * bf   # w1, w3 panels
+        + bf * h       # w2 panel
+        + 2 * b * bf   # h1/h3 + gated intermediate (upper bound)
+        + b * h        # output accumulator
+    )
+
+
+def mxu_utilization_estimate(b: int, h: int, f: int, block_f: int) -> float:
+    """Fraction of MXU lanes occupied by the kernel's GEMM tiles.
+
+    The 128×128 systolic array is fully fed when the contracted and output
+    dims are multiples of 128 and the batch tile is ≥ 8 (the sublane width).
+    This is the structural estimate recorded in DESIGN.md §Perf; it is not a
+    wall-clock measurement (interpret mode runs on CPU numpy).
+    """
+    bf = min(block_f, f)
+    lane = min(bf, 128) / 128.0        # GEMM1 output lanes
+    lane2 = min(h, 128) / 128.0        # GEMM2 output lanes
+    sublane = min(b, 8) / 8.0          # batch occupancy of the sublane dim
+    contract = min(h, 128) / 128.0     # GEMM1 contraction depth
+    return lane * lane2 * sublane * contract

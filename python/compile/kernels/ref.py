@@ -1,0 +1,127 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness).
+
+Every Pallas kernel in this package has a reference implementation here,
+written with plain ``jax.numpy`` ops only. ``python/tests`` sweeps shapes and
+dtypes with hypothesis and asserts the kernel output matches these oracles.
+
+The compute pieces mirror the MoE building blocks the Rust coordinator
+executes through PJRT at serving time:
+
+- ``expert_ffn_ref``  — a SwiGLU expert FFN (the per-expert hot path),
+- ``gate_ref``        — the gating network (logits + row softmax),
+- ``nonmoe_ref``      — the non-MoE mixer block standing in for attention,
+- ``moe_layer_dense_ref`` — a *dense* full MoE layer (all experts computed,
+  top-k mask applied), used as the end-to-end oracle for the Rust engine's
+  sparse routed execution.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def silu(x: jax.Array) -> jax.Array:
+    """SiLU / swish activation: x * sigmoid(x)."""
+    return x * jax.nn.sigmoid(x)
+
+
+def expert_ffn_ref(
+    x: jax.Array, w1: jax.Array, w3: jax.Array, w2: jax.Array
+) -> jax.Array:
+    """SwiGLU expert FFN: ``(silu(x @ w1) * (x @ w3)) @ w2``.
+
+    Shapes: x[B,H], w1[H,F], w3[H,F], w2[F,H] -> y[B,H].
+    Accumulation in f32 regardless of input dtype (matches the kernel).
+    """
+    h1 = jnp.dot(x, w1, preferred_element_type=jnp.float32)
+    h3 = jnp.dot(x, w3, preferred_element_type=jnp.float32)
+    # The gated intermediate is cast back to the input dtype before GEMM2,
+    # matching the Pallas kernel's quantization point (MXU inputs are in the
+    # model dtype; accumulation stays f32).
+    g = (silu(h1) * h3).astype(x.dtype)
+    return jnp.dot(g, w2, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def gate_ref(h: jax.Array, wg: jax.Array) -> jax.Array:
+    """Gating network: row-softmax of ``h @ wg``.
+
+    Shapes: h[B,H], wg[H,E] -> probs[B,E] (rows sum to 1).
+    """
+    logits = jnp.dot(h, wg, preferred_element_type=jnp.float32)
+    return jax.nn.softmax(logits, axis=-1).astype(h.dtype)
+
+
+def rmsnorm_ref(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm over the last axis: x * rsqrt(mean(x^2) + eps) * scale."""
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps) * scale).astype(
+        x.dtype
+    )
+
+
+def nonmoe_ref(x: jax.Array, wm: jax.Array, scale: jax.Array) -> jax.Array:
+    """Non-MoE mixer block: ``x + gelu(rmsnorm(x, scale) @ wm)``.
+
+    Stands in for the attention + norm layers of the transformer block; the
+    placement problem is agnostic to what the non-MoE compute is, only that
+    it runs on the request's home server. Shapes: x[B,H], wm[H,H], scale[H].
+    """
+    h = rmsnorm_ref(x, scale)
+    y = jnp.dot(h, wm, preferred_element_type=jnp.float32)
+    return (x.astype(jnp.float32) + jax.nn.gelu(y)).astype(x.dtype)
+
+
+def topk_weights_ref(probs: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
+    """Top-k gate weights, renormalized to sum to 1 among the selected k.
+
+    Returns (weights[B,k], indices[B,k]) — the Mixtral-style combine rule
+    the Rust router replicates.
+
+    Implemented as an iterative argmax instead of ``jax.lax.top_k``: newer
+    jax lowers TopK with a ``largest=true`` attribute that the pinned
+    xla_extension 0.5.1 HLO *text parser* rejects, and this oracle must AOT
+    into a loadable artifact. Ties resolve to the lower index, matching
+    both ``lax.top_k`` and the Rust router's ``topk_renorm``.
+    """
+    p = probs
+    vals = []
+    idxs = []
+    for _ in range(k):
+        i = jnp.argmax(p, axis=-1)  # [B]; ties -> lowest index
+        onehot = jax.nn.one_hot(i, probs.shape[-1], dtype=probs.dtype)
+        vals.append(jnp.sum(probs * onehot, axis=-1, keepdims=True))
+        idxs.append(i[:, None])
+        # exclude the selected column from later rounds (probs >= 0)
+        p = jnp.where(onehot > 0, -1.0, p)
+    v = jnp.concatenate(vals, axis=-1)  # [B,k]
+    idx = jnp.concatenate(idxs, axis=-1)  # [B,k]
+    w = v / jnp.sum(v, axis=-1, keepdims=True)
+    return w, idx
+
+
+def moe_layer_dense_ref(
+    h: jax.Array,
+    wg: jax.Array,
+    w1: jax.Array,
+    w3: jax.Array,
+    w2: jax.Array,
+    top_k: int,
+) -> jax.Array:
+    """Full MoE layer computed *densely* (every expert runs on every token).
+
+    Shapes: h[B,H], wg[H,E], w1[E,H,F], w3[E,H,F], w2[E,F,H] -> y[B,H].
+
+    The top-k mask + renormalized combine makes this numerically identical to
+    the sparse routed execution the Rust engine performs, so it serves as the
+    cross-language oracle.
+    """
+    num_experts = wg.shape[-1]
+    probs = gate_ref(h, wg)                          # [B,E]
+    weights, idx = topk_weights_ref(probs, top_k)    # [B,k] x2
+    # Scatter the renormalized weights back into a dense [B,E] combine matrix.
+    onehot = jax.nn.one_hot(idx, num_experts, dtype=probs.dtype)  # [B,k,E]
+    combine = jnp.einsum("bk,bke->be", weights, onehot)           # [B,E]
+    # Dense per-expert FFN: ye[E,B,H].
+    ye = jax.vmap(lambda a, b, c: expert_ffn_ref(h, a, b, c))(w1, w3, w2)
+    return jnp.einsum("be,ebh->bh", combine, ye).astype(h.dtype)

@@ -1,0 +1,161 @@
+"""L2: the JAX model pieces the Rust coordinator executes through PJRT.
+
+The serving engine decomposes an MoE transformer block into three compute
+pieces, each AOT-lowered to its own HLO artifact (see aot.py):
+
+- ``gate_fn``      — gating network (Pallas kernel ``kernels.gating.gate``),
+- ``expert_fn``    — one expert's SwiGLU FFN (Pallas ``kernels.moe_ffn``),
+- ``nonmoe_fn``    — non-MoE mixer block (Pallas ``kernels.gating.nonmoe``),
+
+plus a *dense* full-layer oracle (``moe_layer_dense_fn``) used only by tests
+to validate the Rust engine's sparse routed execution end-to-end.
+
+The decomposition mirrors the paper's Fig. 4 dataflow: the home server runs
+non-MoE + gating; expert FFNs run wherever the placement put the expert.
+Batch size is a *compile-time* constant per artifact, so aot.py emits one
+executable per (piece, batch-bucket) and the Rust runtime pads token groups
+up to the next bucket.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import gating as gating_k
+from compile.kernels import moe_ffn as ffn_k
+from compile.kernels import ref
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """Compile-time geometry of one MoE model variant.
+
+    ``hidden``/``ffn`` are the scaled-down *compute* shapes; the placement
+    math uses paper-scale byte sizes carried separately in the Rust configs
+    (DESIGN.md §2).
+    """
+
+    name: str
+    num_layers: int
+    num_experts: int
+    top_k: int
+    hidden: int = 64
+    ffn: int = 128
+    dtype: str = "float32"
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+
+# The two model variants of the paper's evaluation, with real routing
+# topology and scaled-down compute shapes.
+MIXTRAL_SIM = ModelSpec(
+    name="mixtral-8x7b-sim", num_layers=32, num_experts=8, top_k=2
+)
+DEEPSEEK_V2_LITE_SIM = ModelSpec(
+    name="deepseek-v2-lite-sim", num_layers=26, num_experts=64, top_k=8
+)
+TINY = ModelSpec(name="tiny", num_layers=4, num_experts=8, top_k=2)
+
+SPECS = {s.name: s for s in (MIXTRAL_SIM, DEEPSEEK_V2_LITE_SIM, TINY)}
+
+# Batch buckets: every token group is padded up to one of these sizes so a
+# fixed set of AOT executables covers all runtime batch shapes.
+BATCH_BUCKETS = (1, 8, 32)
+
+
+def gate_fn(h: jax.Array, wg: jax.Array) -> tuple[jax.Array]:
+    """Gating piece: probs[B,E] = softmax(h @ wg). 1-tuple for AOT."""
+    return (gating_k.gate(h, wg),)
+
+
+def expert_fn(
+    x: jax.Array, w1: jax.Array, w3: jax.Array, w2: jax.Array
+) -> tuple[jax.Array]:
+    """Expert piece: one SwiGLU FFN via the Pallas kernel. 1-tuple for AOT."""
+    return (ffn_k.expert_ffn(x, w1, w3, w2),)
+
+
+def nonmoe_fn(
+    x: jax.Array, wm: jax.Array, scale: jax.Array
+) -> tuple[jax.Array]:
+    """Non-MoE piece: mixer block via the Pallas kernel. 1-tuple for AOT."""
+    return (gating_k.nonmoe(x, wm, scale),)
+
+
+def moe_layer_dense_fn(
+    h: jax.Array,
+    wg: jax.Array,
+    w1: jax.Array,
+    w3: jax.Array,
+    w2: jax.Array,
+    *,
+    top_k: int,
+) -> tuple[jax.Array]:
+    """Dense full-MoE-layer oracle (tests only; never on the request path).
+
+    Runs every expert on every token and applies the renormalized top-k
+    combine — numerically identical to the engine's sparse routed execution.
+    """
+    return (ref.moe_layer_dense_ref(h, wg, w1, w3, w2, top_k),)
+
+
+def block_fwd(
+    h: jax.Array,
+    wm: jax.Array,
+    scale: jax.Array,
+    wg: jax.Array,
+    w1: jax.Array,
+    w3: jax.Array,
+    w2: jax.Array,
+    *,
+    top_k: int,
+) -> jax.Array:
+    """One full transformer block (non-MoE mixer + MoE layer), dense combine.
+
+    Reference composition used by python tests to validate that chaining the
+    three pieces the way the Rust engine does reproduces the fused block.
+    """
+    hm = gating_k.nonmoe(h, wm, scale)
+    return hm + ref.moe_layer_dense_ref(hm, wg, w1, w3, w2, top_k)
+
+
+def example_args(spec: ModelSpec, piece: str, batch: int):
+    """ShapeDtypeStructs for lowering ``piece`` at the given batch bucket."""
+    d = spec.jdtype
+    h, f, e = spec.hidden, spec.ffn, spec.num_experts
+    sd = jax.ShapeDtypeStruct
+    if piece == "gate":
+        return (sd((batch, h), d), sd((h, e), d))
+    if piece == "expert":
+        return (sd((batch, h), d), sd((h, f), d), sd((h, f), d), sd((f, h), d))
+    if piece == "nonmoe":
+        return (sd((batch, h), d), sd((h, h), d), sd((h,), d))
+    if piece == "moe_layer_dense":
+        return (
+            sd((batch, h), d),
+            sd((h, e), d),
+            sd((e, h, f), d),
+            sd((e, h, f), d),
+            sd((e, f, h), d),
+        )
+    raise ValueError(f"unknown piece {piece!r}")
+
+
+def piece_fn(spec: ModelSpec, piece: str):
+    """The lowerable callable for ``piece`` (top_k baked in where needed)."""
+    if piece == "gate":
+        return gate_fn
+    if piece == "expert":
+        return expert_fn
+    if piece == "nonmoe":
+        return nonmoe_fn
+    if piece == "moe_layer_dense":
+        import functools
+
+        return functools.partial(moe_layer_dense_fn, top_k=spec.top_k)
+    raise ValueError(f"unknown piece {piece!r}")

@@ -1,0 +1,192 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+Hypothesis sweeps shapes and dtypes; every case asserts allclose between the
+kernel (interpret=True) and the reference. This is the core correctness
+signal for the compute the Rust engine executes at serving time.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gating as gating_k
+from compile.kernels import moe_ffn, ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def rnd(rng, shape, dtype):
+    x = rng.standard_normal(shape) * 0.5
+    return jnp.asarray(x, dtype=dtype)
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(
+        rtol=1e-5, atol=1e-5
+    )
+
+
+# ---------------------------------------------------------------------------
+# expert FFN kernel
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 16),
+    h=st.sampled_from([8, 16, 64]),
+    f=st.sampled_from([16, 64, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_expert_ffn_matches_ref_f32(b, h, f, seed):
+    rng = np.random.RandomState(seed)
+    x = rnd(rng, (b, h), jnp.float32)
+    w1 = rnd(rng, (h, f), jnp.float32)
+    w3 = rnd(rng, (h, f), jnp.float32)
+    w2 = rnd(rng, (f, h), jnp.float32)
+    got = moe_ffn.expert_ffn(x, w1, w3, w2)
+    want = ref.expert_ffn_ref(x, w1, w3, w2)
+    np.testing.assert_allclose(got, want, **tol(jnp.float32))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.integers(1, 8),
+    h=st.sampled_from([16, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_expert_ffn_matches_ref_bf16(b, h, seed):
+    rng = np.random.RandomState(seed)
+    f = 64
+    x = rnd(rng, (b, h), jnp.bfloat16)
+    w1 = rnd(rng, (h, f), jnp.bfloat16)
+    w3 = rnd(rng, (h, f), jnp.bfloat16)
+    w2 = rnd(rng, (f, h), jnp.bfloat16)
+    got = moe_ffn.expert_ffn(x, w1, w3, w2)
+    want = ref.expert_ffn_ref(x, w1, w3, w2)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        **tol(jnp.bfloat16),
+    )
+
+
+@pytest.mark.parametrize("block_f", [32, 64, 128])
+def test_expert_ffn_tiled_grid_matches_ref(block_f):
+    """F > block_f exercises the multi-step grid + output accumulation."""
+    rng = np.random.RandomState(7)
+    b, h, f = 4, 32, 256
+    x = rnd(rng, (b, h), jnp.float32)
+    w1 = rnd(rng, (h, f), jnp.float32)
+    w3 = rnd(rng, (h, f), jnp.float32)
+    w2 = rnd(rng, (f, h), jnp.float32)
+    got = moe_ffn.expert_ffn(x, w1, w3, w2, block_f=block_f)
+    want = ref.expert_ffn_ref(x, w1, w3, w2)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+    assert f % block_f == 0
+
+
+def test_expert_ffn_rejects_bad_shapes():
+    x = jnp.zeros((2, 8))
+    with pytest.raises(ValueError):
+        moe_ffn.expert_ffn(x, jnp.zeros((8, 16)), jnp.zeros((8, 16)),
+                           jnp.zeros((16, 9)))
+    with pytest.raises(ValueError):
+        moe_ffn.expert_ffn(x, jnp.zeros((8, 48)), jnp.zeros((8, 48)),
+                           jnp.zeros((48, 8)), block_f=32)
+
+
+def test_expert_ffn_zero_input_is_zero():
+    z = jnp.zeros((3, 16))
+    w = jnp.ones((16, 32))
+    out = moe_ffn.expert_ffn(z, w, w, jnp.ones((32, 16)))
+    np.testing.assert_allclose(out, np.zeros((3, 16)), atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# gating kernel
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 16),
+    h=st.sampled_from([8, 64]),
+    e=st.sampled_from([4, 8, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gate_matches_ref(b, h, e, seed):
+    rng = np.random.RandomState(seed)
+    x = rnd(rng, (b, h), jnp.float32)
+    wg = rnd(rng, (h, e), jnp.float32)
+    got = gating_k.gate(x, wg)
+    want = ref.gate_ref(x, wg)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(b=st.integers(1, 8), seed=st.integers(0, 2**31 - 1))
+def test_gate_rows_sum_to_one(b, seed):
+    rng = np.random.RandomState(seed)
+    x = rnd(rng, (b, 32), jnp.float32)
+    wg = rnd(rng, (32, 8), jnp.float32)
+    probs = np.asarray(gating_k.gate(x, wg))
+    np.testing.assert_allclose(probs.sum(axis=-1), np.ones(b), rtol=1e-5)
+    assert (probs >= 0).all()
+
+
+def test_gate_softmax_stability_large_logits():
+    """Stable softmax must survive large-magnitude logits without NaN."""
+    x = jnp.full((2, 16), 50.0)
+    wg = jnp.eye(16)
+    probs = np.asarray(gating_k.gate(x, wg))
+    assert np.isfinite(probs).all()
+    np.testing.assert_allclose(probs.sum(axis=-1), np.ones(2), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# non-MoE mixer kernel
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 16),
+    h=st.sampled_from([8, 16, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_nonmoe_matches_ref(b, h, seed):
+    rng = np.random.RandomState(seed)
+    x = rnd(rng, (b, h), jnp.float32)
+    wm = rnd(rng, (h, h), jnp.float32)
+    s = rnd(rng, (h,), jnp.float32)
+    got = gating_k.nonmoe(x, wm, s)
+    want = ref.nonmoe_ref(x, wm, s)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_nonmoe_residual_identity_with_zero_weights():
+    """With wm = 0, gelu(0) = 0 and the block must be the identity."""
+    rng = np.random.RandomState(3)
+    x = rnd(rng, (4, 16), jnp.float32)
+    out = gating_k.nonmoe(x, jnp.zeros((16, 16)), jnp.ones((16,)))
+    np.testing.assert_allclose(out, x, rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# structural perf estimators (used by the §Perf report)
+# ---------------------------------------------------------------------------
+
+def test_vmem_estimate_monotone_in_block_f():
+    v64 = moe_ffn.vmem_bytes(8, 4096, 14336, 64)
+    v128 = moe_ffn.vmem_bytes(8, 4096, 14336, 128)
+    v512 = moe_ffn.vmem_bytes(8, 4096, 14336, 512)
+    assert v64 < v128 < v512
+
+
+def test_mxu_estimate_bounds():
+    for b in (1, 8, 32):
+        u = moe_ffn.mxu_utilization_estimate(b, 4096, 14336, 128)
+        assert 0.0 < u <= 1.0
+    # Paper-scale aligned tiles at b>=8 should saturate the estimate.
+    assert moe_ffn.mxu_utilization_estimate(32, 4096, 14336, 128) == 1.0

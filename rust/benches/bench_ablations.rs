@@ -1,0 +1,15 @@
+//! Ablation benches: Algorithm-1/2 stage ablations, migration interval and
+//! decay sweeps. `cargo bench --bench bench_ablations`
+
+use dancemoe::exp::ablations;
+use dancemoe::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::new("ablations");
+    let mut out = String::new();
+    b.run_once("ablations: A1/A2 placement + A3 interval + A4 decay", || {
+        let a = ablations::run(60, 7);
+        out = a.render();
+    });
+    println!("\n{out}");
+}

@@ -1,0 +1,84 @@
+//! Micro-benchmarks of the serving engine's hot path: event throughput,
+//! routing sampling, and the end-to-end events/second of a full run.
+//! Target (DESIGN.md §Perf): ≥ 1 M events/s end-to-end.
+
+use dancemoe::config::{ClusterConfig, ModelConfig, TaskKind, WorkloadConfig};
+use dancemoe::engine::{warm_stats, CostModel, Engine, EngineConfig};
+use dancemoe::placement::PlacementAlgo;
+use dancemoe::trace::{TaskProfile, TraceGenerator};
+use dancemoe::util::bench::Bencher;
+use dancemoe::util::rng::Rng;
+
+fn main() {
+    let mut b = Bencher::new("engine-hotpath");
+
+    // ---- routing sampling --------------------------------------------
+    let ds = ModelConfig::deepseek_v2_lite_sim();
+    let prof = TaskProfile::build(TaskKind::MmluPro, &ds);
+    let mut rng = Rng::new(1);
+    b.bench("sample_batch exact (1 token, top-8, E=64)", || {
+        Bencher::black_box(prof.sample_batch(&mut rng, 0, 1, 8));
+    });
+    b.bench("sample_batch_fast (128 tokens, top-8, E=64)", || {
+        Bencher::black_box(prof.sample_batch_fast(&mut rng, 0, 128, 8));
+    });
+
+    // ---- placement lookup (the per-invocation router) -------------------
+    let cluster = ClusterConfig::edge_testbed_3_for(&ds);
+    let stats = warm_stats(&ds, &WorkloadConfig::bigbench(10.0));
+    let p = PlacementAlgo::DanceMoE.compute(&ds, &cluster, &stats, 1);
+    let mut i = 0usize;
+    b.bench("placement server_has lookup", || {
+        i = (i + 7) % (26 * 64);
+        Bencher::black_box(p.server_has(i % 3, i / 64 % 26, i % 64));
+    });
+    b.bench("placement owners lookup", || {
+        i = (i + 7) % (26 * 64);
+        Bencher::black_box(p.owners(i / 64 % 26, i % 64));
+    });
+
+    // ---- end-to-end events/s ------------------------------------------
+    let mut m = ModelConfig::mixtral_8x7b_sim();
+    m.num_layers = 8;
+    let c = ClusterConfig::edge_testbed_3_for(&m);
+    let w = WorkloadConfig::bigbench(10.0);
+    let st = warm_stats(&m, &w);
+    let pl = PlacementAlgo::DanceMoE.compute(&m, &c, &st, 1);
+    let trace = TraceGenerator::new(&m, &w, 1).gen_count(40);
+    let res = b
+        .bench("engine full run (40 req/server × 8 layers)", || {
+            let mut eng = Engine::new(
+                &m,
+                &c,
+                pl.clone(),
+                EngineConfig {
+                    seed: 1,
+                    ..EngineConfig::default()
+                },
+                CostModel::default(),
+            );
+            eng.push_trace(&trace);
+            eng.run();
+            Bencher::black_box(eng.events_processed());
+        })
+        .clone();
+    // report implied event throughput
+    let mut eng = Engine::new(
+        &m,
+        &c,
+        pl.clone(),
+        EngineConfig {
+            seed: 1,
+            ..EngineConfig::default()
+        },
+        CostModel::default(),
+    );
+    eng.push_trace(&trace);
+    eng.run();
+    let events = eng.events_processed() as f64;
+    println!(
+        "  -> {:.2} M events/s ({} events per run)",
+        res.throughput(events) / 1e6,
+        events as u64
+    );
+}

@@ -1,0 +1,15 @@
+//! Regenerates **Fig. 5** (layer latency vs remote-expert fraction).
+//! `cargo bench --bench bench_fig5`
+
+use dancemoe::exp::fig5;
+use dancemoe::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::new("fig5");
+    let mut out = String::new();
+    b.run_once("fig5: remote-fraction sweep (9 points)", || {
+        let f = fig5::run(40, 7);
+        out = f.render();
+    });
+    println!("\n{out}");
+}

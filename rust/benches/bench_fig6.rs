@@ -1,0 +1,25 @@
+//! Regenerates **Fig. 6** (local compute ratio over time, 5 methods × 4
+//! model/dataset configs). `cargo bench --bench bench_fig6`
+//!
+//! DANCEMOE_FIG6_HORIZON overrides the virtual horizon (default 3600 s,
+//! the paper's ~60-minute runs).
+
+use dancemoe::exp::fig6;
+use dancemoe::util::bench::Bencher;
+
+fn main() {
+    let horizon: f64 = std::env::var("DANCEMOE_FIG6_HORIZON")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2400.0);
+    let mut b = Bencher::new("fig6");
+    let mut out = String::new();
+    b.run_once(
+        &format!("fig6: 20 runs × {horizon:.0}s virtual horizon"),
+        || {
+            let f = fig6::run(horizon, 7);
+            out = f.render();
+        },
+    );
+    println!("\n{out}");
+}

@@ -1,0 +1,23 @@
+//! Regenerates **Fig. 7** (migration effectiveness under a workload
+//! shift: 200 MultiData → 200 BigBench requests per server, w/ vs w/o
+//! migration). `cargo bench --bench bench_fig7`
+
+use dancemoe::exp::fig7;
+use dancemoe::util::bench::Bencher;
+
+fn main() {
+    let n: usize = std::env::var("DANCEMOE_FIG7_REQUESTS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(200);
+    let mut b = Bencher::new("fig7");
+    let mut out = String::new();
+    b.run_once(
+        &format!("fig7: shift run, {n}+{n} requests/server (DeepSeek sim)"),
+        || {
+            let f = fig7::run(n, 7);
+            out = f.render();
+        },
+    );
+    println!("\n{out}");
+}

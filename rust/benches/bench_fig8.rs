@@ -1,0 +1,22 @@
+//! Regenerates **Fig. 8** (scalability: GPU count 4→256, bandwidth
+//! 100→1000 Mbps). `cargo bench --bench bench_fig8`
+
+use dancemoe::exp::fig8;
+use dancemoe::util::bench::Bencher;
+
+fn main() {
+    let horizon: f64 = std::env::var("DANCEMOE_FIG8_HORIZON")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(480.0);
+    let mut b = Bencher::new("fig8");
+    let mut out = String::new();
+    b.run_once(
+        &format!("fig8: 16 scaling points × {horizon:.0}s horizon"),
+        || {
+            let f = fig8::run(horizon, 7);
+            out = f.render();
+        },
+    );
+    println!("\n{out}");
+}

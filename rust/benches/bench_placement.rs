@@ -1,0 +1,69 @@
+//! Micro-benchmarks of the placement pipeline (the L3 control-plane hot
+//! path): Algorithm 1, Algorithm 2, the baselines, and the Eq.-2 objective.
+//! Targets (DESIGN.md §Perf): full DanceMoE pipeline for the DeepSeek
+//! topology (26×64, 3 servers) well under 100 ms.
+
+use dancemoe::config::{ClusterConfig, ModelConfig, WorkloadConfig};
+use dancemoe::engine::warm_stats;
+use dancemoe::placement::{
+    dancemoe_place, entropy_alloc, migration, objective, PlacementAlgo,
+};
+use dancemoe::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::new("placement");
+    for model in [
+        ModelConfig::mixtral_8x7b_sim(),
+        ModelConfig::deepseek_v2_lite_sim(),
+    ] {
+        let cluster = ClusterConfig::edge_testbed_3_for(&model);
+        let stats = warm_stats(&model, &WorkloadConfig::bigbench(10.0));
+        let tag = if model.name.starts_with("mixtral") {
+            "mixtral 32x8"
+        } else {
+            "deepseek 26x64"
+        };
+
+        b.bench(&format!("alg1 entropy counts [{tag}]"), || {
+            let c = entropy_alloc::expert_counts(&model, &cluster, &stats);
+            Bencher::black_box(c);
+        });
+        let counts = entropy_alloc::expert_counts(&model, &cluster, &stats);
+        b.bench(&format!("alg2 assignment+packing [{tag}]"), || {
+            let p = dancemoe::placement::assign::assign(
+                &model, &cluster, &stats, &counts,
+            );
+            Bencher::black_box(p);
+        });
+        b.bench(&format!("full dancemoe pipeline [{tag}]"), || {
+            let p = dancemoe_place(&model, &cluster, &stats);
+            Bencher::black_box(p);
+        });
+        for algo in [
+            PlacementAlgo::Uniform,
+            PlacementAlgo::SmartMoE,
+            PlacementAlgo::Eplb,
+        ] {
+            b.bench(&format!("{} [{tag}]", algo.name()), || {
+                let p = algo.compute(&model, &cluster, &stats, 1);
+                Bencher::black_box(p);
+            });
+        }
+        let p = dancemoe_place(&model, &cluster, &stats);
+        b.bench(&format!("eq2 objective [{tag}]"), || {
+            Bencher::black_box(objective::remote_mass(&p, &stats));
+        });
+        let uni = PlacementAlgo::Uniform.compute(&model, &cluster, &stats, 0);
+        b.bench(&format!("eq3+eq4 migration decision [{tag}]"), || {
+            let d = migration::should_migrate(
+                &uni,
+                &p,
+                &model,
+                &cluster,
+                &stats,
+                &migration::MigrationCtx::default(),
+            );
+            Bencher::black_box(d);
+        });
+    }
+}

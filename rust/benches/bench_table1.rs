@@ -1,0 +1,15 @@
+//! Regenerates **Table I** (motivation: offloading vs naive collaboration).
+//! `cargo bench --bench bench_table1`
+
+use dancemoe::exp::table1;
+use dancemoe::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::new("table1");
+    let mut out = String::new();
+    b.run_once("table1: 3 methods × 3 servers (Mixtral sim)", || {
+        let t = table1::run(120, 7);
+        out = t.render();
+    });
+    println!("\n{out}");
+}

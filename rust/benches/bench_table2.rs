@@ -1,0 +1,25 @@
+//! Regenerates **Table II** (serve latency: 5 methods × 2 models × 2
+//! datasets). `cargo bench --bench bench_table2`
+//!
+//! Set DANCEMOE_T2_REQUESTS to change the per-server request count
+//! (default 150, matching the paper's run lengths in spirit).
+
+use dancemoe::exp::table2;
+use dancemoe::util::bench::Bencher;
+
+fn main() {
+    let n: usize = std::env::var("DANCEMOE_T2_REQUESTS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(120);
+    let mut b = Bencher::new("table2");
+    let mut out = String::new();
+    b.run_once(
+        &format!("table2: 20 configurations × {n} requests/server"),
+        || {
+            let t = table2::run(n, 7);
+            out = t.render();
+        },
+    );
+    println!("\n{out}");
+}

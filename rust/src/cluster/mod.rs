@@ -1,0 +1,250 @@
+//! Runtime cluster state: per-GPU compute timelines and the host-RAM
+//! offload store used by the MoE-Infinity baseline.
+//!
+//! GPUs are FIFO compute resources in the discrete-event engine: a task
+//! booked at `ready_s` starts at `max(ready_s, busy_until)`. The offload
+//! store models MoE-Infinity's sparsity-aware expert cache: every expert is
+//! available in host RAM; the GPU holds a frequency-aware cache of expert
+//! weights and misses pay `m_e / pcie` load time.
+
+use crate::config::{ClusterConfig, ModelConfig};
+
+/// One GPU's dynamic state.
+#[derive(Debug, Clone)]
+pub struct GpuState {
+    pub flops: f64,
+    pub pcie_bps: f64,
+    pub busy_until: f64,
+    /// cumulative busy seconds (utilization accounting)
+    pub busy_s: f64,
+    pub tasks: u64,
+}
+
+impl GpuState {
+    /// Book a compute task of `dur_s`; returns (start, end).
+    pub fn book(&mut self, ready_s: f64, dur_s: f64) -> (f64, f64) {
+        let start = ready_s.max(self.busy_until);
+        let end = start + dur_s;
+        self.busy_until = end;
+        self.busy_s += dur_s;
+        self.tasks += 1;
+        (start, end)
+    }
+}
+
+/// MoE-Infinity-style GPU expert cache (frequency-aware eviction).
+#[derive(Debug, Clone)]
+pub struct ExpertCache {
+    /// capacity in experts
+    pub capacity: usize,
+    /// resident eids, with access counts
+    resident: Vec<(usize, f64)>,
+}
+
+impl ExpertCache {
+    pub fn new(capacity: usize) -> ExpertCache {
+        ExpertCache {
+            capacity,
+            resident: Vec::new(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.resident.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.resident.is_empty()
+    }
+
+    pub fn contains(&self, eid: usize) -> bool {
+        self.resident.iter().any(|&(e, _)| e == eid)
+    }
+
+    /// Touch an expert: returns `true` on hit. On miss, inserts it,
+    /// evicting the least-frequently-used resident if at capacity
+    /// (MoE-Infinity's activation-aware cache in its simplest form).
+    pub fn access(&mut self, eid: usize) -> bool {
+        // decay so the cache tracks the *recent* activation distribution
+        for r in &mut self.resident {
+            r.1 *= 0.999;
+        }
+        if let Some(r) = self.resident.iter_mut().find(|r| r.0 == eid) {
+            r.1 += 1.0;
+            return true;
+        }
+        if self.resident.len() >= self.capacity && self.capacity > 0 {
+            let (idx, _) = self
+                .resident
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1 .1.partial_cmp(&b.1 .1).unwrap())
+                .unwrap();
+            self.resident.swap_remove(idx);
+        }
+        if self.capacity > 0 {
+            self.resident.push((eid, 1.0));
+        }
+        false
+    }
+}
+
+/// Dynamic state for one server.
+#[derive(Debug, Clone)]
+pub struct ServerState {
+    pub gpus: Vec<GpuState>,
+    /// per-GPU expert cache, only used in offload mode
+    pub caches: Vec<ExpertCache>,
+}
+
+/// Dynamic state for the whole cluster.
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    pub servers: Vec<ServerState>,
+}
+
+impl Cluster {
+    pub fn new(cluster: &ClusterConfig, model: &ModelConfig) -> Cluster {
+        Cluster {
+            servers: cluster
+                .servers
+                .iter()
+                .map(|s| ServerState {
+                    gpus: s
+                        .gpus
+                        .iter()
+                        .map(|g| GpuState {
+                            flops: g.flops,
+                            pcie_bps: g.pcie_bps,
+                            busy_until: 0.0,
+                            busy_s: 0.0,
+                            tasks: 0,
+                        })
+                        .collect(),
+                    caches: s
+                        .gpus
+                        .iter()
+                        .map(|g| {
+                            ExpertCache::new(
+                                (g.mem_bytes / model.expert_bytes) as usize,
+                            )
+                        })
+                        .collect(),
+                })
+                .collect(),
+        }
+    }
+
+    /// GPU on `server` that frees up first.
+    pub fn earliest_gpu(&self, server: usize) -> usize {
+        self.servers[server]
+            .gpus
+            .iter()
+            .enumerate()
+            .min_by(|a, b| {
+                a.1.busy_until.partial_cmp(&b.1.busy_until).unwrap()
+            })
+            .map(|(i, _)| i)
+            .unwrap()
+    }
+
+    /// Aggregate queue depth proxy (seconds of booked work beyond `now`).
+    pub fn backlog_s(&self, server: usize, now: f64) -> f64 {
+        self.servers[server]
+            .gpus
+            .iter()
+            .map(|g| (g.busy_until - now).max(0.0))
+            .sum()
+    }
+
+    pub fn reset(&mut self) {
+        for s in &mut self.servers {
+            for g in &mut s.gpus {
+                g.busy_until = 0.0;
+                g.busy_s = 0.0;
+                g.tasks = 0;
+            }
+            for c in &mut s.caches {
+                *c = ExpertCache::new(c.capacity);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClusterConfig, ModelConfig};
+
+    fn cluster() -> Cluster {
+        let m = ModelConfig::mixtral_8x7b_sim();
+        let c = ClusterConfig::edge_testbed_3_for(&m);
+        Cluster::new(&c, &m)
+    }
+
+    #[test]
+    fn gpu_booking_serializes() {
+        let mut c = cluster();
+        let g = &mut c.servers[0].gpus[0];
+        let (s1, e1) = g.book(0.0, 2.0);
+        let (s2, e2) = g.book(1.0, 3.0);
+        assert_eq!((s1, e1), (0.0, 2.0));
+        assert_eq!((s2, e2), (2.0, 5.0)); // queued behind task 1
+        assert_eq!(g.busy_s, 5.0);
+        assert_eq!(g.tasks, 2);
+    }
+
+    #[test]
+    fn earliest_gpu_picks_idle() {
+        let mut c = cluster();
+        c.servers[2].gpus[0].book(0.0, 10.0);
+        assert_eq!(c.earliest_gpu(2), 1);
+        c.servers[2].gpus[1].book(0.0, 20.0);
+        assert_eq!(c.earliest_gpu(2), 0);
+    }
+
+    #[test]
+    fn backlog_measures_pending_work() {
+        let mut c = cluster();
+        c.servers[0].gpus[0].book(0.0, 5.0);
+        assert!((c.backlog_s(0, 2.0) - 3.0).abs() < 1e-12);
+        assert_eq!(c.backlog_s(0, 10.0), 0.0);
+    }
+
+    #[test]
+    fn cache_hit_miss_and_eviction() {
+        let mut cache = ExpertCache::new(2);
+        assert!(!cache.access(1)); // miss, insert
+        assert!(cache.access(1)); // hit
+        assert!(!cache.access(2)); // miss, insert
+        // make 1 clearly hotter
+        for _ in 0..5 {
+            cache.access(1);
+        }
+        assert!(!cache.access(3)); // evicts 2 (least frequent)
+        assert!(cache.contains(1));
+        assert!(!cache.contains(2));
+        assert!(cache.contains(3));
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn cache_capacity_from_memory() {
+        let m = ModelConfig::mixtral_8x7b_sim();
+        let cc = ClusterConfig::edge_testbed_3_for(&m);
+        let c = Cluster::new(&cc, &m);
+        let cap = c.servers[0].caches[0].capacity;
+        // 70% of 40 GB / 352 MB ≈ 85 experts
+        assert!((80..95).contains(&cap), "cap {cap}");
+    }
+
+    #[test]
+    fn reset_clears_dynamics() {
+        let mut c = cluster();
+        c.servers[1].gpus[0].book(0.0, 4.0);
+        c.servers[1].caches[0].access(7);
+        c.reset();
+        assert_eq!(c.servers[1].gpus[0].busy_until, 0.0);
+        assert!(c.servers[1].caches[0].is_empty());
+    }
+}

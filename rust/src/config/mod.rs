@@ -1,0 +1,425 @@
+//! Configuration: model topology, cluster hardware, workload definition.
+//!
+//! Configs are plain structs with JSON (de)serialization through
+//! [`crate::util::json`] and named presets matching the paper's evaluation
+//! setup (§IV-A). The *compute* shapes (hidden/ffn) are the scaled-down
+//! AOT-artifact shapes; the *placement* math uses paper-scale byte sizes
+//! (`expert_bytes`) — see DESIGN.md §2.
+
+pub mod presets;
+
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+/// MoE model description (routing topology + sizes).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub num_layers: usize,
+    pub num_experts: usize,
+    pub top_k: usize,
+    /// Scaled-down compute shapes (must match the AOT artifacts).
+    pub hidden: usize,
+    pub ffn: usize,
+    /// Paper-scale per-expert parameter footprint in bytes — drives the
+    /// placement memory math and migration costs.
+    pub expert_bytes: u64,
+    /// Paper-scale hidden size in bytes per token — drives activation
+    /// transfer volumes for remote expert calls.
+    pub token_bytes: u64,
+    /// Paper-scale FLOPs per token per expert (both GEMM passes).
+    pub expert_flops_per_token: f64,
+    /// Paper-scale FLOPs per token for the non-MoE block (attention etc.).
+    pub nonmoe_flops_per_token: f64,
+}
+
+impl ModelConfig {
+    /// Total number of (layer, expert) pairs.
+    pub fn total_experts(&self) -> usize {
+        self.num_layers * self.num_experts
+    }
+
+    /// Global expert index for (layer, expert).
+    pub fn eid(&self, layer: usize, expert: usize) -> usize {
+        debug_assert!(layer < self.num_layers && expert < self.num_experts);
+        layer * self.num_experts + expert
+    }
+
+    /// Inverse of [`eid`].
+    pub fn layer_expert(&self, eid: usize) -> (usize, usize) {
+        (eid / self.num_experts, eid % self.num_experts)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("num_layers", Json::Num(self.num_layers as f64)),
+            ("num_experts", Json::Num(self.num_experts as f64)),
+            ("top_k", Json::Num(self.top_k as f64)),
+            ("hidden", Json::Num(self.hidden as f64)),
+            ("ffn", Json::Num(self.ffn as f64)),
+            ("expert_bytes", Json::Num(self.expert_bytes as f64)),
+            ("token_bytes", Json::Num(self.token_bytes as f64)),
+            (
+                "expert_flops_per_token",
+                Json::Num(self.expert_flops_per_token),
+            ),
+            (
+                "nonmoe_flops_per_token",
+                Json::Num(self.nonmoe_flops_per_token),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<ModelConfig> {
+        let num = |k: &str| -> Result<f64> {
+            j.req(k)?
+                .as_f64()
+                .ok_or_else(|| Error::Config(format!("{k} not a number")))
+        };
+        Ok(ModelConfig {
+            name: j
+                .req("name")?
+                .as_str()
+                .ok_or_else(|| Error::Config("name not a string".into()))?
+                .to_string(),
+            num_layers: num("num_layers")? as usize,
+            num_experts: num("num_experts")? as usize,
+            top_k: num("top_k")? as usize,
+            hidden: num("hidden")? as usize,
+            ffn: num("ffn")? as usize,
+            expert_bytes: num("expert_bytes")? as u64,
+            token_bytes: num("token_bytes")? as u64,
+            expert_flops_per_token: num("expert_flops_per_token")?,
+            nonmoe_flops_per_token: num("nonmoe_flops_per_token")?,
+        })
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.top_k == 0 || self.top_k > self.num_experts {
+            return Err(Error::Config(format!(
+                "top_k {} out of range for {} experts",
+                self.top_k, self.num_experts
+            )));
+        }
+        if self.num_layers == 0 || self.num_experts == 0 {
+            return Err(Error::Config("empty model".into()));
+        }
+        Ok(())
+    }
+}
+
+/// One GPU's hardware description.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuConfig {
+    /// Usable GPU memory in bytes (after the paper's artificial 70%/30%
+    /// constraint has been applied by the preset helpers).
+    pub mem_bytes: u64,
+    /// Effective compute throughput in FLOP/s for the MoE GEMMs.
+    pub flops: f64,
+    /// Host↔device bandwidth in bytes/s (expert load path; also the
+    /// `speed_{n,g}` of migration Eq. 3 for intra-server moves).
+    pub pcie_bps: f64,
+}
+
+/// One edge server: a set of GPUs plus host RAM (assumed large enough to
+/// hold the full expert set for offload mode, as in MoE-Infinity).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServerConfig {
+    pub name: String,
+    pub gpus: Vec<GpuConfig>,
+}
+
+impl ServerConfig {
+    pub fn total_mem(&self) -> u64 {
+        self.gpus.iter().map(|g| g.mem_bytes).sum()
+    }
+}
+
+/// Cluster: servers + the network between them.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterConfig {
+    pub name: String,
+    pub servers: Vec<ServerConfig>,
+    /// Symmetric inter-server bandwidth in bits/s (the paper's tc limit).
+    pub bandwidth_bps: f64,
+    /// One-way network latency in seconds.
+    pub rtt_s: f64,
+}
+
+impl ClusterConfig {
+    pub fn num_servers(&self) -> usize {
+        self.servers.len()
+    }
+
+    pub fn num_gpus(&self) -> usize {
+        self.servers.iter().map(|s| s.gpus.len()).sum()
+    }
+
+    pub fn total_mem(&self) -> u64 {
+        self.servers.iter().map(|s| s.total_mem()).sum()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.servers.is_empty() {
+            return Err(Error::Config("no servers".into()));
+        }
+        if self.servers.iter().any(|s| s.gpus.is_empty()) {
+            return Err(Error::Config("server with no GPUs".into()));
+        }
+        if self.bandwidth_bps <= 0.0 {
+            return Err(Error::Config("bandwidth must be positive".into()));
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("bandwidth_bps", Json::Num(self.bandwidth_bps)),
+            ("rtt_s", Json::Num(self.rtt_s)),
+            (
+                "servers",
+                Json::Arr(
+                    self.servers
+                        .iter()
+                        .map(|s| {
+                            Json::from_pairs(vec![
+                                ("name", Json::Str(s.name.clone())),
+                                (
+                                    "gpus",
+                                    Json::Arr(
+                                        s.gpus
+                                            .iter()
+                                            .map(|g| {
+                                                Json::from_pairs(vec![
+                                                    (
+                                                        "mem_bytes",
+                                                        Json::Num(
+                                                            g.mem_bytes as f64,
+                                                        ),
+                                                    ),
+                                                    ("flops", Json::Num(g.flops)),
+                                                    (
+                                                        "pcie_bps",
+                                                        Json::Num(g.pcie_bps),
+                                                    ),
+                                                ])
+                                            })
+                                            .collect(),
+                                    ),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<ClusterConfig> {
+        let servers = j
+            .req("servers")?
+            .as_arr()
+            .ok_or_else(|| Error::Config("servers not an array".into()))?
+            .iter()
+            .map(|s| {
+                let gpus = s
+                    .req("gpus")?
+                    .as_arr()
+                    .ok_or_else(|| Error::Config("gpus not an array".into()))?
+                    .iter()
+                    .map(|g| {
+                        Ok(GpuConfig {
+                            mem_bytes: g
+                                .req("mem_bytes")?
+                                .as_f64()
+                                .unwrap_or(0.0)
+                                as u64,
+                            flops: g.req("flops")?.as_f64().unwrap_or(0.0),
+                            pcie_bps: g
+                                .req("pcie_bps")?
+                                .as_f64()
+                                .unwrap_or(0.0),
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                Ok(ServerConfig {
+                    name: s
+                        .req("name")?
+                        .as_str()
+                        .unwrap_or("server")
+                        .to_string(),
+                    gpus,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ClusterConfig {
+            name: j.req("name")?.as_str().unwrap_or("cluster").to_string(),
+            servers,
+            bandwidth_bps: j.req("bandwidth_bps")?.as_f64().unwrap_or(0.0),
+            rtt_s: j.req("rtt_s")?.as_f64().unwrap_or(0.0),
+        })
+    }
+}
+
+/// Which synthetic task a server's request stream draws from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TaskKind {
+    /// BIG-bench stand-ins (specialized setup).
+    Arithmetic,
+    AsciiRecognition,
+    AbstractNarrative,
+    /// MultiData stand-ins (heterogeneous setup).
+    MmluPro,
+    WikiText,
+    Taco,
+}
+
+impl TaskKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TaskKind::Arithmetic => "arithmetic",
+            TaskKind::AsciiRecognition => "ascii-recognition",
+            TaskKind::AbstractNarrative => "abstract-narrative",
+            TaskKind::MmluPro => "mmlu-pro",
+            TaskKind::WikiText => "wikitext",
+            TaskKind::Taco => "taco",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Result<TaskKind> {
+        Ok(match s {
+            "arithmetic" => TaskKind::Arithmetic,
+            "ascii-recognition" => TaskKind::AsciiRecognition,
+            "abstract-narrative" => TaskKind::AbstractNarrative,
+            "mmlu-pro" => TaskKind::MmluPro,
+            "wikitext" => TaskKind::WikiText,
+            "taco" => TaskKind::Taco,
+            other => {
+                return Err(Error::Config(format!("unknown task '{other}'")))
+            }
+        })
+    }
+
+    pub fn all() -> [TaskKind; 6] {
+        [
+            TaskKind::Arithmetic,
+            TaskKind::AsciiRecognition,
+            TaskKind::AbstractNarrative,
+            TaskKind::MmluPro,
+            TaskKind::WikiText,
+            TaskKind::Taco,
+        ]
+    }
+
+    /// Stable seed so each task's activation profile is reproducible.
+    pub fn seed(&self) -> u64 {
+        match self {
+            TaskKind::Arithmetic => 101,
+            TaskKind::AsciiRecognition => 102,
+            TaskKind::AbstractNarrative => 103,
+            TaskKind::MmluPro => 104,
+            TaskKind::WikiText => 105,
+            TaskKind::Taco => 106,
+        }
+    }
+}
+
+/// Per-server request stream description.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamConfig {
+    pub task: TaskKind,
+    /// Mean inter-arrival time in seconds (Poisson process).
+    pub mean_interarrival_s: f64,
+    /// Mean prompt length in tokens (geometric-ish around this).
+    pub mean_prompt_tokens: usize,
+    /// Output length in tokens (the paper constrains output length).
+    pub output_tokens: usize,
+}
+
+/// Workload: one stream per server.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadConfig {
+    pub name: String,
+    pub streams: Vec<StreamConfig>,
+}
+
+impl WorkloadConfig {
+    pub fn validate(&self, cluster: &ClusterConfig) -> Result<()> {
+        if self.streams.len() != cluster.num_servers() {
+            return Err(Error::Config(format!(
+                "workload has {} streams but cluster has {} servers",
+                self.streams.len(),
+                cluster.num_servers()
+            )));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eid_roundtrip() {
+        let m = ModelConfig::deepseek_v2_lite_sim();
+        for layer in [0, 5, 25] {
+            for e in [0, 13, 63] {
+                let id = m.eid(layer, e);
+                assert_eq!(m.layer_expert(id), (layer, e));
+            }
+        }
+        assert_eq!(m.total_experts(), 26 * 64);
+    }
+
+    #[test]
+    fn model_json_roundtrip() {
+        let m = ModelConfig::mixtral_8x7b_sim();
+        let j = m.to_json();
+        let back = ModelConfig::from_json(&j).unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn cluster_json_roundtrip() {
+        let c = ClusterConfig::edge_testbed_3_for(
+            &ModelConfig::mixtral_8x7b_sim(),
+        );
+        let back = ClusterConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c, back);
+    }
+
+    #[test]
+    fn validation_catches_errors() {
+        let mut m = ModelConfig::mixtral_8x7b_sim();
+        m.top_k = 9;
+        assert!(m.validate().is_err());
+        let mut c =
+            ClusterConfig::edge_testbed_3_for(&ModelConfig::mixtral_8x7b_sim());
+        c.bandwidth_bps = 0.0;
+        assert!(c.validate().is_err());
+        c.servers.clear();
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn task_kind_names_roundtrip() {
+        for t in TaskKind::all() {
+            assert_eq!(TaskKind::from_name(t.name()).unwrap(), t);
+        }
+        assert!(TaskKind::from_name("bogus").is_err());
+    }
+
+    #[test]
+    fn workload_stream_count_checked() {
+        let m = ModelConfig::mixtral_8x7b_sim();
+        let c = ClusterConfig::edge_testbed_3_for(&m);
+        let w = WorkloadConfig::bigbench(10.0);
+        assert!(w.validate(&c).is_ok());
+        let mut w2 = w.clone();
+        w2.streams.pop();
+        assert!(w2.validate(&c).is_err());
+    }
+}

@@ -1,0 +1,334 @@
+//! Named presets reproducing the paper's §IV-A experimental setup.
+//!
+//! Hardware numbers are paper-plausible constants: A100-40GB-class GPUs
+//! (effective 100 TFLOP/s on the MoE GEMMs after utilization losses),
+//! 16 GB/s host↔device bandwidth, 500 Mbps tc-shaped inter-server links
+//! with 2 ms one-way latency.
+
+use super::{
+    ClusterConfig, GpuConfig, ModelConfig, ServerConfig, StreamConfig,
+    TaskKind, WorkloadConfig,
+};
+
+/// A100-40GB usable memory.
+pub const A100_MEM: u64 = 40 * 1024 * 1024 * 1024;
+/// Effective sustained FLOP/s for the MoE GEMMs on one A100.
+pub const A100_FLOPS: f64 = 100e12;
+/// Host↔device (PCIe 4.0 x16-ish) bandwidth, bytes/s.
+pub const PCIE_BPS: f64 = 16e9;
+/// The paper's tc-shaped inter-server bandwidth (bits/s).
+pub const EDGE_BANDWIDTH_BPS: f64 = 500e6;
+/// One-way network latency between edge servers.
+pub const EDGE_RTT_S: f64 = 0.002;
+
+impl ModelConfig {
+    /// Mixtral-8×7B topology: 32 layers × 8 experts, top-2.
+    ///
+    /// Paper-scale per-expert footprint: 3 matrices of 4096×14336 bf16
+    /// ≈ 352 MB. Activation row: 4096 × 2 B. Expert FLOPs/token: 2·3·H·F.
+    pub fn mixtral_8x7b_sim() -> ModelConfig {
+        let h = 4096.0;
+        let f = 14336.0;
+        ModelConfig {
+            name: "mixtral-8x7b-sim".into(),
+            num_layers: 32,
+            num_experts: 8,
+            top_k: 2,
+            hidden: 64,
+            ffn: 128,
+            expert_bytes: (3.0 * h * f * 2.0) as u64, // ≈ 352 MB
+            token_bytes: (h * 2.0) as u64,            // 8 KB
+            expert_flops_per_token: 2.0 * 3.0 * h * f,
+            nonmoe_flops_per_token: 2.0 * 4.0 * h * h,
+        }
+    }
+
+    /// DeepSeek-V2-Lite topology: 26 layers × 64 experts, top-8 (routed).
+    ///
+    /// Paper-scale per-expert footprint: 3 matrices of 2048×1408 bf16
+    /// ≈ 17.3 MB. Activation row: 2048 × 2 B.
+    pub fn deepseek_v2_lite_sim() -> ModelConfig {
+        let h = 2048.0;
+        let f = 1408.0;
+        ModelConfig {
+            name: "deepseek-v2-lite-sim".into(),
+            num_layers: 26,
+            num_experts: 64,
+            top_k: 8,
+            hidden: 64,
+            ffn: 128,
+            expert_bytes: (3.0 * h * f * 2.0) as u64, // ≈ 17.3 MB
+            token_bytes: (h * 2.0) as u64,            // 4 KB
+            expert_flops_per_token: 2.0 * 3.0 * h * f,
+            nonmoe_flops_per_token: 2.0 * 4.0 * h * h,
+        }
+    }
+
+    /// Tiny 4-layer model matching the AOT artifacts' *real* shapes — used
+    /// by the end-to-end PJRT example and the runtime integration tests.
+    pub fn tiny() -> ModelConfig {
+        let h = 64.0;
+        let f = 128.0;
+        ModelConfig {
+            name: "tiny".into(),
+            num_layers: 4,
+            num_experts: 8,
+            top_k: 2,
+            hidden: 64,
+            ffn: 128,
+            expert_bytes: (3.0 * h * f * 4.0) as u64, // f32, real size
+            token_bytes: (h * 4.0) as u64,
+            expert_flops_per_token: 2.0 * 3.0 * h * f,
+            nonmoe_flops_per_token: 2.0 * 4.0 * h * h,
+        }
+    }
+
+    pub fn preset(name: &str) -> Option<ModelConfig> {
+        match name {
+            "mixtral-8x7b-sim" | "mixtral" => Some(Self::mixtral_8x7b_sim()),
+            "deepseek-v2-lite-sim" | "deepseek" => {
+                Some(Self::deepseek_v2_lite_sim())
+            }
+            "tiny" => Some(Self::tiny()),
+            _ => None,
+        }
+    }
+
+    /// The paper's artificial memory constraint: 70 % of GPU capacity for
+    /// Mixtral, 30 % for DeepSeek-V2-Lite (§IV-A "MoE Model").
+    pub fn mem_fraction(&self) -> f64 {
+        if self.name.starts_with("mixtral") {
+            0.7
+        } else if self.name.starts_with("deepseek") {
+            0.3
+        } else {
+            0.9
+        }
+    }
+}
+
+fn gpu(mem_fraction: f64, speed: f64) -> GpuConfig {
+    GpuConfig {
+        mem_bytes: (A100_MEM as f64 * mem_fraction) as u64,
+        flops: A100_FLOPS * speed,
+        pcie_bps: PCIE_BPS,
+    }
+}
+
+impl ClusterConfig {
+    /// The paper's testbed: 4 A100s simulating 3 edge servers with GPU
+    /// allocations of 1, 1 and 2 (§IV-A "Hardware"), memory-capped per
+    /// model. Server speeds are mildly heterogeneous to reflect the edge
+    /// setting the paper targets.
+    pub fn edge_testbed_3_for(model: &ModelConfig) -> ClusterConfig {
+        let mf = model.mem_fraction();
+        ClusterConfig {
+            name: "edge-testbed-3".into(),
+            servers: vec![
+                ServerConfig {
+                    name: "server1".into(),
+                    gpus: vec![gpu(mf, 1.0)],
+                },
+                ServerConfig {
+                    name: "server2".into(),
+                    gpus: vec![gpu(mf, 0.9)],
+                },
+                ServerConfig {
+                    name: "server3".into(),
+                    gpus: vec![gpu(mf, 1.0), gpu(mf, 0.85)],
+                },
+            ],
+            bandwidth_bps: EDGE_BANDWIDTH_BPS,
+            rtt_s: EDGE_RTT_S,
+        }
+    }
+
+    /// Fig. 8 scaling clusters: `num_gpus` GPUs grouped 2 per server (so
+    /// even the 4-GPU point is genuinely distributed, like the paper's 3
+    /// simulated servers over 4 GPUs), heterogeneous speeds cycling
+    /// 1.0 / 0.9 / 0.8, configurable bandwidth. GPU memory at 30 % of an
+    /// A100, so local coverage is partial and cross-server traffic is
+    /// substantial — the regime where bandwidth matters (Fig. 8b).
+    pub fn scaling(num_gpus: usize, bandwidth_bps: f64) -> ClusterConfig {
+        assert!(num_gpus >= 1);
+        let gpus_per_server = 2.min(num_gpus);
+        let num_servers = num_gpus.div_ceil(gpus_per_server);
+        let speeds = [1.0, 0.9, 0.8];
+        let mut servers = Vec::with_capacity(num_servers);
+        let mut remaining = num_gpus;
+        for s in 0..num_servers {
+            let n = gpus_per_server.min(remaining);
+            remaining -= n;
+            servers.push(ServerConfig {
+                name: format!("edge{s}"),
+                gpus: (0..n)
+                    .map(|g| gpu(0.3, speeds[(s + g) % speeds.len()]))
+                    .collect(),
+            });
+        }
+        ClusterConfig {
+            name: format!("scaling-{num_gpus}gpu"),
+            servers,
+            bandwidth_bps,
+            rtt_s: EDGE_RTT_S,
+        }
+    }
+}
+
+impl WorkloadConfig {
+    /// Specialized setup: one BIG-bench task per server
+    /// (abstract narrative / arithmetic / ASCII recognition), Poisson
+    /// arrivals with the given mean inter-arrival time (paper: 10 s).
+    pub fn bigbench(mean_interarrival_s: f64) -> WorkloadConfig {
+        // BIG-bench outputs are constrained to the answer length (§IV-A),
+        // which is short for these task types.
+        let mk = |task| StreamConfig {
+            task,
+            mean_interarrival_s,
+            mean_prompt_tokens: 128,
+            output_tokens: 8,
+        };
+        WorkloadConfig {
+            name: "bigbench".into(),
+            streams: vec![
+                mk(TaskKind::AbstractNarrative),
+                mk(TaskKind::Arithmetic),
+                mk(TaskKind::AsciiRecognition),
+            ],
+        }
+    }
+
+    /// Heterogeneous setup: MMLU-Pro / WikiText / TACO across the three
+    /// servers (paper: 20 s Poisson). Prompt/output lengths differ per
+    /// dataset as in §IV-A (WikiText & TACO capped at 20 output tokens).
+    pub fn multidata(mean_interarrival_s: f64) -> WorkloadConfig {
+        WorkloadConfig {
+            name: "multidata".into(),
+            streams: vec![
+                StreamConfig {
+                    task: TaskKind::MmluPro,
+                    mean_interarrival_s,
+                    mean_prompt_tokens: 192,
+                    output_tokens: 8,
+                },
+                StreamConfig {
+                    task: TaskKind::WikiText,
+                    mean_interarrival_s,
+                    mean_prompt_tokens: 256,
+                    output_tokens: 20,
+                },
+                StreamConfig {
+                    task: TaskKind::Taco,
+                    mean_interarrival_s,
+                    mean_prompt_tokens: 320,
+                    output_tokens: 20,
+                },
+            ],
+        }
+    }
+
+    /// Uniform workload for the Fig. 8 scaling runs: every server gets the
+    /// same task mix at the given arrival rate.
+    pub fn scaling(num_servers: usize, mean_interarrival_s: f64) -> WorkloadConfig {
+        let tasks = TaskKind::all();
+        WorkloadConfig {
+            name: format!("scaling-{num_servers}"),
+            streams: (0..num_servers)
+                .map(|i| StreamConfig {
+                    task: tasks[i % tasks.len()],
+                    mean_interarrival_s,
+                    mean_prompt_tokens: 128,
+                    output_tokens: 16,
+                })
+                .collect(),
+        }
+    }
+
+    pub fn preset(name: &str, mean_interarrival_s: f64) -> Option<WorkloadConfig> {
+        match name {
+            "bigbench" => Some(Self::bigbench(mean_interarrival_s)),
+            "multidata" => Some(Self::multidata(mean_interarrival_s)),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn testbed_matches_paper_topology() {
+        let m = ModelConfig::mixtral_8x7b_sim();
+        let c = ClusterConfig::edge_testbed_3_for(&m);
+        assert_eq!(c.num_servers(), 3);
+        assert_eq!(
+            c.servers.iter().map(|s| s.gpus.len()).collect::<Vec<_>>(),
+            vec![1, 1, 2]
+        );
+        assert_eq!(c.num_gpus(), 4);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn memory_headroom_allows_coverage_with_duplication() {
+        // Both models must fit in aggregate cluster memory with headroom,
+        // matching the paper's constrained-but-feasible setting.
+        for m in [
+            ModelConfig::mixtral_8x7b_sim(),
+            ModelConfig::deepseek_v2_lite_sim(),
+        ] {
+            let c = ClusterConfig::edge_testbed_3_for(&m);
+            let need = m.total_experts() as u64 * m.expert_bytes;
+            let have = c.total_mem();
+            let headroom = have as f64 / need as f64;
+            assert!(
+                headroom > 1.1 && headroom < 2.5,
+                "{}: headroom {headroom:.2}",
+                m.name
+            );
+        }
+    }
+
+    #[test]
+    fn expert_bytes_magnitudes() {
+        let mx = ModelConfig::mixtral_8x7b_sim();
+        let ds = ModelConfig::deepseek_v2_lite_sim();
+        assert!((mx.expert_bytes as f64 / 1e6 - 352.0).abs() < 10.0);
+        assert!((ds.expert_bytes as f64 / 1e6 - 17.3).abs() < 1.0);
+        // Mixtral full parameter set exceeds one A100 (paper's premise)
+        let total =
+            mx.total_experts() as u64 * mx.expert_bytes;
+        assert!(total > A100_MEM);
+    }
+
+    #[test]
+    fn scaling_cluster_shapes() {
+        for n in [4, 16, 256] {
+            let c = ClusterConfig::scaling(n, 500e6);
+            assert_eq!(c.num_gpus(), n);
+            c.validate().unwrap();
+        }
+        let c = ClusterConfig::scaling(6, 500e6);
+        assert_eq!(c.num_gpus(), 6);
+    }
+
+    #[test]
+    fn workload_presets() {
+        let w = WorkloadConfig::bigbench(10.0);
+        assert_eq!(w.streams.len(), 3);
+        assert!(w.streams.iter().all(|s| s.mean_interarrival_s == 10.0));
+        let w = WorkloadConfig::multidata(20.0);
+        assert_eq!(w.streams.len(), 3);
+        assert!(WorkloadConfig::preset("bigbench", 10.0).is_some());
+        assert!(WorkloadConfig::preset("nope", 10.0).is_none());
+    }
+
+    #[test]
+    fn model_presets_resolve() {
+        assert!(ModelConfig::preset("mixtral").is_some());
+        assert!(ModelConfig::preset("deepseek").is_some());
+        assert!(ModelConfig::preset("tiny").is_some());
+        assert!(ModelConfig::preset("gpt5").is_none());
+    }
+}

@@ -1,0 +1,403 @@
+//! The **Global Scheduler** (Fig. 4, left): collects activation statistics
+//! from the engine's observability stream, periodically re-runs the
+//! placement pipeline, and executes migrations when Eq. 4 says the saving
+//! outweighs the transfer cost.
+//!
+//! The coordinator drives the engine in segments of `interval_s` virtual
+//! seconds. At every boundary it:
+//! 1. merges the engine's observed statistics into its decayed history,
+//! 2. updates the historically-observed remote penalty (the paper's
+//!    "historical communication and computation time" estimator),
+//! 3. computes a candidate placement with the configured algorithm,
+//! 4. evaluates Eq. 4 and, if adopted, stages the migration in the engine
+//!    (destination GPUs blocked while loading, placement flips at the end).
+
+use crate::config::{ClusterConfig, ModelConfig};
+use crate::engine::{CostModel, Engine, EngineConfig, ServeReport};
+use crate::moe::ActivationStats;
+use crate::placement::migration::{self, MigrationCtx, MigrationDecision};
+use crate::placement::{Placement, PlacementAlgo};
+use crate::trace::Trace;
+
+/// Coordinator policy knobs.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    /// Re-evaluation period (paper: 5 minutes).
+    pub interval_s: f64,
+    /// Exponential decay applied to history at each interval, so the
+    /// scheduler tracks drifting workloads (Fig. 7's adaptation).
+    pub decay: f64,
+    /// Which placement algorithm the scheduler re-runs.
+    pub algo: PlacementAlgo,
+    /// Disable migrations entirely (the Fig. 7 "w/o" arm and the static
+    /// baselines of Fig. 6).
+    pub migrate: bool,
+    /// Seed for stochastic placement algorithms.
+    pub seed: u64,
+    /// Hysteresis: adopt a migration only when the net saving
+    /// (C(P) − C(P′) − T_mig) exceeds this fraction of C(P). Without it,
+    /// per-interval statistical fluctuation of the empirical f̂_n^l(e)
+    /// produces a slightly-different "optimal" layout every interval and
+    /// Eq. 4 alone migrates continuously (the measured remote penalty makes
+    /// even small mass differences look profitable).
+    pub min_relative_gain: f64,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            interval_s: 300.0,
+            decay: 0.5,
+            algo: PlacementAlgo::DanceMoE,
+            migrate: true,
+            seed: 0,
+            min_relative_gain: 0.15,
+        }
+    }
+}
+
+/// One interval's scheduling record (observability).
+#[derive(Debug, Clone)]
+pub struct IntervalLog {
+    pub t_s: f64,
+    pub decision: Option<MigrationDecision>,
+    pub remote_penalty_s: f64,
+    pub observed_tokens: f64,
+}
+
+/// The global scheduler wrapping an [`Engine`].
+pub struct Coordinator {
+    pub cfg: CoordinatorConfig,
+    pub model: ModelConfig,
+    pub cluster: ClusterConfig,
+    /// decayed history of activation statistics
+    pub history: ActivationStats,
+    pub logs: Vec<IntervalLog>,
+    last_stats_total: f64,
+    /// snapshot of engine stats already folded into history
+    folded: Option<ActivationStats>,
+}
+
+impl Coordinator {
+    pub fn new(
+        model: &ModelConfig,
+        cluster: &ClusterConfig,
+        cfg: CoordinatorConfig,
+    ) -> Coordinator {
+        Coordinator {
+            history: ActivationStats::new(model, cluster.num_servers()),
+            logs: Vec::new(),
+            last_stats_total: 0.0,
+            folded: None,
+            model: model.clone(),
+            cluster: cluster.clone(),
+            cfg,
+        }
+    }
+
+    /// Seed the history (the paper's "initialized from historical data").
+    pub fn seed_history(&mut self, stats: &ActivationStats) {
+        self.history = stats.clone();
+    }
+
+    /// Remote penalty per remote token-invocation: the engine's *measured*
+    /// historical average (the paper's "historical communication and
+    /// computation time ... as estimation metrics"), falling back to an
+    /// RTT-based analytic floor before the first remote call completes.
+    fn remote_penalty_s(&self, engine: &Engine) -> f64 {
+        // analytic floor: one activation row each way + 2×latency
+        let bytes = self.model.token_bytes as f64;
+        let floor = (2.0 * engine.net.latency_s
+            + 2.0 * bytes / (self.cluster.bandwidth_bps / 8.0))
+            .max(1e-4);
+        match engine.measured_remote_penalty_s() {
+            Some(measured) => measured.max(floor),
+            None => floor,
+        }
+    }
+
+    /// Run the full trace under coordination. `initial` is the placement at
+    /// t = 0.
+    pub fn run(
+        &mut self,
+        engine_cfg: EngineConfig,
+        cost: CostModel,
+        initial: Placement,
+        trace: &Trace,
+    ) -> ServeReport {
+        let mut engine = Engine::new(
+            &self.model,
+            &self.cluster,
+            initial,
+            engine_cfg,
+            cost,
+        );
+        engine.push_trace(trace);
+        self.drive(&mut engine);
+        engine.finalize();
+        std::mem::replace(
+            &mut engine.report,
+            ServeReport::new(self.cluster.num_servers(), 60.0),
+        )
+    }
+
+    /// Drive an already-loaded engine to completion with periodic checks.
+    pub fn drive(&mut self, engine: &mut Engine) {
+        let mut next_check = self.cfg.interval_s;
+        loop {
+            match engine.run_until(next_check) {
+                None => break, // queue drained
+                Some(_) => {
+                    self.on_interval(engine, next_check);
+                    next_check += self.cfg.interval_s;
+                }
+            }
+        }
+    }
+
+    fn on_interval(&mut self, engine: &mut Engine, t: f64) {
+        // ---- 1. fold observations into decayed history -------------------
+        let new_total = engine.stats.total();
+        let observed = new_total - self.last_stats_total;
+        self.last_stats_total = new_total;
+        self.history.decay(self.cfg.decay);
+        // add the *delta* of this interval: engine.stats is cumulative, so
+        // reconstruct the increment by subtracting what we already folded.
+        // (Simpler and numerically safe: decay history, then add the full
+        // cumulative scaled by (1 - decay) — instead we track increments.)
+        // We fold the increment by snapshotting engine stats at intervals:
+        self.fold_increment(engine);
+
+        // ---- 2. candidate placement --------------------------------------
+        if !self.cfg.migrate {
+            self.logs.push(IntervalLog {
+                t_s: t,
+                decision: None,
+                remote_penalty_s: 0.0,
+                observed_tokens: observed,
+            });
+            return;
+        }
+        let candidate = self.cfg.algo.compute(
+            &self.model,
+            &self.cluster,
+            &self.history,
+            self.cfg.seed,
+        );
+
+        // ---- 3. Eq. 4 ------------------------------------------------------
+        let penalty = self.remote_penalty_s(engine);
+        let ctx = MigrationCtx {
+            window_s: self.cfg.interval_s,
+            horizon_s: self.cfg.interval_s,
+            remote_penalty_s: penalty,
+        };
+        let decision = migration::should_migrate(
+            &engine.placement,
+            &candidate,
+            &self.model,
+            &self.cluster,
+            &self.history,
+            &ctx,
+        );
+        let net_saving =
+            decision.cost_old_s - decision.cost_new_s - decision.t_mig_s;
+        let adopt = decision.adopt
+            && net_saving > self.cfg.min_relative_gain * decision.cost_old_s;
+        if adopt {
+            crate::util::log::info(
+                "coordinator",
+                &format!(
+                    "t={t:.0}s adopting migration: {} replicas, T_mig {:.2}s, \
+                     C {:.1}s -> {:.1}s",
+                    decision.replicas_moved,
+                    decision.t_mig_s,
+                    decision.cost_old_s,
+                    decision.cost_new_s
+                ),
+            );
+            engine.schedule_migration(candidate);
+        } else {
+            crate::util::log::debug(
+                "coordinator",
+                &format!(
+                    "t={t:.0}s keeping placement (saving {net_saving:.2}s \
+                     below threshold)"
+                ),
+            );
+        }
+        self.logs.push(IntervalLog {
+            t_s: t,
+            decision: Some(decision),
+            remote_penalty_s: penalty,
+            observed_tokens: observed,
+        });
+    }
+
+    /// Fold the engine's cumulative stats increment into history.
+    fn fold_increment(&mut self, engine: &Engine) {
+        // engine.stats is cumulative over the run; history was just decayed.
+        // We keep a parallel "already folded" snapshot via last_local /
+        // last_remote trick being insufficient — instead we recompute the
+        // increment per cell from the cumulative table minus what history
+        // absorbed at previous folds, tracked in `folded` below.
+        if self.folded.is_none() {
+            self.folded = Some(ActivationStats::new(
+                &self.model,
+                self.cluster.num_servers(),
+            ));
+        }
+        let folded = self.folded.as_mut().unwrap();
+        for n in 0..self.history.num_servers() {
+            for l in 0..self.history.num_layers {
+                for e in 0..self.history.num_experts {
+                    let cum = engine.stats.raw(n, l, e);
+                    let prev = folded.raw(n, l, e);
+                    let inc = (cum - prev).max(0.0);
+                    if inc > 0.0 {
+                        self.history.record(n, l, e, inc);
+                        folded.record(n, l, e, inc);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WorkloadConfig;
+    use crate::engine::{warm_stats, Mode};
+    use crate::placement::uniform;
+    use crate::trace::TraceGenerator;
+
+    fn small() -> (ModelConfig, ClusterConfig, WorkloadConfig) {
+        let mut m = ModelConfig::mixtral_8x7b_sim();
+        m.num_layers = 4;
+        let c = ClusterConfig::edge_testbed_3_for(&m);
+        (m, c, WorkloadConfig::bigbench(5.0))
+    }
+
+    #[test]
+    fn coordinator_completes_all_requests() {
+        let (m, c, w) = small();
+        let trace = TraceGenerator::new(&m, &w, 21).gen_count(40);
+        let mut coord = Coordinator::new(
+            &m,
+            &c,
+            CoordinatorConfig {
+                interval_s: 60.0,
+                ..CoordinatorConfig::default()
+            },
+        );
+        let report = coord.run(
+            EngineConfig {
+                mode: Mode::Collaborative,
+                seed: 21,
+                ..EngineConfig::default()
+            },
+            CostModel::default(),
+            uniform::place(&m, &c),
+            &trace,
+        );
+        assert_eq!(report.records.len(), 120);
+        assert!(!coord.logs.is_empty());
+    }
+
+    #[test]
+    fn migration_improves_local_ratio_from_uniform_start() {
+        let (m, c, w) = small();
+        let trace = TraceGenerator::new(&m, &w, 23).gen_count(60);
+        let run = |migrate: bool| {
+            let mut coord = Coordinator::new(
+                &m,
+                &c,
+                CoordinatorConfig {
+                    interval_s: 60.0,
+                    migrate,
+                    ..CoordinatorConfig::default()
+                },
+            );
+            let report = coord.run(
+                EngineConfig {
+                    seed: 23,
+                    ..EngineConfig::default()
+                },
+                CostModel::default(),
+                uniform::place(&m, &c),
+                &trace,
+            );
+            (report.local_ratio(), report.migrations.len())
+        };
+        let (static_ratio, m0) = run(false);
+        let (adaptive_ratio, m1) = run(true);
+        assert_eq!(m0, 0);
+        assert!(m1 >= 1, "expected at least one migration");
+        assert!(
+            adaptive_ratio > static_ratio + 0.05,
+            "adaptive {adaptive_ratio:.3} vs static {static_ratio:.3}"
+        );
+    }
+
+    #[test]
+    fn no_migration_when_already_optimal() {
+        let (m, c, w) = small();
+        let stats = warm_stats(&m, &w);
+        let good = PlacementAlgo::DanceMoE.compute(&m, &c, &stats, 0);
+        let trace = TraceGenerator::new(&m, &w, 25).gen_count(40);
+        let mut coord = Coordinator::new(
+            &m,
+            &c,
+            CoordinatorConfig {
+                interval_s: 60.0,
+                ..CoordinatorConfig::default()
+            },
+        );
+        coord.seed_history(&stats);
+        let report = coord.run(
+            EngineConfig {
+                seed: 25,
+                ..EngineConfig::default()
+            },
+            CostModel::default(),
+            good,
+            &trace,
+        );
+        // starting near-optimal, migrations should be rare (adoption only
+        // if the modeled saving beats the transfer cost)
+        assert!(
+            report.migrations.len() <= 1,
+            "unexpected migrations: {:?}",
+            report.migrations
+        );
+    }
+
+    #[test]
+    fn history_decays_and_folds() {
+        let (m, c, w) = small();
+        let trace = TraceGenerator::new(&m, &w, 27).gen_count(30);
+        let mut coord = Coordinator::new(
+            &m,
+            &c,
+            CoordinatorConfig {
+                interval_s: 30.0,
+                decay: 0.5,
+                ..CoordinatorConfig::default()
+            },
+        );
+        let _ = coord.run(
+            EngineConfig {
+                seed: 27,
+                ..EngineConfig::default()
+            },
+            CostModel::default(),
+            uniform::place(&m, &c),
+            &trace,
+        );
+        assert!(coord.history.total() > 0.0);
+        assert!(coord.logs.len() >= 2);
+        // observed token counts were logged per interval
+        assert!(coord.logs.iter().any(|l| l.observed_tokens > 0.0));
+    }
+}

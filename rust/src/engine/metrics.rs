@@ -1,0 +1,232 @@
+//! Serving metrics: per-request latency, per-server aggregates, and the
+//! time-bucketed local-compute-ratio series behind Figs. 6 and 7.
+
+use crate::util::stats::{mean, Online};
+
+/// One completed request's record.
+#[derive(Debug, Clone)]
+pub struct RequestRecord {
+    pub id: usize,
+    pub server: usize,
+    pub arrival_s: f64,
+    pub done_s: f64,
+    pub latency_s: f64,
+    pub local_token_invocations: f64,
+    pub remote_token_invocations: f64,
+}
+
+/// Time-bucketed counters for the local-compute-ratio timeline.
+#[derive(Debug, Clone, Default)]
+pub struct TimelineBucket {
+    pub local: f64,
+    pub remote: f64,
+    pub completed: usize,
+    pub latency_sum: f64,
+}
+
+impl TimelineBucket {
+    pub fn local_ratio(&self) -> f64 {
+        let t = self.local + self.remote;
+        if t <= 0.0 {
+            1.0
+        } else {
+            self.local / t
+        }
+    }
+
+    pub fn avg_latency(&self) -> f64 {
+        if self.completed == 0 {
+            0.0
+        } else {
+            self.latency_sum / self.completed as f64
+        }
+    }
+}
+
+/// All metrics of one serve run.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub records: Vec<RequestRecord>,
+    pub num_servers: usize,
+    /// bucket width for the timeline (seconds)
+    pub bucket_s: f64,
+    pub timeline: Vec<TimelineBucket>,
+    /// virtual time when the last request finished
+    pub makespan_s: f64,
+    /// total activation bytes that crossed the network
+    pub net_bytes: f64,
+    /// per-(server) GPU busy seconds (utilization accounting)
+    pub gpu_busy_s: Vec<f64>,
+    /// migrations adopted during the run (time, moved replicas, t_mig)
+    pub migrations: Vec<(f64, usize, f64)>,
+}
+
+impl ServeReport {
+    pub fn new(num_servers: usize, bucket_s: f64) -> ServeReport {
+        ServeReport {
+            records: Vec::new(),
+            num_servers,
+            bucket_s,
+            timeline: Vec::new(),
+            makespan_s: 0.0,
+            net_bytes: 0.0,
+            gpu_busy_s: vec![0.0; num_servers],
+            migrations: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, rec: RequestRecord) {
+        self.makespan_s = self.makespan_s.max(rec.done_s);
+        self.bucket_mut(rec.done_s).completed += 1;
+        self.bucket_mut(rec.done_s).latency_sum += rec.latency_s;
+        self.records.push(rec);
+    }
+
+    fn bucket_mut(&mut self, t: f64) -> &mut TimelineBucket {
+        let i = (t / self.bucket_s).floor().max(0.0) as usize;
+        if i >= self.timeline.len() {
+            self.timeline.resize(i + 1, TimelineBucket::default());
+        }
+        &mut self.timeline[i]
+    }
+
+    /// Record an expert invocation for the local-ratio timeline.
+    pub fn record_invocation(&mut self, t: f64, tokens: f64, local: bool) {
+        let b = self.bucket_mut(t);
+        if local {
+            b.local += tokens;
+        } else {
+            b.remote += tokens;
+        }
+    }
+
+    /// Mean latency over all requests.
+    pub fn avg_latency(&self) -> f64 {
+        mean(&self.records.iter().map(|r| r.latency_s).collect::<Vec<_>>())
+    }
+
+    /// Mean latency of requests homed at `server` (paper's per-server rows).
+    pub fn server_avg_latency(&self, server: usize) -> f64 {
+        let xs: Vec<f64> = self
+            .records
+            .iter()
+            .filter(|r| r.server == server)
+            .map(|r| r.latency_s)
+            .collect();
+        mean(&xs)
+    }
+
+    /// The paper's table row: per-server averages then total average.
+    pub fn latency_row(&self) -> Vec<f64> {
+        let mut row: Vec<f64> = (0..self.num_servers)
+            .map(|s| self.server_avg_latency(s))
+            .collect();
+        row.push(self.avg_latency());
+        row
+    }
+
+    /// Overall local compute ratio (token-weighted).
+    pub fn local_ratio(&self) -> f64 {
+        let local: f64 = self.timeline.iter().map(|b| b.local).sum();
+        let remote: f64 = self.timeline.iter().map(|b| b.remote).sum();
+        if local + remote <= 0.0 {
+            1.0
+        } else {
+            local / (local + remote)
+        }
+    }
+
+    /// Local-ratio series (one point per bucket) — the Fig. 6 curves.
+    pub fn local_ratio_series(&self) -> Vec<f64> {
+        self.timeline.iter().map(|b| b.local_ratio()).collect()
+    }
+
+    pub fn latency_percentile(&self, q: f64) -> f64 {
+        crate::util::stats::percentile(
+            &self.records.iter().map(|r| r.latency_s).collect::<Vec<_>>(),
+            q,
+        )
+    }
+
+    /// Throughput in requests/s over the makespan.
+    pub fn throughput(&self) -> f64 {
+        if self.makespan_s <= 0.0 {
+            0.0
+        } else {
+            self.records.len() as f64 / self.makespan_s
+        }
+    }
+
+    pub fn latency_online(&self) -> Online {
+        let mut o = Online::new();
+        for r in &self.records {
+            o.push(r.latency_s);
+        }
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(id: usize, server: usize, arr: f64, done: f64) -> RequestRecord {
+        RequestRecord {
+            id,
+            server,
+            arrival_s: arr,
+            done_s: done,
+            latency_s: done - arr,
+            local_token_invocations: 0.0,
+            remote_token_invocations: 0.0,
+        }
+    }
+
+    #[test]
+    fn per_server_and_total_averages() {
+        let mut r = ServeReport::new(3, 60.0);
+        r.push(rec(0, 0, 0.0, 4.0));
+        r.push(rec(1, 0, 1.0, 7.0));
+        r.push(rec(2, 1, 0.0, 2.0));
+        let row = r.latency_row();
+        assert_eq!(row.len(), 4);
+        assert!((row[0] - 5.0).abs() < 1e-12);
+        assert!((row[1] - 2.0).abs() < 1e-12);
+        assert_eq!(row[2], 0.0); // no server-2 requests
+        assert!((row[3] - 4.0).abs() < 1e-12);
+        assert_eq!(r.makespan_s, 7.0);
+        assert!((r.throughput() - 3.0 / 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn local_ratio_timeline() {
+        let mut r = ServeReport::new(1, 60.0);
+        r.record_invocation(10.0, 8.0, true);
+        r.record_invocation(20.0, 2.0, false);
+        r.record_invocation(70.0, 5.0, false);
+        let series = r.local_ratio_series();
+        assert_eq!(series.len(), 2);
+        assert!((series[0] - 0.8).abs() < 1e-12);
+        assert_eq!(series[1], 0.0);
+        assert!((r.local_ratio() - 8.0 / 15.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_report_is_sane() {
+        let r = ServeReport::new(2, 60.0);
+        assert_eq!(r.avg_latency(), 0.0);
+        assert_eq!(r.local_ratio(), 1.0);
+        assert_eq!(r.throughput(), 0.0);
+        assert_eq!(r.latency_row(), vec![0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn percentiles() {
+        let mut r = ServeReport::new(1, 60.0);
+        for i in 1..=10 {
+            r.push(rec(i, 0, 0.0, i as f64));
+        }
+        assert!(r.latency_percentile(0.5) <= r.latency_percentile(0.99));
+        assert_eq!(r.latency_percentile(1.0), 10.0);
+    }
+}

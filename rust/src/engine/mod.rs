@@ -1,0 +1,1028 @@
+//! The discrete-event collaborative serving engine.
+//!
+//! Models the paper's Fig. 4 dataflow in virtual time: a request arriving at
+//! its home server is processed layer by layer — the non-MoE block and
+//! gating run on a home GPU, routed tokens fan out to the experts'
+//! resident GPUs (local compute, or a send → compute → return round trip
+//! over the bandwidth-limited links for remote experts), and the layer
+//! completes when its slowest invocation returns (the `max` of the paper's
+//! latency decomposition). GPUs and directed links are FIFO resources.
+//!
+//! Two modes:
+//! - [`Mode::Collaborative`] — placement-driven distributed inference (the
+//!   paper's system and all placement baselines),
+//! - [`Mode::Offload`] — the MoE-Infinity baseline: single-server serving
+//!   with a frequency-aware GPU expert cache, misses paying host→device
+//!   load time; optionally with request-level load-balancing redirection
+//!   (`lb`), reproducing Table I's three rows.
+//!
+//! Determinism: given (model, cluster, workload, seed, placement) every run
+//! produces identical virtual-time results.
+
+pub mod cost;
+pub mod metrics;
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+pub use cost::CostModel;
+pub use metrics::{RequestRecord, ServeReport};
+
+use crate::cluster::Cluster;
+use crate::config::{ClusterConfig, ModelConfig, TaskKind, WorkloadConfig};
+use crate::moe::ActivationStats;
+use crate::net::NetModel;
+use crate::placement::{dancemoe_place, Placement};
+use crate::trace::{Request, TaskProfile, Trace, TraceGenerator};
+use crate::util::rng::Rng;
+
+/// Serving mode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// Placement-driven collaborative inference (remote expert calls).
+    Collaborative,
+    /// MoE-Infinity-style single-server offloading; `lb` adds request
+    /// redirection to the least-backlogged server.
+    Offload { lb: bool },
+}
+
+/// Engine tuning knobs.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    pub mode: Mode,
+    pub seed: u64,
+    /// Timeline bucket width for the Fig. 6/7 series.
+    pub bucket_s: f64,
+    /// Decode tokens processed per pass (1 = exact per-token decoding;
+    /// larger values trade routing granularity for speed — used by the
+    /// Fig. 8 scaling sweeps).
+    pub decode_chunk: usize,
+    /// Offload-LB: redirect a request if home backlog exceeds the best
+    /// server's backlog by this many seconds.
+    pub lb_threshold_s: f64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            mode: Mode::Collaborative,
+            seed: 0,
+            bucket_s: 60.0,
+            decode_chunk: 1,
+            lb_threshold_s: 0.5,
+        }
+    }
+}
+
+/// Ordered f64 for the event queue.
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct T(f64);
+impl Eq for T {}
+impl PartialOrd for T {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for T {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.partial_cmp(&other.0).expect("no NaN times")
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+enum Ev {
+    Arrive(usize),
+    HomeDone(usize),
+    SendDone(usize, usize),
+    ExpertDone(usize, usize),
+    ReturnDone(usize, usize),
+    ApplyPlacement,
+}
+
+/// One expert invocation in flight.
+#[derive(Debug, Clone, Copy)]
+struct Inv {
+    expert: usize,
+    tokens: f64,
+    server: usize,
+    gpu: usize,
+    remote: bool,
+    /// uncovered expert served from host RAM (pays a load like a cache
+    /// miss); only set by the emergency fallback of an infeasible placement
+    ram_load: bool,
+    /// dispatch time of a remote invocation (penalty measurement)
+    t0: f64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Phase {
+    Prefill,
+    Decode,
+    Done,
+}
+
+struct ReqState {
+    req: Request,
+    /// server actually executing (≠ req.server only under Offload-LB)
+    exec_server: usize,
+    layer: usize,
+    phase: Phase,
+    pass_tokens: f64,
+    decode_passes_left: usize,
+    pending: usize,
+    layer_deadline: f64,
+    invs: Vec<Inv>,
+    local_tok: f64,
+    remote_tok: f64,
+}
+
+/// The discrete-event serving engine.
+pub struct Engine {
+    pub model: ModelConfig,
+    pub cluster_cfg: ClusterConfig,
+    pub cfg: EngineConfig,
+    pub cost: CostModel,
+    pub placement: Placement,
+    /// placement staged by a migration, applied at the ApplyPlacement event
+    pending_placement: Option<Placement>,
+    profiles: Vec<TaskProfile>,
+    pub cluster: Cluster,
+    pub net: NetModel,
+    /// activation statistics observed during the run (feeds the scheduler)
+    pub stats: ActivationStats,
+    pub report: ServeReport,
+    rng: Rng,
+    queue: BinaryHeap<Reverse<(T, u64, usize)>>,
+    events: Vec<Ev>,
+    reqs: Vec<ReqState>,
+    now: f64,
+    done_count: usize,
+    /// measured extra seconds of remote invocations (send→…→return minus
+    /// the pure compute) — the paper's "historical communication and
+    /// computation time" estimator consumed by the scheduler's Eq. 4
+    remote_extra_s: f64,
+    remote_invocations: f64,
+    /// per-server recorded profiles overriding the task-keyed ones
+    server_profiles: Option<Vec<TaskProfile>>,
+    /// requests redirected by Offload-LB (observability)
+    pub redirects: u64,
+    /// currently-active (arrived, unfinished) requests per exec server —
+    /// the queue-depth signal the Offload-LB policy redirects on
+    active: Vec<usize>,
+}
+
+impl Engine {
+    pub fn new(
+        model: &ModelConfig,
+        cluster_cfg: &ClusterConfig,
+        placement: Placement,
+        cfg: EngineConfig,
+        cost: CostModel,
+    ) -> Engine {
+        Engine {
+            profiles: TaskKind::all()
+                .into_iter()
+                .map(|t| TaskProfile::build(t, model))
+                .collect(),
+            cluster: Cluster::new(cluster_cfg, model),
+            net: NetModel::new(cluster_cfg),
+            stats: ActivationStats::new(model, cluster_cfg.num_servers()),
+            report: ServeReport::new(cluster_cfg.num_servers(), cfg.bucket_s),
+            rng: Rng::new(cfg.seed ^ 0xe961_e001),
+            queue: BinaryHeap::new(),
+            events: Vec::new(),
+            reqs: Vec::new(),
+            now: 0.0,
+            done_count: 0,
+            remote_extra_s: 0.0,
+            remote_invocations: 0.0,
+            server_profiles: None,
+            redirects: 0,
+            active: vec![0; cluster_cfg.num_servers()],
+            placement,
+            pending_placement: None,
+            model: model.clone(),
+            cluster_cfg: cluster_cfg.clone(),
+            cfg,
+            cost,
+        }
+    }
+
+    fn profile_index(&self, task: TaskKind) -> usize {
+        TaskKind::all().iter().position(|&t| t == task).unwrap()
+    }
+
+    /// The activation profile the engine's gate samples from for a task.
+    pub fn profile(&self, task: TaskKind) -> &TaskProfile {
+        &self.profiles[self.profile_index(task)]
+    }
+
+    fn push_event(&mut self, t: f64, ev: Ev) {
+        let idx = self.events.len();
+        self.events.push(ev);
+        let seq = idx as u64;
+        self.queue.push(Reverse((T(t), seq, idx)));
+    }
+
+    /// Load a trace (arrival events).
+    pub fn push_trace(&mut self, trace: &Trace) {
+        for r in &trace.requests {
+            let idx = self.reqs.len();
+            self.reqs.push(ReqState {
+                req: r.clone(),
+                exec_server: r.server,
+                layer: 0,
+                phase: Phase::Prefill,
+                pass_tokens: r.prompt_tokens as f64,
+                decode_passes_left: 0,
+                pending: 0,
+                layer_deadline: 0.0,
+                invs: Vec::new(),
+                local_tok: 0.0,
+                remote_tok: 0.0,
+            });
+            self.push_event(r.arrival_s, Ev::Arrive(idx));
+        }
+    }
+
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    pub fn requests_done(&self) -> usize {
+        self.done_count
+    }
+
+    pub fn requests_total(&self) -> usize {
+        self.reqs.len()
+    }
+
+    pub fn events_processed(&self) -> usize {
+        self.events.len()
+    }
+
+    /// Historically measured extra latency per remote *token*-invocation
+    /// (None until the first remote call completes). Feeds Eq. 4.
+    pub fn measured_remote_penalty_s(&self) -> Option<f64> {
+        if self.remote_invocations > 0.0 {
+            Some(self.remote_extra_s / self.remote_invocations)
+        } else {
+            None
+        }
+    }
+
+    /// Replace the task-keyed routing profiles with per-*server* recorded
+    /// profiles (the paper's simulator replays "expert selection patterns"
+    /// captured from a live DanceMoE run — see [`crate::trace::recorded`]).
+    pub fn set_server_profiles(&mut self, profiles: Vec<TaskProfile>) {
+        assert_eq!(profiles.len(), self.cluster_cfg.num_servers());
+        self.server_profiles = Some(profiles);
+    }
+
+    /// Stage a migration: destination GPUs are blocked while they load
+    /// their new experts (the Fig. 7b latency impact), and the placement
+    /// flips once every transfer has finished. Returns the apply time.
+    pub fn schedule_migration(&mut self, new_placement: Placement) -> f64 {
+        let adds = self.placement.added_replicas(&new_placement);
+        let moved = adds.len();
+        let mut apply_at = self.now;
+        // per-GPU load share
+        let mut per_gpu: std::collections::BTreeMap<(usize, usize), usize> =
+            std::collections::BTreeMap::new();
+        for (s, g, _, _) in &adds {
+            *per_gpu.entry((*s, *g)).or_insert(0) += 1;
+        }
+        let mut t_mig_total = 0.0;
+        for ((s, g), n) in per_gpu {
+            let gpu = &mut self.cluster.servers[s].gpus[g];
+            let dur =
+                n as f64 * self.model.expert_bytes as f64 / gpu.pcie_bps;
+            t_mig_total += dur;
+            let (_, end) = gpu.book(self.now, dur);
+            apply_at = apply_at.max(end);
+        }
+        self.pending_placement = Some(new_placement);
+        self.push_event(apply_at, Ev::ApplyPlacement);
+        self.report.migrations.push((self.now, moved, t_mig_total));
+        apply_at
+    }
+
+    /// Run until the event queue is empty or `until` is passed. Returns
+    /// the time of the next pending event (if stopped early).
+    pub fn run_until(&mut self, until: f64) -> Option<f64> {
+        while let Some(&Reverse((T(t), _, _))) = self.queue.peek() {
+            if t > until {
+                return Some(t);
+            }
+            let Reverse((T(t), _, idx)) = self.queue.pop().unwrap();
+            self.now = t;
+            let ev = self.events[idx];
+            self.handle(ev);
+        }
+        None
+    }
+
+    /// Run to completion.
+    pub fn run(&mut self) {
+        self.run_until(f64::INFINITY);
+        self.finalize();
+    }
+
+    /// Flush accounting into the report (also used after segmented runs).
+    pub fn finalize(&mut self) {
+        self.report.net_bytes = self.net.total_bytes();
+        for (s, srv) in self.cluster.servers.iter().enumerate() {
+            self.report.gpu_busy_s[s] =
+                srv.gpus.iter().map(|g| g.busy_s).sum();
+        }
+    }
+
+    fn handle(&mut self, ev: Ev) {
+        match ev {
+            Ev::Arrive(r) => self.on_arrive(r),
+            Ev::HomeDone(r) => self.on_home_done(r),
+            Ev::SendDone(r, i) => self.on_send_done(r, i),
+            Ev::ExpertDone(r, i) => self.on_expert_done(r, i),
+            Ev::ReturnDone(r, i) => self.on_invocation_complete(r, i),
+            Ev::ApplyPlacement => {
+                if let Some(p) = self.pending_placement.take() {
+                    self.placement = p;
+                }
+            }
+        }
+    }
+
+    fn on_arrive(&mut self, r: usize) {
+        // Offload-LB: redirect the whole request to the least-loaded server
+        // when home is clearly behind. Queue depth = active (arrived but
+        // unfinished) requests, normalized by server GPU count — the DES
+        // books work one layer at a time, so GPU timelines alone cannot see
+        // logical queue depth.
+        if let Mode::Offload { lb: true } = self.cfg.mode {
+            let home = self.reqs[r].req.server;
+            let depth = |s: usize| {
+                self.active[s] as f64 / self.cluster.servers[s].gpus.len() as f64
+            };
+            let best = (0..self.cluster.servers.len())
+                .min_by(|&a, &b| depth(a).partial_cmp(&depth(b)).unwrap())
+                .unwrap();
+            if depth(home) > depth(best) + 2.0 {
+                self.reqs[r].exec_server = best;
+                self.redirects += 1;
+            }
+        }
+        self.active[self.reqs[r].exec_server] += 1;
+        self.start_layer_pass(r, self.now);
+    }
+
+    fn start_layer_pass(&mut self, r: usize, ready: f64) {
+        let (server, tokens) = {
+            let rq = &self.reqs[r];
+            (rq.exec_server, rq.pass_tokens)
+        };
+        let gpu = self.cluster.earliest_gpu(server);
+        let flops = self.cluster.servers[server].gpus[gpu].flops;
+        let dur = self.cost.home_s(&self.model, tokens, flops);
+        let (_, end) = self.cluster.servers[server].gpus[gpu].book(ready, dur);
+        self.push_event(end, Ev::HomeDone(r));
+    }
+
+    fn on_home_done(&mut self, r: usize) {
+        let now = self.now;
+        let (layer, tokens, task, home, exec) = {
+            let rq = &self.reqs[r];
+            (
+                rq.layer,
+                rq.pass_tokens,
+                rq.req.task,
+                rq.req.server,
+                rq.exec_server,
+            )
+        };
+        // ---- gate: sample routed token counts per expert ----------------
+        let k = self.model.top_k;
+        let counts: Vec<u32> = {
+            // split borrow: take the profile by index to avoid holding &self
+            let t = tokens as usize;
+            let profile = match &self.server_profiles {
+                Some(per_server) => &per_server[exec],
+                None => &self.profiles[self.profile_index(task)],
+            };
+            if t >= 16 {
+                profile.sample_batch_fast(&mut self.rng, layer, t, k)
+            } else {
+                profile.sample_batch(&mut self.rng, layer, t, k)
+            }
+        };
+        // ---- build invocations ------------------------------------------
+        let mut invs: Vec<Inv> = Vec::new();
+        for (e, &c) in counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let tok = c as f64;
+            // observability: f_n^l(e) is recorded at the *home* server (the
+            // paper's per-server activation statistics)
+            self.stats.record(home, layer, e, tok);
+            let inv = self.route(exec, layer, e, tok);
+            invs.push(inv);
+        }
+        {
+            let rq = &mut self.reqs[r];
+            rq.pending = invs.len();
+            rq.layer_deadline = now;
+            rq.invs = invs.clone();
+        }
+        if invs.is_empty() {
+            // degenerate (no experts routed) — advance directly
+            self.advance_after_layer(r, now);
+            return;
+        }
+        // ---- dispatch ----------------------------------------------------
+        for (i, inv) in invs.iter().enumerate() {
+            self.report.record_invocation(now, inv.tokens, !inv.remote);
+            {
+                let rq = &mut self.reqs[r];
+                if inv.remote {
+                    rq.remote_tok += inv.tokens;
+                } else {
+                    rq.local_tok += inv.tokens;
+                }
+            }
+            if inv.remote {
+                let bytes = inv.tokens * self.model.token_bytes as f64;
+                self.reqs[r].invs[i].t0 = now;
+                let fx = self.cost.remote_fixed_s / 2.0;
+                let t = self.net.book_transfer(exec, inv.server, bytes, now, fx);
+                self.push_event(t, Ev::SendDone(r, i));
+            } else {
+                self.book_expert_compute(r, i, now);
+            }
+        }
+    }
+
+    /// Pick where an invocation runs (and whether it is remote).
+    fn route(&mut self, exec: usize, layer: usize, e: usize, tokens: f64) -> Inv {
+        match self.cfg.mode {
+            Mode::Offload { .. } => {
+                // Everything local: the cache decides in book_expert_compute
+                // whether a host→device load precedes the compute.
+                let gpu = self.cluster.earliest_gpu(exec);
+                Inv {
+                    expert: e,
+                    tokens,
+                    server: exec,
+                    gpu,
+                    remote: false,
+                    ram_load: false,
+                        t0: 0.0,
+                }
+            }
+            Mode::Collaborative => {
+                if self.placement.server_has(exec, layer, e) {
+                    let owners = self.placement.owners_ref(layer, e);
+                    let (s, g) = owners
+                        .iter()
+                        .copied()
+                        .filter(|&(s, _)| s == exec)
+                        .min_by(|a, b| {
+                            let ba =
+                                self.cluster.servers[a.0].gpus[a.1].busy_until;
+                            let bb =
+                                self.cluster.servers[b.0].gpus[b.1].busy_until;
+                            ba.partial_cmp(&bb).unwrap()
+                        })
+                        .unwrap();
+                    Inv {
+                        expert: e,
+                        tokens,
+                        server: s,
+                        gpu: g,
+                        remote: false,
+                        ram_load: false,
+                        t0: 0.0,
+                    }
+                } else {
+                    // choose the replica minimizing queue + transfer estimate
+                    let owners = self.placement.owners_ref(layer, e);
+                    let now = self.now;
+                    let bytes = tokens * self.model.token_bytes as f64;
+                    let pick = owners.iter().copied().min_by(|&a, &b| {
+                        let score = |(s, g): (usize, usize)| {
+                            let q = (self.cluster.servers[s].gpus[g]
+                                .busy_until
+                                - now)
+                                .max(0.0);
+                            q + self.net.transfer_estimate_s(
+                                    exec,
+                                    s,
+                                    bytes,
+                                    self.cost.remote_fixed_s,
+                                )
+                        };
+                        score(a).partial_cmp(&score(b)).unwrap()
+                    });
+                    let (s, g, ram_load) = match pick {
+                        Some((s, g)) => (s, g, false),
+                        None => {
+                            // uncovered expert (infeasible placement):
+                            // emergency host-RAM fallback on the home
+                            // server, paying a cache-miss-style load
+                            (exec, self.cluster.earliest_gpu(exec), true)
+                        }
+                    };
+                    Inv {
+                        expert: e,
+                        tokens,
+                        server: s,
+                        gpu: g,
+                        remote: s != exec,
+                        ram_load,
+                        t0: 0.0,
+                    }
+                }
+            }
+        }
+    }
+
+    fn book_expert_compute(&mut self, r: usize, i: usize, ready: f64) {
+        let inv = self.reqs[r].invs[i];
+        let layer = self.reqs[r].layer;
+        let mut dur = {
+            let flops = self.cluster.servers[inv.server].gpus[inv.gpu].flops;
+            self.cost.expert_s(&self.model, inv.tokens, flops)
+        };
+        if let Mode::Offload { .. } = self.cfg.mode {
+            // cache miss ⇒ host→device load precedes compute
+            let eid = self.placement.eid(layer, inv.expert);
+            let hit =
+                self.cluster.servers[inv.server].caches[inv.gpu].access(eid);
+            if !hit {
+                let pcie =
+                    self.cluster.servers[inv.server].gpus[inv.gpu].pcie_bps;
+                // MoE-Infinity prefetches predicted experts; part of the
+                // load hides behind compute of earlier invocations.
+                dur += self.cost.load_s(&self.model, pcie)
+                    * (1.0 - self.cost.offload_prefetch_overlap);
+            }
+        } else if inv.ram_load {
+            // collaborative fallback for an uncovered expert: the weights
+            // come from host RAM like an offload miss
+            let pcie = self.cluster.servers[inv.server].gpus[inv.gpu].pcie_bps;
+            dur += self.cost.load_s(&self.model, pcie)
+                * (1.0 - self.cost.offload_prefetch_overlap);
+        }
+        let (_, end) =
+            self.cluster.servers[inv.server].gpus[inv.gpu].book(ready, dur);
+        self.push_event(end, Ev::ExpertDone(r, i));
+    }
+
+    fn on_send_done(&mut self, r: usize, i: usize) {
+        self.book_expert_compute(r, i, self.now);
+    }
+
+    fn on_expert_done(&mut self, r: usize, i: usize) {
+        let inv = self.reqs[r].invs[i];
+        if inv.remote {
+            let exec = self.reqs[r].exec_server;
+            let bytes = inv.tokens * self.model.token_bytes as f64;
+            let fx = self.cost.remote_fixed_s / 2.0;
+            let t = self.net.book_transfer(inv.server, exec, bytes, self.now, fx);
+            self.push_event(t, Ev::ReturnDone(r, i));
+        } else {
+            self.on_invocation_complete(r, i);
+        }
+    }
+
+    fn on_invocation_complete(&mut self, r: usize, i: usize) {
+        let now = self.now;
+        // measured remote penalty: full round trip minus the pure compute
+        // an equivalent local invocation would have cost
+        let inv = self.reqs[r].invs[i];
+        if inv.remote {
+            let flops = self.cluster.servers[inv.server].gpus[inv.gpu].flops;
+            let comp = self.cost.expert_s(&self.model, inv.tokens, flops);
+            self.remote_extra_s += ((now - inv.t0) - comp).max(0.0);
+            self.remote_invocations += inv.tokens;
+        }
+        let deadline = {
+            let rq = &mut self.reqs[r];
+            rq.layer_deadline = rq.layer_deadline.max(now);
+            rq.pending -= 1;
+            if rq.pending > 0 {
+                return;
+            }
+            rq.layer_deadline
+        };
+        self.advance_after_layer(r, deadline);
+    }
+
+    fn advance_after_layer(&mut self, r: usize, t: f64) {
+        let layers = self.model.num_layers;
+        let chunk = self.cfg.decode_chunk.max(1);
+        {
+            let rq = &mut self.reqs[r];
+            rq.layer += 1;
+            if rq.layer < layers {
+                // fall through to start the next layer below
+            } else {
+                match rq.phase {
+                    Phase::Prefill => {
+                        let out = rq.req.output_tokens;
+                        if out == 0 {
+                            let _ = rq;
+                            self.finish_request(r, t);
+                            return;
+                        }
+                        rq.phase = Phase::Decode;
+                        rq.decode_passes_left = out.div_ceil(chunk) - 1;
+                        rq.pass_tokens = chunk.min(out) as f64;
+                        rq.layer = 0;
+                    }
+                    Phase::Decode => {
+                        if rq.decode_passes_left > 0 {
+                            rq.decode_passes_left -= 1;
+                            rq.layer = 0;
+                        } else {
+                            let _ = rq;
+                            self.finish_request(r, t);
+                            return;
+                        }
+                    }
+                    Phase::Done => {
+                        unreachable!("advance on finished request")
+                    }
+                }
+            }
+        }
+        self.start_layer_pass(r, t);
+    }
+
+    fn finish_request(&mut self, r: usize, t: f64) {
+        self.active[self.reqs[r].exec_server] -= 1;
+        let rq = &mut self.reqs[r];
+        rq.phase = Phase::Done;
+        self.done_count += 1;
+        let rec = RequestRecord {
+            id: rq.req.id,
+            server: rq.req.server,
+            arrival_s: rq.req.arrival_s,
+            done_s: t,
+            latency_s: t - rq.req.arrival_s,
+            local_token_invocations: rq.local_tok,
+            remote_token_invocations: rq.remote_tok,
+        };
+        self.report.push(rec);
+    }
+}
+
+/// High-level bundle: model + cluster + workload + warm statistics, with a
+/// one-call serve API (the crate-level quickstart).
+pub struct World {
+    pub model: ModelConfig,
+    pub cluster: ClusterConfig,
+    pub workload: WorkloadConfig,
+    pub seed: u64,
+    warm_stats: ActivationStats,
+}
+
+impl World {
+    /// Build a world and pre-warm activation statistics from the workload's
+    /// task profiles (the paper's "estimated from historical data"
+    /// initialization).
+    pub fn build(
+        model: &ModelConfig,
+        cluster: &ClusterConfig,
+        workload: &WorkloadConfig,
+        seed: u64,
+    ) -> World {
+        World {
+            warm_stats: warm_stats(model, workload),
+            model: model.clone(),
+            cluster: cluster.clone(),
+            workload: workload.clone(),
+            seed,
+        }
+    }
+
+    /// Warm per-server activation statistics (for placement).
+    pub fn stats(&self) -> &ActivationStats {
+        &self.warm_stats
+    }
+
+    /// DanceMoE placement from the warm statistics.
+    pub fn place(&self) -> Placement {
+        dancemoe_place(&self.model, &self.cluster, &self.warm_stats)
+    }
+
+    /// Serve `n` requests per server under `placement`, collaborative mode.
+    pub fn serve(
+        &mut self,
+        placement: &Placement,
+        n_per_server: usize,
+    ) -> ServeReport {
+        let trace = TraceGenerator::new(&self.model, &self.workload, self.seed)
+            .gen_count(n_per_server);
+        self.serve_trace(placement, &trace)
+    }
+
+    /// Serve an explicit trace.
+    pub fn serve_trace(
+        &mut self,
+        placement: &Placement,
+        trace: &Trace,
+    ) -> ServeReport {
+        let cfg = EngineConfig {
+            seed: self.seed,
+            ..EngineConfig::default()
+        };
+        let mut eng = Engine::new(
+            &self.model,
+            &self.cluster,
+            placement.clone(),
+            cfg,
+            CostModel::default(),
+        );
+        eng.push_trace(trace);
+        eng.run();
+        std::mem::replace(
+            &mut eng.report,
+            ServeReport::new(self.cluster.num_servers(), 60.0),
+        )
+    }
+}
+
+/// Build warm (expected) activation statistics for a workload: each server's
+/// table is its task's profile scaled by expected token volume.
+pub fn warm_stats(
+    model: &ModelConfig,
+    workload: &WorkloadConfig,
+) -> ActivationStats {
+    let mut stats = ActivationStats::new(model, workload.streams.len());
+    for (n, s) in workload.streams.iter().enumerate() {
+        let prof = TaskProfile::build(s.task, model);
+        let tokens = (s.mean_prompt_tokens + s.output_tokens) as f64
+            * model.top_k as f64;
+        for l in 0..model.num_layers {
+            for e in 0..model.num_experts {
+                stats.record(n, l, e, prof.dist[l][e] * tokens);
+            }
+        }
+    }
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClusterConfig, ModelConfig, WorkloadConfig};
+    use crate::placement::{uniform, PlacementAlgo};
+
+    fn small_world() -> (ModelConfig, ClusterConfig, WorkloadConfig) {
+        let mut m = ModelConfig::mixtral_8x7b_sim();
+        m.num_layers = 4; // keep unit tests fast
+        let c = ClusterConfig::edge_testbed_3_for(&m);
+        let w = WorkloadConfig::bigbench(10.0);
+        (m, c, w)
+    }
+
+    fn run_mode(mode: Mode, n: usize) -> ServeReport {
+        let (m, c, w) = small_world();
+        let placement = uniform::place(&m, &c);
+        let mut eng = Engine::new(
+            &m,
+            &c,
+            placement,
+            EngineConfig {
+                mode,
+                seed: 3,
+                ..EngineConfig::default()
+            },
+            CostModel::default(),
+        );
+        let trace = TraceGenerator::new(&m, &w, 3).gen_count(n);
+        eng.push_trace(&trace);
+        eng.run();
+        std::mem::replace(&mut eng.report, ServeReport::new(3, 60.0))
+    }
+
+    #[test]
+    fn all_requests_complete_with_positive_latency() {
+        let rep = run_mode(Mode::Collaborative, 10);
+        assert_eq!(rep.records.len(), 30);
+        assert!(rep.records.iter().all(|r| r.latency_s > 0.0));
+        assert!(rep.records.iter().all(|r| r.done_s >= r.arrival_s));
+    }
+
+    #[test]
+    fn deterministic_runs() {
+        let a = run_mode(Mode::Collaborative, 8);
+        let b = run_mode(Mode::Collaborative, 8);
+        assert_eq!(a.records.len(), b.records.len());
+        for (x, y) in a.records.iter().zip(&b.records) {
+            assert_eq!(x.latency_s, y.latency_s);
+        }
+    }
+
+    #[test]
+    fn uniform_placement_has_remote_traffic() {
+        let rep = run_mode(Mode::Collaborative, 10);
+        assert!(rep.local_ratio() < 0.99, "uniform must go remote");
+        assert!(rep.net_bytes > 0.0);
+    }
+
+    #[test]
+    fn offload_mode_never_remote() {
+        let rep = run_mode(Mode::Offload { lb: false }, 10);
+        assert_eq!(rep.local_ratio(), 1.0);
+        assert_eq!(rep.net_bytes, 0.0);
+    }
+
+    #[test]
+    fn dancemoe_beats_uniform_on_local_ratio() {
+        let (m, c, w) = small_world();
+        let stats = warm_stats(&m, &w);
+        let trace = TraceGenerator::new(&m, &w, 11).gen_count(30);
+
+        let mut ratios = Vec::new();
+        for placement in [
+            PlacementAlgo::Uniform.compute(&m, &c, &stats, 1),
+            PlacementAlgo::DanceMoE.compute(&m, &c, &stats, 1),
+        ] {
+            let mut eng = Engine::new(
+                &m,
+                &c,
+                placement,
+                EngineConfig {
+                    seed: 11,
+                    ..EngineConfig::default()
+                },
+                CostModel::default(),
+            );
+            eng.push_trace(&trace);
+            eng.run();
+            ratios.push(eng.report.local_ratio());
+        }
+        assert!(
+            ratios[1] > ratios[0] + 0.1,
+            "dancemoe {:.3} vs uniform {:.3}",
+            ratios[1],
+            ratios[0]
+        );
+    }
+
+    #[test]
+    fn stats_recorded_at_home_server() {
+        let (m, c, w) = small_world();
+        let placement = uniform::place(&m, &c);
+        let mut eng = Engine::new(
+            &m,
+            &c,
+            placement,
+            EngineConfig {
+                seed: 5,
+                ..EngineConfig::default()
+            },
+            CostModel::default(),
+        );
+        let trace = TraceGenerator::new(&m, &w, 5).gen_count(5);
+        eng.push_trace(&trace);
+        eng.run();
+        for n in 0..3 {
+            assert!(eng.stats.servers[n].total > 0.0, "server {n} empty");
+        }
+        // total tokens routed = Σ passes tokens × top_k × layers
+        let expected: f64 = trace
+            .requests
+            .iter()
+            .map(|r| {
+                ((r.prompt_tokens + r.output_tokens) * m.top_k * m.num_layers)
+                    as f64
+            })
+            .sum();
+        let got = eng.stats.total();
+        assert!(
+            (got - expected).abs() / expected < 0.02,
+            "got {got}, expected {expected}"
+        );
+    }
+
+    #[test]
+    fn decode_chunking_reduces_events_keeps_totals() {
+        let (m, c, w) = small_world();
+        let placement = uniform::place(&m, &c);
+        let mk = |chunk: usize| {
+            let mut eng = Engine::new(
+                &m,
+                &c,
+                placement.clone(),
+                EngineConfig {
+                    seed: 7,
+                    decode_chunk: chunk,
+                    ..EngineConfig::default()
+                },
+                CostModel::default(),
+            );
+            let trace = TraceGenerator::new(&m, &w, 7).gen_count(5);
+            eng.push_trace(&trace);
+            eng.run();
+            (eng.events_processed(), eng.report.records.len())
+        };
+        let (ev1, n1) = mk(1);
+        let (ev8, n8) = mk(8);
+        assert_eq!(n1, n8);
+        assert!(ev8 < ev1, "chunking must reduce events: {ev8} vs {ev1}");
+    }
+
+    #[test]
+    fn migration_blocks_gpus_and_applies() {
+        let (m, c, w) = small_world();
+        let stats = warm_stats(&m, &w);
+        let old = uniform::place(&m, &c);
+        let new = PlacementAlgo::DanceMoE.compute(&m, &c, &stats, 1);
+        let mut eng = Engine::new(
+            &m,
+            &c,
+            old.clone(),
+            EngineConfig::default(),
+            CostModel::default(),
+        );
+        let apply_at = eng.schedule_migration(new.clone());
+        assert!(apply_at > 0.0);
+        assert_eq!(eng.report.migrations.len(), 1);
+        assert_eq!(eng.placement, old); // not applied yet
+        eng.run_until(apply_at + 1.0);
+        assert_eq!(eng.placement, new);
+    }
+
+    #[test]
+    fn world_quickstart_api() {
+        let (m, c, w) = small_world();
+        let mut world = World::build(&m, &c, &w, 42);
+        let placement = world.place();
+        placement.validate().unwrap();
+        let report = world.serve(&placement, 5);
+        assert_eq!(report.records.len(), 15);
+        assert!(report.avg_latency() > 0.0);
+        assert_eq!(report.latency_row().len(), 4);
+    }
+
+    #[test]
+    fn run_until_segments_cleanly() {
+        let (m, c, w) = small_world();
+        let placement = uniform::place(&m, &c);
+        let mut eng = Engine::new(
+            &m,
+            &c,
+            placement,
+            EngineConfig {
+                seed: 9,
+                ..EngineConfig::default()
+            },
+            CostModel::default(),
+        );
+        let trace = TraceGenerator::new(&m, &w, 9).gen_count(10);
+        eng.push_trace(&trace);
+        let mut t = 0.0;
+        while let Some(next) = eng.run_until(t) {
+            assert!(next > t);
+            t = next + 30.0;
+        }
+        eng.finalize();
+        assert_eq!(eng.report.records.len(), 30);
+    }
+
+    #[test]
+    fn offload_lb_redirects_under_imbalance() {
+        // Server 0 gets a flood; with lb the flood spreads and total avg
+        // latency improves (Table I's MoE-Infinity vs w/ LB relation).
+        let (m, c, _) = small_world();
+        let mut w = WorkloadConfig::bigbench(10.0);
+        w.streams[0].mean_interarrival_s = 1.0; // hot server
+        w.streams[1].mean_interarrival_s = 30.0;
+        w.streams[2].mean_interarrival_s = 30.0;
+        let trace = TraceGenerator::new(&m, &w, 13).gen_count(20);
+        let run = |lb: bool| {
+            let mut eng = Engine::new(
+                &m,
+                &c,
+                uniform::place(&m, &c),
+                EngineConfig {
+                    mode: Mode::Offload { lb },
+                    seed: 13,
+                    ..EngineConfig::default()
+                },
+                CostModel::default(),
+            );
+            eng.push_trace(&trace);
+            eng.run();
+            eng.report.avg_latency()
+        };
+        let plain = run(false);
+        let lb = run(true);
+        assert!(
+            lb <= plain,
+            "LB should not hurt under imbalance: {lb:.2} vs {plain:.2}"
+        );
+    }
+}

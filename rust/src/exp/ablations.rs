@@ -1,0 +1,256 @@
+//! Ablations of DanceMoE's design choices (DESIGN.md §5 calls these out):
+//!
+//! - **A1 — entropy-proportional counts** (Algorithm 1) vs uniform
+//!   per-layer counts, with Algorithm 2 held fixed;
+//! - **A2 — greedy frequency assignment** (Algorithm 2) vs random expert
+//!   selection under the same counts;
+//! - **A3 — migration interval** sweep under a workload shift;
+//! - **A4 — history decay** sweep (how fast the scheduler forgets).
+
+use crate::config::{ClusterConfig, ModelConfig, WorkloadConfig};
+use crate::coordinator::CoordinatorConfig;
+use crate::engine::{warm_stats, CostModel, EngineConfig};
+use crate::exp::runner::RunSpec;
+use crate::moe::ActivationStats;
+use crate::placement::entropy_alloc::ExpertCounts;
+use crate::placement::{assign, entropy_alloc, objective, Placement, PlacementAlgo};
+use crate::trace::TraceGenerator;
+use crate::util::rng::Rng;
+use crate::util::table::Table;
+
+/// Uniform per-layer counts: each server spreads its capacity evenly over
+/// layers (the counts Algorithm 1 would produce with constant entropy).
+fn uniform_counts(model: &ModelConfig, cluster: &ClusterConfig) -> ExpertCounts {
+    let flat = ActivationStats::new(model, cluster.num_servers());
+    entropy_alloc::expert_counts(model, cluster, &flat)
+}
+
+/// Random expert selection under given counts (+ coverage repair).
+fn random_assign(
+    model: &ModelConfig,
+    cluster: &ClusterConfig,
+    stats: &ActivationStats,
+    counts: &ExpertCounts,
+    seed: u64,
+) -> Placement {
+    let mut rng = Rng::new(seed ^ 0xab1a7e);
+    let mut sets = vec![vec![Vec::new(); model.num_layers]; cluster.num_servers()];
+    for (n, row) in counts.iter().enumerate() {
+        for (l, &c) in row.iter().enumerate() {
+            let mut experts: Vec<usize> = (0..model.num_experts).collect();
+            rng.shuffle(&mut experts);
+            sets[n][l] = experts.into_iter().take(c).collect();
+        }
+    }
+    let mut p = assign::pack_gpus(model, cluster, stats, &sets);
+    assign::repair_coverage(&mut p, stats);
+    p
+}
+
+#[derive(Debug, Clone)]
+pub struct AblationRow {
+    pub name: String,
+    pub remote_mass: f64,
+    pub expected_local_ratio: f64,
+    pub avg_latency_s: f64,
+}
+
+pub struct Ablations {
+    pub placement_rows: Vec<AblationRow>,
+    /// (interval_s, avg latency, migrations)
+    pub interval_rows: Vec<(f64, f64, usize)>,
+    /// (decay, avg latency, local ratio)
+    pub decay_rows: Vec<(f64, f64, f64)>,
+}
+
+pub fn run(n_per_server: usize, seed: u64) -> Ablations {
+    let model = ModelConfig::deepseek_v2_lite_sim();
+    let cluster = ClusterConfig::edge_testbed_3_for(&model);
+    let workload = WorkloadConfig::bigbench(10.0);
+    let stats = warm_stats(&model, &workload);
+    let spec = RunSpec::new(model.clone(), cluster.clone(), workload.clone(), seed);
+    let trace = spec.trace_count(n_per_server);
+
+    // ---- A1 / A2: placement-stage ablations ---------------------------
+    let entropy_counts = entropy_alloc::expert_counts(&model, &cluster, &stats);
+    let uni_counts = uniform_counts(&model, &cluster);
+    let candidates: Vec<(String, Placement)> = vec![
+        (
+            "full DanceMoE (A1+A2)".into(),
+            assign::assign(&model, &cluster, &stats, &entropy_counts),
+        ),
+        (
+            "uniform counts + greedy (no A1)".into(),
+            assign::assign(&model, &cluster, &stats, &uni_counts),
+        ),
+        (
+            "entropy counts + random (no A2)".into(),
+            random_assign(&model, &cluster, &stats, &entropy_counts, seed),
+        ),
+        (
+            "uniform counts + random (neither)".into(),
+            random_assign(&model, &cluster, &stats, &uni_counts, seed),
+        ),
+    ];
+    let placement_rows = candidates
+        .into_iter()
+        .map(|(name, p)| {
+            let report = spec.serve_static(p.clone(), &trace);
+            AblationRow {
+                name,
+                remote_mass: objective::remote_mass(&p, &stats),
+                expected_local_ratio: objective::expected_local_ratio(&p, &stats),
+                avg_latency_s: report.avg_latency(),
+            }
+        })
+        .collect();
+
+    // ---- A3: migration interval sweep under a shift ---------------------
+    let shift_trace = {
+        let t1 = TraceGenerator::new(&model, &WorkloadConfig::multidata(15.0), seed)
+            .gen_count(n_per_server);
+        let t2 = TraceGenerator::new(&model, &workload, seed ^ 1)
+            .gen_count(n_per_server);
+        t1.then(t2)
+    };
+    let initial = spec.place_warmed_on(
+        PlacementAlgo::DanceMoE,
+        &WorkloadConfig::multidata(15.0),
+    );
+    let mut interval_rows = Vec::new();
+    for interval_s in [60.0, 300.0, 900.0] {
+        let mut coord = crate::coordinator::Coordinator::new(
+            &model,
+            &cluster,
+            CoordinatorConfig {
+                interval_s,
+                seed,
+                ..CoordinatorConfig::default()
+            },
+        );
+        let report = coord.run(
+            EngineConfig {
+                seed,
+                ..EngineConfig::default()
+            },
+            CostModel::default(),
+            initial.clone(),
+            &shift_trace,
+        );
+        interval_rows.push((
+            interval_s,
+            report.avg_latency(),
+            report.migrations.len(),
+        ));
+    }
+
+    // ---- A4: decay sweep -------------------------------------------------
+    let mut decay_rows = Vec::new();
+    for decay in [0.1, 0.5, 0.9] {
+        let mut coord = crate::coordinator::Coordinator::new(
+            &model,
+            &cluster,
+            CoordinatorConfig {
+                interval_s: 300.0,
+                decay,
+                seed,
+                ..CoordinatorConfig::default()
+            },
+        );
+        let report = coord.run(
+            EngineConfig {
+                seed,
+                ..EngineConfig::default()
+            },
+            CostModel::default(),
+            initial.clone(),
+            &shift_trace,
+        );
+        decay_rows.push((decay, report.avg_latency(), report.local_ratio()));
+    }
+
+    Ablations {
+        placement_rows,
+        interval_rows,
+        decay_rows,
+    }
+}
+
+impl Ablations {
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let mut t = Table::new(
+            "Ablation A1/A2: placement stages (DeepSeek sim, BigBench)",
+            &["Variant", "remote mass", "exp. local", "avg latency (s)"],
+        );
+        for r in &self.placement_rows {
+            t.row_f64(
+                &r.name,
+                &[r.remote_mass, r.expected_local_ratio, r.avg_latency_s],
+                3,
+            );
+        }
+        out.push_str(&t.render());
+        out.push('\n');
+
+        let mut t = Table::new(
+            "Ablation A3: migration interval (workload shift)",
+            &["interval (s)", "avg latency (s)", "migrations"],
+        );
+        for &(i, lat, m) in &self.interval_rows {
+            t.row(vec![
+                format!("{i:.0}"),
+                format!("{lat:.2}"),
+                format!("{m}"),
+            ]);
+        }
+        out.push_str(&t.render());
+        out.push('\n');
+
+        let mut t = Table::new(
+            "Ablation A4: statistics decay (workload shift)",
+            &["decay", "avg latency (s)", "local ratio"],
+        );
+        for &(d, lat, r) in &self.decay_rows {
+            t.row(vec![
+                format!("{d:.1}"),
+                format!("{lat:.2}"),
+                format!("{r:.3}"),
+            ]);
+        }
+        out.push_str(&t.render());
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_pipeline_beats_double_ablation() {
+        let a = run(20, 5);
+        assert_eq!(a.placement_rows.len(), 4);
+        let full = &a.placement_rows[0];
+        let neither = &a.placement_rows[3];
+        assert!(
+            full.remote_mass < neither.remote_mass,
+            "full {:.1} vs neither {:.1}",
+            full.remote_mass,
+            neither.remote_mass
+        );
+        assert!(full.expected_local_ratio > neither.expected_local_ratio);
+        // greedy selection (A2) is the dominant term: removing it must hurt
+        let no_a2 = &a.placement_rows[2];
+        assert!(full.remote_mass < no_a2.remote_mass);
+    }
+
+    #[test]
+    fn interval_and_decay_rows_complete() {
+        let a = run(10, 6);
+        assert_eq!(a.interval_rows.len(), 3);
+        assert_eq!(a.decay_rows.len(), 3);
+        assert!(a.interval_rows.iter().all(|r| r.1.is_finite() && r.1 > 0.0));
+        assert!(a.decay_rows.iter().all(|r| r.1.is_finite() && r.1 > 0.0));
+    }
+}

@@ -1,0 +1,237 @@
+//! **Fig. 6** (§IV-B): evolution of the local-compute ratio over runtime
+//! for the five methods × {DeepSeek, Mixtral} × {BigBench, MultiData}.
+//!
+//! As in the paper: Uniform and Redundance are static; SmartMoE, EPLB and
+//! DanceMoE run under the migration mechanism (differing only in placement
+//! algorithm). Initial placements are computed on a *mixed* profile (the
+//! task mix is unknown before serving starts), so the adaptive methods
+//! visibly improve after the first migration window.
+
+use crate::config::{ClusterConfig, ModelConfig, WorkloadConfig};
+use crate::exp::runner::RunSpec;
+use crate::placement::PlacementAlgo;
+use crate::util::table::Table;
+use crate::util::threadpool::parallel_map;
+
+#[derive(Debug, Clone)]
+pub struct Fig6Series {
+    pub model: String,
+    pub dataset: String,
+    pub method: &'static str,
+    /// local ratio per minute bucket
+    pub series: Vec<f64>,
+    pub migrations: Vec<f64>, // times of adopted migrations
+}
+
+pub struct Fig6 {
+    pub series: Vec<Fig6Series>,
+    pub horizon_s: f64,
+}
+
+/// A "mixed" warm-up workload: every server sees the average task mix, so
+/// initial placements cannot exploit per-server specialization.
+fn mixed_workload(base: &WorkloadConfig) -> WorkloadConfig {
+    let mut w = base.clone();
+    let tasks: Vec<_> = base.streams.iter().map(|s| s.task).collect();
+    for (i, s) in w.streams.iter_mut().enumerate() {
+        // rotate tasks so each server is warmed on the WRONG stream
+        s.task = tasks[(i + 1) % tasks.len()];
+    }
+    w
+}
+
+fn one(
+    model: ModelConfig,
+    dataset: &'static str,
+    workload: WorkloadConfig,
+    method: PlacementAlgo,
+    horizon_s: f64,
+    interval_s: f64,
+    seed: u64,
+) -> Fig6Series {
+    one_on(
+        ClusterConfig::edge_testbed_3_for(&model),
+        model,
+        dataset,
+        workload,
+        method,
+        horizon_s,
+        interval_s,
+        seed,
+    )
+}
+
+#[allow(clippy::too_many_arguments)]
+fn one_on(
+    cluster: ClusterConfig,
+    model: ModelConfig,
+    dataset: &'static str,
+    workload: WorkloadConfig,
+    method: PlacementAlgo,
+    horizon_s: f64,
+    interval_s: f64,
+    seed: u64,
+) -> Fig6Series {
+    let spec = RunSpec::new(model.clone(), cluster, workload.clone(), seed);
+    let trace = spec.trace_until(horizon_s);
+    let initial = spec.place_warmed_on(method, &mixed_workload(&workload));
+    let (report, _coord) = match method {
+        PlacementAlgo::Uniform | PlacementAlgo::Redundance => {
+            (spec.serve_static(initial, &trace), None)
+        }
+        _ => {
+            let (r, c) =
+                spec.serve_coordinated(method, initial, &trace, interval_s);
+            (r, Some(c))
+        }
+    };
+    Fig6Series {
+        model: model.name.clone(),
+        dataset: dataset.to_string(),
+        method: method.name(),
+        migrations: report.migrations.iter().map(|m| m.0).collect(),
+        series: report.local_ratio_series(),
+    }
+}
+
+pub fn run(horizon_s: f64, seed: u64) -> Fig6 {
+    let mut jobs = Vec::new();
+    for model in [
+        ModelConfig::deepseek_v2_lite_sim(),
+        ModelConfig::mixtral_8x7b_sim(),
+    ] {
+        for (dataset, workload) in [
+            ("BigBench", WorkloadConfig::bigbench(10.0)),
+            ("MultiData", WorkloadConfig::multidata(20.0)),
+        ] {
+            for method in PlacementAlgo::all() {
+                jobs.push((model.clone(), dataset, workload.clone(), method));
+            }
+        }
+    }
+    let series = parallel_map(
+        jobs,
+        crate::util::threadpool::ThreadPool::default_threads(),
+        move |(m, d, w, method)| one(m, d, w, method, horizon_s, 300.0, seed),
+    );
+    Fig6 { series, horizon_s }
+}
+
+impl Fig6 {
+    pub fn get(&self, model_prefix: &str, dataset: &str, method: &str) -> Option<&Fig6Series> {
+        self.series.iter().find(|s| {
+            s.model.starts_with(model_prefix)
+                && s.dataset == dataset
+                && s.method == method
+        })
+    }
+
+    /// Mean local ratio over the last third of the run (post-adaptation).
+    pub fn steady_state(&self, s: &Fig6Series) -> f64 {
+        let n = s.series.len();
+        if n == 0 {
+            return 0.0;
+        }
+        let tail = &s.series[n - n / 3..];
+        crate::util::stats::mean(tail)
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for model in ["deepseek", "mixtral"] {
+            for dataset in ["BigBench", "MultiData"] {
+                let title = format!(
+                    "Fig 6 ({model} / {dataset}): local compute ratio per minute"
+                );
+                let mut t = Table::new(
+                    &title,
+                    &["Method", "min 1", "min 10", "min 30", "last", "steady"],
+                );
+                for algo in PlacementAlgo::all() {
+                    if let Some(s) = self.get(model, dataset, algo.name()) {
+                        let pick = |i: usize| {
+                            s.series
+                                .get(i)
+                                .copied()
+                                .unwrap_or(f64::NAN)
+                        };
+                        let last =
+                            s.series.last().copied().unwrap_or(f64::NAN);
+                        t.row_f64(
+                            algo.name(),
+                            &[
+                                pick(0),
+                                pick(9),
+                                pick(29),
+                                last,
+                                self.steady_state(s),
+                            ],
+                            3,
+                        );
+                    }
+                }
+                out.push_str(&t.render());
+                out.push('\n');
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dancemoe_adapts_above_uniform() {
+        // Single small config (the bench runs the full grid). Memory is
+        // scaled down with the layer count so the 8-layer model cannot be
+        // fully replicated everywhere (which would make placement moot).
+        let m = {
+            let mut m = ModelConfig::mixtral_8x7b_sim();
+            m.num_layers = 8;
+            m
+        };
+        let mut cluster = ClusterConfig::edge_testbed_3_for(&m);
+        for s in &mut cluster.servers {
+            for g in &mut s.gpus {
+                g.mem_bytes /= 4; // ≈ 19 slots/GPU vs 64 experts
+            }
+        }
+        let w = WorkloadConfig::bigbench(5.0);
+        let ours = one_on(
+            cluster.clone(),
+            m.clone(),
+            "BigBench",
+            w.clone(),
+            PlacementAlgo::DanceMoE,
+            900.0,
+            120.0,
+            5,
+        );
+        let uni = one_on(
+            cluster,
+            m,
+            "BigBench",
+            w,
+            PlacementAlgo::Uniform,
+            900.0,
+            120.0,
+            5,
+        );
+        let f = Fig6 {
+            series: vec![ours.clone(), uni.clone()],
+            horizon_s: 900.0,
+        };
+        let ss_ours = f.steady_state(&ours);
+        let ss_uni = f.steady_state(&uni);
+        assert!(
+            ss_ours > ss_uni + 0.1,
+            "ours {ss_ours:.3} vs uniform {ss_uni:.3}"
+        );
+        // the adaptive method must migrate at least once away from the
+        // wrong warm-up placement; the static one never does
+        assert!(!ours.migrations.is_empty());
+        assert!(uni.migrations.is_empty());
+    }
+}

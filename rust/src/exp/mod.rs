@@ -1,0 +1,13 @@
+//! Experiment harnesses: one per table/figure of the paper's evaluation.
+//! See DESIGN.md §5 for the index. Each harness returns structured results
+//! AND renders the paper-shaped rows/series via [`crate::util::table`].
+
+pub mod ablations;
+pub mod fig2_3;
+pub mod runner;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod table1;
+pub mod table2;

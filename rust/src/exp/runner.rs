@@ -1,0 +1,136 @@
+//! Shared experiment plumbing: build → place → (coordinate) → serve → report.
+
+use crate::config::{ClusterConfig, ModelConfig, WorkloadConfig};
+use crate::coordinator::{Coordinator, CoordinatorConfig};
+use crate::engine::{
+    warm_stats, CostModel, Engine, EngineConfig, Mode, ServeReport,
+};
+use crate::placement::{Placement, PlacementAlgo};
+use crate::trace::{Trace, TraceGenerator};
+
+/// One experiment run's specification.
+#[derive(Debug, Clone)]
+pub struct RunSpec {
+    pub model: ModelConfig,
+    pub cluster: ClusterConfig,
+    pub workload: WorkloadConfig,
+    pub seed: u64,
+    pub engine: EngineConfig,
+    pub cost: CostModel,
+}
+
+impl RunSpec {
+    pub fn new(
+        model: ModelConfig,
+        cluster: ClusterConfig,
+        workload: WorkloadConfig,
+        seed: u64,
+    ) -> RunSpec {
+        RunSpec {
+            engine: EngineConfig {
+                seed,
+                ..EngineConfig::default()
+            },
+            cost: CostModel::default(),
+            model,
+            cluster,
+            workload,
+            seed,
+        }
+    }
+
+    pub fn trace_count(&self, n_per_server: usize) -> Trace {
+        TraceGenerator::new(&self.model, &self.workload, self.seed)
+            .gen_count(n_per_server)
+    }
+
+    pub fn trace_until(&self, horizon_s: f64) -> Trace {
+        TraceGenerator::new(&self.model, &self.workload, self.seed)
+            .gen_until(horizon_s)
+    }
+
+    /// Initial placement for an algorithm, warmed on this workload's
+    /// expected statistics.
+    pub fn place(&self, algo: PlacementAlgo) -> Placement {
+        let stats = warm_stats(&self.model, &self.workload);
+        algo.compute(&self.model, &self.cluster, &stats, self.seed)
+    }
+
+    /// Initial placement warmed on a *different* workload (Fig. 6/7: the
+    /// initial layout was computed before the actual task mix was known).
+    pub fn place_warmed_on(
+        &self,
+        algo: PlacementAlgo,
+        warm_workload: &WorkloadConfig,
+    ) -> Placement {
+        let stats = warm_stats(&self.model, warm_workload);
+        algo.compute(&self.model, &self.cluster, &stats, self.seed)
+    }
+
+    /// Plain engine run (no coordinator / static placement).
+    pub fn serve_static(&self, placement: Placement, trace: &Trace) -> ServeReport {
+        let mut eng = Engine::new(
+            &self.model,
+            &self.cluster,
+            placement,
+            self.engine.clone(),
+            self.cost.clone(),
+        );
+        eng.push_trace(trace);
+        eng.run();
+        std::mem::replace(
+            &mut eng.report,
+            ServeReport::new(self.cluster.num_servers(), 60.0),
+        )
+    }
+
+    /// Offload run (MoE-Infinity baseline; placement irrelevant but the
+    /// engine needs one for expert-id bookkeeping).
+    pub fn serve_offload(&self, lb: bool, trace: &Trace) -> ServeReport {
+        let mut cfg = self.engine.clone();
+        cfg.mode = Mode::Offload { lb };
+        let placement =
+            crate::placement::uniform::place(&self.model, &self.cluster);
+        let mut eng = Engine::new(
+            &self.model,
+            &self.cluster,
+            placement,
+            cfg,
+            self.cost.clone(),
+        );
+        eng.push_trace(trace);
+        eng.run();
+        std::mem::replace(
+            &mut eng.report,
+            ServeReport::new(self.cluster.num_servers(), 60.0),
+        )
+    }
+
+    /// Coordinated run: periodic re-placement with `algo` + Eq.-4 migration.
+    pub fn serve_coordinated(
+        &self,
+        algo: PlacementAlgo,
+        initial: Placement,
+        trace: &Trace,
+        interval_s: f64,
+    ) -> (ServeReport, Coordinator) {
+        let mut coord = Coordinator::new(
+            &self.model,
+            &self.cluster,
+            CoordinatorConfig {
+                interval_s,
+                algo,
+                migrate: true,
+                seed: self.seed,
+                ..CoordinatorConfig::default()
+            },
+        );
+        let report = coord.run(
+            self.engine.clone(),
+            self.cost.clone(),
+            initial,
+            trace,
+        );
+        (report, coord)
+    }
+}

@@ -1,0 +1,110 @@
+//! **Table I** (§II-B motivation): average inference latency of
+//! MoE-Infinity, MoE-Infinity w/ LB, and Naive Collaboration on the
+//! Mixtral sim across three task-specialized edge servers.
+//!
+//! Expected shape: per-server imbalance under offloading (server 1 worst),
+//! mild improvement from request redirection, and a clearly lower total
+//! average under naive collaborative placement.
+
+use crate::config::{ClusterConfig, ModelConfig, WorkloadConfig};
+use crate::exp::runner::RunSpec;
+use crate::placement::redundance;
+use crate::util::table::Table;
+
+#[derive(Debug, Clone)]
+pub struct Table1Row {
+    pub method: String,
+    pub values: Vec<f64>, // [s1, s2, s3, total avg]
+}
+
+pub struct Table1 {
+    pub rows: Vec<Table1Row>,
+}
+
+pub fn run(n_per_server: usize, seed: u64) -> Table1 {
+    let model = ModelConfig::mixtral_8x7b_sim();
+    let cluster = ClusterConfig::edge_testbed_3_for(&model);
+    // The motivation experiment stresses imbalance: server 1's stream is
+    // denser than the others (the heterogeneous request volumes of §II-B,
+    // à la Mooncake's ToolAgent-vs-conversation skew). BIG-bench outputs
+    // are constrained to answer length (§IV-A) — a few tokens.
+    let mut workload = WorkloadConfig::bigbench(10.0);
+    workload.streams[0].mean_interarrival_s = 6.0;
+    workload.streams[1].mean_interarrival_s = 10.0;
+    workload.streams[2].mean_interarrival_s = 14.0;
+    for s in &mut workload.streams {
+        s.output_tokens = 4;
+    }
+
+    let spec = RunSpec::new(model.clone(), cluster.clone(), workload, seed);
+    let trace = spec.trace_count(n_per_server);
+
+    let mut rows = Vec::new();
+    let rep = spec.serve_offload(false, &trace);
+    rows.push(Table1Row {
+        method: "MoE-Infinity".into(),
+        values: rep.latency_row(),
+    });
+    let rep = spec.serve_offload(true, &trace);
+    rows.push(Table1Row {
+        method: "MoE-Infinity (w/ LB)".into(),
+        values: rep.latency_row(),
+    });
+    let placement = redundance::place(&model, &cluster, seed);
+    let rep = spec.serve_static(placement, &trace);
+    rows.push(Table1Row {
+        method: "Naive Collaboration".into(),
+        values: rep.latency_row(),
+    });
+    Table1 { rows }
+}
+
+impl Table1 {
+    pub fn render(&self) -> String {
+        let mut t = Table::new(
+            "Table I: Average inference latency (s) across methods \
+             (Mixtral sim, 3 task-specialized servers)",
+            &["Method", "Server 1", "Server 2", "Server 3", "Total Avg"],
+        );
+        for r in &self.rows {
+            t.row_f64(&r.method, &r.values, 2);
+        }
+        t.render()
+    }
+
+    pub fn total_avg(&self, method: &str) -> f64 {
+        self.rows
+            .iter()
+            .find(|r| r.method.starts_with(method))
+            .map(|r| *r.values.last().unwrap())
+            .unwrap_or(f64::NAN)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_shape_matches_paper() {
+        let t = run(40, 7);
+        assert_eq!(t.rows.len(), 3);
+        for r in &t.rows {
+            assert_eq!(r.values.len(), 4);
+            assert!(r.values.iter().all(|&v| v > 0.0), "{r:?}");
+        }
+        let offload = t.total_avg("MoE-Infinity");
+        let lb = t.total_avg("MoE-Infinity (w/ LB)");
+        let collab = t.total_avg("Naive Collaboration");
+        // Paper: 5.19 / 5.03 / 4.11 — collaboration clearly best, LB a mild
+        // improvement over plain offloading.
+        assert!(
+            collab < offload,
+            "collaboration {collab:.2} must beat offloading {offload:.2}"
+        );
+        assert!(
+            lb <= offload * 1.05,
+            "LB {lb:.2} should not be much worse than plain {offload:.2}"
+        );
+    }
+}

@@ -1,0 +1,178 @@
+//! **Table II** (§IV-B): serve latency of the five placement methods on
+//! both models × both datasets, per server and total average.
+//!
+//! Expected shape (paper): DanceMoE lowest total average everywhere; EPLB
+//! second; the gap largest for DeepSeek-V2-Lite on BigBench (-30.6 % vs
+//! EPLB), small-but-consistent for Mixtral.
+
+use crate::config::{ClusterConfig, ModelConfig, WorkloadConfig};
+use crate::exp::runner::RunSpec;
+use crate::placement::PlacementAlgo;
+use crate::util::table::Table;
+use crate::util::threadpool::parallel_map;
+
+#[derive(Debug, Clone)]
+pub struct Table2Cell {
+    pub model: String,
+    pub dataset: String,
+    pub method: &'static str,
+    /// [s1, s2, s3, total avg]
+    pub values: Vec<f64>,
+}
+
+pub struct Table2 {
+    pub cells: Vec<Table2Cell>,
+}
+
+/// The paper's migration interval for the coordinated methods.
+const INTERVAL_S: f64 = 300.0;
+
+fn one_config(
+    model: ModelConfig,
+    dataset: &str,
+    workload: WorkloadConfig,
+    n_per_server: usize,
+    seed: u64,
+) -> Vec<Table2Cell> {
+    let cluster = ClusterConfig::edge_testbed_3_for(&model);
+    let spec = RunSpec::new(model.clone(), cluster, workload, seed);
+    let trace = spec.trace_count(n_per_server);
+    PlacementAlgo::all()
+        .into_iter()
+        .map(|algo| {
+            let initial = spec.place(algo);
+            // §IV-B: Uniform and Redundance are static; the others run
+            // under DanceMoE's migration mechanism with their own placement
+            // algorithm.
+            let report = match algo {
+                PlacementAlgo::Uniform | PlacementAlgo::Redundance => {
+                    spec.serve_static(initial, &trace)
+                }
+                _ => {
+                    spec.serve_coordinated(algo, initial, &trace, INTERVAL_S)
+                        .0
+                }
+            };
+            Table2Cell {
+                model: model.name.clone(),
+                dataset: dataset.to_string(),
+                method: algo.name(),
+                values: report.latency_row(),
+            }
+        })
+        .collect()
+}
+
+pub fn run(n_per_server: usize, seed: u64) -> Table2 {
+    let configs: Vec<(ModelConfig, &'static str, WorkloadConfig)> = vec![
+        (
+            ModelConfig::deepseek_v2_lite_sim(),
+            "BigBench",
+            WorkloadConfig::bigbench(10.0),
+        ),
+        (
+            ModelConfig::deepseek_v2_lite_sim(),
+            "MultiData",
+            WorkloadConfig::multidata(20.0),
+        ),
+        (
+            ModelConfig::mixtral_8x7b_sim(),
+            "BigBench",
+            WorkloadConfig::bigbench(10.0),
+        ),
+        (
+            ModelConfig::mixtral_8x7b_sim(),
+            "MultiData",
+            WorkloadConfig::multidata(20.0),
+        ),
+    ];
+    let cells = parallel_map(configs, 4, move |(m, d, w)| {
+        one_config(m, d, w, n_per_server, seed)
+    })
+    .into_iter()
+    .flatten()
+    .collect();
+    Table2 { cells }
+}
+
+impl Table2 {
+    pub fn get(&self, model_prefix: &str, dataset: &str, method: &str) -> Option<&Table2Cell> {
+        self.cells.iter().find(|c| {
+            c.model.starts_with(model_prefix)
+                && c.dataset == dataset
+                && c.method == method
+        })
+    }
+
+    pub fn total(&self, model_prefix: &str, dataset: &str, method: &str) -> f64 {
+        self.get(model_prefix, dataset, method)
+            .map(|c| *c.values.last().unwrap())
+            .unwrap_or(f64::NAN)
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for model in ["deepseek", "mixtral"] {
+            for dataset in ["BigBench", "MultiData"] {
+                let title = format!(
+                    "Table II ({}): serve latency (s), {} dataset",
+                    model, dataset
+                );
+                let mut t = Table::new(
+                    &title,
+                    &["Method", "Server1", "Server2", "Server3", "Total Avg"],
+                );
+                for algo in PlacementAlgo::all() {
+                    if let Some(c) = self.get(model, dataset, algo.name()) {
+                        let label = if algo == PlacementAlgo::DanceMoE {
+                            "Ours (DanceMoE)"
+                        } else {
+                            algo.name()
+                        };
+                        t.row_f64(label, &c.values, 2);
+                    }
+                }
+                out.push_str(&t.render());
+                out.push('\n');
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_small_run_ordering() {
+        // Reduced-size sanity run (the bench regenerates the full table):
+        // DanceMoE must beat Uniform on total average for DSv2/BigBench,
+        // the paper's headline configuration.
+        let model = ModelConfig::deepseek_v2_lite_sim();
+        let cells = one_config(
+            model,
+            "BigBench",
+            WorkloadConfig::bigbench(10.0),
+            25,
+            13,
+        );
+        assert_eq!(cells.len(), 5);
+        let total = |m: &str| {
+            cells
+                .iter()
+                .find(|c| c.method == m)
+                .map(|c| *c.values.last().unwrap())
+                .unwrap()
+        };
+        let ours = total("DanceMoE");
+        let uniform = total("Uniform");
+        assert!(
+            ours < uniform,
+            "DanceMoE {ours:.2}s must beat Uniform {uniform:.2}s"
+        );
+        for c in &cells {
+            assert!(c.values.iter().all(|&v| v.is_finite() && v > 0.0));
+        }
+    }
+}

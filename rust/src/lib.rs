@@ -1,0 +1,93 @@
+//! # DanceMoE
+//!
+//! A production-grade reproduction of *Accelerating Edge Inference for
+//! Distributed MoE Models with Latency-Optimized Expert Placement*
+//! (DanceMoE, CS.DC 2025) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! The crate is the **Layer-3 coordinator**: it owns the request path,
+//! the discrete-event serving engine, the activation-aware placement
+//! algorithms (the paper's Algorithms 1 & 2), the migration policy
+//! (Eqs. 3–4), the network/cluster models standing in for the paper's
+//! Docker+tc testbed, and the PJRT runtime that executes the AOT-compiled
+//! JAX/Pallas compute pieces (Layers 2 and 1, built once by
+//! `make artifacts`; Python is never on the request path).
+//!
+//! ## Crate map
+//!
+//! | module | role |
+//! |---|---|
+//! | [`util`] | from-scratch substrates: JSON, RNG, CLI, stats, thread pool, property-test + bench harnesses |
+//! | [`config`] | model / cluster / workload configs and presets |
+//! | [`moe`] | MoE model descriptors and activation statistics (`f_n^l(e)`, entropy) |
+//! | [`trace`] | synthetic task-skewed workload generation (BIG-bench / MultiData stand-ins) |
+//! | [`placement`] | Algorithms 1 & 2, baselines (Uniform / Redundance / SmartMoE / EPLB), proxy objective, migration |
+//! | [`net`] | bandwidth/RTT network model with per-link contention |
+//! | [`cluster`] | edge server + GPU state, memory accounting, offload store |
+//! | [`runtime`] | PJRT client, HLO artifact loading, typed execution, calibration |
+//! | [`engine`] | discrete-event serving engine + MoE-Infinity offload baseline |
+//! | [`coordinator`] | global scheduler: stats collection, periodic placement refresh, migration execution |
+//! | [`exp`] | one harness per paper table/figure (Table I/II, Fig 2/3/5/6/7/8) |
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use dancemoe::prelude::*;
+//!
+//! // Paper testbed: 3 heterogeneous edge servers, DeepSeek-V2-Lite topology.
+//! let model = ModelConfig::deepseek_v2_lite_sim();
+//! let cluster = ClusterConfig::edge_testbed_3_for(&model);
+//! let workload = WorkloadConfig::bigbench(10.0);
+//!
+//! let mut world = World::build(&model, &cluster, &workload, 42);
+//! let placement = dancemoe::placement::dancemoe_place(&model, &cluster, world.stats());
+//! let report = world.serve(&placement, 200);
+//! println!("avg latency: {:.2}s", report.avg_latency());
+//! ```
+
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod engine;
+pub mod exp;
+pub mod moe;
+pub mod net;
+pub mod placement;
+pub mod runtime;
+pub mod trace;
+pub mod util;
+
+/// Convenience re-exports for examples and downstream users.
+pub mod prelude {
+    pub use crate::cluster::Cluster;
+    pub use crate::config::{ClusterConfig, ModelConfig, WorkloadConfig};
+    pub use crate::coordinator::{Coordinator, CoordinatorConfig};
+    pub use crate::engine::{Engine, EngineConfig, ServeReport, World};
+    pub use crate::moe::{ActivationStats, ExpertId, LayerId, ServerId};
+    pub use crate::placement::{Placement, PlacementAlgo};
+    pub use crate::trace::{TaskProfile, Trace, TraceGenerator};
+}
+
+/// Crate-wide error type.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    #[error("config error: {0}")]
+    Config(String),
+    #[error("placement error: {0}")]
+    Placement(String),
+    #[error("runtime error: {0}")]
+    Runtime(String),
+    #[error("json error: {0}")]
+    Json(String),
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("xla error: {0}")]
+    Xla(String),
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}

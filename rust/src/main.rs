@@ -1,0 +1,334 @@
+//! `dancemoe` — the Layer-3 coordinator CLI.
+//!
+//! Subcommands cover the full system surface: placement computation,
+//! serving (simulated testbed), every paper experiment, PJRT calibration,
+//! and trace generation. Run `dancemoe help` for usage.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use dancemoe::config::{ClusterConfig, ModelConfig, WorkloadConfig};
+use dancemoe::engine::warm_stats;
+use dancemoe::exp::runner::RunSpec;
+use dancemoe::placement::{objective, PlacementAlgo};
+use dancemoe::runtime::{calibrate, forward, weights, Runtime};
+use dancemoe::util::cli::{Args, Cli, Command};
+use dancemoe::util::table::Table;
+use dancemoe::{exp, Error};
+
+fn cli() -> Cli {
+    Cli {
+        program: "dancemoe",
+        about: "DanceMoE: latency-optimized expert placement for \
+                distributed MoE edge inference (CS.DC 2025 reproduction)",
+        commands: vec![
+            Command::new("place", "compute and report an expert placement")
+                .flag("model", Some("deepseek"), "model preset (mixtral|deepseek|tiny)")
+                .flag("algo", Some("dancemoe"), "uniform|redundance|smartmoe|eplb|dancemoe")
+                .flag("workload", Some("bigbench"), "bigbench|multidata")
+                .flag("seed", Some("0"), "rng seed"),
+            Command::new("serve", "serve a synthetic workload on the simulated testbed")
+                .flag("model", Some("deepseek"), "model preset")
+                .flag("algo", Some("dancemoe"), "placement algorithm")
+                .flag("workload", Some("bigbench"), "bigbench|multidata")
+                .flag("arrival", Some("10"), "mean inter-arrival seconds")
+                .flag("requests", Some("100"), "requests per server")
+                .flag("seed", Some("0"), "rng seed")
+                .switch("migrate", "enable the 5-min migration loop"),
+            Command::new("exp", "regenerate a paper table/figure \
+                          (table1|table2|fig2|fig3|fig5|fig6|fig7|fig8|ablations|all)")
+                .flag("seed", Some("7"), "rng seed")
+                .flag("requests", Some("150"), "requests per server (tables)")
+                .flag("horizon", Some("3600"), "virtual seconds (figures)"),
+            Command::new("calibrate", "measure PJRT wall-clock of the AOT artifacts")
+                .flag("artifacts", Some("artifacts"), "artifact directory")
+                .flag("reps", Some("30"), "repetitions per measurement")
+                .opt_flag("out", "write calibration JSON here"),
+            Command::new("forward", "run a real-numerics forward pass through PJRT")
+                .flag("artifacts", Some("artifacts"), "artifact directory")
+                .flag("tokens", Some("8"), "tokens in the pass (≤ largest bucket)")
+                .flag("seed", Some("0"), "input seed"),
+            Command::new("trace", "generate a workload trace as JSON")
+                .flag("model", Some("deepseek"), "model preset")
+                .flag("workload", Some("bigbench"), "bigbench|multidata")
+                .flag("arrival", Some("10"), "mean inter-arrival seconds")
+                .flag("requests", Some("100"), "requests per server")
+                .flag("seed", Some("0"), "rng seed")
+                .opt_flag("out", "output path (stdout if omitted)"),
+        ],
+    }
+}
+
+fn model_of(args: &Args) -> Result<ModelConfig, String> {
+    let name = args.get_str("model");
+    ModelConfig::preset(&name).ok_or(format!("unknown model '{name}'"))
+}
+
+fn workload_of(args: &Args, arrival: f64) -> Result<WorkloadConfig, String> {
+    let name = args.get_str("workload");
+    WorkloadConfig::preset(&name, arrival)
+        .ok_or(format!("unknown workload '{name}'"))
+}
+
+fn cmd_place(args: &Args) -> Result<(), String> {
+    let model = model_of(args)?;
+    let cluster = ClusterConfig::edge_testbed_3_for(&model);
+    let workload = workload_of(args, 10.0)?;
+    let algo = PlacementAlgo::from_name(&args.get_str("algo"))
+        .map_err(|e| e.to_string())?;
+    let seed = args.get_u64("seed")?;
+    let stats = warm_stats(&model, &workload);
+    let p = algo.compute(&model, &cluster, &stats, seed);
+    p.validate().map_err(|e| e.to_string())?;
+    let mut t = Table::new(
+        &format!("{} placement for {}", algo.name(), model.name),
+        &["Server", "replicas", "mem used (GB)", "mem cap (GB)",
+          "expected local ratio"],
+    );
+    let ratios = objective::per_server_local_ratio(&p, &stats);
+    for n in 0..cluster.num_servers() {
+        let replicas: usize = (0..model.num_layers)
+            .map(|l| p.server_layer_count(n, l))
+            .sum();
+        let used: u64 = (0..p.gpus[n]).map(|g| p.mem_used(n, g)).sum();
+        let cap: u64 = p.mem_cap[n].iter().sum();
+        t.row(vec![
+            cluster.servers[n].name.clone(),
+            format!("{replicas}"),
+            format!("{:.1}", used as f64 / 1e9),
+            format!("{:.1}", cap as f64 / 1e9),
+            format!("{:.3}", ratios[n]),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "proxy objective (expected remote mass): {:.1}\n\
+         expected cluster local ratio: {:.3}",
+        objective::remote_mass(&p, &stats),
+        objective::expected_local_ratio(&p, &stats)
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<(), String> {
+    let model = model_of(args)?;
+    let cluster = ClusterConfig::edge_testbed_3_for(&model);
+    let arrival = args.get_f64("arrival")?;
+    let workload = workload_of(args, arrival)?;
+    let algo = PlacementAlgo::from_name(&args.get_str("algo"))
+        .map_err(|e| e.to_string())?;
+    let seed = args.get_u64("seed")?;
+    let n = args.get_usize("requests")?;
+
+    let spec = RunSpec::new(model.clone(), cluster.clone(), workload, seed);
+    let trace = spec.trace_count(n);
+    let initial = spec.place(algo);
+    let report = if args.switch("migrate") {
+        spec.serve_coordinated(algo, initial, &trace, 300.0).0
+    } else {
+        spec.serve_static(initial, &trace)
+    };
+
+    let mut t = Table::new(
+        &format!(
+            "serve: {} × {} requests/server, {} placement",
+            model.name,
+            n,
+            algo.name()
+        ),
+        &["Server", "avg latency (s)"],
+    );
+    let row = report.latency_row();
+    for (i, v) in row.iter().enumerate().take(cluster.num_servers()) {
+        t.row(vec![format!("server{}", i + 1), format!("{v:.2}")]);
+    }
+    t.row(vec![
+        "TOTAL AVG".into(),
+        format!("{:.2}", row.last().unwrap()),
+    ]);
+    println!("{}", t.render());
+    println!(
+        "local compute ratio: {:.3}   p50 {:.2}s  p99 {:.2}s  \
+         net {:.1} MB  migrations {}",
+        report.local_ratio(),
+        report.latency_percentile(0.5),
+        report.latency_percentile(0.99),
+        report.net_bytes / 1e6,
+        report.migrations.len()
+    );
+    Ok(())
+}
+
+fn cmd_exp(args: &Args) -> Result<(), String> {
+    let which = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let seed = args.get_u64("seed")?;
+    let requests = args.get_usize("requests")?;
+    let horizon = args.get_f64("horizon")?;
+    let model = ModelConfig::mixtral_8x7b_sim();
+    let mut ran = false;
+    if which == "table1" || which == "all" {
+        println!("{}", exp::table1::run(requests, seed).render());
+        ran = true;
+    }
+    if which == "table2" || which == "all" {
+        println!("{}", exp::table2::run(requests, seed).render());
+        ran = true;
+    }
+    if which == "fig2" || which == "all" {
+        println!("{}", exp::fig2_3::fig2(&model).render());
+        ran = true;
+    }
+    if which == "fig3" || which == "all" {
+        println!("{}", exp::fig2_3::fig3(&model).render());
+        ran = true;
+    }
+    if which == "fig5" || which == "all" {
+        println!("{}", exp::fig5::run(30, seed).render());
+        ran = true;
+    }
+    if which == "fig6" || which == "all" {
+        println!("{}", exp::fig6::run(horizon, seed).render());
+        ran = true;
+    }
+    if which == "fig7" || which == "all" {
+        println!("{}", exp::fig7::run(200, seed).render());
+        ran = true;
+    }
+    if which == "fig8" || which == "all" {
+        println!("{}", exp::fig8::run(horizon.min(900.0), seed).render());
+        ran = true;
+    }
+    if which == "ablations" || which == "all" {
+        println!("{}", exp::ablations::run(requests.min(60), seed).render());
+        ran = true;
+    }
+    if !ran {
+        return Err(format!("unknown experiment '{which}'"));
+    }
+    Ok(())
+}
+
+fn cmd_calibrate(args: &Args) -> Result<(), String> {
+    let dir = PathBuf::from(args.get_str("artifacts"));
+    if !Runtime::available(&dir) {
+        return Err(format!(
+            "no artifacts at {} — run `make artifacts` first",
+            dir.display()
+        ));
+    }
+    let reps = args.get_usize("reps")?;
+    let model = ModelConfig::tiny();
+    let mut rt = Runtime::open(&dir).map_err(|e| e.to_string())?;
+    let cal = calibrate::calibrate(&mut rt, &model, reps)
+        .map_err(|e| e.to_string())?;
+    let mut t = Table::new(
+        "PJRT calibration (CPU backend, tiny shapes)",
+        &["piece", "batch", "median"],
+    );
+    for s in &cal.samples {
+        t.row(vec![
+            s.piece.clone(),
+            format!("{}", s.batch),
+            format!("{:.1} µs", s.median_s * 1e6),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "expert fit: t = {:.1}µs + {:.3}µs/token   \
+         home fit: t = {:.1}µs + {:.3}µs/token",
+        cal.expert_fit.0 * 1e6,
+        cal.expert_fit.1 * 1e6,
+        cal.home_fit.0 * 1e6,
+        cal.home_fit.1 * 1e6
+    );
+    println!(
+        "effective host throughput on the expert kernel: {:.2} GFLOP/s",
+        cal.effective_flops / 1e9
+    );
+    if let Some(out) = args.get("out") {
+        cal.write(&PathBuf::from(out)).map_err(|e| e.to_string())?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_forward(args: &Args) -> Result<(), String> {
+    let dir = PathBuf::from(args.get_str("artifacts"));
+    if !Runtime::available(&dir) {
+        return Err(format!(
+            "no artifacts at {} — run `make artifacts` first",
+            dir.display()
+        ));
+    }
+    let tokens = args.get_usize("tokens")?;
+    let seed = args.get_u64("seed")?;
+    let model = ModelConfig::tiny();
+    let mut rt = Runtime::open(&dir).map_err(|e| e.to_string())?;
+    let x = weights::input_tokens(&model, seed, tokens);
+    let t0 = std::time::Instant::now();
+    let y = forward::forward(&mut rt, &model, &x, tokens)
+        .map_err(|e| e.to_string())?;
+    let dt = t0.elapsed();
+    let norm: f32 = y.iter().map(|v| v * v).sum::<f32>().sqrt();
+    println!(
+        "forward pass: {} tokens × {} layers through PJRT in {:.1} ms \
+         (‖y‖ = {norm:.4}, {} executables cached)",
+        tokens,
+        model.num_layers,
+        dt.as_secs_f64() * 1e3,
+        rt.cached()
+    );
+    Ok(())
+}
+
+fn cmd_trace(args: &Args) -> Result<(), String> {
+    let model = model_of(args)?;
+    let arrival = args.get_f64("arrival")?;
+    let workload = workload_of(args, arrival)?;
+    let n = args.get_usize("requests")?;
+    let seed = args.get_u64("seed")?;
+    let trace = dancemoe::trace::TraceGenerator::new(&model, &workload, seed)
+        .gen_count(n);
+    let j = trace.to_json();
+    match args.get("out") {
+        Some(path) => {
+            j.write_file(&PathBuf::from(path))
+                .map_err(|e: Error| e.to_string())?;
+            println!("wrote {} requests to {path}", trace.len());
+        }
+        None => println!("{}", j.pretty()),
+    }
+    Ok(())
+}
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().collect();
+    let cli = cli();
+    let (cmd, args) = match cli.dispatch(&argv) {
+        Ok(x) => x,
+        Err(msg) => {
+            eprintln!("{msg}");
+            return ExitCode::from(2);
+        }
+    };
+    let result = match cmd.as_str() {
+        "place" => cmd_place(&args),
+        "serve" => cmd_serve(&args),
+        "exp" => cmd_exp(&args),
+        "calibrate" => cmd_calibrate(&args),
+        "forward" => cmd_forward(&args),
+        "trace" => cmd_trace(&args),
+        _ => Err(format!("unhandled command {cmd}")),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(msg) => {
+            eprintln!("dancemoe {cmd}: {msg}");
+            ExitCode::FAILURE
+        }
+    }
+}

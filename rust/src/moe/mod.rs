@@ -1,0 +1,292 @@
+//! MoE model descriptors and activation statistics.
+//!
+//! [`ActivationStats`] is the data structure behind the paper's
+//! `f_n^l(e)` — the empirical activation frequency of expert `e` at layer
+//! `l` observed on server `n` — and the entropy `v_{n,l}` that drives
+//! Algorithm 1. The global scheduler accumulates these from the engine's
+//! observability stream and the placement pipeline consumes them.
+
+use crate::config::ModelConfig;
+use crate::util::json::Json;
+use crate::util::stats::entropy_bits;
+use crate::Result;
+
+/// Server index.
+pub type ServerId = usize;
+/// Layer index.
+pub type LayerId = usize;
+/// Expert index *within a layer*.
+pub type ExpertId = usize;
+
+/// Per-server activation-frequency table: `freq[layer][expert]` counts
+/// (token-weighted) activations.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServerStats {
+    pub freq: Vec<Vec<f64>>,
+    /// Total token-activations recorded (sum over freq).
+    pub total: f64,
+}
+
+impl ServerStats {
+    pub fn new(model: &ModelConfig) -> ServerStats {
+        ServerStats {
+            freq: vec![vec![0.0; model.num_experts]; model.num_layers],
+            total: 0.0,
+        }
+    }
+
+    pub fn record(&mut self, layer: LayerId, expert: ExpertId, tokens: f64) {
+        self.freq[layer][expert] += tokens;
+        self.total += tokens;
+    }
+
+    /// Shannon entropy (bits) of this server's layer-`l` activation
+    /// distribution — the paper's `v_{n,l}`.
+    pub fn entropy(&self, layer: LayerId) -> f64 {
+        entropy_bits(&self.freq[layer])
+    }
+
+    /// Normalized activation frequency `f_n^l(e)` (probability within the
+    /// layer; 0 if the layer has no observations).
+    pub fn norm_freq(&self, layer: LayerId, expert: ExpertId) -> f64 {
+        let sum: f64 = self.freq[layer].iter().sum();
+        if sum <= 0.0 {
+            0.0
+        } else {
+            self.freq[layer][expert] / sum
+        }
+    }
+
+    /// Exponential decay — lets the migration loop track workload drift
+    /// without unbounded history (§III-C3).
+    pub fn decay(&mut self, factor: f64) {
+        debug_assert!((0.0..=1.0).contains(&factor));
+        self.total = 0.0;
+        for layer in &mut self.freq {
+            for f in layer.iter_mut() {
+                *f *= factor;
+                self.total += *f;
+            }
+        }
+    }
+
+    pub fn merge(&mut self, other: &ServerStats) {
+        for (a, b) in self.freq.iter_mut().zip(&other.freq) {
+            for (x, y) in a.iter_mut().zip(b) {
+                *x += *y;
+            }
+        }
+        self.total += other.total;
+    }
+
+    pub fn reset(&mut self) {
+        for layer in &mut self.freq {
+            layer.iter_mut().for_each(|f| *f = 0.0);
+        }
+        self.total = 0.0;
+    }
+}
+
+/// Activation statistics for the whole cluster: one table per server.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ActivationStats {
+    pub servers: Vec<ServerStats>,
+    pub num_layers: usize,
+    pub num_experts: usize,
+}
+
+impl ActivationStats {
+    pub fn new(model: &ModelConfig, num_servers: usize) -> ActivationStats {
+        ActivationStats {
+            servers: (0..num_servers).map(|_| ServerStats::new(model)).collect(),
+            num_layers: model.num_layers,
+            num_experts: model.num_experts,
+        }
+    }
+
+    pub fn record(
+        &mut self,
+        server: ServerId,
+        layer: LayerId,
+        expert: ExpertId,
+        tokens: f64,
+    ) {
+        self.servers[server].record(layer, expert, tokens);
+    }
+
+    pub fn num_servers(&self) -> usize {
+        self.servers.len()
+    }
+
+    /// `f_n^l(e)` normalized within (server, layer).
+    pub fn freq(&self, server: ServerId, layer: LayerId, expert: ExpertId) -> f64 {
+        self.servers[server].norm_freq(layer, expert)
+    }
+
+    /// Raw token-weighted counts.
+    pub fn raw(&self, server: ServerId, layer: LayerId, expert: ExpertId) -> f64 {
+        self.servers[server].freq[layer][expert]
+    }
+
+    /// Entropy `v_{n,l}`.
+    pub fn entropy(&self, server: ServerId, layer: LayerId) -> f64 {
+        self.servers[server].entropy(layer)
+    }
+
+    /// Cluster-wide per-expert load at a layer (sum of raw counts over
+    /// servers) — what the load-balancing baselines (SmartMoE, EPLB)
+    /// optimize for.
+    pub fn global_load(&self, layer: LayerId) -> Vec<f64> {
+        let mut out = vec![0.0; self.num_experts];
+        for s in &self.servers {
+            for (o, f) in out.iter_mut().zip(&s.freq[layer]) {
+                *o += *f;
+            }
+        }
+        out
+    }
+
+    pub fn decay(&mut self, factor: f64) {
+        self.servers.iter_mut().for_each(|s| s.decay(factor));
+    }
+
+    pub fn reset(&mut self) {
+        self.servers.iter_mut().for_each(|s| s.reset());
+    }
+
+    /// Total recorded token-activations across servers.
+    pub fn total(&self) -> f64 {
+        self.servers.iter().map(|s| s.total).sum()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("num_layers", Json::Num(self.num_layers as f64)),
+            ("num_experts", Json::Num(self.num_experts as f64)),
+            (
+                "servers",
+                Json::Arr(
+                    self.servers
+                        .iter()
+                        .map(|s| {
+                            Json::Arr(
+                                s.freq
+                                    .iter()
+                                    .map(|l| Json::arr_f64(l))
+                                    .collect(),
+                            )
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<ActivationStats> {
+        let num_layers = j.req("num_layers")?.as_usize().unwrap_or(0);
+        let num_experts = j.req("num_experts")?.as_usize().unwrap_or(0);
+        let servers = j
+            .req("servers")?
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .map(|s| {
+                let freq: Vec<Vec<f64>> = s
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(|l| l.to_f64_vec().unwrap_or_default())
+                    .collect();
+                let total = freq.iter().flatten().sum();
+                ServerStats { freq, total }
+            })
+            .collect();
+        Ok(ActivationStats {
+            servers,
+            num_layers,
+            num_experts,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+
+    fn stats() -> ActivationStats {
+        let m = ModelConfig::tiny();
+        ActivationStats::new(&m, 2)
+    }
+
+    #[test]
+    fn record_and_normalize() {
+        let mut s = stats();
+        s.record(0, 1, 3, 10.0);
+        s.record(0, 1, 5, 30.0);
+        assert!((s.freq(0, 1, 3) - 0.25).abs() < 1e-12);
+        assert!((s.freq(0, 1, 5) - 0.75).abs() < 1e-12);
+        assert_eq!(s.freq(1, 1, 3), 0.0); // other server untouched
+        assert_eq!(s.freq(0, 0, 3), 0.0); // other layer untouched
+        assert_eq!(s.total(), 40.0);
+    }
+
+    #[test]
+    fn entropy_tracks_skew() {
+        let mut s = stats();
+        // server 0 layer 0: all mass on one expert => entropy 0
+        s.record(0, 0, 2, 100.0);
+        assert_eq!(s.entropy(0, 0), 0.0);
+        // server 0 layer 1: uniform over all 8 => entropy 3 bits
+        for e in 0..8 {
+            s.record(0, 1, e, 10.0);
+        }
+        assert!((s.entropy(0, 1) - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn decay_scales_counts() {
+        let mut s = stats();
+        s.record(0, 0, 0, 100.0);
+        s.decay(0.5);
+        assert!((s.raw(0, 0, 0) - 50.0).abs() < 1e-12);
+        assert!((s.total() - 50.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn global_load_sums_servers() {
+        let mut s = stats();
+        s.record(0, 2, 1, 5.0);
+        s.record(1, 2, 1, 7.0);
+        s.record(1, 2, 0, 3.0);
+        let load = s.global_load(2);
+        assert_eq!(load[1], 12.0);
+        assert_eq!(load[0], 3.0);
+    }
+
+    #[test]
+    fn merge_and_reset() {
+        let m = ModelConfig::tiny();
+        let mut a = ServerStats::new(&m);
+        let mut b = ServerStats::new(&m);
+        a.record(0, 1, 4.0);
+        b.record(0, 1, 6.0);
+        b.record(3, 7, 1.0);
+        a.merge(&b);
+        assert_eq!(a.freq[0][1], 10.0);
+        assert_eq!(a.freq[3][7], 1.0);
+        assert_eq!(a.total, 11.0);
+        a.reset();
+        assert_eq!(a.total, 0.0);
+        assert!(a.freq.iter().flatten().all(|&f| f == 0.0));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut s = stats();
+        s.record(0, 1, 3, 2.5);
+        s.record(1, 0, 7, 4.0);
+        let back = ActivationStats::from_json(&s.to_json()).unwrap();
+        assert_eq!(s, back);
+    }
+}

@@ -1,0 +1,169 @@
+//! Network model: the stand-in for the paper's Docker network with
+//! tc-shaped 500 Mbps links (§IV-A).
+//!
+//! Each ordered server pair has a dedicated link with the configured
+//! bandwidth and one-way latency; transfers on a link serialize (FIFO),
+//! modeling tc's queueing discipline. The discrete-event engine books
+//! transfers against link timelines; pure estimators are also provided for
+//! the migration decision (which uses Eq. 3's closed form, not the DES).
+
+use crate::config::ClusterConfig;
+
+/// A directed link's state: bandwidth + busy-until timeline.
+#[derive(Debug, Clone)]
+struct Link {
+    bytes_per_s: f64,
+    busy_until: f64,
+}
+
+/// Cluster network with per-directed-link FIFO contention.
+#[derive(Debug, Clone)]
+pub struct NetModel {
+    num_servers: usize,
+    /// one-way latency (s)
+    pub latency_s: f64,
+    links: Vec<Link>, // [src * n + dst]
+    /// cumulative bytes sent per link (observability)
+    pub bytes_sent: Vec<f64>,
+}
+
+impl NetModel {
+    pub fn new(cluster: &ClusterConfig) -> NetModel {
+        let n = cluster.num_servers();
+        let bps = cluster.bandwidth_bps / 8.0;
+        NetModel {
+            num_servers: n,
+            latency_s: cluster.rtt_s,
+            links: (0..n * n)
+                .map(|_| Link {
+                    bytes_per_s: bps,
+                    busy_until: 0.0,
+                })
+                .collect(),
+            bytes_sent: vec![0.0; n * n],
+        }
+    }
+
+    #[inline]
+    fn idx(&self, src: usize, dst: usize) -> usize {
+        src * self.num_servers + dst
+    }
+
+    /// Pure transfer-time estimate (no contention): latency + fixed
+    /// per-call occupancy + bytes/bw. `fixed_s` models the multistage
+    /// remote-call overhead of the paper's Fig. 5 (RPC + RAM staging +
+    /// host→device setup) — see [`crate::engine::CostModel::remote_fixed_s`].
+    pub fn transfer_estimate_s(
+        &self,
+        src: usize,
+        dst: usize,
+        bytes: f64,
+        fixed_s: f64,
+    ) -> f64 {
+        if src == dst {
+            return 0.0;
+        }
+        self.latency_s
+            + fixed_s
+            + bytes / self.links[self.idx(src, dst)].bytes_per_s
+    }
+
+    /// Book a transfer starting no earlier than `ready_s`; returns the
+    /// completion time. The link serializes transfers (FIFO): the transfer
+    /// begins at `max(ready_s, link.busy_until)`. `fixed_s` occupies the
+    /// link like payload does (the staging pipeline is per-call).
+    pub fn book_transfer(
+        &mut self,
+        src: usize,
+        dst: usize,
+        bytes: f64,
+        ready_s: f64,
+        fixed_s: f64,
+    ) -> f64 {
+        if src == dst {
+            return ready_s;
+        }
+        let i = self.idx(src, dst);
+        let start = ready_s.max(self.links[i].busy_until);
+        let done = start + fixed_s + bytes / self.links[i].bytes_per_s;
+        self.links[i].busy_until = done;
+        self.bytes_sent[i] += bytes;
+        // propagation latency is not link-occupying
+        done + self.latency_s
+    }
+
+    /// Reset all timelines (new run) but keep topology.
+    pub fn reset(&mut self) {
+        for l in &mut self.links {
+            l.busy_until = 0.0;
+        }
+        self.bytes_sent.iter_mut().for_each(|b| *b = 0.0);
+    }
+
+    /// Total bytes that crossed the network.
+    pub fn total_bytes(&self) -> f64 {
+        self.bytes_sent.iter().sum()
+    }
+
+    pub fn num_servers(&self) -> usize {
+        self.num_servers
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClusterConfig, ModelConfig};
+
+    fn net() -> NetModel {
+        let m = ModelConfig::mixtral_8x7b_sim();
+        NetModel::new(&ClusterConfig::edge_testbed_3_for(&m))
+    }
+
+    #[test]
+    fn estimate_matches_bandwidth() {
+        let n = net();
+        // 500 Mbps = 62.5 MB/s; 62.5 MB takes 1 s + latency
+        let t = n.transfer_estimate_s(0, 1, 62.5e6, 0.0);
+        assert!((t - (1.0 + 0.002)).abs() < 1e-9);
+        assert_eq!(n.transfer_estimate_s(1, 1, 1e9, 0.0), 0.0);
+    }
+
+    #[test]
+    fn fifo_contention_serializes() {
+        let mut n = net();
+        let t1 = n.book_transfer(0, 1, 62.5e6, 0.0, 0.0);
+        let t2 = n.book_transfer(0, 1, 62.5e6, 0.0, 0.0);
+        assert!((t1 - 1.002).abs() < 1e-9);
+        assert!((t2 - 2.002).abs() < 1e-9, "second transfer must queue");
+        // opposite direction is a different link: no contention
+        let t3 = n.book_transfer(1, 0, 62.5e6, 0.0, 0.0);
+        assert!((t3 - 1.002).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ready_time_respected() {
+        let mut n = net();
+        let t = n.book_transfer(0, 2, 6.25e6, 10.0, 0.0);
+        assert!((t - (10.0 + 0.1 + 0.002)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn local_transfer_free() {
+        let mut n = net();
+        assert_eq!(n.book_transfer(2, 2, 1e12, 5.0, 0.0), 5.0);
+        assert_eq!(n.total_bytes(), 0.0);
+    }
+
+    #[test]
+    fn accounting_and_reset() {
+        let mut n = net();
+        n.book_transfer(0, 1, 100.0, 0.0, 0.0);
+        n.book_transfer(2, 1, 50.0, 0.0, 0.0);
+        assert_eq!(n.total_bytes(), 150.0);
+        n.reset();
+        assert_eq!(n.total_bytes(), 0.0);
+        let t = n.book_transfer(0, 1, 62.5e6, 0.0, 0.0);
+        assert!((t - 1.002).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,415 @@
+//! **Algorithm 2 — Expert-to-Server Assignment** + GPU packing.
+//!
+//! Given the per-(server, layer) counts from Algorithm 1, each server takes
+//! the top-`N_{n,l}` most frequently activated experts from its preference
+//! list (greedy — Theorem 1's (1−1/e) guarantee on the local-frequency-mass
+//! utility). Coverage repair then walks unassigned experts: servers are
+//! visited in ascending duplicate count, and each replaces its least-used
+//! *duplicate* (an expert also held elsewhere, so removal cannot break
+//! coverage) with the most frequent unassigned expert.
+//!
+//! Finally the server-level sets are packed onto the server's GPUs
+//! (most-free-memory-first), producing the `z_{n,g}^e` tensor.
+
+use crate::config::{ClusterConfig, ModelConfig};
+use crate::moe::ActivationStats;
+use crate::placement::entropy_alloc::ExpertCounts;
+use crate::placement::Placement;
+use crate::util::stats::argsort_desc;
+
+/// Server-level assignment sets `A_n^l` (expert indices, with possible
+/// duplicates *across* servers, never within a (server, layer)).
+pub type ServerAssign = Vec<Vec<Vec<usize>>>; // [server][layer][slot]
+
+/// Run Algorithm 2 and pack to GPUs.
+pub fn assign(
+    model: &ModelConfig,
+    cluster: &ClusterConfig,
+    stats: &ActivationStats,
+    counts: &ExpertCounts,
+) -> Placement {
+    let sets = assign_servers(model, cluster, stats, counts);
+    let mut p = pack_gpus(model, cluster, stats, &sets);
+    repair_coverage(&mut p, stats);
+    p
+}
+
+/// Final safety net: GPU packing can drop a coverage-critical expert when a
+/// server's set exceeded its memory. For every still-missing expert, place
+/// it on the freest GPU, evicting the globally least-frequent *duplicated*
+/// expert if no GPU has free space. Guaranteed to terminate: each round
+/// either places a missing expert or gives up (memory-infeasible cluster).
+pub fn repair_coverage(p: &mut Placement, stats: &ActivationStats) {
+    loop {
+        let missing = p.missing_experts();
+        if missing.is_empty() {
+            return;
+        }
+        let (l, e) = missing[0];
+        if let Some((s, g)) = p.most_free_gpu() {
+            if !p.server_has(s, l, e) && p.place(s, g, l, e).is_ok() {
+                continue;
+            }
+        }
+        // Evict the least-frequent replica whose expert has ≥2 owners.
+        let mut victim: Option<(usize, usize, usize, usize, f64)> = None;
+        for n in 0..p.num_servers {
+            if p.server_has(n, l, e) {
+                continue; // eviction here wouldn't let us place (l, e)
+            }
+            for g in 0..p.gpus[n] {
+                for vl in 0..p.num_layers {
+                    for ve in 0..p.num_experts {
+                        if p.gpu_has(n, g, vl, ve)
+                            && p.coverage(vl, ve) >= 2
+                        {
+                            let f = stats.raw(n, vl, ve);
+                            if victim
+                                .map(|(.., bf)| f < bf)
+                                .unwrap_or(true)
+                            {
+                                victim = Some((n, g, vl, ve, f));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        match victim {
+            Some((n, g, vl, ve, _)) => {
+                let _ = p.remove(n, g, vl, ve);
+                if p.place(n, g, l, e).is_err() {
+                    return; // expert_bytes mismatch cannot happen; bail
+                }
+            }
+            None => return, // genuinely infeasible
+        }
+    }
+}
+
+/// The server-level half (exposed for tests of the theorem's invariants).
+pub fn assign_servers(
+    model: &ModelConfig,
+    cluster: &ClusterConfig,
+    stats: &ActivationStats,
+    counts: &ExpertCounts,
+) -> ServerAssign {
+    let nsrv = cluster.num_servers();
+    let nlay = model.num_layers;
+    let e_l = model.num_experts;
+
+    // ---- greedy top-N_{n,l} initialization -----------------------------
+    let mut sets: ServerAssign = vec![vec![Vec::new(); nlay]; nsrv];
+    for n in 0..nsrv {
+        for l in 0..nlay {
+            let take = counts[n][l].min(e_l);
+            let freqs: Vec<f64> =
+                (0..e_l).map(|e| stats.raw(n, l, e)).collect();
+            let mut pref = argsort_desc(&freqs);
+            if stats.servers[n].total <= 0.0 {
+                // Cold start: all frequencies are zero — rotate the
+                // preference list per server so servers do not all pick the
+                // same experts (keeps initial coverage high).
+                pref.rotate_left((n * 3) % e_l.max(1));
+            }
+            sets[n][l] = pref.into_iter().take(take).collect();
+        }
+    }
+
+    // ---- coverage repair (the paper's duplicate-replacement loop) -------
+    for l in 0..nlay {
+        loop {
+            // experts of layer l with no owner
+            let mut owned = vec![0usize; e_l];
+            for srv in sets.iter() {
+                for &e in &srv[l] {
+                    owned[e] += 1;
+                }
+            }
+            let unassigned: Vec<usize> =
+                (0..e_l).filter(|&e| owned[e] == 0).collect();
+            if unassigned.is_empty() {
+                break;
+            }
+            // servers sorted by number of duplicates (ascending)
+            let dup_count = |n: usize, owned: &[usize]| -> usize {
+                sets[n][l].iter().filter(|&&e| owned[e] >= 2).count()
+            };
+            let mut order: Vec<usize> = (0..nsrv).collect();
+            order.sort_by_key(|&n| dup_count(n, &owned));
+
+            let mut progressed = false;
+            for &n in &order {
+                // most frequent unassigned expert according to f_n^l(e)
+                let mut owned_now = vec![0usize; e_l];
+                for srv in sets.iter() {
+                    for &e in &srv[l] {
+                        owned_now[e] += 1;
+                    }
+                }
+                let un: Vec<usize> =
+                    (0..e_l).filter(|&e| owned_now[e] == 0).collect();
+                if un.is_empty() {
+                    break;
+                }
+                let e_new = *un
+                    .iter()
+                    .max_by(|&&a, &&b| {
+                        stats
+                            .raw(n, l, a)
+                            .partial_cmp(&stats.raw(n, l, b))
+                            .unwrap()
+                            .then(b.cmp(&a)) // tie: lower index first
+                    })
+                    .unwrap();
+                if sets[n][l].contains(&e_new) {
+                    continue;
+                }
+                // least-used duplicate on this server (safe to evict)
+                let victim = sets[n][l]
+                    .iter()
+                    .copied()
+                    .filter(|&e| owned_now[e] >= 2)
+                    .min_by(|&a, &b| {
+                        stats
+                            .raw(n, l, a)
+                            .partial_cmp(&stats.raw(n, l, b))
+                            .unwrap()
+                            .then(a.cmp(&b))
+                    });
+                if let Some(victim) = victim {
+                    let pos =
+                        sets[n][l].iter().position(|&e| e == victim).unwrap();
+                    sets[n][l][pos] = e_new;
+                    progressed = true;
+                }
+            }
+            if !progressed {
+                // No server holds an evictable duplicate (memory-infeasible
+                // coverage). Best effort: append to the server with the
+                // largest count budget slack is not tracked here, so append
+                // to the server currently holding the fewest layer-l
+                // experts; pack_gpus will drop lowest-frequency overflow if
+                // memory truly cannot hold it.
+                let mut owned_now = vec![0usize; e_l];
+                for srv in sets.iter() {
+                    for &e in &srv[l] {
+                        owned_now[e] += 1;
+                    }
+                }
+                let un: Vec<usize> =
+                    (0..e_l).filter(|&e| owned_now[e] == 0).collect();
+                if un.is_empty() {
+                    break;
+                }
+                let n = (0..nsrv)
+                    .min_by_key(|&n| sets[n][l].len())
+                    .unwrap();
+                sets[n][l].push(un[0]);
+            }
+        }
+    }
+    sets
+}
+
+/// Pack each server's assignment onto its GPUs: experts in descending
+/// activation frequency go to the GPU with the most free memory (keeps
+/// per-GPU load and memory balanced). Overflow (memory-infeasible input)
+/// drops the least frequent replicas, never coverage-critical ones if a
+/// fit exists elsewhere.
+pub fn pack_gpus(
+    model: &ModelConfig,
+    cluster: &ClusterConfig,
+    stats: &ActivationStats,
+    sets: &ServerAssign,
+) -> Placement {
+    let mut p = Placement::new(model, cluster);
+    for (n, srv) in sets.iter().enumerate() {
+        // Flatten (layer, expert) pairs, most frequent first, so the
+        // highest-value experts land even under memory pressure.
+        let mut items: Vec<(usize, usize, f64)> = srv
+            .iter()
+            .enumerate()
+            .flat_map(|(l, experts)| {
+                experts.iter().map(move |&e| (l, e, 0.0))
+            })
+            .collect();
+        for item in &mut items {
+            item.2 = stats.raw(n, item.0, item.1);
+        }
+        items.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap());
+        for (l, e, _) in items {
+            // most-free GPU on this server that fits
+            let gpu = (0..p.gpus[n])
+                .filter(|&g| p.mem_free(n, g) >= model.expert_bytes)
+                .max_by_key(|&g| p.mem_free(n, g));
+            if let Some(g) = gpu {
+                // duplicate within server (same expert on 2 GPUs) is legal
+                // but wasteful — skip if this server already has it.
+                if !p.server_has(n, l, e) {
+                    let _ = p.place(n, g, l, e);
+                }
+            }
+        }
+    }
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClusterConfig, ModelConfig, WorkloadConfig};
+    use crate::moe::ActivationStats;
+    use crate::placement::entropy_alloc;
+    use crate::trace::TaskProfile;
+
+    fn warm(
+        model: &ModelConfig,
+        cluster: &ClusterConfig,
+    ) -> ActivationStats {
+        let mut stats = ActivationStats::new(model, cluster.num_servers());
+        let w = WorkloadConfig::bigbench(10.0);
+        for (n, s) in w.streams.iter().enumerate() {
+            let prof = TaskProfile::build(s.task, model);
+            for l in 0..model.num_layers {
+                for e in 0..model.num_experts {
+                    stats.record(n, l, e, prof.dist[l][e] * 1000.0);
+                }
+            }
+        }
+        stats
+    }
+
+    fn full(model: &ModelConfig) -> (ClusterConfig, ActivationStats, Placement) {
+        let c = ClusterConfig::edge_testbed_3_for(model);
+        let stats = warm(model, &c);
+        let counts = entropy_alloc::expert_counts(model, &c, &stats);
+        let p = assign(model, &c, &stats, &counts);
+        (c, stats, p)
+    }
+
+    #[test]
+    fn full_coverage_and_memory_for_both_models() {
+        for m in [
+            ModelConfig::mixtral_8x7b_sim(),
+            ModelConfig::deepseek_v2_lite_sim(),
+        ] {
+            let (_, _, p) = full(&m);
+            p.validate().unwrap_or_else(|e| {
+                panic!("{}: {e}", m.name);
+            });
+        }
+    }
+
+    #[test]
+    fn no_duplicates_within_server_layer() {
+        let m = ModelConfig::deepseek_v2_lite_sim();
+        let (_, _, p) = full(&m);
+        for n in 0..p.num_servers {
+            for l in 0..p.num_layers {
+                // union across GPUs must equal replica count (no expert
+                // stored twice on one server)
+                let union = p.server_layer_experts(n, l).len();
+                let replicas = p.server_layer_count(n, l);
+                assert_eq!(union, replicas, "s{n} l{l}");
+            }
+        }
+    }
+
+    #[test]
+    fn greedy_prefers_frequent_experts() {
+        // Each server's resident set should capture more local activation
+        // mass than a uniform split would.
+        let m = ModelConfig::mixtral_8x7b_sim();
+        let (c, stats, p) = full(&m);
+        for n in 0..c.num_servers() {
+            let mut local = 0.0;
+            let mut total = 0.0;
+            for l in 0..m.num_layers {
+                for e in 0..m.num_experts {
+                    let f = stats.raw(n, l, e);
+                    total += f;
+                    if p.server_has(n, l, e) {
+                        local += f;
+                    }
+                }
+            }
+            let ratio = local / total;
+            // A blind uniform split captures ≈ the server's slot share of
+            // the mass; greedy-by-frequency must beat that clearly.
+            let slots = (c.servers[n].total_mem() / m.expert_bytes) as f64;
+            let blind = slots / m.total_experts() as f64;
+            assert!(
+                ratio > blind * 1.3,
+                "server {n}: local mass ratio {ratio:.3} vs blind {blind:.3}"
+            );
+        }
+    }
+
+    #[test]
+    fn cold_start_still_covers() {
+        let m = ModelConfig::mixtral_8x7b_sim();
+        let c = ClusterConfig::edge_testbed_3_for(&m);
+        let stats = ActivationStats::new(&m, 3);
+        let counts = entropy_alloc::expert_counts(&m, &c, &stats);
+        let p = assign(&m, &c, &stats, &counts);
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn coverage_repair_handles_identical_preferences() {
+        // All servers see the SAME skewed distribution — maximal duplicate
+        // pressure; repair must still achieve coverage.
+        let m = ModelConfig::mixtral_8x7b_sim();
+        let c = ClusterConfig::edge_testbed_3_for(&m);
+        let mut stats = ActivationStats::new(&m, 3);
+        for n in 0..3 {
+            for l in 0..m.num_layers {
+                for e in 0..m.num_experts {
+                    // strongly prefer low-index experts, identically
+                    stats.record(n, l, e, 1000.0 / (e as f64 + 1.0));
+                }
+            }
+        }
+        let counts = entropy_alloc::expert_counts(&m, &c, &stats);
+        let p = assign(&m, &c, &stats, &counts);
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn packing_balances_gpu_memory() {
+        let m = ModelConfig::deepseek_v2_lite_sim();
+        let (_, _, p) = full(&m);
+        // server 3 (index 2) has two GPUs — usage should be within one
+        // expert of each other given most-free-first packing
+        let a = p.mem_used(2, 0);
+        let b = p.mem_used(2, 1);
+        let diff = a.abs_diff(b);
+        assert!(
+            diff <= 2 * m.expert_bytes,
+            "gpu imbalance: {a} vs {b}"
+        );
+    }
+
+    #[test]
+    fn infeasible_memory_is_best_effort_not_panic() {
+        let m = ModelConfig::mixtral_8x7b_sim();
+        let mut c = ClusterConfig::edge_testbed_3_for(&m);
+        for s in &mut c.servers {
+            for g in &mut s.gpus {
+                g.mem_bytes = m.expert_bytes * 20; // 80 slots < 256 needed
+            }
+        }
+        let stats = ActivationStats::new(&m, 3);
+        let counts = entropy_alloc::expert_counts(&m, &c, &stats);
+        let p = assign(&m, &c, &stats, &counts);
+        // memory constraint always holds…
+        for n in 0..p.num_servers {
+            for g in 0..p.gpus[n] {
+                assert!(p.mem_used(n, g) <= p.mem_cap[n][g]);
+            }
+        }
+        // …while coverage is necessarily partial
+        assert!(!p.missing_experts().is_empty());
+    }
+}

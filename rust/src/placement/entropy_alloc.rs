@@ -1,0 +1,313 @@
+//! **Algorithm 1 — Layer-wise Expert Count Allocation.**
+//!
+//! Distributes each server's expert budget across layers proportionally to
+//! the Shannon entropy of its per-layer activation distribution (`v_{n,l}`),
+//! then rebalances so every layer's cluster-wide total reaches `E_l`
+//! (the expert-coverage precondition Algorithm 2 relies on).
+//!
+//! Faithful to the paper's pseudo-code, with three engineering guards the
+//! paper leaves implicit:
+//! 1. `N_{n,l}` is capped at `E_l` (more replicas of a layer than it has
+//!    distinct experts is useless at the *count* stage),
+//! 2. cold start (no statistics yet) falls back to uniform entropy,
+//! 3. the Step-2 borrow loop falls back to spending floor-rounding slack
+//!    (free capacity the initialization's `⌊·⌋` left unused) when no layer
+//!    can donate, and reports infeasibility instead of spinning.
+
+use crate::config::{ClusterConfig, ModelConfig};
+use crate::moe::ActivationStats;
+
+/// Per-(server, layer) expert counts `N_{n,l}`.
+pub type ExpertCounts = Vec<Vec<usize>>;
+
+/// Run Algorithm 1. Always returns counts; if the cluster simply cannot
+/// hold every expert the shortfall remains and `coverage_shortfall`
+/// reports it (Algorithm 2 then does best-effort).
+pub fn expert_counts(
+    model: &ModelConfig,
+    cluster: &ClusterConfig,
+    stats: &ActivationStats,
+) -> ExpertCounts {
+    let nsrv = cluster.num_servers();
+    let nlay = model.num_layers;
+    let e_l = model.num_experts;
+
+    // Server memory M_n and capacity in experts ⌊M_n / m_e⌋.
+    let cap: Vec<usize> = cluster
+        .servers
+        .iter()
+        .map(|s| (s.total_mem() / model.expert_bytes) as usize)
+        .collect();
+
+    // v_{n,l}: activation entropy; uniform fallback on cold start.
+    let cold = stats.total() <= 0.0;
+    let v: Vec<Vec<f64>> = (0..nsrv)
+        .map(|n| {
+            (0..nlay)
+                .map(|l| {
+                    if cold || stats.servers[n].total <= 0.0 {
+                        1.0
+                    } else {
+                        // layers with zero observations get a small floor so
+                        // they still receive some budget
+                        stats.entropy(n, l).max(0.05)
+                    }
+                })
+                .collect()
+        })
+        .collect();
+
+    // ---- Step 1: entropy-proportional initialization -------------------
+    let mut counts: ExpertCounts = vec![vec![0; nlay]; nsrv];
+    for n in 0..nsrv {
+        let vsum: f64 = v[n].iter().sum();
+        for l in 0..nlay {
+            let raw = (cap[n] as f64 * v[n][l] / vsum).floor() as usize;
+            counts[n][l] = raw.min(e_l);
+        }
+    }
+
+    // Servers sorted by memory descending (paper's Step-2 priority).
+    let mut by_mem: Vec<usize> = (0..nsrv).collect();
+    by_mem.sort_by_key(|&n| std::cmp::Reverse(cluster.servers[n].total_mem()));
+
+    // ---- Step 2: rebalance to meet the coverage precondition ------------
+    for l in 0..nlay {
+        loop {
+            let total_l: usize = (0..nsrv).map(|n| counts[n][l]).sum();
+            if total_l >= e_l {
+                break;
+            }
+            // Donor layer l' = argmax total count among layers that stay
+            // covered after donating (total > E_l'), excluding l itself —
+            // the paper's borrow step. If no layer is over-provisioned,
+            // spend floor-rounding slack instead (capacity the ⌊·⌋
+            // initialization left unused). If neither exists the instance
+            // is genuinely infeasible (Σ caps < Σ E_l): a short layer means
+            // every server has counts[n][l] < E_l, so any slack server can
+            // absorb the placement — slack absence + no donor ⇒ all
+            // capacity is spent on exactly-covered layers.
+            let donor = (0..nlay)
+                .filter(|&lp| lp != l)
+                .map(|lp| (lp, (0..nsrv).map(|n| counts[n][lp]).sum::<usize>()))
+                .filter(|&(_, tot)| tot > e_l)
+                .max_by_key(|&(lp, tot)| (tot, std::cmp::Reverse(lp)));
+            let mut progressed = false;
+            if let Some((lp, _)) = donor {
+                for &n in &by_mem {
+                    if counts[n][lp] > 0 && counts[n][l] < e_l {
+                        counts[n][lp] -= 1;
+                        counts[n][l] += 1;
+                        progressed = true;
+                        break;
+                    }
+                }
+            }
+            if !progressed {
+                for &n in &by_mem {
+                    let used: usize = counts[n].iter().sum();
+                    if used < cap[n] && counts[n][l] < e_l {
+                        counts[n][l] += 1;
+                        progressed = true;
+                        break;
+                    }
+                }
+            }
+            if !progressed {
+                break; // infeasible for this layer; reported by shortfall()
+            }
+        }
+    }
+
+    // ---- Step 3 (engineering): spend remaining slack on duplicates ------
+    // Floor-rounding + borrowing can leave capacity unused even when every
+    // layer is covered. Give it to the layers with the highest entropy per
+    // server (most duplicate-hungry) so DanceMoE — like Redundance and
+    // EPLB — exploits spare memory.
+    for n in 0..nsrv {
+        let mut used: usize = counts[n].iter().sum();
+        if used >= cap[n] {
+            continue;
+        }
+        let mut order: Vec<usize> = (0..nlay).collect();
+        order.sort_by(|&a, &b| v[n][b].partial_cmp(&v[n][a]).unwrap());
+        'fill: loop {
+            let mut any = false;
+            for &l in &order {
+                if used >= cap[n] {
+                    break 'fill;
+                }
+                if counts[n][l] < e_l {
+                    counts[n][l] += 1;
+                    used += 1;
+                    any = true;
+                }
+            }
+            if !any {
+                break;
+            }
+        }
+    }
+
+    counts
+}
+
+/// Per-layer shortfall: how many placements short of coverage each layer
+/// is (all zeros ⇒ Algorithm 2 can achieve full coverage).
+pub fn coverage_shortfall(model: &ModelConfig, counts: &ExpertCounts) -> Vec<usize> {
+    (0..model.num_layers)
+        .map(|l| {
+            let total: usize = counts.iter().map(|c| c[l]).sum();
+            model.num_experts.saturating_sub(total)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClusterConfig, ModelConfig, WorkloadConfig};
+    use crate::moe::ActivationStats;
+    use crate::trace::TaskProfile;
+
+    /// Stats shaped like the paper's specialized setup: each server sees a
+    /// different task's profile.
+    fn warm_stats(model: &ModelConfig, cluster: &ClusterConfig) -> ActivationStats {
+        let mut stats = ActivationStats::new(model, cluster.num_servers());
+        let w = WorkloadConfig::bigbench(10.0);
+        for (n, s) in w.streams.iter().enumerate() {
+            let prof = TaskProfile::build(s.task, model);
+            for l in 0..model.num_layers {
+                for e in 0..model.num_experts {
+                    stats.record(n, l, e, prof.dist[l][e] * 1000.0);
+                }
+            }
+        }
+        stats
+    }
+
+    #[test]
+    fn coverage_met_for_both_models() {
+        for m in [
+            ModelConfig::mixtral_8x7b_sim(),
+            ModelConfig::deepseek_v2_lite_sim(),
+        ] {
+            let c = ClusterConfig::edge_testbed_3_for(&m);
+            let stats = warm_stats(&m, &c);
+            let counts = expert_counts(&m, &c, &stats);
+            let shortfall = coverage_shortfall(&m, &counts);
+            assert!(
+                shortfall.iter().all(|&s| s == 0),
+                "{}: shortfall {:?}",
+                m.name,
+                shortfall
+            );
+        }
+    }
+
+    #[test]
+    fn respects_memory_capacity() {
+        let m = ModelConfig::deepseek_v2_lite_sim();
+        let c = ClusterConfig::edge_testbed_3_for(&m);
+        let counts = expert_counts(&m, &c, &warm_stats(&m, &c));
+        for (n, srv) in c.servers.iter().enumerate() {
+            let cap = (srv.total_mem() / m.expert_bytes) as usize;
+            let used: usize = counts[n].iter().sum();
+            assert!(used <= cap, "server {n}: {used} > {cap}");
+        }
+    }
+
+    #[test]
+    fn counts_capped_at_layer_size() {
+        let m = ModelConfig::mixtral_8x7b_sim();
+        let c = ClusterConfig::edge_testbed_3_for(&m);
+        let counts = expert_counts(&m, &c, &warm_stats(&m, &c));
+        for row in &counts {
+            assert!(row.iter().all(|&x| x <= m.num_experts));
+        }
+    }
+
+    #[test]
+    fn cold_start_is_uniformish() {
+        let m = ModelConfig::mixtral_8x7b_sim();
+        let c = ClusterConfig::edge_testbed_3_for(&m);
+        let stats = ActivationStats::new(&m, 3);
+        let counts = expert_counts(&m, &c, &stats);
+        assert!(coverage_shortfall(&m, &counts).iter().all(|&s| s == 0));
+        // per server, layer counts should be near-equal under uniform entropy
+        for row in &counts {
+            let min = row.iter().min().unwrap();
+            let max = row.iter().max().unwrap();
+            assert!(max - min <= 2, "cold start spread: {min}..{max}");
+        }
+    }
+
+    #[test]
+    fn entropy_skew_shifts_budget() {
+        // A server whose layer 0 is maximally diverse and layer 1 maximally
+        // skewed should get more slots for layer 0 *at initialization*.
+        // (Use a memory-tight synthetic model so Step-3 slack-filling
+        // doesn't mask the proportionality.)
+        let mut m = ModelConfig::mixtral_8x7b_sim();
+        m.num_layers = 2;
+        let mut c = ClusterConfig::edge_testbed_3_for(&m);
+        // shrink memory so capacity ≈ 8 experts per server
+        for s in &mut c.servers {
+            for g in &mut s.gpus {
+                g.mem_bytes = m.expert_bytes * 4;
+            }
+        }
+        let mut stats = ActivationStats::new(&m, 3);
+        for n in 0..3 {
+            for e in 0..8 {
+                stats.record(n, 0, e, 100.0); // uniform => entropy 3
+            }
+            stats.record(n, 1, 0, 800.0); // skewed => entropy ~0
+        }
+        let counts = expert_counts(&m, &c, &stats);
+        // Cluster-wide, the diverse layer must end up with at least as many
+        // placements as the skewed one (coverage forces a floor of E_l on
+        // both, so the comparison is on totals, not per server — the
+        // borrow loop can pull replicas from any server).
+        let t0: usize = counts.iter().map(|c| c[0]).sum();
+        let t1: usize = counts.iter().map(|c| c[1]).sum();
+        assert!(t0 >= t1, "uniform layer got {t0}, skewed got {t1}");
+        // coverage still met for both layers
+        assert!(coverage_shortfall(&m, &counts).iter().all(|&s| s == 0));
+    }
+
+    #[test]
+    fn infeasible_cluster_reports_shortfall() {
+        let m = ModelConfig::mixtral_8x7b_sim();
+        let mut c = ClusterConfig::edge_testbed_3_for(&m);
+        for s in &mut c.servers {
+            for g in &mut s.gpus {
+                g.mem_bytes = m.expert_bytes * 2; // 8 slots total << 256 needed
+            }
+        }
+        let stats = ActivationStats::new(&m, 3);
+        let counts = expert_counts(&m, &c, &stats);
+        let shortfall = coverage_shortfall(&m, &counts);
+        assert!(shortfall.iter().any(|&s| s > 0));
+        // but capacity is still respected
+        for (n, srv) in c.servers.iter().enumerate() {
+            let cap = (srv.total_mem() / m.expert_bytes) as usize;
+            assert!(counts[n].iter().sum::<usize>() <= cap);
+        }
+    }
+
+    #[test]
+    fn slack_is_spent_when_available() {
+        // edge testbed has >1.1x headroom: total replicas should exceed
+        // bare coverage (duplicates exist).
+        let m = ModelConfig::deepseek_v2_lite_sim();
+        let c = ClusterConfig::edge_testbed_3_for(&m);
+        let counts = expert_counts(&m, &c, &warm_stats(&m, &c));
+        let total: usize = counts.iter().flatten().sum();
+        assert!(
+            total > m.total_experts(),
+            "expected duplicates: {total} <= {}",
+            m.total_experts()
+        );
+    }
+}

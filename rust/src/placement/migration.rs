@@ -1,0 +1,227 @@
+//! **Expert migration** (§III-C3): migration cost (Eq. 3) and the adoption
+//! rule (Eq. 4).
+//!
+//! Every `interval_s` the global scheduler re-runs the placement pipeline on
+//! fresh statistics and adopts the candidate only if the modeled saving in
+//! remote-invocation cost over the next interval outweighs the one-time
+//! transfer cost:
+//!
+//! `C(P') + T_mig(P, P') < C(P)` with `C(·)` converted to seconds using the
+//! historically observed per-remote-invocation penalty (the paper's
+//! "historical communication and computation time ... as estimation
+//! metrics").
+
+use crate::config::{ClusterConfig, ModelConfig};
+use crate::moe::ActivationStats;
+use crate::placement::{objective, Placement};
+
+/// Cost-model context for the Eq. 4 decision.
+#[derive(Debug, Clone)]
+pub struct MigrationCtx {
+    /// Length of the statistics window the `stats` were accumulated over
+    /// (converts mass to a rate).
+    pub window_s: f64,
+    /// Horizon the new placement is expected to serve (the paper's 5-min
+    /// re-evaluation interval).
+    pub horizon_s: f64,
+    /// Historically observed extra latency per remote token-invocation
+    /// (seconds) — maintained by the coordinator from engine observability.
+    pub remote_penalty_s: f64,
+}
+
+impl Default for MigrationCtx {
+    fn default() -> Self {
+        MigrationCtx {
+            window_s: 300.0,
+            horizon_s: 300.0,
+            remote_penalty_s: 2.0e-3,
+        }
+    }
+}
+
+/// Eq. 3: Σ over newly-placed replicas of `m_e / speed_{n,g}`.
+///
+/// `speed_{n,g}` is the paper's "I/O bandwidth of GPU g on server n":
+/// DanceMoE is built on MoE-Infinity, so every server keeps the *full*
+/// expert set in host RAM and a migration only re-loads weights host→device
+/// over PCIe — this is what makes the mechanism "lightweight" (no expert
+/// weights ever cross the network; only activations do, on the request
+/// path).
+pub fn migration_cost_s(
+    old: &Placement,
+    new: &Placement,
+    model: &ModelConfig,
+    cluster: &ClusterConfig,
+) -> f64 {
+    let mut total = 0.0;
+    for (s, g, _l, _e) in old.added_replicas(new) {
+        let pcie = cluster.servers[s].gpus[g].pcie_bps;
+        total += model.expert_bytes as f64 / pcie;
+    }
+    total
+}
+
+/// Expected remote-invocation cost of a placement over the horizon, in
+/// seconds (Eq. 2 mass → rate → time).
+pub fn expected_cost_s(
+    p: &Placement,
+    stats: &ActivationStats,
+    ctx: &MigrationCtx,
+) -> f64 {
+    let mass = objective::remote_mass(p, stats);
+    let rate = mass / ctx.window_s.max(1e-9);
+    rate * ctx.horizon_s * ctx.remote_penalty_s
+}
+
+/// The Eq. 4 decision with its components, for observability.
+#[derive(Debug, Clone)]
+pub struct MigrationDecision {
+    pub adopt: bool,
+    pub cost_old_s: f64,
+    pub cost_new_s: f64,
+    pub t_mig_s: f64,
+    pub replicas_moved: usize,
+}
+
+/// Evaluate Eq. 4: adopt `new` iff `C(new) + T_mig < C(old)`.
+pub fn should_migrate(
+    old: &Placement,
+    new: &Placement,
+    model: &ModelConfig,
+    cluster: &ClusterConfig,
+    stats: &ActivationStats,
+    ctx: &MigrationCtx,
+) -> MigrationDecision {
+    let cost_old_s = expected_cost_s(old, stats, ctx);
+    let cost_new_s = expected_cost_s(new, stats, ctx);
+    let t_mig_s = migration_cost_s(old, new, model, cluster);
+    let replicas_moved = old.added_replicas(new).len();
+    MigrationDecision {
+        adopt: cost_new_s + t_mig_s < cost_old_s,
+        cost_old_s,
+        cost_new_s,
+        t_mig_s,
+        replicas_moved,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClusterConfig, ModelConfig};
+    use crate::moe::ActivationStats;
+    use crate::placement::{dancemoe_place, uniform};
+    use crate::trace::TaskProfile;
+    use crate::config::{TaskKind, WorkloadConfig};
+
+    fn warm(m: &ModelConfig, tasks: &[TaskKind]) -> ActivationStats {
+        let mut stats = ActivationStats::new(m, tasks.len());
+        for (n, &t) in tasks.iter().enumerate() {
+            let prof = TaskProfile::build(t, m);
+            for l in 0..m.num_layers {
+                for e in 0..m.num_experts {
+                    stats.record(n, l, e, prof.dist[l][e] * 1000.0);
+                }
+            }
+        }
+        stats
+    }
+
+    fn bigbench_tasks() -> Vec<TaskKind> {
+        WorkloadConfig::bigbench(10.0)
+            .streams
+            .iter()
+            .map(|s| s.task)
+            .collect()
+    }
+
+    #[test]
+    fn identical_placements_cost_zero_and_rejected() {
+        let m = ModelConfig::mixtral_8x7b_sim();
+        let c = ClusterConfig::edge_testbed_3_for(&m);
+        let stats = warm(&m, &bigbench_tasks());
+        let p = dancemoe_place(&m, &c, &stats);
+        let d = should_migrate(&p, &p, &m, &c, &stats, &MigrationCtx::default());
+        assert_eq!(d.t_mig_s, 0.0);
+        assert_eq!(d.replicas_moved, 0);
+        assert!(!d.adopt, "no-op migration must not be adopted");
+    }
+
+    #[test]
+    fn uniform_to_dancemoe_is_adopted_under_skew() {
+        // Under strongly task-skewed stats, migrating Uniform → DanceMoE
+        // saves enough remote cost to pay the transfer bill.
+        let m = ModelConfig::deepseek_v2_lite_sim();
+        let c = ClusterConfig::edge_testbed_3_for(&m);
+        let stats = warm(&m, &bigbench_tasks());
+        let old = uniform::place(&m, &c);
+        let new = dancemoe_place(&m, &c, &stats);
+        // Rates matching the paper's testbed: ~30 req/5min × ~150 tokens
+        let mut scaled = stats.clone();
+        for s in &mut scaled.servers {
+            let factor = 30.0 * 150.0 / s.total.max(1.0);
+            for l in &mut s.freq {
+                l.iter_mut().for_each(|f| *f *= factor);
+            }
+            s.total = s.freq.iter().flatten().sum();
+        }
+        let d = should_migrate(
+            &old,
+            &new,
+            &m,
+            &c,
+            &scaled,
+            &MigrationCtx::default(),
+        );
+        assert!(d.cost_new_s < d.cost_old_s);
+        assert!(d.t_mig_s > 0.0);
+        assert!(
+            d.adopt,
+            "expected adoption: old {:.2}s new {:.2}s mig {:.2}s",
+            d.cost_old_s, d.cost_new_s, d.t_mig_s
+        );
+    }
+
+    #[test]
+    fn tiny_gain_is_rejected() {
+        // If stats are nearly empty, savings ≈ 0 < T_mig  ⇒ reject.
+        let m = ModelConfig::mixtral_8x7b_sim();
+        let c = ClusterConfig::edge_testbed_3_for(&m);
+        let mut stats = ActivationStats::new(&m, 3);
+        stats.record(0, 0, 0, 1.0); // negligible demand
+        let old = uniform::place(&m, &c);
+        let new = dancemoe_place(&m, &c, &stats);
+        let d = should_migrate(&old, &new, &m, &c, &stats, &MigrationCtx::default());
+        assert!(!d.adopt, "negligible saving must not trigger migration");
+    }
+
+    #[test]
+    fn migration_cost_scales_with_moved_bytes() {
+        let m = ModelConfig::mixtral_8x7b_sim();
+        let c = ClusterConfig::edge_testbed_3_for(&m);
+        let empty = crate::placement::Placement::new(&m, &c);
+        let full = uniform::place(&m, &c);
+        let cost = migration_cost_s(&empty, &full, &m, &c);
+        // all 256 experts load host→device over PCIe (Eq. 3's speed_{n,g}):
+        // 256 × 352 MB / 16 GB/s ≈ 5.6 s — "lightweight" migration.
+        let expect = m.total_experts() as f64 * m.expert_bytes as f64
+            / crate::config::presets::PCIE_BPS;
+        assert!((cost - expect).abs() / expect < 1e-6);
+        assert!(cost < 10.0, "migration must be lightweight, got {cost}s");
+    }
+
+    #[test]
+    fn replica_additions_priced_removals_free() {
+        let m = ModelConfig::mixtral_8x7b_sim();
+        let c = ClusterConfig::edge_testbed_3_for(&m);
+        let mut old = crate::placement::Placement::new(&m, &c);
+        let mut new = crate::placement::Placement::new(&m, &c);
+        // old has an expert new drops (free), new adds one replica (paid)
+        old.place(0, 0, 1, 1).unwrap();
+        new.place(2, 1, 0, 0).unwrap();
+        let cost = migration_cost_s(&old, &new, &m, &c);
+        let pcie_cost =
+            m.expert_bytes as f64 / c.servers[2].gpus[1].pcie_bps;
+        assert!((cost - pcie_cost).abs() / pcie_cost < 1e-9);
+    }
+}

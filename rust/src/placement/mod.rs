@@ -1,0 +1,477 @@
+//! Expert placement: the paper's core contribution.
+//!
+//! A [`Placement`] is the binary tensor `z_{n,g}^e` of §III-B — which
+//! (layer, expert) pairs live on which GPU of which server — plus memory
+//! accounting against the paper-scale expert footprints.
+//!
+//! Submodules:
+//! - [`entropy_alloc`] — **Algorithm 1**: layer-wise expert *count*
+//!   allocation per server (entropy-proportional, coverage-rebalanced),
+//! - [`assign`] — **Algorithm 2**: expert-to-server assignment (greedy
+//!   top-frequency + duplicate-replacement coverage repair) and GPU packing,
+//! - [`objective`] — the proxy objective of Eq. 2 and local-utility math,
+//! - [`migration`] — migration cost Eq. 3 and the adoption rule Eq. 4,
+//! - [`uniform`], [`redundance`], [`smartmoe`], [`eplb`] — the four
+//!   baselines of §IV-A.
+
+pub mod assign;
+pub mod entropy_alloc;
+pub mod eplb;
+pub mod migration;
+pub mod objective;
+pub mod redundance;
+pub mod smartmoe;
+pub mod uniform;
+
+use crate::config::{ClusterConfig, ModelConfig};
+use crate::moe::{ActivationStats, ExpertId, LayerId, ServerId};
+use crate::{Error, Result};
+
+/// Which placement algorithm to run (CLI / experiment selector).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlacementAlgo {
+    Uniform,
+    Redundance,
+    SmartMoE,
+    Eplb,
+    DanceMoE,
+}
+
+impl PlacementAlgo {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlacementAlgo::Uniform => "Uniform",
+            PlacementAlgo::Redundance => "Redundance",
+            PlacementAlgo::SmartMoE => "SmartMoE",
+            PlacementAlgo::Eplb => "EPLB",
+            PlacementAlgo::DanceMoE => "DanceMoE",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Result<PlacementAlgo> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "uniform" => PlacementAlgo::Uniform,
+            "redundance" => PlacementAlgo::Redundance,
+            "smartmoe" => PlacementAlgo::SmartMoE,
+            "eplb" => PlacementAlgo::Eplb,
+            "dancemoe" | "ours" => PlacementAlgo::DanceMoE,
+            other => {
+                return Err(Error::Placement(format!(
+                    "unknown placement algorithm '{other}'"
+                )))
+            }
+        })
+    }
+
+    pub fn all() -> [PlacementAlgo; 5] {
+        [
+            PlacementAlgo::Uniform,
+            PlacementAlgo::Redundance,
+            PlacementAlgo::SmartMoE,
+            PlacementAlgo::Eplb,
+            PlacementAlgo::DanceMoE,
+        ]
+    }
+
+    /// Compute a placement with this algorithm.
+    pub fn compute(
+        &self,
+        model: &ModelConfig,
+        cluster: &ClusterConfig,
+        stats: &ActivationStats,
+        seed: u64,
+    ) -> Placement {
+        match self {
+            PlacementAlgo::Uniform => uniform::place(model, cluster),
+            PlacementAlgo::Redundance => {
+                redundance::place(model, cluster, seed)
+            }
+            PlacementAlgo::SmartMoE => smartmoe::place(model, cluster, stats),
+            PlacementAlgo::Eplb => eplb::place(model, cluster, stats),
+            PlacementAlgo::DanceMoE => dancemoe_place(model, cluster, stats),
+        }
+    }
+}
+
+/// The full DanceMoE pipeline: Algorithm 1 then Algorithm 2.
+pub fn dancemoe_place(
+    model: &ModelConfig,
+    cluster: &ClusterConfig,
+    stats: &ActivationStats,
+) -> Placement {
+    let counts = entropy_alloc::expert_counts(model, cluster, stats);
+    assign::assign(model, cluster, stats, &counts)
+}
+
+/// The binary placement tensor `z_{n,g}^e` with memory accounting.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Placement {
+    pub num_servers: usize,
+    /// GPUs per server.
+    pub gpus: Vec<usize>,
+    pub num_layers: usize,
+    pub num_experts: usize,
+    pub expert_bytes: u64,
+    /// Memory capacity per (server, gpu).
+    pub mem_cap: Vec<Vec<u64>>,
+    /// `assign[server][gpu][eid]` — eid = layer * num_experts + expert.
+    assign: Vec<Vec<Vec<bool>>>,
+    /// Cached per-server union over GPUs.
+    server_has: Vec<Vec<bool>>,
+    /// Memory used per (server, gpu).
+    mem_used: Vec<Vec<u64>>,
+    /// Cached replica list per eid — the router's hot lookup (O(replicas)
+    /// instead of an O(servers × GPUs) scan per remote invocation).
+    owner_cache: Vec<Vec<(ServerId, usize)>>,
+}
+
+impl Placement {
+    /// Empty placement shaped for (model, cluster).
+    pub fn new(model: &ModelConfig, cluster: &ClusterConfig) -> Placement {
+        let total = model.total_experts();
+        let gpus: Vec<usize> =
+            cluster.servers.iter().map(|s| s.gpus.len()).collect();
+        Placement {
+            num_servers: cluster.num_servers(),
+            assign: gpus
+                .iter()
+                .map(|&g| vec![vec![false; total]; g])
+                .collect(),
+            server_has: vec![vec![false; total]; cluster.num_servers()],
+            mem_used: gpus.iter().map(|&g| vec![0; g]).collect(),
+            owner_cache: vec![Vec::new(); total],
+            mem_cap: cluster
+                .servers
+                .iter()
+                .map(|s| s.gpus.iter().map(|g| g.mem_bytes).collect())
+                .collect(),
+            gpus,
+            num_layers: model.num_layers,
+            num_experts: model.num_experts,
+            expert_bytes: model.expert_bytes,
+        }
+    }
+
+    #[inline]
+    pub fn eid(&self, layer: LayerId, expert: ExpertId) -> usize {
+        layer * self.num_experts + expert
+    }
+
+    /// Place an expert on a GPU; errors if memory would overflow or the
+    /// expert is already there.
+    pub fn place(
+        &mut self,
+        server: ServerId,
+        gpu: usize,
+        layer: LayerId,
+        expert: ExpertId,
+    ) -> Result<()> {
+        let eid = self.eid(layer, expert);
+        if self.assign[server][gpu][eid] {
+            return Err(Error::Placement(format!(
+                "expert l{layer}e{expert} already on s{server}g{gpu}"
+            )));
+        }
+        if self.mem_used[server][gpu] + self.expert_bytes
+            > self.mem_cap[server][gpu]
+        {
+            return Err(Error::Placement(format!(
+                "s{server}g{gpu} out of memory placing l{layer}e{expert}"
+            )));
+        }
+        self.assign[server][gpu][eid] = true;
+        self.server_has[server][eid] = true;
+        self.mem_used[server][gpu] += self.expert_bytes;
+        self.owner_cache[eid].push((server, gpu));
+        Ok(())
+    }
+
+    /// Remove an expert from a GPU (no-op error if absent).
+    pub fn remove(
+        &mut self,
+        server: ServerId,
+        gpu: usize,
+        layer: LayerId,
+        expert: ExpertId,
+    ) -> Result<()> {
+        let eid = self.eid(layer, expert);
+        if !self.assign[server][gpu][eid] {
+            return Err(Error::Placement(format!(
+                "expert l{layer}e{expert} not on s{server}g{gpu}"
+            )));
+        }
+        self.assign[server][gpu][eid] = false;
+        self.mem_used[server][gpu] -= self.expert_bytes;
+        self.server_has[server][eid] =
+            (0..self.gpus[server]).any(|g| self.assign[server][g][eid]);
+        self.owner_cache[eid].retain(|&o| o != (server, gpu));
+        Ok(())
+    }
+
+    /// Is the expert resident anywhere on `server`? (The `1_remote`
+    /// indicator of Eq. 2 is the negation of this.)
+    #[inline]
+    pub fn server_has(
+        &self,
+        server: ServerId,
+        layer: LayerId,
+        expert: ExpertId,
+    ) -> bool {
+        self.server_has[server][self.eid(layer, expert)]
+    }
+
+    #[inline]
+    pub fn gpu_has(
+        &self,
+        server: ServerId,
+        gpu: usize,
+        layer: LayerId,
+        expert: ExpertId,
+    ) -> bool {
+        self.assign[server][gpu][self.eid(layer, expert)]
+    }
+
+    /// All (server, gpu) replicas of an expert (cached; insertion order).
+    pub fn owners(
+        &self,
+        layer: LayerId,
+        expert: ExpertId,
+    ) -> Vec<(ServerId, usize)> {
+        self.owner_cache[self.eid(layer, expert)].clone()
+    }
+
+    /// Replica list without the clone — the engine's hot-path lookup.
+    #[inline]
+    pub fn owners_ref(
+        &self,
+        layer: LayerId,
+        expert: ExpertId,
+    ) -> &[(ServerId, usize)] {
+        &self.owner_cache[self.eid(layer, expert)]
+    }
+
+    /// Number of servers holding the expert.
+    pub fn coverage(&self, layer: LayerId, expert: ExpertId) -> usize {
+        let eid = self.eid(layer, expert);
+        // distinct servers among cached owners (replicas within one server
+        // are prevented by the algorithms but tolerated here)
+        let owners = &self.owner_cache[eid];
+        (0..self.num_servers)
+            .filter(|&s| owners.iter().any(|&(os, _)| os == s))
+            .count()
+    }
+
+    /// Experts of `layer` resident on `server`.
+    pub fn server_layer_experts(
+        &self,
+        server: ServerId,
+        layer: LayerId,
+    ) -> Vec<ExpertId> {
+        (0..self.num_experts)
+            .filter(|&e| self.server_has(server, layer, e))
+            .collect()
+    }
+
+    /// Count of expert replicas on a server at a layer (across its GPUs).
+    pub fn server_layer_count(&self, server: ServerId, layer: LayerId) -> usize {
+        (0..self.gpus[server])
+            .map(|g| {
+                (0..self.num_experts)
+                    .filter(|&e| self.gpu_has(server, g, layer, e))
+                    .count()
+            })
+            .sum()
+    }
+
+    pub fn mem_used(&self, server: ServerId, gpu: usize) -> u64 {
+        self.mem_used[server][gpu]
+    }
+
+    pub fn mem_free(&self, server: ServerId, gpu: usize) -> u64 {
+        self.mem_cap[server][gpu] - self.mem_used[server][gpu]
+    }
+
+    /// GPU (on any server) with the most free memory that can still fit an
+    /// expert; used by coverage-repair fallbacks.
+    pub fn most_free_gpu(&self) -> Option<(ServerId, usize)> {
+        let mut best: Option<(ServerId, usize, u64)> = None;
+        for s in 0..self.num_servers {
+            for g in 0..self.gpus[s] {
+                let free = self.mem_free(s, g);
+                if free >= self.expert_bytes
+                    && best.map(|(_, _, bf)| free > bf).unwrap_or(true)
+                {
+                    best = Some((s, g, free));
+                }
+            }
+        }
+        best.map(|(s, g, _)| (s, g))
+    }
+
+    /// Total replicas placed (Σ z).
+    pub fn total_replicas(&self) -> usize {
+        self.assign
+            .iter()
+            .flatten()
+            .map(|v| v.iter().filter(|&&b| b).count())
+            .sum()
+    }
+
+    /// Full-coverage check: every (layer, expert) on ≥ 1 GPU (first
+    /// constraint of §III-B). Returns the missing pairs.
+    pub fn missing_experts(&self) -> Vec<(LayerId, ExpertId)> {
+        let mut out = Vec::new();
+        for l in 0..self.num_layers {
+            for e in 0..self.num_experts {
+                if self.coverage(l, e) == 0 {
+                    out.push((l, e));
+                }
+            }
+        }
+        out
+    }
+
+    /// Validate both §III-B constraints (coverage + per-GPU memory).
+    pub fn validate(&self) -> Result<()> {
+        let missing = self.missing_experts();
+        if !missing.is_empty() {
+            return Err(Error::Placement(format!(
+                "{} experts unplaced (first: l{}e{})",
+                missing.len(),
+                missing[0].0,
+                missing[0].1
+            )));
+        }
+        for s in 0..self.num_servers {
+            for g in 0..self.gpus[s] {
+                if self.mem_used[s][g] > self.mem_cap[s][g] {
+                    return Err(Error::Placement(format!(
+                        "s{s}g{g} over memory: {} > {}",
+                        self.mem_used[s][g], self.mem_cap[s][g]
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Replicas present in `new` but not in `self` — the transfers a
+    /// migration must perform (Eq. 3's `z != z'` set, additions only;
+    /// removals are free).
+    pub fn added_replicas(
+        &self,
+        new: &Placement,
+    ) -> Vec<(ServerId, usize, LayerId, ExpertId)> {
+        let mut out = Vec::new();
+        for s in 0..self.num_servers {
+            for g in 0..self.gpus[s] {
+                for l in 0..self.num_layers {
+                    for e in 0..self.num_experts {
+                        let eid = self.eid(l, e);
+                        if new.assign[s][g][eid] && !self.assign[s][g][eid] {
+                            out.push((s, g, l, e));
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClusterConfig, ModelConfig};
+
+    fn setup() -> (ModelConfig, ClusterConfig, Placement) {
+        let m = ModelConfig::mixtral_8x7b_sim();
+        let c = ClusterConfig::edge_testbed_3_for(&m);
+        let p = Placement::new(&m, &c);
+        (m, c, p)
+    }
+
+    #[test]
+    fn place_remove_roundtrip() {
+        let (_, _, mut p) = setup();
+        assert!(!p.server_has(0, 3, 5));
+        p.place(0, 0, 3, 5).unwrap();
+        assert!(p.server_has(0, 3, 5));
+        assert!(p.gpu_has(0, 0, 3, 5));
+        assert_eq!(p.owners(3, 5), vec![(0, 0)]);
+        assert_eq!(p.coverage(3, 5), 1);
+        assert_eq!(p.mem_used(0, 0), p.expert_bytes);
+        p.remove(0, 0, 3, 5).unwrap();
+        assert!(!p.server_has(0, 3, 5));
+        assert_eq!(p.mem_used(0, 0), 0);
+    }
+
+    #[test]
+    fn double_place_and_missing_remove_error() {
+        let (_, _, mut p) = setup();
+        p.place(1, 0, 0, 0).unwrap();
+        assert!(p.place(1, 0, 0, 0).is_err());
+        assert!(p.remove(2, 0, 0, 0).is_err());
+    }
+
+    #[test]
+    fn memory_limit_enforced() {
+        let (m, c, mut p) = setup();
+        let cap = c.servers[0].gpus[0].mem_bytes;
+        let fits = (cap / m.expert_bytes) as usize;
+        let mut placed = 0;
+        'outer: for l in 0..m.num_layers {
+            for e in 0..m.num_experts {
+                match p.place(0, 0, l, e) {
+                    Ok(()) => placed += 1,
+                    Err(_) => break 'outer,
+                }
+            }
+        }
+        assert_eq!(placed, fits);
+        assert!(p.mem_free(0, 0) < m.expert_bytes);
+    }
+
+    #[test]
+    fn server_has_union_over_gpus() {
+        let (_, _, mut p) = setup();
+        // server 2 has two GPUs
+        p.place(2, 1, 5, 1).unwrap();
+        assert!(p.server_has(2, 5, 1));
+        assert!(!p.gpu_has(2, 0, 5, 1));
+        p.remove(2, 1, 5, 1).unwrap();
+        assert!(!p.server_has(2, 5, 1));
+    }
+
+    #[test]
+    fn validate_reports_missing_and_overflow() {
+        let (_, _, p) = setup();
+        let err = p.validate().unwrap_err().to_string();
+        assert!(err.contains("unplaced"));
+    }
+
+    #[test]
+    fn added_replicas_diff() {
+        let (m, c, mut a) = setup();
+        let mut b = Placement::new(&m, &c);
+        a.place(0, 0, 0, 0).unwrap();
+        b.place(0, 0, 0, 0).unwrap();
+        b.place(1, 0, 0, 1).unwrap();
+        let adds = a.added_replicas(&b);
+        assert_eq!(adds, vec![(1, 0, 0, 1)]);
+        // removals are not counted
+        assert!(b.added_replicas(&a).is_empty());
+    }
+
+    #[test]
+    fn algo_names_roundtrip() {
+        for a in PlacementAlgo::all() {
+            assert_eq!(
+                PlacementAlgo::from_name(&a.name().to_ascii_lowercase())
+                    .unwrap(),
+                a
+            );
+        }
+        assert!(PlacementAlgo::from_name("magic").is_err());
+    }
+}

@@ -1,0 +1,100 @@
+//! **Redundance baseline** (§IV-A, proposed by the paper as a heuristic):
+//! start from a random full-coverage layout, then randomly duplicate
+//! experts into every GPU's remaining capacity.
+//!
+//! With a fixed seed this also serves as the paper's §II-B "Naive
+//! Collaboration" setting (random expert deployment + remote calls).
+
+use crate::config::{ClusterConfig, ModelConfig};
+use crate::placement::uniform::gpu_list;
+use crate::placement::Placement;
+use crate::util::rng::Rng;
+
+pub fn place(model: &ModelConfig, cluster: &ClusterConfig, seed: u64) -> Placement {
+    let mut rng = Rng::new(seed ^ 0xda9ce);
+    let mut p = Placement::new(model, cluster);
+    let gpus = gpu_list(cluster);
+    let ng = gpus.len();
+
+    // ---- random full coverage: shuffled experts dealt to shuffled GPUs --
+    for l in 0..model.num_layers {
+        let mut experts: Vec<usize> = (0..model.num_experts).collect();
+        rng.shuffle(&mut experts);
+        let mut order: Vec<usize> = (0..ng).collect();
+        rng.shuffle(&mut order);
+        for (i, &e) in experts.iter().enumerate() {
+            for off in 0..ng {
+                let (s, g) = gpus[order[(i + off) % ng]];
+                if p.place(s, g, l, e).is_ok() {
+                    break;
+                }
+            }
+        }
+    }
+
+    // ---- fill remaining capacity with random duplicates ------------------
+    for &(s, g) in &gpus {
+        let mut attempts = 0;
+        while p.mem_free(s, g) >= model.expert_bytes
+            && attempts < model.total_experts() * 4
+        {
+            attempts += 1;
+            let l = rng.below(model.num_layers);
+            let e = rng.below(model.num_experts);
+            if !p.server_has(s, l, e) {
+                let _ = p.place(s, g, l, e);
+            }
+        }
+    }
+    // random dealing can strand coverage under tight heterogeneous memory
+    let empty = crate::moe::ActivationStats::new(model, cluster.num_servers());
+    crate::placement::assign::repair_coverage(&mut p, &empty);
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClusterConfig, ModelConfig};
+
+    #[test]
+    fn covers_and_duplicates() {
+        for m in [
+            ModelConfig::mixtral_8x7b_sim(),
+            ModelConfig::deepseek_v2_lite_sim(),
+        ] {
+            let c = ClusterConfig::edge_testbed_3_for(&m);
+            let p = place(&m, &c, 1);
+            p.validate().unwrap();
+            assert!(
+                p.total_replicas() > m.total_experts(),
+                "{}: no duplication happened",
+                m.name
+            );
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let m = ModelConfig::mixtral_8x7b_sim();
+        let c = ClusterConfig::edge_testbed_3_for(&m);
+        assert_eq!(place(&m, &c, 5), place(&m, &c, 5));
+        assert_ne!(place(&m, &c, 5), place(&m, &c, 6));
+    }
+
+    #[test]
+    fn no_expert_twice_on_one_server() {
+        let m = ModelConfig::deepseek_v2_lite_sim();
+        let c = ClusterConfig::edge_testbed_3_for(&m);
+        let p = place(&m, &c, 2);
+        for n in 0..p.num_servers {
+            for l in 0..m.num_layers {
+                assert_eq!(
+                    p.server_layer_experts(n, l).len(),
+                    p.server_layer_count(n, l),
+                    "duplicate within server {n} layer {l}"
+                );
+            }
+        }
+    }
+}

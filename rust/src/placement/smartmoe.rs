@@ -1,0 +1,126 @@
+//! **SmartMoE baseline** (§IV-A): the placement module of SmartMoE
+//! (Zhai et al., ATC'23), re-implemented for heterogeneous clusters as the
+//! paper did.
+//!
+//! SmartMoE balances *workload* across GPUs: per layer, experts (weighted
+//! by their cluster-wide activation load) are assigned to GPUs by greedy
+//! longest-processing-time scheduling so every GPU carries roughly equal
+//! load, normalized by its compute speed. No duplication; locality is not
+//! considered — exactly the property DanceMoE's evaluation exploits.
+
+use crate::config::{ClusterConfig, ModelConfig};
+use crate::moe::ActivationStats;
+use crate::placement::uniform::gpu_list;
+use crate::placement::Placement;
+use crate::util::stats::argsort_desc;
+
+pub fn place(
+    model: &ModelConfig,
+    cluster: &ClusterConfig,
+    stats: &ActivationStats,
+) -> Placement {
+    let mut p = Placement::new(model, cluster);
+    let gpus = gpu_list(cluster);
+    let speeds: Vec<f64> = gpus
+        .iter()
+        .map(|&(s, g)| cluster.servers[s].gpus[g].flops)
+        .collect();
+    // accumulated load per GPU across layers (normalized by speed)
+    let mut load = vec![0.0f64; gpus.len()];
+
+    for l in 0..model.num_layers {
+        let mut w = stats.global_load(l);
+        // cold start: pretend uniform load so the layout is still balanced
+        if w.iter().sum::<f64>() <= 0.0 {
+            w = vec![1.0; model.num_experts];
+        }
+        // LPT: heaviest expert first onto the least-loaded feasible GPU
+        for e in argsort_desc(&w) {
+            let mut order: Vec<usize> = (0..gpus.len()).collect();
+            order.sort_by(|&a, &b| {
+                load[a].partial_cmp(&load[b]).unwrap().then(a.cmp(&b))
+            });
+            for gi in order {
+                let (s, g) = gpus[gi];
+                if p.place(s, g, l, e).is_ok() {
+                    load[gi] += w[e] / (speeds[gi] / speeds[0].max(1.0));
+                    break;
+                }
+            }
+        }
+    }
+    // LPT can strand a cold expert when memory runs out mid-layer on tight
+    // heterogeneous clusters; restore coverage where possible.
+    crate::placement::assign::repair_coverage(&mut p, stats);
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClusterConfig, ModelConfig, WorkloadConfig};
+    use crate::trace::TaskProfile;
+
+    fn warm(m: &ModelConfig) -> ActivationStats {
+        let mut stats = ActivationStats::new(m, 3);
+        for (n, s) in WorkloadConfig::bigbench(10.0).streams.iter().enumerate()
+        {
+            let prof = TaskProfile::build(s.task, m);
+            for l in 0..m.num_layers {
+                for e in 0..m.num_experts {
+                    stats.record(n, l, e, prof.dist[l][e] * 1000.0);
+                }
+            }
+        }
+        stats
+    }
+
+    #[test]
+    fn covers_without_duplication() {
+        for m in [
+            ModelConfig::mixtral_8x7b_sim(),
+            ModelConfig::deepseek_v2_lite_sim(),
+        ] {
+            let c = ClusterConfig::edge_testbed_3_for(&m);
+            let p = place(&m, &c, &warm(&m));
+            p.validate().unwrap();
+            assert_eq!(p.total_replicas(), m.total_experts());
+        }
+    }
+
+    #[test]
+    fn load_balanced_across_gpus() {
+        let m = ModelConfig::deepseek_v2_lite_sim();
+        let c = ClusterConfig::edge_testbed_3_for(&m);
+        let stats = warm(&m);
+        let p = place(&m, &c, &stats);
+        // compute the realized per-GPU load
+        let gpus = gpu_list(&c);
+        let mut loads = vec![0.0; gpus.len()];
+        for l in 0..m.num_layers {
+            let w = stats.global_load(l);
+            for (gi, &(s, g)) in gpus.iter().enumerate() {
+                for e in 0..m.num_experts {
+                    if p.gpu_has(s, g, l, e) {
+                        loads[gi] += w[e];
+                    }
+                }
+            }
+        }
+        let max = loads.iter().cloned().fold(f64::MIN, f64::max);
+        let min = loads.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(
+            max / min < 1.6,
+            "imbalanced SmartMoE loads: {loads:?}"
+        );
+    }
+
+    #[test]
+    fn cold_start_covers() {
+        let m = ModelConfig::mixtral_8x7b_sim();
+        let c = ClusterConfig::edge_testbed_3_for(&m);
+        let stats = ActivationStats::new(&m, 3);
+        let p = place(&m, &c, &stats);
+        p.validate().unwrap();
+    }
+}

@@ -1,0 +1,100 @@
+//! **Uniform baseline** (§IV-A): experts are distributed evenly across all
+//! GPUs, no duplication — the expert-parallelism layout of Megatron-LM.
+//!
+//! Each layer's experts are dealt round-robin over the flattened GPU list,
+//! with the starting GPU rotated per layer so no GPU systematically gets
+//! the low-index experts.
+
+use crate::config::{ClusterConfig, ModelConfig};
+use crate::placement::Placement;
+
+/// Flattened (server, gpu) list for a cluster.
+pub fn gpu_list(cluster: &ClusterConfig) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    for (s, srv) in cluster.servers.iter().enumerate() {
+        for g in 0..srv.gpus.len() {
+            out.push((s, g));
+        }
+    }
+    out
+}
+
+pub fn place(model: &ModelConfig, cluster: &ClusterConfig) -> Placement {
+    let mut p = Placement::new(model, cluster);
+    let gpus = gpu_list(cluster);
+    let ng = gpus.len();
+    for l in 0..model.num_layers {
+        for e in 0..model.num_experts {
+            // rotate start per layer for fairness
+            let start = (e + l) % ng;
+            // first-fit from the rotated start (skips full GPUs)
+            let mut placed = false;
+            for off in 0..ng {
+                let (s, g) = gpus[(start + off) % ng];
+                if p.place(s, g, l, e).is_ok() {
+                    placed = true;
+                    break;
+                }
+            }
+            let _ = placed; // memory-infeasible clusters leave gaps
+        }
+    }
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClusterConfig, ModelConfig};
+
+    #[test]
+    fn covers_every_expert_exactly_once() {
+        for m in [
+            ModelConfig::mixtral_8x7b_sim(),
+            ModelConfig::deepseek_v2_lite_sim(),
+        ] {
+            let c = ClusterConfig::edge_testbed_3_for(&m);
+            let p = place(&m, &c);
+            p.validate().unwrap();
+            assert_eq!(p.total_replicas(), m.total_experts());
+            for l in 0..m.num_layers {
+                for e in 0..m.num_experts {
+                    assert_eq!(p.owners(l, e).len(), 1);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn balanced_across_gpus() {
+        let m = ModelConfig::mixtral_8x7b_sim();
+        let c = ClusterConfig::edge_testbed_3_for(&m);
+        let p = place(&m, &c);
+        // 256 experts over 4 GPUs => 64 each
+        let counts: Vec<usize> = gpu_list(&c)
+            .iter()
+            .map(|&(s, g)| {
+                (0..m.num_layers)
+                    .map(|l| {
+                        (0..m.num_experts)
+                            .filter(|&e| p.gpu_has(s, g, l, e))
+                            .count()
+                    })
+                    .sum()
+            })
+            .collect();
+        let min = counts.iter().min().unwrap();
+        let max = counts.iter().max().unwrap();
+        assert!(max - min <= 1, "counts {counts:?}");
+    }
+
+    #[test]
+    fn more_gpus_than_experts_per_layer() {
+        let m = ModelConfig::deepseek_v2_lite_sim(); // 64 experts/layer
+        let c = ClusterConfig::scaling(128, 500e6); // 128 GPUs
+        let p = place(&m, &c);
+        p.validate().unwrap();
+        // every expert exactly once even with excess GPUs
+        assert_eq!(p.total_replicas(), m.total_experts());
+    }
+}

@@ -1,0 +1,160 @@
+//! Artifact manifest: the index `python/compile/aot.py` writes next to the
+//! HLO text files.
+
+use std::path::Path;
+
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+/// One artifact's metadata.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: String,
+    pub piece: String,
+    pub batch: usize,
+    pub experts: usize,
+    /// input shapes (dims only; all f32 in v1)
+    pub inputs: Vec<Vec<usize>>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub batch_buckets: Vec<usize>,
+    pub hidden: usize,
+    pub ffn: usize,
+    pub entries: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let j = Json::read_file(path)?;
+        Manifest::from_json(&j)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Manifest> {
+        let entries = j
+            .req("artifacts")?
+            .as_arr()
+            .ok_or_else(|| Error::Json("artifacts not an array".into()))?
+            .iter()
+            .map(|a| {
+                let inputs = a
+                    .req("inputs")?
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(|spec| {
+                        // each input is [[dims...], "dtype"]
+                        spec.as_arr()
+                            .and_then(|pair| pair.first())
+                            .map(|dims| {
+                                dims.to_usize_vec().unwrap_or_default()
+                            })
+                            .unwrap_or_default()
+                    })
+                    .collect();
+                Ok(ArtifactEntry {
+                    name: a
+                        .req("name")?
+                        .as_str()
+                        .unwrap_or_default()
+                        .to_string(),
+                    file: a
+                        .req("file")?
+                        .as_str()
+                        .unwrap_or_default()
+                        .to_string(),
+                    piece: a
+                        .req("piece")?
+                        .as_str()
+                        .unwrap_or_default()
+                        .to_string(),
+                    batch: a.req("batch")?.as_usize().unwrap_or(0),
+                    experts: a.req("experts")?.as_usize().unwrap_or(0),
+                    inputs,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest {
+            batch_buckets: j.req("batch_buckets")?.to_usize_vec()?,
+            hidden: j.req("hidden")?.as_usize().unwrap_or(0),
+            ffn: j.req("ffn")?.as_usize().unwrap_or(0),
+            entries,
+        })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| {
+                Error::Runtime(format!("artifact '{name}' not in manifest"))
+            })
+    }
+
+    /// Artifact name for a piece at a batch bucket (gate also keyed by E).
+    pub fn name_for(&self, piece: &str, batch: usize, experts: usize) -> String {
+        let h = self.hidden;
+        let f = self.ffn;
+        match piece {
+            "gate" => format!("gate_h{h}_e{experts}_b{batch}"),
+            "expert" => format!("expert_h{h}_f{f}_b{batch}"),
+            "nonmoe" => format!("nonmoe_h{h}_b{batch}"),
+            "moe_layer_dense" => {
+                format!("moe_layer_dense_h{h}_f{f}_e{experts}_b{batch}")
+            }
+            other => format!("{other}_h{h}_b{batch}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_json() -> Json {
+        Json::parse(
+            r#"{
+              "version": 1, "batch_buckets": [1, 8, 32],
+              "hidden": 64, "ffn": 128, "dtype": "float32",
+              "artifacts": [
+                {"name": "gate_h64_e8_b8", "file": "gate_h64_e8_b8.hlo.txt",
+                 "piece": "gate", "batch": 8, "experts": 8,
+                 "inputs": [[[8, 64], "float32"], [[64, 8], "float32"]],
+                 "hlo_bytes": 100}
+              ]
+            }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let m = Manifest::from_json(&sample_json()).unwrap();
+        assert_eq!(m.batch_buckets, vec![1, 8, 32]);
+        assert_eq!(m.hidden, 64);
+        let e = m.get("gate_h64_e8_b8").unwrap();
+        assert_eq!(e.piece, "gate");
+        assert_eq!(e.inputs, vec![vec![8, 64], vec![64, 8]]);
+    }
+
+    #[test]
+    fn missing_artifact_errors() {
+        let m = Manifest::from_json(&sample_json()).unwrap();
+        assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn naming_scheme_matches_aot() {
+        let m = Manifest::from_json(&sample_json()).unwrap();
+        assert_eq!(m.name_for("gate", 8, 8), "gate_h64_e8_b8");
+        assert_eq!(m.name_for("expert", 32, 8), "expert_h64_f128_b32");
+        assert_eq!(m.name_for("nonmoe", 1, 64), "nonmoe_h64_b1");
+        assert_eq!(
+            m.name_for("moe_layer_dense", 8, 64),
+            "moe_layer_dense_h64_f128_e64_b8"
+        );
+    }
+}

@@ -1,0 +1,131 @@
+//! Deterministic synthetic model weights.
+//!
+//! The placement problem is independent of weight *values* (DESIGN.md §2),
+//! but the end-to-end example runs real numerics, so every server must
+//! materialize bit-identical weights for the experts it hosts. Weights are
+//! generated from a PRNG keyed by (model name, layer, expert, matrix) —
+//! any server can reconstruct any expert without communication.
+
+use crate::config::ModelConfig;
+use crate::util::rng::Rng;
+
+/// One expert's SwiGLU matrices (row-major f32).
+#[derive(Debug, Clone)]
+pub struct ExpertWeights {
+    pub w1: Vec<f32>, // [H, F]
+    pub w3: Vec<f32>, // [H, F]
+    pub w2: Vec<f32>, // [F, H]
+}
+
+/// One layer's non-expert weights.
+#[derive(Debug, Clone)]
+pub struct LayerWeights {
+    pub wg: Vec<f32>,    // [H, E]
+    pub wm: Vec<f32>,    // [H, H]
+    pub scale: Vec<f32>, // [H]
+}
+
+fn key(model: &ModelConfig, layer: usize, expert: usize, matrix: u64) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in model.name.bytes() {
+        h = (h ^ b as u64).wrapping_mul(0x1000_0000_01b3);
+    }
+    h ^ ((layer as u64) << 40) ^ ((expert as u64) << 20) ^ matrix
+}
+
+fn gen(rng: &mut Rng, n: usize, scale: f64) -> Vec<f32> {
+    (0..n).map(|_| (rng.normal() * scale) as f32).collect()
+}
+
+/// Weight std-dev: ~1/sqrt(H) keeps activations O(1) through the stack.
+fn wstd(model: &ModelConfig) -> f64 {
+    1.0 / (model.hidden as f64).sqrt()
+}
+
+/// Generate one expert's weights.
+pub fn expert_weights(
+    model: &ModelConfig,
+    layer: usize,
+    expert: usize,
+) -> ExpertWeights {
+    let (h, f) = (model.hidden, model.ffn);
+    let s = wstd(model);
+    ExpertWeights {
+        w1: gen(&mut Rng::new(key(model, layer, expert, 1)), h * f, s),
+        w3: gen(&mut Rng::new(key(model, layer, expert, 3)), h * f, s),
+        w2: gen(
+            &mut Rng::new(key(model, layer, expert, 2)),
+            f * h,
+            1.0 / (model.ffn as f64).sqrt(),
+        ),
+    }
+}
+
+/// Generate a layer's gate/mixer weights.
+pub fn layer_weights(model: &ModelConfig, layer: usize) -> LayerWeights {
+    let (h, e) = (model.hidden, model.num_experts);
+    let s = wstd(model);
+    LayerWeights {
+        wg: gen(&mut Rng::new(key(model, layer, 0, 10)), h * e, s),
+        wm: gen(&mut Rng::new(key(model, layer, 0, 11)), h * h, s),
+        scale: vec![1.0; h],
+    }
+}
+
+/// Deterministic input tokens for a request (the "prompt embedding").
+pub fn input_tokens(model: &ModelConfig, seed: u64, tokens: usize) -> Vec<f32> {
+    gen(&mut Rng::new(seed ^ 0x70ce55), tokens * model.hidden, 0.5)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+
+    #[test]
+    fn deterministic_and_distinct() {
+        let m = ModelConfig::tiny();
+        let a = expert_weights(&m, 0, 0);
+        let b = expert_weights(&m, 0, 0);
+        let c = expert_weights(&m, 0, 1);
+        let d = expert_weights(&m, 1, 0);
+        assert_eq!(a.w1, b.w1);
+        assert_eq!(a.w2, b.w2);
+        assert_ne!(a.w1, c.w1);
+        assert_ne!(a.w1, d.w1);
+        assert_ne!(a.w1, a.w3);
+    }
+
+    #[test]
+    fn shapes_match_model() {
+        let m = ModelConfig::tiny();
+        let e = expert_weights(&m, 2, 3);
+        assert_eq!(e.w1.len(), m.hidden * m.ffn);
+        assert_eq!(e.w3.len(), m.hidden * m.ffn);
+        assert_eq!(e.w2.len(), m.ffn * m.hidden);
+        let l = layer_weights(&m, 2);
+        assert_eq!(l.wg.len(), m.hidden * m.num_experts);
+        assert_eq!(l.wm.len(), m.hidden * m.hidden);
+        assert_eq!(l.scale.len(), m.hidden);
+    }
+
+    #[test]
+    fn magnitudes_are_sane() {
+        let m = ModelConfig::tiny();
+        let e = expert_weights(&m, 0, 0);
+        let rms = (e.w1.iter().map(|x| (x * x) as f64).sum::<f64>()
+            / e.w1.len() as f64)
+            .sqrt();
+        // std ≈ 1/sqrt(64) = 0.125
+        assert!((rms - 0.125).abs() < 0.02, "rms {rms}");
+    }
+
+    #[test]
+    fn model_name_separates_weight_families() {
+        let a = expert_weights(&ModelConfig::tiny(), 0, 0);
+        let mut m2 = ModelConfig::tiny();
+        m2.name = "tiny-v2".into();
+        let b = expert_weights(&m2, 0, 0);
+        assert_ne!(a.w1, b.w1);
+    }
+}

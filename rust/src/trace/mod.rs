@@ -1,0 +1,310 @@
+//! Synthetic workload generation: task-skewed activation profiles and
+//! Poisson request traces.
+//!
+//! This is the stand-in for the paper's BIG-bench / MMLU-Pro / WikiText /
+//! TACO request streams (DESIGN.md §2): the placement problem consumes only
+//! per-(server, layer) expert-activation frequencies and token volumes, so a
+//! skew-controlled synthetic generator spans the same regime the paper's
+//! Figs. 2–3 document — strongly task-dependent, layer-varying skew.
+
+pub mod recorded;
+pub mod task;
+
+use crate::config::{ModelConfig, TaskKind, WorkloadConfig};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::Result;
+pub use task::TaskProfile;
+
+/// One inference request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    pub id: usize,
+    /// Home server (where the request arrives; data-locality principle).
+    pub server: usize,
+    /// Arrival time in virtual seconds.
+    pub arrival_s: f64,
+    pub prompt_tokens: usize,
+    pub output_tokens: usize,
+    pub task: TaskKind,
+}
+
+/// A generated workload trace, sorted by arrival time.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub requests: Vec<Request>,
+}
+
+impl Trace {
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+
+    pub fn duration(&self) -> f64 {
+        self.requests.last().map(|r| r.arrival_s).unwrap_or(0.0)
+    }
+
+    pub fn per_server_counts(&self, num_servers: usize) -> Vec<usize> {
+        let mut c = vec![0; num_servers];
+        for r in &self.requests {
+            c[r.server] += 1;
+        }
+        c
+    }
+
+    fn sort(&mut self) {
+        self.requests.sort_by(|a, b| {
+            a.arrival_s
+                .partial_cmp(&b.arrival_s)
+                .unwrap()
+                .then(a.id.cmp(&b.id))
+        });
+        for (i, r) in self.requests.iter_mut().enumerate() {
+            r.id = i;
+        }
+    }
+
+    /// Concatenate: `other`'s arrivals are shifted to start after `self`
+    /// ends — the Fig. 7 workload-shift composition.
+    pub fn then(mut self, mut other: Trace) -> Trace {
+        let offset = self.duration();
+        for r in &mut other.requests {
+            r.arrival_s += offset;
+        }
+        self.requests.append(&mut other.requests);
+        self.sort();
+        self
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.requests
+                .iter()
+                .map(|r| {
+                    Json::from_pairs(vec![
+                        ("id", Json::Num(r.id as f64)),
+                        ("server", Json::Num(r.server as f64)),
+                        ("arrival_s", Json::Num(r.arrival_s)),
+                        ("prompt_tokens", Json::Num(r.prompt_tokens as f64)),
+                        ("output_tokens", Json::Num(r.output_tokens as f64)),
+                        ("task", Json::Str(r.task.name().into())),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
+    pub fn from_json(j: &Json) -> Result<Trace> {
+        let mut requests = Vec::new();
+        for r in j.as_arr().unwrap_or(&[]) {
+            requests.push(Request {
+                id: r.req("id")?.as_usize().unwrap_or(0),
+                server: r.req("server")?.as_usize().unwrap_or(0),
+                arrival_s: r.req("arrival_s")?.as_f64().unwrap_or(0.0),
+                prompt_tokens: r.req("prompt_tokens")?.as_usize().unwrap_or(0),
+                output_tokens: r.req("output_tokens")?.as_usize().unwrap_or(0),
+                task: TaskKind::from_name(
+                    r.req("task")?.as_str().unwrap_or(""),
+                )?,
+            });
+        }
+        Ok(Trace { requests })
+    }
+}
+
+/// Poisson trace generator over a [`WorkloadConfig`].
+pub struct TraceGenerator {
+    pub model: ModelConfig,
+    pub workload: WorkloadConfig,
+    pub seed: u64,
+}
+
+impl TraceGenerator {
+    pub fn new(
+        model: &ModelConfig,
+        workload: &WorkloadConfig,
+        seed: u64,
+    ) -> TraceGenerator {
+        TraceGenerator {
+            model: model.clone(),
+            workload: workload.clone(),
+            seed,
+        }
+    }
+
+    fn gen_stream(
+        &self,
+        server: usize,
+        rng: &mut Rng,
+        count: Option<usize>,
+        horizon_s: Option<f64>,
+    ) -> Vec<Request> {
+        let stream = &self.workload.streams[server];
+        let rate = 1.0 / stream.mean_interarrival_s;
+        let mut t = 0.0;
+        let mut out = Vec::new();
+        loop {
+            t += rng.exponential(rate);
+            if let Some(h) = horizon_s {
+                if t > h {
+                    break;
+                }
+            }
+            if let Some(c) = count {
+                if out.len() >= c {
+                    break;
+                }
+            }
+            // Prompt length: geometric-ish spread around the mean, with a
+            // floor of 8 tokens (prompts are never empty).
+            let spread = rng.range_f64(0.5, 1.5);
+            let prompt =
+                ((stream.mean_prompt_tokens as f64 * spread) as usize).max(8);
+            out.push(Request {
+                id: 0, // assigned after the global sort
+                server,
+                arrival_s: t,
+                prompt_tokens: prompt,
+                output_tokens: stream.output_tokens,
+                task: stream.task,
+            });
+            if count.is_none() && horizon_s.is_none() {
+                break; // safety: never loop unboundedly
+            }
+        }
+        out
+    }
+
+    fn gen(&self, count: Option<usize>, horizon_s: Option<f64>) -> Trace {
+        let mut root = Rng::new(self.seed);
+        let mut trace = Trace::default();
+        for server in 0..self.workload.streams.len() {
+            let mut rng = root.fork(server as u64 + 1);
+            trace
+                .requests
+                .extend(self.gen_stream(server, &mut rng, count, horizon_s));
+        }
+        trace.sort();
+        trace
+    }
+
+    /// `n` requests per server (the Fig. 7 "200 requests per server" style).
+    pub fn gen_count(&self, n_per_server: usize) -> Trace {
+        self.gen(Some(n_per_server), None)
+    }
+
+    /// All requests arriving within `[0, horizon_s]` (the Fig. 6 style).
+    pub fn gen_until(&self, horizon_s: f64) -> Trace {
+        self.gen(None, Some(horizon_s))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelConfig, WorkloadConfig};
+
+    fn gen() -> TraceGenerator {
+        TraceGenerator::new(
+            &ModelConfig::mixtral_8x7b_sim(),
+            &WorkloadConfig::bigbench(10.0),
+            7,
+        )
+    }
+
+    #[test]
+    fn count_mode_exact_per_server() {
+        let t = gen().gen_count(50);
+        assert_eq!(t.len(), 150);
+        assert_eq!(t.per_server_counts(3), vec![50, 50, 50]);
+    }
+
+    #[test]
+    fn horizon_mode_rate_matches() {
+        let t = gen().gen_until(3600.0);
+        // 3 servers × 3600 s / 10 s ≈ 1080 requests (±15 %)
+        assert!(
+            (900..1300).contains(&t.len()),
+            "got {} requests",
+            t.len()
+        );
+        assert!(t.duration() <= 3600.0);
+    }
+
+    #[test]
+    fn sorted_by_arrival_with_sequential_ids() {
+        let t = gen().gen_count(30);
+        for w in t.requests.windows(2) {
+            assert!(w[0].arrival_s <= w[1].arrival_s);
+        }
+        for (i, r) in t.requests.iter().enumerate() {
+            assert_eq!(r.id, i);
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = gen().gen_count(20);
+        let b = gen().gen_count(20);
+        assert_eq!(a.requests, b.requests);
+        let c = TraceGenerator::new(
+            &ModelConfig::mixtral_8x7b_sim(),
+            &WorkloadConfig::bigbench(10.0),
+            8,
+        )
+        .gen_count(20);
+        assert_ne!(a.requests, c.requests);
+    }
+
+    #[test]
+    fn tasks_match_streams() {
+        let t = gen().gen_count(10);
+        for r in &t.requests {
+            let expect = &WorkloadConfig::bigbench(10.0).streams[r.server];
+            assert_eq!(r.task, expect.task);
+        }
+    }
+
+    #[test]
+    fn then_shifts_and_merges() {
+        let a = gen().gen_count(10);
+        let b = TraceGenerator::new(
+            &ModelConfig::mixtral_8x7b_sim(),
+            &WorkloadConfig::multidata(20.0),
+            9,
+        )
+        .gen_count(10);
+        let a_dur = a.duration();
+        let merged = a.then(b);
+        assert_eq!(merged.len(), 60);
+        // the second phase's first arrival is after the first phase's end
+        let phase2_start = merged
+            .requests
+            .iter()
+            .filter(|r| r.task.name().starts_with("mmlu")
+                || r.task.name() == "wikitext" || r.task.name() == "taco")
+            .map(|r| r.arrival_s)
+            .fold(f64::INFINITY, f64::min);
+        assert!(phase2_start >= a_dur);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let t = gen().gen_count(5);
+        let back = Trace::from_json(&t.to_json()).unwrap();
+        assert_eq!(t.requests, back.requests);
+    }
+
+    #[test]
+    fn prompt_tokens_positive_and_spread() {
+        let t = gen().gen_count(100);
+        assert!(t.requests.iter().all(|r| r.prompt_tokens >= 8));
+        let min = t.requests.iter().map(|r| r.prompt_tokens).min().unwrap();
+        let max = t.requests.iter().map(|r| r.prompt_tokens).max().unwrap();
+        assert!(max > min, "prompt lengths should vary");
+    }
+}

@@ -1,0 +1,116 @@
+//! Recorded routing profiles: the paper's simulator (§IV "Simulation
+//! Setup") feeds on "operational data collected from DanceMoE — expert
+//! selection patterns and token processing volumes". This module converts
+//! the activation statistics a serving run accumulated into per-server
+//! [`TaskProfile`]s that the engine can replay, and (de)serializes them.
+
+use crate::config::{ModelConfig, TaskKind};
+use crate::moe::ActivationStats;
+use crate::trace::TaskProfile;
+use crate::util::json::Json;
+use crate::util::stats::normalize;
+use crate::Result;
+
+/// Build one replayable profile per server from observed statistics.
+///
+/// Layers with no observations fall back to uniform (the replay should not
+/// invent skew the run never showed). The `task` tag is a placeholder — a
+/// recorded profile is not tied to a named benchmark task.
+pub fn profiles_from_stats(
+    stats: &ActivationStats,
+    model: &ModelConfig,
+) -> Vec<TaskProfile> {
+    (0..stats.num_servers())
+        .map(|n| TaskProfile {
+            task: TaskKind::all()[n % TaskKind::all().len()],
+            dist: (0..model.num_layers)
+                .map(|l| normalize(&stats.servers[n].freq[l]))
+                .collect(),
+        })
+        .collect()
+}
+
+/// Serialize recorded profiles (for the `dancemoe trace`-style tooling).
+pub fn profiles_to_json(profiles: &[TaskProfile]) -> Json {
+    Json::Arr(
+        profiles
+            .iter()
+            .map(|p| {
+                Json::Arr(p.dist.iter().map(|l| Json::arr_f64(l)).collect())
+            })
+            .collect(),
+    )
+}
+
+/// Deserialize recorded profiles.
+pub fn profiles_from_json(j: &Json) -> Result<Vec<TaskProfile>> {
+    let arr = j.as_arr().unwrap_or(&[]);
+    arr.iter()
+        .enumerate()
+        .map(|(i, p)| {
+            let dist = p
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(|l| l.to_f64_vec())
+                .collect::<Result<Vec<_>>>()?;
+            Ok(TaskProfile {
+                task: TaskKind::all()[i % TaskKind::all().len()],
+                dist,
+            })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+
+    #[test]
+    fn profiles_reflect_observations() {
+        let m = ModelConfig::tiny();
+        let mut stats = ActivationStats::new(&m, 2);
+        stats.record(0, 1, 3, 90.0);
+        stats.record(0, 1, 5, 10.0);
+        let profiles = profiles_from_stats(&stats, &m);
+        assert_eq!(profiles.len(), 2);
+        assert!((profiles[0].dist[1][3] - 0.9).abs() < 1e-12);
+        assert!((profiles[0].dist[1][5] - 0.1).abs() < 1e-12);
+        // unobserved layer falls back to uniform
+        assert!((profiles[0].dist[0][0] - 0.125).abs() < 1e-12);
+        // server 1 has no observations at all: uniform everywhere
+        assert!(profiles[1]
+            .dist
+            .iter()
+            .all(|l| l.iter().all(|&p| (p - 0.125).abs() < 1e-12)));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let m = ModelConfig::tiny();
+        let mut stats = ActivationStats::new(&m, 3);
+        stats.record(2, 0, 7, 5.0);
+        stats.record(2, 3, 1, 2.0);
+        let profiles = profiles_from_stats(&stats, &m);
+        let j = profiles_to_json(&profiles);
+        let back = profiles_from_json(&j).unwrap();
+        assert_eq!(back.len(), 3);
+        for (a, b) in profiles.iter().zip(&back) {
+            assert_eq!(a.dist, b.dist);
+        }
+    }
+
+    #[test]
+    fn recorded_profiles_are_sampleable() {
+        let m = ModelConfig::tiny();
+        let mut stats = ActivationStats::new(&m, 1);
+        for e in 0..m.num_experts {
+            stats.record(0, 0, e, (e + 1) as f64);
+        }
+        let profiles = profiles_from_stats(&stats, &m);
+        let mut rng = crate::util::rng::Rng::new(1);
+        let counts = profiles[0].sample_batch(&mut rng, 0, 50, 2);
+        assert_eq!(counts.iter().sum::<u32>(), 100);
+    }
+}

@@ -1,0 +1,357 @@
+//! Task-specific expert-activation profiles (the paper's Fig. 2 / Fig. 3
+//! structure, synthesized).
+//!
+//! Each [`TaskProfile`] holds, for every MoE layer, a probability
+//! distribution over that layer's experts. Profiles are deterministic per
+//! (task, model): the per-layer skew is drawn from a Dirichlet whose
+//! concentration varies by layer — some layers are strongly dominated by a
+//! task-specific expert (Fig. 2's "Expert 6 dominates arithmetic"), others
+//! are near-uniform (Fig. 3's Layer 1) — reproducing the two observations
+//! the paper's placement design builds on:
+//!
+//! 1. activation patterns are highly task-dependent, and
+//! 2. they also vary across layers within a task.
+
+use crate::config::{ModelConfig, TaskKind};
+use crate::util::rng::Rng;
+use crate::util::stats::entropy_bits;
+
+/// Per-layer concentration schedule: cycles through skew regimes so every
+/// task has both dominated and diffuse layers. Offsetting the cycle by the
+/// task seed makes the *location* of skewed layers task-dependent too.
+const CONCENTRATIONS: [f64; 5] = [0.06, 0.12, 0.35, 1.5, 8.0];
+
+/// A task's activation profile over a model's experts.
+#[derive(Debug, Clone)]
+pub struct TaskProfile {
+    pub task: TaskKind,
+    /// `dist[layer][expert]` — probability, rows sum to 1.
+    pub dist: Vec<Vec<f64>>,
+}
+
+impl TaskProfile {
+    /// Build the deterministic profile for `task` on `model`.
+    pub fn build(task: TaskKind, model: &ModelConfig) -> TaskProfile {
+        let mut rng = Rng::new(task.seed() ^ (model.num_experts as u64) << 32);
+        let e = model.num_experts;
+        let mut dist = Vec::with_capacity(model.num_layers);
+        for layer in 0..model.num_layers {
+            let conc_idx =
+                (layer + task.seed() as usize) % CONCENTRATIONS.len();
+            let conc = CONCENTRATIONS[conc_idx];
+            let mut p = rng.dirichlet_sym(conc, e);
+            // Give the skewed layers a task-characteristic dominant expert:
+            // rotate the heaviest component onto a deterministic slot so
+            // different tasks collide on different experts (Fig. 2).
+            if conc < 0.5 {
+                let dominant =
+                    (task.seed() as usize * 7 + layer * 3) % e;
+                let heaviest = p
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap();
+                p.swap(dominant, heaviest);
+            }
+            dist.push(p);
+        }
+        TaskProfile { task, dist }
+    }
+
+    /// Build all six task profiles for a model.
+    pub fn build_all(model: &ModelConfig) -> Vec<TaskProfile> {
+        TaskKind::all()
+            .into_iter()
+            .map(|t| TaskProfile::build(t, model))
+            .collect()
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.dist.len()
+    }
+
+    pub fn num_experts(&self) -> usize {
+        self.dist.first().map(|d| d.len()).unwrap_or(0)
+    }
+
+    /// Entropy (bits) of the layer's distribution.
+    pub fn entropy(&self, layer: usize) -> f64 {
+        entropy_bits(&self.dist[layer])
+    }
+
+    /// Sample the top-k expert set for one token at `layer`
+    /// (k distinct experts, probability-proportional without replacement).
+    pub fn sample_token(
+        &self,
+        rng: &mut Rng,
+        layer: usize,
+        k: usize,
+    ) -> Vec<usize> {
+        rng.categorical_k(&self.dist[layer], k)
+    }
+
+    /// Sample expert token-counts for a batch of `tokens` tokens at
+    /// `layer` with top-`k` routing. Returns a dense count vector of
+    /// length `num_experts` summing to `tokens * k`.
+    pub fn sample_batch(
+        &self,
+        rng: &mut Rng,
+        layer: usize,
+        tokens: usize,
+        k: usize,
+    ) -> Vec<u32> {
+        let e = self.num_experts();
+        let mut counts = vec![0u32; e];
+        let k = k.min(e);
+        // single scratch buffer: zero the selected entries during a token's
+        // k draws, restore afterwards (avoids the per-token Vec clone of
+        // rng.categorical_k — this is the decode hot path)
+        let dist = &self.dist[layer];
+        let mut w = dist.clone();
+        let mut picked: Vec<usize> = Vec::with_capacity(k);
+        for _ in 0..tokens {
+            picked.clear();
+            for _ in 0..k {
+                if w.iter().sum::<f64>() <= 0.0 {
+                    // degenerate: fill with unused indices deterministically
+                    for j in 0..e {
+                        if picked.len() == k {
+                            break;
+                        }
+                        if !picked.contains(&j) {
+                            picked.push(j);
+                        }
+                    }
+                    break;
+                }
+                let idx = rng.categorical(&w);
+                picked.push(idx);
+                w[idx] = 0.0;
+            }
+            for &idx in &picked {
+                counts[idx] += 1;
+                w[idx] = dist[idx];
+            }
+        }
+        counts
+    }
+
+    /// Fast batch routing for large prefill batches: expected counts with a
+    /// stochastically-allocated remainder (O(E) instead of O(tokens·k·E)).
+    /// Preserves the total mass `tokens · k` and the per-expert cap of
+    /// `tokens` (a token can use an expert at most once).
+    pub fn sample_batch_fast(
+        &self,
+        rng: &mut Rng,
+        layer: usize,
+        tokens: usize,
+        k: usize,
+    ) -> Vec<u32> {
+        let e = self.num_experts();
+        let k = k.min(e);
+        let target = (tokens * k) as u32;
+        let dist = &self.dist[layer];
+        let mut counts = vec![0u32; e];
+        let mut residual = vec![0.0f64; e];
+        let mut placed: u32 = 0;
+        for i in 0..e {
+            let exact = (k as f64 * dist[i] * tokens as f64)
+                .min(tokens as f64);
+            let fl = exact.floor();
+            counts[i] = fl as u32;
+            residual[i] = exact - fl;
+            placed += counts[i];
+        }
+        // allocate the remainder by residual weight, respecting the cap
+        while placed < target {
+            if residual.iter().sum::<f64>() <= 0.0 {
+                // caps ate the residuals: spill uniformly over non-full
+                let open: Vec<usize> = (0..e)
+                    .filter(|&i| counts[i] < tokens as u32)
+                    .collect();
+                if open.is_empty() {
+                    break;
+                }
+                let i = *rng.choose(&open);
+                counts[i] += 1;
+                placed += 1;
+                continue;
+            }
+            let i = rng.categorical(&residual);
+            if counts[i] < tokens as u32 {
+                counts[i] += 1;
+                placed += 1;
+            }
+            residual[i] = 0.0;
+        }
+        counts
+    }
+
+    /// Expected (non-sampled) batch counts — used by the fast analytic path
+    /// of the Fig. 8 scaling simulator where per-token sampling at 256 GPUs
+    /// would dominate runtime.
+    pub fn expected_batch(
+        &self,
+        layer: usize,
+        tokens: usize,
+        k: usize,
+    ) -> Vec<f64> {
+        // Expected tokens per expert under k draws w/o replacement is
+        // approximated by k·p_e·T (exact for k=1; good for k ≪ E).
+        self.dist[layer]
+            .iter()
+            .map(|p| (k as f64 * p * tokens as f64).min(tokens as f64))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+
+    fn model() -> ModelConfig {
+        ModelConfig::mixtral_8x7b_sim()
+    }
+
+    #[test]
+    fn profile_rows_are_distributions() {
+        for t in TaskKind::all() {
+            let p = TaskProfile::build(t, &model());
+            assert_eq!(p.num_layers(), 32);
+            assert_eq!(p.num_experts(), 8);
+            for l in 0..p.num_layers() {
+                let sum: f64 = p.dist[l].iter().sum();
+                assert!((sum - 1.0).abs() < 1e-9, "{t:?} layer {l}");
+                assert!(p.dist[l].iter().all(|&x| x >= 0.0));
+            }
+        }
+    }
+
+    #[test]
+    fn profiles_deterministic_and_task_dependent() {
+        let a = TaskProfile::build(TaskKind::Arithmetic, &model());
+        let b = TaskProfile::build(TaskKind::Arithmetic, &model());
+        let c = TaskProfile::build(TaskKind::AsciiRecognition, &model());
+        assert_eq!(a.dist, b.dist);
+        assert_ne!(a.dist, c.dist);
+    }
+
+    #[test]
+    fn entropy_varies_across_layers_fig3() {
+        // Fig. 3: some layers strongly skewed, others near-uniform.
+        let p = TaskProfile::build(TaskKind::Arithmetic, &model());
+        let ents: Vec<f64> = (0..p.num_layers()).map(|l| p.entropy(l)).collect();
+        let min = ents.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = ents.iter().cloned().fold(f64::MIN, f64::max);
+        assert!(min < 1.5, "expected a skewed layer, min entropy {min}");
+        assert!(max > 2.5, "expected a diffuse layer, max entropy {max}");
+    }
+
+    #[test]
+    fn dominant_experts_differ_between_tasks_fig2() {
+        // Fig. 2: at a skewed layer, different tasks favour different experts.
+        let m = model();
+        let a = TaskProfile::build(TaskKind::Arithmetic, &m);
+        let b = TaskProfile::build(TaskKind::AsciiRecognition, &m);
+        let mut differs = 0;
+        for l in 0..m.num_layers {
+            if a.entropy(l) < 1.5 && b.entropy(l) < 1.5 {
+                let am = crate::util::stats::argsort_desc(&a.dist[l])[0];
+                let bm = crate::util::stats::argsort_desc(&b.dist[l])[0];
+                if am != bm {
+                    differs += 1;
+                }
+            }
+        }
+        assert!(differs > 0, "no layer where dominant experts differ");
+    }
+
+    #[test]
+    fn sample_batch_counts_sum() {
+        let p = TaskProfile::build(TaskKind::Taco, &model());
+        let mut rng = Rng::new(3);
+        let counts = p.sample_batch(&mut rng, 0, 100, 2);
+        assert_eq!(counts.iter().sum::<u32>(), 200);
+        assert_eq!(counts.len(), 8);
+    }
+
+    #[test]
+    fn sample_batch_tracks_distribution() {
+        let p = TaskProfile::build(TaskKind::Arithmetic, &model());
+        let mut rng = Rng::new(5);
+        // find a skewed layer and check the dominant expert gets the most
+        let l = (0..p.num_layers())
+            .min_by(|&a, &b| p.entropy(a).partial_cmp(&p.entropy(b)).unwrap())
+            .unwrap();
+        let counts = p.sample_batch(&mut rng, l, 2000, 1);
+        let sampled_max = counts
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, &c)| c)
+            .map(|(i, _)| i)
+            .unwrap();
+        let true_max = crate::util::stats::argsort_desc(&p.dist[l])[0];
+        assert_eq!(sampled_max, true_max);
+    }
+
+    #[test]
+    fn sample_batch_fast_mass_and_caps() {
+        let m = ModelConfig::deepseek_v2_lite_sim();
+        let p = TaskProfile::build(TaskKind::MmluPro, &m);
+        let mut rng = Rng::new(9);
+        for (tokens, k) in [(100usize, 8usize), (37, 8), (16, 1)] {
+            let counts = p.sample_batch_fast(&mut rng, 0, tokens, k);
+            let total: u32 = counts.iter().sum();
+            assert_eq!(total, (tokens * k) as u32, "t{tokens} k{k}");
+            assert!(counts.iter().all(|&c| c <= tokens as u32));
+        }
+    }
+
+    #[test]
+    fn sample_batch_fast_tracks_distribution() {
+        let m = ModelConfig::mixtral_8x7b_sim();
+        let p = TaskProfile::build(TaskKind::Arithmetic, &m);
+        let l = (0..p.num_layers())
+            .min_by(|&a, &b| p.entropy(a).partial_cmp(&p.entropy(b)).unwrap())
+            .unwrap();
+        let mut rng = Rng::new(10);
+        let counts = p.sample_batch_fast(&mut rng, l, 4000, 1);
+        let sampled_max = counts
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, &c)| c)
+            .map(|(i, _)| i)
+            .unwrap();
+        assert_eq!(
+            sampled_max,
+            crate::util::stats::argsort_desc(&p.dist[l])[0]
+        );
+    }
+
+    #[test]
+    fn expected_batch_matches_mass() {
+        let p = TaskProfile::build(TaskKind::WikiText, &model());
+        let exp = p.expected_batch(0, 100, 2);
+        let total: f64 = exp.iter().sum();
+        // ≈ tokens*k (can undershoot slightly due to the per-expert cap)
+        assert!(total <= 200.0 + 1e-9);
+        assert!(total > 150.0);
+    }
+
+    #[test]
+    fn deepseek_topology_profiles() {
+        let m = ModelConfig::deepseek_v2_lite_sim();
+        let p = TaskProfile::build(TaskKind::MmluPro, &m);
+        assert_eq!(p.num_layers(), 26);
+        assert_eq!(p.num_experts(), 64);
+        let mut rng = Rng::new(1);
+        let sel = p.sample_token(&mut rng, 0, 8);
+        assert_eq!(sel.len(), 8);
+        let mut s = sel.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), 8, "top-8 must be distinct");
+    }
+}

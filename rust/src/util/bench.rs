@@ -1,0 +1,189 @@
+//! Mini benchmark harness (replaces `criterion`, unavailable offline).
+//!
+//! Drives the `cargo bench` targets (`harness = false` in Cargo.toml):
+//! warmup, adaptive iteration count, mean/p50/p99 per benchmark, aligned
+//! report output. Benchmarks of whole experiments (one per paper table /
+//! figure) use `run_once` mode — they are minutes-of-virtual-time
+//! simulations whose *output rows* are the deliverable; micro-benchmarks of
+//! the hot path use the timed mode.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub total: Duration,
+}
+
+impl BenchResult {
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        if self.mean_ns == 0.0 {
+            0.0
+        } else {
+            items_per_iter / (self.mean_ns * 1e-9)
+        }
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.0} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1_000.0)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2} ms", ns / 1_000_000.0)
+    } else {
+        format!("{:.3} s", ns / 1_000_000_000.0)
+    }
+}
+
+/// Benchmark runner: collects results and prints a report on drop.
+pub struct Bencher {
+    pub suite: String,
+    pub results: Vec<BenchResult>,
+    /// target measurement time per benchmark
+    pub budget: Duration,
+    pub warmup: Duration,
+}
+
+impl Bencher {
+    pub fn new(suite: &str) -> Bencher {
+        // Allow CI-style overrides: DANCEMOE_BENCH_MS per-bench budget.
+        let ms = std::env::var("DANCEMOE_BENCH_MS")
+            .ok()
+            .and_then(|s| s.parse::<u64>().ok())
+            .unwrap_or(1500);
+        println!("\n== bench suite: {suite} ==");
+        Bencher {
+            suite: suite.to_string(),
+            results: Vec::new(),
+            budget: Duration::from_millis(ms),
+            warmup: Duration::from_millis(ms / 5),
+        }
+    }
+
+    /// Timed micro/meso benchmark: runs `f` repeatedly within the budget.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        // warmup
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup {
+            f();
+        }
+        // measure
+        let mut samples: Vec<f64> = Vec::new();
+        let t0 = Instant::now();
+        while t0.elapsed() < self.budget {
+            let s = Instant::now();
+            f();
+            samples.push(s.elapsed().as_nanos() as f64);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len().max(1);
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let p50 = samples[n / 2.min(n - 1)];
+        let p99 = samples[((n as f64 * 0.99) as usize).min(n - 1)];
+        let res = BenchResult {
+            name: name.to_string(),
+            iters: n as u64,
+            mean_ns: mean,
+            p50_ns: p50,
+            p99_ns: p99,
+            total: t0.elapsed(),
+        };
+        println!(
+            "  {:<44} {:>12}/iter  p50 {:>12}  p99 {:>12}  ({} iters)",
+            res.name,
+            fmt_ns(res.mean_ns),
+            fmt_ns(res.p50_ns),
+            fmt_ns(res.p99_ns),
+            res.iters
+        );
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    /// Run-once benchmark for whole experiments: time a single execution and
+    /// report it (the experiment's own printed rows are the real output).
+    pub fn run_once<F: FnOnce()>(&mut self, name: &str, f: F) -> &BenchResult {
+        let t0 = Instant::now();
+        f();
+        let ns = t0.elapsed().as_nanos() as f64;
+        let res = BenchResult {
+            name: name.to_string(),
+            iters: 1,
+            mean_ns: ns,
+            p50_ns: ns,
+            p99_ns: ns,
+            total: t0.elapsed(),
+        };
+        println!("  {:<44} {:>12} (1 run)", res.name, fmt_ns(ns));
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    /// Prevent the optimizer from discarding a computed value.
+    pub fn black_box<T>(x: T) -> T {
+        std::hint::black_box(x)
+    }
+}
+
+impl Drop for Bencher {
+    fn drop(&mut self) {
+        println!(
+            "== suite {} done: {} benchmarks ==\n",
+            self.suite,
+            self.results.len()
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        std::env::set_var("DANCEMOE_BENCH_MS", "30");
+        let mut b = Bencher::new("selftest");
+        let r = b
+            .bench("noop-ish", || {
+                let v: u64 = Bencher::black_box((0..50u64).sum());
+                assert!(v > 0);
+            })
+            .clone();
+        assert!(r.iters > 10);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p50_ns <= r.p99_ns * 1.0001);
+        std::env::remove_var("DANCEMOE_BENCH_MS");
+    }
+
+    #[test]
+    fn run_once_records_single_iter() {
+        std::env::set_var("DANCEMOE_BENCH_MS", "30");
+        let mut b = Bencher::new("selftest2");
+        let r = b.run_once("one", || std::thread::sleep(
+            Duration::from_millis(2),
+        ));
+        assert_eq!(r.iters, 1);
+        assert!(r.mean_ns >= 2e6 * 0.5);
+        std::env::remove_var("DANCEMOE_BENCH_MS");
+    }
+
+    #[test]
+    fn throughput_math() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 1,
+            mean_ns: 1e9,
+            p50_ns: 1e9,
+            p99_ns: 1e9,
+            total: Duration::from_secs(1),
+        };
+        assert!((r.throughput(1000.0) - 1000.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,309 @@
+//! Declarative command-line parsing (replaces `clap`, unavailable offline).
+//!
+//! Supports subcommands, `--flag value`, `--flag=value`, boolean switches,
+//! defaults, required flags, and auto-generated `--help` text.
+
+use std::collections::BTreeMap;
+
+/// One flag specification.
+#[derive(Debug, Clone)]
+pub struct Flag {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_switch: bool,
+    pub required: bool,
+}
+
+/// A parsed invocation: flag values + positional arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    switches: BTreeMap<String, bool>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_str(&self, name: &str) -> String {
+        self.values.get(name).cloned().unwrap_or_default()
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64, String> {
+        self.values
+            .get(name)
+            .ok_or_else(|| format!("missing --{name}"))?
+            .parse()
+            .map_err(|e| format!("--{name}: {e}"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize, String> {
+        self.values
+            .get(name)
+            .ok_or_else(|| format!("missing --{name}"))?
+            .parse()
+            .map_err(|e| format!("--{name}: {e}"))
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<u64, String> {
+        self.values
+            .get(name)
+            .ok_or_else(|| format!("missing --{name}"))?
+            .parse()
+            .map_err(|e| format!("--{name}: {e}"))
+    }
+
+    pub fn switch(&self, name: &str) -> bool {
+        self.switches.get(name).copied().unwrap_or(false)
+    }
+}
+
+/// One subcommand: name, help, flags.
+pub struct Command {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub flags: Vec<Flag>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, help: &'static str) -> Command {
+        Command {
+            name,
+            help,
+            flags: Vec::new(),
+        }
+    }
+
+    pub fn flag(
+        mut self,
+        name: &'static str,
+        default: Option<&'static str>,
+        help: &'static str,
+    ) -> Command {
+        self.flags.push(Flag {
+            name,
+            help,
+            default,
+            is_switch: false,
+            required: default.is_none(),
+        });
+        self
+    }
+
+    pub fn opt_flag(
+        mut self,
+        name: &'static str,
+        help: &'static str,
+    ) -> Command {
+        self.flags.push(Flag {
+            name,
+            help,
+            default: None,
+            is_switch: false,
+            required: false,
+        });
+        self
+    }
+
+    pub fn switch(mut self, name: &'static str, help: &'static str) -> Command {
+        self.flags.push(Flag {
+            name,
+            help,
+            default: None,
+            is_switch: true,
+            required: false,
+        });
+        self
+    }
+
+    /// Parse this command's arguments (after the subcommand token).
+    pub fn parse(&self, argv: &[String]) -> Result<Args, String> {
+        let mut out = Args::default();
+        for f in &self.flags {
+            if let Some(d) = f.default {
+                out.values.insert(f.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(rest) = a.strip_prefix("--") {
+                let (name, inline) = match rest.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (rest, None),
+                };
+                let spec = self
+                    .flags
+                    .iter()
+                    .find(|f| f.name == name)
+                    .ok_or_else(|| format!("unknown flag --{name}"))?;
+                if spec.is_switch {
+                    if inline.is_some() {
+                        return Err(format!("--{name} takes no value"));
+                    }
+                    out.switches.insert(name.to_string(), true);
+                } else {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .ok_or_else(|| {
+                                    format!("--{name} needs a value")
+                                })?
+                                .clone()
+                        }
+                    };
+                    out.values.insert(name.to_string(), v);
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        for f in &self.flags {
+            if f.required && !f.is_switch && !out.values.contains_key(f.name)
+            {
+                return Err(format!("missing required flag --{}", f.name));
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("  {} — {}\n", self.name, self.help);
+        for f in &self.flags {
+            let kind = if f.is_switch { "" } else { " <value>" };
+            let def = match f.default {
+                Some(d) => format!(" (default: {d})"),
+                None if f.required => " (required)".to_string(),
+                None => String::new(),
+            };
+            s.push_str(&format!(
+                "      --{}{kind}  {}{def}\n",
+                f.name, f.help
+            ));
+        }
+        s
+    }
+}
+
+/// A CLI: program name + subcommands.
+pub struct Cli {
+    pub program: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<Command>,
+}
+
+impl Cli {
+    /// Dispatch on argv\[1\]; returns (command name, parsed args) or a
+    /// usage/error string (Err(msg) with exit intent).
+    pub fn dispatch(&self, argv: &[String]) -> Result<(String, Args), String> {
+        let sub = argv.get(1).map(|s| s.as_str()).unwrap_or("help");
+        if sub == "help" || sub == "--help" || sub == "-h" {
+            return Err(self.usage());
+        }
+        let cmd = self
+            .commands
+            .iter()
+            .find(|c| c.name == sub)
+            .ok_or_else(|| {
+                format!("unknown command '{sub}'\n\n{}", self.usage())
+            })?;
+        if argv.iter().any(|a| a == "--help" || a == "-h") {
+            return Err(cmd.usage());
+        }
+        let args = cmd.parse(&argv[2..]).map_err(|e| {
+            format!("{}: {e}\n\n{}", cmd.name, cmd.usage())
+        })?;
+        Ok((sub.to_string(), args))
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nCommands:\n", self.program, self.about);
+        for c in &self.commands {
+            s.push_str(&c.usage());
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("serve", "run the server")
+            .flag("model", Some("tiny"), "model preset")
+            .flag("requests", None, "number of requests")
+            .switch("verbose", "chatty output")
+    }
+
+    fn sv(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_and_defaults() {
+        let a = cmd().parse(&sv(&["--requests", "10"])).unwrap();
+        assert_eq!(a.get("model"), Some("tiny"));
+        assert_eq!(a.get_usize("requests").unwrap(), 10);
+        assert!(!a.switch("verbose"));
+    }
+
+    #[test]
+    fn parses_equals_form_and_switch() {
+        let a = cmd()
+            .parse(&sv(&["--requests=5", "--model=big", "--verbose"]))
+            .unwrap();
+        assert_eq!(a.get("model"), Some("big"));
+        assert!(a.switch("verbose"));
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        let e = cmd().parse(&sv(&[])).unwrap_err();
+        assert!(e.contains("requests"));
+    }
+
+    #[test]
+    fn unknown_flag_errors() {
+        let e = cmd().parse(&sv(&["--nope", "1"])).unwrap_err();
+        assert!(e.contains("nope"));
+    }
+
+    #[test]
+    fn switch_with_value_errors() {
+        let e = cmd()
+            .parse(&sv(&["--verbose=1", "--requests", "1"]))
+            .unwrap_err();
+        assert!(e.contains("verbose"));
+    }
+
+    #[test]
+    fn positional_passthrough() {
+        let a = cmd()
+            .parse(&sv(&["--requests", "1", "extra1", "extra2"]))
+            .unwrap();
+        assert_eq!(a.positional, vec!["extra1", "extra2"]);
+    }
+
+    #[test]
+    fn dispatch_selects_command() {
+        let cli = Cli {
+            program: "dancemoe",
+            about: "test",
+            commands: vec![cmd()],
+        };
+        let (name, args) = cli
+            .dispatch(&sv(&["dancemoe", "serve", "--requests", "3"]))
+            .unwrap();
+        assert_eq!(name, "serve");
+        assert_eq!(args.get_usize("requests").unwrap(), 3);
+        assert!(cli.dispatch(&sv(&["dancemoe", "nope"])).is_err());
+        assert!(cli.dispatch(&sv(&["dancemoe"])).is_err()); // help
+    }
+}

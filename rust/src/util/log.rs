@@ -1,0 +1,133 @@
+//! Minimal leveled logger (replaces `log`/`tracing`, offline environment).
+//!
+//! The paper's system "logs gating decisions [and] expert invocation costs
+//! ... reported to the Global Scheduler" (§III-A); this substrate carries
+//! that observability stream. Levels are filtered by the `DANCEMOE_LOG`
+//! environment variable (`error|warn|info|debug`, default `warn`) and
+//! records can be captured in-memory for tests.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Mutex;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+impl Level {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+        }
+    }
+
+    fn from_env() -> Level {
+        match std::env::var("DANCEMOE_LOG")
+            .unwrap_or_default()
+            .to_ascii_lowercase()
+            .as_str()
+        {
+            "error" => Level::Error,
+            "info" => Level::Info,
+            "debug" => Level::Debug,
+            _ => Level::Warn,
+        }
+    }
+}
+
+static THRESHOLD: AtomicU8 = AtomicU8::new(u8::MAX); // unset sentinel
+static CAPTURE: Mutex<Option<Vec<String>>> = Mutex::new(None);
+
+fn threshold() -> Level {
+    let raw = THRESHOLD.load(Ordering::Relaxed);
+    if raw == u8::MAX {
+        let lvl = Level::from_env();
+        THRESHOLD.store(lvl as u8, Ordering::Relaxed);
+        lvl
+    } else {
+        match raw {
+            0 => Level::Error,
+            1 => Level::Warn,
+            2 => Level::Info,
+            _ => Level::Debug,
+        }
+    }
+}
+
+/// Override the level programmatically (tests, CLI `--verbose`).
+pub fn set_level(level: Level) {
+    THRESHOLD.store(level as u8, Ordering::Relaxed);
+}
+
+/// Begin capturing records in memory (tests); returns previous capture.
+pub fn capture_start() {
+    *CAPTURE.lock().unwrap() = Some(Vec::new());
+}
+
+/// Stop capturing and return the captured records.
+pub fn capture_take() -> Vec<String> {
+    CAPTURE.lock().unwrap().take().unwrap_or_default()
+}
+
+/// Emit a record at `level` under a `target` tag.
+pub fn log(level: Level, target: &str, msg: &str) {
+    if level > threshold() {
+        return;
+    }
+    let line = format!("[{:<5} {target}] {msg}", level.name());
+    let mut cap = CAPTURE.lock().unwrap();
+    match cap.as_mut() {
+        Some(buf) => buf.push(line),
+        None => eprintln!("{line}"),
+    }
+}
+
+pub fn warn(target: &str, msg: &str) {
+    log(Level::Warn, target, msg);
+}
+
+pub fn info(target: &str, msg: &str) {
+    log(Level::Info, target, msg);
+}
+
+pub fn debug(target: &str, msg: &str) {
+    log(Level::Debug, target, msg);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_filter_and_capture() {
+        set_level(Level::Info);
+        capture_start();
+        info("test", "hello");
+        debug("test", "hidden");
+        warn("test", "warned");
+        let got = capture_take();
+        assert_eq!(got.len(), 2);
+        assert!(got[0].contains("INFO"));
+        assert!(got[0].contains("hello"));
+        assert!(got[1].contains("warned"));
+        set_level(Level::Warn);
+    }
+
+    #[test]
+    fn error_always_passes() {
+        set_level(Level::Error);
+        capture_start();
+        log(Level::Error, "x", "boom");
+        warn("x", "quiet");
+        let got = capture_take();
+        assert_eq!(got.len(), 1);
+        assert!(got[0].contains("boom"));
+        set_level(Level::Warn);
+    }
+}

@@ -1,0 +1,18 @@
+//! From-scratch substrates (DESIGN.md §4).
+//!
+//! The offline build environment resolves only the `xla` crate closure, so
+//! the facilities other projects pull from crates.io are implemented here:
+//! JSON (`json`), PRNG + distributions (`rng`), CLI parsing (`cli`),
+//! statistics (`stats`), a thread pool (`threadpool`), a property-testing
+//! harness (`prop`), a benchmark harness (`bench`), and table/chart
+//! rendering (`table`).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod log;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod threadpool;

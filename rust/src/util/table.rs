@@ -1,0 +1,172 @@
+//! Aligned-table rendering for the experiment reports (`exp/`).
+//!
+//! Produces the same row/column layout the paper's tables use, e.g.
+//! `Method | Server 1 | Server 2 | Server 3 | Total Avg`, as plain aligned
+//! text and as GitHub-flavored markdown (used in EXPERIMENTS.md).
+
+/// A simple table: header + rows of strings.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width mismatch in table '{}'",
+            self.title
+        );
+        self.rows.push(cells);
+    }
+
+    /// Convenience: label + numeric cells with fixed precision.
+    pub fn row_f64(&mut self, label: &str, values: &[f64], precision: usize) {
+        let mut cells = vec![label.to_string()];
+        cells.extend(values.iter().map(|v| format!("{v:.precision$}")));
+        self.row(cells);
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> =
+            self.header.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                w[i] = w[i].max(c.chars().count());
+            }
+        }
+        w
+    }
+
+    /// Plain aligned-text rendering.
+    pub fn render(&self) -> String {
+        let w = self.widths();
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("{}\n", self.title));
+        }
+        let line = |cells: &[String], w: &[usize]| -> String {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                if i > 0 {
+                    s.push_str("  ");
+                }
+                // right-align numeric-looking cells, left-align labels
+                if i == 0 {
+                    s.push_str(&format!("{:<width$}", c, width = w[i]));
+                } else {
+                    s.push_str(&format!("{:>width$}", c, width = w[i]));
+                }
+            }
+            s
+        };
+        out.push_str(&line(&self.header, &w));
+        out.push('\n');
+        let total: usize = w.iter().sum::<usize>() + 2 * (w.len() - 1);
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row, &w));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// GitHub-flavored markdown rendering (for EXPERIMENTS.md).
+    pub fn markdown(&self) -> String {
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("**{}**\n\n", self.title));
+        }
+        out.push_str(&format!("| {} |\n", self.header.join(" | ")));
+        out.push_str(&format!(
+            "|{}\n",
+            "---|".repeat(self.header.len())
+        ));
+        for row in &self.rows {
+            out.push_str(&format!("| {} |\n", row.join(" | ")));
+        }
+        out
+    }
+}
+
+/// Render an ASCII bar chart (figures 2/3/5/6/7/8 are plots in the paper;
+/// we print their series as labelled bars / columns).
+pub fn bar_chart(title: &str, labels: &[String], values: &[f64]) -> String {
+    assert_eq!(labels.len(), values.len());
+    let maxv = values.iter().cloned().fold(f64::MIN, f64::max).max(1e-12);
+    let lw = labels.iter().map(|l| l.chars().count()).max().unwrap_or(0);
+    let mut out = format!("{title}\n");
+    for (l, &v) in labels.iter().zip(values) {
+        let n = ((v / maxv) * 48.0).round().max(0.0) as usize;
+        out.push_str(&format!(
+            "  {:<lw$} |{} {:.4}\n",
+            l,
+            "█".repeat(n),
+            v,
+            lw = lw
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("T", &["Method", "S1", "Total Avg"]);
+        t.row_f64("Uniform", &[48.55, 21.66], 2);
+        t.row_f64("Ours", &[14.67, 6.63], 2);
+        let s = t.render();
+        assert!(s.contains("Method"));
+        assert!(s.contains("48.55"));
+        // each data line has the same display width
+        let lines: Vec<&str> = s.lines().skip(1).collect();
+        let w0 = lines[1].chars().count();
+        assert_eq!(lines[2].chars().count(), w0);
+    }
+
+    #[test]
+    fn markdown_shape() {
+        let mut t = Table::new("", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let md = t.markdown();
+        assert!(md.starts_with("| a | b |\n|---|---|\n| 1 | 2 |"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn row_width_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn bar_chart_scales() {
+        let s = bar_chart(
+            "demo",
+            &["e0".into(), "e1".into()],
+            &[1.0, 0.5],
+        );
+        assert!(s.contains("e0"));
+        let bars: Vec<usize> = s
+            .lines()
+            .skip(1)
+            .map(|l| l.matches('█').count())
+            .collect();
+        assert!(bars[0] > bars[1]);
+    }
+}

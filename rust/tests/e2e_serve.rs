@@ -1,0 +1,152 @@
+//! End-to-end: the routed sparse execution the engine models must be
+//! numerically identical to the dense-MoE oracle, and the full pipeline
+//! (placement → engine → report) must hold together on the real testbed
+//! configuration.
+
+use std::path::PathBuf;
+
+use dancemoe::config::{ClusterConfig, ModelConfig, WorkloadConfig};
+use dancemoe::engine::World;
+use dancemoe::placement::PlacementAlgo;
+use dancemoe::runtime::{forward, weights, Runtime};
+
+fn artifacts_dir() -> PathBuf {
+    Runtime::default_dir()
+}
+
+#[test]
+fn routed_forward_matches_dense_oracle() {
+    let dir = artifacts_dir();
+    if !Runtime::available(&dir) {
+        eprintln!("SKIP: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let model = ModelConfig::tiny();
+    let mut rt = Runtime::open(&dir).unwrap();
+    // one layer: mixer → (sparse routed MoE) vs (dense oracle artifact)
+    let tokens = 8;
+    let x = weights::input_tokens(&model, 99, tokens);
+    // mixer output via the nonmoe artifact (same path forward() takes)
+    let lw = weights::layer_weights(&model, 0);
+    let hm = rt
+        .run_f32(
+            "nonmoe_h64_b8",
+            &[(&x, &[8, 64]), (&lw.wm, &[64, 64]), (&lw.scale, &[64])],
+        )
+        .unwrap();
+
+    // dense oracle of the MoE layer on hm
+    let dense =
+        forward::dense_layer_oracle(&mut rt, &model, &hm, tokens, 0).unwrap();
+
+    // sparse routed execution of the same layer (replicating forward()'s
+    // inner loop for layer 0 only)
+    let probs = rt
+        .run_f32("gate_h64_e8_b8", &[(&hm, &[8, 64]), (&lw.wg, &[64, 8])])
+        .unwrap();
+    let h = model.hidden;
+    let mut routed = vec![0.0f32; tokens * h];
+    for t in 0..tokens {
+        let row = &probs[t * 8..(t + 1) * 8];
+        for (e, w) in forward::topk_renorm(row, model.top_k) {
+            let ew = weights::expert_weights(&model, 0, e);
+            let mut xt = vec![0.0f32; h];
+            xt.copy_from_slice(&hm[t * h..(t + 1) * h]);
+            let xp = dancemoe::runtime::pad_rows(&xt, 1, h, 1);
+            let y = rt
+                .run_f32(
+                    "expert_h64_f128_b1",
+                    &[
+                        (&xp, &[1, 64]),
+                        (&ew.w1, &[64, 128]),
+                        (&ew.w3, &[64, 128]),
+                        (&ew.w2, &[128, 64]),
+                    ],
+                )
+                .unwrap();
+            for d in 0..h {
+                routed[t * h + d] += w * y[d];
+            }
+        }
+    }
+    let maxd = dense
+        .iter()
+        .zip(&routed)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(
+        maxd < 5e-5,
+        "sparse routed vs dense oracle: max abs diff {maxd}"
+    );
+}
+
+#[test]
+fn full_forward_runs_all_layers() {
+    let dir = artifacts_dir();
+    if !Runtime::available(&dir) {
+        eprintln!("SKIP: no artifacts");
+        return;
+    }
+    let model = ModelConfig::tiny();
+    let mut rt = Runtime::open(&dir).unwrap();
+    let tokens = 8;
+    let x = weights::input_tokens(&model, 5, tokens);
+    let y = forward::forward(&mut rt, &model, &x, tokens).unwrap();
+    assert_eq!(y.len(), tokens * model.hidden);
+    assert!(y.iter().all(|v| v.is_finite()));
+    // the stack must actually transform the input
+    let diff: f32 = y
+        .iter()
+        .zip(&x)
+        .map(|(a, b)| (a - b).abs())
+        .sum::<f32>();
+    assert!(diff > 1.0, "forward was a no-op?");
+    // deterministic
+    let y2 = forward::forward(&mut rt, &model, &x, tokens).unwrap();
+    assert_eq!(y, y2);
+}
+
+#[test]
+fn padding_does_not_change_results() {
+    let dir = artifacts_dir();
+    if !Runtime::available(&dir) {
+        eprintln!("SKIP: no artifacts");
+        return;
+    }
+    let model = ModelConfig::tiny();
+    let mut rt = Runtime::open(&dir).unwrap();
+    // 3 tokens forward (padded to bucket 8 internally) must equal the first
+    // 3 rows of an... independent run with the same 3 tokens. Stronger: the
+    // per-expert group padding must not leak padded rows into real outputs.
+    let x3 = weights::input_tokens(&model, 6, 3);
+    let y3 = forward::forward(&mut rt, &model, &x3, 3).unwrap();
+    assert_eq!(y3.len(), 3 * model.hidden);
+    assert!(y3.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn simulated_testbed_end_to_end() {
+    // no artifacts needed: the virtual-time pipeline on the paper testbed
+    let model = ModelConfig::deepseek_v2_lite_sim();
+    let cluster = ClusterConfig::edge_testbed_3_for(&model);
+    let workload = WorkloadConfig::bigbench(10.0);
+    let mut world = World::build(&model, &cluster, &workload, 1);
+    let ours = world.place();
+    ours.validate().unwrap();
+    let rep_ours = world.serve(&ours, 20);
+    let uni = PlacementAlgo::Uniform.compute(
+        &model,
+        &cluster,
+        world.stats(),
+        1,
+    );
+    let rep_uni = world.serve(&uni, 20);
+    assert_eq!(rep_ours.records.len(), 60);
+    assert!(
+        rep_ours.avg_latency() < rep_uni.avg_latency(),
+        "DanceMoE {:.2}s must beat Uniform {:.2}s on the testbed",
+        rep_ours.avg_latency(),
+        rep_uni.avg_latency()
+    );
+    assert!(rep_ours.local_ratio() > rep_uni.local_ratio());
+}

@@ -1,0 +1,257 @@
+//! Edge-case and failure-injection tests: degenerate workloads, extreme
+//! clusters, JSON fuzzing, and hardware-speed perturbation mid-fleet.
+
+use dancemoe::config::{
+    ClusterConfig, GpuConfig, ModelConfig, ServerConfig, StreamConfig,
+    TaskKind, WorkloadConfig,
+};
+use dancemoe::engine::{warm_stats, CostModel, Engine, EngineConfig, Mode};
+use dancemoe::placement::PlacementAlgo;
+use dancemoe::trace::{Trace, TraceGenerator};
+use dancemoe::util::json::Json;
+use dancemoe::util::prop::{assert_prop, check};
+
+fn tiny() -> ModelConfig {
+    ModelConfig::tiny() // 4 layers × 8 experts, top-2
+}
+
+fn run(
+    m: &ModelConfig,
+    c: &ClusterConfig,
+    w: &WorkloadConfig,
+    trace: &Trace,
+    mode: Mode,
+) -> dancemoe::engine::ServeReport {
+    let stats = warm_stats(m, w);
+    let placement = PlacementAlgo::DanceMoE.compute(m, c, &stats, 1);
+    let mut eng = Engine::new(
+        m,
+        c,
+        placement,
+        EngineConfig {
+            mode,
+            seed: 1,
+            ..EngineConfig::default()
+        },
+        CostModel::default(),
+    );
+    eng.push_trace(trace);
+    eng.run();
+    std::mem::replace(
+        &mut eng.report,
+        dancemoe::engine::ServeReport::new(c.num_servers(), 60.0),
+    )
+}
+
+#[test]
+fn empty_trace_is_a_noop() {
+    let m = tiny();
+    let c = ClusterConfig::edge_testbed_3_for(&m);
+    let w = WorkloadConfig::bigbench(10.0);
+    let rep = run(&m, &c, &w, &Trace::default(), Mode::Collaborative);
+    assert_eq!(rep.records.len(), 0);
+    assert_eq!(rep.makespan_s, 0.0);
+}
+
+#[test]
+fn zero_output_tokens_prefill_only() {
+    let m = tiny();
+    let c = ClusterConfig::edge_testbed_3_for(&m);
+    let mut w = WorkloadConfig::bigbench(10.0);
+    for s in &mut w.streams {
+        s.output_tokens = 0;
+    }
+    let trace = TraceGenerator::new(&m, &w, 3).gen_count(5);
+    let rep = run(&m, &c, &w, &trace, Mode::Collaborative);
+    assert_eq!(rep.records.len(), 15);
+    assert!(rep.records.iter().all(|r| r.latency_s > 0.0));
+}
+
+#[test]
+fn single_server_cluster_never_remote() {
+    let m = tiny();
+    let c = ClusterConfig {
+        name: "solo".into(),
+        servers: vec![ServerConfig {
+            name: "only".into(),
+            gpus: vec![GpuConfig {
+                mem_bytes: m.expert_bytes * m.total_experts() as u64 * 2,
+                flops: 100e12,
+                pcie_bps: 16e9,
+            }],
+        }],
+        bandwidth_bps: 500e6,
+        rtt_s: 0.002,
+    };
+    let w = WorkloadConfig {
+        name: "solo".into(),
+        streams: vec![StreamConfig {
+            task: TaskKind::Arithmetic,
+            mean_interarrival_s: 5.0,
+            mean_prompt_tokens: 32,
+            output_tokens: 4,
+        }],
+    };
+    let trace = TraceGenerator::new(&m, &w, 5).gen_count(10);
+    let rep = run(&m, &c, &w, &trace, Mode::Collaborative);
+    assert_eq!(rep.records.len(), 10);
+    assert_eq!(rep.local_ratio(), 1.0);
+    assert_eq!(rep.net_bytes, 0.0);
+}
+
+#[test]
+fn top1_and_full_topk_routing() {
+    // top_k = 1 (Switch-style) and top_k = E (dense) both serve correctly
+    let c = ClusterConfig::edge_testbed_3_for(&tiny());
+    for k in [1usize, 8] {
+        let mut m = tiny();
+        m.top_k = k;
+        let w = WorkloadConfig::bigbench(10.0);
+        let trace = TraceGenerator::new(&m, &w, 7).gen_count(5);
+        let rep = run(&m, &c, &w, &trace, Mode::Collaborative);
+        assert_eq!(rep.records.len(), 15, "top_k={k}");
+        // token invocations per request = tokens × k × layers
+        for r in &rep.records {
+            let total =
+                r.local_token_invocations + r.remote_token_invocations;
+            assert!(total > 0.0);
+        }
+    }
+}
+
+#[test]
+fn slow_gpu_server_becomes_bottleneck() {
+    // failure injection: one server's GPU degrades 10× (thermal throttling,
+    // contention, ...). Its latency must rise relative to the healthy run.
+    let m = tiny();
+    let w = WorkloadConfig::bigbench(3.0);
+    let trace = TraceGenerator::new(&m, &w, 11).gen_count(30);
+    let healthy = ClusterConfig::edge_testbed_3_for(&m);
+    let mut degraded = healthy.clone();
+    degraded.servers[1].gpus[0].flops /= 10.0;
+    // also slow its expert dispatch (overhead dominates tiny models)
+    let h = run(&m, &healthy, &w, &trace, Mode::Collaborative);
+    let d = run(&m, &degraded, &w, &trace, Mode::Collaborative);
+    assert!(
+        d.server_avg_latency(1) >= h.server_avg_latency(1),
+        "degraded {:.4} vs healthy {:.4}",
+        d.server_avg_latency(1),
+        h.server_avg_latency(1)
+    );
+}
+
+#[test]
+fn extreme_bandwidth_bounds() {
+    let m = tiny();
+    let w = WorkloadConfig::bigbench(5.0);
+    let trace = TraceGenerator::new(&m, &w, 13).gen_count(15);
+    let mut crawl = ClusterConfig::edge_testbed_3_for(&m);
+    crawl.bandwidth_bps = 1e6; // 1 Mbps
+    let mut fiber = ClusterConfig::edge_testbed_3_for(&m);
+    fiber.bandwidth_bps = 100e9; // 100 Gbps
+    let slow = run(&m, &crawl, &w, &trace, Mode::Collaborative);
+    let fast = run(&m, &fiber, &w, &trace, Mode::Collaborative);
+    assert!(slow.avg_latency() >= fast.avg_latency());
+    assert!(fast.avg_latency().is_finite());
+}
+
+#[test]
+fn prop_json_fuzz_never_panics_and_roundtrips() {
+    // generated JSON values always serialize → parse → equal
+    check("json roundtrip", 150, |g| {
+        fn gen_value(g: &mut dancemoe::util::prop::Gen, depth: usize) -> Json {
+            let choice = g.usize_in(0, if depth > 2 { 3 } else { 5 });
+            match choice {
+                0 => Json::Null,
+                1 => Json::Bool(g.bool()),
+                2 => Json::Num((g.f64_in(-1e9, 1e9) * 100.0).round() / 100.0),
+                3 => {
+                    let n = g.usize_in(0, 8);
+                    Json::Str(
+                        (0..n)
+                            .map(|i| {
+                                char::from(
+                                    b'a' + ((i * 7 + n) % 26) as u8,
+                                )
+                            })
+                            .chain("\"\\\n é".chars())
+                            .collect(),
+                    )
+                }
+                4 => Json::Arr(
+                    (0..g.usize_in(0, 4))
+                        .map(|_| gen_value(g, depth + 1))
+                        .collect(),
+                ),
+                _ => {
+                    let mut obj = Json::obj();
+                    for i in 0..g.usize_in(0, 4) {
+                        obj.set(&format!("k{i}"), gen_value(g, depth + 1));
+                    }
+                    obj
+                }
+            }
+        }
+        let v = gen_value(g, 0);
+        let text = v.to_string();
+        let back = Json::parse(&text).unwrap_or_else(|e| {
+            panic!("reparse failed: {e} for {text}");
+        });
+        assert_prop(back == v, "roundtrip mismatch");
+        // pretty form also reparses
+        let back2 = Json::parse(&v.pretty()).unwrap();
+        assert_prop(back2 == v, "pretty roundtrip mismatch");
+    });
+}
+
+#[test]
+fn prop_garbage_json_never_panics() {
+    check("json garbage", 200, |g| {
+        let len = g.usize_in(0, 40);
+        let bytes: Vec<u8> = (0..len)
+            .map(|_| {
+                let printable = g.usize_in(32, 126) as u8;
+                printable
+            })
+            .collect();
+        let text = String::from_utf8_lossy(&bytes).to_string();
+        let _ = Json::parse(&text); // must not panic, Ok or Err both fine
+    });
+}
+
+#[test]
+fn offload_cache_thrash_under_uniform_profile() {
+    // A model much larger than the cache with uniform activations must
+    // show a lower hit rate (higher latency) than a skewed one.
+    let m = ModelConfig::mixtral_8x7b_sim();
+    let c = ClusterConfig::edge_testbed_3_for(&m);
+    let mk = |task: TaskKind| WorkloadConfig {
+        name: "x".into(),
+        streams: vec![
+            StreamConfig {
+                task,
+                mean_interarrival_s: 15.0,
+                mean_prompt_tokens: 64,
+                output_tokens: 4,
+            };
+            3
+        ],
+    };
+    // arithmetic has strongly-skewed layers; wikitext is its own mix — we
+    // compare the same task against an artificially uniformized model by
+    // raising top_k (more experts touched per token ⇒ more cache pressure)
+    let w = mk(TaskKind::Arithmetic);
+    let trace = TraceGenerator::new(&m, &w, 17).gen_count(15);
+    let low_pressure = run(&m, &c, &w, &trace, Mode::Offload { lb: false });
+    let mut m8 = m.clone();
+    m8.top_k = 8;
+    let trace8 = TraceGenerator::new(&m8, &w, 17).gen_count(15);
+    let high_pressure =
+        run(&m8, &c, &w, &trace8, Mode::Offload { lb: false });
+    assert!(
+        high_pressure.avg_latency() > low_pressure.avg_latency(),
+        "top-8 {:.2}s should thrash more than top-2 {:.2}s",
+        high_pressure.avg_latency(),
+        low_pressure.avg_latency()
+    );
+}

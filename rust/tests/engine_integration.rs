@@ -1,0 +1,189 @@
+//! Integration tests over the discrete-event engine: conservation laws,
+//! time monotonicity, queueing behaviour, and cross-mode comparisons.
+
+use dancemoe::config::{ClusterConfig, ModelConfig, WorkloadConfig};
+use dancemoe::engine::{
+    warm_stats, CostModel, Engine, EngineConfig, Mode, ServeReport,
+};
+use dancemoe::placement::PlacementAlgo;
+use dancemoe::trace::TraceGenerator;
+use dancemoe::util::prop::{assert_prop, check};
+
+fn small_model() -> ModelConfig {
+    let mut m = ModelConfig::mixtral_8x7b_sim();
+    m.num_layers = 6;
+    m
+}
+
+fn run(
+    model: &ModelConfig,
+    workload: &WorkloadConfig,
+    algo: PlacementAlgo,
+    mode: Mode,
+    n: usize,
+    seed: u64,
+) -> ServeReport {
+    let cluster = ClusterConfig::edge_testbed_3_for(model);
+    let stats = warm_stats(model, workload);
+    let placement = algo.compute(model, &cluster, &stats, seed);
+    let mut eng = Engine::new(
+        model,
+        &cluster,
+        placement,
+        EngineConfig {
+            mode,
+            seed,
+            ..EngineConfig::default()
+        },
+        CostModel::default(),
+    );
+    let trace = TraceGenerator::new(model, workload, seed).gen_count(n);
+    eng.push_trace(&trace);
+    eng.run();
+    std::mem::replace(&mut eng.report, ServeReport::new(3, 60.0))
+}
+
+#[test]
+fn conservation_every_request_finishes_once() {
+    let m = small_model();
+    let w = WorkloadConfig::bigbench(8.0);
+    let rep = run(&m, &w, PlacementAlgo::DanceMoE, Mode::Collaborative, 25, 3);
+    assert_eq!(rep.records.len(), 75);
+    let mut ids: Vec<usize> = rep.records.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), 75, "duplicate completions");
+}
+
+#[test]
+fn latency_decomposition_adds_up() {
+    // local + remote token invocations per request = tokens × top_k × layers
+    let m = small_model();
+    let w = WorkloadConfig::bigbench(8.0);
+    let rep = run(&m, &w, PlacementAlgo::Uniform, Mode::Collaborative, 10, 5);
+    for r in &rep.records {
+        let total = r.local_token_invocations + r.remote_token_invocations;
+        assert!(total > 0.0);
+        // every routed token appears exactly once per (layer, k-slot)
+        let per_pass = m.top_k as f64 * m.num_layers as f64;
+        let tokens = total / per_pass;
+        assert!(
+            tokens > 8.0,
+            "request routed fewer tokens than the minimum prompt"
+        );
+    }
+}
+
+#[test]
+fn heavier_load_increases_latency() {
+    let m = small_model();
+    let light = run(
+        &m,
+        &WorkloadConfig::bigbench(30.0),
+        PlacementAlgo::DanceMoE,
+        Mode::Collaborative,
+        25,
+        7,
+    );
+    let heavy = run(
+        &m,
+        &WorkloadConfig::bigbench(0.5),
+        PlacementAlgo::DanceMoE,
+        Mode::Collaborative,
+        25,
+        7,
+    );
+    assert!(
+        heavy.avg_latency() > light.avg_latency(),
+        "queueing must show: heavy {:.3}s vs light {:.3}s",
+        heavy.avg_latency(),
+        light.avg_latency()
+    );
+}
+
+#[test]
+fn lower_bandwidth_hurts_remote_heavy_placements() {
+    let m = small_model();
+    let w = WorkloadConfig::bigbench(10.0);
+    let stats = warm_stats(&m, &w);
+    let mut slow_cluster = ClusterConfig::edge_testbed_3_for(&m);
+    slow_cluster.bandwidth_bps = 50e6; // 10× slower than the testbed
+    let fast_cluster = ClusterConfig::edge_testbed_3_for(&m);
+    let trace = TraceGenerator::new(&m, &w, 9).gen_count(15);
+    let mut lat = Vec::new();
+    for cluster in [&fast_cluster, &slow_cluster] {
+        let placement =
+            PlacementAlgo::Uniform.compute(&m, cluster, &stats, 9);
+        let mut eng = Engine::new(
+            &m,
+            cluster,
+            placement,
+            EngineConfig {
+                seed: 9,
+                ..EngineConfig::default()
+            },
+            CostModel::default(),
+        );
+        eng.push_trace(&trace);
+        eng.run();
+        lat.push(eng.report.avg_latency());
+    }
+    assert!(
+        lat[1] > lat[0] * 1.2,
+        "slow net {:.2}s should clearly exceed fast net {:.2}s",
+        lat[1],
+        lat[0]
+    );
+}
+
+#[test]
+fn offload_thrash_vs_collaboration_table1_shape() {
+    // Table I's core claim: collaboration beats per-server offloading under
+    // imbalanced, skew-mismatched load.
+    let m = ModelConfig::mixtral_8x7b_sim(); // full size for cache pressure
+    let mut w = WorkloadConfig::bigbench(10.0);
+    w.streams[0].mean_interarrival_s = 4.0;
+    let offload = run(&m, &w, PlacementAlgo::Uniform, Mode::Offload { lb: false }, 15, 11);
+    let collab = run(&m, &w, PlacementAlgo::Redundance, Mode::Collaborative, 15, 11);
+    assert!(
+        collab.avg_latency() < offload.avg_latency(),
+        "collab {:.2}s vs offload {:.2}s",
+        collab.avg_latency(),
+        offload.avg_latency()
+    );
+}
+
+#[test]
+fn prop_engine_records_are_causal() {
+    check("causal records", 15, |g| {
+        let m = small_model();
+        let w = WorkloadConfig::bigbench(g.f64_in(2.0, 20.0));
+        let seed = g.usize_in(0, 500) as u64;
+        let rep = run(&m, &w, PlacementAlgo::DanceMoE, Mode::Collaborative, 8, seed);
+        for r in &rep.records {
+            assert_prop(r.done_s >= r.arrival_s, "completion before arrival");
+            assert_prop(r.latency_s >= 0.0, "negative latency");
+        }
+        // makespan is the max completion
+        let max_done = rep
+            .records
+            .iter()
+            .map(|r| r.done_s)
+            .fold(0.0f64, f64::max);
+        assert_prop(
+            (rep.makespan_s - max_done).abs() < 1e-9,
+            "makespan mismatch",
+        );
+    });
+}
+
+#[test]
+fn gpu_utilization_accounting_consistent() {
+    let m = small_model();
+    let w = WorkloadConfig::bigbench(10.0);
+    let rep = run(&m, &w, PlacementAlgo::DanceMoE, Mode::Collaborative, 20, 13);
+    let busy: f64 = rep.gpu_busy_s.iter().sum();
+    assert!(busy > 0.0);
+    // busy time can't exceed makespan × #GPUs
+    assert!(busy <= rep.makespan_s * 4.0 + 1e-6);
+}

@@ -1,0 +1,224 @@
+//! Property-based tests on the coordinator's placement invariants
+//! (DESIGN.md §7), driven by the in-repo `util::prop` harness.
+
+use dancemoe::config::{ClusterConfig, GpuConfig, ModelConfig, ServerConfig};
+use dancemoe::moe::ActivationStats;
+use dancemoe::placement::{
+    dancemoe_place, entropy_alloc, migration, objective, PlacementAlgo,
+};
+use dancemoe::util::prop::{assert_prop, check, Gen};
+
+/// Random-but-valid (model, cluster, stats) instances.
+fn gen_world(g: &mut Gen) -> (ModelConfig, ClusterConfig, ActivationStats) {
+    let mut model = ModelConfig::mixtral_8x7b_sim();
+    model.num_layers = g.usize_in(1, 6);
+    model.num_experts = *g.pick(&[4usize, 8, 16]);
+    model.top_k = g.usize_in(1, 2.min(model.num_experts));
+
+    let nsrv = g.usize_in(2, 4);
+    let mut servers = Vec::new();
+    for s in 0..nsrv {
+        let gpus = g.usize_in(1, 2);
+        servers.push(ServerConfig {
+            name: format!("s{s}"),
+            gpus: (0..gpus)
+                .map(|_| GpuConfig {
+                    // capacity between 40% and 150% of a full expert set
+                    // per GPU — spans infeasible and redundant regimes
+                    mem_bytes: (model.expert_bytes as f64
+                        * model.total_experts() as f64
+                        * g.f64_in(0.4, 1.5)
+                        / (nsrv as f64))
+                        as u64,
+                    flops: 100e12 * g.f64_in(0.5, 1.0),
+                    pcie_bps: 16e9,
+                })
+                .collect(),
+        });
+    }
+    let cluster = ClusterConfig {
+        name: "prop".into(),
+        servers,
+        bandwidth_bps: 500e6,
+        rtt_s: 0.002,
+    };
+    let mut stats = ActivationStats::new(&model, nsrv);
+    for n in 0..nsrv {
+        for l in 0..model.num_layers {
+            let w = g.weights(model.num_experts);
+            for (e, &x) in w.iter().enumerate() {
+                if x > 0.0 {
+                    stats.record(n, l, e, x * 100.0);
+                }
+            }
+        }
+    }
+    (model, cluster, stats)
+}
+
+#[test]
+fn prop_placements_never_violate_memory() {
+    check("memory bound", 60, |g| {
+        let (model, cluster, stats) = gen_world(g);
+        let seed = g.usize_in(0, 1000) as u64;
+        for algo in PlacementAlgo::all() {
+            let p = algo.compute(&model, &cluster, &stats, seed);
+            for s in 0..p.num_servers {
+                for gi in 0..p.gpus[s] {
+                    assert_prop(
+                        p.mem_used(s, gi) <= p.mem_cap[s][gi],
+                        &format!("{} overflows s{s}g{gi}", algo.name()),
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_feasible_clusters_get_full_coverage() {
+    check("coverage", 60, |g| {
+        let (model, cluster, stats) = gen_world(g);
+        // feasibility at physical (per-GPU) granularity with 2× headroom
+        let slots = gpu_slots(&cluster, &model);
+        if slots < model.total_experts() * 2 {
+            return; // tight instance: best-effort coverage only
+        }
+        let seed = g.usize_in(0, 1000) as u64;
+        for algo in PlacementAlgo::all() {
+            let p = algo.compute(&model, &cluster, &stats, seed);
+            assert_prop(
+                p.missing_experts().is_empty(),
+                &format!(
+                    "{} missing {} experts with 2x slots",
+                    algo.name(),
+                    p.missing_experts().len()
+                ),
+            );
+        }
+    });
+}
+
+/// Capacity in whole experts, floored at the granularity the algorithm
+/// actually allocates at (per server for Algorithm 1's count stage).
+fn server_slots(cluster: &ClusterConfig, model: &ModelConfig) -> usize {
+    cluster
+        .servers
+        .iter()
+        .map(|s| (s.total_mem() / model.expert_bytes) as usize)
+        .sum()
+}
+
+/// Per-GPU floored capacity (what physical packing can actually hold).
+fn gpu_slots(cluster: &ClusterConfig, model: &ModelConfig) -> usize {
+    cluster
+        .servers
+        .iter()
+        .flat_map(|s| s.gpus.iter())
+        .map(|gc| (gc.mem_bytes / model.expert_bytes) as usize)
+        .sum()
+}
+
+#[test]
+fn prop_algorithm1_totals_cover_each_layer() {
+    check("alg1 totals", 80, |g| {
+        let (model, cluster, stats) = gen_world(g);
+        let counts = entropy_alloc::expert_counts(&model, &cluster, &stats);
+        let feasible =
+            server_slots(&cluster, &model) >= model.total_experts();
+        let shortfall = entropy_alloc::coverage_shortfall(&model, &counts);
+        if feasible {
+            assert_prop(
+                shortfall.iter().all(|&s| s == 0),
+                &format!("shortfall {shortfall:?} on feasible instance"),
+            );
+        }
+        // counts never exceed capacity or layer size
+        for (n, row) in counts.iter().enumerate() {
+            let cap = (cluster.servers[n].total_mem()
+                / model.expert_bytes) as usize;
+            assert_prop(
+                row.iter().sum::<usize>() <= cap,
+                "count exceeds capacity",
+            );
+            assert_prop(
+                row.iter().all(|&c| c <= model.num_experts),
+                "count exceeds layer size",
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_dancemoe_remote_mass_not_worse_than_uniform() {
+    check("dancemoe vs uniform objective", 40, |g| {
+        let (model, cluster, stats) = gen_world(g);
+        if gpu_slots(&cluster, &model) < model.total_experts() * 2 {
+            return;
+        }
+        let ours = dancemoe_place(&model, &cluster, &stats);
+        let uni = PlacementAlgo::Uniform.compute(&model, &cluster, &stats, 0);
+        let mass_ours = objective::remote_mass(&ours, &stats);
+        let mass_uni = objective::remote_mass(&uni, &stats);
+        assert_prop(
+            mass_ours <= mass_uni * 1.001 + 1e-9,
+            &format!("ours {mass_ours:.1} > uniform {mass_uni:.1}"),
+        );
+    });
+}
+
+#[test]
+fn prop_migration_adoption_is_consistent() {
+    check("eq4 consistency", 40, |g| {
+        let (model, cluster, stats) = gen_world(g);
+        let seed = g.usize_in(0, 100) as u64;
+        let old =
+            PlacementAlgo::Redundance.compute(&model, &cluster, &stats, seed);
+        let new = dancemoe_place(&model, &cluster, &stats);
+        let ctx = migration::MigrationCtx::default();
+        let d = migration::should_migrate(
+            &old, &new, &model, &cluster, &stats, &ctx,
+        );
+        // adopt implies strict improvement including transfer cost
+        if d.adopt {
+            assert_prop(
+                d.cost_new_s + d.t_mig_s < d.cost_old_s,
+                "adopted without net saving",
+            );
+        } else {
+            assert_prop(
+                d.cost_new_s + d.t_mig_s >= d.cost_old_s,
+                "rejected despite net saving",
+            );
+        }
+        // self-migration is never adopted
+        let d2 = migration::should_migrate(
+            &old, &old, &model, &cluster, &stats, &ctx,
+        );
+        assert_prop(!d2.adopt, "self migration adopted");
+    });
+}
+
+#[test]
+fn prop_owner_lookup_consistency() {
+    check("owners vs server_has", 40, |g| {
+        let (model, cluster, stats) = gen_world(g);
+        let p = dancemoe_place(&model, &cluster, &stats);
+        for l in 0..model.num_layers {
+            for e in 0..model.num_experts {
+                let owners = p.owners(l, e);
+                for &(s, gi) in &owners {
+                    assert_prop(p.gpu_has(s, gi, l, e), "owner not on gpu");
+                    assert_prop(p.server_has(s, l, e), "owner not on server");
+                }
+                let n_servers_with: usize = (0..p.num_servers)
+                    .filter(|&s| p.server_has(s, l, e))
+                    .count();
+                assert_prop(
+                    n_servers_with <= owners.len(),
+                    "server_has without gpu owner",
+                );
+            }
+        }
+    });
+}

@@ -1,0 +1,143 @@
+//! Cross-language numerics: the Rust PJRT runtime must reproduce the
+//! outputs python exported into `artifacts/expected.json` bit-closely.
+//!
+//! These tests skip (pass trivially with a note) when artifacts have not
+//! been built — run `make artifacts` first for full coverage.
+
+use std::path::PathBuf;
+
+use dancemoe::runtime::Runtime;
+use dancemoe::util::json::Json;
+
+fn artifacts_dir() -> PathBuf {
+    // tests run from the package root
+    Runtime::default_dir()
+}
+
+fn load_expected() -> Option<Json> {
+    let dir = artifacts_dir();
+    if !Runtime::available(&dir) {
+        eprintln!("SKIP: no artifacts at {} (run `make artifacts`)", dir.display());
+        return None;
+    }
+    Json::read_file(&dir.join("expected.json")).ok()
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f32::max)
+}
+
+fn replay(name: &str, expected: &Json) -> (Vec<f32>, Vec<f32>) {
+    let dir = artifacts_dir();
+    let mut rt = Runtime::open(&dir).expect("runtime open");
+    let entry = expected.get(name).unwrap_or_else(|| {
+        panic!("expected.json lacks vector '{name}'");
+    });
+    let shapes: Vec<Vec<usize>> = entry
+        .req("input_shapes")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|s| s.to_usize_vec().unwrap())
+        .collect();
+    let inputs: Vec<Vec<f32>> = entry
+        .req("inputs")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|x| x.to_f32_vec().unwrap())
+        .collect();
+    let want = entry.req("output").unwrap().to_f32_vec().unwrap();
+    let refs: Vec<(&[f32], &[usize])> = inputs
+        .iter()
+        .zip(&shapes)
+        .map(|(d, s)| (d.as_slice(), s.as_slice()))
+        .collect();
+    let got = rt.run_f32(name, &refs).expect("execute");
+    (got, want)
+}
+
+#[test]
+fn expert_kernel_matches_python() {
+    let Some(expected) = load_expected() else { return };
+    for name in [
+        "expert_h64_f128_b1",
+        "expert_h64_f128_b8",
+        "expert_h64_f128_b32",
+    ] {
+        let (got, want) = replay(name, &expected);
+        assert_eq!(got.len(), want.len(), "{name}");
+        let d = max_abs_diff(&got, &want);
+        assert!(d < 1e-5, "{name}: max abs diff {d}");
+    }
+}
+
+#[test]
+fn gate_matches_python_both_expert_counts() {
+    let Some(expected) = load_expected() else { return };
+    for name in ["gate_h64_e8_b8", "gate_h64_e64_b8"] {
+        let (got, want) = replay(name, &expected);
+        let d = max_abs_diff(&got, &want);
+        assert!(d < 1e-6, "{name}: max abs diff {d}");
+        // rows are probability distributions
+        let e = if name.contains("e64") { 64 } else { 8 };
+        for row in got.chunks(e) {
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-4, "{name}: row sums to {s}");
+        }
+    }
+}
+
+#[test]
+fn nonmoe_matches_python() {
+    let Some(expected) = load_expected() else { return };
+    let (got, want) = replay("nonmoe_h64_b8", &expected);
+    let d = max_abs_diff(&got, &want);
+    assert!(d < 1e-5, "nonmoe: max abs diff {d}");
+}
+
+#[test]
+fn dense_moe_layer_oracle_matches_python() {
+    let Some(expected) = load_expected() else { return };
+    let (got, want) = replay("moe_layer_dense_h64_f128_e8_b8", &expected);
+    let d = max_abs_diff(&got, &want);
+    assert!(d < 1e-4, "dense oracle: max abs diff {d}");
+}
+
+#[test]
+fn executable_cache_reuses_compilations() {
+    let dir = artifacts_dir();
+    if !Runtime::available(&dir) {
+        eprintln!("SKIP: no artifacts");
+        return;
+    }
+    let mut rt = Runtime::open(&dir).unwrap();
+    assert_eq!(rt.cached(), 0);
+    rt.load("gate_h64_e8_b8").unwrap();
+    rt.load("gate_h64_e8_b8").unwrap();
+    assert_eq!(rt.cached(), 1);
+    rt.load("gate_h64_e8_b1").unwrap();
+    assert_eq!(rt.cached(), 2);
+}
+
+#[test]
+fn shape_mismatch_is_rejected() {
+    let dir = artifacts_dir();
+    if !Runtime::available(&dir) {
+        eprintln!("SKIP: no artifacts");
+        return;
+    }
+    let mut rt = Runtime::open(&dir).unwrap();
+    let bad = vec![0.0f32; 8 * 64];
+    // wrong second input shape
+    let err = rt.run_f32(
+        "gate_h64_e8_b8",
+        &[(&bad, &[8, 64]), (&bad[..64], &[8, 8])],
+    );
+    assert!(err.is_err());
+}
