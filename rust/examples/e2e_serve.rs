@@ -7,7 +7,9 @@
 //! owns routing, top-k, combine and batching. Python is not involved.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example e2e_serve
+//! (cd python && python -m compile.aot)
+//! # add the xla dependency in rust/Cargo.toml (see the note there), then:
+//! cargo run --release --features pjrt --example e2e_serve
 //! ```
 
 use std::time::Instant;
@@ -20,13 +22,15 @@ fn main() {
     let dir = Runtime::default_dir();
     if !Runtime::available(&dir) {
         eprintln!(
-            "no artifacts at {} — run `make artifacts` first",
+            "no artifacts at {} — build them with `cd python && python -m \
+             compile.aot`, then rebuild with --features pjrt",
             dir.display()
         );
         std::process::exit(1);
     }
     let model = ModelConfig::tiny(); // the artifacts' real compute shapes
     let mut rt = Runtime::open(&dir).expect("open artifacts");
+    #[cfg(feature = "pjrt")]
     println!(
         "PJRT platform: {} ({} devices)",
         rt.client.platform_name(),

@@ -1,0 +1,62 @@
+//! Live-serving demo: the online gateway on the paper's 3-server edge
+//! testbed, starting from a locality-blind uniform placement, with the
+//! stats bus driving placement refresh and migration from *online*
+//! measurements — compared against the same run with migration disabled.
+//!
+//! ```bash
+//! cargo run --release --example gateway_live
+//! ```
+
+use dancemoe::placement::uniform;
+use dancemoe::prelude::*;
+
+fn run(migrate: bool) -> GatewayReport {
+    let model = ModelConfig::deepseek_v2_lite_sim();
+    let cluster = ClusterConfig::edge_testbed_3_for(&model);
+    // ~6 req/s aggregate over the three task-specialized streams
+    let workload = WorkloadConfig::bigbench(0.5);
+    let mut gw = Gateway::new(
+        &model,
+        &cluster,
+        &workload,
+        uniform::place(&model, &cluster),
+        GatewayConfig {
+            horizon_s: 480.0,
+            seed: 42,
+            ..GatewayConfig::default()
+        },
+        CoordinatorConfig {
+            interval_s: 60.0,
+            migrate,
+            seed: 42,
+            ..CoordinatorConfig::default()
+        },
+    );
+    gw.run()
+}
+
+fn main() {
+    println!("online gateway, uniform start, live-stats migration ON…");
+    let adaptive = run(true);
+    println!("…and the same run with migration OFF (static uniform)…\n");
+    let static_ = run(false);
+
+    let show = |name: &str, r: &GatewayReport| {
+        println!(
+            "{name:<10} p50 {:>6.2}s  p99 {:>7.2}s  local {:.3}  \
+             shed {:>4}  migrations {}",
+            r.latency_percentile(0.50),
+            r.latency_percentile(0.99),
+            r.serve.local_ratio(),
+            r.shed,
+            r.migrations,
+        );
+    };
+    show("static", &static_);
+    show("adaptive", &adaptive);
+    println!(
+        "\nadaptive placement refreshes ran {} times from stats the bus \
+         collected online — no pre-seeded history.",
+        adaptive.refreshes
+    );
+}

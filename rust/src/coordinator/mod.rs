@@ -3,20 +3,29 @@
 //! placement pipeline, and executes migrations when Eq. 4 says the saving
 //! outweighs the transfer cost.
 //!
-//! The coordinator drives the engine in segments of `interval_s` virtual
-//! seconds. At every boundary it:
-//! 1. merges the engine's observed statistics into its decayed history,
+//! Statistics arrive over the live stats bus
+//! ([`crate::serve::statsbus::StatsBus`]): every interval the bus publishes
+//! the window's activation delta and the coordinator
+//! 1. [`Coordinator::ingest`]s it into its decayed history,
 //! 2. updates the historically-observed remote penalty (the paper's
 //!    "historical communication and computation time" estimator),
-//! 3. computes a candidate placement with the configured algorithm,
-//! 4. evaluates Eq. 4 and, if adopted, stages the migration in the engine
-//!    (destination GPUs blocked while loading, placement flips at the end).
+//! 3. computes a candidate placement with the configured algorithm, and
+//! 4. evaluates Eq. 4 ([`Coordinator::refresh`]) and, if adopted, stages
+//!    the migration in the engine (destination GPUs blocked while loading,
+//!    placement flips at the end).
+//!
+//! Two drivers feed this path: the offline trace replayer
+//! ([`Coordinator::run`]/[`Coordinator::drive`], used by the paper
+//! experiments) and the online gateway ([`crate::serve::Gateway`]), whose
+//! co-simulation loop calls [`Coordinator::on_interval`] directly — same
+//! scheduler, live measurements instead of a pre-seeded history.
 
 use crate::config::{ClusterConfig, ModelConfig};
 use crate::engine::{CostModel, Engine, EngineConfig, ServeReport};
 use crate::moe::ActivationStats;
 use crate::placement::migration::{self, MigrationCtx, MigrationDecision};
 use crate::placement::{Placement, PlacementAlgo};
+use crate::serve::statsbus::{StatsBus, StatsDelta};
 use crate::trace::Trace;
 
 /// Coordinator policy knobs.
@@ -73,9 +82,8 @@ pub struct Coordinator {
     /// decayed history of activation statistics
     pub history: ActivationStats,
     pub logs: Vec<IntervalLog>,
-    last_stats_total: f64,
-    /// snapshot of engine stats already folded into history
-    folded: Option<ActivationStats>,
+    /// live stats bus turning the engine's cumulative table into deltas
+    bus: StatsBus,
 }
 
 impl Coordinator {
@@ -87,8 +95,7 @@ impl Coordinator {
         Coordinator {
             history: ActivationStats::new(model, cluster.num_servers()),
             logs: Vec::new(),
-            last_stats_total: 0.0,
-            folded: None,
+            bus: StatsBus::new(model, cluster.num_servers()),
             model: model.clone(),
             cluster: cluster.clone(),
             cfg,
@@ -155,28 +162,43 @@ impl Coordinator {
         }
     }
 
-    fn on_interval(&mut self, engine: &mut Engine, t: f64) {
-        // ---- 1. fold observations into decayed history -------------------
-        let new_total = engine.stats.total();
-        let observed = new_total - self.last_stats_total;
-        self.last_stats_total = new_total;
-        self.history.decay(self.cfg.decay);
-        // add the *delta* of this interval: engine.stats is cumulative, so
-        // reconstruct the increment by subtracting what we already folded.
-        // (Simpler and numerically safe: decay history, then add the full
-        // cumulative scaled by (1 - decay) — instead we track increments.)
-        // We fold the increment by snapshotting engine stats at intervals:
-        self.fold_increment(engine);
+    /// One scheduling boundary: publish the interval's activation delta on
+    /// the stats bus, ingest it, and evaluate a placement refresh. Returns
+    /// `true` when a migration was adopted (and staged in the engine).
+    ///
+    /// The offline driver ([`Coordinator::drive`]) and the online gateway
+    /// both route through here, so every migration decision — replayed or
+    /// live — runs from bus-published measurements.
+    pub fn on_interval(&mut self, engine: &mut Engine, t: f64) -> bool {
+        let delta = self.bus.collect(&engine.stats, t);
+        self.ingest(&delta);
+        self.refresh(engine, &delta)
+    }
 
-        // ---- 2. candidate placement --------------------------------------
+    /// Fold one stats-bus delta into the decayed history (the paper's
+    /// drift-tracking accumulation, §III-C3).
+    pub fn ingest(&mut self, delta: &StatsDelta) {
+        self.history.decay(self.cfg.decay);
+        self.history.merge(&delta.stats);
+    }
+
+    /// Intervals the stats bus has published so far.
+    pub fn intervals_published(&self) -> u64 {
+        self.bus.published
+    }
+
+    /// Re-run the placement pipeline on the current history and apply the
+    /// Eq. 4 adoption rule. Returns `true` when a migration was staged.
+    pub fn refresh(&mut self, engine: &mut Engine, delta: &StatsDelta) -> bool {
+        let t = delta.t_s;
         if !self.cfg.migrate {
             self.logs.push(IntervalLog {
                 t_s: t,
                 decision: None,
                 remote_penalty_s: 0.0,
-                observed_tokens: observed,
+                observed_tokens: delta.tokens,
             });
-            return;
+            return false;
         }
         let candidate = self.cfg.algo.compute(
             &self.model,
@@ -185,7 +207,7 @@ impl Coordinator {
             self.cfg.seed,
         );
 
-        // ---- 3. Eq. 4 ------------------------------------------------------
+        // ---- Eq. 4 -------------------------------------------------------
         let penalty = self.remote_penalty_s(engine);
         let ctx = MigrationCtx {
             window_s: self.cfg.interval_s,
@@ -230,37 +252,9 @@ impl Coordinator {
             t_s: t,
             decision: Some(decision),
             remote_penalty_s: penalty,
-            observed_tokens: observed,
+            observed_tokens: delta.tokens,
         });
-    }
-
-    /// Fold the engine's cumulative stats increment into history.
-    fn fold_increment(&mut self, engine: &Engine) {
-        // engine.stats is cumulative over the run; history was just decayed.
-        // We keep a parallel "already folded" snapshot via last_local /
-        // last_remote trick being insufficient — instead we recompute the
-        // increment per cell from the cumulative table minus what history
-        // absorbed at previous folds, tracked in `folded` below.
-        if self.folded.is_none() {
-            self.folded = Some(ActivationStats::new(
-                &self.model,
-                self.cluster.num_servers(),
-            ));
-        }
-        let folded = self.folded.as_mut().unwrap();
-        for n in 0..self.history.num_servers() {
-            for l in 0..self.history.num_layers {
-                for e in 0..self.history.num_experts {
-                    let cum = engine.stats.raw(n, l, e);
-                    let prev = folded.raw(n, l, e);
-                    let inc = (cum - prev).max(0.0);
-                    if inc > 0.0 {
-                        self.history.record(n, l, e, inc);
-                        folded.record(n, l, e, inc);
-                    }
-                }
-            }
-        }
+        adopt
     }
 }
 
@@ -371,6 +365,33 @@ mod tests {
             "unexpected migrations: {:?}",
             report.migrations
         );
+    }
+
+    #[test]
+    fn ingest_decays_then_accumulates() {
+        let (m, c, _) = small();
+        let mut coord = Coordinator::new(
+            &m,
+            &c,
+            CoordinatorConfig {
+                decay: 0.5,
+                ..CoordinatorConfig::default()
+            },
+        );
+        let mut stats = ActivationStats::new(&m, 3);
+        stats.record(0, 0, 1, 8.0);
+        let delta = StatsDelta {
+            t_s: 60.0,
+            window_s: 60.0,
+            tokens: 8.0,
+            stats,
+        };
+        coord.ingest(&delta);
+        assert_eq!(coord.history.raw(0, 0, 1), 8.0);
+        coord.ingest(&delta);
+        // previous mass halved by the decay, the new delta added on top
+        assert_eq!(coord.history.raw(0, 0, 1), 12.0);
+        assert_eq!(coord.intervals_published(), 0, "ingest alone never publishes");
     }
 
     #[test]

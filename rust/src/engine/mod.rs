@@ -227,22 +227,51 @@ impl Engine {
     /// Load a trace (arrival events).
     pub fn push_trace(&mut self, trace: &Trace) {
         for r in &trace.requests {
-            let idx = self.reqs.len();
-            self.reqs.push(ReqState {
-                req: r.clone(),
-                exec_server: r.server,
-                layer: 0,
-                phase: Phase::Prefill,
-                pass_tokens: r.prompt_tokens as f64,
-                decode_passes_left: 0,
-                pending: 0,
-                layer_deadline: 0.0,
-                invs: Vec::new(),
-                local_tok: 0.0,
-                remote_tok: 0.0,
-            });
-            self.push_event(r.arrival_s, Ev::Arrive(idx));
+            let at = r.arrival_s;
+            self.push_request_at(r.clone(), at);
         }
+    }
+
+    /// Inject a single request whose engine-side processing starts at
+    /// `start_s` — the online gateway's batch-dispatch time. The request's
+    /// own `arrival_s` is preserved for latency accounting, so admission
+    /// queueing and batching delay count toward its reported latency.
+    /// Returns the engine-internal request index.
+    pub fn push_request_at(&mut self, req: Request, start_s: f64) -> usize {
+        let idx = self.reqs.len();
+        let start = start_s.max(req.arrival_s).max(self.now);
+        let exec_server = req.server;
+        let pass_tokens = req.prompt_tokens as f64;
+        self.reqs.push(ReqState {
+            req,
+            exec_server,
+            layer: 0,
+            phase: Phase::Prefill,
+            pass_tokens,
+            decode_passes_left: 0,
+            pending: 0,
+            layer_deadline: 0.0,
+            invs: Vec::new(),
+            local_tok: 0.0,
+            remote_tok: 0.0,
+        });
+        self.push_event(start, Ev::Arrive(idx));
+        idx
+    }
+
+    /// Time of the next pending event, if any (the gateway's co-simulation
+    /// loop uses this to step the engine while batches wait on in-flight
+    /// headroom).
+    pub fn next_event_time(&self) -> Option<f64> {
+        self.queue.peek().map(|Reverse((T(t), _, _))| *t)
+    }
+
+    /// The placement the engine is heading for: the staged migration
+    /// target while one is in flight, else the active placement. Online
+    /// routers retarget against this so requests follow the experts
+    /// instead of chasing a layout that is about to disappear.
+    pub fn target_placement(&self) -> &Placement {
+        self.pending_placement.as_ref().unwrap_or(&self.placement)
     }
 
     pub fn now(&self) -> f64 {
@@ -951,8 +980,10 @@ mod tests {
         assert!(apply_at > 0.0);
         assert_eq!(eng.report.migrations.len(), 1);
         assert_eq!(eng.placement, old); // not applied yet
+        assert_eq!(eng.target_placement(), &new); // ...but staged
         eng.run_until(apply_at + 1.0);
         assert_eq!(eng.placement, new);
+        assert_eq!(eng.target_placement(), &new);
     }
 
     #[test]
@@ -965,6 +996,58 @@ mod tests {
         assert_eq!(report.records.len(), 15);
         assert!(report.avg_latency() > 0.0);
         assert_eq!(report.latency_row().len(), 4);
+    }
+
+    #[test]
+    fn push_request_at_delays_start_keeps_arrival_latency() {
+        let (m, c, w) = small_world();
+        let trace = TraceGenerator::new(&m, &w, 15).gen_count(1);
+        let req = trace.requests[0].clone();
+        let run_with_delay = |delay: f64| {
+            let mut eng = Engine::new(
+                &m,
+                &c,
+                uniform::place(&m, &c),
+                EngineConfig {
+                    seed: 15,
+                    ..EngineConfig::default()
+                },
+                CostModel::default(),
+            );
+            eng.push_request_at(req.clone(), req.arrival_s + delay);
+            eng.run();
+            eng.report.records[0].clone()
+        };
+        let direct = run_with_delay(0.0);
+        let delayed = run_with_delay(10.0);
+        // dispatch delay shows up as extra latency against the original
+        // arrival time (queueing/batching wait is part of the SLO)
+        assert!(
+            delayed.latency_s > direct.latency_s + 9.9,
+            "delayed {:.3} vs direct {:.3}",
+            delayed.latency_s,
+            direct.latency_s
+        );
+        assert_eq!(delayed.arrival_s, direct.arrival_s);
+    }
+
+    #[test]
+    fn next_event_time_tracks_queue_head() {
+        let (m, c, w) = small_world();
+        let mut eng = Engine::new(
+            &m,
+            &c,
+            uniform::place(&m, &c),
+            EngineConfig::default(),
+            CostModel::default(),
+        );
+        assert_eq!(eng.next_event_time(), None);
+        let trace = TraceGenerator::new(&m, &w, 17).gen_count(2);
+        eng.push_trace(&trace);
+        let head = eng.next_event_time().unwrap();
+        assert_eq!(head, trace.requests[0].arrival_s);
+        eng.run();
+        assert_eq!(eng.next_event_time(), None);
     }
 
     #[test]

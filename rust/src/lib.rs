@@ -5,12 +5,13 @@
 //! (DanceMoE, CS.DC 2025) as a three-layer Rust + JAX + Pallas stack.
 //!
 //! The crate is the **Layer-3 coordinator**: it owns the request path,
-//! the discrete-event serving engine, the activation-aware placement
-//! algorithms (the paper's Algorithms 1 & 2), the migration policy
-//! (Eqs. 3–4), the network/cluster models standing in for the paper's
-//! Docker+tc testbed, and the PJRT runtime that executes the AOT-compiled
-//! JAX/Pallas compute pieces (Layers 2 and 1, built once by
-//! `make artifacts`; Python is never on the request path).
+//! the discrete-event serving engine, the online serving gateway, the
+//! activation-aware placement algorithms (the paper's Algorithms 1 & 2),
+//! the migration policy (Eqs. 3–4), the network/cluster models standing in
+//! for the paper's Docker+tc testbed, and the PJRT runtime that executes
+//! the AOT-compiled JAX/Pallas compute pieces (Layers 2 and 1, built once
+//! by `cd python && python -m compile.aot`; Python is never on the
+//! request path).
 //!
 //! ## Crate map
 //!
@@ -23,12 +24,13 @@
 //! | [`placement`] | Algorithms 1 & 2, baselines (Uniform / Redundance / SmartMoE / EPLB), proxy objective, migration |
 //! | [`net`] | bandwidth/RTT network model with per-link contention |
 //! | [`cluster`] | edge server + GPU state, memory accounting, offload store |
-//! | [`runtime`] | PJRT client, HLO artifact loading, typed execution, calibration |
+//! | [`runtime`] | PJRT client (feature `pjrt`) or stub backend, HLO artifact loading, typed execution, calibration |
 //! | [`engine`] | discrete-event serving engine + MoE-Infinity offload baseline |
+//! | [`serve`] | online gateway: open-loop arrivals, admission control, continuous batching, locality-aware routing, live stats bus |
 //! | [`coordinator`] | global scheduler: stats collection, periodic placement refresh, migration execution |
 //! | [`exp`] | one harness per paper table/figure (Table I/II, Fig 2/3/5/6/7/8) |
 //!
-//! ## Quickstart
+//! ## Quickstart (offline trace replay)
 //!
 //! ```no_run
 //! use dancemoe::prelude::*;
@@ -43,6 +45,36 @@
 //! let report = world.serve(&placement, 200);
 //! println!("avg latency: {:.2}s", report.avg_latency());
 //! ```
+//!
+//! ## Online serving (the gateway)
+//!
+//! ```no_run
+//! use dancemoe::prelude::*;
+//!
+//! let model = ModelConfig::deepseek_v2_lite_sim();
+//! let cluster = ClusterConfig::edge_testbed_3_for(&model);
+//! let workload = WorkloadConfig::bigbench(0.25); // ~12 req/s aggregate
+//!
+//! // Start from a locality-blind layout: every improvement must come from
+//! // the live stats bus feeding the coordinator's refresh loop.
+//! let initial = dancemoe::placement::uniform::place(&model, &cluster);
+//! let mut gw = Gateway::new(
+//!     &model,
+//!     &cluster,
+//!     &workload,
+//!     initial,
+//!     GatewayConfig::default(),
+//!     CoordinatorConfig::default(),
+//! );
+//! let report = gw.run();
+//! println!(
+//!     "p50 {:.2}s  p99 {:.2}s  shed {}  migrations {}",
+//!     report.latency_percentile(0.50),
+//!     report.latency_percentile(0.99),
+//!     report.shed,
+//!     report.migrations,
+//! );
+//! ```
 
 pub mod cluster;
 pub mod config;
@@ -53,6 +85,7 @@ pub mod moe;
 pub mod net;
 pub mod placement;
 pub mod runtime;
+pub mod serve;
 pub mod trace;
 pub mod util;
 
@@ -64,6 +97,9 @@ pub mod prelude {
     pub use crate::engine::{Engine, EngineConfig, ServeReport, World};
     pub use crate::moe::{ActivationStats, ExpertId, LayerId, ServerId};
     pub use crate::placement::{Placement, PlacementAlgo};
+    pub use crate::serve::{
+        ArrivalProfile, Gateway, GatewayConfig, GatewayReport,
+    };
     pub use crate::trace::{TaskProfile, Trace, TraceGenerator};
 }
 
@@ -86,6 +122,7 @@ pub enum Error {
 
 pub type Result<T> = std::result::Result<T, Error>;
 
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())

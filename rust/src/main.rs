@@ -7,11 +7,13 @@
 use std::path::PathBuf;
 use std::process::ExitCode;
 
-use dancemoe::config::{ClusterConfig, ModelConfig, WorkloadConfig};
+use dancemoe::config::{presets, ClusterConfig, ModelConfig, WorkloadConfig};
+use dancemoe::coordinator::CoordinatorConfig;
 use dancemoe::engine::warm_stats;
 use dancemoe::exp::runner::RunSpec;
-use dancemoe::placement::{objective, PlacementAlgo};
+use dancemoe::placement::{objective, uniform, PlacementAlgo};
 use dancemoe::runtime::{calibrate, forward, weights, Runtime};
+use dancemoe::serve::{ArrivalProfile, Gateway, GatewayConfig};
 use dancemoe::util::cli::{Args, Cli, Command};
 use dancemoe::util::table::Table;
 use dancemoe::{exp, Error};
@@ -35,6 +37,24 @@ fn cli() -> Cli {
                 .flag("requests", Some("100"), "requests per server")
                 .flag("seed", Some("0"), "rng seed")
                 .switch("migrate", "enable the 5-min migration loop"),
+            Command::new("gateway", "online serving: open-loop arrivals, \
+                          continuous batching, locality routing, live-stats \
+                          migration")
+                .flag("preset", Some("edge3"), "cluster preset (edge3|scaling<N>)")
+                .flag("model", Some("deepseek"), "model preset")
+                .flag("workload", Some("bigbench"), "bigbench|multidata")
+                .flag("rps", Some("12"), "aggregate arrival rate (req/s, whole cluster)")
+                .flag("profile", Some("poisson"), "arrival profile (poisson|bursty|diurnal)")
+                .flag("horizon", Some("600"), "virtual seconds of arrivals")
+                .flag("queue-cap", Some("64"), "per-server admission queue bound")
+                .flag("max-wait", Some("0.25"), "continuous-batching deadline (s)")
+                .flag("inflight", Some("64"), "per-server in-flight request cap")
+                .flag("slo", Some("15"), "latency SLO (s)")
+                .flag("interval", Some("60"), "stats-bus / placement-refresh interval (s)")
+                .flag("algo", Some("dancemoe"), "placement algorithm for refreshes")
+                .flag("seed", Some("0"), "rng seed")
+                .switch("no-migrate", "disable live migration")
+                .switch("home-routing", "disable locality-aware routing"),
             Command::new("exp", "regenerate a paper table/figure \
                           (table1|table2|fig2|fig3|fig5|fig6|fig7|fig8|ablations|all)")
                 .flag("seed", Some("7"), "rng seed")
@@ -159,6 +179,155 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+fn cmd_gateway(args: &Args) -> Result<(), String> {
+    let model = model_of(args)?;
+    let preset = args.get_str("preset");
+    let cluster = match preset.as_str() {
+        "edge3" => ClusterConfig::edge_testbed_3_for(&model),
+        other => {
+            let n: usize = other
+                .strip_prefix("scaling")
+                .and_then(|s| s.parse().ok())
+                .filter(|&n| n >= 1)
+                .ok_or(format!(
+                    "unknown preset '{other}' (edge3|scaling<N>)"
+                ))?;
+            ClusterConfig::scaling(n, presets::EDGE_BANDWIDTH_BPS)
+        }
+    };
+    let rps = args.get_f64("rps")?;
+    if rps <= 0.0 {
+        return Err("--rps must be positive".into());
+    }
+    // aggregate rate spread evenly over the per-server streams
+    let mean_interarrival_s = cluster.num_servers() as f64 / rps;
+    let workload = if cluster.num_servers() == 3 {
+        workload_of(args, mean_interarrival_s)?
+    } else if args.get_str("workload") == "bigbench" {
+        // the named workloads are 3-stream; scaling presets get the
+        // uniform task mix ("bigbench" is the flag default, so only a
+        // non-default request is an error below)
+        WorkloadConfig::scaling(cluster.num_servers(), mean_interarrival_s)
+    } else {
+        return Err(format!(
+            "--workload {} needs a 3-server preset; scaling presets use \
+             a uniform task mix",
+            args.get_str("workload")
+        ));
+    };
+    let profile = ArrivalProfile::from_name(&args.get_str("profile"))
+        .ok_or_else(|| {
+            format!("unknown profile '{}'", args.get_str("profile"))
+        })?;
+    let algo = PlacementAlgo::from_name(&args.get_str("algo"))
+        .map_err(|e| e.to_string())?;
+    let seed = args.get_u64("seed")?;
+    let horizon_s = args.get_f64("horizon")?;
+    let cfg = GatewayConfig {
+        horizon_s,
+        profile,
+        queue_cap: args.get_usize("queue-cap")?,
+        max_wait_s: args.get_f64("max-wait")?,
+        max_inflight: args.get_usize("inflight")?,
+        slo_s: args.get_f64("slo")?,
+        locality_routing: !args.switch("home-routing"),
+        seed,
+        ..GatewayConfig::default()
+    };
+    let interval_s = args.get_f64("interval")?;
+    if interval_s <= 0.0 {
+        return Err("--interval must be positive".into());
+    }
+    let coord_cfg = CoordinatorConfig {
+        interval_s,
+        algo,
+        migrate: !args.switch("no-migrate"),
+        seed,
+        ..CoordinatorConfig::default()
+    };
+    let slo_s = cfg.slo_s;
+
+    // Online-first: start from a locality-blind uniform layout with an
+    // empty scheduler history — every placement refresh below runs from
+    // stats the bus collected during this run.
+    let initial = uniform::place(&model, &cluster);
+    let mut gw =
+        Gateway::new(&model, &cluster, &workload, initial, cfg, coord_cfg);
+    let report = gw.run();
+
+    let mut t = Table::new(
+        &format!(
+            "gateway: {} on {} — {:.1} req/s {} arrivals, {:.0}s horizon",
+            model.name, cluster.name, rps, profile.name(), horizon_s
+        ),
+        &["Server", "served", "avg latency (s)", "p99 (s)"],
+    );
+    for n in 0..cluster.num_servers() {
+        let latencies: Vec<f64> = report
+            .serve
+            .records
+            .iter()
+            .filter(|r| r.server == n)
+            .map(|r| r.latency_s)
+            .collect();
+        t.row(vec![
+            cluster.servers[n].name.clone(),
+            format!("{}", latencies.len()),
+            format!(
+                "{:.2}",
+                dancemoe::util::stats::mean(&latencies)
+            ),
+            format!(
+                "{:.2}",
+                dancemoe::util::stats::percentile(&latencies, 0.99)
+            ),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "latency  p50 {:.2}s   p95 {:.2}s   p99 {:.2}s   \
+         (queueing + batching + serving)",
+        report.latency_percentile(0.50),
+        report.latency_percentile(0.95),
+        report.latency_percentile(0.99),
+    );
+    println!(
+        "load     offered {}   admitted {}   shed {}   spilled {}   \
+         throughput {:.2} req/s",
+        report.offered,
+        report.admitted,
+        report.shed,
+        report.spilled,
+        report.throughput_rps(),
+    );
+    println!(
+        "batching {} batches   avg size {:.2}   bucket fill {:.2}   \
+         local compute ratio {:.3}",
+        report.batches,
+        report.avg_batch_size(),
+        report.bucket_utilization(),
+        report.serve.local_ratio(),
+    );
+    println!(
+        "SLO {slo_s:.0}s: {} completed violations + {} shed = {:.1}% of \
+         offered",
+        report.slo_violations_completed(),
+        report.shed,
+        100.0 * report.slo_violation_rate(),
+    );
+    println!(
+        "control  {} stats-bus refreshes   {} migrations adopted",
+        report.refreshes, report.migrations,
+    );
+    for (at, moved, t_mig) in &report.serve.migrations {
+        println!(
+            "         migration @ t={at:.0}s: {moved} replicas, \
+             T_mig {t_mig:.2}s (from online stats)"
+        );
+    }
+    Ok(())
+}
+
 fn cmd_exp(args: &Args) -> Result<(), String> {
     let which = args
         .positional
@@ -212,12 +381,24 @@ fn cmd_exp(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+/// Suffix for artifact-gated commands on builds without the PJRT backend.
+fn pjrt_hint() -> &'static str {
+    if cfg!(feature = "pjrt") {
+        ""
+    } else {
+        ", add the xla dependency in rust/Cargo.toml (see the note there) \
+         and rebuild with --features pjrt"
+    }
+}
+
 fn cmd_calibrate(args: &Args) -> Result<(), String> {
     let dir = PathBuf::from(args.get_str("artifacts"));
     if !Runtime::available(&dir) {
         return Err(format!(
-            "no artifacts at {} — run `make artifacts` first",
-            dir.display()
+            "no artifacts at {} — build them with `cd python && python -m \
+             compile.aot` first{}",
+            dir.display(),
+            pjrt_hint()
         ));
     }
     let reps = args.get_usize("reps")?;
@@ -260,8 +441,10 @@ fn cmd_forward(args: &Args) -> Result<(), String> {
     let dir = PathBuf::from(args.get_str("artifacts"));
     if !Runtime::available(&dir) {
         return Err(format!(
-            "no artifacts at {} — run `make artifacts` first",
-            dir.display()
+            "no artifacts at {} — build them with `cd python && python -m \
+             compile.aot` first{}",
+            dir.display(),
+            pjrt_hint()
         ));
     }
     let tokens = args.get_usize("tokens")?;
@@ -318,6 +501,7 @@ fn main() -> ExitCode {
     let result = match cmd.as_str() {
         "place" => cmd_place(&args),
         "serve" => cmd_serve(&args),
+        "gateway" => cmd_gateway(&args),
         "exp" => cmd_exp(&args),
         "calibrate" => cmd_calibrate(&args),
         "forward" => cmd_forward(&args),

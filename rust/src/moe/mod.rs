@@ -150,6 +150,16 @@ impl ActivationStats {
         self.servers.iter_mut().for_each(|s| s.decay(factor));
     }
 
+    /// Element-wise accumulate another table (same shape) into this one —
+    /// the coordinator's online-ingestion path folds stats-bus deltas into
+    /// its decayed history with this.
+    pub fn merge(&mut self, other: &ActivationStats) {
+        debug_assert_eq!(self.servers.len(), other.servers.len());
+        for (a, b) in self.servers.iter_mut().zip(&other.servers) {
+            a.merge(b);
+        }
+    }
+
     pub fn reset(&mut self) {
         self.servers.iter_mut().for_each(|s| s.reset());
     }
@@ -288,5 +298,18 @@ mod tests {
         s.record(1, 0, 7, 4.0);
         let back = ActivationStats::from_json(&s.to_json()).unwrap();
         assert_eq!(s, back);
+    }
+
+    #[test]
+    fn cluster_merge_accumulates_per_server() {
+        let mut a = stats();
+        let mut b = stats();
+        a.record(0, 1, 2, 3.0);
+        b.record(0, 1, 2, 4.0);
+        b.record(1, 0, 0, 5.0);
+        a.merge(&b);
+        assert_eq!(a.raw(0, 1, 2), 7.0);
+        assert_eq!(a.raw(1, 0, 0), 5.0);
+        assert_eq!(a.total(), 12.0);
     }
 }

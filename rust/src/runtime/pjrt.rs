@@ -1,0 +1,107 @@
+//! The real PJRT backend (`--features pjrt`): loads AOT-compiled HLO
+//! artifacts and executes them through `xla::PjRtClient`.
+//!
+//! Wiring follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. One compiled executable per
+//! (piece, batch-bucket, expert-count) artifact; runtime batch shapes are
+//! padded up to the nearest bucket.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::runtime::Manifest;
+use crate::{Error, Result};
+
+/// A loaded, compiled artifact set.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+    dir: PathBuf,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (built by `python -m compile.aot`).
+    pub fn open(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(&dir.join("manifest.json"))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime {
+            client,
+            manifest,
+            dir: dir.to_path_buf(),
+            cache: HashMap::new(),
+        })
+    }
+
+    /// Default artifact location relative to the repo root.
+    pub fn default_dir() -> PathBuf {
+        crate::runtime::default_artifacts_dir()
+    }
+
+    /// Are artifacts present? (Tests skip gracefully when not built.)
+    pub fn available(dir: &Path) -> bool {
+        dir.join("manifest.json").exists()
+    }
+
+    /// Load (compile + cache) an artifact by name.
+    pub fn load(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(name) {
+            let entry = self.manifest.get(name)?;
+            let path = self.dir.join(&entry.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Execute an artifact on f32 inputs (shape-checked against the
+    /// manifest), returning the flattened f32 output.
+    ///
+    /// Artifacts were lowered with `return_tuple=True`, so the single
+    /// output is unwrapped with `to_tuple1`.
+    pub fn run_f32(
+        &mut self,
+        name: &str,
+        inputs: &[(&[f32], &[usize])],
+    ) -> Result<Vec<f32>> {
+        let entry = self.manifest.get(name)?.clone();
+        if inputs.len() != entry.inputs.len() {
+            return Err(Error::Runtime(format!(
+                "{name}: expected {} inputs, got {}",
+                entry.inputs.len(),
+                inputs.len()
+            )));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (data, shape)) in inputs.iter().enumerate() {
+            let want = &entry.inputs[i];
+            if *shape != want.as_slice() {
+                return Err(Error::Runtime(format!(
+                    "{name}: input {i} shape {shape:?} != manifest {want:?}"
+                )));
+            }
+            let n: usize = shape.iter().product();
+            if data.len() != n {
+                return Err(Error::Runtime(format!(
+                    "{name}: input {i} has {} elems, shape needs {n}",
+                    data.len()
+                )));
+            }
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            literals.push(xla::Literal::vec1(data).reshape(&dims)?);
+        }
+        let exe = self.load(name)?;
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached(&self) -> usize {
+        self.cache.len()
+    }
+}

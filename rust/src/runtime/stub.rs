@@ -1,0 +1,87 @@
+//! Stub PJRT backend, compiled when the `pjrt` feature is **off**.
+//!
+//! Machines without an XLA toolchain (CI, fresh clones) still get a crate
+//! that builds, tests and serves: every simulated-testbed path is untouched,
+//! and everything that would execute a compiled artifact reports a clear
+//! error instead. [`Runtime::available`] is always `false`, so the
+//! artifact-gated tests and examples skip cleanly rather than fail.
+
+use std::path::{Path, PathBuf};
+
+use crate::runtime::Manifest;
+use crate::{Error, Result};
+
+/// Placeholder for a compiled executable. Never constructed: the stub
+/// backend cannot compile artifacts, so [`Runtime::load`] always errors.
+#[derive(Debug, Clone, Copy)]
+pub struct StubExecutable;
+
+/// The no-XLA stand-in for the PJRT runtime. Field layout mirrors the real
+/// backend so downstream code (calibration, forward) compiles unchanged.
+pub struct Runtime {
+    pub manifest: Manifest,
+}
+
+fn unavailable(what: &str) -> Error {
+    Error::Runtime(format!(
+        "{what}: this build has no PJRT backend — add the `xla` dependency \
+         in rust/Cargo.toml (see the note there), then rebuild with \
+         `--features pjrt`"
+    ))
+}
+
+impl Runtime {
+    /// Always errors: artifacts cannot be executed without PJRT.
+    pub fn open(dir: &Path) -> Result<Runtime> {
+        Err(unavailable(&format!("open {}", dir.display())))
+    }
+
+    /// Default artifact location relative to the repo root.
+    pub fn default_dir() -> PathBuf {
+        crate::runtime::default_artifacts_dir()
+    }
+
+    /// Always `false`: even if artifacts exist on disk, this build cannot
+    /// execute them, so artifact-gated callers must skip.
+    pub fn available(_dir: &Path) -> bool {
+        false
+    }
+
+    /// Always errors (see [`Runtime::open`]).
+    pub fn load(&mut self, name: &str) -> Result<&StubExecutable> {
+        Err(unavailable(name))
+    }
+
+    /// Always errors (see [`Runtime::open`]).
+    pub fn run_f32(
+        &mut self,
+        name: &str,
+        _inputs: &[(&[f32], &[usize])],
+    ) -> Result<Vec<f32>> {
+        Err(unavailable(name))
+    }
+
+    /// Number of compiled executables currently cached (always 0).
+    pub fn cached(&self) -> usize {
+        0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_unavailable() {
+        assert!(!Runtime::available(Path::new("artifacts")));
+        let err = Runtime::open(Path::new("artifacts")).err().unwrap();
+        assert!(err.to_string().contains("pjrt"), "{err}");
+    }
+
+    #[test]
+    fn default_dir_respects_env() {
+        // no env set in the test harness by default
+        let d = Runtime::default_dir();
+        assert!(!d.as_os_str().is_empty());
+    }
+}

@@ -1,0 +1,180 @@
+//! Admission control: bounded per-server queues with shed-on-overflow
+//! backpressure.
+//!
+//! The gateway is open loop, so overload must go somewhere. Each server
+//! gets a FIFO admission queue with a hard bound; when a request's entire
+//! routing preference list is full, it is shed (counted, never served) —
+//! the SLO report charges shed requests as violations. The queues feed the
+//! continuous-batching scheduler ([`crate::serve::batcher`]), which also
+//! needs each entry's enqueue time for its max-wait deadline.
+
+use std::collections::VecDeque;
+
+use crate::trace::Request;
+
+/// One queued request plus its enqueue time (the batcher's deadline clock).
+#[derive(Debug, Clone)]
+pub struct Queued {
+    pub req: Request,
+    pub enqueued_s: f64,
+}
+
+/// Bounded per-server admission queues.
+#[derive(Debug, Clone)]
+pub struct AdmissionController {
+    cap: usize,
+    queues: Vec<VecDeque<Queued>>,
+    /// requests accepted into some queue
+    pub admitted: u64,
+    /// requests no queue could accept (backpressure)
+    pub shed: u64,
+}
+
+impl AdmissionController {
+    pub fn new(num_servers: usize, cap: usize) -> AdmissionController {
+        AdmissionController {
+            cap: cap.max(1),
+            queues: vec![VecDeque::new(); num_servers],
+            admitted: 0,
+            shed: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn num_servers(&self) -> usize {
+        self.queues.len()
+    }
+
+    pub fn depth(&self, server: usize) -> usize {
+        self.queues[server].len()
+    }
+
+    pub fn total_queued(&self) -> usize {
+        self.queues.iter().map(|q| q.len()).sum()
+    }
+
+    /// Try to enqueue at `server`. Returns `false` when the queue is at its
+    /// bound — the caller spills to its next routing choice or sheds.
+    pub fn offer(&mut self, server: usize, req: Request, now: f64) -> bool {
+        if self.queues[server].len() >= self.cap {
+            return false;
+        }
+        self.queues[server].push_back(Queued {
+            req,
+            enqueued_s: now,
+        });
+        self.admitted += 1;
+        true
+    }
+
+    /// Record a request that every candidate queue rejected.
+    pub fn record_shed(&mut self) {
+        self.shed += 1;
+    }
+
+    /// Enqueue time of the oldest request at `server` (deadline anchor).
+    pub fn oldest(&self, server: usize) -> Option<f64> {
+        self.queues[server].front().map(|q| q.enqueued_s)
+    }
+
+    /// Pop up to `n` requests from the front of `server`'s queue (FIFO).
+    pub fn pop(&mut self, server: usize, n: usize) -> Vec<Queued> {
+        let take = n.min(self.queues[server].len());
+        self.queues[server].drain(..take).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TaskKind;
+    use crate::util::prop;
+
+    fn req(id: usize, server: usize) -> Request {
+        Request {
+            id,
+            server,
+            arrival_s: id as f64,
+            prompt_tokens: 16,
+            output_tokens: 4,
+            task: TaskKind::Arithmetic,
+        }
+    }
+
+    #[test]
+    fn bounded_fifo() {
+        let mut adm = AdmissionController::new(2, 3);
+        for i in 0..3 {
+            assert!(adm.offer(0, req(i, 0), i as f64));
+        }
+        // bound reached: fourth offer is refused, other server unaffected
+        assert!(!adm.offer(0, req(3, 0), 3.0));
+        assert!(adm.offer(1, req(4, 1), 4.0));
+        assert_eq!(adm.depth(0), 3);
+        assert_eq!(adm.depth(1), 1);
+        assert_eq!(adm.admitted, 4);
+        let popped = adm.pop(0, 2);
+        assert_eq!(popped.len(), 2);
+        assert_eq!(popped[0].req.id, 0); // FIFO order
+        assert_eq!(popped[1].req.id, 1);
+        assert_eq!(adm.oldest(0), Some(2.0));
+    }
+
+    #[test]
+    fn prop_depth_never_exceeds_cap() {
+        prop::check("admission depth ≤ cap", 150, |g| {
+            let servers = g.usize_in(1, 4);
+            let cap = g.usize_in(1, 16);
+            let mut adm = AdmissionController::new(servers, cap);
+            let mut offered = 0u64;
+            let mut refused = 0u64;
+            for i in 0..g.usize_in(0, 200) {
+                let s = g.usize_in(0, servers - 1);
+                if g.bool() && adm.depth(s) > 0 {
+                    adm.pop(s, g.usize_in(1, cap));
+                    continue;
+                }
+                offered += 1;
+                if !adm.offer(s, req(i, s), i as f64) {
+                    refused += 1;
+                }
+                prop::assert_prop(
+                    adm.depth(s) <= cap,
+                    "queue depth exceeded its bound",
+                );
+            }
+            prop::assert_prop(
+                adm.admitted == offered - refused,
+                "admitted + refused must equal offered",
+            );
+        });
+    }
+
+    #[test]
+    fn prop_pop_preserves_fifo_and_conservation() {
+        prop::check("admission pop is FIFO", 100, |g| {
+            let cap = g.usize_in(2, 32);
+            let mut adm = AdmissionController::new(1, cap);
+            let n = g.usize_in(0, cap);
+            for i in 0..n {
+                assert!(adm.offer(0, req(i, 0), i as f64));
+            }
+            let k = g.usize_in(0, cap + 4);
+            let popped = adm.pop(0, k);
+            prop::assert_prop(
+                popped.len() == k.min(n),
+                "pop returns min(k, depth) items",
+            );
+            for (j, q) in popped.iter().enumerate() {
+                prop::assert_prop(q.req.id == j, "FIFO order violated");
+            }
+            prop::assert_prop(
+                adm.depth(0) == n - popped.len(),
+                "depth accounting broken",
+            );
+        });
+    }
+}

@@ -1,0 +1,306 @@
+//! Continuous batching: per-server batches sized to the runtime's batch
+//! buckets, dispatched when full or when the oldest member has waited the
+//! max-wait deadline — and only while the server has in-flight headroom.
+//!
+//! The batch cap is the largest AOT batch bucket (the compiled executables
+//! cannot take more rows in one pass); each dispatched [`Batch`] also
+//! records the bucket its size pads up to, via
+//! [`crate::runtime::bucket_for`]. The in-flight cap is the engine-side
+//! half of backpressure: batches beyond it stay queued, the admission
+//! queues above them fill, and overflow is shed at the front door.
+//!
+//! Modeling note: the discrete-event engine prices each request's passes
+//! individually, so batching currently buys *admission structure* (bounded
+//! dispatch, bucket-fill accounting via `bucket_slots`) rather than
+//! amortized compute; per-batch amortization lands when gateway batches
+//! feed the real PJRT runtime (see ROADMAP "Real PJRT serving").
+
+use crate::runtime::bucket_for;
+use crate::serve::admission::AdmissionController;
+use crate::trace::Request;
+
+/// One dispatched batch of requests for a single server.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub server: usize,
+    pub requests: Vec<Request>,
+    /// AOT batch bucket the batch pads up to.
+    pub bucket: usize,
+    /// Virtual time the batch was formed (dispatch time).
+    pub formed_s: f64,
+}
+
+/// Continuous-batching scheduler state.
+#[derive(Debug, Clone)]
+pub struct Batcher {
+    buckets: Vec<usize>,
+    /// Largest bucket = hard cap on requests per batch.
+    pub max_batch: usize,
+    /// Deadline: a partial batch dispatches once its oldest member has
+    /// waited this long.
+    pub max_wait_s: f64,
+    /// Cap on dispatched-but-unfinished requests per server.
+    pub max_inflight: usize,
+    inflight: Vec<usize>,
+    pub batches: u64,
+    pub batched_requests: u64,
+    /// Σ of dispatched batches' bucket sizes — `batched_requests /
+    /// bucket_slots` is the padding efficiency of the AOT executables.
+    pub bucket_slots: u64,
+}
+
+impl Batcher {
+    pub fn new(
+        num_servers: usize,
+        buckets: &[usize],
+        max_wait_s: f64,
+        max_inflight: usize,
+    ) -> Batcher {
+        let mut b: Vec<usize> = buckets.to_vec();
+        if b.is_empty() {
+            b.push(1);
+        }
+        b.sort_unstable();
+        let max_batch = *b.last().unwrap();
+        Batcher {
+            buckets: b,
+            max_batch,
+            max_wait_s,
+            max_inflight: max_inflight.max(1),
+            inflight: vec![0; num_servers],
+            batches: 0,
+            batched_requests: 0,
+            bucket_slots: 0,
+        }
+    }
+
+    pub fn inflight(&self, server: usize) -> usize {
+        self.inflight[server]
+    }
+
+    pub fn total_inflight(&self) -> usize {
+        self.inflight.iter().sum()
+    }
+
+    /// A request dispatched to `server` finished (frees one in-flight slot).
+    pub fn on_complete(&mut self, server: usize) {
+        self.inflight[server] = self.inflight[server].saturating_sub(1);
+    }
+
+    /// Is a batch at `server` formable at `now` (full, or deadline hit)?
+    fn formable(
+        &self,
+        adm: &AdmissionController,
+        server: usize,
+        now: f64,
+    ) -> bool {
+        let depth = adm.depth(server);
+        if depth == 0 {
+            return false;
+        }
+        depth >= self.max_batch
+            || adm
+                .oldest(server)
+                .map(|t0| now - t0 >= self.max_wait_s - 1e-9)
+                .unwrap_or(false)
+    }
+
+    /// Earliest max-wait deadline among queued requests — the gateway's
+    /// next scheduled batching decision.
+    pub fn next_deadline(&self, adm: &AdmissionController) -> Option<f64> {
+        (0..self.inflight.len())
+            .filter_map(|s| adm.oldest(s).map(|t0| t0 + self.max_wait_s))
+            .min_by(|a, b| a.partial_cmp(b).unwrap())
+    }
+
+    /// True when some server has a formable batch blocked only on in-flight
+    /// headroom (the gateway then waits on engine completions).
+    pub fn blocked_on_capacity(
+        &self,
+        adm: &AdmissionController,
+        now: f64,
+    ) -> bool {
+        (0..self.inflight.len()).any(|s| {
+            self.inflight[s] >= self.max_inflight
+                && self.formable(adm, s, now)
+        })
+    }
+
+    /// Form and return every batch dispatchable at `now`: full batches
+    /// first, deadline-expired partials after, each capped by the remaining
+    /// in-flight headroom of its server.
+    pub fn drain_ready(
+        &mut self,
+        adm: &mut AdmissionController,
+        now: f64,
+    ) -> Vec<Batch> {
+        let mut out = Vec::new();
+        for s in 0..self.inflight.len() {
+            while self.inflight[s] < self.max_inflight
+                && self.formable(adm, s, now)
+            {
+                let headroom = self.max_inflight - self.inflight[s];
+                let take = self.max_batch.min(headroom);
+                let members = adm.pop(s, take);
+                if members.is_empty() {
+                    break;
+                }
+                self.inflight[s] += members.len();
+                self.batches += 1;
+                self.batched_requests += members.len() as u64;
+                let requests: Vec<Request> =
+                    members.into_iter().map(|q| q.req).collect();
+                let bucket = bucket_for(&self.buckets, requests.len());
+                self.bucket_slots += bucket as u64;
+                out.push(Batch {
+                    server: s,
+                    bucket,
+                    requests,
+                    formed_s: now,
+                });
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TaskKind;
+    use crate::trace::Request;
+    use crate::util::prop;
+
+    fn req(id: usize, server: usize, at: f64) -> Request {
+        Request {
+            id,
+            server,
+            arrival_s: at,
+            prompt_tokens: 16,
+            output_tokens: 4,
+            task: TaskKind::Taco,
+        }
+    }
+
+    #[test]
+    fn full_batch_dispatches_immediately() {
+        let mut adm = AdmissionController::new(1, 64);
+        let mut b = Batcher::new(1, &[1, 8, 32], 0.25, 64);
+        for i in 0..32 {
+            adm.offer(0, req(i, 0, 0.0), 0.0);
+        }
+        let batches = b.drain_ready(&mut adm, 0.0);
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].requests.len(), 32);
+        assert_eq!(batches[0].bucket, 32);
+        assert_eq!(adm.depth(0), 0);
+        assert_eq!(b.inflight(0), 32);
+    }
+
+    #[test]
+    fn partial_batch_waits_for_deadline() {
+        let mut adm = AdmissionController::new(1, 64);
+        let mut b = Batcher::new(1, &[1, 8, 32], 0.25, 64);
+        for i in 0..5 {
+            adm.offer(0, req(i, 0, 1.0), 1.0);
+        }
+        assert!(b.drain_ready(&mut adm, 1.1).is_empty(), "too early");
+        assert_eq!(b.next_deadline(&adm), Some(1.25));
+        let batches = b.drain_ready(&mut adm, 1.25);
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].requests.len(), 5);
+        assert_eq!(batches[0].bucket, 8, "5 requests pad to bucket 8");
+    }
+
+    #[test]
+    fn inflight_cap_blocks_and_completions_release() {
+        let mut adm = AdmissionController::new(1, 64);
+        let mut b = Batcher::new(1, &[1, 8], 0.0, 8);
+        for i in 0..20 {
+            adm.offer(0, req(i, 0, 0.0), 0.0);
+        }
+        // max_wait 0: everything is instantly formable, but only 8 fit
+        let batches = b.drain_ready(&mut adm, 0.0);
+        assert_eq!(
+            batches.iter().map(|x| x.requests.len()).sum::<usize>(),
+            8
+        );
+        assert!(b.blocked_on_capacity(&adm, 0.0));
+        assert!(b.drain_ready(&mut adm, 1.0).is_empty());
+        for _ in 0..8 {
+            b.on_complete(0);
+        }
+        assert!(!b.blocked_on_capacity(&adm, 1.0) || adm.depth(0) > 0);
+        let more = b.drain_ready(&mut adm, 1.0);
+        assert_eq!(
+            more.iter().map(|x| x.requests.len()).sum::<usize>(),
+            8
+        );
+    }
+
+    #[test]
+    fn prop_batches_respect_bucket_and_inflight_bounds() {
+        prop::check("batch ≤ max bucket, inflight ≤ cap", 150, |g| {
+            let servers = g.usize_in(1, 3);
+            let buckets = [1usize, 8, 32];
+            let max_inflight = g.usize_in(1, 48);
+            let max_wait = g.f64_in(0.0, 0.5);
+            let mut adm = AdmissionController::new(servers, 64);
+            let mut b =
+                Batcher::new(servers, &buckets, max_wait, max_inflight);
+            let mut now = 0.0;
+            let mut id = 0;
+            for _ in 0..g.usize_in(1, 60) {
+                now += g.f64_in(0.0, 0.3);
+                let s = g.usize_in(0, servers - 1);
+                adm.offer(s, req(id, s, now), now);
+                id += 1;
+                if g.bool() && b.total_inflight() > 0 {
+                    let cs = g.usize_in(0, servers - 1);
+                    if b.inflight(cs) > 0 {
+                        b.on_complete(cs);
+                    }
+                }
+                for batch in b.drain_ready(&mut adm, now) {
+                    prop::assert_prop(
+                        !batch.requests.is_empty(),
+                        "empty batch dispatched",
+                    );
+                    prop::assert_prop(
+                        batch.requests.len() <= b.max_batch,
+                        "batch exceeds the largest bucket",
+                    );
+                    prop::assert_prop(
+                        batch.bucket >= batch.requests.len(),
+                        "bucket smaller than the batch",
+                    );
+                }
+                for s in 0..servers {
+                    prop::assert_prop(
+                        b.inflight(s) <= max_inflight,
+                        "inflight exceeds its cap",
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn prop_deadline_never_leaves_overdue_unblocked_work() {
+        prop::check("overdue batches dispatch when unblocked", 100, |g| {
+            let mut adm = AdmissionController::new(1, 64);
+            let max_wait = g.f64_in(0.05, 0.5);
+            let mut b = Batcher::new(1, &[1, 8, 32], max_wait, 64);
+            let n = g.usize_in(1, 40);
+            for i in 0..n {
+                adm.offer(0, req(i, 0, 0.0), 0.0);
+            }
+            // past every deadline, with full headroom: queue must drain
+            let _ = b.drain_ready(&mut adm, max_wait + 1.0);
+            prop::assert_prop(
+                adm.depth(0) == 0,
+                "overdue requests left queued despite headroom",
+            );
+        });
+    }
+}

@@ -1,0 +1,515 @@
+//! The **online serving gateway**: the live request path in front of the
+//! discrete-event engine.
+//!
+//! Offline replays (`World::serve`, the `exp/` harnesses) feed the engine a
+//! pre-generated trace; the gateway instead co-simulates the full online
+//! pipeline in virtual time:
+//!
+//! 1. an **open-loop arrival source** ([`arrival`]) — Poisson, bursty or
+//!    diurnal request streams that never wait for the system,
+//! 2. an **admission controller** ([`admission`]) — bounded per-server
+//!    queues; overflow is shed (backpressure, charged as SLO violations),
+//! 3. a **continuous-batching scheduler** ([`batcher`]) — batches sized to
+//!    the runtime's AOT batch buckets, dispatched when full or when the
+//!    oldest member hits the max-wait deadline, gated by an in-flight cap,
+//! 4. a **locality-aware router** ([`router`]) — each request goes to the
+//!    server hosting the largest activation-mass share of its task's hot
+//!    experts under the *current* placement (the paper's input-locality
+//!    insight, applied online),
+//! 5. a **live stats bus** ([`statsbus`]) — per-interval activation deltas
+//!    streamed into the [`Coordinator`], so placement refresh and
+//!    migration (Algorithms 1–2, Eqs. 3–4) run from online measurements
+//!    instead of a pre-seeded history.
+//!
+//! The whole loop is deterministic per seed, like everything else in the
+//! crate: given (model, cluster, workload, config, seed), two runs produce
+//! identical reports.
+
+pub mod admission;
+pub mod arrival;
+pub mod batcher;
+pub mod router;
+pub mod statsbus;
+
+pub use admission::AdmissionController;
+pub use arrival::{ArrivalProfile, ArrivalSource};
+pub use batcher::{Batch, Batcher};
+pub use router::LocalityRouter;
+pub use statsbus::{StatsBus, StatsDelta};
+
+use crate::config::{ClusterConfig, ModelConfig, WorkloadConfig};
+use crate::coordinator::{Coordinator, CoordinatorConfig};
+use crate::engine::{CostModel, Engine, EngineConfig, ServeReport};
+use crate::placement::Placement;
+use crate::trace::Request;
+
+/// Gateway tuning knobs.
+#[derive(Debug, Clone)]
+pub struct GatewayConfig {
+    /// Virtual seconds of open-loop arrivals (the run then drains).
+    pub horizon_s: f64,
+    /// Arrival-rate profile applied to every stream.
+    pub profile: ArrivalProfile,
+    /// Bounded admission queue per server; overflow sheds.
+    pub queue_cap: usize,
+    /// Runtime batch buckets; the largest is the per-batch request cap.
+    pub buckets: Vec<usize>,
+    /// Continuous-batching deadline: a partial batch dispatches once its
+    /// oldest member has waited this long.
+    pub max_wait_s: f64,
+    /// Dispatched-but-unfinished cap per server (engine-side backpressure).
+    pub max_inflight: usize,
+    /// Latency SLO for the violation report (queueing + serving, measured
+    /// from the request's arrival).
+    pub slo_s: f64,
+    /// Route to the server hosting the most of the task's activation mass
+    /// (`false` = always the stream's home server).
+    pub locality_routing: bool,
+    pub seed: u64,
+}
+
+impl Default for GatewayConfig {
+    fn default() -> Self {
+        GatewayConfig {
+            horizon_s: 600.0,
+            profile: ArrivalProfile::Poisson,
+            queue_cap: 64,
+            buckets: vec![1, 8, 32],
+            max_wait_s: 0.25,
+            max_inflight: 64,
+            slo_s: 15.0,
+            locality_routing: true,
+            seed: 0,
+        }
+    }
+}
+
+/// Everything one gateway run observed.
+#[derive(Debug, Clone)]
+pub struct GatewayReport {
+    /// Engine-side serving metrics (latency records, timeline, migrations).
+    pub serve: ServeReport,
+    /// Requests the arrival source produced.
+    pub offered: u64,
+    /// Requests accepted into some admission queue (all of these complete).
+    pub admitted: u64,
+    /// Requests every candidate queue rejected (never served).
+    pub shed: u64,
+    /// Admitted requests that spilled past their first routing choice.
+    pub spilled: u64,
+    pub batches: u64,
+    pub batched_requests: u64,
+    /// Σ of dispatched batches' AOT bucket sizes (padding accounting).
+    pub bucket_slots: u64,
+    /// Stats-bus intervals published (placement-refresh evaluations).
+    pub refreshes: u64,
+    /// Migrations adopted during the run.
+    pub migrations: usize,
+    pub slo_s: f64,
+}
+
+impl GatewayReport {
+    /// Latency percentile over completed requests; `q` in [0, 1].
+    pub fn latency_percentile(&self, q: f64) -> f64 {
+        self.serve.latency_percentile(q)
+    }
+
+    pub fn avg_batch_size(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batched_requests as f64 / self.batches as f64
+        }
+    }
+
+    /// Fraction of dispatched AOT bucket rows carrying a real request
+    /// (1.0 = every batch exactly filled its bucket; lower = padding).
+    pub fn bucket_utilization(&self) -> f64 {
+        if self.bucket_slots == 0 {
+            1.0
+        } else {
+            self.batched_requests as f64 / self.bucket_slots as f64
+        }
+    }
+
+    /// Completed requests whose latency (arrival → done, including
+    /// admission queueing and batching wait) exceeded the SLO.
+    pub fn slo_violations_completed(&self) -> u64 {
+        self.serve
+            .records
+            .iter()
+            .filter(|r| r.latency_s > self.slo_s)
+            .count() as u64
+    }
+
+    /// Violation rate over the *offered* load: shed requests count as
+    /// violations (they were never served at all).
+    pub fn slo_violation_rate(&self) -> f64 {
+        if self.offered == 0 {
+            0.0
+        } else {
+            (self.slo_violations_completed() + self.shed) as f64
+                / self.offered as f64
+        }
+    }
+
+    /// Completed requests per virtual second.
+    pub fn throughput_rps(&self) -> f64 {
+        self.serve.throughput()
+    }
+}
+
+/// The online serving gateway (see the module docs for the pipeline).
+pub struct Gateway {
+    pub cfg: GatewayConfig,
+    pub engine: Engine,
+    pub coordinator: Coordinator,
+    arrivals: ArrivalSource,
+    admission: AdmissionController,
+    batcher: Batcher,
+    router: LocalityRouter,
+    offered: u64,
+    spilled: u64,
+    completions_seen: usize,
+}
+
+impl Gateway {
+    /// Build a gateway over `initial` placement. The coordinator starts
+    /// with an *empty* history — every placement refresh runs from what
+    /// the stats bus observes online.
+    pub fn new(
+        model: &ModelConfig,
+        cluster: &ClusterConfig,
+        workload: &WorkloadConfig,
+        initial: Placement,
+        cfg: GatewayConfig,
+        coord_cfg: CoordinatorConfig,
+    ) -> Gateway {
+        let engine_cfg = EngineConfig {
+            seed: cfg.seed,
+            ..EngineConfig::default()
+        };
+        let engine = Engine::new(
+            model,
+            cluster,
+            initial,
+            engine_cfg,
+            CostModel::default(),
+        );
+        let router = LocalityRouter::new(model, &engine.placement);
+        Gateway {
+            arrivals: ArrivalSource::new(
+                workload,
+                cfg.profile,
+                cfg.horizon_s,
+                cfg.seed,
+            ),
+            admission: AdmissionController::new(
+                cluster.num_servers(),
+                cfg.queue_cap,
+            ),
+            batcher: Batcher::new(
+                cluster.num_servers(),
+                &cfg.buckets,
+                cfg.max_wait_s,
+                cfg.max_inflight,
+            ),
+            coordinator: Coordinator::new(model, cluster, coord_cfg),
+            engine,
+            router,
+            offered: 0,
+            spilled: 0,
+            completions_seen: 0,
+            cfg,
+        }
+    }
+
+    /// Drive the co-simulation to completion: arrivals over
+    /// `cfg.horizon_s`, then drain. Returns the run's report.
+    pub fn run(&mut self) -> GatewayReport {
+        // a non-positive interval would pin virtual time at 0 and spin;
+        // treat it as "never tick" instead
+        let interval = if self.coordinator.cfg.interval_s > 0.0 {
+            self.coordinator.cfg.interval_s
+        } else {
+            f64::INFINITY
+        };
+        let mut next_interval = interval;
+        let mut now = 0.0;
+        loop {
+            let t_arrival = self.arrivals.peek_time();
+            // future batch deadlines only; overdue batches are handled by
+            // the dispatch pass at the bottom of every iteration
+            let t_deadline = self
+                .batcher
+                .next_deadline(&self.admission)
+                .filter(|&t| t > now + 1e-9);
+            // engine completions matter when a formable batch waits on
+            // in-flight headroom
+            let t_engine = if self
+                .batcher
+                .blocked_on_capacity(&self.admission, now)
+            {
+                self.engine.next_event_time()
+            } else {
+                None
+            };
+            let t_gateway = [t_arrival, t_deadline, t_engine]
+                .into_iter()
+                .flatten()
+                .min_by(|a, b| a.partial_cmp(b).unwrap());
+
+            let work_left = t_arrival.is_some()
+                || self.admission.total_queued() > 0
+                || self.engine.next_event_time().is_some();
+            if !work_left {
+                break;
+            }
+
+            let t_next = match t_gateway {
+                Some(t) => t.min(next_interval),
+                None => next_interval,
+            };
+            self.engine.run_until(t_next);
+            now = t_next;
+            self.poll_completions();
+
+            if next_interval.is_finite() && now + 1e-9 >= next_interval {
+                self.interval_tick(now);
+                next_interval += interval;
+            }
+            while self
+                .arrivals
+                .peek_time()
+                .map(|t| t <= now + 1e-9)
+                .unwrap_or(false)
+            {
+                let req = self.arrivals.next_request().unwrap();
+                self.on_arrival(req, now);
+            }
+            self.dispatch_ready(now);
+        }
+        self.engine.finalize();
+        self.build_report()
+    }
+
+    /// Route an arrival down its preference list; shed if every queue is
+    /// at its bound.
+    fn on_arrival(&mut self, req: Request, now: f64) {
+        self.offered += 1;
+        let home = req.server;
+        // find the first preference with queue room (the router's ranked
+        // slice is precomputed — nothing allocates on this path)
+        let placed: Option<(usize, usize)> = {
+            let order: &[usize] = if self.cfg.locality_routing {
+                self.router.ranked(req.task, home)
+            } else {
+                std::slice::from_ref(&home)
+            };
+            let mut found = None;
+            for (rank, &server) in order.iter().enumerate() {
+                let mut routed = req.clone();
+                routed.server = server;
+                if self.admission.offer(server, routed, now) {
+                    found = Some((rank, server));
+                    break;
+                }
+            }
+            found
+        };
+        match placed {
+            Some((rank, _)) => {
+                if rank > 0 {
+                    self.spilled += 1;
+                }
+            }
+            None => self.admission.record_shed(),
+        }
+    }
+
+    /// Inject every dispatchable batch into the engine at `now`.
+    fn dispatch_ready(&mut self, now: f64) {
+        for batch in self.batcher.drain_ready(&mut self.admission, now) {
+            for req in batch.requests {
+                self.engine.push_request_at(req, now);
+            }
+        }
+    }
+
+    /// Account engine completions since the last poll (frees in-flight
+    /// slots for the batcher).
+    fn poll_completions(&mut self) {
+        let records = &self.engine.report.records;
+        while self.completions_seen < records.len() {
+            let server = records[self.completions_seen].server;
+            self.batcher.on_complete(server);
+            self.completions_seen += 1;
+        }
+    }
+
+    /// Stats-bus publish + placement refresh, then retarget the router.
+    /// Rebuilding against [`Engine::target_placement`] covers both cases:
+    /// a migration adopted *this* tick (routes follow the staged layout a
+    /// few virtual seconds before it applies, instead of chasing the old
+    /// one for a whole interval) and one applied since the previous tick.
+    fn interval_tick(&mut self, t: f64) {
+        self.coordinator.on_interval(&mut self.engine, t);
+        self.router.rebuild(self.engine.target_placement());
+    }
+
+    fn build_report(&mut self) -> GatewayReport {
+        let serve = std::mem::replace(
+            &mut self.engine.report,
+            ServeReport::new(
+                self.engine.cluster_cfg.num_servers(),
+                self.engine.cfg.bucket_s,
+            ),
+        );
+        GatewayReport {
+            offered: self.offered,
+            admitted: self.admission.admitted,
+            shed: self.admission.shed,
+            spilled: self.spilled,
+            batches: self.batcher.batches,
+            batched_requests: self.batcher.batched_requests,
+            bucket_slots: self.batcher.bucket_slots,
+            refreshes: self.coordinator.intervals_published(),
+            migrations: serve.migrations.len(),
+            slo_s: self.cfg.slo_s,
+            serve,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClusterConfig, ModelConfig, WorkloadConfig};
+    use crate::placement::uniform;
+
+    fn small() -> (ModelConfig, ClusterConfig, WorkloadConfig) {
+        let mut m = ModelConfig::mixtral_8x7b_sim();
+        m.num_layers = 4;
+        let c = ClusterConfig::edge_testbed_3_for(&m);
+        (m, c, WorkloadConfig::bigbench(2.0))
+    }
+
+    fn gateway(
+        cfg: GatewayConfig,
+        coord: CoordinatorConfig,
+    ) -> Gateway {
+        let (m, c, w) = small();
+        let initial = uniform::place(&m, &c);
+        Gateway::new(&m, &c, &w, initial, cfg, coord)
+    }
+
+    #[test]
+    fn every_admitted_request_completes() {
+        let mut gw = gateway(
+            GatewayConfig {
+                horizon_s: 120.0,
+                seed: 3,
+                ..GatewayConfig::default()
+            },
+            CoordinatorConfig {
+                interval_s: 30.0,
+                ..CoordinatorConfig::default()
+            },
+        );
+        let report = gw.run();
+        assert!(report.offered > 0);
+        assert_eq!(report.offered, report.admitted + report.shed);
+        assert_eq!(report.serve.records.len() as u64, report.admitted);
+        assert_eq!(report.batched_requests, report.admitted);
+        assert!(report.avg_batch_size() >= 1.0);
+        let fill = report.bucket_utilization();
+        assert!(fill > 0.0 && fill <= 1.0, "bucket fill {fill}");
+        assert!(report.refreshes >= 1, "stats bus must have published");
+        for r in &report.serve.records {
+            assert!(r.latency_s > 0.0);
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mk = || {
+            gateway(
+                GatewayConfig {
+                    horizon_s: 90.0,
+                    seed: 11,
+                    ..GatewayConfig::default()
+                },
+                CoordinatorConfig {
+                    interval_s: 30.0,
+                    ..CoordinatorConfig::default()
+                },
+            )
+        };
+        let a = mk().run();
+        let b = mk().run();
+        assert_eq!(a.offered, b.offered);
+        assert_eq!(a.shed, b.shed);
+        assert_eq!(a.batches, b.batches);
+        assert_eq!(a.serve.records.len(), b.serve.records.len());
+        for (x, y) in a.serve.records.iter().zip(&b.serve.records) {
+            assert_eq!(x.latency_s, y.latency_s);
+        }
+    }
+
+    #[test]
+    fn overload_sheds_instead_of_diverging() {
+        let (m, c, _) = small();
+        let w = WorkloadConfig::bigbench(0.02); // 50 req/s per server
+        let initial = uniform::place(&m, &c);
+        let mut gw = Gateway::new(
+            &m,
+            &c,
+            &w,
+            initial,
+            GatewayConfig {
+                horizon_s: 20.0,
+                queue_cap: 8,
+                max_inflight: 8,
+                seed: 5,
+                ..GatewayConfig::default()
+            },
+            CoordinatorConfig {
+                interval_s: 10.0,
+                ..CoordinatorConfig::default()
+            },
+        );
+        let report = gw.run();
+        assert!(report.shed > 0, "open-loop overload must shed");
+        assert_eq!(report.serve.records.len() as u64, report.admitted);
+        assert!(report.slo_violation_rate() > 0.0);
+        // queues were actually bounded
+        assert!(report.admitted < report.offered);
+    }
+
+    #[test]
+    fn home_routing_disables_spill() {
+        let mut gw = gateway(
+            GatewayConfig {
+                horizon_s: 60.0,
+                locality_routing: false,
+                seed: 7,
+                ..GatewayConfig::default()
+            },
+            CoordinatorConfig {
+                interval_s: 30.0,
+                migrate: false,
+                ..CoordinatorConfig::default()
+            },
+        );
+        let report = gw.run();
+        assert_eq!(report.spilled, 0);
+        // home routing: every stream is served by its own server, so all
+        // three servers see traffic (locality routing can concentrate)
+        for n in 0..3 {
+            assert!(
+                report.serve.records.iter().any(|r| r.server == n),
+                "home routing left server {n} idle"
+            );
+        }
+    }
+}

@@ -1,0 +1,238 @@
+//! Locality-aware request routing — the paper's input-locality insight
+//! applied *online*.
+//!
+//! DanceMoE's placement concentrates each task's hot experts near the
+//! server whose stream activates them (§III-B); the router closes the loop
+//! from the other side: score every server by the activation mass of the
+//! request's task profile it hosts under the *current* placement, and send
+//! the request to the best-scoring server. Under backpressure the router
+//! spills down its preference list instead of shedding outright. Scores
+//! are precomputed per (task, server) and rebuilt after migrations.
+
+use crate::config::{ModelConfig, TaskKind};
+use crate::placement::Placement;
+use crate::trace::TaskProfile;
+
+/// Activation mass of `profile` hosted locally by `server` under `p`:
+/// `Σ_l Σ_e profile[l][e] · 1[server holds (l, e)]`. Ranges over
+/// `[0, num_layers]` (each layer's distribution sums to 1).
+pub fn hosted_mass(
+    profile: &TaskProfile,
+    p: &Placement,
+    server: usize,
+) -> f64 {
+    let mut acc = 0.0;
+    for (l, dist) in profile.dist.iter().enumerate() {
+        for (e, &f) in dist.iter().enumerate() {
+            if f > 0.0 && p.server_has(server, l, e) {
+                acc += f;
+            }
+        }
+    }
+    acc
+}
+
+/// Precomputed per-(task, server) locality scores and preference orders.
+#[derive(Debug, Clone)]
+pub struct LocalityRouter {
+    profiles: Vec<TaskProfile>,
+    /// `scores[task][server]` — hosted activation mass.
+    scores: Vec<Vec<f64>>,
+    /// `pref[task][home]` — servers in descending preference order,
+    /// precomputed so the per-arrival hot path is allocation-free.
+    pref: Vec<Vec<Vec<usize>>>,
+    num_servers: usize,
+}
+
+impl LocalityRouter {
+    /// Build the router against an initial placement. Profiles are the
+    /// deterministic task profiles of the model (the same tables the
+    /// engine's gate samples from).
+    pub fn new(model: &ModelConfig, p: &Placement) -> LocalityRouter {
+        let mut r = LocalityRouter {
+            profiles: TaskProfile::build_all(model),
+            scores: Vec::new(),
+            pref: Vec::new(),
+            num_servers: p.num_servers,
+        };
+        r.rebuild(p);
+        r
+    }
+
+    /// Recompute the score table and preference permutations against a
+    /// (possibly migrated) placement.
+    pub fn rebuild(&mut self, p: &Placement) {
+        self.scores = self
+            .profiles
+            .iter()
+            .map(|prof| {
+                (0..self.num_servers)
+                    .map(|n| hosted_mass(prof, p, n))
+                    .collect()
+            })
+            .collect();
+        self.pref = self
+            .scores
+            .iter()
+            .map(|row| {
+                (0..self.num_servers)
+                    .map(|home| {
+                        let mut idx: Vec<usize> =
+                            (0..self.num_servers).collect();
+                        idx.sort_by(|&a, &b| {
+                            row[b]
+                                .partial_cmp(&row[a])
+                                .unwrap()
+                                .then_with(|| {
+                                    (b == home).cmp(&(a == home))
+                                })
+                                .then(a.cmp(&b))
+                        });
+                        idx
+                    })
+                    .collect()
+            })
+            .collect();
+    }
+
+    fn task_index(task: TaskKind) -> usize {
+        TaskKind::all().iter().position(|&t| t == task).unwrap()
+    }
+
+    /// Hosted-mass score of routing `task` to `server`.
+    pub fn score(&self, task: TaskKind, server: usize) -> f64 {
+        self.scores[Self::task_index(task)][server]
+    }
+
+    /// Servers in descending preference order for `task`: by locality
+    /// score, ties broken towards `home`, then the lower index.
+    /// Precomputed — no allocation or sort on the per-arrival path.
+    pub fn ranked(&self, task: TaskKind, home: usize) -> &[usize] {
+        &self.pref[Self::task_index(task)][home]
+    }
+
+    /// First choice for `task` (see [`LocalityRouter::ranked`]).
+    pub fn best(&self, task: TaskKind, home: usize) -> usize {
+        self.ranked(task, home)[0]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClusterConfig, ModelConfig, WorkloadConfig};
+    use crate::engine::warm_stats;
+    use crate::placement::{uniform, PlacementAlgo};
+    use crate::util::prop;
+
+    fn world() -> (ModelConfig, ClusterConfig) {
+        let m = ModelConfig::mixtral_8x7b_sim();
+        let c = ClusterConfig::edge_testbed_3_for(&m);
+        (m, c)
+    }
+
+    #[test]
+    fn single_owner_placement_routes_to_owner() {
+        // All experts on server 0 (its 70 % A100 cannot hold all of
+        // Mixtral, so use the small model where one GPU fits everything).
+        let m = ModelConfig::tiny();
+        let c = ClusterConfig::edge_testbed_3_for(&m);
+        let mut p = crate::placement::Placement::new(&m, &c);
+        for l in 0..m.num_layers {
+            for e in 0..m.num_experts {
+                p.place(0, 0, l, e).unwrap();
+            }
+        }
+        let r = LocalityRouter::new(&m, &p);
+        for t in crate::config::TaskKind::all() {
+            assert_eq!(
+                r.best(t, 2),
+                0,
+                "the only server holding experts must win"
+            );
+            assert_eq!(r.score(t, 1), 0.0);
+            assert_eq!(r.score(t, 2), 0.0);
+        }
+    }
+
+    #[test]
+    fn dancemoe_placement_routes_tasks_to_their_servers() {
+        // Under the activation-aware placement, each BigBench stream's hot
+        // experts sit on its home server — the router must agree.
+        let (m, c) = world();
+        let w = WorkloadConfig::bigbench(10.0);
+        let stats = warm_stats(&m, &w);
+        let p = PlacementAlgo::DanceMoE.compute(&m, &c, &stats, 1);
+        let r = LocalityRouter::new(&m, &p);
+        let mut matches = 0;
+        for (home, stream) in w.streams.iter().enumerate() {
+            if r.best(stream.task, home) == home {
+                matches += 1;
+            }
+        }
+        assert!(
+            matches >= 2,
+            "locality routing should mostly agree with the placement's \
+             task→server mapping ({matches}/3)"
+        );
+    }
+
+    #[test]
+    fn rebuild_tracks_migration() {
+        let (m, c) = world();
+        let w = WorkloadConfig::bigbench(10.0);
+        let stats = warm_stats(&m, &w);
+        let uni = uniform::place(&m, &c);
+        let dance = PlacementAlgo::DanceMoE.compute(&m, &c, &stats, 1);
+        let mut r = LocalityRouter::new(&m, &uni);
+        let before: Vec<f64> = (0..3)
+            .map(|n| r.score(w.streams[0].task, n))
+            .collect();
+        r.rebuild(&dance);
+        let after: Vec<f64> =
+            (0..3).map(|n| r.score(w.streams[0].task, n)).collect();
+        assert_ne!(before, after, "rebuild must pick up the new placement");
+    }
+
+    #[test]
+    fn prop_ranked_is_a_permutation_maximizing_hosted_mass() {
+        let (m, c) = world();
+        let w = WorkloadConfig::bigbench(10.0);
+        let stats = warm_stats(&m, &w);
+        let placements = [
+            uniform::place(&m, &c),
+            PlacementAlgo::DanceMoE.compute(&m, &c, &stats, 1),
+            PlacementAlgo::Eplb.compute(&m, &c, &stats, 1),
+        ];
+        prop::check("router targets max hosted mass", 60, |g| {
+            let p = g.pick(&placements);
+            let task = *g.pick(&crate::config::TaskKind::all());
+            let home = g.usize_in(0, 2);
+            let r = LocalityRouter::new(&m, p);
+            let order = r.ranked(task, home);
+            let mut sorted = order.to_vec();
+            sorted.sort_unstable();
+            prop::assert_prop(
+                sorted == vec![0, 1, 2],
+                "ranked must be a permutation of all servers",
+            );
+            for pair in order.windows(2) {
+                prop::assert_prop(
+                    r.score(task, pair[0]) >= r.score(task, pair[1]),
+                    "preference order must be score-descending",
+                );
+            }
+            // the chosen server hosts at least as much of the task's
+            // activation mass as every alternative
+            let profile =
+                crate::trace::TaskProfile::build(task, &m);
+            let best_mass = hosted_mass(&profile, p, order[0]);
+            for n in 0..3 {
+                prop::assert_prop(
+                    best_mass >= hosted_mass(&profile, p, n),
+                    "router picked a server with less hosted mass",
+                );
+            }
+        });
+    }
+}

@@ -1,0 +1,125 @@
+//! The live stats bus: turns the engine's *cumulative* activation
+//! statistics into per-interval deltas for online consumers.
+//!
+//! The paper's Global Scheduler runs from "activation statistics reported"
+//! by the serving layer (§III-A). Offline replays pre-seed that history;
+//! the gateway instead publishes a [`StatsDelta`] every interval — the
+//! token-weighted expert activations observed *in that window alone* —
+//! which the coordinator ingests into its decayed history. Placement
+//! refresh and migration then run entirely from online measurements.
+
+use crate::config::ModelConfig;
+use crate::moe::ActivationStats;
+
+/// One interval's activation observations.
+#[derive(Debug, Clone)]
+pub struct StatsDelta {
+    /// Interval end (virtual seconds).
+    pub t_s: f64,
+    /// Window length the delta covers.
+    pub window_s: f64,
+    /// Token-activations observed in the window (Σ over the table).
+    pub tokens: f64,
+    /// Per-(server, layer, expert) activation counts for the window.
+    pub stats: ActivationStats,
+}
+
+/// Converts a cumulative statistics table into per-interval deltas by
+/// snapshot differencing.
+#[derive(Debug, Clone)]
+pub struct StatsBus {
+    snapshot: ActivationStats,
+    last_t: f64,
+    /// intervals published so far
+    pub published: u64,
+}
+
+impl StatsBus {
+    pub fn new(model: &ModelConfig, num_servers: usize) -> StatsBus {
+        StatsBus {
+            snapshot: ActivationStats::new(model, num_servers),
+            last_t: 0.0,
+            published: 0,
+        }
+    }
+
+    /// Publish the delta of `cumulative` since the previous `collect`.
+    pub fn collect(
+        &mut self,
+        cumulative: &ActivationStats,
+        t: f64,
+    ) -> StatsDelta {
+        let mut delta = self.snapshot.clone();
+        delta.reset();
+        let mut tokens = 0.0;
+        for n in 0..delta.num_servers() {
+            for l in 0..delta.num_layers {
+                for e in 0..delta.num_experts {
+                    let inc = (cumulative.raw(n, l, e)
+                        - self.snapshot.raw(n, l, e))
+                    .max(0.0);
+                    if inc > 0.0 {
+                        delta.record(n, l, e, inc);
+                        tokens += inc;
+                    }
+                }
+            }
+        }
+        self.snapshot = cumulative.clone();
+        let window_s = (t - self.last_t).max(1e-9);
+        self.last_t = t;
+        self.published += 1;
+        StatsDelta {
+            t_s: t,
+            window_s,
+            tokens,
+            stats: delta,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+
+    #[test]
+    fn deltas_partition_the_cumulative_stream() {
+        let m = ModelConfig::tiny();
+        let mut bus = StatsBus::new(&m, 2);
+        let mut cum = ActivationStats::new(&m, 2);
+
+        cum.record(0, 0, 1, 10.0);
+        cum.record(1, 2, 3, 5.0);
+        let d1 = bus.collect(&cum, 60.0);
+        assert_eq!(d1.tokens, 15.0);
+        assert_eq!(d1.stats.raw(0, 0, 1), 10.0);
+        assert_eq!(d1.window_s, 60.0);
+
+        cum.record(0, 0, 1, 4.0);
+        let d2 = bus.collect(&cum, 120.0);
+        assert_eq!(d2.tokens, 4.0, "second delta sees only the increment");
+        assert_eq!(d2.stats.raw(0, 0, 1), 4.0);
+        assert_eq!(d2.stats.raw(1, 2, 3), 0.0);
+        assert_eq!(d2.window_s, 60.0);
+        assert_eq!(bus.published, 2);
+
+        // no new activity → empty delta
+        let d3 = bus.collect(&cum, 180.0);
+        assert_eq!(d3.tokens, 0.0);
+    }
+
+    #[test]
+    fn delta_sum_reconstructs_cumulative() {
+        let m = ModelConfig::tiny();
+        let mut bus = StatsBus::new(&m, 1);
+        let mut cum = ActivationStats::new(&m, 1);
+        let mut rebuilt = ActivationStats::new(&m, 1);
+        for step in 1..=5 {
+            cum.record(0, step % 4, step % 8, step as f64);
+            let d = bus.collect(&cum, step as f64 * 30.0);
+            rebuilt.merge(&d.stats);
+        }
+        assert_eq!(rebuilt, cum);
+    }
+}

@@ -10,11 +10,20 @@
 pub mod recorded;
 pub mod task;
 
-use crate::config::{ModelConfig, TaskKind, WorkloadConfig};
+use crate::config::{ModelConfig, StreamConfig, TaskKind, WorkloadConfig};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::Result;
 pub use task::TaskProfile;
+
+/// Sample a prompt length for `stream`: geometric-ish spread around the
+/// mean with a floor of 8 tokens (prompts are never empty). Shared by the
+/// offline trace generator and the online gateway's arrival source so
+/// their workload distributions cannot silently diverge.
+pub fn sample_prompt_tokens(rng: &mut Rng, stream: &StreamConfig) -> usize {
+    let spread = rng.range_f64(0.5, 1.5);
+    ((stream.mean_prompt_tokens as f64 * spread) as usize).max(8)
+}
 
 /// One inference request.
 #[derive(Debug, Clone, PartialEq)]
@@ -159,11 +168,7 @@ impl TraceGenerator {
                     break;
                 }
             }
-            // Prompt length: geometric-ish spread around the mean, with a
-            // floor of 8 tokens (prompts are never empty).
-            let spread = rng.range_f64(0.5, 1.5);
-            let prompt =
-                ((stream.mean_prompt_tokens as f64 * spread) as usize).max(8);
+            let prompt = sample_prompt_tokens(rng, stream);
             out.push(Request {
                 id: 0, // assigned after the global sort
                 server,

@@ -18,7 +18,7 @@ fn artifacts_dir() -> PathBuf {
 fn routed_forward_matches_dense_oracle() {
     let dir = artifacts_dir();
     if !Runtime::available(&dir) {
-        eprintln!("SKIP: no artifacts (run `make artifacts`)");
+        eprintln!("SKIP: no artifacts (build with `python -m compile.aot`)");
         return;
     }
     let model = ModelConfig::tiny();

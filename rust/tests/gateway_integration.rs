@@ -1,0 +1,199 @@
+//! Integration tests for the online serving gateway: end-to-end runs on
+//! the 3-server edge preset, convergence of online-driven migration
+//! against offline warm-stats seeding, and backpressure under overload.
+
+use dancemoe::config::{ClusterConfig, ModelConfig, WorkloadConfig};
+use dancemoe::coordinator::CoordinatorConfig;
+use dancemoe::engine::warm_stats;
+use dancemoe::placement::{objective, uniform, PlacementAlgo};
+use dancemoe::serve::{Gateway, GatewayConfig};
+
+fn small() -> (ModelConfig, ClusterConfig, WorkloadConfig) {
+    let mut m = ModelConfig::mixtral_8x7b_sim();
+    m.num_layers = 4; // keep virtual-time runs fast
+    let c = ClusterConfig::edge_testbed_3_for(&m);
+    (m, c, WorkloadConfig::bigbench(5.0))
+}
+
+#[test]
+fn gateway_end_to_end_on_edge_preset() {
+    let (m, c, w) = small();
+    let mut gw = Gateway::new(
+        &m,
+        &c,
+        &w,
+        uniform::place(&m, &c),
+        GatewayConfig {
+            horizon_s: 300.0,
+            // home routing so each stream exercises its own server (with
+            // locality routing a uniform start legitimately concentrates
+            // traffic on the largest server)
+            locality_routing: false,
+            seed: 21,
+            ..GatewayConfig::default()
+        },
+        CoordinatorConfig {
+            interval_s: 60.0,
+            seed: 21,
+            ..CoordinatorConfig::default()
+        },
+    );
+    let report = gw.run();
+    // all three streams produced and served traffic
+    assert!(report.offered > 30);
+    assert_eq!(report.offered, report.admitted + report.shed);
+    assert_eq!(report.serve.records.len() as u64, report.admitted);
+    for n in 0..3 {
+        assert!(
+            report.serve.records.iter().any(|r| r.server == n),
+            "server {n} served nothing"
+        );
+    }
+    // the latency report is well-formed
+    let p50 = report.latency_percentile(0.50);
+    let p99 = report.latency_percentile(0.99);
+    assert!(p50 > 0.0 && p50 <= p99);
+    // stats-bus refreshes ran from online measurements
+    assert!(report.refreshes >= 3);
+}
+
+#[test]
+fn online_migration_converges_to_offline_seeding() {
+    // Stationary workload, home routing (so the online activation stream
+    // matches the offline expectation): migration driven purely by
+    // online-collected stats must reach a placement as good — measured by
+    // the paper's Eq. 2 objective under the true (warm) statistics — as
+    // the offline pipeline seeded with those statistics up front.
+    let (m, c, w) = small();
+    let mut gw = Gateway::new(
+        &m,
+        &c,
+        &w,
+        uniform::place(&m, &c),
+        GatewayConfig {
+            horizon_s: 480.0,
+            locality_routing: false,
+            seed: 23,
+            ..GatewayConfig::default()
+        },
+        CoordinatorConfig {
+            interval_s: 60.0,
+            seed: 23,
+            ..CoordinatorConfig::default()
+        },
+    );
+    let report = gw.run();
+    assert!(
+        report.migrations >= 1,
+        "online stats must trigger at least one migration"
+    );
+
+    let warm = warm_stats(&m, &w);
+    let offline = PlacementAlgo::DanceMoE.compute(&m, &c, &warm, 23);
+    let online_ratio =
+        objective::expected_local_ratio(&gw.engine.placement, &warm);
+    let offline_ratio = objective::expected_local_ratio(&offline, &warm);
+    let uniform_ratio =
+        objective::expected_local_ratio(&uniform::place(&m, &c), &warm);
+    assert!(
+        online_ratio > uniform_ratio + 0.05,
+        "online migration must beat the uniform start: \
+         {online_ratio:.3} vs {uniform_ratio:.3}"
+    );
+    assert!(
+        online_ratio >= offline_ratio - 0.05,
+        "online-converged placement ({online_ratio:.3}) must match \
+         offline warm-stats seeding ({offline_ratio:.3})"
+    );
+}
+
+#[test]
+fn migration_disabled_keeps_initial_placement() {
+    let (m, c, w) = small();
+    let initial = uniform::place(&m, &c);
+    let mut gw = Gateway::new(
+        &m,
+        &c,
+        &w,
+        initial.clone(),
+        GatewayConfig {
+            horizon_s: 240.0,
+            seed: 29,
+            ..GatewayConfig::default()
+        },
+        CoordinatorConfig {
+            interval_s: 60.0,
+            migrate: false,
+            ..CoordinatorConfig::default()
+        },
+    );
+    let report = gw.run();
+    assert_eq!(report.migrations, 0);
+    assert_eq!(gw.engine.placement, initial);
+    // refreshes still evaluated (observability), they just never adopt
+    assert!(report.refreshes >= 2);
+}
+
+#[test]
+fn locality_routing_does_not_lose_requests() {
+    let (m, c, w) = small();
+    let warm = warm_stats(&m, &w);
+    // start from the activation-aware placement so locality routing has
+    // real signal from t = 0
+    let initial = PlacementAlgo::DanceMoE.compute(&m, &c, &warm, 31);
+    let mut gw = Gateway::new(
+        &m,
+        &c,
+        &w,
+        initial,
+        GatewayConfig {
+            horizon_s: 240.0,
+            seed: 31,
+            ..GatewayConfig::default()
+        },
+        CoordinatorConfig {
+            interval_s: 60.0,
+            seed: 31,
+            ..CoordinatorConfig::default()
+        },
+    );
+    let report = gw.run();
+    assert_eq!(report.offered, report.admitted + report.shed);
+    assert_eq!(report.serve.records.len() as u64, report.admitted);
+    // under the paper's placement + moderate load, locality routing keeps
+    // most compute local
+    assert!(
+        report.serve.local_ratio() > 0.5,
+        "local ratio {:.3}",
+        report.serve.local_ratio()
+    );
+}
+
+#[test]
+fn overload_backpressure_bounds_admission() {
+    let (m, c, _) = small();
+    let w = WorkloadConfig::bigbench(0.05); // 20 req/s per server: overload
+    let mut gw = Gateway::new(
+        &m,
+        &c,
+        &w,
+        uniform::place(&m, &c),
+        GatewayConfig {
+            horizon_s: 30.0,
+            queue_cap: 16,
+            max_inflight: 16,
+            seed: 37,
+            ..GatewayConfig::default()
+        },
+        CoordinatorConfig {
+            interval_s: 15.0,
+            ..CoordinatorConfig::default()
+        },
+    );
+    let report = gw.run();
+    assert!(report.shed > 0, "open-loop overload must shed");
+    assert!(report.admitted < report.offered);
+    // everything admitted still completes — bounded queues, not dropped work
+    assert_eq!(report.serve.records.len() as u64, report.admitted);
+    assert!(report.slo_violation_rate() > 0.0);
+}

@@ -2,7 +2,8 @@
 //! outputs python exported into `artifacts/expected.json` bit-closely.
 //!
 //! These tests skip (pass trivially with a note) when artifacts have not
-//! been built — run `make artifacts` first for full coverage.
+//! been built — run `cd python && python -m compile.aot` first for
+//! full coverage.
 
 use std::path::PathBuf;
 
@@ -17,7 +18,7 @@ fn artifacts_dir() -> PathBuf {
 fn load_expected() -> Option<Json> {
     let dir = artifacts_dir();
     if !Runtime::available(&dir) {
-        eprintln!("SKIP: no artifacts at {} (run `make artifacts`)", dir.display());
+        eprintln!("SKIP: no artifacts at {} (python -m compile.aot)", dir.display());
         return None;
     }
     Json::read_file(&dir.join("expected.json")).ok()
