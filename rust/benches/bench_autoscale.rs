@@ -1,0 +1,134 @@
+//! Autoscaler benchmark: one bursty co-simulated run with the replica
+//! autoscaler on, and the same run with a fixed placement, with the
+//! serving metrics and replica-count outcomes written to
+//! `BENCH_autoscale.json` so the autoscaler's perf trajectory
+//! (p50/p95/p99, shed rate, replica counts, reaction time) is tracked
+//! across PRs machine-readably.
+
+use dancemoe::autoscale::AutoscaleConfig;
+use dancemoe::config::{ClusterConfig, ModelConfig, WorkloadConfig};
+use dancemoe::coordinator::CoordinatorConfig;
+use dancemoe::engine::ScaleKind;
+use dancemoe::placement::uniform;
+use dancemoe::serve::{ArrivalProfile, Gateway, GatewayConfig};
+use dancemoe::util::bench::Bencher;
+use dancemoe::util::json::Json;
+
+fn main() {
+    // Trimmed DeepSeek topology with proportionally tight GPU memory, so
+    // replication decisions stay meaningful (full memory would let every
+    // server hold every expert).
+    let mut model = ModelConfig::deepseek_v2_lite_sim();
+    model.num_layers = 8;
+    let mut cluster = ClusterConfig::edge_testbed_3_for(&model);
+    let slots = (model.total_experts() as f64 * 1.3 / 4.0).ceil() as u64;
+    for s in &mut cluster.servers {
+        for g in &mut s.gpus {
+            g.mem_bytes = model.expert_bytes * slots;
+        }
+    }
+    let workload = WorkloadConfig::bigbench(3.0 / 8.0); // 8 req/s aggregate
+    let profile = ArrivalProfile::Bursty {
+        factor: 4.0,
+        burst_s: 30.0,
+        period_s: 120.0,
+    };
+    let gcfg = GatewayConfig {
+        horizon_s: 360.0,
+        profile,
+        seed: 7,
+        ..GatewayConfig::default()
+    };
+    let initial = uniform::place(&model, &cluster);
+
+    let mut b = Bencher::new("autoscale");
+    let mut auto_report = None;
+    let mut auto_events: Vec<(f64, ScaleKind)> = Vec::new();
+    let mut max_extra = 0usize;
+    b.run_once("autoscaled bursty run (360 s)", || {
+        let mut gw = Gateway::new(
+            &model,
+            &cluster,
+            &workload,
+            initial.clone(),
+            gcfg.clone(),
+            CoordinatorConfig {
+                interval_s: 15.0,
+                seed: 7,
+                autoscale: Some(AutoscaleConfig {
+                    hi_ratio: 1.3,
+                    lo_ratio: 0.8,
+                    ..AutoscaleConfig::default()
+                }),
+                ..CoordinatorConfig::default()
+            },
+        );
+        let report = gw.run();
+        auto_events = gw
+            .engine
+            .scale_events
+            .iter()
+            .filter(|e| e.applied)
+            .map(|e| (e.t_s, e.kind))
+            .collect();
+        max_extra = gw
+            .coordinator
+            .autoscale_logs
+            .iter()
+            .map(|l| l.extra_replicas)
+            .max()
+            .unwrap_or(0);
+        auto_report = Some(report);
+    });
+    let mut fixed_report = None;
+    b.run_once("fixed-placement bursty run (360 s)", || {
+        let mut gw = Gateway::new(
+            &model,
+            &cluster,
+            &workload,
+            initial.clone(),
+            gcfg.clone(),
+            CoordinatorConfig {
+                interval_s: 15.0,
+                migrate: false,
+                seed: 7,
+                ..CoordinatorConfig::default()
+            },
+        );
+        fixed_report = Some(gw.run());
+    });
+
+    let auto = auto_report.expect("autoscaled run executed");
+    let fixed = fixed_report.expect("fixed run executed");
+    let reaction_s = auto_events
+        .iter()
+        .find(|&&(_, k)| k == ScaleKind::Out)
+        .map(|&(t, _)| t)
+        .unwrap_or(-1.0);
+    let metrics = Json::from_pairs(vec![
+        ("auto_p50_s", Json::Num(auto.latency_percentile(0.50))),
+        ("auto_p95_s", Json::Num(auto.latency_percentile(0.95))),
+        ("auto_p99_s", Json::Num(auto.latency_percentile(0.99))),
+        ("auto_shed_rate", Json::Num(auto.shed_rate())),
+        ("auto_scale_outs", Json::Num(auto.scale_outs as f64)),
+        ("auto_scale_ins", Json::Num(auto.scale_ins as f64)),
+        ("auto_max_extra_replicas", Json::Num(max_extra as f64)),
+        ("auto_first_scale_out_s", Json::Num(reaction_s)),
+        ("fixed_p50_s", Json::Num(fixed.latency_percentile(0.50))),
+        ("fixed_p95_s", Json::Num(fixed.latency_percentile(0.95))),
+        ("fixed_p99_s", Json::Num(fixed.latency_percentile(0.99))),
+        ("fixed_shed_rate", Json::Num(fixed.shed_rate())),
+    ]);
+    let out = std::path::Path::new("BENCH_autoscale.json");
+    b.write_json(out, metrics).expect("write BENCH_autoscale.json");
+    println!(
+        "  wrote {} (auto p95 {:.2}s vs fixed p95 {:.2}s, {} scale-outs, \
+         {} scale-ins, max {} extra replicas)",
+        out.display(),
+        auto.latency_percentile(0.95),
+        fixed.latency_percentile(0.95),
+        auto.scale_outs,
+        auto.scale_ins,
+        max_extra
+    );
+}

@@ -1,20 +1,40 @@
 //! Gateway hot-path benchmark: requests routed + batched per second at
-//! three arrival rates.
+//! three arrival rates, plus one full co-simulated gateway run whose
+//! serving metrics land in `BENCH_gateway.json` so the perf trajectory
+//! (p50/p95/p99, shed rate) is tracked across PRs machine-readably.
 //!
-//! Measures the gateway's own bookkeeping — arrival-stream merging,
-//! locality routing, admission and batch formation — with no engine
-//! compute attached, so later PRs have a front-end perf baseline that is
-//! independent of the cost model. One iteration processes a full
-//! 60-virtual-second arrival window.
+//! The hot-path part measures the gateway's own bookkeeping — arrival
+//! stream merging, locality routing, admission and batch formation — with
+//! no engine compute attached, so later PRs have a front-end perf
+//! baseline that is independent of the cost model. One iteration
+//! processes a full 60-virtual-second arrival window.
 
 use dancemoe::config::{ClusterConfig, ModelConfig, WorkloadConfig};
+use dancemoe::coordinator::CoordinatorConfig;
 use dancemoe::engine::warm_stats;
-use dancemoe::placement::PlacementAlgo;
+use dancemoe::placement::{uniform, PlacementAlgo};
 use dancemoe::serve::{
-    AdmissionController, ArrivalProfile, ArrivalSource, Batcher,
-    LocalityRouter,
+    AdmissionController, ArrivalProfile, ArrivalSource, Batcher, Gateway,
+    GatewayConfig, GatewayReport, LocalityRouter,
 };
 use dancemoe::util::bench::Bencher;
+use dancemoe::util::json::Json;
+
+/// The serving metrics tracked across PRs, as a JSON object.
+fn report_metrics(report: &GatewayReport) -> Json {
+    Json::from_pairs(vec![
+        ("offered", Json::Num(report.offered as f64)),
+        ("p50_s", Json::Num(report.latency_percentile(0.50))),
+        ("p95_s", Json::Num(report.latency_percentile(0.95))),
+        ("p99_s", Json::Num(report.latency_percentile(0.99))),
+        ("shed_rate", Json::Num(report.shed_rate())),
+        ("slo_violation_rate", Json::Num(report.slo_violation_rate())),
+        ("throughput_rps", Json::Num(report.throughput_rps())),
+        ("migrations", Json::Num(report.migrations as f64)),
+        ("scale_outs", Json::Num(report.scale_outs as f64)),
+        ("scale_ins", Json::Num(report.scale_ins as f64)),
+    ])
+}
 
 fn main() {
     let model = ModelConfig::deepseek_v2_lite_sim();
@@ -48,7 +68,14 @@ fn main() {
                 while let Some(req) = arrivals.next_request() {
                     let now = req.arrival_s;
                     let home = req.server;
-                    for &s in router.ranked(req.task, home) {
+                    // the gateway's production path: capacity-aware order
+                    // (residual queue room splits the replica band)
+                    let residual: Vec<usize> = (0..servers)
+                        .map(|s| 256usize.saturating_sub(adm.depth(s)))
+                        .collect();
+                    for &s in
+                        &router.ranked_capacity(req.task, home, &residual)
+                    {
                         let mut routed = req.clone();
                         routed.server = s;
                         if adm.offer(s, routed, now) {
@@ -74,4 +101,41 @@ fn main() {
             res.throughput(processed as f64) / 1e3
         );
     }
+
+    // ---- full co-simulated run → BENCH_gateway.json ----------------------
+    let mut model_small = model.clone();
+    model_small.num_layers = 8; // trimmed: the bench tracks trend, not scale
+    let cluster_small = ClusterConfig::edge_testbed_3_for(&model_small);
+    let workload = WorkloadConfig::bigbench(3.0 / 8.0); // 8 req/s aggregate
+    let mut report = None;
+    b.run_once("gateway co-simulation (180 s, 8 req/s)", || {
+        let initial = uniform::place(&model_small, &cluster_small);
+        let mut gw = Gateway::new(
+            &model_small,
+            &cluster_small,
+            &workload,
+            initial,
+            GatewayConfig {
+                horizon_s: 180.0,
+                seed: 7,
+                ..GatewayConfig::default()
+            },
+            CoordinatorConfig {
+                interval_s: 30.0,
+                seed: 7,
+                ..CoordinatorConfig::default()
+            },
+        );
+        report = Some(gw.run());
+    });
+    let report = report.expect("run_once executed");
+    let out = std::path::Path::new("BENCH_gateway.json");
+    b.write_json(out, report_metrics(&report))
+        .expect("write BENCH_gateway.json");
+    println!(
+        "  wrote {} (p95 {:.2}s, shed rate {:.3})",
+        out.display(),
+        report.latency_percentile(0.95),
+        report.shed_rate()
+    );
 }

@@ -1,0 +1,709 @@
+//! The **expert replica autoscaler**: drives per-expert replica *counts*
+//! (not just locations) from the live stats bus.
+//!
+//! The paper's migration mechanism adapts expert locations to workload
+//! drift, but under bursty edge traffic a single replica of a hot expert
+//! is the bottleneck no matter where it lives (the SlimCaching / CoMoE
+//! observation). The autoscaler closes that gap with a control loop over
+//! the same per-interval [`StatsDelta`]s the migration scheduler consumes:
+//!
+//! ```text
+//!             ┌────────────────────────────────────────────────┐
+//!             │                 stats bus (Δ/interval)         │
+//!             └───────┬────────────────────────────────────────┘
+//!                     ▼
+//!        per-expert load EWMAs: fast (tracks the burst)
+//!                               slow (tracks the baseline)
+//!                     ▼
+//!     hysteresis bands:  fast/slow > hi_ratio  ─→ SCALE-OUT
+//!                        fast/slow < lo_ratio  ─→ SCALE-IN (drain)
+//!                     ▼
+//!     scale-out: copy the hot expert to the least-loaded server
+//!                with ledger-free memory (network + PCIe accounted)
+//!     scale-in:  drain the replica (no new traffic) → evict
+//! ```
+//!
+//! Hysteresis has three layers so the controller neither flaps nor reacts
+//! to noise: the fast/slow EWMA *ratio* bands (`hi_ratio`/`lo_ratio`), an
+//! absolute per-replica floor (`min_load_tps` — never replicate a cold
+//! expert) and ceiling (`util_hi_tps` — replicate an absolutely-overloaded
+//! expert even when the slow EWMA has caught up, and never drain one), and
+//! a per-expert cooldown (`cooldown_intervals`).
+//!
+//! Memory discipline: every planned copy reserves its bytes in the shared
+//! [`MemoryLedger`] *before* the decision is emitted, the same ledger the
+//! migration planner draws from — see [`crate::coordinator`] for the
+//! arbitration rules that keep the two planners out of each other's way.
+
+use crate::config::{ClusterConfig, ModelConfig};
+use crate::engine::{ScaleEvent, ScaleKind};
+use crate::placement::{replicaset, MemoryLedger, Placement};
+use crate::serve::statsbus::StatsDelta;
+
+/// Autoscaler policy knobs (see the module docs for the control loop).
+#[derive(Debug, Clone)]
+pub struct AutoscaleConfig {
+    /// Fast EWMA smoothing per interval (tracks bursts).
+    pub alpha_fast: f64,
+    /// Slow EWMA smoothing per interval (tracks the baseline).
+    pub alpha_slow: f64,
+    /// Scale-out band: fast/slow ratio above this is a burst.
+    pub hi_ratio: f64,
+    /// Scale-in band: fast/slow ratio below this is a trough. Must sit
+    /// well under `hi_ratio` — the gap is the hysteresis that prevents
+    /// flapping.
+    pub lo_ratio: f64,
+    /// Absolute floor (tokens/s per active replica): below it an expert is
+    /// too cold to ever scale out, and an added replica scales back in.
+    pub min_load_tps: f64,
+    /// Absolute ceiling (tokens/s per active replica): above it the expert
+    /// scales out even without a burst-shaped ratio, and never scales in.
+    pub util_hi_tps: f64,
+    /// Max replicas per expert; 0 means one per server.
+    pub max_replicas: usize,
+    /// Drain window before a scaled-in replica is evicted.
+    pub drain_s: f64,
+    /// Per-expert cooldown (intervals) after any scale op.
+    pub cooldown_intervals: u64,
+    /// Cap on scale operations per interval.
+    pub max_ops_per_interval: usize,
+    /// Intervals to observe before the first decision (EWMAs warm up).
+    pub warmup_intervals: u64,
+    /// Fraction of every GPU the placement pipeline must leave free for
+    /// the autoscaler to spend on replicas (the migration planner computes
+    /// candidates against a cluster shrunk by this).
+    pub headroom_frac: f64,
+}
+
+impl Default for AutoscaleConfig {
+    fn default() -> Self {
+        AutoscaleConfig {
+            alpha_fast: 0.6,
+            alpha_slow: 0.15,
+            hi_ratio: 1.5,
+            lo_ratio: 0.7,
+            min_load_tps: 50.0,
+            util_hi_tps: 2500.0,
+            max_replicas: 0,
+            drain_s: 10.0,
+            cooldown_intervals: 2,
+            max_ops_per_interval: 8,
+            warmup_intervals: 1,
+            headroom_frac: 0.15,
+        }
+    }
+}
+
+/// One control decision, ready for the engine to execute.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleDecision {
+    /// Copy a replica of the hot expert onto (dst_server, dst_gpu),
+    /// streaming from `src_server`'s serving copy.
+    ScaleOut {
+        layer: usize,
+        expert: usize,
+        dst_server: usize,
+        dst_gpu: usize,
+        src_server: usize,
+    },
+    /// Begin draining the replica at (server, gpu); eviction follows after
+    /// the drain window.
+    ScaleIn {
+        layer: usize,
+        expert: usize,
+        server: usize,
+        gpu: usize,
+    },
+}
+
+/// One interval's controller observability record.
+#[derive(Debug, Clone)]
+pub struct AutoscaleLog {
+    pub t_s: f64,
+    /// Hottest expert by fast EWMA.
+    pub hot_layer: usize,
+    pub hot_expert: usize,
+    /// Its cluster-wide fast-EWMA load (tokens/s).
+    pub hot_load_tps: f64,
+    /// Its fast/slow ratio (the burst signal).
+    pub hot_ratio: f64,
+    /// Its active replica count.
+    pub hot_replicas: usize,
+    /// Autoscaler-added replicas currently active.
+    pub extra_replicas: usize,
+    /// Replicas currently draining.
+    pub draining: usize,
+    /// Cumulative applied operations.
+    pub scale_outs_applied: u64,
+    pub scale_ins_applied: u64,
+}
+
+/// The replica-count controller (one per [`crate::coordinator::Coordinator`]).
+pub struct Autoscaler {
+    pub cfg: AutoscaleConfig,
+    num_layers: usize,
+    num_experts: usize,
+    expert_bytes: u64,
+    max_replicas: usize,
+    /// fast/slow cluster-wide load EWMAs per eid (tokens/s)
+    fast: Vec<f64>,
+    slow: Vec<f64>,
+    /// per-server total-load fast EWMA (the placer's "least loaded")
+    server_load_tps: Vec<f64>,
+    /// per-eid cooldown (intervals remaining)
+    cooldown: Vec<u64>,
+    /// replicas this controller added, as (layer, expert, server, gpu)
+    added: Vec<(usize, usize, usize, usize)>,
+    /// scheduled copies not yet applied
+    pending_out: Vec<(usize, usize, usize, usize)>,
+    /// replicas we sent into drain, awaiting eviction
+    draining: Vec<(usize, usize, usize, usize)>,
+    /// intervals observed
+    pub ticks: u64,
+    /// cumulative applied operation counts
+    pub scale_outs_applied: u64,
+    pub scale_ins_applied: u64,
+}
+
+impl Autoscaler {
+    pub fn new(
+        model: &ModelConfig,
+        cluster: &ClusterConfig,
+        cfg: AutoscaleConfig,
+    ) -> Autoscaler {
+        let n = model.num_layers * model.num_experts;
+        let max_replicas = if cfg.max_replicas == 0 {
+            cluster.num_servers()
+        } else {
+            cfg.max_replicas.min(cluster.num_servers())
+        };
+        Autoscaler {
+            num_layers: model.num_layers,
+            num_experts: model.num_experts,
+            expert_bytes: model.expert_bytes,
+            max_replicas,
+            fast: vec![0.0; n],
+            slow: vec![0.0; n],
+            server_load_tps: vec![0.0; cluster.num_servers()],
+            cooldown: vec![0; n],
+            added: Vec::new(),
+            pending_out: Vec::new(),
+            draining: Vec::new(),
+            ticks: 0,
+            scale_outs_applied: 0,
+            scale_ins_applied: 0,
+            cfg,
+        }
+    }
+
+    #[inline]
+    fn eid(&self, layer: usize, expert: usize) -> usize {
+        layer * self.num_experts + expert
+    }
+
+    /// Fast-EWMA cluster-wide load of an expert (tokens/s).
+    pub fn fast_tps(&self, layer: usize, expert: usize) -> f64 {
+        self.fast[self.eid(layer, expert)]
+    }
+
+    /// Slow-EWMA (baseline) load of an expert (tokens/s).
+    pub fn slow_tps(&self, layer: usize, expert: usize) -> f64 {
+        self.slow[self.eid(layer, expert)]
+    }
+
+    /// Replicas this controller added and that are still active.
+    pub fn added_replicas(&self) -> &[(usize, usize, usize, usize)] {
+        &self.added
+    }
+
+    fn pending_for(&self, layer: usize, expert: usize) -> usize {
+        self.pending_out
+            .iter()
+            .filter(|r| r.0 == layer && r.1 == expert)
+            .count()
+    }
+
+    /// Fold one interval's delta into the load EWMAs and reconcile tracked
+    /// replicas against the (possibly migrated) placement. Runs every
+    /// interval — including ones where arbitration suppresses decisions —
+    /// so the burst signal never loses observations while a migration or
+    /// copy is in flight.
+    pub fn observe(&mut self, delta: &StatsDelta, p: &Placement) {
+        self.ticks += 1;
+        let w = delta.window_s.max(1e-9);
+        let nsrv = delta.stats.num_servers().min(self.server_load_tps.len());
+        for n in 0..nsrv {
+            let rate = delta.stats.servers[n].total / w;
+            self.server_load_tps[n] = if self.ticks == 1 {
+                rate
+            } else {
+                self.cfg.alpha_fast * rate
+                    + (1.0 - self.cfg.alpha_fast) * self.server_load_tps[n]
+            };
+        }
+        for l in 0..self.num_layers {
+            for e in 0..self.num_experts {
+                let mut sum = 0.0;
+                for n in 0..delta.stats.num_servers() {
+                    sum += delta.stats.raw(n, l, e);
+                }
+                let rate = sum / w;
+                let eid = l * self.num_experts + e;
+                if self.ticks == 1 {
+                    self.fast[eid] = rate;
+                    self.slow[eid] = rate;
+                } else {
+                    self.fast[eid] = self.cfg.alpha_fast * rate
+                        + (1.0 - self.cfg.alpha_fast) * self.fast[eid];
+                    self.slow[eid] = self.cfg.alpha_slow * rate
+                        + (1.0 - self.cfg.alpha_slow) * self.slow[eid];
+                }
+            }
+        }
+        for c in &mut self.cooldown {
+            *c = c.saturating_sub(1);
+        }
+        // reconcile with reality: a migration can drop or re-shape our
+        // replicas between intervals
+        self.added
+            .retain(|&(l, e, s, g)| p.gpu_has(s, g, l, e) && !p.is_draining(s, g, l, e));
+        self.draining.retain(|&(l, e, s, g)| p.is_draining(s, g, l, e));
+    }
+
+    /// Emit this interval's decisions from the current EWMA state (folded
+    /// in by [`Autoscaler::observe`]). Every `ScaleOut` returned has its
+    /// bytes already reserved in `ledger`.
+    pub fn plan(
+        &mut self,
+        p: &Placement,
+        ledger: &mut MemoryLedger,
+    ) -> Vec<ScaleDecision> {
+        let mut decisions = Vec::new();
+        if self.ticks <= self.cfg.warmup_intervals {
+            return decisions;
+        }
+
+        // ---- scale-out pass: hottest first --------------------------------
+        let mut hot: Vec<(f64, usize, usize)> = Vec::new();
+        for l in 0..self.num_layers {
+            for e in 0..self.num_experts {
+                let eid = l * self.num_experts + e;
+                if self.cooldown[eid] > 0 {
+                    continue;
+                }
+                let actives = p.active_count(l, e);
+                let active = actives + self.pending_for(l, e);
+                // no active replica ⇒ nothing to copy from; at the cap ⇒
+                // nothing to add
+                if actives == 0 || active >= self.max_replicas {
+                    continue;
+                }
+                let per_rep = self.fast[eid] / active as f64;
+                let ratio = self.fast[eid] / self.slow[eid].max(1e-9);
+                if per_rep > self.cfg.min_load_tps
+                    && (ratio > self.cfg.hi_ratio
+                        || per_rep > self.cfg.util_hi_tps)
+                {
+                    hot.push((per_rep, l, e));
+                }
+            }
+        }
+        hot.sort_by(|a, b| {
+            b.0.partial_cmp(&a.0)
+                .unwrap()
+                .then(a.1.cmp(&b.1))
+                .then(a.2.cmp(&b.2))
+        });
+        for &(_, l, e) in &hot {
+            if decisions.len() >= self.cfg.max_ops_per_interval {
+                break;
+            }
+            let target = replicaset::place_replica(
+                p,
+                ledger,
+                &self.server_load_tps,
+                l,
+                e,
+            );
+            let Some((s, g)) = target else { continue };
+            // an in-flight copy of this expert to the same server makes a
+            // second one a guaranteed dropped apply — skip (the placement
+            // cannot see pending copies, so the placer cannot)
+            if self
+                .pending_out
+                .iter()
+                .any(|r| r.0 == l && r.1 == e && r.2 == s)
+            {
+                continue;
+            }
+            // src before reserve: a bail-out here must not leak bytes
+            let src = match p.owners_ref(l, e).first() {
+                Some(&(os, _)) => os,
+                None => continue,
+            };
+            if !ledger.try_reserve(p, s, g, self.expert_bytes) {
+                continue;
+            }
+            let eid = l * self.num_experts + e;
+            self.cooldown[eid] = self.cfg.cooldown_intervals;
+            self.pending_out.push((l, e, s, g));
+            decisions.push(ScaleDecision::ScaleOut {
+                layer: l,
+                expert: e,
+                dst_server: s,
+                dst_gpu: g,
+                src_server: src,
+            });
+        }
+
+        // ---- scale-in pass: drain trough-eligible replicas we added (in
+        // the order they were added; max_ops bounds the batch) ---------------
+        let mut to_drain: Vec<(usize, usize, usize, usize)> = Vec::new();
+        for &(l, e, s, g) in &self.added {
+            if decisions.len() + to_drain.len() >= self.cfg.max_ops_per_interval
+            {
+                break;
+            }
+            let eid = l * self.num_experts + e;
+            if self.cooldown[eid] > 0 {
+                continue;
+            }
+            let active = p.active_count(l, e);
+            if active <= 1 {
+                continue;
+            }
+            let per_rep = self.fast[eid] / active as f64;
+            let ratio = self.fast[eid] / self.slow[eid].max(1e-9);
+            let trough =
+                ratio < self.cfg.lo_ratio || per_rep < self.cfg.min_load_tps;
+            if trough && per_rep < self.cfg.util_hi_tps {
+                to_drain.push((l, e, s, g));
+            }
+        }
+        for &(l, e, s, g) in &to_drain {
+            let eid = l * self.num_experts + e;
+            self.cooldown[eid] = self.cfg.cooldown_intervals;
+            self.draining.push((l, e, s, g));
+            decisions.push(ScaleDecision::ScaleIn {
+                layer: l,
+                expert: e,
+                server: s,
+                gpu: g,
+            });
+        }
+        self.added.retain(|r| !to_drain.contains(r));
+        decisions
+    }
+
+    /// Fold the engine's completed scale operations back in: release the
+    /// copy reservations and promote applied copies to tracked replicas.
+    pub fn on_completions(
+        &mut self,
+        events: &[ScaleEvent],
+        ledger: &mut MemoryLedger,
+    ) {
+        for ev in events {
+            let key = (ev.layer, ev.expert, ev.server, ev.gpu);
+            match ev.kind {
+                ScaleKind::Out => {
+                    // only operations this controller initiated: anything
+                    // else (e.g. a copy staged directly on the engine) has
+                    // no reservation and is not ours to track
+                    if let Some(i) =
+                        self.pending_out.iter().position(|&r| r == key)
+                    {
+                        self.pending_out.swap_remove(i);
+                        ledger.release(ev.server, ev.gpu, self.expert_bytes);
+                        if ev.applied {
+                            self.added.push(key);
+                            self.scale_outs_applied += 1;
+                        }
+                    }
+                }
+                ScaleKind::In => {
+                    if let Some(i) =
+                        self.draining.iter().position(|&r| r == key)
+                    {
+                        self.draining.swap_remove(i);
+                        if ev.applied {
+                            self.scale_ins_applied += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// A decision the engine refused (e.g. the target GPU vanished): undo
+    /// the planner-side bookkeeping. The coordinator releases the ledger.
+    pub fn abort_scale_out(
+        &mut self,
+        layer: usize,
+        expert: usize,
+        server: usize,
+        gpu: usize,
+    ) {
+        let key = (layer, expert, server, gpu);
+        if let Some(i) = self.pending_out.iter().position(|&r| r == key) {
+            self.pending_out.swap_remove(i);
+        }
+    }
+
+    /// A drain the engine refused: the replica keeps serving.
+    pub fn abort_scale_in(
+        &mut self,
+        layer: usize,
+        expert: usize,
+        server: usize,
+        gpu: usize,
+    ) {
+        let key = (layer, expert, server, gpu);
+        if let Some(i) = self.draining.iter().position(|&r| r == key) {
+            self.draining.swap_remove(i);
+            self.added.push(key);
+        }
+    }
+
+    /// Graft the replicas this controller added into a migration candidate
+    /// so an adopted migration carries them instead of silently dropping
+    /// them (memory permitting — the candidate's caps are the backstop).
+    pub fn graft(&self, candidate: &mut Placement) {
+        for &(l, e, s, g) in &self.added {
+            let _ = candidate.place(s, g, l, e);
+        }
+    }
+
+    /// The cluster as the placement pipeline should see it: every GPU
+    /// shrunk by the headroom fraction, so base placements always leave
+    /// room for this controller's replicas.
+    pub fn shrunk_cluster(&self, cluster: &ClusterConfig) -> ClusterConfig {
+        let keep = (1.0 - self.cfg.headroom_frac).clamp(0.0, 1.0);
+        let mut c = cluster.clone();
+        for s in &mut c.servers {
+            for g in &mut s.gpus {
+                g.mem_bytes = (g.mem_bytes as f64 * keep) as u64;
+            }
+        }
+        c
+    }
+
+    /// Interval observability snapshot.
+    pub fn snapshot(&self, t_s: f64, p: &Placement) -> AutoscaleLog {
+        let mut hot_eid = 0;
+        let mut hot_load = 0.0;
+        for (eid, &f) in self.fast.iter().enumerate() {
+            if f > hot_load {
+                hot_load = f;
+                hot_eid = eid;
+            }
+        }
+        let hot_layer = hot_eid / self.num_experts;
+        let hot_expert = hot_eid % self.num_experts;
+        let hot_set = p.replica_set(hot_layer, hot_expert);
+        AutoscaleLog {
+            t_s,
+            hot_layer,
+            hot_expert,
+            hot_load_tps: hot_load,
+            hot_ratio: self.fast[hot_eid] / self.slow[hot_eid].max(1e-9),
+            hot_replicas: hot_set.active_count(),
+            extra_replicas: self.added.len(),
+            draining: self.draining.len(),
+            scale_outs_applied: self.scale_outs_applied,
+            scale_ins_applied: self.scale_ins_applied,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClusterConfig, ModelConfig};
+    use crate::moe::ActivationStats;
+    use crate::placement::uniform;
+
+    fn world() -> (ModelConfig, ClusterConfig) {
+        let m = ModelConfig::tiny();
+        let mut c = ClusterConfig::edge_testbed_3_for(&m);
+        for s in &mut c.servers {
+            for g in &mut s.gpus {
+                g.mem_bytes = m.expert_bytes * 16;
+            }
+        }
+        (m, c)
+    }
+
+    fn delta_with(
+        m: &ModelConfig,
+        t: f64,
+        loads: &[(usize, usize, f64)],
+    ) -> StatsDelta {
+        let mut stats = ActivationStats::new(m, 3);
+        let mut tokens = 0.0;
+        for &(l, e, tok) in loads {
+            stats.record(0, l, e, tok);
+            tokens += tok;
+        }
+        StatsDelta {
+            t_s: t,
+            window_s: 10.0,
+            tokens,
+            stats,
+        }
+    }
+
+    fn cfg() -> AutoscaleConfig {
+        AutoscaleConfig {
+            hi_ratio: 1.4,
+            lo_ratio: 0.8,
+            min_load_tps: 1.0,
+            util_hi_tps: 1e12, // ratio band only, in these unit tests
+            warmup_intervals: 1,
+            cooldown_intervals: 0,
+            drain_s: 5.0,
+            ..AutoscaleConfig::default()
+        }
+    }
+
+    /// One full control tick: observe the delta, then decide.
+    fn step(
+        a: &mut Autoscaler,
+        d: &StatsDelta,
+        p: &Placement,
+        ledger: &mut MemoryLedger,
+    ) -> Vec<ScaleDecision> {
+        a.observe(d, p);
+        a.plan(p, ledger)
+    }
+
+    #[test]
+    fn burst_triggers_scale_out_trough_triggers_drain() {
+        let (m, c) = world();
+        let p = uniform::place(&m, &c);
+        let mut ledger = MemoryLedger::new(&c);
+        let mut a = Autoscaler::new(&m, &c, cfg());
+        // steady state: ratio ≈ 1, no decisions
+        for i in 0..3 {
+            let d = delta_with(&m, i as f64 * 10.0, &[(0, 0, 100.0)]);
+            let out = step(&mut a, &d, &p, &mut ledger);
+            assert!(out.is_empty(), "steady state must not scale: {out:?}");
+        }
+        // burst: 5× load on (0,0) — fast EWMA jumps, slow lags
+        let d = delta_with(&m, 30.0, &[(0, 0, 500.0)]);
+        let out = step(&mut a, &d, &p, &mut ledger);
+        assert_eq!(out.len(), 1, "burst must scale out: {out:?}");
+        let ScaleDecision::ScaleOut {
+            layer,
+            expert,
+            dst_server,
+            dst_gpu,
+            ..
+        } = out[0]
+        else {
+            panic!("expected scale-out")
+        };
+        assert_eq!((layer, expert), (0, 0));
+        assert!(!p.server_has(dst_server, 0, 0), "new server only");
+        assert!(ledger.reserved(dst_server, dst_gpu) > 0, "bytes reserved");
+
+        // simulate the engine applying the copy
+        let mut p2 = p.clone();
+        p2.place(dst_server, dst_gpu, 0, 0).unwrap();
+        a.on_completions(
+            &[ScaleEvent {
+                t_s: 31.0,
+                kind: ScaleKind::Out,
+                layer: 0,
+                expert: 0,
+                server: dst_server,
+                gpu: dst_gpu,
+                applied: true,
+            }],
+            &mut ledger,
+        );
+        assert_eq!(ledger.reserved(dst_server, dst_gpu), 0);
+        assert_eq!(a.added_replicas().len(), 1);
+
+        // trough: load collapses — the added replica drains
+        let mut drained = None;
+        for i in 0..6 {
+            let d = delta_with(&m, 40.0 + i as f64 * 10.0, &[(0, 0, 20.0)]);
+            let out = step(&mut a, &d, &p2, &mut ledger);
+            if let Some(ScaleDecision::ScaleIn { server, gpu, .. }) =
+                out.first().copied()
+            {
+                drained = Some((server, gpu));
+                break;
+            }
+        }
+        assert_eq!(
+            drained,
+            Some((dst_server, dst_gpu)),
+            "trough must drain the added replica"
+        );
+    }
+
+    #[test]
+    fn warmup_and_max_replicas_are_respected() {
+        let (m, c) = world();
+        let p = uniform::place(&m, &c);
+        let mut ledger = MemoryLedger::new(&c);
+        let mut a = Autoscaler::new(
+            &m,
+            &c,
+            AutoscaleConfig {
+                warmup_intervals: 3,
+                max_replicas: 1,
+                ..cfg()
+            },
+        );
+        // huge burst inside warmup: silent
+        for i in 0..3 {
+            let d = delta_with(&m, i as f64 * 10.0, &[(1, 1, 1e6)]);
+            assert!(step(&mut a, &d, &p, &mut ledger).is_empty());
+        }
+        // past warmup, but max_replicas = 1 blocks every scale-out
+        let d = delta_with(&m, 40.0, &[(1, 1, 1e7)]);
+        assert!(step(&mut a, &d, &p, &mut ledger).is_empty());
+    }
+
+    #[test]
+    fn graft_and_shrunk_cluster() {
+        let (m, c) = world();
+        let mut a = Autoscaler::new(&m, &c, cfg());
+        a.added.push((0, 0, 2, 1));
+        let mut candidate = uniform::place(&m, &c);
+        assert!(!candidate.gpu_has(2, 1, 0, 0));
+        a.graft(&mut candidate);
+        assert!(candidate.gpu_has(2, 1, 0, 0), "graft carries the replica");
+        let shrunk = a.shrunk_cluster(&c);
+        for (s, srv) in shrunk.servers.iter().enumerate() {
+            for (g, gpu) in srv.gpus.iter().enumerate() {
+                assert!(gpu.mem_bytes < c.servers[s].gpus[g].mem_bytes);
+            }
+        }
+    }
+
+    #[test]
+    fn cooldown_spaces_operations() {
+        let (m, c) = world();
+        let p = uniform::place(&m, &c);
+        let mut ledger = MemoryLedger::new(&c);
+        let mut a = Autoscaler::new(
+            &m,
+            &c,
+            AutoscaleConfig {
+                cooldown_intervals: 3,
+                ..cfg()
+            },
+        );
+        let _ = step(&mut a, &delta_with(&m, 10.0, &[(0, 0, 100.0)]), &p, &mut ledger);
+        let out =
+            step(&mut a, &delta_with(&m, 20.0, &[(0, 0, 900.0)]), &p, &mut ledger);
+        assert_eq!(out.len(), 1);
+        // same expert stays quiet for the cooldown window even under load
+        let out =
+            step(&mut a, &delta_with(&m, 30.0, &[(0, 0, 2000.0)]), &p, &mut ledger);
+        assert!(out.is_empty(), "cooldown violated: {out:?}");
+    }
+}

@@ -19,12 +19,32 @@
 //! experiments) and the online gateway ([`crate::serve::Gateway`]), whose
 //! co-simulation loop calls [`Coordinator::on_interval`] directly — same
 //! scheduler, live measurements instead of a pre-seeded history.
+//!
+//! ## Migration ↔ autoscale arbitration
+//!
+//! With [`CoordinatorConfig::autoscale`] set, the coordinator also runs an
+//! [`Autoscaler`] off the same stats bus, and arbitrates so the two
+//! planners never fight over memory or in-flight state:
+//!
+//! 1. **One shared [`MemoryLedger`]** — every autoscale copy reserves its
+//!    bytes before it is scheduled; `Placement::place` caps are the hard
+//!    backstop at apply time for both planners.
+//! 2. **Mutual exclusion in time** — no migration is staged while replica
+//!    copies or drains are in flight, and no scale decisions are issued in
+//!    an interval that staged a migration.
+//! 3. **Graft on migration** — a migration candidate is computed against a
+//!    headroom-shrunk cluster (so base placements always leave autoscale
+//!    room) and the autoscaler's live replicas are grafted into it, so an
+//!    adopted migration carries them instead of silently dropping them.
 
+use crate::autoscale::{
+    AutoscaleConfig, AutoscaleLog, Autoscaler, ScaleDecision,
+};
 use crate::config::{ClusterConfig, ModelConfig};
 use crate::engine::{CostModel, Engine, EngineConfig, ServeReport};
 use crate::moe::ActivationStats;
 use crate::placement::migration::{self, MigrationCtx, MigrationDecision};
-use crate::placement::{Placement, PlacementAlgo};
+use crate::placement::{MemoryLedger, Placement, PlacementAlgo};
 use crate::serve::statsbus::{StatsBus, StatsDelta};
 use crate::trace::Trace;
 
@@ -50,6 +70,9 @@ pub struct CoordinatorConfig {
     /// Eq. 4 alone migrates continuously (the measured remote penalty makes
     /// even small mass differences look profitable).
     pub min_relative_gain: f64,
+    /// Run the expert replica autoscaler alongside migration (None = the
+    /// pre-autoscaler behavior, bit-for-bit).
+    pub autoscale: Option<AutoscaleConfig>,
 }
 
 impl Default for CoordinatorConfig {
@@ -61,6 +84,7 @@ impl Default for CoordinatorConfig {
             migrate: true,
             seed: 0,
             min_relative_gain: 0.15,
+            autoscale: None,
         }
     }
 }
@@ -82,6 +106,15 @@ pub struct Coordinator {
     /// decayed history of activation statistics
     pub history: ActivationStats,
     pub logs: Vec<IntervalLog>,
+    /// replica controller (Some iff `cfg.autoscale` was set)
+    pub autoscaler: Option<Autoscaler>,
+    /// the shared memory ledger both planners draw from
+    pub ledger: MemoryLedger,
+    /// per-interval autoscaler observability
+    pub autoscale_logs: Vec<AutoscaleLog>,
+    /// consecutive interval boundaries where in-flight scale ops forced
+    /// the migration refresh to be skipped (starvation guard)
+    refresh_starved: u64,
     /// live stats bus turning the engine's cumulative table into deltas
     bus: StatsBus,
 }
@@ -92,9 +125,17 @@ impl Coordinator {
         cluster: &ClusterConfig,
         cfg: CoordinatorConfig,
     ) -> Coordinator {
+        let autoscaler = cfg
+            .autoscale
+            .as_ref()
+            .map(|a| Autoscaler::new(model, cluster, a.clone()));
         Coordinator {
             history: ActivationStats::new(model, cluster.num_servers()),
             logs: Vec::new(),
+            autoscaler,
+            ledger: MemoryLedger::new(cluster),
+            autoscale_logs: Vec::new(),
+            refresh_starved: 0,
             bus: StatsBus::new(model, cluster.num_servers()),
             model: model.clone(),
             cluster: cluster.clone(),
@@ -163,7 +204,8 @@ impl Coordinator {
     }
 
     /// One scheduling boundary: publish the interval's activation delta on
-    /// the stats bus, ingest it, and evaluate a placement refresh. Returns
+    /// the stats bus, ingest it, evaluate a placement refresh, and — with
+    /// the autoscaler enabled — run one replica-control pass. Returns
     /// `true` when a migration was adopted (and staged in the engine).
     ///
     /// The offline driver ([`Coordinator::drive`]) and the online gateway
@@ -172,7 +214,135 @@ impl Coordinator {
     pub fn on_interval(&mut self, engine: &mut Engine, t: f64) -> bool {
         let delta = self.bus.collect(&engine.stats, t);
         self.ingest(&delta);
-        self.refresh(engine, &delta)
+
+        // fold completed scale ops back in (frees ledger reservations) and
+        // observe the interval unconditionally — arbitration below may
+        // suppress *decisions*, but the load EWMAs must never miss a delta
+        // (a burst arriving while a migration is in flight would otherwise
+        // be invisible and the scale-out reaction delayed past the burst)
+        let completions = engine.take_scale_completions();
+        if let Some(a) = &mut self.autoscaler {
+            a.on_completions(&completions, &mut self.ledger);
+            a.observe(&delta, &engine.placement);
+        }
+        // observability snapshot: replica state as of this boundary
+        // (completions folded, this tick's decisions not yet taken)
+        if let Some(a) = &self.autoscaler {
+            self.autoscale_logs.push(a.snapshot(t, &engine.placement));
+        }
+
+        // arbitration rule 2a: no migration while copies/drains are in
+        // flight (a wholesale placement swap would drop or strand them)
+        let scale_busy = self.autoscaler.is_some()
+            && (engine.scale_ops_in_flight() > 0
+                || engine.migration_in_flight());
+        let adopted = if scale_busy {
+            if self.cfg.migrate {
+                self.refresh_starved += 1;
+            }
+            self.logs.push(IntervalLog {
+                t_s: t,
+                decision: None,
+                remote_penalty_s: 0.0,
+                observed_tokens: delta.tokens,
+            });
+            false
+        } else {
+            self.refresh_starved = 0;
+            self.refresh(engine, &delta)
+        };
+
+        // arbitration rule 2b: no scale decisions in an interval that
+        // staged a migration. Rule 2c (anti-starvation): if in-flight
+        // scale ops have forced several consecutive refresh skips (e.g.
+        // drains longer than the control interval with many experts
+        // cycling), pause new decisions so the in-flight ops drain and
+        // the migration planner gets a boundary to run at.
+        let starved = self.refresh_starved >= 3;
+        if self.autoscaler.is_some()
+            && !adopted
+            && !engine.migration_in_flight()
+            && !starved
+        {
+            self.autoscale_step(engine, t);
+        }
+        adopted
+    }
+
+    /// One replica-control pass: plan against the current placement (with
+    /// ledger-backed reservations), then execute the decisions on the
+    /// engine, rolling back planner state for anything the engine refuses.
+    /// The interval's delta has already been folded in by `observe`.
+    fn autoscale_step(&mut self, engine: &mut Engine, t: f64) {
+        let drain_s = self
+            .autoscaler
+            .as_ref()
+            .map(|a| a.cfg.drain_s)
+            .unwrap_or(0.0);
+        let decisions = match &mut self.autoscaler {
+            Some(a) => a.plan(&engine.placement, &mut self.ledger),
+            None => return,
+        };
+        for d in &decisions {
+            match *d {
+                ScaleDecision::ScaleOut {
+                    layer,
+                    expert,
+                    dst_server,
+                    dst_gpu,
+                    src_server,
+                } => {
+                    let res = engine.schedule_scale_out(
+                        layer, expert, dst_server, dst_gpu, src_server,
+                    );
+                    match res {
+                        Ok(at) => crate::util::log::info(
+                            "autoscale",
+                            &format!(
+                                "t={t:.0}s scale-out l{layer}e{expert} -> \
+                                 s{dst_server}g{dst_gpu} (from s{src_server}, \
+                                 applies t={at:.1}s)"
+                            ),
+                        ),
+                        Err(_) => {
+                            self.ledger.release(
+                                dst_server,
+                                dst_gpu,
+                                self.model.expert_bytes,
+                            );
+                            if let Some(a) = &mut self.autoscaler {
+                                a.abort_scale_out(
+                                    layer, expert, dst_server, dst_gpu,
+                                );
+                            }
+                        }
+                    }
+                }
+                ScaleDecision::ScaleIn {
+                    layer,
+                    expert,
+                    server,
+                    gpu,
+                } => {
+                    let res = engine
+                        .schedule_scale_in(layer, expert, server, gpu, drain_s);
+                    match res {
+                        Ok(at) => crate::util::log::info(
+                            "autoscale",
+                            &format!(
+                                "t={t:.0}s scale-in l{layer}e{expert} @ \
+                                 s{server}g{gpu} (drains until t={at:.1}s)"
+                            ),
+                        ),
+                        Err(_) => {
+                            if let Some(a) = &mut self.autoscaler {
+                                a.abort_scale_in(layer, expert, server, gpu);
+                            }
+                        }
+                    }
+                }
+            }
+        }
     }
 
     /// Fold one stats-bus delta into the decayed history (the paper's
@@ -200,12 +370,31 @@ impl Coordinator {
             });
             return false;
         }
-        let candidate = self.cfg.algo.compute(
-            &self.model,
-            &self.cluster,
-            &self.history,
-            self.cfg.seed,
-        );
+        // Arbitration rules 1+3: with the autoscaler on, candidates are
+        // computed against a headroom-shrunk cluster (base placements
+        // always leave autoscale room), re-capped to real capacity, and
+        // the autoscaler's live replicas are grafted in so an adopted
+        // migration carries them.
+        let candidate = match &self.autoscaler {
+            Some(a) => {
+                let shrunk = a.shrunk_cluster(&self.cluster);
+                let mut cand = self.cfg.algo.compute(
+                    &self.model,
+                    &shrunk,
+                    &self.history,
+                    self.cfg.seed,
+                );
+                cand.set_mem_caps_from(&self.cluster);
+                a.graft(&mut cand);
+                cand
+            }
+            None => self.cfg.algo.compute(
+                &self.model,
+                &self.cluster,
+                &self.history,
+                self.cfg.seed,
+            ),
+        };
 
         // ---- Eq. 4 -------------------------------------------------------
         let penalty = self.remote_penalty_s(engine);
@@ -365,6 +554,82 @@ mod tests {
             "unexpected migrations: {:?}",
             report.migrations
         );
+    }
+
+    #[test]
+    fn scale_ops_in_flight_block_migration_refresh() {
+        let (m, c, w) = small();
+        let stats = warm_stats(&m, &w);
+        let mut engine = Engine::new(
+            &m,
+            &c,
+            uniform::place(&m, &c),
+            EngineConfig::default(),
+            CostModel::default(),
+        );
+        let mut coord = Coordinator::new(
+            &m,
+            &c,
+            CoordinatorConfig {
+                interval_s: 60.0,
+                autoscale: Some(crate::autoscale::AutoscaleConfig::default()),
+                ..CoordinatorConfig::default()
+            },
+        );
+        coord.seed_history(&stats);
+        // put a copy in flight via the engine, as the autoscaler would
+        let (l, e) = (0, 0);
+        let src = engine.placement.owners_ref(l, e)[0].0;
+        let dst = (0..3)
+            .find(|&s| !engine.placement.server_holds(s, l, e))
+            .unwrap();
+        let at = engine.schedule_scale_out(l, e, dst, 0, src).unwrap();
+        assert!(engine.scale_ops_in_flight() > 0);
+
+        // interval boundary with the copy in flight: refresh must be
+        // skipped entirely (no decision evaluated, nothing staged)
+        let adopted = coord.on_interval(&mut engine, 60.0);
+        assert!(!adopted);
+        assert!(coord.logs.last().unwrap().decision.is_none());
+        assert!(!engine.migration_in_flight());
+
+        // once the copy applies, the next interval refreshes normally
+        engine.run_until(at + 1.0);
+        let _ = coord.on_interval(&mut engine, 120.0);
+        assert!(
+            coord.logs.last().unwrap().decision.is_some(),
+            "refresh must resume after the copy lands"
+        );
+        engine.placement.validate().unwrap();
+        assert_eq!(coord.autoscale_logs.len(), 2);
+    }
+
+    #[test]
+    fn autoscale_none_preserves_pre_autoscaler_behavior() {
+        // With autoscale unset the coordinator path is unchanged: every
+        // interval refreshes, no autoscale logs appear.
+        let (m, c, w) = small();
+        let trace = TraceGenerator::new(&m, &w, 31).gen_count(30);
+        let mut coord = Coordinator::new(
+            &m,
+            &c,
+            CoordinatorConfig {
+                interval_s: 60.0,
+                ..CoordinatorConfig::default()
+            },
+        );
+        let _ = coord.run(
+            EngineConfig {
+                seed: 31,
+                ..EngineConfig::default()
+            },
+            CostModel::default(),
+            uniform::place(&m, &c),
+            &trace,
+        );
+        assert!(coord.autoscale_logs.is_empty());
+        assert!(coord.logs.iter().all(|l| l.decision.is_some()));
+        assert_eq!(coord.ledger.total_reserved(), 0);
     }
 
     #[test]

@@ -97,6 +97,34 @@ enum Ev {
     ExpertDone(usize, usize),
     ReturnDone(usize, usize),
     ApplyPlacement,
+    /// Autoscale copy finished loading: (server, gpu, layer, expert).
+    ApplyScaleOut(usize, usize, usize, usize),
+    /// Drain window elapsed, evict the replica: (server, gpu, layer, expert).
+    ApplyScaleIn(usize, usize, usize, usize),
+}
+
+/// Which direction a completed scale operation went.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleKind {
+    /// A replica copy landed (scale-out).
+    Out,
+    /// A drained replica was evicted (scale-in).
+    In,
+}
+
+/// One completed scale operation (observability + coordinator feedback).
+#[derive(Debug, Clone, Copy)]
+pub struct ScaleEvent {
+    /// Virtual time the operation applied.
+    pub t_s: f64,
+    pub kind: ScaleKind,
+    pub layer: usize,
+    pub expert: usize,
+    pub server: usize,
+    pub gpu: usize,
+    /// `false` when the apply was skipped (e.g. a migration replaced the
+    /// placement mid-flight and the target replica no longer fits/exists).
+    pub applied: bool,
 }
 
 /// One expert invocation in flight.
@@ -169,6 +197,14 @@ pub struct Engine {
     /// currently-active (arrived, unfinished) requests per exec server —
     /// the queue-depth signal the Offload-LB policy redirects on
     active: Vec<usize>,
+    /// every completed scale operation, in apply order (observability)
+    pub scale_events: Vec<ScaleEvent>,
+    /// `scale_events` prefix already drained by the coordinator
+    scale_events_read: usize,
+    /// scheduled-but-unapplied scale-out copies
+    scale_outs_pending: usize,
+    /// replicas currently draining toward eviction
+    drains_pending: usize,
 }
 
 impl Engine {
@@ -199,6 +235,10 @@ impl Engine {
             server_profiles: None,
             redirects: 0,
             active: vec![0; cluster_cfg.num_servers()],
+            scale_events: Vec::new(),
+            scale_events_read: 0,
+            scale_outs_pending: 0,
+            drains_pending: 0,
             placement,
             pending_placement: None,
             model: model.clone(),
@@ -336,6 +376,89 @@ impl Engine {
         apply_at
     }
 
+    /// Is a migration staged but not yet applied?
+    pub fn migration_in_flight(&self) -> bool {
+        self.pending_placement.is_some()
+    }
+
+    /// Scale operations (copies + drains) scheduled but not yet applied.
+    pub fn scale_ops_in_flight(&self) -> usize {
+        self.scale_outs_pending + self.drains_pending
+    }
+
+    /// Scale operations applied since the last call (coordinator feedback:
+    /// releases ledger reservations, promotes pending copies to replicas).
+    pub fn take_scale_completions(&mut self) -> Vec<ScaleEvent> {
+        let out = self.scale_events[self.scale_events_read..].to_vec();
+        self.scale_events_read = self.scale_events.len();
+        out
+    }
+
+    /// Stage a **scale-out**: copy one expert replica onto (dst_server,
+    /// dst_gpu). The copy traffic is accounted on the network model — the
+    /// serving copy streams from `src_server` over the (request-path!)
+    /// inter-server link, then loads host→device over the destination
+    /// GPU's PCIe, blocking that GPU like a migration load does. The
+    /// replica joins the placement (and starts taking traffic) when the
+    /// load finishes. Returns the apply time.
+    pub fn schedule_scale_out(
+        &mut self,
+        layer: usize,
+        expert: usize,
+        dst_server: usize,
+        dst_gpu: usize,
+        src_server: usize,
+    ) -> crate::Result<f64> {
+        if self.placement.gpu_has(dst_server, dst_gpu, layer, expert) {
+            return Err(crate::Error::Placement(format!(
+                "scale-out target s{dst_server}g{dst_gpu} already holds \
+                 l{layer}e{expert}"
+            )));
+        }
+        let now = self.now;
+        let bytes = self.model.expert_bytes as f64;
+        let ready = if src_server != dst_server {
+            self.net.book_transfer(
+                src_server,
+                dst_server,
+                bytes,
+                now,
+                self.cost.remote_fixed_s,
+            )
+        } else {
+            now
+        };
+        let gpu = &mut self.cluster.servers[dst_server].gpus[dst_gpu];
+        let dur = self.model.expert_bytes as f64 / gpu.pcie_bps;
+        let (_, end) = gpu.book(ready, dur);
+        self.scale_outs_pending += 1;
+        self.push_event(
+            end,
+            Ev::ApplyScaleOut(dst_server, dst_gpu, layer, expert),
+        );
+        Ok(end)
+    }
+
+    /// Stage a **scale-in**: the replica drains for `drain_s` virtual
+    /// seconds — it stops receiving new traffic immediately (in-flight
+    /// invocations finish normally), then its memory is freed. Returns the
+    /// eviction time. Errors if the replica is absent, already draining,
+    /// or the last active copy of its expert.
+    pub fn schedule_scale_in(
+        &mut self,
+        layer: usize,
+        expert: usize,
+        server: usize,
+        gpu: usize,
+        drain_s: f64,
+    ) -> crate::Result<f64> {
+        self.placement.begin_drain(server, gpu, layer, expert)?;
+        self.drains_pending += 1;
+        let at = self.now + drain_s.max(0.0);
+        self.push_event(at, Ev::ApplyScaleIn(server, gpu, layer, expert));
+        Ok(at)
+    }
+
     /// Run until the event queue is empty or `until` is passed. Returns
     /// the time of the next pending event (if stopped early).
     pub fn run_until(&mut self, until: f64) -> Option<f64> {
@@ -377,6 +500,35 @@ impl Engine {
                 if let Some(p) = self.pending_placement.take() {
                     self.placement = p;
                 }
+            }
+            Ev::ApplyScaleOut(s, g, l, e) => {
+                self.scale_outs_pending -= 1;
+                // a migration may have replaced the placement (or filled
+                // the GPU) while the copy was in flight — then the copy is
+                // dropped, reported as applied = false
+                let applied = self.placement.place(s, g, l, e).is_ok();
+                self.scale_events.push(ScaleEvent {
+                    t_s: self.now,
+                    kind: ScaleKind::Out,
+                    layer: l,
+                    expert: e,
+                    server: s,
+                    gpu: g,
+                    applied,
+                });
+            }
+            Ev::ApplyScaleIn(s, g, l, e) => {
+                self.drains_pending -= 1;
+                let applied = self.placement.finish_drain(s, g, l, e).is_ok();
+                self.scale_events.push(ScaleEvent {
+                    t_s: self.now,
+                    kind: ScaleKind::In,
+                    layer: l,
+                    expert: e,
+                    server: s,
+                    gpu: g,
+                    applied,
+                });
             }
         }
     }
@@ -761,6 +913,31 @@ impl World {
         placement: &Placement,
         trace: &Trace,
     ) -> ServeReport {
+        self.serve_trace_with(placement, trace, None)
+    }
+
+    /// Replay a *recorded* activation stream: serve `trace` with per-server
+    /// profiles (captured from a live run via
+    /// [`crate::trace::recorded::profiles_from_stats`]) driving the gate
+    /// instead of the task-keyed tables. This is the simulator half of the
+    /// replay-vs-live harness: same placement + same arrivals + recorded
+    /// expert-selection patterns ⇒ the latency gap quantifies the
+    /// simulator's fidelity to the live gateway.
+    pub fn serve_recorded(
+        &mut self,
+        placement: &Placement,
+        profiles: Vec<TaskProfile>,
+        trace: &Trace,
+    ) -> ServeReport {
+        self.serve_trace_with(placement, trace, Some(profiles))
+    }
+
+    fn serve_trace_with(
+        &mut self,
+        placement: &Placement,
+        trace: &Trace,
+        profiles: Option<Vec<TaskProfile>>,
+    ) -> ServeReport {
         let cfg = EngineConfig {
             seed: self.seed,
             ..EngineConfig::default()
@@ -772,6 +949,9 @@ impl World {
             cfg,
             CostModel::default(),
         );
+        if let Some(p) = profiles {
+            eng.set_server_profiles(p);
+        }
         eng.push_trace(trace);
         eng.run();
         std::mem::replace(
@@ -984,6 +1164,89 @@ mod tests {
         eng.run_until(apply_at + 1.0);
         assert_eq!(eng.placement, new);
         assert_eq!(eng.target_placement(), &new);
+    }
+
+    #[test]
+    fn scale_out_copies_then_serves_from_both() {
+        let (m, c, _) = small_world();
+        let mut eng = Engine::new(
+            &m,
+            &c,
+            uniform::place(&m, &c),
+            EngineConfig::default(),
+            CostModel::default(),
+        );
+        // pick an expert hosted somewhere and copy it to a server without it
+        let (l, e) = (0, 0);
+        let src = eng.placement.owners_ref(l, e)[0].0;
+        let dst = (0..3).find(|&s| !eng.placement.server_holds(s, l, e));
+        let dst = dst.expect("uniform leaves some server without (0,0)");
+        let net0 = eng.net.total_bytes();
+        let at = eng.schedule_scale_out(l, e, dst, 0, src).unwrap();
+        assert!(at > 0.0, "copy takes time");
+        assert_eq!(eng.scale_ops_in_flight(), 1);
+        // copy traffic hit the network model
+        assert!(eng.net.total_bytes() > net0);
+        assert!(!eng.placement.server_has(dst, l, e), "not yet applied");
+        eng.run_until(at + 1.0);
+        assert!(eng.placement.server_has(dst, l, e));
+        assert_eq!(eng.scale_ops_in_flight(), 0);
+        let done = eng.take_scale_completions();
+        assert_eq!(done.len(), 1);
+        assert!(done[0].applied);
+        assert_eq!(done[0].kind, ScaleKind::Out);
+        assert!(eng.take_scale_completions().is_empty(), "drained once");
+    }
+
+    #[test]
+    fn scale_in_drains_then_evicts() {
+        let (m, c, _) = small_world();
+        let mut eng = Engine::new(
+            &m,
+            &c,
+            uniform::place(&m, &c),
+            EngineConfig::default(),
+            CostModel::default(),
+        );
+        let (l, e) = (1, 2);
+        let src = eng.placement.owners_ref(l, e)[0].0;
+        let dst = (0..3)
+            .find(|&s| !eng.placement.server_holds(s, l, e))
+            .unwrap();
+        let at = eng.schedule_scale_out(l, e, dst, 0, src).unwrap();
+        eng.run_until(at + 1.0);
+        let mem_before = eng.placement.mem_used(dst, 0);
+        let evict_at = eng.schedule_scale_in(l, e, dst, 0, 10.0).unwrap();
+        // drain: replica invisible to routing immediately, memory held
+        assert!(!eng.placement.server_has(dst, l, e));
+        assert_eq!(eng.placement.mem_used(dst, 0), mem_before);
+        eng.run_until(evict_at + 1.0);
+        assert_eq!(
+            eng.placement.mem_used(dst, 0),
+            mem_before - m.expert_bytes
+        );
+        let evs = eng.take_scale_completions();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[1].kind, ScaleKind::In);
+        assert!(evs[1].applied);
+        assert!((evs[1].t_s - evict_at).abs() < 1e-9);
+    }
+
+    #[test]
+    fn scale_in_refuses_last_replica() {
+        let (m, c, _) = small_world();
+        let mut eng = Engine::new(
+            &m,
+            &c,
+            uniform::place(&m, &c),
+            EngineConfig::default(),
+            CostModel::default(),
+        );
+        let (l, e) = (0, 3);
+        let owners = eng.placement.owners(l, e);
+        assert_eq!(owners.len(), 1, "uniform places each expert once");
+        let (s, g) = owners[0];
+        assert!(eng.schedule_scale_in(l, e, s, g, 5.0).is_err());
     }
 
     #[test]

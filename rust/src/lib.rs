@@ -26,8 +26,9 @@
 //! | [`cluster`] | edge server + GPU state, memory accounting, offload store |
 //! | [`runtime`] | PJRT client (feature `pjrt`) or stub backend, HLO artifact loading, typed execution, calibration |
 //! | [`engine`] | discrete-event serving engine + MoE-Infinity offload baseline |
-//! | [`serve`] | online gateway: open-loop arrivals, admission control, continuous batching, locality-aware routing, live stats bus |
-//! | [`coordinator`] | global scheduler: stats collection, periodic placement refresh, migration execution |
+//! | [`serve`] | online gateway: open-loop arrivals, admission control, continuous batching, replica-aware locality routing, live stats bus |
+//! | [`autoscale`] | expert replica autoscaler: load EWMAs with hysteresis, scale-out/drained scale-in decisions |
+//! | [`coordinator`] | global scheduler: stats collection, periodic placement refresh, migration execution, migration↔autoscale arbitration |
 //! | [`exp`] | one harness per paper table/figure (Table I/II, Fig 2/3/5/6/7/8) |
 //!
 //! ## Quickstart (offline trace replay)
@@ -76,6 +77,7 @@
 //! );
 //! ```
 
+pub mod autoscale;
 pub mod cluster;
 pub mod config;
 pub mod coordinator;
@@ -91,6 +93,7 @@ pub mod util;
 
 /// Convenience re-exports for examples and downstream users.
 pub mod prelude {
+    pub use crate::autoscale::{AutoscaleConfig, Autoscaler, ScaleDecision};
     pub use crate::cluster::Cluster;
     pub use crate::config::{ClusterConfig, ModelConfig, WorkloadConfig};
     pub use crate::coordinator::{Coordinator, CoordinatorConfig};
@@ -122,7 +125,7 @@ pub enum Error {
 
 pub type Result<T> = std::result::Result<T, Error>;
 
-#[cfg(feature = "pjrt")]
+#[cfg(feature = "xla")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())

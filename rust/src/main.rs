@@ -7,9 +7,10 @@
 use std::path::PathBuf;
 use std::process::ExitCode;
 
+use dancemoe::autoscale::AutoscaleConfig;
 use dancemoe::config::{presets, ClusterConfig, ModelConfig, WorkloadConfig};
 use dancemoe::coordinator::CoordinatorConfig;
-use dancemoe::engine::warm_stats;
+use dancemoe::engine::{warm_stats, ScaleKind};
 use dancemoe::exp::runner::RunSpec;
 use dancemoe::placement::{objective, uniform, PlacementAlgo};
 use dancemoe::runtime::{calibrate, forward, weights, Runtime};
@@ -55,6 +56,24 @@ fn cli() -> Cli {
                 .flag("seed", Some("0"), "rng seed")
                 .switch("no-migrate", "disable live migration")
                 .switch("home-routing", "disable locality-aware routing"),
+            Command::new("autoscale", "online serving with the expert \
+                          replica autoscaler: live-load-driven scale-out, \
+                          replica-aware routing, drained scale-in")
+                .flag("preset", Some("edge3"), "cluster preset (edge3|scaling<N>)")
+                .flag("model", Some("deepseek"), "model preset")
+                .flag("workload", Some("bigbench"), "bigbench|multidata")
+                .flag("rps", Some("8"), "aggregate arrival rate (req/s, whole cluster)")
+                .flag("profile", Some("bursty"), "arrival profile (poisson|bursty|diurnal)")
+                .flag("horizon", Some("600"), "virtual seconds of arrivals")
+                .flag("interval", Some("15"), "stats-bus / control interval (s)")
+                .flag("slo", Some("15"), "latency SLO (s)")
+                .flag("algo", Some("dancemoe"), "placement algorithm for refreshes")
+                .flag("hi-ratio", Some("1.5"), "scale-out band: fast/slow load-EWMA ratio")
+                .flag("lo-ratio", Some("0.7"), "scale-in band (hysteresis gap below hi)")
+                .flag("drain", Some("10"), "drain seconds before a scaled-in replica is evicted")
+                .flag("max-ops", Some("8"), "scale operations per interval")
+                .flag("seed", Some("0"), "rng seed")
+                .switch("no-baseline", "skip the fixed-placement comparison run"),
             Command::new("exp", "regenerate a paper table/figure \
                           (table1|table2|fig2|fig3|fig5|fig6|fig7|fig8|ablations|all)")
                 .flag("seed", Some("7"), "rng seed")
@@ -179,7 +198,11 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
-fn cmd_gateway(args: &Args) -> Result<(), String> {
+/// Shared online-serving setup (gateway + autoscale): resolve the cluster
+/// preset, the aggregate arrival rate, and the workload.
+fn online_setup(
+    args: &Args,
+) -> Result<(ModelConfig, ClusterConfig, WorkloadConfig, f64), String> {
     let model = model_of(args)?;
     let preset = args.get_str("preset");
     let cluster = match preset.as_str() {
@@ -215,6 +238,11 @@ fn cmd_gateway(args: &Args) -> Result<(), String> {
             args.get_str("workload")
         ));
     };
+    Ok((model, cluster, workload, rps))
+}
+
+fn cmd_gateway(args: &Args) -> Result<(), String> {
+    let (model, cluster, workload, rps) = online_setup(args)?;
     let profile = ArrivalProfile::from_name(&args.get_str("profile"))
         .ok_or_else(|| {
             format!("unknown profile '{}'", args.get_str("profile"))
@@ -328,6 +356,220 @@ fn cmd_gateway(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+fn cmd_autoscale(args: &Args) -> Result<(), String> {
+    let (model, cluster, workload, rps) = online_setup(args)?;
+    let profile = ArrivalProfile::from_name(&args.get_str("profile"))
+        .ok_or_else(|| {
+            format!("unknown profile '{}'", args.get_str("profile"))
+        })?;
+    let algo = PlacementAlgo::from_name(&args.get_str("algo"))
+        .map_err(|e| e.to_string())?;
+    let seed = args.get_u64("seed")?;
+    let horizon_s = args.get_f64("horizon")?;
+    let interval_s = args.get_f64("interval")?;
+    if interval_s <= 0.0 {
+        return Err("--interval must be positive".into());
+    }
+    let hi_ratio = args.get_f64("hi-ratio")?;
+    let lo_ratio = args.get_f64("lo-ratio")?;
+    if lo_ratio >= hi_ratio {
+        return Err("--lo-ratio must be below --hi-ratio (hysteresis)".into());
+    }
+    let acfg = AutoscaleConfig {
+        hi_ratio,
+        lo_ratio,
+        drain_s: args.get_f64("drain")?,
+        max_ops_per_interval: args.get_usize("max-ops")?,
+        ..AutoscaleConfig::default()
+    };
+    let gcfg = GatewayConfig {
+        horizon_s,
+        profile,
+        slo_s: args.get_f64("slo")?,
+        seed,
+        ..GatewayConfig::default()
+    };
+
+    // Same online-first start as the gateway: uniform layout, empty
+    // history; migration AND replica autoscaling both run from live stats.
+    let initial = uniform::place(&model, &cluster);
+    let mut gw = Gateway::new(
+        &model,
+        &cluster,
+        &workload,
+        initial.clone(),
+        gcfg.clone(),
+        CoordinatorConfig {
+            interval_s,
+            algo,
+            migrate: true,
+            seed,
+            autoscale: Some(acfg),
+            ..CoordinatorConfig::default()
+        },
+    );
+    let report = gw.run();
+
+    println!(
+        "autoscale: {} on {} — {:.1} req/s {} arrivals, {:.0}s horizon, \
+         control every {:.0}s",
+        model.name,
+        cluster.name,
+        rps,
+        profile.name(),
+        horizon_s,
+        interval_s
+    );
+
+    // ---- replica-count timeline -----------------------------------------
+    let mut t = Table::new(
+        "replica-count timeline (hottest expert by fast load-EWMA)",
+        &["t (s)", "hot expert", "load (tok/s)", "fast/slow", "replicas",
+          "extra", "draining"],
+    );
+    let logs = &gw.coordinator.autoscale_logs;
+    let stride = (logs.len() / 12).max(1);
+    for (i, log) in logs.iter().enumerate() {
+        if i % stride != 0 && i + 1 != logs.len() {
+            continue;
+        }
+        t.row(vec![
+            format!("{:.0}", log.t_s),
+            format!("l{}e{}", log.hot_layer, log.hot_expert),
+            format!("{:.0}", log.hot_load_tps),
+            format!("{:.2}", log.hot_ratio),
+            format!("{}", log.hot_replicas),
+            format!("{}", log.extra_replicas),
+            format!("{}", log.draining),
+        ]);
+    }
+    println!("{}", t.render());
+
+    for ev in &gw.engine.scale_events {
+        let verb = match (ev.kind, ev.applied) {
+            (ScaleKind::Out, true) => "scale-out",
+            (ScaleKind::Out, false) => "scale-out (dropped)",
+            (ScaleKind::In, true) => "scale-in",
+            (ScaleKind::In, false) => "scale-in (dropped)",
+        };
+        println!(
+            "  t={:>6.1}s  {verb:<20} l{}e{} @ s{}g{}",
+            ev.t_s, ev.layer, ev.expert, ev.server, ev.gpu
+        );
+    }
+    // how the final replica layout splits each stream's traffic across
+    // its replica band (per 100 requests, residual = empty queues)
+    let residual = vec![gw.cfg.queue_cap; cluster.num_servers()];
+    for (home, stream) in workload.streams.iter().enumerate() {
+        let split =
+            gw.router()
+                .split_counts(stream.task, home, 100, &residual);
+        println!(
+            "  final replica-band split for {:?} (stream {home}): \
+             {split:?} per 100 requests",
+            stream.task
+        );
+    }
+    let reaction = gw
+        .engine
+        .scale_events
+        .iter()
+        .find(|e| e.applied && e.kind == ScaleKind::Out)
+        .map(|e| e.t_s);
+    match reaction {
+        Some(at) => {
+            let mut line = format!("first scale-out applied at t={at:.1}s");
+            if let ArrivalProfile::Bursty { period_s, .. } = profile {
+                line.push_str(&format!(
+                    " ({:.1}s after burst onset)",
+                    at.rem_euclid(period_s)
+                ));
+            }
+            println!("{line}");
+        }
+        None => println!("no scale-out fired (load never crossed the band)"),
+    }
+
+    // ---- summary vs the fixed-placement gateway --------------------------
+    println!(
+        "autoscaled  p50 {:.2}s  p95 {:.2}s  p99 {:.2}s  shed {}  \
+         migrations {}  scale-outs {}  scale-ins {}",
+        report.latency_percentile(0.50),
+        report.latency_percentile(0.95),
+        report.latency_percentile(0.99),
+        report.shed,
+        report.migrations,
+        report.scale_outs,
+        report.scale_ins,
+    );
+    if !args.switch("no-baseline") {
+        // two baselines at the same arrival stream: migrate-only isolates
+        // what the autoscaler adds on top of migration; fixed is the
+        // static-placement floor (the acceptance comparison).
+        let mut migrate_only = Gateway::new(
+            &model,
+            &cluster,
+            &workload,
+            initial.clone(),
+            gcfg.clone(),
+            CoordinatorConfig {
+                interval_s,
+                algo,
+                migrate: true,
+                seed,
+                ..CoordinatorConfig::default()
+            },
+        );
+        let mig = migrate_only.run();
+        println!(
+            "migrate-only p50 {:.2}s  p95 {:.2}s  p99 {:.2}s  shed {}  \
+             (same arrivals, no autoscaler)",
+            mig.latency_percentile(0.50),
+            mig.latency_percentile(0.95),
+            mig.latency_percentile(0.99),
+            mig.shed,
+        );
+        let mut fixed = Gateway::new(
+            &model,
+            &cluster,
+            &workload,
+            initial,
+            gcfg,
+            CoordinatorConfig {
+                interval_s,
+                algo,
+                migrate: false,
+                seed,
+                ..CoordinatorConfig::default()
+            },
+        );
+        let base = fixed.run();
+        println!(
+            "fixed        p50 {:.2}s  p95 {:.2}s  p99 {:.2}s  shed {}  \
+             (same arrivals, static placement)",
+            base.latency_percentile(0.50),
+            base.latency_percentile(0.95),
+            base.latency_percentile(0.99),
+            base.shed,
+        );
+        let a95 = report.latency_percentile(0.95);
+        let m95 = mig.latency_percentile(0.95);
+        let f95 = base.latency_percentile(0.95);
+        if f95 > 0.0 {
+            println!(
+                "p95 delta    {:+.1}% vs fixed  ({:+.1}% vs migrate-only)",
+                100.0 * (a95 - f95) / f95,
+                if m95 > 0.0 {
+                    100.0 * (a95 - m95) / m95
+                } else {
+                    0.0
+                }
+            );
+        }
+    }
+    Ok(())
+}
+
 fn cmd_exp(args: &Args) -> Result<(), String> {
     let which = args
         .positional
@@ -387,7 +629,7 @@ fn pjrt_hint() -> &'static str {
         ""
     } else {
         ", add the xla dependency in rust/Cargo.toml (see the note there) \
-         and rebuild with --features pjrt"
+         and rebuild with --features pjrt,xla"
     }
 }
 
@@ -502,6 +744,7 @@ fn main() -> ExitCode {
         "place" => cmd_place(&args),
         "serve" => cmd_serve(&args),
         "gateway" => cmd_gateway(&args),
+        "autoscale" => cmd_autoscale(&args),
         "exp" => cmd_exp(&args),
         "calibrate" => cmd_calibrate(&args),
         "forward" => cmd_forward(&args),

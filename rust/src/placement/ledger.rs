@@ -1,0 +1,166 @@
+//! Shared per-server **memory ledger**: the single accounting surface both
+//! the migration planner and the replica autoscaler draw GPU memory from.
+//!
+//! A [`crate::placement::Placement`] tracks bytes *committed* by resident
+//! replicas (including draining ones, which hold memory until eviction).
+//! In-flight operations — a staged migration's loads, an autoscale copy en
+//! route — are not in any placement yet, so two planners consulting the
+//! placement alone could promise the same free bytes twice. The ledger
+//! closes that gap: every planned byte is reserved here first, and
+//! `free = cap − placement.mem_used − reserved` is the only number either
+//! planner may spend. Reservations are released when the engine reports the
+//! operation applied (or failed).
+//!
+//! `Placement::place` still enforces capacity at apply time, so the ledger
+//! is a planning discipline on top of a hard backstop, not the backstop
+//! itself.
+
+use crate::config::ClusterConfig;
+use crate::moe::ServerId;
+use crate::placement::Placement;
+
+/// Per-(server, GPU) reservation table over the cluster's capacities.
+#[derive(Debug, Clone)]
+pub struct MemoryLedger {
+    cap: Vec<Vec<u64>>,
+    reserved: Vec<Vec<u64>>,
+}
+
+impl MemoryLedger {
+    pub fn new(cluster: &ClusterConfig) -> MemoryLedger {
+        MemoryLedger {
+            cap: cluster
+                .servers
+                .iter()
+                .map(|s| s.gpus.iter().map(|g| g.mem_bytes).collect())
+                .collect(),
+            reserved: cluster
+                .servers
+                .iter()
+                .map(|s| vec![0; s.gpus.len()])
+                .collect(),
+        }
+    }
+
+    /// Bytes still spendable on (server, gpu): capacity minus what the
+    /// placement holds (active + draining replicas) minus reservations.
+    pub fn free(&self, p: &Placement, server: ServerId, gpu: usize) -> u64 {
+        self.cap[server][gpu]
+            .saturating_sub(p.mem_used(server, gpu) + self.reserved[server][gpu])
+    }
+
+    /// Reserve `bytes` on (server, gpu) if they fit; `false` means the
+    /// caller must pick another target (or skip the operation).
+    pub fn try_reserve(
+        &mut self,
+        p: &Placement,
+        server: ServerId,
+        gpu: usize,
+        bytes: u64,
+    ) -> bool {
+        if self.free(p, server, gpu) >= bytes {
+            self.reserved[server][gpu] += bytes;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Release a reservation (operation applied or abandoned).
+    pub fn release(&mut self, server: ServerId, gpu: usize, bytes: u64) {
+        self.reserved[server][gpu] =
+            self.reserved[server][gpu].saturating_sub(bytes);
+    }
+
+    pub fn reserved(&self, server: ServerId, gpu: usize) -> u64 {
+        self.reserved[server][gpu]
+    }
+
+    pub fn total_reserved(&self) -> u64 {
+        self.reserved.iter().flatten().sum()
+    }
+
+    pub fn capacity(&self, server: ServerId, gpu: usize) -> u64 {
+        self.cap[server][gpu]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClusterConfig, ModelConfig};
+
+    fn world() -> (ModelConfig, ClusterConfig) {
+        let m = ModelConfig::tiny();
+        let mut c = ClusterConfig::edge_testbed_3_for(&m);
+        // 3 expert slots per GPU: tight enough to exercise refusal
+        for s in &mut c.servers {
+            for g in &mut s.gpus {
+                g.mem_bytes = m.expert_bytes * 3;
+            }
+        }
+        (m, c)
+    }
+
+    #[test]
+    fn reserve_respects_placement_and_capacity() {
+        let (m, c) = world();
+        let mut p = Placement::new(&m, &c);
+        let mut ledger = MemoryLedger::new(&c);
+        p.place(0, 0, 0, 0).unwrap();
+        assert_eq!(ledger.free(&p, 0, 0), m.expert_bytes * 2);
+        assert!(ledger.try_reserve(&p, 0, 0, m.expert_bytes));
+        assert!(ledger.try_reserve(&p, 0, 0, m.expert_bytes));
+        // placement (1) + reservations (2) fill the GPU: next must refuse
+        assert!(!ledger.try_reserve(&p, 0, 0, m.expert_bytes));
+        assert_eq!(ledger.free(&p, 0, 0), 0);
+        assert_eq!(ledger.reserved(0, 0), m.expert_bytes * 2);
+        ledger.release(0, 0, m.expert_bytes);
+        assert!(ledger.try_reserve(&p, 0, 0, m.expert_bytes));
+    }
+
+    #[test]
+    fn placement_plus_reservations_never_exceed_capacity() {
+        // The satellite invariant: a migration's staged loads and a
+        // concurrent scale-out copy draw from one ledger, so their sum can
+        // never overshoot a GPU. Fill via both paths in arbitrary order.
+        let (m, c) = world();
+        let mut p = Placement::new(&m, &c);
+        let mut ledger = MemoryLedger::new(&c);
+        let mut placed = 0u64;
+        for e in 0..8 {
+            // alternate: even experts land as resident replicas (a
+            // migration's apply), odd ones as in-flight reservations (an
+            // autoscale copy)
+            if e % 2 == 0 {
+                if ledger.free(&p, 1, 0) >= m.expert_bytes
+                    && p.place(1, 0, 0, e).is_ok()
+                {
+                    placed += m.expert_bytes;
+                }
+            } else if ledger.try_reserve(&p, 1, 0, m.expert_bytes) {
+                placed += m.expert_bytes;
+            }
+            assert!(
+                p.mem_used(1, 0) + ledger.reserved(1, 0)
+                    <= ledger.capacity(1, 0),
+                "over-commit after expert {e}"
+            );
+        }
+        assert_eq!(placed, m.expert_bytes * 3, "exactly the capacity");
+    }
+
+    #[test]
+    fn draining_replicas_still_occupy_ledger_memory() {
+        let (m, c) = world();
+        let mut p = Placement::new(&m, &c);
+        let mut ledger = MemoryLedger::new(&c);
+        p.place(2, 0, 0, 0).unwrap();
+        p.place(0, 0, 0, 0).unwrap();
+        p.begin_drain(2, 0, 0, 0).unwrap();
+        // drain does not free memory yet
+        assert_eq!(ledger.free(&p, 2, 0), m.expert_bytes * 2);
+        p.finish_drain(2, 0, 0, 0).unwrap();
+        assert_eq!(ledger.free(&p, 2, 0), m.expert_bytes * 3);
+    }
+}

@@ -17,11 +17,16 @@
 pub mod assign;
 pub mod entropy_alloc;
 pub mod eplb;
+pub mod ledger;
 pub mod migration;
 pub mod objective;
 pub mod redundance;
+pub mod replicaset;
 pub mod smartmoe;
 pub mod uniform;
+
+pub use ledger::MemoryLedger;
+pub use replicaset::ReplicaSet;
 
 use crate::config::{ClusterConfig, ModelConfig};
 use crate::moe::{ActivationStats, ExpertId, LayerId, ServerId};
@@ -116,12 +121,20 @@ pub struct Placement {
     pub mem_cap: Vec<Vec<u64>>,
     /// `assign[server][gpu][eid]` — eid = layer * num_experts + expert.
     assign: Vec<Vec<Vec<bool>>>,
-    /// Cached per-server union over GPUs.
+    /// `draining[server][gpu][eid]` — subset of `assign`: replicas being
+    /// scaled in. A draining replica still holds memory (freed only by
+    /// [`Placement::finish_drain`]) but receives no new traffic: it is
+    /// excluded from `server_has` and the owner cache, so every routing
+    /// path — the engine's per-invocation replica choice and the gateway's
+    /// locality router — skips it without extra checks.
+    draining: Vec<Vec<Vec<bool>>>,
+    /// Cached per-server union over GPUs (active replicas only).
     server_has: Vec<Vec<bool>>,
     /// Memory used per (server, gpu).
     mem_used: Vec<Vec<u64>>,
-    /// Cached replica list per eid — the router's hot lookup (O(replicas)
-    /// instead of an O(servers × GPUs) scan per remote invocation).
+    /// Cached *active* replica list per eid — the router's hot lookup
+    /// (O(replicas) instead of an O(servers × GPUs) scan per remote
+    /// invocation). Draining replicas are excluded.
     owner_cache: Vec<Vec<(ServerId, usize)>>,
 }
 
@@ -134,6 +147,10 @@ impl Placement {
         Placement {
             num_servers: cluster.num_servers(),
             assign: gpus
+                .iter()
+                .map(|&g| vec![vec![false; total]; g])
+                .collect(),
+            draining: gpus
                 .iter()
                 .map(|&g| vec![vec![false; total]; g])
                 .collect(),
@@ -201,11 +218,125 @@ impl Placement {
             )));
         }
         self.assign[server][gpu][eid] = false;
+        self.draining[server][gpu][eid] = false;
         self.mem_used[server][gpu] -= self.expert_bytes;
-        self.server_has[server][eid] =
-            (0..self.gpus[server]).any(|g| self.assign[server][g][eid]);
+        self.server_has[server][eid] = (0..self.gpus[server])
+            .any(|g| self.assign[server][g][eid] && !self.draining[server][g][eid]);
         self.owner_cache[eid].retain(|&o| o != (server, gpu));
         Ok(())
+    }
+
+    /// Start draining a replica (scale-in phase 1): it stops receiving new
+    /// traffic immediately — dropped from `server_has` and the owner cache —
+    /// but keeps its memory until [`Placement::finish_drain`] evicts it.
+    /// Refuses to drain the last active replica (coverage must hold).
+    pub fn begin_drain(
+        &mut self,
+        server: ServerId,
+        gpu: usize,
+        layer: LayerId,
+        expert: ExpertId,
+    ) -> Result<()> {
+        let eid = self.eid(layer, expert);
+        if !self.assign[server][gpu][eid] {
+            return Err(Error::Placement(format!(
+                "expert l{layer}e{expert} not on s{server}g{gpu}"
+            )));
+        }
+        if self.draining[server][gpu][eid] {
+            return Err(Error::Placement(format!(
+                "expert l{layer}e{expert} already draining on s{server}g{gpu}"
+            )));
+        }
+        if self.owner_cache[eid].len() <= 1 {
+            return Err(Error::Placement(format!(
+                "cannot drain the last active replica of l{layer}e{expert}"
+            )));
+        }
+        self.draining[server][gpu][eid] = true;
+        self.owner_cache[eid].retain(|&o| o != (server, gpu));
+        self.server_has[server][eid] = (0..self.gpus[server])
+            .any(|g| self.assign[server][g][eid] && !self.draining[server][g][eid]);
+        Ok(())
+    }
+
+    /// Evict a drained replica (scale-in phase 2): frees its memory. The
+    /// replica must have been put into drain by [`Placement::begin_drain`].
+    pub fn finish_drain(
+        &mut self,
+        server: ServerId,
+        gpu: usize,
+        layer: LayerId,
+        expert: ExpertId,
+    ) -> Result<()> {
+        let eid = self.eid(layer, expert);
+        if !self.draining[server][gpu][eid] {
+            return Err(Error::Placement(format!(
+                "expert l{layer}e{expert} not draining on s{server}g{gpu}"
+            )));
+        }
+        self.assign[server][gpu][eid] = false;
+        self.draining[server][gpu][eid] = false;
+        self.mem_used[server][gpu] -= self.expert_bytes;
+        Ok(())
+    }
+
+    /// Is this specific replica draining?
+    #[inline]
+    pub fn is_draining(
+        &self,
+        server: ServerId,
+        gpu: usize,
+        layer: LayerId,
+        expert: ExpertId,
+    ) -> bool {
+        self.draining[server][gpu][self.eid(layer, expert)]
+    }
+
+    /// Every replica currently in drain, as (server, gpu, layer, expert).
+    pub fn draining_replicas(&self) -> Vec<(ServerId, usize, LayerId, ExpertId)> {
+        let mut out = Vec::new();
+        for s in 0..self.num_servers {
+            for g in 0..self.gpus[s] {
+                for l in 0..self.num_layers {
+                    for e in 0..self.num_experts {
+                        if self.draining[s][g][self.eid(l, e)] {
+                            out.push((s, g, l, e));
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Number of *active* (non-draining) replicas of an expert.
+    #[inline]
+    pub fn active_count(&self, layer: LayerId, expert: ExpertId) -> usize {
+        self.owner_cache[self.eid(layer, expert)].len()
+    }
+
+    /// Does `server` hold the expert on any GPU, active *or* draining?
+    /// (Memory-domain query; routing uses [`Placement::server_has`].)
+    pub fn server_holds(
+        &self,
+        server: ServerId,
+        layer: LayerId,
+        expert: ExpertId,
+    ) -> bool {
+        let eid = self.eid(layer, expert);
+        (0..self.gpus[server]).any(|g| self.assign[server][g][eid])
+    }
+
+    /// Re-cap memory to the (full) capacities of `cluster` — used after
+    /// computing a placement against a headroom-shrunk cluster so the
+    /// autoscaler can later spend the reserved headroom on replicas.
+    pub fn set_mem_caps_from(&mut self, cluster: &ClusterConfig) {
+        self.mem_cap = cluster
+            .servers
+            .iter()
+            .map(|s| s.gpus.iter().map(|g| g.mem_bytes).collect())
+            .collect();
     }
 
     /// Is the expert resident anywhere on `server`? (The `1_remote`
@@ -461,6 +592,74 @@ mod tests {
         assert_eq!(adds, vec![(1, 0, 0, 1)]);
         // removals are not counted
         assert!(b.added_replicas(&a).is_empty());
+    }
+
+    #[test]
+    fn drain_excludes_replica_from_routing_state() {
+        let (_, _, mut p) = setup();
+        p.place(0, 0, 2, 3).unwrap();
+        p.place(1, 0, 2, 3).unwrap();
+        assert_eq!(p.active_count(2, 3), 2);
+        p.begin_drain(1, 0, 2, 3).unwrap();
+        // routing state: server 1 no longer "has" the expert...
+        assert!(!p.server_has(1, 2, 3));
+        assert_eq!(p.owners(2, 3), vec![(0, 0)]);
+        assert_eq!(p.active_count(2, 3), 1);
+        assert_eq!(p.coverage(2, 3), 1);
+        // ...but the memory domain still does
+        assert!(p.server_holds(1, 2, 3));
+        assert!(p.is_draining(1, 0, 2, 3));
+        assert_eq!(p.mem_used(1, 0), p.expert_bytes);
+        assert_eq!(p.draining_replicas(), vec![(1, 0, 2, 3)]);
+        // eviction frees the memory
+        p.finish_drain(1, 0, 2, 3).unwrap();
+        assert_eq!(p.mem_used(1, 0), 0);
+        assert!(!p.server_holds(1, 2, 3));
+        assert!(p.draining_replicas().is_empty());
+    }
+
+    #[test]
+    fn drain_refuses_last_active_replica_and_double_drain() {
+        let (_, _, mut p) = setup();
+        p.place(0, 0, 1, 1).unwrap();
+        assert!(p.begin_drain(0, 0, 1, 1).is_err(), "last replica");
+        p.place(2, 0, 1, 1).unwrap();
+        p.begin_drain(2, 0, 1, 1).unwrap();
+        assert!(p.begin_drain(2, 0, 1, 1).is_err(), "double drain");
+        // the survivor is now the last active one
+        assert!(p.begin_drain(0, 0, 1, 1).is_err());
+        assert!(p.finish_drain(0, 0, 1, 1).is_err(), "not draining");
+    }
+
+    #[test]
+    fn remove_clears_drain_state() {
+        let (_, _, mut p) = setup();
+        p.place(0, 0, 0, 2).unwrap();
+        p.place(1, 0, 0, 2).unwrap();
+        p.begin_drain(1, 0, 0, 2).unwrap();
+        p.remove(1, 0, 0, 2).unwrap();
+        assert!(!p.is_draining(1, 0, 0, 2));
+        assert_eq!(p.mem_used(1, 0), 0);
+        // replaceable again
+        p.place(1, 0, 0, 2).unwrap();
+        assert!(p.server_has(1, 0, 2));
+    }
+
+    #[test]
+    fn set_mem_caps_restores_full_capacity() {
+        let (m, c, _) = setup();
+        let mut shrunk = c.clone();
+        for s in &mut shrunk.servers {
+            for g in &mut s.gpus {
+                g.mem_bytes = m.expert_bytes * 2;
+            }
+        }
+        let mut p = Placement::new(&m, &shrunk);
+        p.place(0, 0, 0, 0).unwrap();
+        p.place(0, 0, 0, 1).unwrap();
+        assert!(p.place(0, 0, 0, 2).is_err(), "shrunk cap");
+        p.set_mem_caps_from(&c);
+        p.place(0, 0, 0, 2).unwrap();
     }
 
     #[test]

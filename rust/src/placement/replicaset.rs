@@ -1,0 +1,168 @@
+//! First-class **replica sets**: the per-expert view of a placement the
+//! autoscaler reasons about, plus the memory-budget-aware replica placer.
+//!
+//! `redundance.rs` picks static replica counts offline; the autoscaler
+//! instead adjusts replica counts *online*, so it needs (a) a queryable
+//! per-expert replica state — active replicas serving traffic, draining
+//! replicas on their way out — and (b) a placer that finds where the next
+//! replica should go: the least-loaded server that does not already hold
+//! the expert, on the GPU with the most ledger-free memory.
+
+use crate::moe::{ExpertId, LayerId, ServerId};
+use crate::placement::{MemoryLedger, Placement};
+
+/// All replicas of one (layer, expert), split by lifecycle state.
+#[derive(Debug, Clone)]
+pub struct ReplicaSet {
+    pub layer: LayerId,
+    pub expert: ExpertId,
+    /// Replicas receiving traffic, as (server, gpu).
+    pub active: Vec<(ServerId, usize)>,
+    /// Replicas draining toward eviction (hold memory, take no traffic).
+    pub draining: Vec<(ServerId, usize)>,
+}
+
+impl ReplicaSet {
+    pub fn active_count(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Distinct servers with an active replica.
+    pub fn active_servers(&self) -> Vec<ServerId> {
+        let mut s: Vec<ServerId> =
+            self.active.iter().map(|&(n, _)| n).collect();
+        s.sort_unstable();
+        s.dedup();
+        s
+    }
+}
+
+impl Placement {
+    /// The replica set of one expert under this placement.
+    pub fn replica_set(&self, layer: LayerId, expert: ExpertId) -> ReplicaSet {
+        let active = self.owners(layer, expert);
+        let mut draining = Vec::new();
+        for s in 0..self.num_servers {
+            for g in 0..self.gpus[s] {
+                if self.is_draining(s, g, layer, expert) {
+                    draining.push((s, g));
+                }
+            }
+        }
+        ReplicaSet {
+            layer,
+            expert,
+            active,
+            draining,
+        }
+    }
+}
+
+/// Pick where a new replica of (layer, expert) should go: among servers
+/// that do not hold the expert (active *or* draining — a draining copy
+/// still occupies the memory a fresh copy would need), choose the one with
+/// the lowest recent load (`server_load_tps`, ties toward the lower
+/// index), and within it the GPU with the most ledger-free memory that can
+/// fit the expert. `None` when no server has both room and no copy.
+pub fn place_replica(
+    p: &Placement,
+    ledger: &MemoryLedger,
+    server_load_tps: &[f64],
+    layer: LayerId,
+    expert: ExpertId,
+) -> Option<(ServerId, usize)> {
+    let bytes = p.expert_bytes;
+    let mut best: Option<(ServerId, usize)> = None;
+    let mut best_load = f64::INFINITY;
+    for s in 0..p.num_servers {
+        if p.server_holds(s, layer, expert) {
+            continue;
+        }
+        let mut gpu: Option<(usize, u64)> = None;
+        for g in 0..p.gpus[s] {
+            let free = ledger.free(p, s, g);
+            if free >= bytes && gpu.map(|(_, bf)| free > bf).unwrap_or(true) {
+                gpu = Some((g, free));
+            }
+        }
+        if let Some((g, _)) = gpu {
+            let load = server_load_tps.get(s).copied().unwrap_or(0.0);
+            if load < best_load {
+                best_load = load;
+                best = Some((s, g));
+            }
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClusterConfig, ModelConfig};
+
+    fn world() -> (ModelConfig, ClusterConfig) {
+        let m = ModelConfig::tiny();
+        let mut c = ClusterConfig::edge_testbed_3_for(&m);
+        for s in &mut c.servers {
+            for g in &mut s.gpus {
+                g.mem_bytes = m.expert_bytes * 4;
+            }
+        }
+        (m, c)
+    }
+
+    #[test]
+    fn replica_set_splits_active_and_draining() {
+        let (m, c) = world();
+        let mut p = Placement::new(&m, &c);
+        p.place(0, 0, 1, 2).unwrap();
+        p.place(1, 0, 1, 2).unwrap();
+        p.place(2, 1, 1, 2).unwrap();
+        p.begin_drain(1, 0, 1, 2).unwrap();
+        let rs = p.replica_set(1, 2);
+        assert_eq!(rs.active, vec![(0, 0), (2, 1)]);
+        assert_eq!(rs.draining, vec![(1, 0)]);
+        assert_eq!(rs.active_count(), 2);
+        assert_eq!(rs.active_servers(), vec![0, 2]);
+    }
+
+    #[test]
+    fn placer_prefers_least_loaded_server_with_room() {
+        let (m, c) = world();
+        let mut p = Placement::new(&m, &c);
+        let ledger = MemoryLedger::new(&c);
+        p.place(0, 0, 0, 0).unwrap();
+        // server 1 is busier than server 2: the replica goes to 2
+        let loads = [100.0, 80.0, 10.0];
+        let target = place_replica(&p, &ledger, &loads, 0, 0);
+        assert_eq!(target.map(|(s, _)| s), Some(2));
+        // server 2's GPU with the most free memory wins
+        let mut p2 = p.clone();
+        p2.place(2, 0, 3, 7).unwrap();
+        let target = place_replica(&p2, &ledger, &loads, 0, 0).unwrap();
+        assert_eq!(target, (2, 1));
+    }
+
+    #[test]
+    fn placer_skips_holders_and_full_servers() {
+        let (m, c) = world();
+        let mut p = Placement::new(&m, &c);
+        let mut ledger = MemoryLedger::new(&c);
+        // servers 0 and 1 hold the expert (1's copy draining: still a
+        // holder in the memory domain); server 2 is reserved solid
+        p.place(0, 0, 0, 5).unwrap();
+        p.place(1, 0, 0, 5).unwrap();
+        p.begin_drain(1, 0, 0, 5).unwrap();
+        for g in 0..2 {
+            assert!(ledger.try_reserve(&p, 2, g, m.expert_bytes * 4));
+        }
+        assert_eq!(place_replica(&p, &ledger, &[0.0; 3], 0, 5), None);
+        // free one GPU on server 2: now it is the only candidate
+        ledger.release(2, 1, m.expert_bytes * 4);
+        assert_eq!(
+            place_replica(&p, &ledger, &[0.0; 3], 0, 5),
+            Some((2, 1))
+        );
+    }
+}

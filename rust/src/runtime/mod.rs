@@ -26,6 +26,13 @@ pub mod weights;
 pub mod pjrt;
 #[cfg(not(feature = "pjrt"))]
 pub mod stub;
+/// Offline stand-in for the `xla` crate's API surface: lets
+/// `cargo check --features pjrt` type-check the real backend's plumbing
+/// on machines (and CI) without the XLA toolchain. Execution fails
+/// cleanly at `PjRtClient::cpu()`. Enable the `xla` feature (and declare
+/// the dependency) to link the real thing.
+#[cfg(all(feature = "pjrt", not(feature = "xla")))]
+pub mod xla_mock;
 
 pub use artifacts::Manifest;
 #[cfg(feature = "pjrt")]

@@ -1,0 +1,116 @@
+//! Mock of the `xla` crate's API surface used by [`crate::runtime::pjrt`].
+//!
+//! The real `xla` dependency needs a local XLA toolchain and is therefore
+//! not declared in the offline build (see the note in `rust/Cargo.toml`).
+//! Without this module, `--features pjrt` would not even *type-check*
+//! offline, and the pjrt/stub split could rot silently. The mock mirrors
+//! exactly the types and signatures `pjrt.rs` calls; every execution path
+//! fails at runtime with a clear "xla backend not linked" error at the
+//! first possible point ([`PjRtClient::cpu`]), so the mock can never
+//! produce wrong numerics — only refuse.
+//!
+//! To link the real backend: declare `xla = { version = "0.1", optional =
+//! true }`, point the `xla` feature at `dep:xla`, and build with
+//! `--features pjrt,xla`.
+
+use std::path::Path;
+
+/// Mock error type, convertible into [`crate::Error::Xla`] like the real
+/// crate's error is.
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl From<Error> for crate::Error {
+    fn from(e: Error) -> crate::Error {
+        crate::Error::Xla(e.0)
+    }
+}
+
+type Result<T> = std::result::Result<T, Error>;
+
+fn unlinked<T>() -> Result<T> {
+    Err(Error(
+        "xla backend not linked (mock): declare the xla dependency and \
+         rebuild with --features pjrt,xla"
+            .to_string(),
+    ))
+}
+
+/// Mirrors `xla::PjRtClient`.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unlinked()
+    }
+
+    pub fn compile(
+        &self,
+        _comp: &XlaComputation,
+    ) -> Result<PjRtLoadedExecutable> {
+        unlinked()
+    }
+}
+
+/// Mirrors `xla::HloModuleProto`.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto> {
+        unlinked()
+    }
+}
+
+/// Mirrors `xla::XlaComputation`.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Mirrors `xla::PjRtLoadedExecutable`.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unlinked()
+    }
+}
+
+/// Mirrors `xla::PjRtBuffer`.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unlinked()
+    }
+}
+
+/// Mirrors `xla::Literal`.
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1(_data: &[f32]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        unlinked()
+    }
+
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        unlinked()
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unlinked()
+    }
+}

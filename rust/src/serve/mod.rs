@@ -12,14 +12,17 @@
 //! 3. a **continuous-batching scheduler** ([`batcher`]) — batches sized to
 //!    the runtime's AOT batch buckets, dispatched when full or when the
 //!    oldest member hits the max-wait deadline, gated by an in-flight cap,
-//! 4. a **locality-aware router** ([`router`]) — each request goes to the
-//!    server hosting the largest activation-mass share of its task's hot
-//!    experts under the *current* placement (the paper's input-locality
-//!    insight, applied online),
+//! 4. a **locality- and replica-aware router** ([`router`]) — each request
+//!    goes to the server hosting the largest activation-mass share of its
+//!    task's hot experts under the *current* placement (the paper's
+//!    input-locality insight, applied online); servers hosting comparable
+//!    shares (replicas, e.g. from the autoscaler) split traffic by
+//!    residual queue capacity,
 //! 5. a **live stats bus** ([`statsbus`]) — per-interval activation deltas
-//!    streamed into the [`Coordinator`], so placement refresh and
-//!    migration (Algorithms 1–2, Eqs. 3–4) run from online measurements
-//!    instead of a pre-seeded history.
+//!    streamed into the [`Coordinator`], so placement refresh, migration
+//!    (Algorithms 1–2, Eqs. 3–4) and replica autoscaling
+//!    ([`crate::autoscale`]) run from online measurements instead of a
+//!    pre-seeded history.
 //!
 //! The whole loop is deterministic per seed, like everything else in the
 //! crate: given (model, cluster, workload, config, seed), two runs produce
@@ -65,6 +68,11 @@ pub struct GatewayConfig {
     /// Route to the server hosting the most of the task's activation mass
     /// (`false` = always the stream's home server).
     pub locality_routing: bool,
+    /// Replica-aware routing: split traffic across servers hosting
+    /// comparable activation mass by residual queue capacity (see
+    /// [`LocalityRouter::ranked_capacity`]). Only meaningful with
+    /// `locality_routing`.
+    pub capacity_routing: bool,
     pub seed: u64,
 }
 
@@ -79,6 +87,7 @@ impl Default for GatewayConfig {
             max_inflight: 64,
             slo_s: 15.0,
             locality_routing: true,
+            capacity_routing: true,
             seed: 0,
         }
     }
@@ -105,6 +114,10 @@ pub struct GatewayReport {
     pub refreshes: u64,
     /// Migrations adopted during the run.
     pub migrations: usize,
+    /// Autoscaler replica copies applied during the run.
+    pub scale_outs: u64,
+    /// Autoscaler replicas drained and evicted during the run.
+    pub scale_ins: u64,
     pub slo_s: f64,
 }
 
@@ -140,6 +153,15 @@ impl GatewayReport {
             .iter()
             .filter(|r| r.latency_s > self.slo_s)
             .count() as u64
+    }
+
+    /// Fraction of offered requests shed at admission.
+    pub fn shed_rate(&self) -> f64 {
+        if self.offered == 0 {
+            0.0
+        } else {
+            self.shed as f64 / self.offered as f64
+        }
     }
 
     /// Violation rate over the *offered* load: shed requests count as
@@ -298,11 +320,28 @@ impl Gateway {
     fn on_arrival(&mut self, req: Request, now: f64) {
         self.offered += 1;
         let home = req.server;
-        // find the first preference with queue room (the router's ranked
-        // slice is precomputed — nothing allocates on this path)
+        // find the first preference with queue room. The pure locality
+        // order is precomputed (allocation-free); the capacity-aware order
+        // depends on live queue depths, so it is built per arrival.
         let placed: Option<(usize, usize)> = {
+            let capacity_order: Vec<usize>;
             let order: &[usize] = if self.cfg.locality_routing {
-                self.router.ranked(req.task, home)
+                if self.cfg.capacity_routing {
+                    let residual: Vec<usize> = (0..self
+                        .admission
+                        .num_servers())
+                        .map(|s| {
+                            self.cfg
+                                .queue_cap
+                                .saturating_sub(self.admission.depth(s))
+                        })
+                        .collect();
+                    capacity_order =
+                        self.router.ranked_capacity(req.task, home, &residual);
+                    &capacity_order
+                } else {
+                    self.router.ranked(req.task, home)
+                }
             } else {
                 std::slice::from_ref(&home)
             };
@@ -325,6 +364,12 @@ impl Gateway {
             }
             None => self.admission.record_shed(),
         }
+    }
+
+    /// The live locality router (read-only — reporting surfaces like the
+    /// `autoscale` CLI use it to show how the replica band splits traffic).
+    pub fn router(&self) -> &LocalityRouter {
+        &self.router
     }
 
     /// Inject every dispatchable batch into the engine at `now`.
@@ -358,6 +403,13 @@ impl Gateway {
     }
 
     fn build_report(&mut self) -> GatewayReport {
+        // fold scale ops that completed after the last interval tick, so
+        // post-run consumers of the coordinator's ledger / autoscaler
+        // state see no phantom reservations or unpromoted replicas
+        let completions = self.engine.take_scale_completions();
+        if let Some(a) = &mut self.coordinator.autoscaler {
+            a.on_completions(&completions, &mut self.coordinator.ledger);
+        }
         let serve = std::mem::replace(
             &mut self.engine.report,
             ServeReport::new(
@@ -365,6 +417,18 @@ impl Gateway {
                 self.engine.cfg.bucket_s,
             ),
         );
+        let scale_outs = self
+            .engine
+            .scale_events
+            .iter()
+            .filter(|e| e.applied && e.kind == crate::engine::ScaleKind::Out)
+            .count() as u64;
+        let scale_ins = self
+            .engine
+            .scale_events
+            .iter()
+            .filter(|e| e.applied && e.kind == crate::engine::ScaleKind::In)
+            .count() as u64;
         GatewayReport {
             offered: self.offered,
             admitted: self.admission.admitted,
@@ -375,6 +439,8 @@ impl Gateway {
             bucket_slots: self.batcher.bucket_slots,
             refreshes: self.coordinator.intervals_published(),
             migrations: serve.migrations.len(),
+            scale_outs,
+            scale_ins,
             slo_s: self.cfg.slo_s,
             serve,
         }

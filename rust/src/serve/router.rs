@@ -1,5 +1,5 @@
-//! Locality-aware request routing — the paper's input-locality insight
-//! applied *online*.
+//! Locality-aware, **replica-aware** request routing — the paper's
+//! input-locality insight applied *online*.
 //!
 //! DanceMoE's placement concentrates each task's hot experts near the
 //! server whose stream activates them (§III-B); the router closes the loop
@@ -8,6 +8,16 @@
 //! the request to the best-scoring server. Under backpressure the router
 //! spills down its preference list instead of shedding outright. Scores
 //! are precomputed per (task, server) and rebuilt after migrations.
+//!
+//! With the replica autoscaler in play a task's hot experts are often
+//! hosted by *several* servers at once. Always preferring the single
+//! best-scoring server would turn every replica set into one hot queue —
+//! so the capacity-aware order ([`LocalityRouter::ranked_capacity`])
+//! treats servers whose score is within the replica band of the best as
+//! equivalent replicas and splits traffic across them by **residual
+//! capacity** instead. Draining replicas never appear in any order: the
+//! scores are computed from `Placement::server_has`, which a drain clears
+//! immediately.
 
 use crate::config::{ModelConfig, TaskKind};
 use crate::placement::Placement;
@@ -42,6 +52,10 @@ pub struct LocalityRouter {
     /// precomputed so the per-arrival hot path is allocation-free.
     pref: Vec<Vec<Vec<usize>>>,
     num_servers: usize,
+    /// Replica-band width for capacity-aware routing: servers scoring
+    /// within this relative margin of the best are treated as equivalent
+    /// replicas and ordered by residual capacity instead of score.
+    pub capacity_band: f64,
 }
 
 impl LocalityRouter {
@@ -54,6 +68,7 @@ impl LocalityRouter {
             scores: Vec::new(),
             pref: Vec::new(),
             num_servers: p.num_servers,
+            capacity_band: 0.25,
         };
         r.rebuild(p);
         r
@@ -115,6 +130,110 @@ impl LocalityRouter {
     pub fn best(&self, task: TaskKind, home: usize) -> usize {
         self.ranked(task, home)[0]
     }
+
+    /// Replica-aware preference order: servers whose locality score is
+    /// within the replica band of the best (`score ≥ best × (1 − band)`)
+    /// are equivalent replica holders and are ordered by **residual
+    /// capacity** (descending) — so traffic splits across a hot task's
+    /// replicas by available headroom instead of piling onto one queue.
+    /// Out-of-band servers follow in score order. Ties break toward
+    /// `home`, then the lower index. Always a permutation of all servers.
+    pub fn ranked_capacity(
+        &self,
+        task: TaskKind,
+        home: usize,
+        residual: &[usize],
+    ) -> Vec<usize> {
+        let row = &self.scores[Self::task_index(task)];
+        let best = row.iter().cloned().fold(0.0f64, f64::max);
+        let band = best * (1.0 - self.capacity_band);
+        let res = |s: usize| residual.get(s).copied().unwrap_or(0);
+        let mut idx: Vec<usize> = (0..self.num_servers).collect();
+        idx.sort_by(|&a, &b| {
+            let ia = row[a] >= band;
+            let ib = row[b] >= band;
+            // in-band servers first
+            ib.cmp(&ia)
+                .then_with(|| {
+                    if ia && ib {
+                        // within the band: most residual capacity first
+                        res(b).cmp(&res(a))
+                    } else {
+                        // outside: fall back to score order
+                        row[b].partial_cmp(&row[a]).unwrap()
+                    }
+                })
+                .then_with(|| (b == home).cmp(&(a == home)))
+                .then(a.cmp(&b))
+        });
+        idx
+    }
+
+    /// Split `total` requests across the replica band proportionally to
+    /// residual capacity (largest-remainder rounding, so the counts always
+    /// conserve `total` exactly). Out-of-band servers get 0; if no server
+    /// has residual capacity the whole count falls to `home` (which will
+    /// shed — conservation still holds, nothing vanishes silently).
+    pub fn split_counts(
+        &self,
+        task: TaskKind,
+        home: usize,
+        total: u64,
+        residual: &[usize],
+    ) -> Vec<u64> {
+        let row = &self.scores[Self::task_index(task)];
+        let best = row.iter().cloned().fold(0.0f64, f64::max);
+        let band = best * (1.0 - self.capacity_band);
+        let weights: Vec<f64> = (0..self.num_servers)
+            .map(|s| {
+                if row[s] >= band {
+                    residual.get(s).copied().unwrap_or(0) as f64
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+        largest_remainder_split(total, &weights, home)
+    }
+}
+
+/// Apportion `total` by `weights` with largest-remainder rounding: the
+/// result sums to exactly `total`. All-zero weights send everything to
+/// `fallback`.
+fn largest_remainder_split(
+    total: u64,
+    weights: &[f64],
+    fallback: usize,
+) -> Vec<u64> {
+    let n = weights.len();
+    let mut out = vec![0u64; n];
+    if n == 0 {
+        return out;
+    }
+    let sum: f64 = weights.iter().sum();
+    if sum <= 0.0 {
+        out[fallback.min(n - 1)] = total;
+        return out;
+    }
+    let mut frac: Vec<(f64, usize)> = Vec::with_capacity(n);
+    let mut assigned = 0u64;
+    for (i, &wt) in weights.iter().enumerate() {
+        let exact = total as f64 * wt / sum;
+        let fl = exact.floor();
+        out[i] = fl as u64;
+        assigned += out[i];
+        frac.push((exact - fl, i));
+    }
+    frac.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+    let mut left = total.saturating_sub(assigned);
+    let mut j = 0;
+    while left > 0 {
+        let (_, i) = frac[j % n];
+        out[i] += 1;
+        left -= 1;
+        j += 1;
+    }
+    out
 }
 
 #[cfg(test)]
@@ -192,6 +311,130 @@ mod tests {
         let after: Vec<f64> =
             (0..3).map(|n| r.score(w.streams[0].task, n)).collect();
         assert_ne!(before, after, "rebuild must pick up the new placement");
+    }
+
+    #[test]
+    fn draining_replica_invisible_to_scores() {
+        // Scale-in safety at the gateway layer: the router's scores come
+        // from `server_has`, which a drain clears immediately — a draining
+        // replica can never attract new traffic.
+        let m = ModelConfig::tiny();
+        let c = ClusterConfig::edge_testbed_3_for(&m);
+        let mut p = crate::placement::Placement::new(&m, &c);
+        for l in 0..m.num_layers {
+            for e in 0..m.num_experts {
+                p.place(0, 0, l, e).unwrap();
+                p.place(1, 0, l, e).unwrap();
+            }
+        }
+        let before = LocalityRouter::new(&m, &p);
+        for l in 0..m.num_layers {
+            for e in 0..m.num_experts {
+                p.begin_drain(1, 0, l, e).unwrap();
+            }
+        }
+        let after = LocalityRouter::new(&m, &p);
+        for t in crate::config::TaskKind::all() {
+            assert!(before.score(t, 1) > 0.0);
+            assert_eq!(after.score(t, 1), 0.0, "draining server must score 0");
+            assert_eq!(after.best(t, 1), 0, "all traffic shifts to server 0");
+        }
+    }
+
+    #[test]
+    fn prop_ranked_capacity_is_permutation_splitting_by_residual() {
+        let (m, c) = world();
+        let w = WorkloadConfig::bigbench(10.0);
+        let stats = warm_stats(&m, &w);
+        let placements = [
+            uniform::place(&m, &c),
+            PlacementAlgo::DanceMoE.compute(&m, &c, &stats, 1),
+        ];
+        prop::check("capacity order splits the replica band", 80, |g| {
+            let p = g.pick(&placements);
+            let task = *g.pick(&crate::config::TaskKind::all());
+            let home = g.usize_in(0, 2);
+            let residual =
+                [g.usize_in(0, 64), g.usize_in(0, 64), g.usize_in(0, 64)];
+            let r = LocalityRouter::new(&m, p);
+            let order = r.ranked_capacity(task, home, &residual);
+            let mut sorted = order.clone();
+            sorted.sort_unstable();
+            prop::assert_prop(
+                sorted == vec![0, 1, 2],
+                "ranked_capacity must be a permutation of all servers",
+            );
+            // within the replica band, residual capacity must not increase
+            // down the order; and no out-of-band server may precede an
+            // in-band one
+            let best =
+                (0..3).map(|s| r.score(task, s)).fold(0.0f64, f64::max);
+            let band = best * (1.0 - r.capacity_band);
+            let in_band: Vec<bool> =
+                order.iter().map(|&s| r.score(task, s) >= band).collect();
+            for i in 1..order.len() {
+                prop::assert_prop(
+                    in_band[i - 1] || !in_band[i],
+                    "in-band server ranked below an out-of-band one",
+                );
+                if in_band[i - 1] && in_band[i] {
+                    prop::assert_prop(
+                        residual[order[i - 1]] >= residual[order[i]],
+                        "replica band not ordered by residual capacity",
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn prop_split_counts_conserves_requests() {
+        let (m, c) = world();
+        let w = WorkloadConfig::bigbench(10.0);
+        let stats = warm_stats(&m, &w);
+        let placements = [
+            uniform::place(&m, &c),
+            PlacementAlgo::DanceMoE.compute(&m, &c, &stats, 1),
+            PlacementAlgo::Eplb.compute(&m, &c, &stats, 1),
+        ];
+        prop::check("traffic split conserves request count", 100, |g| {
+            let p = g.pick(&placements);
+            let task = *g.pick(&crate::config::TaskKind::all());
+            let home = g.usize_in(0, 2);
+            let total = g.usize_in(0, 500) as u64;
+            let residual =
+                [g.usize_in(0, 32), g.usize_in(0, 32), g.usize_in(0, 32)];
+            let r = LocalityRouter::new(&m, p);
+            let counts = r.split_counts(task, home, total, &residual);
+            prop::assert_prop(
+                counts.iter().sum::<u64>() == total,
+                "split must conserve the request count exactly",
+            );
+            // when the replica band has any capacity, a zero-capacity
+            // server gets nothing (otherwise everything falls to home)
+            let best =
+                (0..3).map(|s| r.score(task, s)).fold(0.0f64, f64::max);
+            let band = best * (1.0 - r.capacity_band);
+            let band_capacity: usize = (0..3)
+                .filter(|&s| r.score(task, s) >= band)
+                .map(|s| residual[s])
+                .sum();
+            if band_capacity > 0 {
+                for (s, &n) in counts.iter().enumerate() {
+                    if residual[s] == 0 {
+                        prop::assert_prop(
+                            n == 0,
+                            "zero-capacity server must receive nothing",
+                        );
+                    }
+                }
+            } else {
+                prop::assert_prop(
+                    counts[home] == total,
+                    "no band capacity: everything falls to home",
+                );
+            }
+        });
     }
 
     #[test]

@@ -130,6 +130,39 @@ impl Bencher {
     pub fn black_box<T>(x: T) -> T {
         std::hint::black_box(x)
     }
+
+    /// Write a machine-readable bench report (`BENCH_<suite>.json` by
+    /// convention): the suite name, every benchmark's timing stats, and a
+    /// caller-supplied `metrics` object (latency percentiles, shed rate,
+    /// replica counts, ...) so the perf trajectory can be tracked across
+    /// PRs by diffing files instead of scraping stdout.
+    pub fn write_json(
+        &self,
+        path: &std::path::Path,
+        metrics: crate::util::json::Json,
+    ) -> crate::Result<()> {
+        use crate::util::json::Json;
+        let results = Json::Arr(
+            self.results
+                .iter()
+                .map(|r| {
+                    Json::from_pairs(vec![
+                        ("name", Json::Str(r.name.clone())),
+                        ("iters", Json::Num(r.iters as f64)),
+                        ("mean_ns", Json::Num(r.mean_ns)),
+                        ("p50_ns", Json::Num(r.p50_ns)),
+                        ("p99_ns", Json::Num(r.p99_ns)),
+                    ])
+                })
+                .collect(),
+        );
+        let j = Json::from_pairs(vec![
+            ("suite", Json::Str(self.suite.clone())),
+            ("results", results),
+            ("metrics", metrics),
+        ]);
+        j.write_file(path)
+    }
 }
 
 impl Drop for Bencher {
@@ -171,6 +204,39 @@ mod tests {
         ));
         assert_eq!(r.iters, 1);
         assert!(r.mean_ns >= 2e6 * 0.5);
+        std::env::remove_var("DANCEMOE_BENCH_MS");
+    }
+
+    #[test]
+    fn write_json_roundtrips() {
+        use crate::util::json::Json;
+        std::env::set_var("DANCEMOE_BENCH_MS", "20");
+        let mut b = Bencher::new("jsontest");
+        b.run_once("one", || {});
+        let dir = std::env::temp_dir();
+        let path = dir.join("dancemoe_bench_selftest.json");
+        let metrics = Json::from_pairs(vec![
+            ("p95_s", Json::Num(1.25)),
+            ("shed_rate", Json::Num(0.0)),
+        ]);
+        b.write_json(&path, metrics).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let j = Json::parse(&text).unwrap();
+        assert_eq!(
+            j.get("suite").and_then(|s| s.as_str()),
+            Some("jsontest")
+        );
+        assert_eq!(
+            j.get("metrics")
+                .and_then(|m| m.get("p95_s"))
+                .and_then(|v| v.as_f64()),
+            Some(1.25)
+        );
+        assert_eq!(
+            j.get("results").and_then(|r| r.as_arr()).map(|a| a.len()),
+            Some(1)
+        );
+        let _ = std::fs::remove_file(&path);
         std::env::remove_var("DANCEMOE_BENCH_MS");
     }
 

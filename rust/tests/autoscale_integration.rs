@@ -1,0 +1,290 @@
+//! End-to-end tests for the expert replica autoscaler: burst-driven
+//! scale-out and trough-driven drained scale-in on the edge preset, the
+//! p95 comparison against a fixed-placement gateway, the
+//! migration↔autoscale memory arbitration, and the drained-replica
+//! routing safety properties.
+
+use dancemoe::autoscale::AutoscaleConfig;
+use dancemoe::config::{ClusterConfig, ModelConfig, WorkloadConfig};
+use dancemoe::coordinator::CoordinatorConfig;
+use dancemoe::engine::ScaleKind;
+use dancemoe::placement::{uniform, MemoryLedger};
+use dancemoe::serve::{ArrivalProfile, Gateway, GatewayConfig};
+use dancemoe::util::prop;
+
+/// Trimmed Mixtral topology with proportionally tight GPU memory: enough
+/// for full coverage plus ~30 % replication slack, so replica decisions
+/// stay meaningful (paper-preset memory would let every server hold every
+/// trimmed-model expert and leave the autoscaler nothing to do).
+fn small_tight() -> (ModelConfig, ClusterConfig, WorkloadConfig) {
+    let mut m = ModelConfig::mixtral_8x7b_sim();
+    m.num_layers = 4;
+    let mut c = ClusterConfig::edge_testbed_3_for(&m);
+    let slots = (m.total_experts() as f64 * 1.3 / 4.0).ceil() as u64;
+    for s in &mut c.servers {
+        for g in &mut s.gpus {
+            g.mem_bytes = m.expert_bytes * slots;
+        }
+    }
+    (m, c, WorkloadConfig::bigbench(1.0)) // 3 req/s aggregate
+}
+
+fn bursty() -> ArrivalProfile {
+    ArrivalProfile::Bursty {
+        factor: 4.0,
+        burst_s: 30.0,
+        period_s: 120.0,
+    }
+}
+
+fn autoscale_cfg() -> AutoscaleConfig {
+    AutoscaleConfig {
+        // band tuned for 15 s control intervals against 30 s bursts
+        hi_ratio: 1.2,
+        lo_ratio: 0.85,
+        min_load_tps: 20.0,
+        drain_s: 5.0,
+        cooldown_intervals: 1,
+        ..AutoscaleConfig::default()
+    }
+}
+
+#[test]
+fn bursts_scale_out_troughs_scale_in_and_p95_beats_fixed() {
+    let (m, c, w) = small_tight();
+    let gcfg = GatewayConfig {
+        horizon_s: 600.0,
+        profile: bursty(),
+        seed: 41,
+        ..GatewayConfig::default()
+    };
+    let initial = uniform::place(&m, &c);
+
+    // ---- autoscaled run --------------------------------------------------
+    let mut gw = Gateway::new(
+        &m,
+        &c,
+        &w,
+        initial.clone(),
+        gcfg.clone(),
+        CoordinatorConfig {
+            interval_s: 15.0,
+            seed: 41,
+            autoscale: Some(autoscale_cfg()),
+            ..CoordinatorConfig::default()
+        },
+    );
+    let auto = gw.run();
+    assert_eq!(auto.offered, auto.admitted + auto.shed);
+    assert_eq!(auto.serve.records.len() as u64, auto.admitted);
+
+    // replica counts rose during some burst...
+    let outs: Vec<f64> = gw
+        .engine
+        .scale_events
+        .iter()
+        .filter(|e| e.applied && e.kind == ScaleKind::Out)
+        .map(|e| e.t_s)
+        .collect();
+    assert!(
+        !outs.is_empty(),
+        "bursty load must trigger at least one scale-out"
+    );
+    let max_extra = gw
+        .coordinator
+        .autoscale_logs
+        .iter()
+        .map(|l| l.extra_replicas)
+        .max()
+        .unwrap();
+    assert!(max_extra >= 1, "extra replicas must appear in the timeline");
+
+    // ...and came back down after a trough (drained scale-in applied)
+    let ins = gw
+        .engine
+        .scale_events
+        .iter()
+        .filter(|e| e.applied && e.kind == ScaleKind::In)
+        .count();
+    assert!(
+        ins >= 1,
+        "troughs must drain at least one added replica back out"
+    );
+    assert_eq!(auto.scale_outs as usize, outs.len());
+    assert_eq!(auto.scale_ins as usize, ins);
+
+    // placement stayed structurally sound throughout (memory + coverage)
+    gw.engine.placement.validate().unwrap();
+    // no drained-replica routing violation is possible structurally: every
+    // draining replica is outside the owner set the engine routes over
+    for (s, g, l, e) in gw.engine.placement.draining_replicas() {
+        assert!(!gw.engine.placement.owners(l, e).contains(&(s, g)));
+        assert!(gw.engine.placement.active_count(l, e) >= 1);
+    }
+
+    // ---- fixed-placement run at the same arrival rate --------------------
+    let mut fixed = Gateway::new(
+        &m,
+        &c,
+        &w,
+        initial,
+        gcfg,
+        CoordinatorConfig {
+            interval_s: 15.0,
+            migrate: false,
+            seed: 41,
+            ..CoordinatorConfig::default()
+        },
+    );
+    let base = fixed.run();
+    let (a95, f95) = (
+        auto.latency_percentile(0.95),
+        base.latency_percentile(0.95),
+    );
+    assert!(
+        a95 < f95,
+        "autoscaled p95 ({a95:.3}s) must beat the fixed-placement \
+         gateway ({f95:.3}s) at the same arrival rate"
+    );
+}
+
+#[test]
+fn concurrent_migration_and_scale_out_respect_memory() {
+    // The satellite invariant, end to end: drive both planners against a
+    // near-full cluster and assert no (server, gpu) ever exceeds capacity
+    // — the shared ledger plus apply-time caps make over-commit impossible.
+    let (m, c, w) = small_tight();
+    let mut gw = Gateway::new(
+        &m,
+        &c,
+        &w,
+        uniform::place(&m, &c),
+        GatewayConfig {
+            horizon_s: 300.0,
+            profile: bursty(),
+            seed: 43,
+            ..GatewayConfig::default()
+        },
+        CoordinatorConfig {
+            interval_s: 15.0,
+            seed: 43,
+            autoscale: Some(AutoscaleConfig {
+                // aggressive: fire as often as possible to stress the ledger
+                hi_ratio: 1.05,
+                lo_ratio: 0.5,
+                min_load_tps: 1.0,
+                cooldown_intervals: 0,
+                drain_s: 2.0,
+                ..AutoscaleConfig::default()
+            }),
+            ..CoordinatorConfig::default()
+        },
+    );
+    let report = gw.run();
+    assert!(report.offered > 0);
+    gw.engine.placement.validate().unwrap();
+    // fold any completions the last interval didn't see, as the next tick
+    // would (reservations for applied copies are released there)
+    let completions = gw.engine.take_scale_completions();
+    if let Some(a) = gw.coordinator.autoscaler.as_mut() {
+        a.on_completions(&completions, &mut gw.coordinator.ledger);
+    }
+    let p = &gw.engine.placement;
+    for s in 0..3 {
+        for g in 0..p.gpus[s] {
+            let used = p.mem_used(s, g) + gw.coordinator.ledger.reserved(s, g);
+            assert!(
+                used <= gw.coordinator.ledger.capacity(s, g),
+                "s{s}g{g}: committed {used} exceeds capacity"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_drained_replicas_never_routable() {
+    // Property (satellite): whatever sequence of placements and drains the
+    // controller produces, a draining replica is invisible to every
+    // routing surface — the owner set (engine's per-invocation choice) and
+    // `server_has` (locality scores) — while still holding memory.
+    let (m, c, _) = small_tight();
+    prop::check("draining replicas take no traffic", 60, |g| {
+        // full coverage first (uniform), then random extra replicas where
+        // the tight memory allows them
+        let mut p = uniform::place(&m, &c);
+        for _ in 0..g.usize_in(0, 40) {
+            let l = g.usize_in(0, m.num_layers - 1);
+            let e = g.usize_in(0, m.num_experts - 1);
+            let s = g.usize_in(0, 2);
+            if p.server_holds(s, l, e) {
+                continue;
+            }
+            let gpu = g.usize_in(0, p.gpus[s] - 1);
+            let _ = p.place(s, gpu, l, e);
+        }
+        // drain a random subset (never the last active replica)
+        let mut drained = Vec::new();
+        for l in 0..m.num_layers {
+            for e in 0..m.num_experts {
+                if !g.bool() {
+                    continue;
+                }
+                let owners = p.owners(l, e);
+                if owners.len() < 2 {
+                    continue;
+                }
+                let &(s, gpu) = g.pick(&owners);
+                let mem_before = p.mem_used(s, gpu);
+                p.begin_drain(s, gpu, l, e).unwrap();
+                prop::assert_prop(
+                    p.mem_used(s, gpu) == mem_before,
+                    "drain must not free memory early",
+                );
+                drained.push((s, gpu, l, e));
+            }
+        }
+        for &(s, gpu, l, e) in &drained {
+            prop::assert_prop(
+                !p.owners(l, e).contains(&(s, gpu)),
+                "draining replica still in the owner set",
+            );
+            prop::assert_prop(
+                p.active_count(l, e) >= 1,
+                "drain must never remove the last active replica",
+            );
+            let other_active = (0..p.gpus[s]).any(|og| {
+                p.gpu_has(s, og, l, e) && !p.is_draining(s, og, l, e)
+            });
+            prop::assert_prop(
+                p.server_has(s, l, e) == other_active,
+                "server_has must reflect only active replicas",
+            );
+        }
+        // eviction frees exactly the drained bytes
+        for &(s, gpu, l, e) in &drained {
+            let before = p.mem_used(s, gpu);
+            p.finish_drain(s, gpu, l, e).unwrap();
+            prop::assert_prop(
+                p.mem_used(s, gpu) == before - m.expert_bytes,
+                "eviction must free the replica's bytes",
+            );
+        }
+        p.validate().unwrap();
+    });
+}
+
+#[test]
+fn ledger_is_shared_between_migration_and_autoscale_paths() {
+    // Unit-level arbitration: while the autoscaler has bytes reserved, the
+    // remaining free space the migration planner can see shrinks by
+    // exactly that amount.
+    let (m, c, _) = small_tight();
+    let p = uniform::place(&m, &c);
+    let mut ledger = MemoryLedger::new(&c);
+    let free0 = ledger.free(&p, 0, 0);
+    assert!(free0 >= m.expert_bytes, "tight preset still has slack");
+    assert!(ledger.try_reserve(&p, 0, 0, m.expert_bytes));
+    assert_eq!(ledger.free(&p, 0, 0), free0 - m.expert_bytes);
+    ledger.release(0, 0, m.expert_bytes);
+    assert_eq!(ledger.free(&p, 0, 0), free0);
+}

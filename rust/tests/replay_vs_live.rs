@@ -1,0 +1,94 @@
+//! Replay-vs-live harness: capture a live gateway run's expert-selection
+//! patterns via `trace::recorded`, replay the *same arrival stream* through
+//! `World::serve_recorded` under the same placement, and assert the
+//! simulator-vs-live gap stays within tolerance — the ROADMAP's
+//! "quantify the simulator gap" item, wired as a regression test.
+
+use dancemoe::config::{ClusterConfig, ModelConfig, WorkloadConfig};
+use dancemoe::coordinator::CoordinatorConfig;
+use dancemoe::engine::{warm_stats, World};
+use dancemoe::placement::PlacementAlgo;
+use dancemoe::serve::{ArrivalProfile, ArrivalSource, Gateway, GatewayConfig};
+use dancemoe::trace::{recorded, Trace};
+
+#[test]
+fn replayed_capture_tracks_live_gateway() {
+    let mut m = ModelConfig::mixtral_8x7b_sim();
+    m.num_layers = 4;
+    let c = ClusterConfig::edge_testbed_3_for(&m);
+    let w = WorkloadConfig::bigbench(4.0); // light: no shedding, no queueing
+    let seed = 47;
+    let horizon = 300.0;
+    let warm = warm_stats(&m, &w);
+    let placement = PlacementAlgo::DanceMoE.compute(&m, &c, &warm, seed);
+
+    // ---- live: gateway co-simulation, static placement, home routing ----
+    // (home routing so the live activation stream matches the replay's
+    // home-server semantics; tiny batching deadline so queueing structure,
+    // not batching wait, is what the comparison sees)
+    let mut gw = Gateway::new(
+        &m,
+        &c,
+        &w,
+        placement.clone(),
+        GatewayConfig {
+            horizon_s: horizon,
+            locality_routing: false,
+            max_wait_s: 0.01,
+            queue_cap: 1024,
+            max_inflight: 1024,
+            seed,
+            ..GatewayConfig::default()
+        },
+        CoordinatorConfig {
+            interval_s: 60.0,
+            migrate: false,
+            seed,
+            ..CoordinatorConfig::default()
+        },
+    );
+    let live = gw.run();
+    assert_eq!(live.shed, 0, "light load must not shed");
+    assert!(live.admitted > 50, "enough traffic to compare");
+
+    // ---- capture: per-server expert-selection patterns from the run -----
+    let profiles = recorded::profiles_from_stats(&gw.engine.stats, &m);
+
+    // ---- replay: identical arrival stream through the offline simulator --
+    let mut src =
+        ArrivalSource::new(&w, ArrivalProfile::Poisson, horizon, seed);
+    let mut requests = Vec::new();
+    while let Some(r) = src.next_request() {
+        requests.push(r);
+    }
+    let trace = Trace { requests };
+    assert_eq!(
+        trace.len() as u64,
+        live.offered,
+        "replay must see the exact live arrival stream"
+    );
+    let mut world = World::build(&m, &c, &w, seed);
+    let replay = world.serve_recorded(&placement, profiles, &trace);
+    assert_eq!(replay.records.len() as u64, live.admitted);
+
+    // ---- the gap --------------------------------------------------------
+    // locality: same placement + recorded activation patterns must land
+    // within a few points of the live run's local-compute ratio
+    let live_ratio = live.serve.local_ratio();
+    let replay_ratio = replay.local_ratio();
+    assert!(
+        (live_ratio - replay_ratio).abs() < 0.15,
+        "local-ratio gap too wide: live {live_ratio:.3} vs replay \
+         {replay_ratio:.3}"
+    );
+    // latency: the simulator must track the live median within 50 %
+    let live_p50 = live.latency_percentile(0.50);
+    let replay_p50 = replay.latency_percentile(0.50);
+    let gap = (replay_p50 - live_p50).abs() / live_p50.max(1e-9);
+    assert!(
+        gap < 0.5,
+        "simulator-vs-live p50 gap {:.0}% (live {live_p50:.3}s, replay \
+         {replay_p50:.3}s)",
+        gap * 100.0
+    );
+}
