@@ -1,0 +1,39 @@
+//! Multi-tenant gateway benchmark: the canonical weighted-vs-shared
+//! bursty comparison ([`dancemoe::serve::tenant::bursty_comparison`]),
+//! with every per-tenant serving outcome written to `BENCH_tenants.json`
+//! so the multi-tenant perf trajectory — and the acceptance comparison
+//! (constrained tenant's p95, weighted vs shared queue) — is tracked
+//! across PRs machine-readably.
+//!
+//! Unlike the other BENCH files, this one carries **no wall-clock
+//! timings**: it is byte-identical across runs at the same seed (the
+//! replay regression in `tests/tenant_properties.rs` locks that), so CI
+//! artifact diffs show only real serving changes. Wall-clock for the two
+//! runs is still printed to stdout via the bench harness.
+
+use dancemoe::serve::tenant::{bench_file_json, bursty_comparison};
+use dancemoe::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::new("tenants");
+    let mut outcome = None;
+    b.run_once("weighted + shared bursty runs (360 s)", || {
+        outcome = Some(bursty_comparison(7, 360.0));
+    });
+    let (weighted, shared, tenants) = outcome.expect("comparison executed");
+    let out = std::path::Path::new("BENCH_tenants.json");
+    bench_file_json(&weighted, &shared)
+        .write_file(out)
+        .expect("write BENCH_tenants.json");
+    let (w0, s0) = (&weighted.tenants[0], &shared.tenants[0]);
+    println!(
+        "  wrote {} ({} p95 {:.2}s weighted vs {:.2}s shared; \
+         attainment {:.1}% vs {:.1}%)",
+        out.display(),
+        tenants.tenants[0].name,
+        w0.p95_s,
+        s0.p95_s,
+        100.0 * w0.attainment(),
+        100.0 * s0.attainment(),
+    );
+}

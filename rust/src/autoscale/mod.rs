@@ -94,6 +94,10 @@ impl Default for AutoscaleConfig {
     }
 }
 
+/// Boost level above which a replica is considered SLO-critical and held
+/// back from trough-driven scale-in.
+pub const DRAIN_HOLD_BOOST: f64 = 1.05;
+
 /// One control decision, ready for the engine to execute.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ScaleDecision {
@@ -158,6 +162,10 @@ pub struct Autoscaler {
     pending_out: Vec<(usize, usize, usize, usize)>,
     /// replicas we sent into drain, awaiting eviction
     draining: Vec<(usize, usize, usize, usize)>,
+    /// per-eid SLO-pressure boost from the multi-tenant gateway (empty =
+    /// neutral): scales candidate scoring so scale-outs repair the
+    /// violating tenant's hot experts first, and holds their drains back
+    boost: Vec<f64>,
     /// intervals observed
     pub ticks: u64,
     /// cumulative applied operation counts
@@ -189,6 +197,7 @@ impl Autoscaler {
             added: Vec::new(),
             pending_out: Vec::new(),
             draining: Vec::new(),
+            boost: Vec::new(),
             ticks: 0,
             scale_outs_applied: 0,
             scale_ins_applied: 0,
@@ -214,6 +223,21 @@ impl Autoscaler {
     /// Replicas this controller added and that are still active.
     pub fn added_replicas(&self) -> &[(usize, usize, usize, usize)] {
         &self.added
+    }
+
+    /// Install the per-eid SLO-pressure boost for the next planning pass
+    /// (from [`crate::serve::tenant::boost_from_masses`]). An empty vector
+    /// is neutral — every expert at 1.0.
+    pub fn set_expert_boost(&mut self, boost: Vec<f64>) {
+        self.boost = boost;
+    }
+
+    /// Boost factor of one expert (1.0 when neutral).
+    pub fn boost_of(&self, layer: usize, expert: usize) -> f64 {
+        self.boost
+            .get(layer * self.num_experts + expert)
+            .copied()
+            .unwrap_or(1.0)
     }
 
     fn pending_for(&self, layer: usize, expert: usize) -> usize {
@@ -284,6 +308,11 @@ impl Autoscaler {
         }
 
         // ---- scale-out pass: hottest first --------------------------------
+        // SLO pressure (multi-tenant gateways) multiplies into both the
+        // band test and the ranking key, so experts hot in a *violating*
+        // tenant's task profile replicate first — candidates are scored
+        // by which tenant's p95 target they repair. The absolute cold
+        // floor stays unboosted: pressure never replicates a cold expert.
         let mut hot: Vec<(f64, usize, usize)> = Vec::new();
         for l in 0..self.num_layers {
             for e in 0..self.num_experts {
@@ -298,13 +327,14 @@ impl Autoscaler {
                 if actives == 0 || active >= self.max_replicas {
                     continue;
                 }
+                let boost = self.boost_of(l, e);
                 let per_rep = self.fast[eid] / active as f64;
                 let ratio = self.fast[eid] / self.slow[eid].max(1e-9);
                 if per_rep > self.cfg.min_load_tps
-                    && (ratio > self.cfg.hi_ratio
-                        || per_rep > self.cfg.util_hi_tps)
+                    && (ratio * boost > self.cfg.hi_ratio
+                        || per_rep * boost > self.cfg.util_hi_tps)
                 {
-                    hot.push((per_rep, l, e));
+                    hot.push((per_rep * boost, l, e));
                 }
             }
         }
@@ -376,7 +406,13 @@ impl Autoscaler {
             let ratio = self.fast[eid] / self.slow[eid].max(1e-9);
             let trough =
                 ratio < self.cfg.lo_ratio || per_rep < self.cfg.min_load_tps;
-            if trough && per_rep < self.cfg.util_hi_tps {
+            // an expert under live SLO pressure keeps its replicas even
+            // through a trough — draining capacity a violating tenant
+            // depends on would undo the repair the boost just bought
+            if trough
+                && per_rep < self.cfg.util_hi_tps
+                && self.boost_of(l, e) <= DRAIN_HOLD_BOOST
+            {
                 to_drain.push((l, e, s, g));
             }
         }
@@ -682,6 +718,65 @@ mod tests {
                 assert!(gpu.mem_bytes < c.servers[s].gpus[g].mem_bytes);
             }
         }
+    }
+
+    #[test]
+    fn slo_boost_promotes_borderline_experts() {
+        let (m, c) = world();
+        let p = uniform::place(&m, &c);
+        let mut ledger = MemoryLedger::new(&c);
+        let mut a = Autoscaler::new(&m, &c, cfg());
+        let _ = step(&mut a, &delta_with(&m, 10.0, &[(0, 0, 1000.0)]), &p, &mut ledger);
+        // mild swell: fast/slow = 160/115 ≈ 1.39, just under the 1.4 band
+        a.observe(&delta_with(&m, 20.0, &[(0, 0, 2000.0)]), &p);
+        assert!(
+            a.plan(&p, &mut ledger).is_empty(),
+            "below the band without pressure"
+        );
+        // same EWMA state, but the tenant layer reports SLO pressure on
+        // (0,0): the boost tips the band test over
+        let mut boost = vec![1.0; m.num_layers * m.num_experts];
+        boost[0] = 1.5;
+        a.set_expert_boost(boost);
+        assert_eq!(a.boost_of(0, 0), 1.5);
+        assert_eq!(a.boost_of(0, 1), 1.0);
+        let out = a.plan(&p, &mut ledger);
+        assert_eq!(out.len(), 1, "boost must promote the candidate: {out:?}");
+        let ScaleDecision::ScaleOut { layer, expert, .. } = out[0] else {
+            panic!("expected scale-out");
+        };
+        assert_eq!((layer, expert), (0, 0));
+    }
+
+    #[test]
+    fn slo_boost_holds_drains_back() {
+        let (m, c) = world();
+        let mut p = uniform::place(&m, &c);
+        let mut ledger = MemoryLedger::new(&c);
+        let mut a = Autoscaler::new(&m, &c, cfg());
+        // pretend a replica of (0,0) was added on s2g1 earlier
+        p.place(2, 1, 0, 0).unwrap();
+        a.added.push((0, 0, 2, 1));
+        let _ = step(&mut a, &delta_with(&m, 10.0, &[(0, 0, 100.0)]), &p, &mut ledger);
+        // trough: ratio ≈ 0.59 < lo_ratio 0.8 — but pressure holds the drain
+        let mut boost = vec![1.0; m.num_layers * m.num_experts];
+        boost[0] = 1.5;
+        a.set_expert_boost(boost);
+        a.observe(&delta_with(&m, 20.0, &[(0, 0, 20.0)]), &p);
+        assert!(
+            a.plan(&p, &mut ledger).is_empty(),
+            "pressured expert must keep its replica through the trough"
+        );
+        // pressure clears: the same trough state drains it
+        a.set_expert_boost(Vec::new());
+        let out = a.plan(&p, &mut ledger);
+        assert!(
+            matches!(
+                out.first(),
+                Some(ScaleDecision::ScaleIn { layer: 0, expert: 0, server: 2, gpu: 1 })
+            ),
+            "neutral boost must release the drain: {out:?}"
+        );
     }
 
     #[test]

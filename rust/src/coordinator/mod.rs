@@ -96,6 +96,10 @@ pub struct IntervalLog {
     pub decision: Option<MigrationDecision>,
     pub remote_penalty_s: f64,
     pub observed_tokens: f64,
+    /// Max per-tenant SLO pressure in force this interval (0.0 in
+    /// single-tenant runs): scales the migration-adoption threshold down
+    /// so refreshes that repair a violating tenant are adopted sooner.
+    pub slo_pressure: f64,
 }
 
 /// The global scheduler wrapping an [`Engine`].
@@ -117,6 +121,9 @@ pub struct Coordinator {
     refresh_starved: u64,
     /// live stats bus turning the engine's cumulative table into deltas
     bus: StatsBus,
+    /// per-tenant SLO pressures the gateway last published (empty in
+    /// single-tenant runs) — see [`Coordinator::note_tenant_pressure`]
+    pub tenant_pressure: Vec<f64>,
 }
 
 impl Coordinator {
@@ -137,10 +144,34 @@ impl Coordinator {
             autoscale_logs: Vec::new(),
             refresh_starved: 0,
             bus: StatsBus::new(model, cluster.num_servers()),
+            tenant_pressure: Vec::new(),
             model: model.clone(),
             cluster: cluster.clone(),
             cfg,
         }
+    }
+
+    /// Publish the gateway's per-tenant SLO pressures and the derived
+    /// per-expert boost for the *next* scheduling boundary. Pressure
+    /// lowers the migration-adoption threshold (a layout that repairs a
+    /// violating tenant is worth adopting at a smaller modeled saving);
+    /// the boost makes the autoscaler prefer scale-out candidates hot in
+    /// the violating tenants' task profiles. No-op state in single-tenant
+    /// runs (empty pressures, neutral boost).
+    pub fn note_tenant_pressure(
+        &mut self,
+        pressures: Vec<f64>,
+        expert_boost: Vec<f64>,
+    ) {
+        self.tenant_pressure = pressures;
+        if let Some(a) = &mut self.autoscaler {
+            a.set_expert_boost(expert_boost);
+        }
+    }
+
+    /// Max per-tenant SLO pressure currently in force (0.0 when none).
+    pub fn max_tenant_pressure(&self) -> f64 {
+        self.tenant_pressure.iter().cloned().fold(0.0, f64::max)
     }
 
     /// Seed the history (the paper's "initialized from historical data").
@@ -245,6 +276,7 @@ impl Coordinator {
                 decision: None,
                 remote_penalty_s: 0.0,
                 observed_tokens: delta.tokens,
+                slo_pressure: self.max_tenant_pressure(),
             });
             false
         } else {
@@ -367,6 +399,7 @@ impl Coordinator {
                 decision: None,
                 remote_penalty_s: 0.0,
                 observed_tokens: delta.tokens,
+                slo_pressure: self.max_tenant_pressure(),
             });
             return false;
         }
@@ -413,8 +446,13 @@ impl Coordinator {
         );
         let net_saving =
             decision.cost_old_s - decision.cost_new_s - decision.t_mig_s;
+        // SLO pressure relaxes the hysteresis: when a tenant is running
+        // past its p95 target, a layout that shaves serving cost is worth
+        // adopting at a proportionally smaller relative saving.
+        let pressure = self.max_tenant_pressure();
+        let min_gain = self.cfg.min_relative_gain / (1.0 + pressure);
         let adopt = decision.adopt
-            && net_saving > self.cfg.min_relative_gain * decision.cost_old_s;
+            && net_saving > min_gain * decision.cost_old_s;
         if adopt {
             crate::util::log::info(
                 "coordinator",
@@ -442,6 +480,7 @@ impl Coordinator {
             decision: Some(decision),
             remote_penalty_s: penalty,
             observed_tokens: delta.tokens,
+            slo_pressure: pressure,
         });
         adopt
     }
@@ -630,6 +669,38 @@ mod tests {
         assert!(coord.autoscale_logs.is_empty());
         assert!(coord.logs.iter().all(|l| l.decision.is_some()));
         assert_eq!(coord.ledger.total_reserved(), 0);
+    }
+
+    #[test]
+    fn tenant_pressure_is_logged_and_maxed() {
+        let (m, c, w) = small();
+        let stats = warm_stats(&m, &w);
+        let mut engine = Engine::new(
+            &m,
+            &c,
+            uniform::place(&m, &c),
+            EngineConfig::default(),
+            CostModel::default(),
+        );
+        let mut coord = Coordinator::new(
+            &m,
+            &c,
+            CoordinatorConfig {
+                interval_s: 60.0,
+                ..CoordinatorConfig::default()
+            },
+        );
+        coord.seed_history(&stats);
+        assert_eq!(coord.max_tenant_pressure(), 0.0, "starts neutral");
+        coord.note_tenant_pressure(vec![0.2, 1.0], Vec::new());
+        assert_eq!(coord.max_tenant_pressure(), 1.0);
+        let _ = coord.on_interval(&mut engine, 60.0);
+        let log = coord.logs.last().unwrap();
+        assert_eq!(log.slo_pressure, 1.0, "refresh logs the pressure");
+        // single-tenant paths keep logging 0.0
+        coord.note_tenant_pressure(Vec::new(), Vec::new());
+        let _ = coord.on_interval(&mut engine, 120.0);
+        assert_eq!(coord.logs.last().unwrap().slo_pressure, 0.0);
     }
 
     #[test]

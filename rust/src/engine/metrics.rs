@@ -8,6 +8,8 @@ use crate::util::stats::{mean, Online};
 pub struct RequestRecord {
     pub id: usize,
     pub server: usize,
+    /// Tenant of the originating request (0 in single-tenant workloads).
+    pub tenant: usize,
     pub arrival_s: f64,
     pub done_s: f64,
     pub latency_s: f64,
@@ -148,6 +150,12 @@ impl ServeReport {
         )
     }
 
+    /// Per-tenant latency vectors and SLO-violation counts over all
+    /// records (see [`tenant_slices`]).
+    pub fn tenant_slices(&self, slos: &[f64]) -> (Vec<Vec<f64>>, Vec<u64>) {
+        tenant_slices(&self.records, slos)
+    }
+
     /// Throughput in requests/s over the makespan.
     pub fn throughput(&self) -> f64 {
         if self.makespan_s <= 0.0 {
@@ -166,6 +174,30 @@ impl ServeReport {
     }
 }
 
+/// The canonical "group completions by tenant and apply each tenant's
+/// SLO" rule, in one pass: per-tenant latency vectors (completion order)
+/// and violation counts. Records tagged past `slos.len()` are ignored.
+/// Both the gateway's end-of-run per-tenant report and the stats bus's
+/// interval windows route through this, so they can never disagree about
+/// who a completion belongs to or what counts as a violation.
+pub fn tenant_slices(
+    records: &[RequestRecord],
+    slos: &[f64],
+) -> (Vec<Vec<f64>>, Vec<u64>) {
+    let nt = slos.len();
+    let mut lat: Vec<Vec<f64>> = vec![Vec::new(); nt];
+    let mut violations = vec![0u64; nt];
+    for r in records {
+        if r.tenant < nt {
+            lat[r.tenant].push(r.latency_s);
+            if r.latency_s > slos[r.tenant] {
+                violations[r.tenant] += 1;
+            }
+        }
+    }
+    (lat, violations)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -174,6 +206,7 @@ mod tests {
         RequestRecord {
             id,
             server,
+            tenant: 0,
             arrival_s: arr,
             done_s: done,
             latency_s: done - arr,
@@ -218,6 +251,30 @@ mod tests {
         assert_eq!(r.local_ratio(), 1.0);
         assert_eq!(r.throughput(), 0.0);
         assert_eq!(r.latency_row(), vec![0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn per_tenant_slicing() {
+        let mut r = ServeReport::new(1, 60.0);
+        for i in 1..=6 {
+            let mut x = rec(i, 0, 0.0, i as f64);
+            x.tenant = i % 2;
+            r.push(x);
+        }
+        let (lat, violations) = r.tenant_slices(&[3.5, 3.5]);
+        assert_eq!(lat[0], vec![2.0, 4.0, 6.0]);
+        assert_eq!(lat[1], vec![1.0, 3.0, 5.0]);
+        assert_eq!(violations, vec![2, 1]);
+        // per-tenant SLOs apply independently
+        let (_, v) = r.tenant_slices(&[10.0, 0.5]);
+        assert_eq!(v, vec![0, 3]);
+        // records tagged past the tenant count are ignored, not a panic
+        let (lat, v) = r.tenant_slices(&[3.5]);
+        assert_eq!(lat.len(), 1);
+        assert_eq!(lat[0], vec![2.0, 4.0, 6.0]);
+        assert_eq!(v, vec![2]);
+        let (lat, v) = r.tenant_slices(&[]);
+        assert!(lat.is_empty() && v.is_empty());
     }
 
     #[test]

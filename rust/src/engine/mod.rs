@@ -847,6 +847,7 @@ impl Engine {
         let rec = RequestRecord {
             id: rq.req.id,
             server: rq.req.server,
+            tenant: rq.req.tenant,
             arrival_s: rq.req.arrival_s,
             done_s: t,
             latency_s: t - rq.req.arrival_s,

@@ -101,7 +101,8 @@ pub mod prelude {
     pub use crate::moe::{ActivationStats, ExpertId, LayerId, ServerId};
     pub use crate::placement::{Placement, PlacementAlgo};
     pub use crate::serve::{
-        ArrivalProfile, Gateway, GatewayConfig, GatewayReport,
+        ArrivalProfile, Gateway, GatewayConfig, GatewayReport, TenantReport,
+        TenantSet,
     };
     pub use crate::trace::{TaskProfile, Trace, TraceGenerator};
 }

@@ -14,7 +14,9 @@ use dancemoe::engine::{warm_stats, ScaleKind};
 use dancemoe::exp::runner::RunSpec;
 use dancemoe::placement::{objective, uniform, PlacementAlgo};
 use dancemoe::runtime::{calibrate, forward, weights, Runtime};
-use dancemoe::serve::{ArrivalProfile, Gateway, GatewayConfig};
+use dancemoe::serve::{
+    ArrivalProfile, Gateway, GatewayConfig, TenantReport, TenantSet,
+};
 use dancemoe::util::cli::{Args, Cli, Command};
 use dancemoe::util::table::Table;
 use dancemoe::{exp, Error};
@@ -74,6 +76,22 @@ fn cli() -> Cli {
                 .flag("max-ops", Some("8"), "scale operations per interval")
                 .flag("seed", Some("0"), "rng seed")
                 .switch("no-baseline", "skip the fixed-placement comparison run"),
+            Command::new("tenants", "multi-tenant online serving: per-tenant \
+                          queues, weighted-deficit admission, per-tenant \
+                          SLOs driving placement refresh and autoscaling")
+                .flag("preset", Some("edge3"), "cluster preset (edge3|scaling<N>)")
+                .flag("model", Some("deepseek"), "model preset")
+                .flag("workload", Some("bigbench"), "bigbench|multidata")
+                .flag("rps", Some("10"), "aggregate BASE arrival rate (req/s, whole \
+                       cluster); each tenant offers its rate share of this")
+                .flag("tenants", Some("pair"), "tenant preset (pair|trio)")
+                .flag("horizon", Some("600"), "virtual seconds of arrivals")
+                .flag("interval", Some("30"), "stats-bus / refresh interval (s)")
+                .flag("algo", Some("dancemoe"), "placement algorithm for refreshes")
+                .flag("seed", Some("0"), "rng seed")
+                .switch("no-migrate", "disable live migration")
+                .switch("autoscale", "run the SLO-boosted replica autoscaler too")
+                .switch("no-baseline", "skip the shared-queue comparison run"),
             Command::new("exp", "regenerate a paper table/figure \
                           (table1|table2|fig2|fig3|fig5|fig6|fig7|fig8|ablations|all)")
                 .flag("seed", Some("7"), "rng seed")
@@ -570,6 +588,148 @@ fn cmd_autoscale(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+/// Render one run's per-tenant rows.
+fn tenant_table(title: &str, tenants: &[TenantReport]) -> Table {
+    let mut t = Table::new(
+        title,
+        &["Tenant", "weight", "SLO (s)", "offered", "shed", "p50 (s)",
+          "p95 (s)", "p99 (s)", "attainment"],
+    );
+    for r in tenants {
+        t.row(vec![
+            r.name.clone(),
+            format!("{}", r.weight),
+            format!("{:.0}", r.slo_s),
+            format!("{}", r.offered),
+            format!("{}", r.shed),
+            format!("{:.2}", r.p50_s),
+            format!("{:.2}", r.p95_s),
+            format!("{:.2}", r.p99_s),
+            format!("{:.1}%", 100.0 * r.attainment()),
+        ]);
+    }
+    t
+}
+
+fn cmd_tenants(args: &Args) -> Result<(), String> {
+    let (model, cluster, workload, rps) = online_setup(args)?;
+    let tenants = TenantSet::from_name(&args.get_str("tenants"))
+        .ok_or_else(|| {
+            format!(
+                "unknown tenant preset '{}' (pair|trio)",
+                args.get_str("tenants")
+            )
+        })?;
+    let algo = PlacementAlgo::from_name(&args.get_str("algo"))
+        .map_err(|e| e.to_string())?;
+    let seed = args.get_u64("seed")?;
+    let horizon_s = args.get_f64("horizon")?;
+    let interval_s = args.get_f64("interval")?;
+    if interval_s <= 0.0 {
+        return Err("--interval must be positive".into());
+    }
+    let gcfg = GatewayConfig {
+        horizon_s,
+        tenants: Some(tenants.clone()),
+        seed,
+        ..GatewayConfig::default()
+    };
+    let coord_cfg = CoordinatorConfig {
+        interval_s,
+        algo,
+        migrate: !args.switch("no-migrate"),
+        seed,
+        autoscale: if args.switch("autoscale") {
+            Some(AutoscaleConfig::default())
+        } else {
+            None
+        },
+        ..CoordinatorConfig::default()
+    };
+
+    // Weighted-deficit multi-tenant gateway, online-first start.
+    let initial = uniform::place(&model, &cluster);
+    let mut gw = Gateway::new(
+        &model,
+        &cluster,
+        &workload,
+        initial.clone(),
+        gcfg.clone(),
+        coord_cfg.clone(),
+    );
+    let report = gw.run();
+
+    println!(
+        "tenants: {} on {} — {:.1} base req/s, {} tenants, {:.0}s horizon, \
+         refresh every {:.0}s",
+        model.name,
+        cluster.name,
+        rps,
+        tenants.len(),
+        horizon_s,
+        interval_s
+    );
+    println!(
+        "{}",
+        tenant_table(
+            "weighted-deficit admission (per-tenant queues)",
+            &report.tenants
+        )
+        .render()
+    );
+    let max_pressure = gw
+        .coordinator
+        .logs
+        .iter()
+        .map(|l| l.slo_pressure)
+        .fold(0.0f64, f64::max);
+    println!(
+        "control  {} refreshes   {} migrations   {} scale-outs   \
+         {} scale-ins   peak SLO pressure {:.2}",
+        report.refreshes,
+        report.migrations,
+        report.scale_outs,
+        report.scale_ins,
+        max_pressure,
+    );
+
+    if !args.switch("no-baseline") {
+        // Shared-queue baseline: same arrivals, one FIFO per server.
+        let mut base_gw = Gateway::new(
+            &model,
+            &cluster,
+            &workload,
+            initial,
+            GatewayConfig {
+                shared_queue: true,
+                ..gcfg
+            },
+            coord_cfg,
+        );
+        let base = base_gw.run();
+        println!(
+            "{}",
+            tenant_table(
+                "shared-queue baseline (same arrivals, one FIFO)",
+                &base.tenants
+            )
+            .render()
+        );
+        for (w, s) in report.tenants.iter().zip(&base.tenants) {
+            if s.p95_s > 0.0 {
+                println!(
+                    "{:<12} p95 {:+.1}% vs shared queue   attainment \
+                     {:+.1} pts",
+                    w.name,
+                    100.0 * (w.p95_s - s.p95_s) / s.p95_s,
+                    100.0 * (w.attainment() - s.attainment()),
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
 fn cmd_exp(args: &Args) -> Result<(), String> {
     let which = args
         .positional
@@ -745,6 +905,7 @@ fn main() -> ExitCode {
         "serve" => cmd_serve(&args),
         "gateway" => cmd_gateway(&args),
         "autoscale" => cmd_autoscale(&args),
+        "tenants" => cmd_tenants(&args),
         "exp" => cmd_exp(&args),
         "calibrate" => cmd_calibrate(&args),
         "forward" => cmd_forward(&args),

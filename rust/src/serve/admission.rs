@@ -1,12 +1,26 @@
-//! Admission control: bounded per-server queues with shed-on-overflow
-//! backpressure.
+//! Admission control: bounded per-(server, tenant) queues with
+//! shed-on-overflow backpressure and a weighted-deficit dequeue policy.
 //!
-//! The gateway is open loop, so overload must go somewhere. Each server
-//! gets a FIFO admission queue with a hard bound; when a request's entire
-//! routing preference list is full, it is shed (counted, never served) —
-//! the SLO report charges shed requests as violations. The queues feed the
-//! continuous-batching scheduler ([`crate::serve::batcher`]), which also
-//! needs each entry's enqueue time for its max-wait deadline.
+//! The gateway is open loop, so overload must go somewhere. Every server
+//! holds one FIFO queue **per tenant**, each with its own hard bound (the
+//! tenant's shed threshold): a bursting tenant fills *its own* queues and
+//! sheds there, instead of crowding every other tenant out of a shared
+//! queue — the multi-tenant isolation the ROADMAP's "Multi-tenant SLOs"
+//! item asks for. Single-tenant gateways are the 1-tenant special case
+//! and keep the original bounded-FIFO semantics bit for bit.
+//!
+//! Dequeue is **deficit round robin** over the tenant queues: each tenant
+//! is granted a quantum of `weight` requests when its turn starts and is
+//! served until the quantum is spent (or its queue empties), so over any
+//! backlogged horizon tenants receive dequeue bandwidth proportional to
+//! their weights, every tenant with weight ≥ 1 is served every cycle
+//! (starvation-free), and the policy is work-conserving — a pop never
+//! returns fewer requests than `min(n, queued)`. These three properties
+//! are locked in by `tests/tenant_properties.rs`.
+//!
+//! The queues feed the continuous-batching scheduler
+//! ([`crate::serve::batcher`]), which also needs each entry's enqueue time
+//! for its max-wait deadline.
 
 use std::collections::VecDeque;
 
@@ -19,71 +33,224 @@ pub struct Queued {
     pub enqueued_s: f64,
 }
 
-/// Bounded per-server admission queues.
+/// Bounded per-(server, tenant) admission queues with weighted-deficit
+/// dequeue. See the module docs for the policy.
 #[derive(Debug, Clone)]
 pub struct AdmissionController {
-    cap: usize,
-    queues: Vec<VecDeque<Queued>>,
+    /// Per-tenant queue bounds (shed thresholds). In shared mode the sum
+    /// bounds the single queue instead.
+    caps: Vec<usize>,
+    /// Per-tenant DRR weights (all ≥ 1).
+    weights: Vec<u64>,
+    /// `queues[server][queue]` — one queue per tenant, or a single shared
+    /// FIFO when `shared` (the pre-multi-tenant baseline).
+    queues: Vec<Vec<VecDeque<Queued>>>,
+    /// DRR state: remaining quantum per (server, tenant).
+    deficit: Vec<Vec<u64>>,
+    /// DRR state: tenant whose turn it is, per server.
+    cursor: Vec<usize>,
+    /// Single shared FIFO per server (tenants tagged but not isolated).
+    shared: bool,
     /// requests accepted into some queue
     pub admitted: u64,
     /// requests no queue could accept (backpressure)
     pub shed: u64,
+    /// per-tenant slices of the counters above
+    pub admitted_by_tenant: Vec<u64>,
+    pub shed_by_tenant: Vec<u64>,
 }
 
 impl AdmissionController {
+    /// Single-tenant controller: one bounded FIFO per server (the original
+    /// gateway semantics).
     pub fn new(num_servers: usize, cap: usize) -> AdmissionController {
+        Self::with_tenants(num_servers, &[cap], &[1])
+    }
+
+    /// Multi-tenant controller: per-tenant bounded queues with
+    /// weighted-deficit dequeue. `caps[t]` is tenant `t`'s shed threshold
+    /// per server; `weights[t]` its dequeue weight.
+    pub fn with_tenants(
+        num_servers: usize,
+        caps: &[usize],
+        weights: &[u64],
+    ) -> AdmissionController {
+        assert_eq!(caps.len(), weights.len());
+        assert!(!caps.is_empty(), "at least one tenant");
+        let nt = caps.len();
         AdmissionController {
-            cap: cap.max(1),
-            queues: vec![VecDeque::new(); num_servers],
+            caps: caps.iter().map(|&c| c.max(1)).collect(),
+            weights: weights.iter().map(|&w| w.max(1)).collect(),
+            queues: vec![vec![VecDeque::new(); nt]; num_servers],
+            deficit: vec![vec![0; nt]; num_servers],
+            cursor: vec![0; num_servers],
+            shared: false,
             admitted: 0,
             shed: 0,
+            admitted_by_tenant: vec![0; nt],
+            shed_by_tenant: vec![0; nt],
         }
     }
 
-    pub fn capacity(&self) -> usize {
-        self.cap
+    /// Shared-queue baseline for multi-tenant arrivals: a single bounded
+    /// FIFO per server (bound = Σ per-tenant caps), tenants tagged for
+    /// accounting but not isolated — the configuration the weighted
+    /// controller is measured against.
+    pub fn shared_with_tenants(
+        num_servers: usize,
+        caps: &[usize],
+    ) -> AdmissionController {
+        let mut adm = Self::with_tenants(
+            num_servers,
+            caps,
+            &vec![1u64; caps.len()],
+        );
+        adm.shared = true;
+        for q in &mut adm.queues {
+            *q = vec![VecDeque::new()];
+        }
+        adm
+    }
+
+    /// Tenant `t`'s queue bound (total bound in shared mode).
+    pub fn tenant_cap(&self, tenant: usize) -> usize {
+        if self.shared {
+            self.caps.iter().sum()
+        } else {
+            self.caps[tenant.min(self.caps.len() - 1)]
+        }
     }
 
     pub fn num_servers(&self) -> usize {
         self.queues.len()
     }
 
+    /// Which physical queue a tenant's requests land in.
+    fn queue_index(&self, tenant: usize) -> usize {
+        if self.shared {
+            0
+        } else {
+            tenant.min(self.caps.len() - 1)
+        }
+    }
+
     pub fn depth(&self, server: usize) -> usize {
-        self.queues[server].len()
+        self.queues[server].iter().map(|q| q.len()).sum()
+    }
+
+    /// Queued requests of `tenant` at `server` (its shed headroom).
+    pub fn tenant_depth(&self, server: usize, tenant: usize) -> usize {
+        if self.shared {
+            self.queues[server][0]
+                .iter()
+                .filter(|q| q.req.tenant == tenant)
+                .count()
+        } else {
+            self.queues[server][self.queue_index(tenant)].len()
+        }
+    }
+
+    /// Remaining room in the queue `tenant`'s next request would enter.
+    pub fn tenant_residual(&self, server: usize, tenant: usize) -> usize {
+        if self.shared {
+            self.tenant_cap(0).saturating_sub(self.depth(server))
+        } else {
+            let qi = self.queue_index(tenant);
+            self.caps[qi].saturating_sub(self.queues[server][qi].len())
+        }
     }
 
     pub fn total_queued(&self) -> usize {
-        self.queues.iter().map(|q| q.len()).sum()
+        (0..self.queues.len()).map(|s| self.depth(s)).sum()
     }
 
-    /// Try to enqueue at `server`. Returns `false` when the queue is at its
-    /// bound — the caller spills to its next routing choice or sheds.
-    pub fn offer(&mut self, server: usize, req: Request, now: f64) -> bool {
-        if self.queues[server].len() >= self.cap {
+    /// Try to enqueue at `server`. Returns `false` when the request's
+    /// tenant queue is at its bound — the caller spills to its next
+    /// routing choice or sheds.
+    pub fn offer(&mut self, server: usize, mut req: Request, now: f64) -> bool {
+        // normalize the tag once at the door: the stored request, the
+        // counters, the completion record and the SLO windows then all
+        // agree on the same tenant slot, even for out-of-range tags
+        req.tenant = req.tenant.min(self.caps.len() - 1);
+        let tenant = req.tenant;
+        if self.tenant_residual(server, tenant) == 0 {
             return false;
         }
-        self.queues[server].push_back(Queued {
+        let qi = self.queue_index(tenant);
+        self.queues[server][qi].push_back(Queued {
             req,
             enqueued_s: now,
         });
         self.admitted += 1;
+        self.admitted_by_tenant[tenant] += 1;
         true
     }
 
-    /// Record a request that every candidate queue rejected.
-    pub fn record_shed(&mut self) {
+    /// Record a request every candidate queue rejected, attributed to its
+    /// tenant (tenant 0 in single-tenant gateways).
+    pub fn record_shed_tenant(&mut self, tenant: usize) {
+        let t = tenant.min(self.shed_by_tenant.len() - 1);
         self.shed += 1;
+        self.shed_by_tenant[t] += 1;
     }
 
-    /// Enqueue time of the oldest request at `server` (deadline anchor).
+    /// Enqueue time of the oldest request at `server` (deadline anchor),
+    /// across every tenant queue.
     pub fn oldest(&self, server: usize) -> Option<f64> {
-        self.queues[server].front().map(|q| q.enqueued_s)
+        self.queues[server]
+            .iter()
+            .filter_map(|q| q.front().map(|e| e.enqueued_s))
+            .min_by(|a, b| a.partial_cmp(b).unwrap())
     }
 
-    /// Pop up to `n` requests from the front of `server`'s queue (FIFO).
+    /// Pop up to `n` requests from `server`'s queues.
+    ///
+    /// Single queue (one tenant, or shared mode): plain FIFO. Multiple
+    /// tenant queues: deficit round robin — the tenant at the cursor is
+    /// granted a `weight`-sized quantum when its turn starts and served
+    /// until the quantum is spent or its queue empties, then the turn
+    /// passes on. A truncated turn (because `n` was reached) resumes with
+    /// its residual quantum on the next pop. Always returns exactly
+    /// `min(n, queued-at-server)` requests (work conservation), FIFO
+    /// within each tenant.
     pub fn pop(&mut self, server: usize, n: usize) -> Vec<Queued> {
-        let take = n.min(self.queues[server].len());
-        self.queues[server].drain(..take).collect()
+        let nt = self.queues[server].len();
+        if nt == 1 {
+            let q = &mut self.queues[server][0];
+            let take = n.min(q.len());
+            return q.drain(..take).collect();
+        }
+        let target = n.min(self.depth(server));
+        let mut out = Vec::with_capacity(target);
+        while out.len() < target {
+            let t = self.cursor[server];
+            if self.queues[server][t].is_empty() {
+                // an empty queue banks no deficit across idle periods
+                self.deficit[server][t] = 0;
+                self.cursor[server] = (t + 1) % nt;
+                continue;
+            }
+            if self.deficit[server][t] == 0 {
+                // turn start: grant the tenant's quantum
+                self.deficit[server][t] = self.weights[t];
+            }
+            while self.deficit[server][t] > 0
+                && out.len() < target
+                && !self.queues[server][t].is_empty()
+            {
+                out.push(self.queues[server][t].pop_front().unwrap());
+                self.deficit[server][t] -= 1;
+            }
+            if self.queues[server][t].is_empty() {
+                self.deficit[server][t] = 0;
+            }
+            if self.deficit[server][t] == 0 {
+                // quantum spent (or queue drained): turn passes on. A
+                // truncated turn keeps the cursor, resuming here next pop.
+                self.cursor[server] = (t + 1) % nt;
+            }
+        }
+        out
     }
 }
 
@@ -94,6 +261,10 @@ mod tests {
     use crate::util::prop;
 
     fn req(id: usize, server: usize) -> Request {
+        treq(id, server, 0)
+    }
+
+    fn treq(id: usize, server: usize, tenant: usize) -> Request {
         Request {
             id,
             server,
@@ -101,6 +272,7 @@ mod tests {
             prompt_tokens: 16,
             output_tokens: 4,
             task: TaskKind::Arithmetic,
+            tenant,
         }
     }
 
@@ -176,5 +348,97 @@ mod tests {
                 "depth accounting broken",
             );
         });
+    }
+
+    #[test]
+    fn per_tenant_bounds_isolate_sheds() {
+        // tenant 1 filling its queue never costs tenant 0 admission room
+        let mut adm = AdmissionController::with_tenants(1, &[2, 2], &[1, 1]);
+        assert!(adm.offer(0, treq(0, 0, 1), 0.0));
+        assert!(adm.offer(0, treq(1, 0, 1), 0.0));
+        assert!(!adm.offer(0, treq(2, 0, 1), 0.0), "tenant 1 at bound");
+        assert!(adm.offer(0, treq(3, 0, 0), 0.0), "tenant 0 unaffected");
+        adm.record_shed_tenant(1);
+        assert_eq!(adm.shed_by_tenant, vec![0, 1]);
+        assert_eq!(adm.admitted_by_tenant, vec![1, 2]);
+        assert_eq!(adm.tenant_depth(0, 0), 1);
+        assert_eq!(adm.tenant_depth(0, 1), 2);
+        assert_eq!(adm.tenant_residual(0, 0), 1);
+        assert_eq!(adm.tenant_residual(0, 1), 0);
+        assert_eq!(adm.depth(0), 3);
+    }
+
+    #[test]
+    fn drr_shares_follow_weights() {
+        // backlogged 3:1 tenants: 8 pops split 6:2
+        let mut adm = AdmissionController::with_tenants(1, &[16, 16], &[3, 1]);
+        for i in 0..8 {
+            assert!(adm.offer(0, treq(i, 0, 0), 0.0));
+            assert!(adm.offer(0, treq(100 + i, 0, 1), 0.0));
+        }
+        let popped = adm.pop(0, 8);
+        let t0 = popped.iter().filter(|q| q.req.tenant == 0).count();
+        assert_eq!((t0, popped.len() - t0), (6, 2));
+        // within each tenant, FIFO held
+        let ids0: Vec<usize> = popped
+            .iter()
+            .filter(|q| q.req.tenant == 0)
+            .map(|q| q.req.id)
+            .collect();
+        assert_eq!(ids0, vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn truncated_turn_resumes_with_residual_quantum() {
+        // weight-4 tenant popped one at a time keeps its turn until the
+        // quantum is spent — unit pops must still converge to 4:1, not 1:1
+        let mut adm = AdmissionController::with_tenants(1, &[64, 64], &[4, 1]);
+        for i in 0..40 {
+            assert!(adm.offer(0, treq(i, 0, 0), 0.0));
+            assert!(adm.offer(0, treq(1000 + i, 0, 1), 0.0));
+        }
+        let mut t0 = 0;
+        for _ in 0..20 {
+            let q = adm.pop(0, 1);
+            assert_eq!(q.len(), 1);
+            if q[0].req.tenant == 0 {
+                t0 += 1;
+            }
+        }
+        assert_eq!(t0, 16, "20 unit pops at 4:1 weights give 16:4");
+    }
+
+    #[test]
+    fn shared_mode_is_one_fifo() {
+        let mut adm = AdmissionController::shared_with_tenants(1, &[2, 2]);
+        // bound is the sum of caps; tenants interleave in arrival order
+        for i in 0..4 {
+            assert!(adm.offer(0, treq(i, 0, i % 2), 0.0));
+        }
+        assert!(!adm.offer(0, treq(4, 0, 0), 0.0), "shared bound reached");
+        assert_eq!(adm.tenant_cap(0), 4);
+        let popped = adm.pop(0, 4);
+        let ids: Vec<usize> = popped.iter().map(|q| q.req.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3], "strict arrival order");
+        assert_eq!(adm.admitted_by_tenant, vec![2, 2]);
+    }
+
+    #[test]
+    fn empty_queue_banks_no_deficit() {
+        // a tenant idle for many cycles must not burst past its weight
+        // share when it returns
+        let mut adm = AdmissionController::with_tenants(1, &[64, 64], &[1, 1]);
+        for i in 0..8 {
+            assert!(adm.offer(0, treq(i, 0, 0), 0.0));
+        }
+        // drain tenant 0 alone — tenant 1 is skipped, earning nothing
+        let _ = adm.pop(0, 8);
+        for i in 0..4 {
+            assert!(adm.offer(0, treq(200 + i, 0, 0), 0.0));
+            assert!(adm.offer(0, treq(300 + i, 0, 1), 0.0));
+        }
+        let popped = adm.pop(0, 4);
+        let t1 = popped.iter().filter(|q| q.req.tenant == 1).count();
+        assert_eq!(t1, 2, "returning tenant gets its fair half, no backlog");
     }
 }

@@ -6,8 +6,16 @@
 //! (flash crowds hitting an edge site) or diurnal (day/night swing). The
 //! source is *open loop* — arrivals never wait for the system, which is
 //! what makes admission control and backpressure meaningful downstream.
+//!
+//! Multi-tenant gateways overlay one generator per (tenant, server) pair
+//! ([`ArrivalSource::with_tenants`]): every tenant offers its own share of
+//! each stream's base rate under its *own* profile — so a batch tenant
+//! can flash-crowd while an interactive tenant stays Poisson — and each
+//! emitted [`Request`] carries its tenant tag for the per-tenant
+//! admission queues downstream.
 
-use crate::config::WorkloadConfig;
+use crate::config::{StreamConfig, WorkloadConfig};
+use crate::serve::tenant::TenantSet;
 use crate::trace::Request;
 use crate::util::rng::Rng;
 
@@ -93,6 +101,18 @@ impl ArrivalProfile {
     }
 }
 
+/// One generator's static description: which server and tenant it feeds,
+/// under which profile, at which (share-scaled) rate.
+#[derive(Debug, Clone)]
+struct StreamSpec {
+    server: usize,
+    tenant: usize,
+    profile: ArrivalProfile,
+    /// Stream config with the tenant's rate share and task override
+    /// already folded in.
+    cfg: StreamConfig,
+}
+
 /// One stream's generator state: its RNG and the next pending arrival.
 #[derive(Debug)]
 struct StreamState {
@@ -100,35 +120,84 @@ struct StreamState {
     next: Option<Request>,
 }
 
-/// Open-loop arrival source merging the per-server streams in time order.
-/// Deterministic per (workload, profile, horizon, seed).
+/// Open-loop arrival source merging the per-(tenant, server) streams in
+/// time order. Deterministic per (workload, profile(s), horizon, seed).
 #[derive(Debug)]
 pub struct ArrivalSource {
-    workload: WorkloadConfig,
-    profile: ArrivalProfile,
+    specs: Vec<StreamSpec>,
     horizon_s: f64,
     streams: Vec<StreamState>,
     issued: usize,
 }
 
 impl ArrivalSource {
+    /// Single-tenant source: one generator per server stream, all under
+    /// the same profile (every request tagged tenant 0).
     pub fn new(
         workload: &WorkloadConfig,
         profile: ArrivalProfile,
         horizon_s: f64,
         seed: u64,
     ) -> ArrivalSource {
+        let specs = workload
+            .streams
+            .iter()
+            .enumerate()
+            .map(|(s, cfg)| StreamSpec {
+                server: s,
+                tenant: 0,
+                profile,
+                cfg: cfg.clone(),
+            })
+            .collect();
+        Self::from_specs(specs, horizon_s, seed)
+    }
+
+    /// Multi-tenant source: one generator per (tenant, server) pair. Each
+    /// tenant offers `rate_share` of every stream's base rate under its
+    /// own profile; a tenant's `task_override` pins its streams to one
+    /// task (a distinct expert-activation signature).
+    pub fn with_tenants(
+        workload: &WorkloadConfig,
+        tenants: &TenantSet,
+        horizon_s: f64,
+        seed: u64,
+    ) -> ArrivalSource {
+        let mut specs = Vec::new();
+        for (t, tc) in tenants.tenants.iter().enumerate() {
+            let share = tc.rate_share.max(1e-9);
+            for (s, stream) in workload.streams.iter().enumerate() {
+                let mut cfg = stream.clone();
+                cfg.mean_interarrival_s = stream.mean_interarrival_s / share;
+                if let Some(task) = tc.task_override {
+                    cfg.task = task;
+                }
+                specs.push(StreamSpec {
+                    server: s,
+                    tenant: t,
+                    profile: tc.profile,
+                    cfg,
+                });
+            }
+        }
+        Self::from_specs(specs, horizon_s, seed)
+    }
+
+    fn from_specs(
+        specs: Vec<StreamSpec>,
+        horizon_s: f64,
+        seed: u64,
+    ) -> ArrivalSource {
         let mut root = Rng::new(seed ^ 0x9a7e_aa11);
         let mut src = ArrivalSource {
-            workload: workload.clone(),
-            profile,
-            horizon_s,
-            streams: (0..workload.streams.len())
+            streams: (0..specs.len())
                 .map(|i| StreamState {
                     rng: root.fork(i as u64 + 1),
                     next: None,
                 })
                 .collect(),
+            specs,
+            horizon_s,
             issued: 0,
         };
         for s in 0..src.streams.len() {
@@ -143,10 +212,10 @@ impl ArrivalSource {
     /// exact sampler for the inhomogeneous Poisson process — bursts get
     /// their full concentration, troughs their full sparsity.
     fn advance(&mut self, s: usize, t: f64) {
-        let stream = &self.workload.streams[s];
+        let spec = &self.specs[s];
         let st = &mut self.streams[s];
-        let base_rate = 1.0 / stream.mean_interarrival_s;
-        let peak = self.profile.max_factor();
+        let base_rate = 1.0 / spec.cfg.mean_interarrival_s;
+        let peak = spec.profile.max_factor();
         let mut at = t;
         loop {
             at += st.rng.exponential(base_rate * peak);
@@ -154,18 +223,20 @@ impl ArrivalSource {
                 st.next = None;
                 return;
             }
-            if st.rng.f64() * peak <= self.profile.factor(at) {
+            if st.rng.f64() * peak <= spec.profile.factor(at) {
                 break;
             }
         }
-        let prompt = crate::trace::sample_prompt_tokens(&mut st.rng, stream);
+        let prompt =
+            crate::trace::sample_prompt_tokens(&mut st.rng, &spec.cfg);
         st.next = Some(Request {
             id: 0, // assigned at pop, in global arrival order
-            server: s,
+            server: spec.server,
             arrival_s: at,
             prompt_tokens: prompt,
-            output_tokens: stream.output_tokens,
-            task: stream.task,
+            output_tokens: spec.cfg.output_tokens,
+            task: spec.cfg.task,
+            tenant: spec.tenant,
         });
     }
 
@@ -298,6 +369,49 @@ mod tests {
             assert_eq!(p.name(), name);
         }
         assert!(ArrivalProfile::from_name("sawtooth").is_none());
+    }
+
+    #[test]
+    fn tenant_streams_tag_tasks_and_split_rates() {
+        let w = WorkloadConfig::bigbench(10.0);
+        let tenants = crate::serve::tenant::TenantSet::pair();
+        let mut src = ArrivalSource::with_tenants(&w, &tenants, 3600.0, 5);
+        let mut counts = vec![0usize; 2];
+        let mut last = 0.0;
+        while let Some(r) = src.next_request() {
+            assert!(r.tenant < 2, "tenant tag in range");
+            assert!(r.arrival_s >= last, "time-ordered merge");
+            last = r.arrival_s;
+            counts[r.tenant] += 1;
+            if r.tenant == 1 {
+                assert_eq!(
+                    r.task,
+                    crate::config::TaskKind::Taco,
+                    "task override pins the batch tenant"
+                );
+            }
+        }
+        // interactive: 0.6 share of 3 × 360 base arrivals ≈ 648;
+        // batch: 0.9 share at a mean burst factor of 4 ≈ 3900
+        assert!(counts[0] > 400, "interactive count {}", counts[0]);
+        assert!(
+            counts[1] > counts[0],
+            "bursting tenant must offer more total load \
+             ({} vs {})",
+            counts[1],
+            counts[0]
+        );
+    }
+
+    #[test]
+    fn tenant_source_deterministic_per_seed() {
+        let w = WorkloadConfig::bigbench(5.0);
+        let tenants = crate::serve::tenant::TenantSet::trio();
+        let mk = |seed| {
+            drain(ArrivalSource::with_tenants(&w, &tenants, 600.0, seed))
+        };
+        assert_eq!(mk(3), mk(3));
+        assert_ne!(mk(3), mk(4));
     }
 
     #[test]

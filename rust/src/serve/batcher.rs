@@ -179,6 +179,7 @@ mod tests {
             prompt_tokens: 16,
             output_tokens: 4,
             task: TaskKind::Taco,
+            tenant: 0,
         }
     }
 
@@ -236,6 +237,92 @@ mod tests {
             more.iter().map(|x| x.requests.len()).sum::<usize>(),
             8
         );
+    }
+
+    #[test]
+    fn exactly_full_bucket_dispatches_without_padding() {
+        // boundary: a queue holding exactly the largest bucket forms one
+        // batch with zero padding — and the next arrival starts a fresh
+        // partial instead of riding along
+        let mut adm = AdmissionController::new(1, 64);
+        let mut b = Batcher::new(1, &[1, 8, 32], 0.25, 64);
+        for i in 0..32 {
+            adm.offer(0, req(i, 0, 0.0), 0.0);
+        }
+        adm.offer(0, req(32, 0, 0.0), 0.0); // 33rd: one past the bucket
+        let batches = b.drain_ready(&mut adm, 0.0);
+        assert_eq!(batches.len(), 1, "only the full bucket dispatches");
+        assert_eq!(batches[0].requests.len(), 32);
+        assert_eq!(batches[0].bucket, 32);
+        assert_eq!(b.bucket_slots, 32, "exact fill books no padding");
+        assert_eq!(b.batched_requests, 32);
+        assert_eq!(adm.depth(0), 1, "the 33rd stays queued");
+        // the leftover is below every deadline: nothing more forms now
+        assert!(b.drain_ready(&mut adm, 0.1).is_empty());
+    }
+
+    #[test]
+    fn empty_flush_is_a_noop() {
+        // boundary: flushing with nothing queued must not fabricate
+        // batches, move counters, or invent deadlines
+        let mut adm = AdmissionController::new(2, 8);
+        let mut b = Batcher::new(2, &[1, 8], 0.25, 4);
+        assert!(b.drain_ready(&mut adm, 0.0).is_empty());
+        assert!(b.drain_ready(&mut adm, 1e9).is_empty());
+        assert_eq!((b.batches, b.batched_requests, b.bucket_slots), (0, 0, 0));
+        assert_eq!(b.next_deadline(&adm), None);
+        assert!(!b.blocked_on_capacity(&adm, 0.0));
+        assert_eq!(b.total_inflight(), 0);
+    }
+
+    #[test]
+    fn timeout_fires_before_fill() {
+        // boundary: a lone request must dispatch at exactly enqueue +
+        // max_wait (within the 1e-9 tolerance), not wait for the bucket
+        let mut adm = AdmissionController::new(1, 64);
+        let mut b = Batcher::new(1, &[1, 8, 32], 0.25, 64);
+        adm.offer(0, req(0, 0, 2.0), 2.0);
+        assert_eq!(b.next_deadline(&adm), Some(2.25));
+        // just before the deadline: nothing fires
+        assert!(b.drain_ready(&mut adm, 2.25 - 1e-6).is_empty());
+        // at the deadline: the partial of one dispatches, padded to the
+        // smallest bucket that fits
+        let batches = b.drain_ready(&mut adm, 2.25);
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].requests.len(), 1);
+        assert_eq!(batches[0].bucket, 1);
+        assert_eq!(adm.depth(0), 0);
+        assert_eq!(b.next_deadline(&adm), None, "deadline consumed");
+    }
+
+    #[test]
+    fn inflight_boundary_exactly_full_blocks_one_slot_releases_one() {
+        // boundary: inflight == cap blocks a formable batch; freeing a
+        // single slot admits exactly one request, not a full bucket
+        let mut adm = AdmissionController::new(1, 64);
+        let mut b = Batcher::new(1, &[1, 8], 0.0, 8);
+        for i in 0..9 {
+            adm.offer(0, req(i, 0, 0.0), 0.0);
+        }
+        let first = b.drain_ready(&mut adm, 0.0);
+        assert_eq!(
+            first.iter().map(|x| x.requests.len()).sum::<usize>(),
+            8,
+            "cap-sized dispatch"
+        );
+        assert_eq!(b.inflight(0), 8);
+        assert!(b.blocked_on_capacity(&adm, 0.0), "exactly-full blocks");
+        assert!(b.drain_ready(&mut adm, 0.0).is_empty());
+        b.on_complete(0);
+        assert_eq!(b.inflight(0), 7);
+        let more = b.drain_ready(&mut adm, 0.0);
+        assert_eq!(more.len(), 1);
+        assert_eq!(more[0].requests.len(), 1, "one slot, one request");
+        assert_eq!(more[0].bucket, 1);
+        assert_eq!(b.inflight(0), 8);
+        // completions below a formable backlog unblock cleanly
+        assert_eq!(adm.depth(0), 0);
+        assert!(!b.blocked_on_capacity(&adm, 0.0));
     }
 
     #[test]

@@ -33,17 +33,20 @@ pub mod arrival;
 pub mod batcher;
 pub mod router;
 pub mod statsbus;
+pub mod tenant;
 
 pub use admission::AdmissionController;
 pub use arrival::{ArrivalProfile, ArrivalSource};
 pub use batcher::{Batch, Batcher};
 pub use router::LocalityRouter;
-pub use statsbus::{StatsBus, StatsDelta};
+pub use statsbus::{StatsBus, StatsDelta, TenantWindow};
+pub use tenant::{TenantConfig, TenantId, TenantReport, TenantSet};
 
 use crate::config::{ClusterConfig, ModelConfig, WorkloadConfig};
 use crate::coordinator::{Coordinator, CoordinatorConfig};
 use crate::engine::{CostModel, Engine, EngineConfig, ServeReport};
 use crate::placement::Placement;
+use crate::serve::statsbus::TenantBus;
 use crate::trace::Request;
 
 /// Gateway tuning knobs.
@@ -73,6 +76,17 @@ pub struct GatewayConfig {
     /// [`LocalityRouter::ranked_capacity`]). Only meaningful with
     /// `locality_routing`.
     pub capacity_routing: bool,
+    /// Multi-tenant serving: per-tenant arrival profiles, per-tenant
+    /// bounded queues with weighted-deficit dequeue, per-tenant SLO
+    /// accounting, and SLO-pressure feedback into placement refresh and
+    /// the autoscaler. `None` = the single-tenant gateway (`profile`,
+    /// `queue_cap` and `slo_s` apply); with tenants set, each tenant's
+    /// own profile / queue bound / SLO from the [`TenantSet`] apply.
+    pub tenants: Option<TenantSet>,
+    /// With `tenants`: collapse admission to one shared FIFO per server
+    /// (tenants tagged for accounting but not isolated) — the baseline
+    /// the weighted-deficit policy is measured against.
+    pub shared_queue: bool,
     pub seed: u64,
 }
 
@@ -88,6 +102,8 @@ impl Default for GatewayConfig {
             slo_s: 15.0,
             locality_routing: true,
             capacity_routing: true,
+            tenants: None,
+            shared_queue: false,
             seed: 0,
         }
     }
@@ -119,6 +135,9 @@ pub struct GatewayReport {
     /// Autoscaler replicas drained and evicted during the run.
     pub scale_ins: u64,
     pub slo_s: f64,
+    /// Per-tenant slices (empty for single-tenant runs): offered /
+    /// admitted / shed, latency percentiles, and SLO attainment.
+    pub tenants: Vec<TenantReport>,
 }
 
 impl GatewayReport {
@@ -193,6 +212,11 @@ pub struct Gateway {
     offered: u64,
     spilled: u64,
     completions_seen: usize,
+    /// Multi-tenant state (all empty/None for single-tenant runs):
+    /// per-interval SLO windows and the precomputed per-tenant
+    /// expert-activation masses the boost is built from.
+    tenant_bus: Option<TenantBus>,
+    tenant_masses: Vec<Vec<f64>>,
 }
 
 impl Gateway {
@@ -219,17 +243,59 @@ impl Gateway {
             CostModel::default(),
         );
         let router = LocalityRouter::new(model, &engine.placement);
+        let (arrivals, admission, tenant_bus, tenant_masses) =
+            match &cfg.tenants {
+                Some(set) => {
+                    let arrivals = ArrivalSource::with_tenants(
+                        workload,
+                        set,
+                        cfg.horizon_s,
+                        cfg.seed,
+                    );
+                    let admission = if cfg.shared_queue {
+                        AdmissionController::shared_with_tenants(
+                            cluster.num_servers(),
+                            &set.caps(),
+                        )
+                    } else {
+                        AdmissionController::with_tenants(
+                            cluster.num_servers(),
+                            &set.caps(),
+                            &set.weights(),
+                        )
+                    };
+                    let masses = set
+                        .tenants
+                        .iter()
+                        .map(|t| {
+                            tenant::tenant_expert_mass(model, workload, t)
+                        })
+                        .collect();
+                    (
+                        arrivals,
+                        admission,
+                        Some(TenantBus::new(&set.slos())),
+                        masses,
+                    )
+                }
+                None => (
+                    ArrivalSource::new(
+                        workload,
+                        cfg.profile,
+                        cfg.horizon_s,
+                        cfg.seed,
+                    ),
+                    AdmissionController::new(
+                        cluster.num_servers(),
+                        cfg.queue_cap,
+                    ),
+                    None,
+                    Vec::new(),
+                ),
+            };
         Gateway {
-            arrivals: ArrivalSource::new(
-                workload,
-                cfg.profile,
-                cfg.horizon_s,
-                cfg.seed,
-            ),
-            admission: AdmissionController::new(
-                cluster.num_servers(),
-                cfg.queue_cap,
-            ),
+            arrivals,
+            admission,
             batcher: Batcher::new(
                 cluster.num_servers(),
                 &cfg.buckets,
@@ -242,6 +308,8 @@ impl Gateway {
             offered: 0,
             spilled: 0,
             completions_seen: 0,
+            tenant_bus,
+            tenant_masses,
             cfg,
         }
     }
@@ -322,7 +390,9 @@ impl Gateway {
         let home = req.server;
         // find the first preference with queue room. The pure locality
         // order is precomputed (allocation-free); the capacity-aware order
-        // depends on live queue depths, so it is built per arrival.
+        // depends on live queue depths, so it is built per arrival. The
+        // residual is the room in the queue *this request's tenant* would
+        // enter (for single-tenant runs that is the whole server queue).
         let placed: Option<(usize, usize)> = {
             let capacity_order: Vec<usize>;
             let order: &[usize] = if self.cfg.locality_routing {
@@ -331,9 +401,7 @@ impl Gateway {
                         .admission
                         .num_servers())
                         .map(|s| {
-                            self.cfg
-                                .queue_cap
-                                .saturating_sub(self.admission.depth(s))
+                            self.admission.tenant_residual(s, req.tenant)
                         })
                         .collect();
                     capacity_order =
@@ -362,7 +430,7 @@ impl Gateway {
                     self.spilled += 1;
                 }
             }
-            None => self.admission.record_shed(),
+            None => self.admission.record_shed_tenant(req.tenant),
         }
     }
 
@@ -397,7 +465,25 @@ impl Gateway {
     /// a migration adopted *this* tick (routes follow the staged layout a
     /// few virtual seconds before it applies, instead of chasing the old
     /// one for a whole interval) and one applied since the previous tick.
+    ///
+    /// With tenants, the tick first publishes each tenant's SLO window
+    /// (completions, violations, sheds, window p95) and hands the derived
+    /// pressures + expert boost to the coordinator, so this interval's
+    /// migration-adoption threshold and scale-out candidate scoring
+    /// already reflect which tenant's p95 target needs repair.
     fn interval_tick(&mut self, t: f64) {
+        if let Some(bus) = &mut self.tenant_bus {
+            let windows = bus
+                .collect(&self.engine.report, &self.admission.shed_by_tenant);
+            let pressures: Vec<f64> = windows
+                .iter()
+                .zip(bus.slos())
+                .map(|(w, &slo)| tenant::window_pressure(w, slo))
+                .collect();
+            let boost =
+                tenant::boost_from_masses(&self.tenant_masses, &pressures);
+            self.coordinator.note_tenant_pressure(pressures, boost);
+        }
         self.coordinator.on_interval(&mut self.engine, t);
         self.router.rebuild(self.engine.target_placement());
     }
@@ -429,6 +515,32 @@ impl Gateway {
             .iter()
             .filter(|e| e.applied && e.kind == crate::engine::ScaleKind::In)
             .count() as u64;
+        let tenants = match &self.cfg.tenants {
+            Some(set) => {
+                let (lat, violations) = serve.tenant_slices(&set.slos());
+                set.tenants
+                    .iter()
+                    .enumerate()
+                    .map(|(t, tc)| TenantReport {
+                        name: tc.name.clone(),
+                        weight: tc.weight,
+                        slo_s: tc.slo_s,
+                        // every arrival is either admitted or shed, so
+                        // the offered load is derived, not tracked
+                        offered: self.admission.admitted_by_tenant[t]
+                            + self.admission.shed_by_tenant[t],
+                        admitted: self.admission.admitted_by_tenant[t],
+                        shed: self.admission.shed_by_tenant[t],
+                        completed: lat[t].len() as u64,
+                        p50_s: crate::util::stats::percentile(&lat[t], 0.50),
+                        p95_s: crate::util::stats::percentile(&lat[t], 0.95),
+                        p99_s: crate::util::stats::percentile(&lat[t], 0.99),
+                        violations_completed: violations[t],
+                    })
+                    .collect()
+            }
+            None => Vec::new(),
+        };
         GatewayReport {
             offered: self.offered,
             admitted: self.admission.admitted,
@@ -442,6 +554,7 @@ impl Gateway {
             scale_outs,
             scale_ins,
             slo_s: self.cfg.slo_s,
+            tenants,
             serve,
         }
     }
@@ -550,6 +663,79 @@ mod tests {
         assert!(report.slo_violation_rate() > 0.0);
         // queues were actually bounded
         assert!(report.admitted < report.offered);
+    }
+
+    #[test]
+    fn multi_tenant_gateway_accounts_per_tenant() {
+        let (m, c, w) = small();
+        let mut gw = Gateway::new(
+            &m,
+            &c,
+            &w,
+            uniform::place(&m, &c),
+            GatewayConfig {
+                horizon_s: 240.0,
+                tenants: Some(TenantSet::pair()),
+                seed: 13,
+                ..GatewayConfig::default()
+            },
+            CoordinatorConfig {
+                interval_s: 30.0,
+                ..CoordinatorConfig::default()
+            },
+        );
+        let report = gw.run();
+        assert_eq!(report.tenants.len(), 2);
+        // the tenant slices partition the aggregate counters exactly
+        let off: u64 = report.tenants.iter().map(|t| t.offered).sum();
+        let adm: u64 = report.tenants.iter().map(|t| t.admitted).sum();
+        let shed: u64 = report.tenants.iter().map(|t| t.shed).sum();
+        assert_eq!(off, report.offered);
+        assert_eq!(adm, report.admitted);
+        assert_eq!(shed, report.shed);
+        for t in &report.tenants {
+            assert!(t.offered > 0, "{} offered nothing", t.name);
+            assert_eq!(t.offered, t.admitted + t.shed);
+            assert_eq!(t.completed, t.admitted, "admitted must complete");
+            let a = t.attainment();
+            assert!((0.0..=1.0).contains(&a), "attainment {a}");
+            assert!(t.p50_s <= t.p95_s && t.p95_s <= t.p99_s);
+        }
+        assert!(report.refreshes >= 1);
+    }
+
+    #[test]
+    fn shared_queue_baseline_runs_same_arrivals() {
+        let (m, c, w) = small();
+        let mk = |shared: bool| {
+            let mut gw = Gateway::new(
+                &m,
+                &c,
+                &w,
+                uniform::place(&m, &c),
+                GatewayConfig {
+                    horizon_s: 180.0,
+                    tenants: Some(TenantSet::pair()),
+                    shared_queue: shared,
+                    seed: 17,
+                    ..GatewayConfig::default()
+                },
+                CoordinatorConfig {
+                    interval_s: 30.0,
+                    migrate: false,
+                    ..CoordinatorConfig::default()
+                },
+            );
+            gw.run()
+        };
+        let weighted = mk(false);
+        let shared = mk(true);
+        // identical open-loop arrival stream on both sides
+        assert_eq!(weighted.offered, shared.offered);
+        assert_eq!(
+            weighted.tenants.iter().map(|t| t.offered).collect::<Vec<_>>(),
+            shared.tenants.iter().map(|t| t.offered).collect::<Vec<_>>(),
+        );
     }
 
     #[test]

@@ -138,6 +138,13 @@ impl LocalityRouter {
     /// replicas by available headroom instead of piling onto one queue.
     /// Out-of-band servers follow in score order. Ties break toward
     /// `home`, then the lower index. Always a permutation of all servers.
+    ///
+    /// `residual` is whatever queue headroom the caller routes against:
+    /// the whole server queue in single-tenant gateways, or the *routed
+    /// request's tenant queue* under multi-tenant admission
+    /// ([`crate::serve::admission::AdmissionController::tenant_residual`])
+    /// — so each tenant spills across the replica band by its own
+    /// remaining room, never by headroom another tenant owns.
     pub fn ranked_capacity(
         &self,
         task: TaskKind,

@@ -7,8 +7,15 @@
 //! token-weighted expert activations observed *in that window alone* —
 //! which the coordinator ingests into its decayed history. Placement
 //! refresh and migration then run entirely from online measurements.
+//!
+//! With multi-tenant serving the bus carries a second stream: the
+//! [`TenantBus`] snapshot-differences the gateway's cumulative completion
+//! records and per-tenant shed counters into per-interval
+//! [`TenantWindow`]s, from which the coordinator derives each tenant's
+//! SLO pressure (see [`crate::serve::tenant`]).
 
 use crate::config::ModelConfig;
+use crate::engine::ServeReport;
 use crate::moe::ActivationStats;
 
 /// One interval's activation observations.
@@ -78,10 +85,86 @@ impl StatsBus {
     }
 }
 
+/// One tenant's serving observations over a stats-bus window.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TenantWindow {
+    /// Requests of this tenant completed in the window.
+    pub completed: u64,
+    /// Of those, how many exceeded the tenant's SLO. Observability only:
+    /// the pressure signal ([`crate::serve::tenant::window_pressure`])
+    /// reads `p95_s` and `shed`, not this count.
+    pub violations: u64,
+    /// Requests of this tenant shed at admission in the window.
+    pub shed: u64,
+    /// p95 latency over the window's completions (0 when idle).
+    pub p95_s: f64,
+}
+
+/// Per-interval tenant accounting: snapshot-differences the cumulative
+/// completion records and per-tenant shed counters into windows, the same
+/// way [`StatsBus`] differences the activation table.
+#[derive(Debug, Clone)]
+pub struct TenantBus {
+    /// Per-tenant SLO targets (window violation threshold).
+    slos: Vec<f64>,
+    records_seen: usize,
+    shed_seen: Vec<u64>,
+}
+
+impl TenantBus {
+    pub fn new(slos: &[f64]) -> TenantBus {
+        TenantBus {
+            slos: slos.to_vec(),
+            records_seen: 0,
+            shed_seen: vec![0; slos.len()],
+        }
+    }
+
+    pub fn num_tenants(&self) -> usize {
+        self.slos.len()
+    }
+
+    /// The per-tenant SLO targets the windows are scored against — the
+    /// single source the gateway also derives its pressures from.
+    pub fn slos(&self) -> &[f64] {
+        &self.slos
+    }
+
+    /// Publish the per-tenant windows covering everything since the last
+    /// `collect`: new completion records in `report` plus the growth of
+    /// the cumulative `shed_by_tenant` counters. Grouping and violation
+    /// counting go through the canonical rule
+    /// ([`crate::engine::metrics::tenant_slices`]), applied to the
+    /// window's record slice.
+    pub fn collect(
+        &mut self,
+        report: &ServeReport,
+        shed_by_tenant: &[u64],
+    ) -> Vec<TenantWindow> {
+        let n = self.slos.len();
+        let mut wins = vec![TenantWindow::default(); n];
+        let (lat, violations) = crate::engine::metrics::tenant_slices(
+            &report.records[self.records_seen..],
+            &self.slos,
+        );
+        self.records_seen = report.records.len();
+        for t in 0..n {
+            wins[t].completed = lat[t].len() as u64;
+            wins[t].violations = violations[t];
+            wins[t].p95_s = crate::util::stats::percentile(&lat[t], 0.95);
+            let cum = shed_by_tenant.get(t).copied().unwrap_or(0);
+            wins[t].shed = cum.saturating_sub(self.shed_seen[t]);
+            self.shed_seen[t] = cum;
+        }
+        wins
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::config::ModelConfig;
+    use crate::engine::RequestRecord;
 
     #[test]
     fn deltas_partition_the_cumulative_stream() {
@@ -107,6 +190,48 @@ mod tests {
         // no new activity → empty delta
         let d3 = bus.collect(&cum, 180.0);
         assert_eq!(d3.tokens, 0.0);
+    }
+
+    fn push_rec(report: &mut ServeReport, id: usize, tenant: usize, lat: f64) {
+        report.push(RequestRecord {
+            id,
+            server: 0,
+            tenant,
+            arrival_s: 0.0,
+            done_s: lat,
+            latency_s: lat,
+            local_token_invocations: 0.0,
+            remote_token_invocations: 0.0,
+        });
+    }
+
+    #[test]
+    fn tenant_windows_partition_records_and_sheds() {
+        let mut report = ServeReport::new(1, 60.0);
+        let mut bus = TenantBus::new(&[2.0, 10.0]);
+        assert_eq!(bus.num_tenants(), 2);
+        push_rec(&mut report, 0, 0, 1.0);
+        push_rec(&mut report, 1, 0, 3.0);
+        push_rec(&mut report, 2, 1, 5.0);
+        let w = bus.collect(&report, &[1, 0]);
+        assert_eq!(w[0].completed, 2);
+        assert_eq!(w[0].violations, 1, "3.0s > 2.0s SLO");
+        assert_eq!(w[0].shed, 1);
+        assert_eq!(w[1].completed, 1);
+        assert_eq!(w[1].violations, 0);
+        assert_eq!(w[1].p95_s, 5.0);
+
+        // the second window sees only the increments
+        push_rec(&mut report, 3, 1, 20.0);
+        let w = bus.collect(&report, &[1, 4]);
+        assert_eq!(w[0], TenantWindow::default());
+        assert_eq!(w[1].completed, 1);
+        assert_eq!(w[1].violations, 1);
+        assert_eq!(w[1].shed, 4);
+
+        // an idle interval publishes empty windows
+        let w = bus.collect(&report, &[1, 4]);
+        assert!(w.iter().all(|x| *x == TenantWindow::default()));
     }
 
     #[test]

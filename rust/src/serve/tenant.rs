@@ -1,0 +1,484 @@
+//! Multi-tenant serving: tenant identities, per-tenant arrival / weight /
+//! SLO configuration, and the SLO-pressure signals that let the placement
+//! refresh and the replica autoscaler repair a *specific* tenant's p95.
+//!
+//! A tenant is a demand source sharing the cluster with others: it offers
+//! its own arrival process (its own [`ArrivalProfile`] over the workload's
+//! per-server streams), competes for dequeue bandwidth through the
+//! weighted-deficit admission policy
+//! ([`crate::serve::admission::AdmissionController`]), sheds at its own
+//! queue bound, and is held to its own latency SLO. Every interval the
+//! gateway turns each tenant's window of completions and sheds into a
+//! scalar **pressure** ([`window_pressure`]) — how far past its SLO the
+//! tenant is running — and an **expert boost** vector
+//! ([`boost_from_masses`]) that concentrates that pressure on the experts
+//! the violating tenant's tasks actually activate. The coordinator lowers
+//! its migration-adoption threshold under pressure and the autoscaler
+//! prefers boosted experts, so control actions are scored by which
+//! tenant's p95 target they repair (MoE²'s / CoMoE's multi-objective
+//! framing, made operational).
+
+use crate::config::{ClusterConfig, ModelConfig, TaskKind, WorkloadConfig};
+use crate::coordinator::CoordinatorConfig;
+use crate::placement::uniform;
+use crate::serve::arrival::ArrivalProfile;
+use crate::serve::statsbus::TenantWindow;
+use crate::serve::{Gateway, GatewayConfig, GatewayReport};
+use crate::trace::TaskProfile;
+use crate::util::json::Json;
+
+/// Index into a [`TenantSet`] (also the `tenant` tag on requests).
+pub type TenantId = usize;
+
+/// Ceiling on the per-expert boost factor so SLO pressure prioritizes
+/// without drowning the autoscaler's own load signal.
+pub const MAX_EXPERT_BOOST: f64 = 3.0;
+
+/// Ceiling on a single tenant's pressure (2.0 = "p95 at 3× its SLO");
+/// beyond that, more overshoot carries no extra urgency.
+pub const MAX_TENANT_PRESSURE: f64 = 2.0;
+
+/// One tenant's serving contract and demand shape.
+#[derive(Debug, Clone)]
+pub struct TenantConfig {
+    pub name: String,
+    /// Weighted-deficit dequeue weight (≥ 1): the tenant's share of each
+    /// server's admission bandwidth when every queue is backlogged.
+    pub weight: u64,
+    /// Latency SLO target in seconds (p95 of arrival→done).
+    pub slo_s: f64,
+    /// Fraction of each stream's base arrival rate this tenant offers
+    /// (before its profile's time modulation).
+    pub rate_share: f64,
+    /// Arrival profile modulating this tenant's streams.
+    pub profile: ArrivalProfile,
+    /// Per-(server, tenant) queue bound — the tenant's shed threshold.
+    /// A bursting tenant fills *its own* queues and sheds there instead of
+    /// crowding every other tenant out of a shared queue.
+    pub queue_cap: usize,
+    /// Pin every stream of this tenant to one task (so the tenant has a
+    /// distinct expert-activation signature); `None` keeps each stream's
+    /// own task.
+    pub task_override: Option<TaskKind>,
+}
+
+impl TenantConfig {
+    /// The distinct tasks this tenant's traffic draws from.
+    pub fn tasks(&self, workload: &WorkloadConfig) -> Vec<TaskKind> {
+        match self.task_override {
+            Some(t) => vec![t],
+            None => {
+                let mut out = Vec::new();
+                for s in &workload.streams {
+                    if !out.contains(&s.task) {
+                        out.push(s.task);
+                    }
+                }
+                out
+            }
+        }
+    }
+}
+
+/// The tenants sharing one gateway.
+#[derive(Debug, Clone)]
+pub struct TenantSet {
+    pub tenants: Vec<TenantConfig>,
+}
+
+impl TenantSet {
+    pub fn len(&self) -> usize {
+        self.tenants.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tenants.is_empty()
+    }
+
+    /// Admission weights, tenant-indexed.
+    pub fn weights(&self) -> Vec<u64> {
+        self.tenants.iter().map(|t| t.weight.max(1)).collect()
+    }
+
+    /// Per-tenant queue bounds, tenant-indexed.
+    pub fn caps(&self) -> Vec<usize> {
+        self.tenants.iter().map(|t| t.queue_cap.max(1)).collect()
+    }
+
+    /// Per-tenant SLO targets, tenant-indexed.
+    pub fn slos(&self) -> Vec<f64> {
+        self.tenants.iter().map(|t| t.slo_s).collect()
+    }
+
+    /// The bursty two-tenant preset the acceptance comparison runs on: an
+    /// *interactive* tenant (steady Poisson, tight SLO, weight 4) sharing
+    /// the cluster with a *batch* tenant whose flash crowds (10× rate for
+    /// a third of every period) would monopolize a shared queue.
+    pub fn pair() -> TenantSet {
+        TenantSet {
+            tenants: vec![
+                TenantConfig {
+                    name: "interactive".into(),
+                    weight: 4,
+                    slo_s: 6.0,
+                    rate_share: 0.6,
+                    profile: ArrivalProfile::Poisson,
+                    queue_cap: 32,
+                    task_override: None,
+                },
+                TenantConfig {
+                    name: "batch".into(),
+                    weight: 1,
+                    slo_s: 30.0,
+                    rate_share: 0.9,
+                    profile: ArrivalProfile::Bursty {
+                        factor: 10.0,
+                        burst_s: 40.0,
+                        period_s: 120.0,
+                    },
+                    queue_cap: 32,
+                    task_override: Some(TaskKind::Taco),
+                },
+            ],
+        }
+    }
+
+    /// Three tenants: the bursty pair plus a diurnal *background* tenant.
+    pub fn trio() -> TenantSet {
+        let mut set = Self::pair();
+        set.tenants.push(TenantConfig {
+            name: "background".into(),
+            weight: 2,
+            slo_s: 15.0,
+            rate_share: 0.3,
+            profile: ArrivalProfile::Diurnal {
+                amplitude: 0.8,
+                period_s: 300.0,
+            },
+            queue_cap: 16,
+            task_override: Some(TaskKind::WikiText),
+        });
+        set
+    }
+
+    /// Named presets for the CLI (`--tenants pair|trio`).
+    pub fn from_name(s: &str) -> Option<TenantSet> {
+        match s {
+            "pair" => Some(Self::pair()),
+            "trio" => Some(Self::trio()),
+            _ => None,
+        }
+    }
+}
+
+/// SLO pressure of one tenant's interval window: relative p95 overshoot
+/// plus the window's shed fraction, capped at [`MAX_TENANT_PRESSURE`].
+/// 0.0 = the tenant is inside its SLO (nothing to repair).
+pub fn window_pressure(w: &TenantWindow, slo_s: f64) -> f64 {
+    let mut p = 0.0;
+    if w.completed > 0 && slo_s > 0.0 {
+        p += (w.p95_s / slo_s - 1.0).max(0.0);
+    }
+    let offered = w.completed + w.shed;
+    if offered > 0 {
+        p += w.shed as f64 / offered as f64;
+    }
+    p.min(MAX_TENANT_PRESSURE)
+}
+
+/// Per-eid activation mass of one tenant's tasks (mean over its tasks, so
+/// every tenant's mass vector sums to `num_layers` regardless of how many
+/// tasks it spans). `mass[l·E + e] ∈ [0, 1]`.
+pub fn tenant_expert_mass(
+    model: &ModelConfig,
+    workload: &WorkloadConfig,
+    tenant: &TenantConfig,
+) -> Vec<f64> {
+    let tasks = tenant.tasks(workload);
+    let mut mass = vec![0.0; model.num_layers * model.num_experts];
+    if tasks.is_empty() {
+        return mass;
+    }
+    for task in &tasks {
+        let prof = TaskProfile::build(*task, model);
+        for (l, dist) in prof.dist.iter().enumerate() {
+            for (e, &f) in dist.iter().enumerate() {
+                mass[l * model.num_experts + e] += f / tasks.len() as f64;
+            }
+        }
+    }
+    mass
+}
+
+/// Fold per-tenant pressures over precomputed mass vectors into the
+/// per-eid boost the autoscaler consumes: `1 + Σ_t pressure_t · mass_t`,
+/// clamped to [`MAX_EXPERT_BOOST`]. All-pressure-zero ⇒ all-ones.
+pub fn boost_from_masses(
+    masses: &[Vec<f64>],
+    pressures: &[f64],
+) -> Vec<f64> {
+    let n = masses.first().map(|m| m.len()).unwrap_or(0);
+    let mut boost = vec![1.0; n];
+    for (mass, &p) in masses.iter().zip(pressures) {
+        if p <= 0.0 {
+            continue;
+        }
+        for (b, &m) in boost.iter_mut().zip(mass) {
+            *b += p * m;
+        }
+    }
+    for b in &mut boost {
+        *b = b.min(MAX_EXPERT_BOOST);
+    }
+    boost
+}
+
+/// Per-tenant slice of one gateway run (the `tenants` CLI table rows and
+/// the `BENCH_tenants.json` metrics).
+#[derive(Debug, Clone)]
+pub struct TenantReport {
+    pub name: String,
+    pub weight: u64,
+    pub slo_s: f64,
+    pub offered: u64,
+    pub admitted: u64,
+    pub shed: u64,
+    pub completed: u64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub p99_s: f64,
+    /// Completed requests over the tenant's SLO.
+    pub violations_completed: u64,
+}
+
+impl TenantReport {
+    /// SLO attainment over the tenant's offered load: completions within
+    /// the SLO / `offered`. Sheds (and anything admitted but never
+    /// completed) count against attainment — a request that was never
+    /// served did not meet its SLO. 1.0 when idle.
+    pub fn attainment(&self) -> f64 {
+        if self.offered == 0 {
+            1.0
+        } else {
+            (self.completed - self.violations_completed) as f64
+                / self.offered as f64
+        }
+    }
+}
+
+/// The canonical weighted-vs-shared comparison behind the acceptance
+/// criterion and `BENCH_tenants.json`: the [`TenantSet::pair`] preset on
+/// the trimmed 3-server edge testbed, identical open-loop arrivals on
+/// both sides, migration off so the measured gap is pure admission
+/// policy. Returns `(weighted, shared_baseline, tenants)`. Deterministic
+/// per (seed, horizon) — `tests/tenant_properties.rs` locks the derived
+/// metrics JSON byte for byte.
+pub fn bursty_comparison(
+    seed: u64,
+    horizon_s: f64,
+) -> (GatewayReport, GatewayReport, TenantSet) {
+    let mut model = ModelConfig::mixtral_8x7b_sim();
+    model.num_layers = 4;
+    let cluster = ClusterConfig::edge_testbed_3_for(&model);
+    // 1.25 base req/s per stream: comfortably served off-burst, deeply
+    // overloaded while the batch tenant's 10× bursts run — the regime
+    // where queue policy decides who pays
+    let workload = WorkloadConfig::bigbench(0.8);
+    let tenants = TenantSet::pair();
+    let run = |shared: bool| {
+        let mut gw = Gateway::new(
+            &model,
+            &cluster,
+            &workload,
+            uniform::place(&model, &cluster),
+            GatewayConfig {
+                horizon_s,
+                tenants: Some(tenants.clone()),
+                shared_queue: shared,
+                seed,
+                ..GatewayConfig::default()
+            },
+            CoordinatorConfig {
+                interval_s: 30.0,
+                migrate: false,
+                seed,
+                ..CoordinatorConfig::default()
+            },
+        );
+        gw.run()
+    };
+    (run(false), run(true), tenants)
+}
+
+/// Deterministic per-tenant metrics object for `BENCH_tenants.json`:
+/// `{mode}_{tenant}_{stat}` keys for both runs plus the constrained
+/// (first) tenant's p95 delta. Contains no wall-clock quantities, so the
+/// same (seed, horizon) serializes byte-identically across runs.
+pub fn comparison_metrics(
+    weighted: &GatewayReport,
+    shared: &GatewayReport,
+) -> Json {
+    let mut j = Json::obj();
+    for (mode, report) in [("weighted", weighted), ("shared", shared)] {
+        for t in &report.tenants {
+            let base = format!("{mode}_{}", t.name);
+            j.set(&format!("{base}_offered"), Json::Num(t.offered as f64));
+            j.set(&format!("{base}_shed"), Json::Num(t.shed as f64));
+            j.set(&format!("{base}_p50_s"), Json::Num(t.p50_s));
+            j.set(&format!("{base}_p95_s"), Json::Num(t.p95_s));
+            j.set(&format!("{base}_p99_s"), Json::Num(t.p99_s));
+            j.set(
+                &format!("{base}_slo_attainment"),
+                Json::Num(t.attainment()),
+            );
+        }
+    }
+    if let (Some(w0), Some(s0)) =
+        (weighted.tenants.first(), shared.tenants.first())
+    {
+        j.set(
+            "constrained_p95_improvement_s",
+            Json::Num(s0.p95_s - w0.p95_s),
+        );
+    }
+    j
+}
+
+/// The complete `BENCH_tenants.json` document: suite name + the
+/// deterministic metrics, and deliberately **no wall-clock timing block**
+/// — so the file is byte-identical across runs at the same (seed,
+/// horizon) and CI artifact diffs show only real serving changes. The
+/// replay regression test byte-compares exactly this document.
+pub fn bench_file_json(
+    weighted: &GatewayReport,
+    shared: &GatewayReport,
+) -> Json {
+    Json::from_pairs(vec![
+        ("suite", Json::Str("tenants".into())),
+        ("metrics", comparison_metrics(weighted, shared)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+
+    #[test]
+    fn presets_are_well_formed() {
+        for set in [TenantSet::pair(), TenantSet::trio()] {
+            assert!(!set.is_empty());
+            assert_eq!(set.weights().len(), set.len());
+            assert!(set.weights().iter().all(|&w| w >= 1));
+            assert!(set.caps().iter().all(|&c| c >= 1));
+            assert!(set.slos().iter().all(|&s| s > 0.0));
+            assert!(set
+                .tenants
+                .iter()
+                .all(|t| t.rate_share > 0.0 && t.rate_share <= 1.0));
+        }
+        assert_eq!(TenantSet::from_name("pair").unwrap().len(), 2);
+        assert_eq!(TenantSet::from_name("trio").unwrap().len(), 3);
+        assert!(TenantSet::from_name("quartet").is_none());
+    }
+
+    #[test]
+    fn pressure_zero_inside_slo_and_grows_with_overshoot() {
+        let ok = TenantWindow {
+            completed: 50,
+            violations: 0,
+            shed: 0,
+            p95_s: 1.0,
+        };
+        assert_eq!(window_pressure(&ok, 6.0), 0.0);
+        let hot = TenantWindow {
+            completed: 50,
+            violations: 30,
+            shed: 0,
+            p95_s: 9.0,
+        };
+        assert!((window_pressure(&hot, 6.0) - 0.5).abs() < 1e-12);
+        let shedding = TenantWindow {
+            completed: 30,
+            violations: 0,
+            shed: 10,
+            p95_s: 1.0,
+        };
+        assert!((window_pressure(&shedding, 6.0) - 0.25).abs() < 1e-12);
+        // capped: an absurd overshoot saturates
+        let melt = TenantWindow {
+            completed: 10,
+            violations: 10,
+            shed: 90,
+            p95_s: 1e6,
+        };
+        assert_eq!(window_pressure(&melt, 1.0), MAX_TENANT_PRESSURE);
+        // idle window exerts no pressure
+        let idle = TenantWindow::default();
+        assert_eq!(window_pressure(&idle, 6.0), 0.0);
+    }
+
+    #[test]
+    fn masses_and_boost_concentrate_on_tenant_tasks() {
+        let mut m = ModelConfig::mixtral_8x7b_sim();
+        m.num_layers = 4;
+        let w = crate::config::WorkloadConfig::bigbench(1.0);
+        let set = TenantSet::pair();
+        let masses: Vec<Vec<f64>> = set
+            .tenants
+            .iter()
+            .map(|t| tenant_expert_mass(&m, &w, t))
+            .collect();
+        for mass in &masses {
+            assert_eq!(mass.len(), m.num_layers * m.num_experts);
+            let sum: f64 = mass.iter().sum();
+            assert!(
+                (sum - m.num_layers as f64).abs() < 1e-6,
+                "mass sums to num_layers, got {sum}"
+            );
+        }
+        // no pressure ⇒ neutral boost
+        let flat = boost_from_masses(&masses, &[0.0, 0.0]);
+        assert!(flat.iter().all(|&b| b == 1.0));
+        // pressure on tenant 0 boosts its hottest expert the most
+        let boost = boost_from_masses(&masses, &[1.0, 0.0]);
+        assert!(boost.iter().all(|&b| (1.0..=MAX_EXPERT_BOOST).contains(&b)));
+        let hot = masses[0]
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap();
+        let max_boost =
+            boost.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        assert_eq!(boost[hot], max_boost);
+        assert!(boost[hot] > 1.0);
+    }
+
+    #[test]
+    fn attainment_counts_sheds_against() {
+        let r = TenantReport {
+            name: "t".into(),
+            weight: 1,
+            slo_s: 5.0,
+            offered: 100,
+            admitted: 80,
+            shed: 20,
+            completed: 80,
+            p50_s: 1.0,
+            p95_s: 2.0,
+            p99_s: 3.0,
+            violations_completed: 10,
+        };
+        assert!((r.attainment() - 0.7).abs() < 1e-12);
+        let idle = TenantReport {
+            offered: 0,
+            admitted: 0,
+            shed: 0,
+            completed: 0,
+            violations_completed: 0,
+            ..r
+        };
+        assert_eq!(idle.attainment(), 1.0);
+    }
+}

@@ -36,6 +36,10 @@ pub struct Request {
     pub prompt_tokens: usize,
     pub output_tokens: usize,
     pub task: TaskKind,
+    /// Tenant this request belongs to (0 in single-tenant workloads) —
+    /// the admission layer keys its per-tenant queues and SLO accounting
+    /// off this tag ([`crate::serve::tenant`]).
+    pub tenant: usize,
 }
 
 /// A generated workload trace, sorted by arrival time.
@@ -101,6 +105,7 @@ impl Trace {
                         ("prompt_tokens", Json::Num(r.prompt_tokens as f64)),
                         ("output_tokens", Json::Num(r.output_tokens as f64)),
                         ("task", Json::Str(r.task.name().into())),
+                        ("tenant", Json::Num(r.tenant as f64)),
                     ])
                 })
                 .collect(),
@@ -119,6 +124,11 @@ impl Trace {
                 task: TaskKind::from_name(
                     r.req("task")?.as_str().unwrap_or(""),
                 )?,
+                // absent in pre-multi-tenant traces: default to tenant 0
+                tenant: r
+                    .get("tenant")
+                    .and_then(|t| t.as_usize())
+                    .unwrap_or(0),
             });
         }
         Ok(Trace { requests })
@@ -176,6 +186,7 @@ impl TraceGenerator {
                 prompt_tokens: prompt,
                 output_tokens: stream.output_tokens,
                 task: stream.task,
+                tenant: 0,
             });
             if count.is_none() && horizon_s.is_none() {
                 break; // safety: never loop unboundedly

@@ -7,10 +7,29 @@
 use dancemoe::autoscale::AutoscaleConfig;
 use dancemoe::config::{ClusterConfig, ModelConfig, WorkloadConfig};
 use dancemoe::coordinator::CoordinatorConfig;
-use dancemoe::engine::ScaleKind;
+use dancemoe::engine::{CostModel, Engine, EngineConfig, ScaleKind};
 use dancemoe::placement::{uniform, MemoryLedger};
 use dancemoe::serve::{ArrivalProfile, Gateway, GatewayConfig};
 use dancemoe::util::prop;
+
+// ---- the one timing vocabulary every test below speaks -----------------
+// The control interval, burst shape and drain window interlock: the
+// hysteresis band is tuned for CONTROL_INTERVAL_S-spaced observations of
+// BURST_S-long bursts, and drains must finish well inside a burst period
+// so scale-ins land before the next burst. Keeping them named (instead of
+// the magic 15.0/30.0/120.0/5.0 literals the assertions used to repeat)
+// makes that coupling explicit and retunable in one place.
+
+/// Coordinator control interval the EWMA band below is tuned for.
+const CONTROL_INTERVAL_S: f64 = 15.0;
+/// Burst length of the bursty arrival profile.
+const BURST_S: f64 = 30.0;
+/// Burst period of the bursty arrival profile.
+const BURST_PERIOD_S: f64 = 120.0;
+/// Rate multiplier during bursts.
+const BURST_FACTOR: f64 = 4.0;
+/// Drain window before a scaled-in replica is evicted (≪ BURST_PERIOD_S).
+const DRAIN_S: f64 = 5.0;
 
 /// Trimmed Mixtral topology with proportionally tight GPU memory: enough
 /// for full coverage plus ~30 % replication slack, so replica decisions
@@ -31,19 +50,19 @@ fn small_tight() -> (ModelConfig, ClusterConfig, WorkloadConfig) {
 
 fn bursty() -> ArrivalProfile {
     ArrivalProfile::Bursty {
-        factor: 4.0,
-        burst_s: 30.0,
-        period_s: 120.0,
+        factor: BURST_FACTOR,
+        burst_s: BURST_S,
+        period_s: BURST_PERIOD_S,
     }
 }
 
 fn autoscale_cfg() -> AutoscaleConfig {
     AutoscaleConfig {
-        // band tuned for 15 s control intervals against 30 s bursts
+        // band tuned for CONTROL_INTERVAL_S observations of BURST_S bursts
         hi_ratio: 1.2,
         lo_ratio: 0.85,
         min_load_tps: 20.0,
-        drain_s: 5.0,
+        drain_s: DRAIN_S,
         cooldown_intervals: 1,
         ..AutoscaleConfig::default()
     }
@@ -68,7 +87,7 @@ fn bursts_scale_out_troughs_scale_in_and_p95_beats_fixed() {
         initial.clone(),
         gcfg.clone(),
         CoordinatorConfig {
-            interval_s: 15.0,
+            interval_s: CONTROL_INTERVAL_S,
             seed: 41,
             autoscale: Some(autoscale_cfg()),
             ..CoordinatorConfig::default()
@@ -130,7 +149,7 @@ fn bursts_scale_out_troughs_scale_in_and_p95_beats_fixed() {
         initial,
         gcfg,
         CoordinatorConfig {
-            interval_s: 15.0,
+            interval_s: CONTROL_INTERVAL_S,
             migrate: false,
             seed: 41,
             ..CoordinatorConfig::default()
@@ -166,7 +185,7 @@ fn concurrent_migration_and_scale_out_respect_memory() {
             ..GatewayConfig::default()
         },
         CoordinatorConfig {
-            interval_s: 15.0,
+            interval_s: CONTROL_INTERVAL_S,
             seed: 43,
             autoscale: Some(AutoscaleConfig {
                 // aggressive: fire as often as possible to stress the ledger
@@ -271,6 +290,57 @@ fn prop_drained_replicas_never_routable() {
         }
         p.validate().unwrap();
     });
+}
+
+#[test]
+fn scale_in_during_drain_is_rejected() {
+    // The previously-missing rejection case: once a replica is draining,
+    // a second ScaleIn for the same replica must be refused (not
+    // double-counted in the in-flight ledger), and the sole remaining
+    // active replica must be undrainable for the whole drain window.
+    let (m, c, _) = small_tight();
+    let mut engine = Engine::new(
+        &m,
+        &c,
+        uniform::place(&m, &c),
+        EngineConfig::default(),
+        CostModel::default(),
+    );
+    let (l, e) = (0, 0);
+    let src = engine.placement.owners_ref(l, e)[0].0;
+    let dst = (0..3)
+        .find(|&s| !engine.placement.server_holds(s, l, e))
+        .unwrap();
+    let at = engine.schedule_scale_out(l, e, dst, 0, src).unwrap();
+    engine.run_until(at + 1.0);
+    assert!(engine.placement.gpu_has(dst, 0, l, e), "copy landed");
+    assert_eq!(engine.scale_ops_in_flight(), 0);
+
+    let drain_done = engine.schedule_scale_in(l, e, dst, 0, DRAIN_S).unwrap();
+    assert!(drain_done >= at, "drain completes in the future");
+    assert_eq!(engine.scale_ops_in_flight(), 1);
+
+    // same replica again: rejected, and the in-flight count is unchanged
+    assert!(engine.schedule_scale_in(l, e, dst, 0, DRAIN_S).is_err());
+    assert_eq!(engine.scale_ops_in_flight(), 1);
+
+    // the drain removed (dst, 0) from the owner set, so every remaining
+    // owner is the last active replica — undrainable
+    let owners = engine.placement.owners(l, e);
+    assert!(!owners.contains(&(dst, 0)));
+    for &(s, g) in &owners {
+        assert!(
+            engine.schedule_scale_in(l, e, s, g, DRAIN_S).is_err(),
+            "last active replica must be undrainable"
+        );
+    }
+    assert_eq!(engine.scale_ops_in_flight(), 1, "rejections count nothing");
+
+    // the drain window elapses: the replica is evicted, accounting closes
+    engine.run_until(drain_done + 1.0);
+    assert_eq!(engine.scale_ops_in_flight(), 0);
+    assert!(!engine.placement.gpu_has(dst, 0, l, e), "evicted");
+    engine.placement.validate().unwrap();
 }
 
 #[test]

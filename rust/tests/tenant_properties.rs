@@ -1,0 +1,201 @@
+//! Property/invariant suite for the multi-tenant serve stack.
+//!
+//! Locks the three contracts of the weighted-deficit admission policy —
+//! work conservation, weight-proportional dequeue shares over long
+//! backlogged horizons, and starvation-freedom of a weight-1 tenant under
+//! a hostile heavy tenant — plus the deterministic-replay regression for
+//! `BENCH_tenants.json` (same seed + config ⇒ byte-identical metrics
+//! across two runs, guarding the event loop against nondeterministic
+//! iteration order) and the acceptance comparison: on the bursty preset
+//! the weighted gateway improves the constrained tenant's p95 over the
+//! shared-queue baseline. Everything here is deterministic and
+//! single-threaded per test, so it passes under any `--test-threads`
+//! setting (both CI matrix configurations).
+
+use dancemoe::config::TaskKind;
+use dancemoe::serve::tenant::{bench_file_json, bursty_comparison};
+use dancemoe::serve::AdmissionController;
+use dancemoe::trace::Request;
+use dancemoe::util::prop;
+
+fn treq(id: usize, tenant: usize) -> Request {
+    Request {
+        id,
+        server: 0,
+        arrival_s: id as f64,
+        prompt_tokens: 16,
+        output_tokens: 4,
+        task: TaskKind::Arithmetic,
+        tenant,
+    }
+}
+
+#[test]
+fn prop_work_conservation() {
+    // No server idles while any tenant queue holds work: every pop
+    // returns exactly min(n, queued-at-server), whatever mix of tenants,
+    // weights and interleavings produced the backlog.
+    prop::check("pop returns min(n, queued)", 120, |g| {
+        let nt = g.usize_in(1, 4);
+        let caps: Vec<usize> = (0..nt).map(|_| g.usize_in(1, 24)).collect();
+        let weights: Vec<u64> =
+            (0..nt).map(|_| g.usize_in(1, 8) as u64).collect();
+        let mut adm = AdmissionController::with_tenants(1, &caps, &weights);
+        let mut id = 0;
+        let mut queued = 0usize;
+        for _ in 0..g.usize_in(1, 120) {
+            if g.bool() {
+                let t = g.usize_in(0, nt - 1);
+                if adm.offer(0, treq(id, t), 0.0) {
+                    queued += 1;
+                }
+                id += 1;
+            } else {
+                let n = g.usize_in(0, 12);
+                let popped = adm.pop(0, n);
+                prop::assert_prop(
+                    popped.len() == n.min(queued),
+                    "work conservation: pop must drain min(n, queued)",
+                );
+                queued -= popped.len();
+            }
+            prop::assert_prop(
+                adm.depth(0) == queued,
+                "depth accounting must track offers and pops",
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_weight_proportional_shares() {
+    // With every tenant queue kept backlogged, long-horizon dequeue
+    // shares converge to weight / Σ weights regardless of pop sizing.
+    prop::check("backlogged shares follow weights", 40, |g| {
+        let nt = g.usize_in(2, 3);
+        let weights: Vec<u64> =
+            (0..nt).map(|_| g.usize_in(1, 6) as u64).collect();
+        let caps = vec![64usize; nt];
+        let mut adm = AdmissionController::with_tenants(1, &caps, &weights);
+        let mut id = 0;
+        let mut served = vec![0u64; nt];
+        for _ in 0..200 {
+            for t in 0..nt {
+                while adm.tenant_depth(0, t) < 32 {
+                    assert!(adm.offer(0, treq(id, t), 0.0));
+                    id += 1;
+                }
+            }
+            for q in adm.pop(0, g.usize_in(1, 8)) {
+                served[q.req.tenant] += 1;
+            }
+        }
+        let total: u64 = served.iter().sum();
+        let total_w: u64 = weights.iter().sum();
+        for t in 0..nt {
+            let share = served[t] as f64 / total as f64;
+            let expect = weights[t] as f64 / total_w as f64;
+            prop::assert_prop(
+                (share - expect).abs() < 0.05,
+                "long-horizon share must track the weight proportion",
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_hostile_heavy_tenant_cannot_starve_weight_one() {
+    // A heavy tenant that refills its queue to the bound before every
+    // dequeue can delay a weight-1 tenant by at most its own quantum:
+    // the light tenant is served at least once per DRR cycle.
+    prop::check("weight-1 tenant served every cycle", 40, |g| {
+        let heavy_w = g.usize_in(1, 16) as u64;
+        let mut adm =
+            AdmissionController::with_tenants(1, &[64, 64], &[heavy_w, 1]);
+        let mut id = 0;
+        for _ in 0..16 {
+            assert!(adm.offer(0, treq(id, 1), 0.0));
+            id += 1;
+        }
+        let mut light_served = 0u64;
+        let mut since_light = 0u64;
+        let mut guard = 0u64;
+        while light_served < 16 {
+            // hostile: the heavy tenant is always backlogged to its bound
+            while adm.tenant_depth(0, 0) < 64 {
+                assert!(adm.offer(0, treq(id, 0), 0.0));
+                id += 1;
+            }
+            for q in adm.pop(0, 1) {
+                if q.req.tenant == 1 {
+                    light_served += 1;
+                    since_light = 0;
+                } else {
+                    since_light += 1;
+                    prop::assert_prop(
+                        since_light <= heavy_w,
+                        "heavy tenant ran past its quantum — starvation",
+                    );
+                }
+            }
+            guard += 1;
+            prop::assert_prop(
+                guard <= 16 * (heavy_w + 2),
+                "light tenant not served within its cycle bound",
+            );
+        }
+    });
+}
+
+#[test]
+fn bench_metrics_byte_identical_across_runs() {
+    // The deterministic-replay regression: same seed + config must yield
+    // a byte-identical BENCH_tenants.json metrics object on a re-run —
+    // any HashMap-ordered iteration sneaking into the event loop or the
+    // report path breaks this immediately.
+    let (w1, s1, _) = bursty_comparison(11, 240.0);
+    let (w2, s2, _) = bursty_comparison(11, 240.0);
+    let m1 = bench_file_json(&w1, &s1);
+    let m2 = bench_file_json(&w2, &s2);
+    assert_eq!(
+        m1.pretty(),
+        m2.pretty(),
+        "metrics must serialize identically for identical (seed, config)"
+    );
+    let dir = std::env::temp_dir();
+    let p1 = dir.join("dancemoe_tenants_replay_a.json");
+    let p2 = dir.join("dancemoe_tenants_replay_b.json");
+    m1.write_file(&p1).unwrap();
+    m2.write_file(&p2).unwrap();
+    assert_eq!(
+        std::fs::read(&p1).unwrap(),
+        std::fs::read(&p2).unwrap(),
+        "the written BENCH_tenants document must be byte-identical"
+    );
+    let _ = std::fs::remove_file(&p1);
+    let _ = std::fs::remove_file(&p2);
+
+    // ---- acceptance comparison on the same runs -------------------------
+    // Weighted admission must repair the constrained (interactive)
+    // tenant's p95 relative to the shared-queue baseline under the batch
+    // tenant's bursts...
+    let (wi, si) = (&w1.tenants[0], &s1.tenants[0]);
+    assert!(wi.completed > 0 && si.completed > 0);
+    assert!(
+        wi.p95_s < si.p95_s,
+        "weighted admission must improve the constrained tenant's p95 \
+         (weighted {:.3}s vs shared {:.3}s)",
+        wi.p95_s,
+        si.p95_s
+    );
+    // ...while the heavy tenant still makes progress (no starvation end
+    // to end), and per-tenant accounting stays conservation-clean.
+    assert!(w1.tenants[1].completed > 0, "batch tenant starved");
+    for rep in [&w1, &s1] {
+        let off: u64 = rep.tenants.iter().map(|t| t.offered).sum();
+        assert_eq!(off, rep.offered);
+        for t in &rep.tenants {
+            assert_eq!(t.offered, t.admitted + t.shed);
+        }
+    }
+}
