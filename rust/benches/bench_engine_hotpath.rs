@@ -1,24 +1,52 @@
-//! Micro-benchmarks of the serving engine's hot path: event throughput,
-//! routing sampling, and the end-to-end events/second of a full run.
-//! Target (DESIGN.md §Perf): ≥ 1 M events/s end-to-end.
+//! Engine hot-path benchmark: baseline vs optimized, in one binary.
+//!
+//! The baseline is the frozen pre-overhaul engine
+//! (`dancemoe::engine::reference`), so `BENCH_hotpath.json` records the
+//! before/after events-per-second — and their ratio — as measured on the
+//! machine that ran the bench, not numbers copied between environments.
+//! The two engines are also asserted byte-identical on the benchmarked
+//! trace before any timing is reported, so a bench run can never publish
+//! a speedup for an engine that drifted.
+//!
+//! Targets (ROADMAP §perf): ≥ 1 M events/s end-to-end on the full-run
+//! case; CI fails if events/s drops below the committed floor
+//! (`FLOOR_EVENTS_PER_S`, also recorded in the JSON).
 
 use dancemoe::config::{ClusterConfig, ModelConfig, TaskKind, WorkloadConfig};
+use dancemoe::engine::reference::{ref_sample_batch, RefEngine};
 use dancemoe::engine::{warm_stats, CostModel, Engine, EngineConfig};
 use dancemoe::placement::PlacementAlgo;
 use dancemoe::trace::{TaskProfile, TraceGenerator};
 use dancemoe::util::bench::Bencher;
+use dancemoe::util::json::Json;
 use dancemoe::util::rng::Rng;
+
+/// Committed regression floor for the end-to-end optimized engine
+/// (events/s). CI fails below this. Deliberately set well under the
+/// 1 M events/s target so shared-runner noise cannot flake the job while
+/// a real regression (an order of magnitude is at stake) still trips it.
+const FLOOR_EVENTS_PER_S: f64 = 500_000.0;
 
 fn main() {
     let mut b = Bencher::new("engine-hotpath");
 
-    // ---- routing sampling --------------------------------------------
+    // ---- routing draws: reference (alloc + triple pass) vs fused scan ---
     let ds = ModelConfig::deepseek_v2_lite_sim();
     let prof = TaskProfile::build(TaskKind::MmluPro, &ds);
     let mut rng = Rng::new(1);
-    b.bench("sample_batch exact (1 token, top-8, E=64)", || {
-        Bencher::black_box(prof.sample_batch(&mut rng, 0, 1, 8));
-    });
+    let ref_draw = b
+        .bench("draws: reference scan (1 tok, top-8, E=64)", || {
+            Bencher::black_box(ref_sample_batch(&prof, &mut rng, 0, 1, 8));
+        })
+        .clone();
+    let mut rng = Rng::new(1);
+    let mut scratch = dancemoe::trace::GateScratch::default();
+    let opt_draw = b
+        .bench("draws: fused zero-alloc scan (1 tok, top-8, E=64)", || {
+            prof.sample_batch_into(&mut rng, 0, 1, 8, &mut scratch);
+            Bencher::black_box(scratch.counts.len());
+        })
+        .clone();
     b.bench("sample_batch_fast (128 tokens, top-8, E=64)", || {
         Bencher::black_box(prof.sample_batch_fast(&mut rng, 0, 128, 8));
     });
@@ -28,16 +56,18 @@ fn main() {
     let stats = warm_stats(&ds, &WorkloadConfig::bigbench(10.0));
     let p = PlacementAlgo::DanceMoE.compute(&ds, &cluster, &stats, 1);
     let mut i = 0usize;
-    b.bench("placement server_has lookup", || {
+    let lookup = b
+        .bench("placement server_has lookup (bitset)", || {
+            i = (i + 7) % (26 * 64);
+            Bencher::black_box(p.server_has(i % 3, i / 64 % 26, i % 64));
+        })
+        .clone();
+    b.bench("placement owners_ref lookup", || {
         i = (i + 7) % (26 * 64);
-        Bencher::black_box(p.server_has(i % 3, i / 64 % 26, i % 64));
-    });
-    b.bench("placement owners lookup", || {
-        i = (i + 7) % (26 * 64);
-        Bencher::black_box(p.owners(i / 64 % 26, i % 64));
+        Bencher::black_box(p.owners_ref(i / 64 % 26, i % 64).len());
     });
 
-    // ---- end-to-end events/s ------------------------------------------
+    // ---- end-to-end events/s: frozen baseline vs optimized --------------
     let mut m = ModelConfig::mixtral_8x7b_sim();
     m.num_layers = 8;
     let c = ClusterConfig::edge_testbed_3_for(&m);
@@ -45,16 +75,53 @@ fn main() {
     let st = warm_stats(&m, &w);
     let pl = PlacementAlgo::DanceMoE.compute(&m, &c, &st, 1);
     let trace = TraceGenerator::new(&m, &w, 1).gen_count(40);
-    let res = b
-        .bench("engine full run (40 req/server × 8 layers)", || {
-            let mut eng = Engine::new(
+    let cfg = EngineConfig {
+        seed: 1,
+        ..EngineConfig::default()
+    };
+
+    // equivalence gate: never report a speedup over a drifted engine
+    let (events, slab_hw, ref_store) = {
+        let mut reference =
+            RefEngine::new(&m, &c, pl.clone(), cfg.clone(), CostModel::default());
+        reference.push_trace(&trace);
+        reference.run();
+        let mut optimized =
+            Engine::new(&m, &c, pl.clone(), cfg.clone(), CostModel::default());
+        optimized.push_trace(&trace);
+        optimized.run();
+        assert_eq!(
+            reference.events_processed(),
+            optimized.events_processed(),
+            "event streams diverged — fix determinism before benching"
+        );
+        assert_eq!(reference.report.records.len(), optimized.report.records.len());
+        for (a, x) in reference
+            .report
+            .records
+            .iter()
+            .zip(&optimized.report.records)
+        {
+            assert_eq!(
+                a.latency_s.to_bits(),
+                x.latency_s.to_bits(),
+                "latencies diverged — fix determinism before benching"
+            );
+        }
+        (
+            optimized.events_processed() as f64,
+            optimized.event_slab_high_water(),
+            reference.event_store_len(),
+        )
+    };
+
+    let base = b
+        .bench("engine full run — baseline (frozen reference)", || {
+            let mut eng = RefEngine::new(
                 &m,
                 &c,
                 pl.clone(),
-                EngineConfig {
-                    seed: 1,
-                    ..EngineConfig::default()
-                },
+                cfg.clone(),
                 CostModel::default(),
             );
             eng.push_trace(&trace);
@@ -62,23 +129,66 @@ fn main() {
             Bencher::black_box(eng.events_processed());
         })
         .clone();
-    // report implied event throughput
-    let mut eng = Engine::new(
-        &m,
-        &c,
-        pl.clone(),
-        EngineConfig {
-            seed: 1,
-            ..EngineConfig::default()
-        },
-        CostModel::default(),
-    );
-    eng.push_trace(&trace);
-    eng.run();
-    let events = eng.events_processed() as f64;
+    let opt = b
+        .bench("engine full run — optimized", || {
+            let mut eng = Engine::new(
+                &m,
+                &c,
+                pl.clone(),
+                cfg.clone(),
+                CostModel::default(),
+            );
+            eng.push_trace(&trace);
+            eng.run();
+            Bencher::black_box(eng.events_processed());
+        })
+        .clone();
+
+    let base_eps = base.throughput(events);
+    let opt_eps = opt.throughput(events);
+    let speedup = if base.mean_ns > 0.0 {
+        base.mean_ns / opt.mean_ns
+    } else {
+        0.0
+    };
     println!(
-        "  -> {:.2} M events/s ({} events per run)",
-        res.throughput(events) / 1e6,
+        "  -> baseline {:.2} M events/s, optimized {:.2} M events/s \
+         ({speedup:.2}x, {} events per run)",
+        base_eps / 1e6,
+        opt_eps / 1e6,
         events as u64
     );
+    println!(
+        "  -> event storage: slab high-water {slab_hw} slots vs \
+         grow-only {ref_store} (x{:.1} smaller)",
+        ref_store as f64 / slab_hw.max(1) as f64
+    );
+
+    let metrics = Json::from_pairs(vec![
+        ("events_per_s", Json::Num(opt_eps)),
+        ("baseline_events_per_s", Json::Num(base_eps)),
+        ("speedup", Json::Num(speedup)),
+        ("events_per_run", Json::Num(events)),
+        ("ns_per_draw_reference", Json::Num(ref_draw.mean_ns)),
+        ("ns_per_draw_optimized", Json::Num(opt_draw.mean_ns)),
+        ("ns_per_lookup", Json::Num(lookup.mean_ns)),
+        ("event_slab_high_water", Json::Num(slab_hw as f64)),
+        ("reference_event_store", Json::Num(ref_store as f64)),
+        ("floor_events_per_s", Json::Num(FLOOR_EVENTS_PER_S)),
+        ("target_events_per_s", Json::Num(1_000_000.0)),
+    ]);
+    let out = std::path::Path::new("BENCH_hotpath.json");
+    b.write_json(out, metrics).expect("write BENCH_hotpath.json");
+    println!(
+        "  wrote {} (optimized {:.0} events/s, floor {:.0})",
+        out.display(),
+        opt_eps,
+        FLOOR_EVENTS_PER_S
+    );
+    if opt_eps < FLOOR_EVENTS_PER_S {
+        eprintln!(
+            "PERF FLOOR VIOLATION: {opt_eps:.0} events/s < {FLOOR_EVENTS_PER_S:.0}"
+        );
+        std::process::exit(1);
+    }
 }

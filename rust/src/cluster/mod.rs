@@ -95,6 +95,24 @@ pub struct ServerState {
     pub gpus: Vec<GpuState>,
     /// per-GPU expert cache, only used in offload mode
     pub caches: Vec<ExpertCache>,
+    /// Cached first-argmin over `gpus[*].busy_until`, maintained by
+    /// [`Cluster::book`] so [`Cluster::earliest_gpu`] — called once per
+    /// layer pass per request — is O(1) instead of a linear scan.
+    earliest: usize,
+}
+
+impl ServerState {
+    /// First GPU index achieving the minimum `busy_until` (the same
+    /// tie-break `Iterator::min_by` used before the cache existed).
+    fn recompute_earliest(&mut self) {
+        let mut best = 0usize;
+        for (i, g) in self.gpus.iter().enumerate().skip(1) {
+            if g.busy_until < self.gpus[best].busy_until {
+                best = i;
+            }
+        }
+        self.earliest = best;
+    }
 }
 
 /// Dynamic state for the whole cluster.
@@ -130,22 +148,38 @@ impl Cluster {
                             )
                         })
                         .collect(),
+                    earliest: 0,
                 })
                 .collect(),
         }
     }
 
-    /// GPU on `server` that frees up first.
+    /// Book a compute task on (server, gpu), keeping the cached
+    /// earliest-GPU index coherent: booking only ever *raises* a GPU's
+    /// `busy_until`, so the cache needs a rescan only when the currently
+    /// earliest GPU was the one booked. All engine-side booking goes
+    /// through here; calling [`GpuState::book`] directly bypasses the
+    /// cache (the frozen reference engine does exactly that — it scans
+    /// for the earliest GPU itself and never reads the cache).
+    pub fn book(
+        &mut self,
+        server: usize,
+        gpu: usize,
+        ready_s: f64,
+        dur_s: f64,
+    ) -> (f64, f64) {
+        let srv = &mut self.servers[server];
+        let out = srv.gpus[gpu].book(ready_s, dur_s);
+        if gpu == srv.earliest {
+            srv.recompute_earliest();
+        }
+        out
+    }
+
+    /// GPU on `server` that frees up first (cached; O(1)). Coherent as
+    /// long as every booking goes through [`Cluster::book`].
     pub fn earliest_gpu(&self, server: usize) -> usize {
-        self.servers[server]
-            .gpus
-            .iter()
-            .enumerate()
-            .min_by(|a, b| {
-                a.1.busy_until.partial_cmp(&b.1.busy_until).unwrap()
-            })
-            .map(|(i, _)| i)
-            .unwrap()
+        self.servers[server].earliest
     }
 
     /// Aggregate queue depth proxy (seconds of booked work beyond `now`).
@@ -167,6 +201,7 @@ impl Cluster {
             for c in &mut s.caches {
                 *c = ExpertCache::new(c.capacity);
             }
+            s.earliest = 0;
         }
     }
 }
@@ -197,16 +232,50 @@ mod tests {
     #[test]
     fn earliest_gpu_picks_idle() {
         let mut c = cluster();
-        c.servers[2].gpus[0].book(0.0, 10.0);
+        c.book(2, 0, 0.0, 10.0);
         assert_eq!(c.earliest_gpu(2), 1);
-        c.servers[2].gpus[1].book(0.0, 20.0);
+        c.book(2, 1, 0.0, 20.0);
         assert_eq!(c.earliest_gpu(2), 0);
+    }
+
+    #[test]
+    fn prop_cached_earliest_matches_linear_scan() {
+        // The cache invariant: after any sequence of bookings through
+        // `Cluster::book`, `earliest_gpu` equals the first-argmin a fresh
+        // linear scan over `busy_until` would report.
+        crate::util::prop::check("earliest cache = linear scan", 60, |g| {
+            let mut c = cluster();
+            for _ in 0..g.usize_in(1, 40) {
+                let s = g.usize_in(0, c.servers.len() - 1);
+                let gpu = g.usize_in(0, c.servers[s].gpus.len() - 1);
+                let ready = g.f64_in(0.0, 50.0);
+                let dur = g.f64_in(0.0, 5.0);
+                c.book(s, gpu, ready, dur);
+                for (n, srv) in c.servers.iter().enumerate() {
+                    let scan = srv
+                        .gpus
+                        .iter()
+                        .enumerate()
+                        .min_by(|a, b| {
+                            a.1.busy_until
+                                .partial_cmp(&b.1.busy_until)
+                                .unwrap()
+                        })
+                        .map(|(i, _)| i)
+                        .unwrap();
+                    crate::util::prop::assert_prop(
+                        c.earliest_gpu(n) == scan,
+                        "cached earliest diverged from the linear scan",
+                    );
+                }
+            }
+        });
     }
 
     #[test]
     fn backlog_measures_pending_work() {
         let mut c = cluster();
-        c.servers[0].gpus[0].book(0.0, 5.0);
+        c.book(0, 0, 0.0, 5.0);
         assert!((c.backlog_s(0, 2.0) - 3.0).abs() < 1e-12);
         assert_eq!(c.backlog_s(0, 10.0), 0.0);
     }
@@ -241,10 +310,11 @@ mod tests {
     #[test]
     fn reset_clears_dynamics() {
         let mut c = cluster();
-        c.servers[1].gpus[0].book(0.0, 4.0);
+        c.book(1, 0, 0.0, 4.0);
         c.servers[1].caches[0].access(7);
         c.reset();
         assert_eq!(c.servers[1].gpus[0].busy_until, 0.0);
         assert!(c.servers[1].caches[0].is_empty());
+        assert_eq!(c.earliest_gpu(1), 0);
     }
 }

@@ -18,9 +18,23 @@
 //!
 //! Determinism: given (model, cluster, workload, seed, placement) every run
 //! produces identical virtual-time results.
+//!
+//! Hot-path engineering (all result-preserving, pinned bit-for-bit against
+//! the frozen [`reference`] engine by `tests/hotpath_determinism.rs`):
+//! event slots are recycled through a free-list slab so memory is bounded
+//! by *in-flight* events rather than total events processed; the event
+//! queue orders packed `(time, sequence)` `u128` keys (one integer compare
+//! per heap step, FIFO among equal timestamps); gate sampling reuses a
+//! [`GateScratch`] with cached layer totals and a fused single-pass draw
+//! (zero allocations — see `TaskProfile::sample_batch_into` for why a
+//! binary-search draw cannot be byte-identical); each request's
+//! invocation list is built in place and its capacity reused across layer
+//! passes; and the home-GPU pick reads the cluster's cached earliest-GPU
+//! index instead of scanning.
 
 pub mod cost;
 pub mod metrics;
+pub mod reference;
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -33,7 +47,7 @@ use crate::config::{ClusterConfig, ModelConfig, TaskKind, WorkloadConfig};
 use crate::moe::ActivationStats;
 use crate::net::NetModel;
 use crate::placement::{dancemoe_place, Placement};
-use crate::trace::{Request, TaskProfile, Trace, TraceGenerator};
+use crate::trace::{GateScratch, Request, TaskProfile, Trace, TraceGenerator};
 use crate::util::rng::Rng;
 
 /// Serving mode.
@@ -74,19 +88,31 @@ impl Default for EngineConfig {
     }
 }
 
-/// Ordered f64 for the event queue.
-#[derive(Debug, Clone, Copy, PartialEq)]
-struct T(f64);
-impl Eq for T {}
-impl PartialOrd for T {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
+/// Pack a (time, push-sequence) pair into one order-isomorphic `u128`:
+/// high 64 bits are the time's total-order bit transform, low 64 the
+/// monotone sequence number. Lexicographic `u128` order therefore equals
+/// the old `(T(t), seq)` tuple order — time-ascending, FIFO among equal
+/// timestamps — at the cost of a single integer compare per heap step.
+#[inline]
+fn queue_key(t: f64, seq: u64) -> u128 {
+    // hard assert (not debug_assert): the pre-overhaul Ord impl panicked
+    // on NaN in release builds too, and a NaN time must fail at the
+    // injection point instead of silently mis-sorting the whole run
+    assert!(!t.is_nan(), "no NaN times");
+    let b = t.to_bits();
+    // IEEE-754 total-order transform: non-negative values flip the sign
+    // bit, negatives flip every bit (virtual times are ≥ 0 in practice,
+    // but the transform is correct for the whole line).
+    let ord = if b >> 63 == 0 { b | (1 << 63) } else { !b };
+    ((ord as u128) << 64) | seq as u128
 }
-impl Ord for T {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.0.partial_cmp(&other.0).expect("no NaN times")
-    }
+
+/// Invert the time half of a [`queue_key`] (exact round trip).
+#[inline]
+fn key_time(key: u128) -> f64 {
+    let ord = (key >> 64) as u64;
+    let bits = if ord >> 63 == 1 { ord & !(1 << 63) } else { !ord };
+    f64::from_bits(bits)
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -180,8 +206,20 @@ pub struct Engine {
     pub stats: ActivationStats,
     pub report: ServeReport,
     rng: Rng,
-    queue: BinaryHeap<Reverse<(T, u64, usize)>>,
+    /// Pending events as packed `(queue_key, slab slot)` pairs (see
+    /// [`queue_key`]); pop order is identical to the historical
+    /// `(time, seq, idx)` tuple order.
+    queue: BinaryHeap<Reverse<(u128, u32)>>,
+    /// Event slab: slots are recycled through `free_slots` when popped, so
+    /// `events.len()` is the run's *in-flight* high-water mark, not the
+    /// total event count (which lives in `pushed`).
     events: Vec<Ev>,
+    free_slots: Vec<u32>,
+    /// Total events ever pushed; doubles as the FIFO tie-break sequence.
+    pushed: u64,
+    /// Reused gate-sampler scratch (counts + internals): steady-state
+    /// layer passes allocate nothing.
+    gate: GateScratch,
     reqs: Vec<ReqState>,
     now: f64,
     done_count: usize,
@@ -227,6 +265,9 @@ impl Engine {
             rng: Rng::new(cfg.seed ^ 0xe961_e001),
             queue: BinaryHeap::new(),
             events: Vec::new(),
+            free_slots: Vec::new(),
+            pushed: 0,
+            gate: GateScratch::default(),
             reqs: Vec::new(),
             now: 0.0,
             done_count: 0,
@@ -258,10 +299,20 @@ impl Engine {
     }
 
     fn push_event(&mut self, t: f64, ev: Ev) {
-        let idx = self.events.len();
-        self.events.push(ev);
-        let seq = idx as u64;
-        self.queue.push(Reverse((T(t), seq, idx)));
+        let slot = match self.free_slots.pop() {
+            Some(s) => {
+                self.events[s as usize] = ev;
+                s
+            }
+            None => {
+                let s = self.events.len() as u32;
+                self.events.push(ev);
+                s
+            }
+        };
+        let key = queue_key(t, self.pushed);
+        self.pushed += 1;
+        self.queue.push(Reverse((key, slot)));
     }
 
     /// Load a trace (arrival events).
@@ -303,7 +354,7 @@ impl Engine {
     /// loop uses this to step the engine while batches wait on in-flight
     /// headroom).
     pub fn next_event_time(&self) -> Option<f64> {
-        self.queue.peek().map(|Reverse((T(t), _, _))| *t)
+        self.queue.peek().map(|&Reverse((key, _))| key_time(key))
     }
 
     /// The placement the engine is heading for: the staged migration
@@ -327,7 +378,20 @@ impl Engine {
     }
 
     pub fn events_processed(&self) -> usize {
+        self.pushed as usize
+    }
+
+    /// Event-slab high-water mark: the maximum number of simultaneously
+    /// pending events the run ever held. Slot recycling keeps this bounded
+    /// by in-flight work (arrivals + dispatched invocations), not by
+    /// [`Engine::events_processed`].
+    pub fn event_slab_high_water(&self) -> usize {
         self.events.len()
+    }
+
+    /// Events currently pending in the queue.
+    pub fn events_pending(&self) -> usize {
+        self.queue.len()
     }
 
     /// Historically measured extra latency per remote *token*-invocation
@@ -363,11 +427,10 @@ impl Engine {
         }
         let mut t_mig_total = 0.0;
         for ((s, g), n) in per_gpu {
-            let gpu = &mut self.cluster.servers[s].gpus[g];
-            let dur =
-                n as f64 * self.model.expert_bytes as f64 / gpu.pcie_bps;
+            let pcie = self.cluster.servers[s].gpus[g].pcie_bps;
+            let dur = n as f64 * self.model.expert_bytes as f64 / pcie;
             t_mig_total += dur;
-            let (_, end) = gpu.book(self.now, dur);
+            let (_, end) = self.cluster.book(s, g, self.now, dur);
             apply_at = apply_at.max(end);
         }
         self.pending_placement = Some(new_placement);
@@ -428,9 +491,9 @@ impl Engine {
         } else {
             now
         };
-        let gpu = &mut self.cluster.servers[dst_server].gpus[dst_gpu];
-        let dur = self.model.expert_bytes as f64 / gpu.pcie_bps;
-        let (_, end) = gpu.book(ready, dur);
+        let pcie = self.cluster.servers[dst_server].gpus[dst_gpu].pcie_bps;
+        let dur = self.model.expert_bytes as f64 / pcie;
+        let (_, end) = self.cluster.book(dst_server, dst_gpu, ready, dur);
         self.scale_outs_pending += 1;
         self.push_event(
             end,
@@ -462,13 +525,15 @@ impl Engine {
     /// Run until the event queue is empty or `until` is passed. Returns
     /// the time of the next pending event (if stopped early).
     pub fn run_until(&mut self, until: f64) -> Option<f64> {
-        while let Some(&Reverse((T(t), _, _))) = self.queue.peek() {
+        while let Some(&Reverse((key, slot))) = self.queue.peek() {
+            let t = key_time(key);
             if t > until {
                 return Some(t);
             }
-            let Reverse((T(t), _, idx)) = self.queue.pop().unwrap();
+            self.queue.pop();
             self.now = t;
-            let ev = self.events[idx];
+            let ev = self.events[slot as usize];
+            self.free_slots.push(slot);
             self.handle(ev);
         }
         None
@@ -564,7 +629,7 @@ impl Engine {
         let gpu = self.cluster.earliest_gpu(server);
         let flops = self.cluster.servers[server].gpus[gpu].flops;
         let dur = self.cost.home_s(&self.model, tokens, flops);
-        let (_, end) = self.cluster.servers[server].gpus[gpu].book(ready, dur);
+        let (_, end) = self.cluster.book(server, gpu, ready, dur);
         self.push_event(end, Ev::HomeDone(r));
     }
 
@@ -580,9 +645,9 @@ impl Engine {
                 rq.exec_server,
             )
         };
-        // ---- gate: sample routed token counts per expert ----------------
+        // ---- gate: sample routed token counts into the reused scratch ---
         let k = self.model.top_k;
-        let counts: Vec<u32> = {
+        {
             // split borrow: take the profile by index to avoid holding &self
             let t = tokens as usize;
             let profile = match &self.server_profiles {
@@ -590,14 +655,33 @@ impl Engine {
                 None => &self.profiles[self.profile_index(task)],
             };
             if t >= 16 {
-                profile.sample_batch_fast(&mut self.rng, layer, t, k)
+                profile.sample_batch_fast_into(
+                    &mut self.rng,
+                    layer,
+                    t,
+                    k,
+                    &mut self.gate,
+                );
             } else {
-                profile.sample_batch(&mut self.rng, layer, t, k)
+                profile.sample_batch_into(
+                    &mut self.rng,
+                    layer,
+                    t,
+                    k,
+                    &mut self.gate,
+                );
             }
-        };
-        // ---- build invocations ------------------------------------------
-        let mut invs: Vec<Inv> = Vec::new();
-        for (e, &c) in counts.iter().enumerate() {
+        }
+        // ---- build invocations in place ---------------------------------
+        // The request's invocation buffer is rebuilt every layer pass, so
+        // its capacity is recycled instead of allocating + cloning a fresh
+        // list per pass. The gate scratch moves out for the loop because
+        // `route` needs `&mut self`; moving a GateScratch is three
+        // pointer-sized copies, no allocation.
+        let mut invs = std::mem::take(&mut self.reqs[r].invs);
+        invs.clear();
+        let gate = std::mem::take(&mut self.gate);
+        for (e, &c) in gate.counts.iter().enumerate() {
             if c == 0 {
                 continue;
             }
@@ -608,19 +692,22 @@ impl Engine {
             let inv = self.route(exec, layer, e, tok);
             invs.push(inv);
         }
+        self.gate = gate;
+        let pending = invs.len();
         {
             let rq = &mut self.reqs[r];
-            rq.pending = invs.len();
+            rq.pending = pending;
             rq.layer_deadline = now;
-            rq.invs = invs.clone();
+            rq.invs = invs;
         }
-        if invs.is_empty() {
+        if pending == 0 {
             // degenerate (no experts routed) — advance directly
             self.advance_after_layer(r, now);
             return;
         }
         // ---- dispatch ----------------------------------------------------
-        for (i, inv) in invs.iter().enumerate() {
+        for i in 0..pending {
+            let inv = self.reqs[r].invs[i];
             self.report.record_invocation(now, inv.tokens, !inv.remote);
             {
                 let rq = &mut self.reqs[r];
@@ -656,7 +743,7 @@ impl Engine {
                     gpu,
                     remote: false,
                     ram_load: false,
-                        t0: 0.0,
+                    t0: 0.0,
                 }
             }
             Mode::Collaborative => {
@@ -753,8 +840,7 @@ impl Engine {
             dur += self.cost.load_s(&self.model, pcie)
                 * (1.0 - self.cost.offload_prefetch_overlap);
         }
-        let (_, end) =
-            self.cluster.servers[inv.server].gpus[inv.gpu].book(ready, dur);
+        let (_, end) = self.cluster.book(inv.server, inv.gpu, ready, dur);
         self.push_event(end, Ev::ExpertDone(r, i));
     }
 
@@ -1115,6 +1201,88 @@ mod tests {
             (got - expected).abs() / expected < 0.02,
             "got {got}, expected {expected}"
         );
+    }
+
+    #[test]
+    fn queue_keys_order_time_then_fifo() {
+        assert!(queue_key(1.0, 5) < queue_key(2.0, 0));
+        assert!(queue_key(3.0, 1) < queue_key(3.0, 2), "FIFO tie-break");
+        assert!(queue_key(0.0, 0) < queue_key(f64::MIN_POSITIVE, 0));
+        for t in [0.0, 1e-300, 0.5, 1.0, 1e9] {
+            assert_eq!(key_time(queue_key(t, 7)), t, "round trip at {t}");
+        }
+    }
+
+    #[test]
+    fn equal_time_events_pop_fifo_and_slots_recycle() {
+        let (m, c, _) = small_world();
+        let mut eng = Engine::new(
+            &m,
+            &c,
+            uniform::place(&m, &c),
+            EngineConfig::default(),
+            CostModel::default(),
+        );
+        // five events at one timestamp plus a later-pushed earlier event
+        for _ in 0..5 {
+            eng.push_event(2.0, Ev::ApplyPlacement);
+        }
+        eng.push_event(1.0, Ev::ApplyPlacement);
+        let mut seqs = Vec::new();
+        while let Some(Reverse((key, slot))) = eng.queue.pop() {
+            seqs.push((key & u64::MAX as u128) as u64);
+            eng.free_slots.push(slot);
+        }
+        assert_eq!(seqs[0], 5, "the t=1.0 event pops first");
+        assert_eq!(&seqs[1..], &[0, 1, 2, 3, 4], "equal timestamps pop FIFO");
+        // freed slots are reused: further pushes must not grow the slab
+        let hw = eng.event_slab_high_water();
+        for _ in 0..6 {
+            eng.push_event(3.0, Ev::ApplyPlacement);
+        }
+        assert_eq!(eng.event_slab_high_water(), hw, "freed slots reused");
+    }
+
+    #[test]
+    fn slab_high_water_bounded_by_in_flight_not_total() {
+        // One long-decoding request processes thousands of events but only
+        // ever holds a handful in flight (its current layer pass), so the
+        // slab must stay flat while the push counter grows.
+        let (m, c, _) = small_world();
+        let mut eng = Engine::new(
+            &m,
+            &c,
+            uniform::place(&m, &c),
+            EngineConfig {
+                seed: 21,
+                ..EngineConfig::default()
+            },
+            CostModel::default(),
+        );
+        let req = Request {
+            id: 0,
+            server: 0,
+            arrival_s: 0.0,
+            prompt_tokens: 8,
+            output_tokens: 300,
+            task: crate::config::TaskKind::Arithmetic,
+            tenant: 0,
+        };
+        eng.push_request_at(req, 0.0);
+        eng.run();
+        assert_eq!(eng.requests_done(), 1);
+        assert!(
+            eng.events_processed() > 2_000,
+            "expected a long event stream, got {}",
+            eng.events_processed()
+        );
+        assert!(
+            eng.event_slab_high_water() <= 32,
+            "slab high-water {} must track in-flight events, not total {}",
+            eng.event_slab_high_water(),
+            eng.events_processed()
+        );
+        assert_eq!(eng.events_pending(), 0, "queue drained");
     }
 
     #[test]

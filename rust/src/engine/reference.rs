@@ -1,0 +1,809 @@
+//! The **frozen reference engine**: a verbatim copy of the discrete-event
+//! serving engine as it stood before the hot-path overhaul (allocation-per
+//! -layer-pass gate sampling with linear categorical scans, a grow-only
+//! event store, double-stored invocation lists, linear earliest-GPU scans).
+//!
+//! It exists for two reasons:
+//!
+//! 1. **Byte-identity oracle** — the overhaul's contract is that the
+//!    optimized engine produces the *same* results: same RNG draw
+//!    sequence, same event order, bit-identical reports.
+//!    `tests/hotpath_determinism.rs` runs both engines over identical
+//!    inputs and compares everything bitwise, so the contract is enforced
+//!    by CI forever instead of by a one-off golden capture.
+//! 2. **In-binary perf baseline** — `benches/bench_engine_hotpath.rs`
+//!    measures this engine and the optimized one in the same process on
+//!    the same trace, so `BENCH_hotpath.json` records the before/after
+//!    events/s (and their ratio) on the machine that ran the bench, not a
+//!    number copied from somewhere else.
+//!
+//! Nothing here is on any production path. Do not "fix" or optimize this
+//! module: its value is that it does not change. It intentionally books
+//! GPUs directly through [`GpuState::book`](crate::cluster::GpuState) and
+//! scans for the earliest GPU itself, so it neither reads nor maintains
+//! the cluster's cached argmin.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::cluster::Cluster;
+use crate::config::{ClusterConfig, ModelConfig, TaskKind};
+use crate::engine::{
+    CostModel, EngineConfig, Mode, RequestRecord, ScaleEvent, ScaleKind,
+    ServeReport,
+};
+use crate::moe::ActivationStats;
+use crate::net::NetModel;
+use crate::placement::Placement;
+use crate::trace::{Request, TaskProfile, Trace};
+use crate::util::rng::Rng;
+
+/// The pre-overhaul gate sampler: clones the layer distribution, re-sums
+/// the remaining weights before every draw, and finds the drawn index by
+/// linear scan (O(tokens · k · E), two allocations per call).
+pub fn ref_sample_batch(
+    profile: &TaskProfile,
+    rng: &mut Rng,
+    layer: usize,
+    tokens: usize,
+    k: usize,
+) -> Vec<u32> {
+    let e = profile.num_experts();
+    let mut counts = vec![0u32; e];
+    let k = k.min(e);
+    let dist = &profile.dist[layer];
+    let mut w = dist.clone();
+    let mut picked: Vec<usize> = Vec::with_capacity(k);
+    for _ in 0..tokens {
+        picked.clear();
+        for _ in 0..k {
+            if w.iter().sum::<f64>() <= 0.0 {
+                // degenerate: fill with unused indices deterministically
+                for j in 0..e {
+                    if picked.len() == k {
+                        break;
+                    }
+                    if !picked.contains(&j) {
+                        picked.push(j);
+                    }
+                }
+                break;
+            }
+            let idx = rng.categorical(&w);
+            picked.push(idx);
+            w[idx] = 0.0;
+        }
+        for &idx in &picked {
+            counts[idx] += 1;
+            w[idx] = dist[idx];
+        }
+    }
+    counts
+}
+
+/// The pre-overhaul fast prefill sampler (expected counts + stochastic
+/// remainder), allocating its buffers per call.
+pub fn ref_sample_batch_fast(
+    profile: &TaskProfile,
+    rng: &mut Rng,
+    layer: usize,
+    tokens: usize,
+    k: usize,
+) -> Vec<u32> {
+    let e = profile.num_experts();
+    let k = k.min(e);
+    let target = (tokens * k) as u32;
+    let dist = &profile.dist[layer];
+    let mut counts = vec![0u32; e];
+    let mut residual = vec![0.0f64; e];
+    let mut placed: u32 = 0;
+    for i in 0..e {
+        let exact = (k as f64 * dist[i] * tokens as f64).min(tokens as f64);
+        let fl = exact.floor();
+        counts[i] = fl as u32;
+        residual[i] = exact - fl;
+        placed += counts[i];
+    }
+    while placed < target {
+        if residual.iter().sum::<f64>() <= 0.0 {
+            let open: Vec<usize> =
+                (0..e).filter(|&i| counts[i] < tokens as u32).collect();
+            if open.is_empty() {
+                break;
+            }
+            let i = *rng.choose(&open);
+            counts[i] += 1;
+            placed += 1;
+            continue;
+        }
+        let i = rng.categorical(&residual);
+        if counts[i] < tokens as u32 {
+            counts[i] += 1;
+            placed += 1;
+        }
+        residual[i] = 0.0;
+    }
+    counts
+}
+
+/// Ordered f64 for the event queue (pre-overhaul form).
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct T(f64);
+impl Eq for T {}
+impl PartialOrd for T {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for T {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.partial_cmp(&other.0).expect("no NaN times")
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+enum Ev {
+    Arrive(usize),
+    HomeDone(usize),
+    SendDone(usize, usize),
+    ExpertDone(usize, usize),
+    ReturnDone(usize, usize),
+    ApplyPlacement,
+    ApplyScaleOut(usize, usize, usize, usize),
+    ApplyScaleIn(usize, usize, usize, usize),
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Inv {
+    expert: usize,
+    tokens: f64,
+    server: usize,
+    gpu: usize,
+    remote: bool,
+    ram_load: bool,
+    t0: f64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Phase {
+    Prefill,
+    Decode,
+    Done,
+}
+
+struct ReqState {
+    req: Request,
+    exec_server: usize,
+    layer: usize,
+    phase: Phase,
+    pass_tokens: f64,
+    decode_passes_left: usize,
+    pending: usize,
+    layer_deadline: f64,
+    invs: Vec<Inv>,
+    local_tok: f64,
+    remote_tok: f64,
+}
+
+/// The frozen pre-overhaul engine (see the module docs).
+pub struct RefEngine {
+    pub model: ModelConfig,
+    pub cluster_cfg: ClusterConfig,
+    pub cfg: EngineConfig,
+    pub cost: CostModel,
+    pub placement: Placement,
+    pending_placement: Option<Placement>,
+    profiles: Vec<TaskProfile>,
+    pub cluster: Cluster,
+    pub net: NetModel,
+    pub stats: ActivationStats,
+    pub report: ServeReport,
+    rng: Rng,
+    queue: BinaryHeap<Reverse<(T, u64, usize)>>,
+    events: Vec<Ev>,
+    reqs: Vec<ReqState>,
+    now: f64,
+    done_count: usize,
+    remote_extra_s: f64,
+    remote_invocations: f64,
+    server_profiles: Option<Vec<TaskProfile>>,
+    pub redirects: u64,
+    active: Vec<usize>,
+    pub scale_events: Vec<ScaleEvent>,
+    scale_events_read: usize,
+    scale_outs_pending: usize,
+    drains_pending: usize,
+}
+
+impl RefEngine {
+    pub fn new(
+        model: &ModelConfig,
+        cluster_cfg: &ClusterConfig,
+        placement: Placement,
+        cfg: EngineConfig,
+        cost: CostModel,
+    ) -> RefEngine {
+        RefEngine {
+            profiles: TaskKind::all()
+                .into_iter()
+                .map(|t| TaskProfile::build(t, model))
+                .collect(),
+            cluster: Cluster::new(cluster_cfg, model),
+            net: NetModel::new(cluster_cfg),
+            stats: ActivationStats::new(model, cluster_cfg.num_servers()),
+            report: ServeReport::new(cluster_cfg.num_servers(), cfg.bucket_s),
+            rng: Rng::new(cfg.seed ^ 0xe961_e001),
+            queue: BinaryHeap::new(),
+            events: Vec::new(),
+            reqs: Vec::new(),
+            now: 0.0,
+            done_count: 0,
+            remote_extra_s: 0.0,
+            remote_invocations: 0.0,
+            server_profiles: None,
+            redirects: 0,
+            active: vec![0; cluster_cfg.num_servers()],
+            scale_events: Vec::new(),
+            scale_events_read: 0,
+            scale_outs_pending: 0,
+            drains_pending: 0,
+            placement,
+            pending_placement: None,
+            model: model.clone(),
+            cluster_cfg: cluster_cfg.clone(),
+            cfg,
+            cost,
+        }
+    }
+
+    fn profile_index(&self, task: TaskKind) -> usize {
+        TaskKind::all().iter().position(|&t| t == task).unwrap()
+    }
+
+    /// The pre-overhaul linear earliest-GPU scan (first minimal index).
+    fn earliest_gpu(&self, server: usize) -> usize {
+        self.cluster.servers[server]
+            .gpus
+            .iter()
+            .enumerate()
+            .min_by(|a, b| {
+                a.1.busy_until.partial_cmp(&b.1.busy_until).unwrap()
+            })
+            .map(|(i, _)| i)
+            .unwrap()
+    }
+
+    fn push_event(&mut self, t: f64, ev: Ev) {
+        let idx = self.events.len();
+        self.events.push(ev);
+        let seq = idx as u64;
+        self.queue.push(Reverse((T(t), seq, idx)));
+    }
+
+    pub fn push_trace(&mut self, trace: &Trace) {
+        for r in &trace.requests {
+            let at = r.arrival_s;
+            self.push_request_at(r.clone(), at);
+        }
+    }
+
+    pub fn push_request_at(&mut self, req: Request, start_s: f64) -> usize {
+        let idx = self.reqs.len();
+        let start = start_s.max(req.arrival_s).max(self.now);
+        let exec_server = req.server;
+        let pass_tokens = req.prompt_tokens as f64;
+        self.reqs.push(ReqState {
+            req,
+            exec_server,
+            layer: 0,
+            phase: Phase::Prefill,
+            pass_tokens,
+            decode_passes_left: 0,
+            pending: 0,
+            layer_deadline: 0.0,
+            invs: Vec::new(),
+            local_tok: 0.0,
+            remote_tok: 0.0,
+        });
+        self.push_event(start, Ev::Arrive(idx));
+        idx
+    }
+
+    pub fn next_event_time(&self) -> Option<f64> {
+        self.queue.peek().map(|Reverse((T(t), _, _))| *t)
+    }
+
+    pub fn target_placement(&self) -> &Placement {
+        self.pending_placement.as_ref().unwrap_or(&self.placement)
+    }
+
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    pub fn requests_done(&self) -> usize {
+        self.done_count
+    }
+
+    pub fn events_processed(&self) -> usize {
+        self.events.len()
+    }
+
+    /// Grow-only event-store length == total events ever pushed (the
+    /// memory behavior the slab replaces; exposed so tests can assert the
+    /// slab's high-water is strictly smaller on long runs).
+    pub fn event_store_len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn measured_remote_penalty_s(&self) -> Option<f64> {
+        if self.remote_invocations > 0.0 {
+            Some(self.remote_extra_s / self.remote_invocations)
+        } else {
+            None
+        }
+    }
+
+    pub fn set_server_profiles(&mut self, profiles: Vec<TaskProfile>) {
+        assert_eq!(profiles.len(), self.cluster_cfg.num_servers());
+        self.server_profiles = Some(profiles);
+    }
+
+    pub fn schedule_migration(&mut self, new_placement: Placement) -> f64 {
+        let adds = self.placement.added_replicas(&new_placement);
+        let moved = adds.len();
+        let mut apply_at = self.now;
+        let mut per_gpu: std::collections::BTreeMap<(usize, usize), usize> =
+            std::collections::BTreeMap::new();
+        for (s, g, _, _) in &adds {
+            *per_gpu.entry((*s, *g)).or_insert(0) += 1;
+        }
+        let mut t_mig_total = 0.0;
+        for ((s, g), n) in per_gpu {
+            let gpu = &mut self.cluster.servers[s].gpus[g];
+            let dur =
+                n as f64 * self.model.expert_bytes as f64 / gpu.pcie_bps;
+            t_mig_total += dur;
+            let (_, end) = gpu.book(self.now, dur);
+            apply_at = apply_at.max(end);
+        }
+        self.pending_placement = Some(new_placement);
+        self.push_event(apply_at, Ev::ApplyPlacement);
+        self.report.migrations.push((self.now, moved, t_mig_total));
+        apply_at
+    }
+
+    pub fn migration_in_flight(&self) -> bool {
+        self.pending_placement.is_some()
+    }
+
+    pub fn scale_ops_in_flight(&self) -> usize {
+        self.scale_outs_pending + self.drains_pending
+    }
+
+    pub fn take_scale_completions(&mut self) -> Vec<ScaleEvent> {
+        let out = self.scale_events[self.scale_events_read..].to_vec();
+        self.scale_events_read = self.scale_events.len();
+        out
+    }
+
+    pub fn schedule_scale_out(
+        &mut self,
+        layer: usize,
+        expert: usize,
+        dst_server: usize,
+        dst_gpu: usize,
+        src_server: usize,
+    ) -> crate::Result<f64> {
+        if self.placement.gpu_has(dst_server, dst_gpu, layer, expert) {
+            return Err(crate::Error::Placement(format!(
+                "scale-out target s{dst_server}g{dst_gpu} already holds \
+                 l{layer}e{expert}"
+            )));
+        }
+        let now = self.now;
+        let bytes = self.model.expert_bytes as f64;
+        let ready = if src_server != dst_server {
+            self.net.book_transfer(
+                src_server,
+                dst_server,
+                bytes,
+                now,
+                self.cost.remote_fixed_s,
+            )
+        } else {
+            now
+        };
+        let gpu = &mut self.cluster.servers[dst_server].gpus[dst_gpu];
+        let dur = self.model.expert_bytes as f64 / gpu.pcie_bps;
+        let (_, end) = gpu.book(ready, dur);
+        self.scale_outs_pending += 1;
+        self.push_event(
+            end,
+            Ev::ApplyScaleOut(dst_server, dst_gpu, layer, expert),
+        );
+        Ok(end)
+    }
+
+    pub fn schedule_scale_in(
+        &mut self,
+        layer: usize,
+        expert: usize,
+        server: usize,
+        gpu: usize,
+        drain_s: f64,
+    ) -> crate::Result<f64> {
+        self.placement.begin_drain(server, gpu, layer, expert)?;
+        self.drains_pending += 1;
+        let at = self.now + drain_s.max(0.0);
+        self.push_event(at, Ev::ApplyScaleIn(server, gpu, layer, expert));
+        Ok(at)
+    }
+
+    pub fn run_until(&mut self, until: f64) -> Option<f64> {
+        while let Some(&Reverse((T(t), _, _))) = self.queue.peek() {
+            if t > until {
+                return Some(t);
+            }
+            let Reverse((T(t), _, idx)) = self.queue.pop().unwrap();
+            self.now = t;
+            let ev = self.events[idx];
+            self.handle(ev);
+        }
+        None
+    }
+
+    pub fn run(&mut self) {
+        self.run_until(f64::INFINITY);
+        self.finalize();
+    }
+
+    pub fn finalize(&mut self) {
+        self.report.net_bytes = self.net.total_bytes();
+        for (s, srv) in self.cluster.servers.iter().enumerate() {
+            self.report.gpu_busy_s[s] =
+                srv.gpus.iter().map(|g| g.busy_s).sum();
+        }
+    }
+
+    fn handle(&mut self, ev: Ev) {
+        match ev {
+            Ev::Arrive(r) => self.on_arrive(r),
+            Ev::HomeDone(r) => self.on_home_done(r),
+            Ev::SendDone(r, i) => self.on_send_done(r, i),
+            Ev::ExpertDone(r, i) => self.on_expert_done(r, i),
+            Ev::ReturnDone(r, i) => self.on_invocation_complete(r, i),
+            Ev::ApplyPlacement => {
+                if let Some(p) = self.pending_placement.take() {
+                    self.placement = p;
+                }
+            }
+            Ev::ApplyScaleOut(s, g, l, e) => {
+                self.scale_outs_pending -= 1;
+                let applied = self.placement.place(s, g, l, e).is_ok();
+                self.scale_events.push(ScaleEvent {
+                    t_s: self.now,
+                    kind: ScaleKind::Out,
+                    layer: l,
+                    expert: e,
+                    server: s,
+                    gpu: g,
+                    applied,
+                });
+            }
+            Ev::ApplyScaleIn(s, g, l, e) => {
+                self.drains_pending -= 1;
+                let applied = self.placement.finish_drain(s, g, l, e).is_ok();
+                self.scale_events.push(ScaleEvent {
+                    t_s: self.now,
+                    kind: ScaleKind::In,
+                    layer: l,
+                    expert: e,
+                    server: s,
+                    gpu: g,
+                    applied,
+                });
+            }
+        }
+    }
+
+    fn on_arrive(&mut self, r: usize) {
+        if let Mode::Offload { lb: true } = self.cfg.mode {
+            let home = self.reqs[r].req.server;
+            let depth = |s: usize| {
+                self.active[s] as f64
+                    / self.cluster.servers[s].gpus.len() as f64
+            };
+            let best = (0..self.cluster.servers.len())
+                .min_by(|&a, &b| depth(a).partial_cmp(&depth(b)).unwrap())
+                .unwrap();
+            if depth(home) > depth(best) + 2.0 {
+                self.reqs[r].exec_server = best;
+                self.redirects += 1;
+            }
+        }
+        self.active[self.reqs[r].exec_server] += 1;
+        self.start_layer_pass(r, self.now);
+    }
+
+    fn start_layer_pass(&mut self, r: usize, ready: f64) {
+        let (server, tokens) = {
+            let rq = &self.reqs[r];
+            (rq.exec_server, rq.pass_tokens)
+        };
+        let gpu = self.earliest_gpu(server);
+        let flops = self.cluster.servers[server].gpus[gpu].flops;
+        let dur = self.cost.home_s(&self.model, tokens, flops);
+        let (_, end) = self.cluster.servers[server].gpus[gpu].book(ready, dur);
+        self.push_event(end, Ev::HomeDone(r));
+    }
+
+    fn on_home_done(&mut self, r: usize) {
+        let now = self.now;
+        let (layer, tokens, task, home, exec) = {
+            let rq = &self.reqs[r];
+            (
+                rq.layer,
+                rq.pass_tokens,
+                rq.req.task,
+                rq.req.server,
+                rq.exec_server,
+            )
+        };
+        // ---- gate: sample routed token counts per expert ----------------
+        let k = self.model.top_k;
+        let counts: Vec<u32> = {
+            let t = tokens as usize;
+            let profile = match &self.server_profiles {
+                Some(per_server) => &per_server[exec],
+                None => &self.profiles[self.profile_index(task)],
+            };
+            if t >= 16 {
+                ref_sample_batch_fast(profile, &mut self.rng, layer, t, k)
+            } else {
+                ref_sample_batch(profile, &mut self.rng, layer, t, k)
+            }
+        };
+        // ---- build invocations ------------------------------------------
+        let mut invs: Vec<Inv> = Vec::new();
+        for (e, &c) in counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let tok = c as f64;
+            self.stats.record(home, layer, e, tok);
+            let inv = self.route(exec, layer, e, tok);
+            invs.push(inv);
+        }
+        {
+            let rq = &mut self.reqs[r];
+            rq.pending = invs.len();
+            rq.layer_deadline = now;
+            rq.invs = invs.clone();
+        }
+        if invs.is_empty() {
+            self.advance_after_layer(r, now);
+            return;
+        }
+        // ---- dispatch ----------------------------------------------------
+        for (i, inv) in invs.iter().enumerate() {
+            self.report.record_invocation(now, inv.tokens, !inv.remote);
+            {
+                let rq = &mut self.reqs[r];
+                if inv.remote {
+                    rq.remote_tok += inv.tokens;
+                } else {
+                    rq.local_tok += inv.tokens;
+                }
+            }
+            if inv.remote {
+                let bytes = inv.tokens * self.model.token_bytes as f64;
+                self.reqs[r].invs[i].t0 = now;
+                let fx = self.cost.remote_fixed_s / 2.0;
+                let t = self.net.book_transfer(exec, inv.server, bytes, now, fx);
+                self.push_event(t, Ev::SendDone(r, i));
+            } else {
+                self.book_expert_compute(r, i, now);
+            }
+        }
+    }
+
+    fn route(&mut self, exec: usize, layer: usize, e: usize, tokens: f64) -> Inv {
+        match self.cfg.mode {
+            Mode::Offload { .. } => {
+                let gpu = self.earliest_gpu(exec);
+                Inv {
+                    expert: e,
+                    tokens,
+                    server: exec,
+                    gpu,
+                    remote: false,
+                    ram_load: false,
+                    t0: 0.0,
+                }
+            }
+            Mode::Collaborative => {
+                if self.placement.server_has(exec, layer, e) {
+                    let owners = self.placement.owners_ref(layer, e);
+                    let (s, g) = owners
+                        .iter()
+                        .copied()
+                        .filter(|&(s, _)| s == exec)
+                        .min_by(|a, b| {
+                            let ba =
+                                self.cluster.servers[a.0].gpus[a.1].busy_until;
+                            let bb =
+                                self.cluster.servers[b.0].gpus[b.1].busy_until;
+                            ba.partial_cmp(&bb).unwrap()
+                        })
+                        .unwrap();
+                    Inv {
+                        expert: e,
+                        tokens,
+                        server: s,
+                        gpu: g,
+                        remote: false,
+                        ram_load: false,
+                        t0: 0.0,
+                    }
+                } else {
+                    let owners = self.placement.owners_ref(layer, e);
+                    let now = self.now;
+                    let bytes = tokens * self.model.token_bytes as f64;
+                    let pick = owners.iter().copied().min_by(|&a, &b| {
+                        let score = |(s, g): (usize, usize)| {
+                            let q = (self.cluster.servers[s].gpus[g]
+                                .busy_until
+                                - now)
+                                .max(0.0);
+                            q + self.net.transfer_estimate_s(
+                                    exec,
+                                    s,
+                                    bytes,
+                                    self.cost.remote_fixed_s,
+                                )
+                        };
+                        score(a).partial_cmp(&score(b)).unwrap()
+                    });
+                    let (s, g, ram_load) = match pick {
+                        Some((s, g)) => (s, g, false),
+                        None => (exec, self.earliest_gpu(exec), true),
+                    };
+                    Inv {
+                        expert: e,
+                        tokens,
+                        server: s,
+                        gpu: g,
+                        remote: s != exec,
+                        ram_load,
+                        t0: 0.0,
+                    }
+                }
+            }
+        }
+    }
+
+    fn book_expert_compute(&mut self, r: usize, i: usize, ready: f64) {
+        let inv = self.reqs[r].invs[i];
+        let layer = self.reqs[r].layer;
+        let mut dur = {
+            let flops = self.cluster.servers[inv.server].gpus[inv.gpu].flops;
+            self.cost.expert_s(&self.model, inv.tokens, flops)
+        };
+        if let Mode::Offload { .. } = self.cfg.mode {
+            let eid = self.placement.eid(layer, inv.expert);
+            let hit =
+                self.cluster.servers[inv.server].caches[inv.gpu].access(eid);
+            if !hit {
+                let pcie =
+                    self.cluster.servers[inv.server].gpus[inv.gpu].pcie_bps;
+                dur += self.cost.load_s(&self.model, pcie)
+                    * (1.0 - self.cost.offload_prefetch_overlap);
+            }
+        } else if inv.ram_load {
+            let pcie = self.cluster.servers[inv.server].gpus[inv.gpu].pcie_bps;
+            dur += self.cost.load_s(&self.model, pcie)
+                * (1.0 - self.cost.offload_prefetch_overlap);
+        }
+        let (_, end) =
+            self.cluster.servers[inv.server].gpus[inv.gpu].book(ready, dur);
+        self.push_event(end, Ev::ExpertDone(r, i));
+    }
+
+    fn on_send_done(&mut self, r: usize, i: usize) {
+        self.book_expert_compute(r, i, self.now);
+    }
+
+    fn on_expert_done(&mut self, r: usize, i: usize) {
+        let inv = self.reqs[r].invs[i];
+        if inv.remote {
+            let exec = self.reqs[r].exec_server;
+            let bytes = inv.tokens * self.model.token_bytes as f64;
+            let fx = self.cost.remote_fixed_s / 2.0;
+            let t = self.net.book_transfer(inv.server, exec, bytes, self.now, fx);
+            self.push_event(t, Ev::ReturnDone(r, i));
+        } else {
+            self.on_invocation_complete(r, i);
+        }
+    }
+
+    fn on_invocation_complete(&mut self, r: usize, i: usize) {
+        let now = self.now;
+        let inv = self.reqs[r].invs[i];
+        if inv.remote {
+            let flops = self.cluster.servers[inv.server].gpus[inv.gpu].flops;
+            let comp = self.cost.expert_s(&self.model, inv.tokens, flops);
+            self.remote_extra_s += ((now - inv.t0) - comp).max(0.0);
+            self.remote_invocations += inv.tokens;
+        }
+        let deadline = {
+            let rq = &mut self.reqs[r];
+            rq.layer_deadline = rq.layer_deadline.max(now);
+            rq.pending -= 1;
+            if rq.pending > 0 {
+                return;
+            }
+            rq.layer_deadline
+        };
+        self.advance_after_layer(r, deadline);
+    }
+
+    fn advance_after_layer(&mut self, r: usize, t: f64) {
+        let layers = self.model.num_layers;
+        let chunk = self.cfg.decode_chunk.max(1);
+        {
+            let rq = &mut self.reqs[r];
+            rq.layer += 1;
+            if rq.layer < layers {
+                // fall through to start the next layer below
+            } else {
+                match rq.phase {
+                    Phase::Prefill => {
+                        let out = rq.req.output_tokens;
+                        if out == 0 {
+                            let _ = rq;
+                            self.finish_request(r, t);
+                            return;
+                        }
+                        rq.phase = Phase::Decode;
+                        rq.decode_passes_left = out.div_ceil(chunk) - 1;
+                        rq.pass_tokens = chunk.min(out) as f64;
+                        rq.layer = 0;
+                    }
+                    Phase::Decode => {
+                        if rq.decode_passes_left > 0 {
+                            rq.decode_passes_left -= 1;
+                            rq.layer = 0;
+                        } else {
+                            let _ = rq;
+                            self.finish_request(r, t);
+                            return;
+                        }
+                    }
+                    Phase::Done => {
+                        unreachable!("advance on finished request")
+                    }
+                }
+            }
+        }
+        self.start_layer_pass(r, t);
+    }
+
+    fn finish_request(&mut self, r: usize, t: f64) {
+        self.active[self.reqs[r].exec_server] -= 1;
+        let rq = &mut self.reqs[r];
+        rq.phase = Phase::Done;
+        self.done_count += 1;
+        let rec = RequestRecord {
+            id: rq.req.id,
+            server: rq.req.server,
+            tenant: rq.req.tenant,
+            arrival_s: rq.req.arrival_s,
+            done_s: t,
+            latency_s: t - rq.req.arrival_s,
+            local_token_invocations: rq.local_tok,
+            remote_token_invocations: rq.remote_tok,
+        };
+        self.report.push(rec);
+    }
+}

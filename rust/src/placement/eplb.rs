@@ -160,8 +160,8 @@ mod tests {
         for l in 0..m.num_layers {
             let w = stats.global_load(l);
             for e in 0..m.num_experts {
-                let owners = p.owners(l, e);
-                for &(s, g) in &owners {
+                let owners = p.owners_ref(l, e);
+                for &(s, g) in owners {
                     let gi =
                         gpus.iter().position(|&x| x == (s, g)).unwrap();
                     loads[gi] += w[e] / owners.len() as f64;

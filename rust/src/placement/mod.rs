@@ -109,6 +109,14 @@ pub fn dancemoe_place(
 }
 
 /// The binary placement tensor `z_{n,g}^e` with memory accounting.
+///
+/// Replica membership is stored as contiguous `u64` bitset words — one
+/// row of `ceil(total_experts / 64)` words per GPU (flat-indexed across
+/// servers) for `assign`/`draining`, and one row per server for the
+/// active-union `server_has` — so the per-invocation routing queries are
+/// single word-indexed bit tests and the interval-rate scans (the
+/// gateway's `LocalityRouter::rebuild`, the migration planner's diff)
+/// walk dense cache lines instead of a `Vec<Vec<Vec<bool>>>` forest.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Placement {
     pub num_servers: usize,
@@ -119,17 +127,23 @@ pub struct Placement {
     pub expert_bytes: u64,
     /// Memory capacity per (server, gpu).
     pub mem_cap: Vec<Vec<u64>>,
-    /// `assign[server][gpu][eid]` — eid = layer * num_experts + expert.
-    assign: Vec<Vec<Vec<bool>>>,
-    /// `draining[server][gpu][eid]` — subset of `assign`: replicas being
-    /// scaled in. A draining replica still holds memory (freed only by
-    /// [`Placement::finish_drain`]) but receives no new traffic: it is
-    /// excluded from `server_has` and the owner cache, so every routing
-    /// path — the engine's per-invocation replica choice and the gateway's
-    /// locality router — skips it without extra checks.
-    draining: Vec<Vec<Vec<bool>>>,
-    /// Cached per-server union over GPUs (active replicas only).
-    server_has: Vec<Vec<bool>>,
+    /// Bitset words per row: `ceil(num_layers * num_experts / 64)`.
+    words: usize,
+    /// Flat GPU row index base per server (prefix sums of `gpus`).
+    gpu_base: Vec<usize>,
+    /// Replica bits (active ∪ draining): bit `eid` of row
+    /// `gpu_base[server] + gpu`, eid = layer * num_experts + expert.
+    assign: Vec<u64>,
+    /// Subset of `assign`: replicas being scaled in. A draining replica
+    /// still holds memory (freed only by [`Placement::finish_drain`]) but
+    /// receives no new traffic: it is excluded from `server_has` and the
+    /// owner cache, so every routing path — the engine's per-invocation
+    /// replica choice and the gateway's locality router — skips it
+    /// without extra checks.
+    draining: Vec<u64>,
+    /// Cached per-server union over GPUs (active replicas only), one
+    /// bitset row per server.
+    server_bits: Vec<u64>,
     /// Memory used per (server, gpu).
     mem_used: Vec<Vec<u64>>,
     /// Cached *active* replica list per eid — the router's hot lookup
@@ -142,19 +156,21 @@ impl Placement {
     /// Empty placement shaped for (model, cluster).
     pub fn new(model: &ModelConfig, cluster: &ClusterConfig) -> Placement {
         let total = model.total_experts();
+        let words = total.div_ceil(64);
         let gpus: Vec<usize> =
             cluster.servers.iter().map(|s| s.gpus.len()).collect();
+        let mut gpu_base = Vec::with_capacity(gpus.len());
+        let mut acc = 0usize;
+        for &g in &gpus {
+            gpu_base.push(acc);
+            acc += g;
+        }
+        let total_gpus = acc;
         Placement {
             num_servers: cluster.num_servers(),
-            assign: gpus
-                .iter()
-                .map(|&g| vec![vec![false; total]; g])
-                .collect(),
-            draining: gpus
-                .iter()
-                .map(|&g| vec![vec![false; total]; g])
-                .collect(),
-            server_has: vec![vec![false; total]; cluster.num_servers()],
+            assign: vec![0; total_gpus * words],
+            draining: vec![0; total_gpus * words],
+            server_bits: vec![0; cluster.num_servers() * words],
             mem_used: gpus.iter().map(|&g| vec![0; g]).collect(),
             owner_cache: vec![Vec::new(); total],
             mem_cap: cluster
@@ -162,6 +178,8 @@ impl Placement {
                 .iter()
                 .map(|s| s.gpus.iter().map(|g| g.mem_bytes).collect())
                 .collect(),
+            words,
+            gpu_base,
             gpus,
             num_layers: model.num_layers,
             num_experts: model.num_experts,
@@ -174,6 +192,39 @@ impl Placement {
         layer * self.num_experts + expert
     }
 
+    /// Word index + mask of `eid` within a bitset row starting at
+    /// `row * self.words`.
+    #[inline]
+    fn bit(&self, row: usize, eid: usize) -> (usize, u64) {
+        (row * self.words + (eid >> 6), 1u64 << (eid & 63))
+    }
+
+    /// Flat bitset row of (server, gpu).
+    #[inline]
+    fn gpu_row(&self, server: ServerId, gpu: usize) -> usize {
+        self.gpu_base[server] + gpu
+    }
+
+    /// Recompute the active-union bit of (server, eid) from the GPU rows.
+    fn refresh_server_bit(&mut self, server: ServerId, eid: usize) {
+        let word = eid >> 6;
+        let mask = 1u64 << (eid & 63);
+        let mut any = false;
+        for g in 0..self.gpus[server] {
+            let i = (self.gpu_base[server] + g) * self.words + word;
+            if self.assign[i] & !self.draining[i] & mask != 0 {
+                any = true;
+                break;
+            }
+        }
+        let sw = server * self.words + word;
+        if any {
+            self.server_bits[sw] |= mask;
+        } else {
+            self.server_bits[sw] &= !mask;
+        }
+    }
+
     /// Place an expert on a GPU; errors if memory would overflow or the
     /// expert is already there.
     pub fn place(
@@ -184,7 +235,8 @@ impl Placement {
         expert: ExpertId,
     ) -> Result<()> {
         let eid = self.eid(layer, expert);
-        if self.assign[server][gpu][eid] {
+        let (w, m) = self.bit(self.gpu_row(server, gpu), eid);
+        if self.assign[w] & m != 0 {
             return Err(Error::Placement(format!(
                 "expert l{layer}e{expert} already on s{server}g{gpu}"
             )));
@@ -196,8 +248,9 @@ impl Placement {
                 "s{server}g{gpu} out of memory placing l{layer}e{expert}"
             )));
         }
-        self.assign[server][gpu][eid] = true;
-        self.server_has[server][eid] = true;
+        self.assign[w] |= m;
+        let (sw, _) = self.bit(server, eid);
+        self.server_bits[sw] |= m;
         self.mem_used[server][gpu] += self.expert_bytes;
         self.owner_cache[eid].push((server, gpu));
         Ok(())
@@ -212,16 +265,16 @@ impl Placement {
         expert: ExpertId,
     ) -> Result<()> {
         let eid = self.eid(layer, expert);
-        if !self.assign[server][gpu][eid] {
+        let (w, m) = self.bit(self.gpu_row(server, gpu), eid);
+        if self.assign[w] & m == 0 {
             return Err(Error::Placement(format!(
                 "expert l{layer}e{expert} not on s{server}g{gpu}"
             )));
         }
-        self.assign[server][gpu][eid] = false;
-        self.draining[server][gpu][eid] = false;
+        self.assign[w] &= !m;
+        self.draining[w] &= !m;
         self.mem_used[server][gpu] -= self.expert_bytes;
-        self.server_has[server][eid] = (0..self.gpus[server])
-            .any(|g| self.assign[server][g][eid] && !self.draining[server][g][eid]);
+        self.refresh_server_bit(server, eid);
         self.owner_cache[eid].retain(|&o| o != (server, gpu));
         Ok(())
     }
@@ -238,12 +291,13 @@ impl Placement {
         expert: ExpertId,
     ) -> Result<()> {
         let eid = self.eid(layer, expert);
-        if !self.assign[server][gpu][eid] {
+        let (w, m) = self.bit(self.gpu_row(server, gpu), eid);
+        if self.assign[w] & m == 0 {
             return Err(Error::Placement(format!(
                 "expert l{layer}e{expert} not on s{server}g{gpu}"
             )));
         }
-        if self.draining[server][gpu][eid] {
+        if self.draining[w] & m != 0 {
             return Err(Error::Placement(format!(
                 "expert l{layer}e{expert} already draining on s{server}g{gpu}"
             )));
@@ -253,10 +307,9 @@ impl Placement {
                 "cannot drain the last active replica of l{layer}e{expert}"
             )));
         }
-        self.draining[server][gpu][eid] = true;
+        self.draining[w] |= m;
         self.owner_cache[eid].retain(|&o| o != (server, gpu));
-        self.server_has[server][eid] = (0..self.gpus[server])
-            .any(|g| self.assign[server][g][eid] && !self.draining[server][g][eid]);
+        self.refresh_server_bit(server, eid);
         Ok(())
     }
 
@@ -270,13 +323,14 @@ impl Placement {
         expert: ExpertId,
     ) -> Result<()> {
         let eid = self.eid(layer, expert);
-        if !self.draining[server][gpu][eid] {
+        let (w, m) = self.bit(self.gpu_row(server, gpu), eid);
+        if self.draining[w] & m == 0 {
             return Err(Error::Placement(format!(
                 "expert l{layer}e{expert} not draining on s{server}g{gpu}"
             )));
         }
-        self.assign[server][gpu][eid] = false;
-        self.draining[server][gpu][eid] = false;
+        self.assign[w] &= !m;
+        self.draining[w] &= !m;
         self.mem_used[server][gpu] -= self.expert_bytes;
         Ok(())
     }
@@ -290,7 +344,8 @@ impl Placement {
         layer: LayerId,
         expert: ExpertId,
     ) -> bool {
-        self.draining[server][gpu][self.eid(layer, expert)]
+        let (w, m) = self.bit(self.gpu_row(server, gpu), self.eid(layer, expert));
+        self.draining[w] & m != 0
     }
 
     /// Every replica currently in drain, as (server, gpu, layer, expert).
@@ -298,9 +353,11 @@ impl Placement {
         let mut out = Vec::new();
         for s in 0..self.num_servers {
             for g in 0..self.gpus[s] {
+                let row = self.gpu_row(s, g);
                 for l in 0..self.num_layers {
                     for e in 0..self.num_experts {
-                        if self.draining[s][g][self.eid(l, e)] {
+                        let (w, m) = self.bit(row, self.eid(l, e));
+                        if self.draining[w] & m != 0 {
                             out.push((s, g, l, e));
                         }
                     }
@@ -325,7 +382,10 @@ impl Placement {
         expert: ExpertId,
     ) -> bool {
         let eid = self.eid(layer, expert);
-        (0..self.gpus[server]).any(|g| self.assign[server][g][eid])
+        (0..self.gpus[server]).any(|g| {
+            let (w, m) = self.bit(self.gpu_row(server, g), eid);
+            self.assign[w] & m != 0
+        })
     }
 
     /// Re-cap memory to the (full) capacities of `cluster` — used after
@@ -348,7 +408,8 @@ impl Placement {
         layer: LayerId,
         expert: ExpertId,
     ) -> bool {
-        self.server_has[server][self.eid(layer, expert)]
+        let (w, m) = self.bit(server, self.eid(layer, expert));
+        self.server_bits[w] & m != 0
     }
 
     #[inline]
@@ -359,10 +420,16 @@ impl Placement {
         layer: LayerId,
         expert: ExpertId,
     ) -> bool {
-        self.assign[server][gpu][self.eid(layer, expert)]
+        let (w, m) = self.bit(self.gpu_row(server, gpu), self.eid(layer, expert));
+        self.assign[w] & m != 0
     }
 
     /// All (server, gpu) replicas of an expert (cached; insertion order).
+    /// Allocates a fresh list — interval-rate and hot-path callers (the
+    /// engine's router, the coordinator, the autoscaler, EPLB's balance
+    /// pass) use the borrowing [`Placement::owners_ref`] instead; this
+    /// clone form remains for callers that need an owned snapshot (e.g.
+    /// [`Placement::replica_set`]).
     pub fn owners(
         &self,
         layer: LayerId,
@@ -383,13 +450,21 @@ impl Placement {
 
     /// Number of servers holding the expert.
     pub fn coverage(&self, layer: LayerId, expert: ExpertId) -> usize {
-        let eid = self.eid(layer, expert);
-        // distinct servers among cached owners (replicas within one server
-        // are prevented by the algorithms but tolerated here)
-        let owners = &self.owner_cache[eid];
-        (0..self.num_servers)
-            .filter(|&s| owners.iter().any(|&(os, _)| os == s))
-            .count()
+        // distinct servers among active replicas (replicas within one
+        // server are prevented by the algorithms but tolerated here). The
+        // owner-cache length settles the common 0/1-replica cases; the
+        // multi-replica case counts set bits in the per-server active
+        // union — allocation-free O(servers) word-indexed tests instead
+        // of the old O(servers × replicas) membership scan (the
+        // `server_bits` rows mirror the owner cache exactly: both are
+        // maintained by place/remove/begin_drain over active replicas)
+        let owners = &self.owner_cache[self.eid(layer, expert)];
+        match owners.len() {
+            0 | 1 => owners.len(),
+            _ => (0..self.num_servers)
+                .filter(|&s| self.server_has(s, layer, expert))
+                .count(),
+        }
     }
 
     /// Experts of `layer` resident on `server`.
@@ -439,13 +514,9 @@ impl Placement {
         best.map(|(s, g, _)| (s, g))
     }
 
-    /// Total replicas placed (Σ z).
+    /// Total replicas placed (Σ z) — a popcount over the bitset words.
     pub fn total_replicas(&self) -> usize {
-        self.assign
-            .iter()
-            .flatten()
-            .map(|v| v.iter().filter(|&&b| b).count())
-            .sum()
+        self.assign.iter().map(|w| w.count_ones() as usize).sum()
     }
 
     /// Full-coverage check: every (layer, expert) on ≥ 1 GPU (first
@@ -493,15 +564,25 @@ impl Placement {
         &self,
         new: &Placement,
     ) -> Vec<(ServerId, usize, LayerId, ExpertId)> {
+        // word-wise diff: decode (layer, expert) only for set difference
+        // bits, in the same (s, g, l, e) order the dense scan produced
         let mut out = Vec::new();
         for s in 0..self.num_servers {
             for g in 0..self.gpus[s] {
-                for l in 0..self.num_layers {
-                    for e in 0..self.num_experts {
-                        let eid = self.eid(l, e);
-                        if new.assign[s][g][eid] && !self.assign[s][g][eid] {
-                            out.push((s, g, l, e));
-                        }
+                let row = self.gpu_row(s, g);
+                for w in 0..self.words {
+                    let mut diff = new.assign[row * self.words + w]
+                        & !self.assign[row * self.words + w];
+                    while diff != 0 {
+                        let b = diff.trailing_zeros() as usize;
+                        diff &= diff - 1;
+                        let eid = (w << 6) | b;
+                        out.push((
+                            s,
+                            g,
+                            eid / self.num_experts,
+                            eid % self.num_experts,
+                        ));
                     }
                 }
             }
@@ -660,6 +741,119 @@ mod tests {
         assert!(p.place(0, 0, 0, 2).is_err(), "shrunk cap");
         p.set_mem_caps_from(&c);
         p.place(0, 0, 0, 2).unwrap();
+    }
+
+    #[test]
+    fn prop_bitset_storage_matches_dense_model() {
+        // The flattened u64-word storage must behave exactly like the
+        // naive dense-bool tensor it replaced, under arbitrary interleaved
+        // place / remove / drain / evict sequences — including multi-word
+        // rows (DeepSeek: 26 × 64 = 1664 eids = 26 words per GPU row).
+        let m = ModelConfig::deepseek_v2_lite_sim();
+        let c = ClusterConfig::edge_testbed_3_for(&m);
+        crate::util::prop::check("bitset == dense bool model", 30, |g| {
+            let mut p = Placement::new(&m, &c);
+            let total = m.total_experts();
+            let gpus: Vec<usize> =
+                c.servers.iter().map(|s| s.gpus.len()).collect();
+            // the model: assign/draining as dense bools
+            let mut massign: Vec<Vec<Vec<bool>>> = gpus
+                .iter()
+                .map(|&n| vec![vec![false; total]; n])
+                .collect();
+            let mut mdrain = massign.clone();
+            for _ in 0..120 {
+                let s = g.usize_in(0, c.num_servers() - 1);
+                let gp = g.usize_in(0, gpus[s] - 1);
+                let l = g.usize_in(0, m.num_layers - 1);
+                let e = g.usize_in(0, m.num_experts - 1);
+                let eid = l * m.num_experts + e;
+                match g.usize_in(0, 3) {
+                    0 => {
+                        if p.place(s, gp, l, e).is_ok() {
+                            massign[s][gp][eid] = true;
+                        }
+                    }
+                    1 => {
+                        if p.remove(s, gp, l, e).is_ok() {
+                            massign[s][gp][eid] = false;
+                            mdrain[s][gp][eid] = false;
+                        }
+                    }
+                    2 => {
+                        if p.begin_drain(s, gp, l, e).is_ok() {
+                            mdrain[s][gp][eid] = true;
+                        }
+                    }
+                    _ => {
+                        if p.finish_drain(s, gp, l, e).is_ok() {
+                            massign[s][gp][eid] = false;
+                            mdrain[s][gp][eid] = false;
+                        }
+                    }
+                }
+            }
+            // full-state comparison against the model
+            let mut replicas = 0usize;
+            for s in 0..c.num_servers() {
+                for gp in 0..gpus[s] {
+                    for eid in 0..total {
+                        let (l, e) = (eid / m.num_experts, eid % m.num_experts);
+                        crate::util::prop::assert_prop(
+                            p.gpu_has(s, gp, l, e) == massign[s][gp][eid],
+                            "gpu_has diverged from the dense model",
+                        );
+                        crate::util::prop::assert_prop(
+                            p.is_draining(s, gp, l, e) == mdrain[s][gp][eid],
+                            "is_draining diverged from the dense model",
+                        );
+                        if massign[s][gp][eid] {
+                            replicas += 1;
+                        }
+                    }
+                }
+            }
+            crate::util::prop::assert_prop(
+                p.total_replicas() == replicas,
+                "popcount total diverged",
+            );
+            for s in 0..c.num_servers() {
+                for l in 0..m.num_layers {
+                    for e in 0..m.num_experts {
+                        let eid = l * m.num_experts + e;
+                        let active = (0..gpus[s]).any(|gp| {
+                            massign[s][gp][eid] && !mdrain[s][gp][eid]
+                        });
+                        crate::util::prop::assert_prop(
+                            p.server_has(s, l, e) == active,
+                            "server_has union diverged",
+                        );
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn added_replicas_word_diff_matches_dense_order() {
+        // multi-word diff decodes the same (s, g, l, e) list, in the same
+        // order, as the dense scan it replaced
+        let m = ModelConfig::deepseek_v2_lite_sim();
+        let c = ClusterConfig::edge_testbed_3_for(&m);
+        let mut a = Placement::new(&m, &c);
+        let mut b = Placement::new(&m, &c);
+        a.place(0, 0, 0, 0).unwrap();
+        b.place(0, 0, 0, 0).unwrap();
+        // additions spanning several words and servers
+        b.place(0, 0, 0, 63).unwrap();
+        b.place(0, 0, 1, 0).unwrap();
+        b.place(1, 0, 7, 33).unwrap();
+        b.place(2, 1, 25, 63).unwrap();
+        assert_eq!(
+            a.added_replicas(&b),
+            vec![(0, 0, 0, 63), (0, 0, 1, 0), (1, 0, 7, 33), (2, 1, 25, 63)]
+        );
+        assert!(b.added_replicas(&a).is_empty());
     }
 
     #[test]

@@ -212,6 +212,11 @@ pub struct Gateway {
     offered: u64,
     spilled: u64,
     completions_seen: usize,
+    /// Reused per-arrival routing buffers (the capacity-aware preference
+    /// order depends on live queue depths, so it is rebuilt per arrival —
+    /// into these, allocation-free).
+    route_order: Vec<usize>,
+    route_residual: Vec<usize>,
     /// Multi-tenant state (all empty/None for single-tenant runs):
     /// per-interval SLO windows and the precomputed per-tenant
     /// expert-activation masses the boost is built from.
@@ -308,6 +313,8 @@ impl Gateway {
             offered: 0,
             spilled: 0,
             completions_seen: 0,
+            route_order: Vec::new(),
+            route_residual: Vec::new(),
             tenant_bus,
             tenant_masses,
             cfg,
@@ -394,19 +401,20 @@ impl Gateway {
         // residual is the room in the queue *this request's tenant* would
         // enter (for single-tenant runs that is the whole server queue).
         let placed: Option<(usize, usize)> = {
-            let capacity_order: Vec<usize>;
             let order: &[usize] = if self.cfg.locality_routing {
                 if self.cfg.capacity_routing {
-                    let residual: Vec<usize> = (0..self
-                        .admission
-                        .num_servers())
-                        .map(|s| {
-                            self.admission.tenant_residual(s, req.tenant)
-                        })
-                        .collect();
-                    capacity_order =
-                        self.router.ranked_capacity(req.task, home, &residual);
-                    &capacity_order
+                    self.route_residual.clear();
+                    for s in 0..self.admission.num_servers() {
+                        self.route_residual
+                            .push(self.admission.tenant_residual(s, req.tenant));
+                    }
+                    self.router.ranked_capacity_into(
+                        req.task,
+                        home,
+                        &self.route_residual,
+                        &mut self.route_order,
+                    );
+                    &self.route_order
                 } else {
                     self.router.ranked(req.task, home)
                 }

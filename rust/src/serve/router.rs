@@ -151,12 +151,29 @@ impl LocalityRouter {
         home: usize,
         residual: &[usize],
     ) -> Vec<usize> {
+        let mut idx = Vec::new();
+        self.ranked_capacity_into(task, home, residual, &mut idx);
+        idx
+    }
+
+    /// Allocation-free form of [`LocalityRouter::ranked_capacity`]: fills
+    /// `out` with the same permutation. The gateway calls this once per
+    /// arrival with a reused buffer, so the per-arrival routing path
+    /// allocates nothing beyond the admitted request itself.
+    pub fn ranked_capacity_into(
+        &self,
+        task: TaskKind,
+        home: usize,
+        residual: &[usize],
+        out: &mut Vec<usize>,
+    ) {
         let row = &self.scores[Self::task_index(task)];
         let best = row.iter().cloned().fold(0.0f64, f64::max);
         let band = best * (1.0 - self.capacity_band);
         let res = |s: usize| residual.get(s).copied().unwrap_or(0);
-        let mut idx: Vec<usize> = (0..self.num_servers).collect();
-        idx.sort_by(|&a, &b| {
+        out.clear();
+        out.extend(0..self.num_servers);
+        out.sort_by(|&a, &b| {
             let ia = row[a] >= band;
             let ib = row[b] >= band;
             // in-band servers first
@@ -173,7 +190,6 @@ impl LocalityRouter {
                 .then_with(|| (b == home).cmp(&(a == home)))
                 .then(a.cmp(&b))
         });
-        idx
     }
 
     /// Split `total` requests across the replica band proportionally to

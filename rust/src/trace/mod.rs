@@ -14,7 +14,7 @@ use crate::config::{ModelConfig, StreamConfig, TaskKind, WorkloadConfig};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::Result;
-pub use task::TaskProfile;
+pub use task::{GateScratch, TaskProfile};
 
 /// Sample a prompt length for `stream`: geometric-ish spread around the
 /// mean with a floor of 8 tokens (prompts are never empty). Shared by the

@@ -21,11 +21,13 @@ pub fn profiles_from_stats(
     model: &ModelConfig,
 ) -> Vec<TaskProfile> {
     (0..stats.num_servers())
-        .map(|n| TaskProfile {
-            task: TaskKind::all()[n % TaskKind::all().len()],
-            dist: (0..model.num_layers)
-                .map(|l| normalize(&stats.servers[n].freq[l]))
-                .collect(),
+        .map(|n| {
+            TaskProfile::from_dist(
+                TaskKind::all()[n % TaskKind::all().len()],
+                (0..model.num_layers)
+                    .map(|l| normalize(&stats.servers[n].freq[l]))
+                    .collect(),
+            )
         })
         .collect()
 }
@@ -54,10 +56,10 @@ pub fn profiles_from_json(j: &Json) -> Result<Vec<TaskProfile>> {
                 .iter()
                 .map(|l| l.to_f64_vec())
                 .collect::<Result<Vec<_>>>()?;
-            Ok(TaskProfile {
-                task: TaskKind::all()[i % TaskKind::all().len()],
+            Ok(TaskProfile::from_dist(
+                TaskKind::all()[i % TaskKind::all().len()],
                 dist,
-            })
+            ))
         })
         .collect()
 }

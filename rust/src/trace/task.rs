@@ -21,15 +21,44 @@ use crate::util::stats::entropy_bits;
 /// task seed makes the *location* of skewed layers task-dependent too.
 const CONCENTRATIONS: [f64; 5] = [0.06, 0.12, 0.35, 1.5, 8.0];
 
+/// Reusable scratch buffers for the gate samplers, so the engine's
+/// per-layer-pass sampling allocates nothing in steady state. `counts` is
+/// the output of the `*_into` samplers; the other buffers are internals
+/// (the working weight/residual vector and the per-token pick list).
+#[derive(Debug, Clone, Default)]
+pub struct GateScratch {
+    /// Dense per-expert token counts — the last `*_into` call's output.
+    pub counts: Vec<u32>,
+    picked: Vec<usize>,
+    wbuf: Vec<f64>,
+}
+
 /// A task's activation profile over a model's experts.
 #[derive(Debug, Clone)]
 pub struct TaskProfile {
     pub task: TaskKind,
     /// `dist[layer][expert]` — probability, rows sum to 1.
+    ///
+    /// Treated as immutable after construction: the sampler cache below
+    /// (`totals`) is derived from it once, so mutating a row directly
+    /// would desynchronize it. Build profiles through
+    /// [`TaskProfile::build`] or [`TaskProfile::from_dist`].
     pub dist: Vec<Vec<f64>>,
+    /// Per-layer `dist[layer].iter().sum::<f64>()`, cached with the same
+    /// left-to-right fold so it is bit-identical to the total the
+    /// reference sampler recomputes before a token's first draw.
+    totals: Vec<f64>,
 }
 
 impl TaskProfile {
+    /// Wrap an explicit distribution table, building the sampler cache.
+    /// Rows are expected to be non-negative (normalization is the
+    /// caller's concern — recorded profiles normalize observations).
+    pub fn from_dist(task: TaskKind, dist: Vec<Vec<f64>>) -> TaskProfile {
+        let totals = dist.iter().map(|row| row.iter().sum()).collect();
+        TaskProfile { task, dist, totals }
+    }
+
     /// Build the deterministic profile for `task` on `model`.
     pub fn build(task: TaskKind, model: &ModelConfig) -> TaskProfile {
         let mut rng = Rng::new(task.seed() ^ (model.num_experts as u64) << 32);
@@ -56,7 +85,7 @@ impl TaskProfile {
             }
             dist.push(p);
         }
-        TaskProfile { task, dist }
+        TaskProfile::from_dist(task, dist)
     }
 
     /// Build all six task profiles for a model.
@@ -94,6 +123,10 @@ impl TaskProfile {
     /// Sample expert token-counts for a batch of `tokens` tokens at
     /// `layer` with top-`k` routing. Returns a dense count vector of
     /// length `num_experts` summing to `tokens * k`.
+    ///
+    /// Convenience wrapper over [`TaskProfile::sample_batch_into`]; the
+    /// engine's hot path uses the `_into` form with a reused
+    /// [`GateScratch`] so steady-state sampling allocates nothing.
     pub fn sample_batch(
         &self,
         rng: &mut Rng,
@@ -101,19 +134,68 @@ impl TaskProfile {
         tokens: usize,
         k: usize,
     ) -> Vec<u32> {
+        let mut scratch = GateScratch::default();
+        self.sample_batch_into(rng, layer, tokens, k, &mut scratch);
+        scratch.counts
+    }
+
+    /// Allocation-free form of [`TaskProfile::sample_batch`]: fills
+    /// `scratch.counts` (cleared and resized to `num_experts`).
+    ///
+    /// Performs the reference sampler's **exact** decision procedure —
+    /// same uniform stream (one `rng.f64()` per draw, none on the
+    /// degenerate path), same fold order, same subtract-scan crossing —
+    /// with its overheads removed: the per-call `dist` clone becomes a
+    /// reused-buffer copy, the token's first draw uses the cached layer
+    /// total (bit-identical: the working weights equal `dist` at token
+    /// start), and the reference's three O(E) passes per draw (degeneracy
+    /// sum, categorical's own sum, the scan) fuse into at most one sum
+    /// plus one scan.
+    ///
+    /// Deliberately **not** a CDF binary search: a prototyped
+    /// O(log E) draw over cached prefix sums with incrementally-maintained
+    /// remaining mass diverges from the reference stream under
+    /// catastrophic cancellation — the Dirichlet(0.06) profile layers mix
+    /// weights spanning ~20 orders of magnitude, where `total − Σpicked`
+    /// is rounding residue rather than the true remaining mass (fuzzing
+    /// found divergent picks at ~4% of trials, including duplicate picks
+    /// where the adjusted prefix lost monotonicity). Byte-identical
+    /// replay is the contract (`tests/hotpath_determinism.rs`), so the
+    /// scan stays; with E ≤ 64 it is a handful of adds per draw, and the
+    /// removed allocations were the actual hot-path cost.
+    pub fn sample_batch_into(
+        &self,
+        rng: &mut Rng,
+        layer: usize,
+        tokens: usize,
+        k: usize,
+        scratch: &mut GateScratch,
+    ) {
         let e = self.num_experts();
-        let mut counts = vec![0u32; e];
         let k = k.min(e);
-        // single scratch buffer: zero the selected entries during a token's
-        // k draws, restore afterwards (avoids the per-token Vec clone of
-        // rng.categorical_k — this is the decode hot path)
+        scratch.counts.clear();
+        scratch.counts.resize(e, 0);
+        if tokens == 0 || k == 0 {
+            return;
+        }
         let dist = &self.dist[layer];
-        let mut w = dist.clone();
-        let mut picked: Vec<usize> = Vec::with_capacity(k);
+        let full_total = self.totals[layer];
+        scratch.wbuf.clear();
+        scratch.wbuf.extend_from_slice(dist);
+        let w = &mut scratch.wbuf;
+        let picked = &mut scratch.picked;
         for _ in 0..tokens {
             picked.clear();
-            for _ in 0..k {
-                if w.iter().sum::<f64>() <= 0.0 {
+            for d in 0..k {
+                // the reference recomputes Σw before every draw; at a
+                // token's first draw w == dist, so the cached layer total
+                // is the same fold bit-for-bit
+                let total = if d == 0 {
+                    full_total
+                } else {
+                    w.iter().sum::<f64>()
+                };
+                if total <= 0.0 {
                     // degenerate: fill with unused indices deterministically
                     for j in 0..e {
                         if picked.len() == k {
@@ -125,16 +207,25 @@ impl TaskProfile {
                     }
                     break;
                 }
-                let idx = rng.categorical(&w);
+                // fused categorical draw: the same subtract-scan the
+                // reference's `rng.categorical` performs
+                let mut u = rng.f64() * total;
+                let mut idx = e - 1;
+                for (i, &wi) in w.iter().enumerate() {
+                    u -= wi;
+                    if u <= 0.0 {
+                        idx = i;
+                        break;
+                    }
+                }
                 picked.push(idx);
                 w[idx] = 0.0;
             }
-            for &idx in &picked {
-                counts[idx] += 1;
+            for &idx in picked.iter() {
+                scratch.counts[idx] += 1;
                 w[idx] = dist[idx];
             }
         }
-        counts
     }
 
     /// Fast batch routing for large prefill batches: expected counts with a
@@ -148,12 +239,32 @@ impl TaskProfile {
         tokens: usize,
         k: usize,
     ) -> Vec<u32> {
+        let mut scratch = GateScratch::default();
+        self.sample_batch_fast_into(rng, layer, tokens, k, &mut scratch);
+        scratch.counts
+    }
+
+    /// Allocation-free form of [`TaskProfile::sample_batch_fast`] (same
+    /// algorithm and RNG stream; the count and residual buffers live in
+    /// `scratch`).
+    pub fn sample_batch_fast_into(
+        &self,
+        rng: &mut Rng,
+        layer: usize,
+        tokens: usize,
+        k: usize,
+        scratch: &mut GateScratch,
+    ) {
         let e = self.num_experts();
         let k = k.min(e);
         let target = (tokens * k) as u32;
         let dist = &self.dist[layer];
-        let mut counts = vec![0u32; e];
-        let mut residual = vec![0.0f64; e];
+        scratch.counts.clear();
+        scratch.counts.resize(e, 0);
+        scratch.wbuf.clear();
+        scratch.wbuf.resize(e, 0.0);
+        let counts = &mut scratch.counts;
+        let residual = &mut scratch.wbuf;
         let mut placed: u32 = 0;
         for i in 0..e {
             let exact = (k as f64 * dist[i] * tokens as f64)
@@ -178,14 +289,13 @@ impl TaskProfile {
                 placed += 1;
                 continue;
             }
-            let i = rng.categorical(&residual);
+            let i = rng.categorical(residual);
             if counts[i] < tokens as u32 {
                 counts[i] += 1;
                 placed += 1;
             }
             residual[i] = 0.0;
         }
-        counts
     }
 
     /// Expected (non-sampled) batch counts — used by the fast analytic path

@@ -137,7 +137,7 @@ fn bursts_scale_out_troughs_scale_in_and_p95_beats_fixed() {
     // no drained-replica routing violation is possible structurally: every
     // draining replica is outside the owner set the engine routes over
     for (s, g, l, e) in gw.engine.placement.draining_replicas() {
-        assert!(!gw.engine.placement.owners(l, e).contains(&(s, g)));
+        assert!(!gw.engine.placement.owners_ref(l, e).contains(&(s, g)));
         assert!(gw.engine.placement.active_count(l, e) >= 1);
     }
 
@@ -248,7 +248,7 @@ fn prop_drained_replicas_never_routable() {
                 if !g.bool() {
                     continue;
                 }
-                let owners = p.owners(l, e);
+                let owners = p.owners_ref(l, e).to_vec();
                 if owners.len() < 2 {
                     continue;
                 }
@@ -264,7 +264,7 @@ fn prop_drained_replicas_never_routable() {
         }
         for &(s, gpu, l, e) in &drained {
             prop::assert_prop(
-                !p.owners(l, e).contains(&(s, gpu)),
+                !p.owners_ref(l, e).contains(&(s, gpu)),
                 "draining replica still in the owner set",
             );
             prop::assert_prop(
@@ -326,7 +326,7 @@ fn scale_in_during_drain_is_rejected() {
 
     // the drain removed (dst, 0) from the owner set, so every remaining
     // owner is the last active replica — undrainable
-    let owners = engine.placement.owners(l, e);
+    let owners = engine.placement.owners_ref(l, e).to_vec();
     assert!(!owners.contains(&(dst, 0)));
     for &(s, g) in &owners {
         assert!(

@@ -1,0 +1,546 @@
+//! The hot-path overhaul's safety contract: **byte-identical results**.
+//!
+//! The optimized engine (slab event queue, packed queue keys, zero-alloc
+//! layer passes, fused gate sampling, bitset placement, cached
+//! earliest-GPU argmin) must produce exactly the results of the frozen
+//! pre-overhaul implementation ([`dancemoe::engine::reference`]): the
+//! same RNG draw sequence, the same event order, bit-identical reports.
+//! This suite pins that equivalence three ways:
+//!
+//! 1. **sampler stream equivalence** — the fused zero-alloc gate sampler
+//!    consumes the identical uniform stream and picks the identical
+//!    experts as the reference implementation, including degenerate
+//!    recorded profiles with fewer positive-weight experts than `k`;
+//! 2. **engine equivalence** — offline trace runs (collaborative +
+//!    offload modes, both model topologies, recorded-profile replays) and
+//!    a gateway-style online script (staggered injection, segmented
+//!    `run_until`, a mid-run migration and a scale-out/scale-in cycle)
+//!    produce bitwise-equal reports, stats, placements and scale events
+//!    on both engines, at multiple seeds;
+//! 3. **serving-stack replay** — full `gateway`, `autoscale` and
+//!    `tenants` runs serialize to byte-identical metric documents across
+//!    repeated runs at 2 seeds each, so no nondeterminism (or
+//!    iteration-order dependence) can hide above the engine either.
+//!
+//! Plus the slab's memory contract: the optimized engine's event storage
+//! high-water is bounded by in-flight events, strictly below the
+//! reference engine's grow-only event store on any long run.
+
+use dancemoe::autoscale::AutoscaleConfig;
+use dancemoe::config::{ClusterConfig, ModelConfig, TaskKind, WorkloadConfig};
+use dancemoe::coordinator::CoordinatorConfig;
+use dancemoe::engine::reference::{
+    ref_sample_batch, ref_sample_batch_fast, RefEngine,
+};
+use dancemoe::engine::{
+    warm_stats, CostModel, Engine, EngineConfig, Mode, ServeReport,
+};
+use dancemoe::moe::ActivationStats;
+use dancemoe::placement::{uniform, Placement, PlacementAlgo};
+use dancemoe::serve::tenant::{bench_file_json, bursty_comparison};
+use dancemoe::serve::{ArrivalProfile, Gateway, GatewayConfig, GatewayReport};
+use dancemoe::trace::recorded::profiles_from_stats;
+use dancemoe::trace::{TaskProfile, TraceGenerator};
+use dancemoe::util::json::Json;
+use dancemoe::util::rng::Rng;
+
+// ---------------------------------------------------------------- digests
+
+fn fnv(h: &mut u64, x: u64) {
+    *h ^= x;
+    *h = h.wrapping_mul(0x100_0000_01b3);
+}
+
+/// Bitwise digest of everything a serve run reports: any drift in RNG
+/// draws, event order, booking times or accounting flips it.
+fn report_digest(rep: &ServeReport) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    fnv(&mut h, rep.records.len() as u64);
+    for r in &rep.records {
+        fnv(&mut h, r.id as u64);
+        fnv(&mut h, r.server as u64);
+        fnv(&mut h, r.tenant as u64);
+        for v in [
+            r.arrival_s,
+            r.done_s,
+            r.latency_s,
+            r.local_token_invocations,
+            r.remote_token_invocations,
+        ] {
+            fnv(&mut h, v.to_bits());
+        }
+    }
+    fnv(&mut h, rep.net_bytes.to_bits());
+    for b in &rep.gpu_busy_s {
+        fnv(&mut h, b.to_bits());
+    }
+    for &(t, n, d) in &rep.migrations {
+        fnv(&mut h, t.to_bits());
+        fnv(&mut h, n as u64);
+        fnv(&mut h, d.to_bits());
+    }
+    for b in &rep.timeline {
+        fnv(&mut h, b.local.to_bits());
+        fnv(&mut h, b.remote.to_bits());
+        fnv(&mut h, b.completed as u64);
+        fnv(&mut h, b.latency_sum.to_bits());
+    }
+    h
+}
+
+fn stats_digest(stats: &ActivationStats) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for s in &stats.servers {
+        fnv(&mut h, s.total.to_bits());
+        for l in &s.freq {
+            for &f in l {
+                fnv(&mut h, f.to_bits());
+            }
+        }
+    }
+    h
+}
+
+// ----------------------------------------------- 1. sampler equivalence
+
+fn assert_same_stream(
+    profile: &TaskProfile,
+    layer: usize,
+    tokens: usize,
+    k: usize,
+    seed: u64,
+) {
+    let mut r_ref = Rng::new(seed);
+    let mut r_opt = r_ref.clone();
+    let a = ref_sample_batch(profile, &mut r_ref, layer, tokens, k);
+    let b = profile.sample_batch(&mut r_opt, layer, tokens, k);
+    assert_eq!(a, b, "counts diverged (layer {layer}, t {tokens}, k {k})");
+    assert_eq!(
+        r_ref.next_u64(),
+        r_opt.next_u64(),
+        "RNG stream position diverged (layer {layer}, t {tokens}, k {k})"
+    );
+}
+
+#[test]
+fn sampler_matches_reference_stream_and_counts() {
+    for model in [
+        ModelConfig::mixtral_8x7b_sim(),
+        ModelConfig::deepseek_v2_lite_sim(),
+    ] {
+        let k = model.top_k;
+        for task in [TaskKind::Arithmetic, TaskKind::MmluPro] {
+            let p = TaskProfile::build(task, &model);
+            for layer in 0..p.num_layers().min(6) {
+                for tokens in [1, 2, 7, 15] {
+                    for seed in [1, 42, 977] {
+                        assert_same_stream(&p, layer, tokens, k, seed);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn sampler_matches_reference_on_degenerate_recorded_profiles() {
+    // recorded profiles can have fewer positive-weight experts than k —
+    // the degenerate-fill path must match the reference's zero-sum path
+    // exactly (and consume no randomness doing it)
+    let rows = vec![
+        vec![0.0; 8],                                        // all zero
+        {
+            let mut r = vec![0.0; 8];
+            r[3] = 1.0;                                      // one expert
+            r
+        },
+        {
+            let mut r = vec![0.0; 8];
+            r[1] = 0.25;
+            r[6] = 0.75;                                     // two experts
+            r
+        },
+        vec![0.125; 8],                                      // uniform
+    ];
+    let p = TaskProfile::from_dist(TaskKind::Arithmetic, rows);
+    for layer in 0..4 {
+        for k in [1, 2, 4] {
+            for tokens in [1, 3, 9] {
+                for seed in [5, 333] {
+                    assert_same_stream(&p, layer, tokens, k, seed);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn fast_sampler_matches_reference() {
+    let m = ModelConfig::deepseek_v2_lite_sim();
+    let p = TaskProfile::build(TaskKind::Taco, &m);
+    for (tokens, k) in [(16, 8), (37, 8), (128, 8), (100, 1)] {
+        for seed in [2, 71] {
+            let mut r_ref = Rng::new(seed);
+            let mut r_opt = r_ref.clone();
+            let a = ref_sample_batch_fast(&p, &mut r_ref, 0, tokens, k);
+            let b = p.sample_batch_fast(&mut r_opt, 0, tokens, k);
+            assert_eq!(a, b, "fast counts diverged (t {tokens}, k {k})");
+            assert_eq!(r_ref.next_u64(), r_opt.next_u64());
+        }
+    }
+}
+
+// ------------------------------------------------ 2. engine equivalence
+
+struct EnginePair {
+    reference: RefEngine,
+    optimized: Engine,
+}
+
+impl EnginePair {
+    fn new(
+        model: &ModelConfig,
+        cluster: &ClusterConfig,
+        placement: &Placement,
+        cfg: EngineConfig,
+    ) -> EnginePair {
+        EnginePair {
+            reference: RefEngine::new(
+                model,
+                cluster,
+                placement.clone(),
+                cfg.clone(),
+                CostModel::default(),
+            ),
+            optimized: Engine::new(
+                model,
+                cluster,
+                placement.clone(),
+                cfg,
+                CostModel::default(),
+            ),
+        }
+    }
+
+    fn assert_identical(&self, label: &str) {
+        assert_eq!(
+            report_digest(&self.reference.report),
+            report_digest(&self.optimized.report),
+            "{label}: report bits diverged"
+        );
+        assert_eq!(
+            stats_digest(&self.reference.stats),
+            stats_digest(&self.optimized.stats),
+            "{label}: activation stats diverged"
+        );
+        assert_eq!(
+            self.reference.events_processed(),
+            self.optimized.events_processed(),
+            "{label}: event counts diverged"
+        );
+        assert_eq!(
+            self.reference.placement, self.optimized.placement,
+            "{label}: placements diverged"
+        );
+        assert_eq!(
+            self.reference
+                .measured_remote_penalty_s()
+                .map(f64::to_bits),
+            self.optimized
+                .measured_remote_penalty_s()
+                .map(f64::to_bits),
+            "{label}: remote-penalty estimator diverged"
+        );
+        assert_eq!(
+            self.reference.redirects, self.optimized.redirects,
+            "{label}: offload-LB redirects diverged"
+        );
+    }
+}
+
+#[test]
+fn offline_runs_byte_identical_across_modes_models_and_seeds() {
+    // mixtral topology, collaborative, two placements, two seeds
+    let mut m = ModelConfig::mixtral_8x7b_sim();
+    m.num_layers = 4;
+    let c = ClusterConfig::edge_testbed_3_for(&m);
+    let w = WorkloadConfig::bigbench(10.0);
+    let stats = warm_stats(&m, &w);
+    for placement in [
+        uniform::place(&m, &c),
+        PlacementAlgo::DanceMoE.compute(&m, &c, &stats, 1),
+    ] {
+        for seed in [3u64, 17] {
+            let cfg = EngineConfig {
+                seed,
+                ..EngineConfig::default()
+            };
+            let mut pair = EnginePair::new(&m, &c, &placement, cfg);
+            let trace = TraceGenerator::new(&m, &w, seed).gen_count(30);
+            pair.reference.push_trace(&trace);
+            pair.optimized.push_trace(&trace);
+            pair.reference.run();
+            pair.optimized.run();
+            pair.assert_identical(&format!("mixtral seed {seed}"));
+            assert!(
+                pair.optimized.event_slab_high_water()
+                    < pair.reference.event_store_len() / 4,
+                "slab high-water {} not bounded by in-flight events \
+                 (reference grow-only store: {})",
+                pair.optimized.event_slab_high_water(),
+                pair.reference.event_store_len()
+            );
+        }
+    }
+
+    // deepseek topology (top-8, E=64: multi-word bitsets, fast prefill
+    // sampler + exact decode sampler both exercised)
+    let mut ds = ModelConfig::deepseek_v2_lite_sim();
+    ds.num_layers = 6;
+    let dc = ClusterConfig::edge_testbed_3_for(&ds);
+    let dw = WorkloadConfig::bigbench(8.0);
+    let dstats = warm_stats(&ds, &dw);
+    let dp = PlacementAlgo::DanceMoE.compute(&ds, &dc, &dstats, 1);
+    let cfg = EngineConfig {
+        seed: 9,
+        ..EngineConfig::default()
+    };
+    let mut pair = EnginePair::new(&ds, &dc, &dp, cfg);
+    let trace = TraceGenerator::new(&ds, &dw, 9).gen_count(20);
+    pair.reference.push_trace(&trace);
+    pair.optimized.push_trace(&trace);
+    pair.reference.run();
+    pair.optimized.run();
+    pair.assert_identical("deepseek seed 9");
+
+    // offload mode with load balancing (expert cache + redirect paths)
+    let cfg = EngineConfig {
+        mode: Mode::Offload { lb: true },
+        seed: 5,
+        ..EngineConfig::default()
+    };
+    let mut pair = EnginePair::new(&m, &c, &uniform::place(&m, &c), cfg);
+    let trace = TraceGenerator::new(&m, &w, 5).gen_count(25);
+    pair.reference.push_trace(&trace);
+    pair.optimized.push_trace(&trace);
+    pair.reference.run();
+    pair.optimized.run();
+    pair.assert_identical("offload-lb seed 5");
+}
+
+#[test]
+fn recorded_profile_replay_byte_identical() {
+    // the replay-vs-live harness path: per-server recorded profiles drive
+    // the gate instead of the task tables
+    let mut m = ModelConfig::mixtral_8x7b_sim();
+    m.num_layers = 4;
+    let c = ClusterConfig::edge_testbed_3_for(&m);
+    let w = WorkloadConfig::bigbench(6.0);
+    let placement = uniform::place(&m, &c);
+    // capture stats from a live run, then replay them on both engines
+    let capture = {
+        let cfg = EngineConfig {
+            seed: 13,
+            ..EngineConfig::default()
+        };
+        let mut eng = Engine::new(
+            &m,
+            &c,
+            placement.clone(),
+            cfg,
+            CostModel::default(),
+        );
+        let trace = TraceGenerator::new(&m, &w, 13).gen_count(20);
+        eng.push_trace(&trace);
+        eng.run();
+        profiles_from_stats(&eng.stats, &m)
+    };
+    let cfg = EngineConfig {
+        seed: 29,
+        ..EngineConfig::default()
+    };
+    let mut pair = EnginePair::new(&m, &c, &placement, cfg);
+    pair.reference.set_server_profiles(capture.clone());
+    pair.optimized.set_server_profiles(capture);
+    let trace = TraceGenerator::new(&m, &w, 29).gen_count(20);
+    pair.reference.push_trace(&trace);
+    pair.optimized.push_trace(&trace);
+    pair.reference.run();
+    pair.optimized.run();
+    pair.assert_identical("recorded replay seed 29");
+}
+
+#[test]
+fn online_script_with_migration_and_scaling_byte_identical() {
+    // the gateway's co-simulation pattern: staggered injection, segmented
+    // run_until, a migration mid-run, then a scale-out / scale-in cycle
+    let mut m = ModelConfig::mixtral_8x7b_sim();
+    m.num_layers = 4;
+    let c = ClusterConfig::edge_testbed_3_for(&m);
+    let w = WorkloadConfig::bigbench(4.0);
+    let stats = warm_stats(&m, &w);
+    let initial = uniform::place(&m, &c);
+    let target = PlacementAlgo::DanceMoE.compute(&m, &c, &stats, 1);
+    let cfg = EngineConfig {
+        seed: 11,
+        ..EngineConfig::default()
+    };
+    let mut pair = EnginePair::new(&m, &c, &initial, cfg);
+    let trace = TraceGenerator::new(&m, &w, 11).gen_count(20);
+    for (i, r) in trace.requests.iter().enumerate() {
+        let at = r.arrival_s + 0.25 * (i % 3) as f64;
+        pair.reference.push_request_at(r.clone(), at);
+        pair.optimized.push_request_at(r.clone(), at);
+    }
+    // segmented stepping with bitwise queue-head agreement at every step
+    let mut t = 2.0;
+    while t < 40.0 {
+        let a = pair.reference.run_until(t);
+        let b = pair.optimized.run_until(t);
+        assert_eq!(
+            a.map(f64::to_bits),
+            b.map(f64::to_bits),
+            "next-event time diverged at t={t}"
+        );
+        t += 3.0;
+    }
+    // migration while traffic is in flight
+    let at_ref = pair.reference.schedule_migration(target.clone());
+    let at_opt = pair.optimized.schedule_migration(target.clone());
+    assert_eq!(at_ref.to_bits(), at_opt.to_bits(), "migration apply time");
+    pair.reference.run_until(at_ref + 5.0);
+    pair.optimized.run_until(at_opt + 5.0);
+    assert_eq!(pair.reference.placement, pair.optimized.placement);
+
+    // scale-out a replica, then drain it back out (choose the target from
+    // the shared placement state so both engines see the same operation)
+    let (l, e) = (0, 0);
+    let src = pair.optimized.placement.owners_ref(l, e)[0].0;
+    let dst = (0..c.num_servers())
+        .find(|&s| !pair.optimized.placement.server_holds(s, l, e));
+    if let Some(dst) = dst {
+        let out_ref =
+            pair.reference.schedule_scale_out(l, e, dst, 0, src).unwrap();
+        let out_opt =
+            pair.optimized.schedule_scale_out(l, e, dst, 0, src).unwrap();
+        assert_eq!(out_ref.to_bits(), out_opt.to_bits(), "scale-out time");
+        pair.reference.run_until(out_ref + 1.0);
+        pair.optimized.run_until(out_opt + 1.0);
+        let in_ref =
+            pair.reference.schedule_scale_in(l, e, dst, 0, 10.0).unwrap();
+        let in_opt =
+            pair.optimized.schedule_scale_in(l, e, dst, 0, 10.0).unwrap();
+        assert_eq!(in_ref.to_bits(), in_opt.to_bits(), "scale-in time");
+    }
+    pair.reference.run();
+    pair.optimized.run();
+    pair.assert_identical("online script seed 11");
+    let ev_ref: Vec<_> = pair
+        .reference
+        .scale_events
+        .iter()
+        .map(|e| (e.t_s.to_bits(), e.kind, e.layer, e.expert, e.server, e.gpu, e.applied))
+        .collect();
+    let ev_opt: Vec<_> = pair
+        .optimized
+        .scale_events
+        .iter()
+        .map(|e| (e.t_s.to_bits(), e.kind, e.layer, e.expert, e.server, e.gpu, e.applied))
+        .collect();
+    assert_eq!(ev_ref, ev_opt, "scale event streams diverged");
+}
+
+// ------------------------------------------- 3. serving-stack replay
+
+fn gateway_metrics(rep: &GatewayReport) -> Json {
+    Json::from_pairs(vec![
+        ("offered", Json::Num(rep.offered as f64)),
+        ("admitted", Json::Num(rep.admitted as f64)),
+        ("shed", Json::Num(rep.shed as f64)),
+        ("spilled", Json::Num(rep.spilled as f64)),
+        ("batches", Json::Num(rep.batches as f64)),
+        ("bucket_slots", Json::Num(rep.bucket_slots as f64)),
+        ("refreshes", Json::Num(rep.refreshes as f64)),
+        ("migrations", Json::Num(rep.migrations as f64)),
+        ("scale_outs", Json::Num(rep.scale_outs as f64)),
+        ("scale_ins", Json::Num(rep.scale_ins as f64)),
+        ("p50_s", Json::Num(rep.latency_percentile(0.50))),
+        ("p95_s", Json::Num(rep.latency_percentile(0.95))),
+        ("p99_s", Json::Num(rep.latency_percentile(0.99))),
+        (
+            "records_digest",
+            Json::Str(format!("{:016x}", report_digest(&rep.serve))),
+        ),
+    ])
+}
+
+fn run_gateway(seed: u64, autoscale: bool) -> GatewayReport {
+    let mut m = ModelConfig::mixtral_8x7b_sim();
+    m.num_layers = 4;
+    let c = ClusterConfig::edge_testbed_3_for(&m);
+    let w = WorkloadConfig::bigbench(2.0);
+    let profile = if autoscale {
+        ArrivalProfile::Bursty {
+            factor: 4.0,
+            burst_s: 20.0,
+            period_s: 60.0,
+        }
+    } else {
+        ArrivalProfile::Poisson
+    };
+    let coord = CoordinatorConfig {
+        interval_s: 30.0,
+        seed,
+        autoscale: autoscale.then(|| AutoscaleConfig {
+            hi_ratio: 1.3,
+            lo_ratio: 0.8,
+            ..AutoscaleConfig::default()
+        }),
+        ..CoordinatorConfig::default()
+    };
+    let mut gw = Gateway::new(
+        &m,
+        &c,
+        &w,
+        uniform::place(&m, &c),
+        GatewayConfig {
+            horizon_s: 150.0,
+            profile,
+            seed,
+            ..GatewayConfig::default()
+        },
+        coord,
+    );
+    gw.run()
+}
+
+#[test]
+fn gateway_runs_serialize_byte_identically_across_reruns() {
+    for seed in [7u64, 21] {
+        let a = gateway_metrics(&run_gateway(seed, false)).pretty();
+        let b = gateway_metrics(&run_gateway(seed, false)).pretty();
+        assert_eq!(a, b, "gateway replay diverged at seed {seed}");
+    }
+}
+
+#[test]
+fn autoscale_runs_serialize_byte_identically_across_reruns() {
+    for seed in [7u64, 21] {
+        let a = gateway_metrics(&run_gateway(seed, true)).pretty();
+        let b = gateway_metrics(&run_gateway(seed, true)).pretty();
+        assert_eq!(a, b, "autoscale replay diverged at seed {seed}");
+    }
+}
+
+#[test]
+fn tenant_runs_serialize_byte_identically_across_reruns() {
+    for seed in [7u64, 21] {
+        let (w1, s1, _) = bursty_comparison(seed, 180.0);
+        let (w2, s2, _) = bursty_comparison(seed, 180.0);
+        assert_eq!(
+            bench_file_json(&w1, &s1).pretty(),
+            bench_file_json(&w2, &s2).pretty(),
+            "tenant replay diverged at seed {seed}"
+        );
+    }
+}

@@ -206,8 +206,8 @@ fn prop_owner_lookup_consistency() {
         let p = dancemoe_place(&model, &cluster, &stats);
         for l in 0..model.num_layers {
             for e in 0..model.num_experts {
-                let owners = p.owners(l, e);
-                for &(s, gi) in &owners {
+                let owners = p.owners_ref(l, e);
+                for &(s, gi) in owners {
                     assert_prop(p.gpu_has(s, gi, l, e), "owner not on gpu");
                     assert_prop(p.server_has(s, l, e), "owner not on server");
                 }
