@@ -1,0 +1,56 @@
+//! Regionalized serving benchmark: the canonical three-way comparison
+//! ([`dancemoe::serve::regions::regions_comparison`]) — multi-gateway
+//! with cross-region spill, isolated regions, and a single global
+//! gateway — written to `BENCH_regions.json` so the regional serving
+//! trajectory (and the acceptance comparison: spill reduces p95 and
+//! shed-rate vs the isolated baseline) is tracked across PRs
+//! machine-readably.
+//!
+//! Like `BENCH_tenants.json`, the document carries **no wall-clock
+//! timings**: it is byte-identical across runs at the same seed (the
+//! replay regression in `tests/region_properties.rs` locks that), so CI
+//! artifact diffs show only real serving changes. Wall-clock for the
+//! three runs is still printed via the bench harness.
+//!
+//! The bench exits non-zero if spill fails to improve both p95 and
+//! shed-rate over the isolated baseline — the regional analogue of the
+//! hot-path bench's events/s floor.
+
+use dancemoe::serve::regions::{bench_file_json, regions_comparison};
+use dancemoe::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::new("regions");
+    let mut outcome = None;
+    b.run_once("spill + isolated + global runs (480 s, 3 regions)", || {
+        outcome = Some(regions_comparison(7, 480.0));
+    });
+    let (spill, isolated, global) = outcome.expect("comparison executed");
+    let out = std::path::Path::new("BENCH_regions.json");
+    bench_file_json(&spill, &isolated, &global)
+        .write_file(out)
+        .expect("write BENCH_regions.json");
+    println!(
+        "  wrote {} (p95 {:.2}s spill vs {:.2}s isolated vs {:.2}s global; \
+         shed {:.1}% vs {:.1}%; spill rate {:.1}%)",
+        out.display(),
+        spill.p95_s,
+        isolated.p95_s,
+        global.latency_percentile(0.95),
+        100.0 * spill.shed_rate(),
+        100.0 * isolated.shed_rate(),
+        100.0 * spill.spill_rate(),
+    );
+    if spill.p95_s >= isolated.p95_s || spill.shed_rate() >= isolated.shed_rate()
+    {
+        eprintln!(
+            "regions bench FAILED: spill must improve p95 \
+             ({:.3}s vs {:.3}s) and shed rate ({:.4} vs {:.4})",
+            spill.p95_s,
+            isolated.p95_s,
+            spill.shed_rate(),
+            isolated.shed_rate(),
+        );
+        std::process::exit(1);
+    }
+}

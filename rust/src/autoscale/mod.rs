@@ -247,6 +247,23 @@ impl Autoscaler {
             .count()
     }
 
+    /// In-flight scale-out copies per *destination* server. Admission
+    /// borrows shed headroom against these (the ROADMAP's
+    /// autoscale-aware admission): a copy that is seconds from landing
+    /// is capacity a burst-edge request can safely wait for.
+    pub fn pending_scale_outs_by_server(
+        &self,
+        num_servers: usize,
+    ) -> Vec<usize> {
+        let mut v = vec![0usize; num_servers];
+        for &(_, _, s, _) in &self.pending_out {
+            if s < num_servers {
+                v[s] += 1;
+            }
+        }
+        v
+    }
+
     /// Fold one interval's delta into the load EWMAs and reconcile tracked
     /// replicas against the (possibly migrated) placement. Runs every
     /// interval — including ones where arbitration suppresses decisions —

@@ -7,6 +7,10 @@
 //! available in host RAM; the GPU holds a frequency-aware cache of expert
 //! weights and misses pay `m_e / pcie` load time.
 
+pub mod topology;
+
+pub use topology::{RegionSpec, RegionTopology};
+
 use crate::config::{ClusterConfig, ModelConfig};
 
 /// One GPU's dynamic state.

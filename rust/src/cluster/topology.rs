@@ -1,0 +1,232 @@
+//! Region topology: the cluster partitioned into **regions** with
+//! inter-region link costs.
+//!
+//! The single-cluster serving stack assumed one flat network; the
+//! regionalized stack (ROADMAP "sharded/scaled gateways") tags every
+//! server with a region and prices cross-region traffic differently:
+//! each ordered region pair carries an extra one-way latency and a
+//! bandwidth multiplier applied on top of the base link parameters.
+//! Intra-region links are untouched (zero extra latency, scale 1), so a
+//! one-region topology degenerates to the old flat network bit for bit.
+//!
+//! Consumers:
+//! - [`crate::net::NetModel::with_topology`] — a merged-cluster network
+//!   whose cross-region links pay the topology's costs (the
+//!   single-global-gateway baseline's engine),
+//! - [`crate::net::NetModel::inter_region`] — the region-to-region link
+//!   mesh that cross-gateway **spill** forwards ride
+//!   ([`crate::serve::regions`]),
+//! - the `regions` CLI, which reports per-region serving metrics.
+
+use crate::config::ClusterConfig;
+use crate::{Error, Result};
+
+/// One region: a name plus the global server indices it owns.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RegionSpec {
+    pub name: String,
+    /// Global server indices belonging to this region. Contiguous in the
+    /// canonical constructors, but any partition is accepted.
+    pub servers: Vec<usize>,
+}
+
+/// The cluster's region partition plus inter-region link costs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RegionTopology {
+    pub regions: Vec<RegionSpec>,
+    /// server → region lookup (inverse of `regions[*].servers`)
+    region_of: Vec<usize>,
+    /// extra one-way latency between regions, seconds (`[r·R + q]`,
+    /// zero on the diagonal)
+    extra_lat: Vec<f64>,
+    /// bandwidth multiplier on cross-region links (`[r·R + q]`, one on
+    /// the diagonal)
+    bw_scale: Vec<f64>,
+}
+
+impl RegionTopology {
+    /// Contiguous partition: `sizes[i]` consecutive servers per region,
+    /// every cross-region pair at the same `extra_latency_s` /
+    /// `bandwidth_scale`. The common case — heterogeneity per pair goes
+    /// through [`RegionTopology::set_link`].
+    pub fn contiguous(
+        sizes: &[usize],
+        extra_latency_s: f64,
+        bandwidth_scale: f64,
+    ) -> RegionTopology {
+        assert!(!sizes.is_empty(), "at least one region");
+        let nr = sizes.len();
+        let mut regions = Vec::with_capacity(nr);
+        let mut region_of = Vec::new();
+        let mut next = 0usize;
+        for (i, &n) in sizes.iter().enumerate() {
+            assert!(n > 0, "region {i} has no servers");
+            regions.push(RegionSpec {
+                name: format!("region{i}"),
+                servers: (next..next + n).collect(),
+            });
+            for _ in 0..n {
+                region_of.push(i);
+            }
+            next += n;
+        }
+        let mut extra_lat = vec![0.0; nr * nr];
+        let mut bw_scale = vec![1.0; nr * nr];
+        for a in 0..nr {
+            for b in 0..nr {
+                if a != b {
+                    extra_lat[a * nr + b] = extra_latency_s.max(0.0);
+                    bw_scale[a * nr + b] = bandwidth_scale.max(1e-3);
+                }
+            }
+        }
+        RegionTopology {
+            regions,
+            region_of,
+            extra_lat,
+            bw_scale,
+        }
+    }
+
+    /// A single region covering `num_servers` servers: the degenerate
+    /// topology equal to the flat network.
+    pub fn single(num_servers: usize) -> RegionTopology {
+        Self::contiguous(&[num_servers], 0.0, 1.0)
+    }
+
+    pub fn num_regions(&self) -> usize {
+        self.regions.len()
+    }
+
+    /// Total servers across all regions.
+    pub fn num_servers(&self) -> usize {
+        self.region_of.len()
+    }
+
+    /// Region owning global server index `server`.
+    pub fn region_of(&self, server: usize) -> usize {
+        self.region_of[server]
+    }
+
+    /// Global server indices of `region`.
+    pub fn servers_of(&self, region: usize) -> &[usize] {
+        &self.regions[region].servers
+    }
+
+    /// Extra one-way latency from region `a` to region `b` (0 within a
+    /// region).
+    pub fn extra_latency(&self, a: usize, b: usize) -> f64 {
+        self.extra_lat[a * self.num_regions() + b]
+    }
+
+    /// Bandwidth multiplier from region `a` to region `b` (1 within a
+    /// region).
+    pub fn bandwidth_scale(&self, a: usize, b: usize) -> f64 {
+        self.bw_scale[a * self.num_regions() + b]
+    }
+
+    /// Override one ordered region pair's link parameters.
+    pub fn set_link(
+        &mut self,
+        a: usize,
+        b: usize,
+        extra_latency_s: f64,
+        bandwidth_scale: f64,
+    ) {
+        assert!(a != b, "intra-region links carry no extra cost");
+        let nr = self.num_regions();
+        self.extra_lat[a * nr + b] = extra_latency_s.max(0.0);
+        self.bw_scale[a * nr + b] = bandwidth_scale.max(1e-3);
+    }
+
+    /// Check the partition against a merged cluster: every server in
+    /// exactly one region, lookup consistent with the specs.
+    pub fn validate(&self, cluster: &ClusterConfig) -> Result<()> {
+        if self.num_servers() != cluster.num_servers() {
+            return Err(Error::Config(format!(
+                "topology covers {} servers but cluster has {}",
+                self.num_servers(),
+                cluster.num_servers()
+            )));
+        }
+        let mut seen = vec![false; self.num_servers()];
+        for (r, spec) in self.regions.iter().enumerate() {
+            if spec.servers.is_empty() {
+                return Err(Error::Config(format!("region {r} is empty")));
+            }
+            for &s in &spec.servers {
+                if s >= self.num_servers() || seen[s] {
+                    return Err(Error::Config(format!(
+                        "server {s} missing or claimed twice"
+                    )));
+                }
+                seen[s] = true;
+                if self.region_of[s] != r {
+                    return Err(Error::Config(format!(
+                        "server {s} lookup disagrees with region {r}"
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+
+    #[test]
+    fn contiguous_partition_and_lookup() {
+        let t = RegionTopology::contiguous(&[3, 3, 3], 0.05, 0.5);
+        assert_eq!(t.num_regions(), 3);
+        assert_eq!(t.num_servers(), 9);
+        assert_eq!(t.servers_of(1), &[3, 4, 5]);
+        for s in 0..9 {
+            assert_eq!(t.region_of(s), s / 3);
+        }
+        assert_eq!(t.extra_latency(0, 0), 0.0);
+        assert_eq!(t.extra_latency(0, 2), 0.05);
+        assert_eq!(t.bandwidth_scale(1, 1), 1.0);
+        assert_eq!(t.bandwidth_scale(2, 0), 0.5);
+    }
+
+    #[test]
+    fn single_region_is_flat() {
+        let t = RegionTopology::single(4);
+        assert_eq!(t.num_regions(), 1);
+        assert_eq!(t.extra_latency(0, 0), 0.0);
+        assert_eq!(t.bandwidth_scale(0, 0), 1.0);
+    }
+
+    #[test]
+    fn set_link_overrides_one_pair() {
+        let mut t = RegionTopology::contiguous(&[2, 2], 0.01, 1.0);
+        t.set_link(0, 1, 0.2, 0.25);
+        assert_eq!(t.extra_latency(0, 1), 0.2);
+        assert_eq!(t.bandwidth_scale(0, 1), 0.25);
+        // the reverse direction keeps the uniform parameters
+        assert_eq!(t.extra_latency(1, 0), 0.01);
+        assert_eq!(t.bandwidth_scale(1, 0), 1.0);
+    }
+
+    #[test]
+    fn validate_against_cluster() {
+        let m = ModelConfig::mixtral_8x7b_sim();
+        let c = crate::config::ClusterConfig::edge_testbed_3_for(&m);
+        assert!(RegionTopology::single(3).validate(&c).is_ok());
+        assert!(RegionTopology::contiguous(&[1, 1, 1], 0.0, 1.0)
+            .validate(&c)
+            .is_ok());
+        // wrong server count
+        assert!(RegionTopology::contiguous(&[2, 2], 0.0, 1.0)
+            .validate(&c)
+            .is_err());
+        // inconsistent lookup
+        let mut t = RegionTopology::contiguous(&[2, 1], 0.0, 1.0);
+        t.regions[0].servers = vec![0, 2];
+        t.regions[1].servers = vec![1];
+        assert!(t.validate(&c).is_err());
+    }
+}

@@ -124,6 +124,16 @@ pub struct Coordinator {
     /// per-tenant SLO pressures the gateway last published (empty in
     /// single-tenant runs) — see [`Coordinator::note_tenant_pressure`]
     pub tenant_pressure: Vec<f64>,
+    /// last tenant-derived expert boost (kept to combine with the
+    /// cross-region boost below)
+    tenant_boost: Vec<f64>,
+    /// region-level SLO pressure published by the multi-gateway
+    /// orchestrator (0.0 outside region mode) — relaxes the migration
+    /// threshold exactly like tenant pressure does
+    region_pressure: f64,
+    /// expert boost derived from traffic spilled *into* this region: the
+    /// receiving autoscaler prefers replicating what the spill activates
+    region_boost: Vec<f64>,
 }
 
 impl Coordinator {
@@ -145,6 +155,9 @@ impl Coordinator {
             refresh_starved: 0,
             bus: StatsBus::new(model, cluster.num_servers()),
             tenant_pressure: Vec::new(),
+            tenant_boost: Vec::new(),
+            region_pressure: 0.0,
+            region_boost: Vec::new(),
             model: model.clone(),
             cluster: cluster.clone(),
             cfg,
@@ -164,14 +177,52 @@ impl Coordinator {
         expert_boost: Vec<f64>,
     ) {
         self.tenant_pressure = pressures;
-        if let Some(a) = &mut self.autoscaler {
-            a.set_expert_boost(expert_boost);
-        }
+        self.tenant_boost = expert_boost;
+        self.push_boost();
     }
 
-    /// Max per-tenant SLO pressure currently in force (0.0 when none).
+    /// Publish the federated cross-region signal for this coordinator's
+    /// gateway (region mode only — see [`crate::serve::regions`]): the
+    /// region's own SLO pressure, which relaxes the migration-adoption
+    /// threshold exactly like tenant pressure, and the expert boost
+    /// derived from traffic spilled *into* this region, so the receiving
+    /// autoscaler prefers replicating the experts the spilled tasks
+    /// activate. Empty boost + zero pressure resets to neutral.
+    pub fn note_region_pressure(
+        &mut self,
+        pressure: f64,
+        expert_boost: Vec<f64>,
+    ) {
+        self.region_pressure = pressure.max(0.0);
+        self.region_boost = expert_boost;
+        self.push_boost();
+    }
+
+    /// Hand the autoscaler the element-wise max of the tenant-derived and
+    /// region-derived boosts (either may be empty = neutral).
+    fn push_boost(&mut self) {
+        let Some(a) = &mut self.autoscaler else { return };
+        let combined = if self.region_boost.is_empty() {
+            self.tenant_boost.clone()
+        } else if self.tenant_boost.is_empty() {
+            self.region_boost.clone()
+        } else {
+            self.tenant_boost
+                .iter()
+                .zip(&self.region_boost)
+                .map(|(&t, &r)| t.max(r))
+                .collect()
+        };
+        a.set_expert_boost(combined);
+    }
+
+    /// Max SLO pressure currently in force — per-tenant or region-level
+    /// (0.0 when none).
     pub fn max_tenant_pressure(&self) -> f64 {
-        self.tenant_pressure.iter().cloned().fold(0.0, f64::max)
+        self.tenant_pressure
+            .iter()
+            .cloned()
+            .fold(self.region_pressure, f64::max)
     }
 
     /// Seed the history (the paper's "initialized from historical data").
@@ -701,6 +752,38 @@ mod tests {
         coord.note_tenant_pressure(Vec::new(), Vec::new());
         let _ = coord.on_interval(&mut engine, 120.0);
         assert_eq!(coord.logs.last().unwrap().slo_pressure, 0.0);
+    }
+
+    #[test]
+    fn region_pressure_maxes_and_combines_boosts() {
+        let (m, c, _) = small();
+        let mut coord = Coordinator::new(
+            &m,
+            &c,
+            CoordinatorConfig {
+                autoscale: Some(crate::autoscale::AutoscaleConfig::default()),
+                ..CoordinatorConfig::default()
+            },
+        );
+        let n = m.num_layers * m.num_experts;
+        let mut tb = vec![1.0; n];
+        tb[0] = 1.4;
+        let mut rb = vec![1.0; n];
+        rb[0] = 1.2;
+        rb[1] = 1.8;
+        coord.note_tenant_pressure(vec![0.3], tb);
+        assert_eq!(coord.autoscaler.as_ref().unwrap().boost_of(0, 0), 1.4);
+        assert_eq!(coord.max_tenant_pressure(), 0.3);
+        // region signal arrives: pressures max, boosts combine pointwise
+        coord.note_region_pressure(0.9, rb);
+        assert_eq!(coord.max_tenant_pressure(), 0.9);
+        let a = coord.autoscaler.as_ref().unwrap();
+        assert_eq!(a.boost_of(0, 0), 1.4, "tenant boost wins where larger");
+        assert_eq!(a.boost_of(0, 1), 1.8, "region boost wins where larger");
+        // clearing the region signal restores the tenant-only state
+        coord.note_region_pressure(0.0, Vec::new());
+        assert_eq!(coord.max_tenant_pressure(), 0.3);
+        assert_eq!(coord.autoscaler.as_ref().unwrap().boost_of(0, 1), 1.0);
     }
 
     #[test]

@@ -20,7 +20,9 @@
 //! produces identical virtual-time results.
 //!
 //! Hot-path engineering (all result-preserving, pinned bit-for-bit against
-//! the frozen [`reference`] engine by `tests/hotpath_determinism.rs`):
+//! the frozen `reference` engine — compiled only under
+//! `cfg(any(test, feature = "reference"))` — by
+//! `tests/hotpath_determinism.rs`):
 //! event slots are recycled through a free-list slab so memory is bounded
 //! by *in-flight* events rather than total events processed; the event
 //! queue orders packed `(time, sequence)` `u128` keys (one integer compare
@@ -34,6 +36,13 @@
 
 pub mod cost;
 pub mod metrics;
+/// The frozen pre-overhaul oracle engine (~800 lines) exists only to pin
+/// byte-identity and measure the hot-path speedup — release builds of the
+/// binary should not pay to compile it. Unit tests get it via `cfg(test)`;
+/// integration tests and benches opt in with `--features reference`
+/// (`hotpath_determinism` and `bench_engine_hotpath` declare it via
+/// `required-features` in Cargo.toml).
+#[cfg(any(test, feature = "reference"))]
 pub mod reference;
 
 use std::cmp::Reverse;
@@ -410,6 +419,23 @@ impl Engine {
     pub fn set_server_profiles(&mut self, profiles: Vec<TaskProfile>) {
         assert_eq!(profiles.len(), self.cluster_cfg.num_servers());
         self.server_profiles = Some(profiles);
+    }
+
+    /// Price the network by region: cross-region links pay the topology's
+    /// extra latency and scaled bandwidth, so remote expert calls (and
+    /// migration/scale-out copies) between regions cost what the edge
+    /// fabric would charge. Replaces the network model wholesale — call
+    /// before any traffic or transfers are injected.
+    pub fn set_region_topology(
+        &mut self,
+        topo: &crate::cluster::RegionTopology,
+    ) {
+        assert_eq!(
+            topo.num_servers(),
+            self.cluster_cfg.num_servers(),
+            "topology must cover the engine's cluster"
+        );
+        self.net = NetModel::with_topology(&self.cluster_cfg, topo);
     }
 
     /// Stage a migration: destination GPUs are blocked while they load
@@ -1416,6 +1442,45 @@ mod tests {
         assert_eq!(owners.len(), 1, "uniform places each expert once");
         let (s, g) = owners[0];
         assert!(eng.schedule_scale_in(l, e, s, g, 5.0).is_err());
+    }
+
+    #[test]
+    fn region_topology_prices_remote_calls() {
+        // one server per region with a fat extra latency: every remote
+        // expert call pays it, so the run slows down; the degenerate
+        // single-region topology is bit-identical to the flat network
+        let (m, c, w) = small_world();
+        let placement = uniform::place(&m, &c);
+        let run = |topo: Option<crate::cluster::RegionTopology>| {
+            let mut eng = Engine::new(
+                &m,
+                &c,
+                placement.clone(),
+                EngineConfig {
+                    seed: 19,
+                    ..EngineConfig::default()
+                },
+                CostModel::default(),
+            );
+            if let Some(t) = &topo {
+                eng.set_region_topology(t);
+            }
+            let trace = TraceGenerator::new(&m, &w, 19).gen_count(10);
+            eng.push_trace(&trace);
+            eng.run();
+            eng.report.avg_latency()
+        };
+        let flat = run(None);
+        let single = run(Some(crate::cluster::RegionTopology::single(3)));
+        assert_eq!(flat.to_bits(), single.to_bits(), "single region = flat");
+        let priced = run(Some(
+            crate::cluster::RegionTopology::contiguous(&[1, 1, 1], 0.25, 0.5),
+        ));
+        assert!(
+            priced > flat,
+            "cross-region pricing must slow remote calls \
+             ({priced:.3} vs {flat:.3})"
+        );
     }
 
     #[test]

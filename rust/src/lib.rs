@@ -22,11 +22,11 @@
 //! | [`moe`] | MoE model descriptors and activation statistics (`f_n^l(e)`, entropy) |
 //! | [`trace`] | synthetic task-skewed workload generation (BIG-bench / MultiData stand-ins) |
 //! | [`placement`] | Algorithms 1 & 2, baselines (Uniform / Redundance / SmartMoE / EPLB), proxy objective, migration |
-//! | [`net`] | bandwidth/RTT network model with per-link contention |
-//! | [`cluster`] | edge server + GPU state, memory accounting, offload store |
+//! | [`net`] | bandwidth/RTT network model with per-link contention and region-aware link pricing |
+//! | [`cluster`] | edge server + GPU state, memory accounting, offload store, region topology |
 //! | [`runtime`] | PJRT client (feature `pjrt`) or stub backend, HLO artifact loading, typed execution, calibration |
 //! | [`engine`] | discrete-event serving engine + MoE-Infinity offload baseline |
-//! | [`serve`] | online gateway: open-loop arrivals, admission control, continuous batching, replica-aware locality routing, live stats bus |
+//! | [`serve`] | online gateway: open-loop arrivals, admission control, continuous batching, replica-aware locality routing, live stats bus; regionalized multi-gateway serving with cross-region spill ([`serve::regions`]) |
 //! | [`autoscale`] | expert replica autoscaler: load EWMAs with hysteresis, scale-out/drained scale-in decisions |
 //! | [`coordinator`] | global scheduler: stats collection, periodic placement refresh, migration execution, migration↔autoscale arbitration |
 //! | [`exp`] | one harness per paper table/figure (Table I/II, Fig 2/3/5/6/7/8) |
@@ -94,15 +94,15 @@ pub mod util;
 /// Convenience re-exports for examples and downstream users.
 pub mod prelude {
     pub use crate::autoscale::{AutoscaleConfig, Autoscaler, ScaleDecision};
-    pub use crate::cluster::Cluster;
+    pub use crate::cluster::{Cluster, RegionTopology};
     pub use crate::config::{ClusterConfig, ModelConfig, WorkloadConfig};
     pub use crate::coordinator::{Coordinator, CoordinatorConfig};
     pub use crate::engine::{Engine, EngineConfig, ServeReport, World};
     pub use crate::moe::{ActivationStats, ExpertId, LayerId, ServerId};
     pub use crate::placement::{Placement, PlacementAlgo};
     pub use crate::serve::{
-        ArrivalProfile, Gateway, GatewayConfig, GatewayReport, TenantReport,
-        TenantSet,
+        ArrivalProfile, Gateway, GatewayConfig, GatewayReport, MultiGateway,
+        RegionsReport, RegionsScenario, SpillConfig, TenantReport, TenantSet,
     };
     pub use crate::trace::{TaskProfile, Trace, TraceGenerator};
 }

@@ -15,7 +15,8 @@ use dancemoe::exp::runner::RunSpec;
 use dancemoe::placement::{objective, uniform, PlacementAlgo};
 use dancemoe::runtime::{calibrate, forward, weights, Runtime};
 use dancemoe::serve::{
-    ArrivalProfile, Gateway, GatewayConfig, TenantReport, TenantSet,
+    ArrivalProfile, Gateway, GatewayConfig, RegionsScenario, TenantReport,
+    TenantSet,
 };
 use dancemoe::util::cli::{Args, Cli, Command};
 use dancemoe::util::table::Table;
@@ -74,6 +75,10 @@ fn cli() -> Cli {
                 .flag("lo-ratio", Some("0.7"), "scale-in band (hysteresis gap below hi)")
                 .flag("drain", Some("10"), "drain seconds before a scaled-in replica is evicted")
                 .flag("max-ops", Some("8"), "scale operations per interval")
+                .flag("credit", Some("0"), "autoscale-aware admission: shed \
+                       headroom slots borrowed per in-flight scale-out copy \
+                       (0 = hard bounds; note the baselines keep hard \
+                       bounds either way)")
                 .flag("seed", Some("0"), "rng seed")
                 .switch("no-baseline", "skip the fixed-placement comparison run"),
             Command::new("tenants", "multi-tenant online serving: per-tenant \
@@ -92,6 +97,31 @@ fn cli() -> Cli {
                 .switch("no-migrate", "disable live migration")
                 .switch("autoscale", "run the SLO-boosted replica autoscaler too")
                 .switch("no-baseline", "skip the shared-queue comparison run"),
+            Command::new("regions", "regionalized serving: one gateway \
+                          per region with staggered diurnal peaks, a \
+                          federated pressure exchange, and cross-gateway \
+                          spill over inter-region links")
+                .flag("regions", Some("3"), "number of regions (3 edge servers each)")
+                .flag("rps", Some("5.5"), "mean arrival rate per region (req/s)")
+                .flag("horizon", Some("480"), "virtual seconds of arrivals")
+                .flag("period", Some("240"), "diurnal period (s); region r is \
+                       phase-shifted by r·period/regions")
+                .flag("amplitude", Some("1.0"), "diurnal amplitude")
+                .flag("gpu-scale", Some("0.01"), "edge accelerator compute as a \
+                       fraction of an A100")
+                .flag("queue-cap", Some("8"), "per-server admission queue bound")
+                .flag("inflight", Some("6"), "per-server in-flight request cap")
+                .flag("interval", Some("30"), "per-region stats-bus / refresh interval (s)")
+                .flag("slo", Some("3"), "latency SLO (s)")
+                .flag("latency", Some("0.03"), "extra one-way inter-region latency (s)")
+                .flag("tenants", Some("none"), "per-region tenant preset \
+                       (none|pair|trio): per-(region, tenant) DRR queues; \
+                       forwards keep their tenant tag")
+                .flag("seed", Some("0"), "rng seed")
+                .switch("no-spill", "isolate the regions (disable cross-gateway spill)")
+                .switch("autoscale", "run the replica autoscaler in every region")
+                .switch("no-baseline", "skip the isolated and single-global-gateway \
+                         comparison runs"),
             Command::new("exp", "regenerate a paper table/figure \
                           (table1|table2|fig2|fig3|fig5|fig6|fig7|fig8|ablations|all)")
                 .flag("seed", Some("7"), "rng seed")
@@ -404,6 +434,7 @@ fn cmd_autoscale(args: &Args) -> Result<(), String> {
         horizon_s,
         profile,
         slo_s: args.get_f64("slo")?,
+        scaleout_credit: args.get_usize("credit")?,
         seed,
         ..GatewayConfig::default()
     };
@@ -730,6 +761,149 @@ fn cmd_tenants(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+fn cmd_regions(args: &Args) -> Result<(), String> {
+    let num_regions = args.get_usize("regions")?;
+    if num_regions < 2 {
+        return Err("--regions must be at least 2 (spill needs a peer)".into());
+    }
+    let interval_s = args.get_f64("interval")?;
+    if interval_s <= 0.0 {
+        return Err("--interval must be positive".into());
+    }
+    let period_s = args.get_f64("period")?;
+    if period_s <= 0.0 {
+        return Err("--period must be positive (the diurnal clock)".into());
+    }
+    let rps = args.get_f64("rps")?;
+    if rps <= 0.0 {
+        return Err("--rps must be positive".into());
+    }
+    let tenants = match args.get_str("tenants").as_str() {
+        "none" => None,
+        name => Some(TenantSet::from_name(name).ok_or_else(|| {
+            format!("unknown tenant preset '{name}' (none|pair|trio)")
+        })?),
+    };
+    let scenario = RegionsScenario {
+        num_regions,
+        rps_per_region: rps,
+        horizon_s: args.get_f64("horizon")?,
+        period_s,
+        amplitude: args.get_f64("amplitude")?,
+        gpu_scale: args.get_f64("gpu-scale")?,
+        queue_cap: args.get_usize("queue-cap")?,
+        max_inflight: args.get_usize("inflight")?,
+        interval_s,
+        slo_s: args.get_f64("slo")?,
+        spill: !args.switch("no-spill"),
+        autoscale: args.switch("autoscale"),
+        tenants,
+        inter_latency_s: args.get_f64("latency")?,
+        seed: args.get_u64("seed")?,
+    };
+    println!(
+        "regions: {} × edge3 @ {:.0}% A100 — {:.1} req/s/region diurnal \
+         (period {:.0}s, phases staggered by {:.0}s), {:.0}s horizon, \
+         spill {}",
+        scenario.num_regions,
+        100.0 * scenario.gpu_scale,
+        scenario.rps_per_region,
+        scenario.period_s,
+        scenario.phase(1),
+        scenario.horizon_s,
+        if scenario.spill { "on" } else { "off" },
+    );
+
+    let mut multi = scenario.build();
+    let report = multi.run();
+    let mut t = Table::new(
+        "per-region serving (spilled-in traffic completes where it lands)",
+        &["Region", "offered", "shed", "spill out", "spill in",
+          "p50 (s)", "p95 (s)", "p99 (s)", "scale +/-"],
+    );
+    for region in &report.regions {
+        t.row(vec![
+            region.name.clone(),
+            format!("{}", region.gateway.offered),
+            format!("{}", region.gateway.shed),
+            format!("{}", region.spilled_out),
+            format!("{}", region.spilled_in),
+            format!("{:.2}", region.p50_s),
+            format!("{:.2}", region.p95_s),
+            format!("{:.2}", region.p99_s),
+            format!(
+                "{}/{}",
+                region.gateway.scale_outs, region.gateway.scale_ins
+            ),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "aggregate  p50 {:.2}s  p95 {:.2}s  p99 {:.2}s   shed rate {:.1}%  \
+         spill rate {:.1}%  attainment {:.1}%  ({} exchanges)",
+        report.p50_s,
+        report.p95_s,
+        report.p99_s,
+        100.0 * report.shed_rate(),
+        100.0 * report.spill_rate(),
+        100.0 * report.attainment(),
+        report.exchanges,
+    );
+    let view = multi.global_view();
+    view.validate().map_err(|e| e.to_string())?;
+    for row in &view.rows {
+        println!(
+            "ledger   {:<10} resident {:.1} GB  reserved {:.1} GB  of \
+             {:.1} GB (consistent)",
+            row.name,
+            row.used as f64 / 1e9,
+            row.reserved as f64 / 1e9,
+            row.cap as f64 / 1e9,
+        );
+    }
+
+    if !args.switch("no-baseline") {
+        // isolated regions: same arrivals, no spill
+        let isolated = RegionsScenario {
+            spill: false,
+            ..scenario.clone()
+        }
+        .build()
+        .run();
+        println!(
+            "isolated   p50 {:.2}s  p95 {:.2}s  p99 {:.2}s   shed rate \
+             {:.1}%  attainment {:.1}%  (same arrivals, no spill)",
+            isolated.p50_s,
+            isolated.p95_s,
+            isolated.p99_s,
+            100.0 * isolated.shed_rate(),
+            100.0 * isolated.attainment(),
+        );
+        if isolated.p95_s > 0.0 {
+            println!(
+                "spill vs isolated: p95 {:+.1}%   shed rate {:+.1} pts   \
+                 attainment {:+.1} pts",
+                100.0 * (report.p95_s - isolated.p95_s) / isolated.p95_s,
+                100.0 * (report.shed_rate() - isolated.shed_rate()),
+                100.0 * (report.attainment() - isolated.attainment()),
+            );
+        }
+        // one flat gateway over the merged cluster, region-priced network
+        let global = scenario.build_global().run();
+        println!(
+            "global     p50 {:.2}s  p95 {:.2}s  p99 {:.2}s   shed rate \
+             {:.1}%  (single gateway over all {} servers, cross-region \
+             traffic priced in-engine)",
+            global.latency_percentile(0.50),
+            global.latency_percentile(0.95),
+            global.latency_percentile(0.99),
+            100.0 * global.shed_rate(),
+            scenario.num_regions * 3,
+        );
+    }
+    Ok(())
+}
+
 fn cmd_exp(args: &Args) -> Result<(), String> {
     let which = args
         .positional
@@ -906,6 +1080,7 @@ fn main() -> ExitCode {
         "gateway" => cmd_gateway(&args),
         "autoscale" => cmd_autoscale(&args),
         "tenants" => cmd_tenants(&args),
+        "regions" => cmd_regions(&args),
         "exp" => cmd_exp(&args),
         "calibrate" => cmd_calibrate(&args),
         "forward" => cmd_forward(&args),

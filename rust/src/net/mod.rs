@@ -7,13 +7,17 @@
 //! transfers against link timelines; pure estimators are also provided for
 //! the migration decision (which uses Eq. 3's closed form, not the DES).
 
+use crate::cluster::topology::RegionTopology;
 use crate::config::ClusterConfig;
 
-/// A directed link's state: bandwidth + busy-until timeline.
+/// A directed link's state: bandwidth + busy-until timeline, plus the
+/// link's extra propagation latency (zero on flat networks; the
+/// inter-region cost under a [`RegionTopology`]).
 #[derive(Debug, Clone)]
 struct Link {
     bytes_per_s: f64,
     busy_until: f64,
+    extra_latency_s: f64,
 }
 
 /// Cluster network with per-directed-link FIFO contention.
@@ -38,9 +42,59 @@ impl NetModel {
                 .map(|_| Link {
                     bytes_per_s: bps,
                     busy_until: 0.0,
+                    extra_latency_s: 0.0,
                 })
                 .collect(),
             bytes_sent: vec![0.0; n * n],
+        }
+    }
+
+    /// Region-aware network over a merged cluster: links whose endpoints
+    /// sit in different regions pay the topology's extra one-way latency
+    /// and run at `bandwidth × scale`; intra-region links are the base
+    /// parameters unchanged. With a one-region topology this equals
+    /// [`NetModel::new`] bit for bit.
+    pub fn with_topology(
+        cluster: &ClusterConfig,
+        topo: &RegionTopology,
+    ) -> NetModel {
+        let mut net = Self::new(cluster);
+        let n = net.num_servers;
+        for src in 0..n {
+            for dst in 0..n {
+                let (a, b) = (topo.region_of(src), topo.region_of(dst));
+                if a != b {
+                    let i = src * n + dst;
+                    net.links[i].bytes_per_s *= topo.bandwidth_scale(a, b);
+                    net.links[i].extra_latency_s = topo.extra_latency(a, b);
+                }
+            }
+        }
+        net
+    }
+
+    /// The region-to-region link mesh itself: one FIFO link per ordered
+    /// region pair at `bandwidth_bps`, each carrying `base_latency_s`
+    /// plus the topology's extra latency for that pair. Cross-gateway
+    /// spill forwards ride this ([`crate::serve::regions`]), so mass
+    /// spills contend like any other transfer.
+    pub fn inter_region(
+        topo: &RegionTopology,
+        bandwidth_bps: f64,
+        base_latency_s: f64,
+    ) -> NetModel {
+        let r = topo.num_regions();
+        NetModel {
+            num_servers: r,
+            latency_s: base_latency_s,
+            links: (0..r * r)
+                .map(|i| Link {
+                    bytes_per_s: bandwidth_bps / 8.0,
+                    busy_until: 0.0,
+                    extra_latency_s: topo.extra_latency(i / r, i % r),
+                })
+                .collect(),
+            bytes_sent: vec![0.0; r * r],
         }
     }
 
@@ -63,9 +117,8 @@ impl NetModel {
         if src == dst {
             return 0.0;
         }
-        self.latency_s
-            + fixed_s
-            + bytes / self.links[self.idx(src, dst)].bytes_per_s
+        let l = &self.links[self.idx(src, dst)];
+        self.latency_s + l.extra_latency_s + fixed_s + bytes / l.bytes_per_s
     }
 
     /// Book a transfer starting no earlier than `ready_s`; returns the
@@ -88,8 +141,9 @@ impl NetModel {
         let done = start + fixed_s + bytes / self.links[i].bytes_per_s;
         self.links[i].busy_until = done;
         self.bytes_sent[i] += bytes;
-        // propagation latency is not link-occupying
-        done + self.latency_s
+        // propagation latency (base + any inter-region extra) is not
+        // link-occupying
+        done + self.latency_s + self.links[i].extra_latency_s
     }
 
     /// Reset all timelines (new run) but keep topology.
@@ -153,6 +207,58 @@ mod tests {
         let mut n = net();
         assert_eq!(n.book_transfer(2, 2, 1e12, 5.0, 0.0), 5.0);
         assert_eq!(n.total_bytes(), 0.0);
+    }
+
+    #[test]
+    fn topology_prices_cross_region_links_only() {
+        let m = ModelConfig::mixtral_8x7b_sim();
+        let c = ClusterConfig::edge_testbed_3_for(&m);
+        // servers {0} | {1, 2}: 0↔1 crosses regions, 1↔2 stays inside
+        let topo =
+            crate::cluster::topology::RegionTopology::contiguous(
+                &[1, 2],
+                0.05,
+                0.5,
+            );
+        let flat = NetModel::new(&c);
+        let mut net = NetModel::with_topology(&c, &topo);
+        // intra-region link identical to the flat network
+        let intra = net.transfer_estimate_s(1, 2, 62.5e6, 0.0);
+        assert_eq!(intra.to_bits(), flat.transfer_estimate_s(1, 2, 62.5e6, 0.0).to_bits());
+        // cross-region: halved bandwidth (2 s payload) + 50 ms extra
+        let cross = net.transfer_estimate_s(0, 1, 62.5e6, 0.0);
+        assert!((cross - (2.0 + 0.002 + 0.05)).abs() < 1e-9, "{cross}");
+        let done = net.book_transfer(0, 1, 62.5e6, 0.0, 0.0);
+        assert!((done - (2.0 + 0.002 + 0.05)).abs() < 1e-9, "{done}");
+        // a one-region topology degenerates to the flat network
+        let single = NetModel::with_topology(
+            &c,
+            &crate::cluster::topology::RegionTopology::single(3),
+        );
+        assert_eq!(
+            single.transfer_estimate_s(0, 2, 1e6, 0.01).to_bits(),
+            flat.transfer_estimate_s(0, 2, 1e6, 0.01).to_bits()
+        );
+    }
+
+    #[test]
+    fn inter_region_mesh_serializes_spill_traffic() {
+        let topo = crate::cluster::topology::RegionTopology::contiguous(
+            &[3, 3, 3],
+            0.03,
+            1.0,
+        );
+        let mut mesh = NetModel::inter_region(&topo, 200e6, 0.002);
+        assert_eq!(mesh.num_servers(), 3);
+        // 200 Mbps = 25 MB/s: a 1 MB forward takes 40 ms + 2 ms + 30 ms
+        let t1 = mesh.book_transfer(0, 1, 1e6, 0.0, 0.0);
+        assert!((t1 - (0.04 + 0.002 + 0.03)).abs() < 1e-9, "{t1}");
+        // second forward on the same region pair queues behind the first
+        let t2 = mesh.book_transfer(0, 1, 1e6, 0.0, 0.0);
+        assert!((t2 - (0.08 + 0.002 + 0.03)).abs() < 1e-9, "{t2}");
+        // a different pair is a different link
+        let t3 = mesh.book_transfer(1, 2, 1e6, 0.0, 0.0);
+        assert!((t3 - t1).abs() < 1e-12);
     }
 
     #[test]

@@ -51,10 +51,20 @@ pub struct AdmissionController {
     cursor: Vec<usize>,
     /// Single shared FIFO per server (tenants tagged but not isolated).
     shared: bool,
+    /// Per-server **borrow credit**: extra admission slots available
+    /// while autoscale copies are in flight (capacity that is seconds
+    /// from landing — the ROADMAP's autoscale-aware admission). The
+    /// credit is one shared pool per server, drawn by whichever tenant
+    /// queue overflows first; 0 everywhere restores the hard bounds bit
+    /// for bit.
+    credit: Vec<usize>,
     /// requests accepted into some queue
     pub admitted: u64,
     /// requests no queue could accept (backpressure)
     pub shed: u64,
+    /// of `admitted`, how many landed beyond their queue's hard bound by
+    /// spending borrow credit
+    pub borrowed: u64,
     /// per-tenant slices of the counters above
     pub admitted_by_tenant: Vec<u64>,
     pub shed_by_tenant: Vec<u64>,
@@ -85,8 +95,10 @@ impl AdmissionController {
             deficit: vec![vec![0; nt]; num_servers],
             cursor: vec![0; num_servers],
             shared: false,
+            credit: vec![0; num_servers],
             admitted: 0,
             shed: 0,
+            borrowed: 0,
             admitted_by_tenant: vec![0; nt],
             shed_by_tenant: vec![0; nt],
         }
@@ -134,6 +146,33 @@ impl AdmissionController {
         }
     }
 
+    /// Hard bound of physical queue `qi` (before any borrow credit).
+    fn queue_cap(&self, qi: usize) -> usize {
+        if self.shared {
+            self.caps.iter().sum()
+        } else {
+            self.caps[qi]
+        }
+    }
+
+    /// Set `server`'s borrow credit: extra admission slots backed by
+    /// capacity currently in flight (autoscale copies loading). The
+    /// gateway refreshes this every control interval.
+    pub fn set_credit(&mut self, server: usize, slots: usize) {
+        self.credit[server] = slots;
+    }
+
+    /// Unspent borrow credit at `server`: the configured credit minus
+    /// every slot currently occupied beyond a queue's hard bound.
+    fn credit_left(&self, server: usize) -> usize {
+        let used: usize = self.queues[server]
+            .iter()
+            .enumerate()
+            .map(|(qi, q)| q.len().saturating_sub(self.queue_cap(qi)))
+            .sum();
+        self.credit[server].saturating_sub(used)
+    }
+
     pub fn depth(&self, server: usize) -> usize {
         self.queues[server].iter().map(|q| q.len()).sum()
     }
@@ -150,14 +189,51 @@ impl AdmissionController {
         }
     }
 
-    /// Remaining room in the queue `tenant`'s next request would enter.
+    /// Remaining room in the queue `tenant`'s next request would enter,
+    /// including any unspent borrow credit at the server.
     pub fn tenant_residual(&self, server: usize, tenant: usize) -> usize {
-        if self.shared {
-            self.tenant_cap(0).saturating_sub(self.depth(server))
+        let qi = self.queue_index(tenant);
+        let len = self.queues[server][qi].len();
+        let cap = self.queue_cap(qi);
+        if len < cap {
+            cap - len + self.credit_left(server)
         } else {
-            let qi = self.queue_index(tenant);
-            self.caps[qi].saturating_sub(self.queues[server][qi].len())
+            self.credit_left(server)
         }
+    }
+
+    /// Admission headroom at `server` across every queue (hard bounds
+    /// only — transient borrow credit excluded): the capacity the region
+    /// layer advertises to peers as spill room.
+    pub fn server_residual(&self, server: usize) -> usize {
+        self.queues[server]
+            .iter()
+            .enumerate()
+            .map(|(qi, q)| self.queue_cap(qi).saturating_sub(q.len()))
+            .sum()
+    }
+
+    /// [`AdmissionController::server_residual`] summed over all servers.
+    pub fn total_residual(&self) -> usize {
+        (0..self.queues.len()).map(|s| self.server_residual(s)).sum()
+    }
+
+    /// Number of tenants this controller isolates (1 for single-tenant).
+    pub fn num_tenants(&self) -> usize {
+        self.caps.len()
+    }
+
+    /// `tenant`'s admission headroom summed over all servers (hard
+    /// bounds only, like [`AdmissionController::server_residual`]): the
+    /// per-tenant capacity the region layer advertises to peers, so a
+    /// tenant saturated everywhere is never forwarded into a region
+    /// whose headroom belongs to *other* tenants' queues.
+    pub fn tenant_residual_total(&self, tenant: usize) -> usize {
+        let qi = self.queue_index(tenant);
+        let cap = self.queue_cap(qi);
+        (0..self.queues.len())
+            .map(|s| cap.saturating_sub(self.queues[s][qi].len()))
+            .sum()
     }
 
     pub fn total_queued(&self) -> usize {
@@ -181,6 +257,10 @@ impl AdmissionController {
             req,
             enqueued_s: now,
         });
+        if self.queues[server][qi].len() > self.queue_cap(qi) {
+            // landed beyond the hard bound: spent a slot of borrow credit
+            self.borrowed += 1;
+        }
         self.admitted += 1;
         self.admitted_by_tenant[tenant] += 1;
         true
@@ -406,6 +486,44 @@ mod tests {
             }
         }
         assert_eq!(t0, 16, "20 unit pops at 4:1 weights give 16:4");
+    }
+
+    #[test]
+    fn scaleout_credit_borrows_beyond_the_bound() {
+        let mut adm = AdmissionController::new(2, 2);
+        assert!(adm.offer(0, req(0, 0), 0.0));
+        assert!(adm.offer(0, req(1, 0), 0.0));
+        assert!(!adm.offer(0, req(2, 0), 0.0), "hard bound");
+        // two in-flight scale-outs worth of credit: two extra slots
+        adm.set_credit(0, 2);
+        assert_eq!(adm.tenant_residual(0, 0), 2);
+        assert!(adm.offer(0, req(3, 0), 0.0));
+        assert!(adm.offer(0, req(4, 0), 0.0));
+        assert!(!adm.offer(0, req(5, 0), 0.0), "credit exhausted");
+        assert_eq!(adm.borrowed, 2);
+        assert_eq!(adm.depth(0), 4);
+        // the other server never had credit
+        assert_eq!(adm.tenant_residual(1, 0), 2);
+        // popping borrowed entries restores base headroom first
+        let popped = adm.pop(0, 3);
+        assert_eq!(popped.len(), 3);
+        assert_eq!(adm.tenant_residual(0, 0), 1 + 2);
+        // credit withdrawal (copies landed) restores the hard bound
+        adm.set_credit(0, 0);
+        assert_eq!(adm.tenant_residual(0, 0), 1);
+    }
+
+    #[test]
+    fn credit_is_one_pool_across_tenant_queues() {
+        let mut adm = AdmissionController::with_tenants(1, &[1, 1], &[1, 1]);
+        adm.set_credit(0, 1);
+        assert!(adm.offer(0, treq(0, 0, 0), 0.0));
+        assert!(adm.offer(0, treq(1, 0, 1), 0.0));
+        // both queues at their bound; ONE credit slot between them
+        assert!(adm.offer(0, treq(2, 0, 0), 0.0), "borrows the pool slot");
+        assert!(!adm.offer(0, treq(3, 0, 1), 0.0), "pool already spent");
+        assert_eq!(adm.borrowed, 1);
+        assert_eq!(adm.tenant_residual(0, 1), 0);
     }
 
     #[test]

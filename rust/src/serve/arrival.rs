@@ -108,6 +108,11 @@ struct StreamSpec {
     server: usize,
     tenant: usize,
     profile: ArrivalProfile,
+    /// Phase offset (seconds) added to the profile's clock: the stream
+    /// sees `factor(t + phase_s)`. Region mode staggers diurnal peaks
+    /// with per-region phases; 0 everywhere else (and a zero phase is
+    /// bit-identical to the unphased sampler).
+    phase_s: f64,
     /// Stream config with the tenant's rate share and task override
     /// already folded in.
     cfg: StreamConfig,
@@ -139,6 +144,20 @@ impl ArrivalSource {
         horizon_s: f64,
         seed: u64,
     ) -> ArrivalSource {
+        Self::new_phased(workload, profile, &[], horizon_s, seed)
+    }
+
+    /// [`ArrivalSource::new`] with per-server phase offsets on the
+    /// profile's clock (`phases[s]`, 0 when absent): region mode staggers
+    /// each region's diurnal peak so the cluster never peaks everywhere
+    /// at once. An empty slice is bit-identical to the unphased source.
+    pub fn new_phased(
+        workload: &WorkloadConfig,
+        profile: ArrivalProfile,
+        phases: &[f64],
+        horizon_s: f64,
+        seed: u64,
+    ) -> ArrivalSource {
         let specs = workload
             .streams
             .iter()
@@ -147,6 +166,7 @@ impl ArrivalSource {
                 server: s,
                 tenant: 0,
                 profile,
+                phase_s: phases.get(s).copied().unwrap_or(0.0),
                 cfg: cfg.clone(),
             })
             .collect();
@@ -163,6 +183,19 @@ impl ArrivalSource {
         horizon_s: f64,
         seed: u64,
     ) -> ArrivalSource {
+        Self::with_tenants_phased(workload, tenants, &[], horizon_s, seed)
+    }
+
+    /// [`ArrivalSource::with_tenants`] with per-server phase offsets
+    /// (`phases[s]`, 0 when absent) applied to every tenant's profile at
+    /// that server — a region's phase shifts all of its tenants together.
+    pub fn with_tenants_phased(
+        workload: &WorkloadConfig,
+        tenants: &TenantSet,
+        phases: &[f64],
+        horizon_s: f64,
+        seed: u64,
+    ) -> ArrivalSource {
         let mut specs = Vec::new();
         for (t, tc) in tenants.tenants.iter().enumerate() {
             let share = tc.rate_share.max(1e-9);
@@ -176,6 +209,7 @@ impl ArrivalSource {
                     server: s,
                     tenant: t,
                     profile: tc.profile,
+                    phase_s: phases.get(s).copied().unwrap_or(0.0),
                     cfg,
                 });
             }
@@ -223,7 +257,8 @@ impl ArrivalSource {
                 st.next = None;
                 return;
             }
-            if st.rng.f64() * peak <= spec.profile.factor(at) {
+            if st.rng.f64() * peak <= spec.profile.factor(at + spec.phase_s)
+            {
                 break;
             }
         }
@@ -412,6 +447,54 @@ mod tests {
         };
         assert_eq!(mk(3), mk(3));
         assert_ne!(mk(3), mk(4));
+    }
+
+    #[test]
+    fn phase_offsets_shift_the_diurnal_peak() {
+        let w = WorkloadConfig::bigbench(5.0);
+        let period = 400.0;
+        let profile = ArrivalProfile::Diurnal {
+            amplitude: 0.95,
+            period_s: period,
+        };
+        // zero phases are bit-identical to the unphased source
+        let plain = drain(ArrivalSource::new(&w, profile, 1200.0, 9));
+        let zeroed = drain(ArrivalSource::new_phased(
+            &w,
+            profile,
+            &[0.0, 0.0, 0.0],
+            1200.0,
+            9,
+        ));
+        assert_eq!(plain, zeroed);
+        // a half-period phase flips which half of the cycle is busy
+        let shifted = drain(ArrivalSource::new_phased(
+            &w,
+            profile,
+            &[period / 2.0; 3],
+            1200.0,
+            9,
+        ));
+        let first_half =
+            |reqs: &[crate::trace::Request]| {
+                reqs.iter()
+                    .filter(|r| r.arrival_s.rem_euclid(period) < period / 2.0)
+                    .count()
+            };
+        let plain_busy = first_half(&plain);
+        let shifted_busy = first_half(&shifted);
+        // sin is positive on the first half-period: unphased streams
+        // concentrate there, half-period-shifted streams avoid it
+        assert!(
+            plain_busy * 2 > plain.len(),
+            "{plain_busy} of {} in the busy half",
+            plain.len()
+        );
+        assert!(
+            shifted_busy * 2 < shifted.len(),
+            "{shifted_busy} of {} should dodge the busy half",
+            shifted.len()
+        );
     }
 
     #[test]

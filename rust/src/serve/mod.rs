@@ -31,6 +31,7 @@
 pub mod admission;
 pub mod arrival;
 pub mod batcher;
+pub mod regions;
 pub mod router;
 pub mod statsbus;
 pub mod tenant;
@@ -38,10 +39,14 @@ pub mod tenant;
 pub use admission::AdmissionController;
 pub use arrival::{ArrivalProfile, ArrivalSource};
 pub use batcher::{Batch, Batcher};
+pub use regions::{
+    MultiGateway, RegionsReport, RegionsScenario, SpillConfig,
+};
 pub use router::LocalityRouter;
-pub use statsbus::{StatsBus, StatsDelta, TenantWindow};
+pub use statsbus::{RegionWindow, StatsBus, StatsDelta, TenantWindow};
 pub use tenant::{TenantConfig, TenantId, TenantReport, TenantSet};
 
+use crate::cluster::RegionTopology;
 use crate::config::{ClusterConfig, ModelConfig, WorkloadConfig};
 use crate::coordinator::{Coordinator, CoordinatorConfig};
 use crate::engine::{CostModel, Engine, EngineConfig, ServeReport};
@@ -87,6 +92,22 @@ pub struct GatewayConfig {
     /// (tenants tagged for accounting but not isolated) — the baseline
     /// the weighted-deficit policy is measured against.
     pub shared_queue: bool,
+    /// Per-server phase offsets (seconds) on the arrival profile's clock
+    /// (`phases[s]`, 0 when absent): region mode staggers each region's
+    /// diurnal peak with these. `None` = no offsets.
+    pub stream_phases: Option<Vec<f64>>,
+    /// Region topology for the engine's network: cross-region remote
+    /// expert calls (and copies) pay the topology's extra latency and
+    /// scaled bandwidth. `None` = flat network.
+    pub topology: Option<RegionTopology>,
+    /// Autoscale-aware admission: slots of shed headroom borrowed per
+    /// in-flight scale-out copy (capacity that is seconds from landing).
+    /// Only meaningful with the autoscaler on. Deliberately opt-in
+    /// (default 0): with a credit, an autoscaled arm's shed counts are no
+    /// longer queue-bound-comparable to a fixed-placement arm's, so
+    /// comparisons must name it explicitly (the `autoscale` CLI's
+    /// `--credit` flag does).
+    pub scaleout_credit: usize,
     pub seed: u64,
 }
 
@@ -104,6 +125,9 @@ impl Default for GatewayConfig {
             capacity_routing: true,
             tenants: None,
             shared_queue: false,
+            stream_phases: None,
+            topology: None,
+            scaleout_credit: 0,
             seed: 0,
         }
     }
@@ -134,6 +158,14 @@ pub struct GatewayReport {
     pub scale_outs: u64,
     /// Autoscaler replicas drained and evicted during the run.
     pub scale_ins: u64,
+    /// Admissions that landed beyond a queue's hard bound by borrowing
+    /// against in-flight scale-out capacity (see
+    /// [`GatewayConfig::scaleout_credit`]).
+    pub borrowed: u64,
+    /// Requests admitted on behalf of peer regions (cross-gateway spill;
+    /// 0 outside region mode). These complete here but were never part
+    /// of `offered`.
+    pub forwarded_in: u64,
     pub slo_s: f64,
     /// Per-tenant slices (empty for single-tenant runs): offered /
     /// admitted / shed, latency percentiles, and SLO attainment.
@@ -211,6 +243,12 @@ pub struct Gateway {
     router: LocalityRouter,
     offered: u64,
     spilled: u64,
+    /// requests admitted on behalf of peer regions (cross-gateway spill)
+    forwarded_in: u64,
+    /// stats-bus / refresh period (∞ = the coordinator never ticks)
+    interval_s: f64,
+    /// next interval boundary (advanced by [`Gateway::tick_due`])
+    next_interval: f64,
     completions_seen: usize,
     /// Reused per-arrival routing buffers (the capacity-aware preference
     /// order depends on live queue depths, so it is rebuilt per arrival —
@@ -240,20 +278,25 @@ impl Gateway {
             seed: cfg.seed,
             ..EngineConfig::default()
         };
-        let engine = Engine::new(
+        let mut engine = Engine::new(
             model,
             cluster,
             initial,
             engine_cfg,
             CostModel::default(),
         );
+        if let Some(topo) = &cfg.topology {
+            engine.set_region_topology(topo);
+        }
         let router = LocalityRouter::new(model, &engine.placement);
+        let phases: &[f64] = cfg.stream_phases.as_deref().unwrap_or(&[]);
         let (arrivals, admission, tenant_bus, tenant_masses) =
             match &cfg.tenants {
                 Some(set) => {
-                    let arrivals = ArrivalSource::with_tenants(
+                    let arrivals = ArrivalSource::with_tenants_phased(
                         workload,
                         set,
+                        phases,
                         cfg.horizon_s,
                         cfg.seed,
                     );
@@ -284,9 +327,10 @@ impl Gateway {
                     )
                 }
                 None => (
-                    ArrivalSource::new(
+                    ArrivalSource::new_phased(
                         workload,
                         cfg.profile,
+                        phases,
                         cfg.horizon_s,
                         cfg.seed,
                     ),
@@ -298,6 +342,13 @@ impl Gateway {
                     Vec::new(),
                 ),
             };
+        // a non-positive interval would pin virtual time at 0 and spin;
+        // treat it as "never tick" instead
+        let interval_s = if coord_cfg.interval_s > 0.0 {
+            coord_cfg.interval_s
+        } else {
+            f64::INFINITY
+        };
         Gateway {
             arrivals,
             admission,
@@ -312,6 +363,9 @@ impl Gateway {
             router,
             offered: 0,
             spilled: 0,
+            forwarded_in: 0,
+            interval_s,
+            next_interval: interval_s,
             completions_seen: 0,
             route_order: Vec::new(),
             route_residual: Vec::new(),
@@ -323,66 +377,30 @@ impl Gateway {
 
     /// Drive the co-simulation to completion: arrivals over
     /// `cfg.horizon_s`, then drain. Returns the run's report.
+    ///
+    /// The loop body is factored into the stepping API below
+    /// ([`Gateway::next_action_time`] → [`Gateway::advance_to`] →
+    /// [`Gateway::tick_due`] → arrivals → [`Gateway::dispatch_ready`]) so
+    /// the multi-gateway orchestrator ([`crate::serve::regions`]) can
+    /// interleave several regional gateways in one virtual clock; this
+    /// single-gateway driver is the one-region special case.
     pub fn run(&mut self) -> GatewayReport {
-        // a non-positive interval would pin virtual time at 0 and spin;
-        // treat it as "never tick" instead
-        let interval = if self.coordinator.cfg.interval_s > 0.0 {
-            self.coordinator.cfg.interval_s
-        } else {
-            f64::INFINITY
-        };
-        let mut next_interval = interval;
         let mut now = 0.0;
         loop {
-            let t_arrival = self.arrivals.peek_time();
-            // future batch deadlines only; overdue batches are handled by
-            // the dispatch pass at the bottom of every iteration
-            let t_deadline = self
-                .batcher
-                .next_deadline(&self.admission)
-                .filter(|&t| t > now + 1e-9);
-            // engine completions matter when a formable batch waits on
-            // in-flight headroom
-            let t_engine = if self
-                .batcher
-                .blocked_on_capacity(&self.admission, now)
-            {
-                self.engine.next_event_time()
-            } else {
-                None
-            };
-            let t_gateway = [t_arrival, t_deadline, t_engine]
-                .into_iter()
-                .flatten()
-                .min_by(|a, b| a.partial_cmp(b).unwrap());
-
-            let work_left = t_arrival.is_some()
-                || self.admission.total_queued() > 0
-                || self.engine.next_event_time().is_some();
-            if !work_left {
+            if !self.has_work() {
                 break;
             }
-
-            let t_next = match t_gateway {
-                Some(t) => t.min(next_interval),
-                None => next_interval,
+            let t_next = match self.next_action_time(now) {
+                Some(t) => t.min(self.next_interval),
+                None => self.next_interval,
             };
-            self.engine.run_until(t_next);
+            self.advance_to(t_next);
             now = t_next;
-            self.poll_completions();
-
-            if next_interval.is_finite() && now + 1e-9 >= next_interval {
-                self.interval_tick(now);
-                next_interval += interval;
-            }
-            while self
-                .arrivals
-                .peek_time()
-                .map(|t| t <= now + 1e-9)
-                .unwrap_or(false)
-            {
-                let req = self.arrivals.next_request().unwrap();
-                self.on_arrival(req, now);
+            self.tick_due(now);
+            while let Some(req) = self.pop_arrival_due(now) {
+                if let Err(rej) = self.try_admit(req, now) {
+                    self.admission.record_shed_tenant(rej.tenant);
+                }
             }
             self.dispatch_ready(now);
         }
@@ -390,56 +408,146 @@ impl Gateway {
         self.build_report()
     }
 
-    /// Route an arrival down its preference list; shed if every queue is
-    /// at its bound.
-    fn on_arrival(&mut self, req: Request, now: f64) {
-        self.offered += 1;
-        let home = req.server;
-        // find the first preference with queue room. The pure locality
-        // order is precomputed (allocation-free); the capacity-aware order
-        // depends on live queue depths, so it is built per arrival. The
-        // residual is the room in the queue *this request's tenant* would
-        // enter (for single-tenant runs that is the whole server queue).
-        let placed: Option<(usize, usize)> = {
-            let order: &[usize] = if self.cfg.locality_routing {
-                if self.cfg.capacity_routing {
-                    self.route_residual.clear();
-                    for s in 0..self.admission.num_servers() {
-                        self.route_residual
-                            .push(self.admission.tenant_residual(s, req.tenant));
-                    }
-                    self.router.ranked_capacity_into(
-                        req.task,
-                        home,
-                        &self.route_residual,
-                        &mut self.route_order,
-                    );
-                    &self.route_order
-                } else {
-                    self.router.ranked(req.task, home)
-                }
-            } else {
-                std::slice::from_ref(&home)
-            };
-            let mut found = None;
-            for (rank, &server) in order.iter().enumerate() {
-                let mut routed = req.clone();
-                routed.server = server;
-                if self.admission.offer(server, routed, now) {
-                    found = Some((rank, server));
-                    break;
-                }
-            }
-            found
+    /// Anything left to do (pending arrivals, queued requests, or engine
+    /// events)?
+    fn has_work(&self) -> bool {
+        self.arrivals.peek_time().is_some()
+            || self.admission.total_queued() > 0
+            || self.engine.next_event_time().is_some()
+    }
+
+    /// Earliest time this gateway must act, from `now`: the next arrival,
+    /// the next future batch deadline (overdue batches are handled by the
+    /// dispatch pass at the bottom of every step), or — when a formable
+    /// batch waits on in-flight headroom — the next engine completion.
+    /// `None` when nothing is scheduled (the interval clock still runs).
+    fn next_action_time(&self, now: f64) -> Option<f64> {
+        let t_arrival = self.arrivals.peek_time();
+        let t_deadline = self
+            .batcher
+            .next_deadline(&self.admission)
+            .filter(|&t| t > now + 1e-9);
+        let t_engine = if self
+            .batcher
+            .blocked_on_capacity(&self.admission, now)
+        {
+            self.engine.next_event_time()
+        } else {
+            None
         };
-        match placed {
+        [t_arrival, t_deadline, t_engine]
+            .into_iter()
+            .flatten()
+            .min_by(|a, b| a.partial_cmp(b).unwrap())
+    }
+
+    /// Advance the engine to `t` and account completions.
+    fn advance_to(&mut self, t: f64) {
+        self.engine.run_until(t);
+        self.poll_completions();
+    }
+
+    /// Run the interval tick if a boundary is due at `now` (at most one
+    /// per step, like the original loop).
+    fn tick_due(&mut self, now: f64) {
+        if self.next_interval.is_finite() && now + 1e-9 >= self.next_interval
+        {
+            self.interval_tick(now);
+            self.next_interval += self.interval_s;
+        }
+    }
+
+    /// Pop the next arrival due at or before `now` (`None` when the
+    /// earliest pending arrival is still in the future).
+    fn pop_arrival_due(&mut self, now: f64) -> Option<Request> {
+        if self
+            .arrivals
+            .peek_time()
+            .map(|t| t <= now + 1e-9)
+            .unwrap_or(false)
+        {
+            self.arrivals.next_request()
+        } else {
+            None
+        }
+    }
+
+    /// Route an arrival down its preference list. `Ok` = admitted
+    /// somewhere (within-cluster spill counted); `Err` hands the request
+    /// back untouched so the caller can shed it — or, in region mode,
+    /// forward it to a peer region instead.
+    fn try_admit(
+        &mut self,
+        req: Request,
+        now: f64,
+    ) -> std::result::Result<(), Request> {
+        self.offered += 1;
+        match self.place_on_order(&req, now) {
             Some((rank, _)) => {
                 if rank > 0 {
                     self.spilled += 1;
                 }
+                Ok(())
             }
-            None => self.admission.record_shed_tenant(req.tenant),
+            None => Err(req),
         }
+    }
+
+    /// Admit a request forwarded from a peer region (cross-gateway
+    /// spill): routed down the same preference order as a local arrival —
+    /// its tenant tag drops it into the per-(region, tenant) DRR queue —
+    /// but never counted as locally offered and never re-spilled. `false`
+    /// means the forward found no room on arrival; the orchestrator
+    /// accounts it as shed at the origin region.
+    fn admit_forwarded(&mut self, req: Request, now: f64) -> bool {
+        let admitted = self.place_on_order(&req, now).is_some();
+        if admitted {
+            self.forwarded_in += 1;
+        }
+        admitted
+    }
+
+    /// The shared preference walk: find the first server (in locality /
+    /// capacity order from `req.server`) whose queue has room. The pure
+    /// locality order is precomputed (allocation-free); the
+    /// capacity-aware order depends on live queue depths, so it is built
+    /// per arrival. The residual is the room in the queue *this request's
+    /// tenant* would enter (for single-tenant runs that is the whole
+    /// server queue). Returns the (preference rank, server) admitted at.
+    fn place_on_order(
+        &mut self,
+        req: &Request,
+        now: f64,
+    ) -> Option<(usize, usize)> {
+        let home = req.server;
+        let order: &[usize] = if self.cfg.locality_routing {
+            if self.cfg.capacity_routing {
+                self.route_residual.clear();
+                for s in 0..self.admission.num_servers() {
+                    self.route_residual
+                        .push(self.admission.tenant_residual(s, req.tenant));
+                }
+                self.router.ranked_capacity_into(
+                    req.task,
+                    home,
+                    &self.route_residual,
+                    &mut self.route_order,
+                );
+                &self.route_order
+            } else {
+                self.router.ranked(req.task, home)
+            }
+        } else {
+            std::slice::from_ref(&home)
+        };
+        for (rank, &server) in order.iter().enumerate() {
+            let mut routed = req.clone();
+            routed.server = server;
+            if self.admission.offer(server, routed, now) {
+                return Some((rank, server));
+            }
+        }
+        None
     }
 
     /// The live locality router (read-only — reporting surfaces like the
@@ -494,6 +602,20 @@ impl Gateway {
         }
         self.coordinator.on_interval(&mut self.engine, t);
         self.router.rebuild(self.engine.target_placement());
+        // autoscale-aware admission: refresh the per-server borrow credit
+        // from the copies in flight after this tick's decisions — shed
+        // headroom backed by capacity that is seconds from landing
+        if self.cfg.scaleout_credit > 0 {
+            if let Some(a) = &self.coordinator.autoscaler {
+                let pending = a.pending_scale_outs_by_server(
+                    self.admission.num_servers(),
+                );
+                for (s, &n) in pending.iter().enumerate() {
+                    self.admission
+                        .set_credit(s, n * self.cfg.scaleout_credit);
+                }
+            }
+        }
     }
 
     fn build_report(&mut self) -> GatewayReport {
@@ -561,6 +683,8 @@ impl Gateway {
             migrations: serve.migrations.len(),
             scale_outs,
             scale_ins,
+            borrowed: self.admission.borrowed,
+            forwarded_in: self.forwarded_in,
             slo_s: self.cfg.slo_s,
             tenants,
             serve,
@@ -744,6 +868,75 @@ mod tests {
             weighted.tenants.iter().map(|t| t.offered).collect::<Vec<_>>(),
             shared.tenants.iter().map(|t| t.offered).collect::<Vec<_>>(),
         );
+    }
+
+    #[test]
+    fn scaleout_credit_reduces_burst_edge_shedding() {
+        // Autoscale-aware admission (ROADMAP item): on the burst edge the
+        // queues overflow while replica copies are already in flight —
+        // borrowing against that landing capacity converts sheds into
+        // admissions. Identical open-loop arrivals on both sides. Edge-
+        // grade accelerators (1 % of an A100) make the region compute-
+        // bound (~7.8 req/s capacity), so the 8× bursts overflow the hard
+        // bounds regardless of placement or network effects.
+        let (m, mut c, _) = small();
+        for s in &mut c.servers {
+            for g in &mut s.gpus {
+                g.flops *= 0.01;
+            }
+        }
+        let w = WorkloadConfig::bigbench(0.6);
+        let run = |credit: usize| {
+            let mut gw = Gateway::new(
+                &m,
+                &c,
+                &w,
+                uniform::place(&m, &c),
+                GatewayConfig {
+                    horizon_s: 240.0,
+                    profile: ArrivalProfile::Bursty {
+                        factor: 8.0,
+                        burst_s: 20.0,
+                        period_s: 60.0,
+                    },
+                    queue_cap: 8,
+                    max_inflight: 6,
+                    scaleout_credit: credit,
+                    seed: 9,
+                    ..GatewayConfig::default()
+                },
+                CoordinatorConfig {
+                    interval_s: 10.0,
+                    migrate: false,
+                    seed: 9,
+                    autoscale: Some(crate::autoscale::AutoscaleConfig {
+                        hi_ratio: 1.2,
+                        lo_ratio: 0.6,
+                        cooldown_intervals: 1,
+                        drain_s: 5.0,
+                        ..crate::autoscale::AutoscaleConfig::default()
+                    }),
+                    ..CoordinatorConfig::default()
+                },
+            );
+            gw.run()
+        };
+        let without = run(0);
+        let with = run(8);
+        assert_eq!(without.offered, with.offered, "same arrival stream");
+        assert_eq!(without.borrowed, 0, "no credit, no borrowing");
+        assert!(without.shed > 0, "bursts must overflow the hard bounds");
+        assert!(with.borrowed > 0, "credit must actually be spent");
+        assert!(
+            with.shed <= without.shed,
+            "borrowing against in-flight scale-outs must not increase \
+             shedding ({} with credit vs {} without)",
+            with.shed,
+            without.shed
+        );
+        // borrowed admissions are real admissions: they all complete
+        assert_eq!(with.serve.records.len() as u64, with.admitted);
+        assert_eq!(with.offered, with.admitted + with.shed);
     }
 
     #[test]

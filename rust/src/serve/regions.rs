@@ -1,0 +1,1209 @@
+//! **Regionalized serving**: one gateway per region, federated over a
+//! region topology with cross-gateway spill.
+//!
+//! The single-gateway stack assumed one cluster behind one front door;
+//! this module runs one full [`Gateway`] (admission, DRR tenant queues,
+//! batcher, locality router, coordinator, optional autoscaler) per
+//! **region** of a [`RegionTopology`], and federates them:
+//!
+//! 1. **One virtual clock** — the orchestrator interleaves every regional
+//!    gateway's stepping API ([`Gateway::run`] is the one-region special
+//!    case of this loop), so regions co-simulate deterministically.
+//! 2. **Federated pressure signal** — every `exchange_s` seconds each
+//!    region publishes a [`RegionWindow`] (completions, sheds, window
+//!    p95, live queue headroom) the way the tenant layer publishes
+//!    [`crate::serve::statsbus::TenantWindow`]s; the table of peer
+//!    windows is what spill decisions route on (deliberately a little
+//!    stale — regions exchange signals, they do not share memory).
+//! 3. **Cross-gateway spill** — when a region's queues run past the
+//!    pre-spill watermark (half their bound, by default), or at the
+//!    latest when its admission rejects a request everywhere, the
+//!    request is *forwarded* to a peer advertising headroom instead of
+//!    shed: it pays the inter-region link cost on a FIFO region-to-region
+//!    mesh ([`crate::net::NetModel::inter_region`]), then joins the
+//!    peer's per-(region, tenant) DRR queues under its own tenant tag.
+//!    Forwards never re-spill; a forward that finds no room on arrival is
+//!    accounted as shed at its origin region.
+//! 4. **Federated autoscaling** — each exchange also tells a region's
+//!    coordinator its own pressure (relaxing its migration-adoption
+//!    threshold, like tenant SLO pressure does) and hands regions that
+//!    *received* spill an expert-boost vector built from the spilled
+//!    tasks' activation profiles, so the receiving autoscaler prefers
+//!    replicating exactly the experts the spill activates — scale-out
+//!    lands in the spill-target region scored by activation locality.
+//! 5. **Thin global view** — regions own disjoint clusters and ledgers;
+//!    [`MultiGateway::global_view`] aggregates them so operators (and
+//!    tests) can check the memory ledgers stay consistent globally.
+//!
+//! The canonical 3-region scenario ([`RegionsScenario`]) staggers each
+//! region's diurnal peak by a third of the period: the cluster-wide
+//! offered load is constant while every region periodically exceeds its
+//! own capacity — exactly the regime where spill converts sheds into
+//! served requests. `regions_comparison` runs it three ways (spill,
+//! isolated, single global gateway) and `bench_file_json` serializes the
+//! deterministic comparison for `BENCH_regions.json`.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::cluster::RegionTopology;
+use crate::config::{ClusterConfig, ModelConfig, TaskKind, WorkloadConfig};
+use crate::coordinator::CoordinatorConfig;
+use crate::net::NetModel;
+use crate::placement::uniform;
+use crate::serve::statsbus::{RegionBus, RegionWindow};
+use crate::serve::{
+    ArrivalProfile, Gateway, GatewayConfig, GatewayReport,
+};
+use crate::trace::{Request, TaskProfile};
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+/// Peers whose published pressure exceeds this are not spill targets —
+/// forwarding into a region that is itself shedding only moves the
+/// failure around.
+pub const SPILL_MAX_PRESSURE: f64 = 0.5;
+
+/// Cross-gateway spill policy knobs.
+#[derive(Debug, Clone)]
+pub struct SpillConfig {
+    /// Enable cross-gateway spill (`false` = isolated regions; the
+    /// federation exchange still runs, so both arms of the comparison
+    /// see identical pressure plumbing).
+    pub enabled: bool,
+    /// Inter-region link bandwidth for forwarded requests (bits/s).
+    pub bandwidth_bps: f64,
+    /// Base one-way latency of the inter-region mesh (the topology's
+    /// per-pair extra latency is added on top).
+    pub base_latency_s: f64,
+    /// Fixed per-forward overhead (RPC + re-admission), link-occupying.
+    pub fixed_s: f64,
+    /// A peer must advertise at least this much admission headroom in
+    /// the last exchanged window to be a spill target.
+    pub min_residual: usize,
+    /// High-watermark pre-spill: once the request's tenant has less than
+    /// this fraction of its region-wide queue capacity left, arrivals
+    /// forward *before* hitting the shed cliff (rejected requests still
+    /// forward as the backstop). Pre-spilling keeps the saturated
+    /// region's queues hovering at the watermark instead of pinned at
+    /// the cap — which is what turns spill into a p95 win, not just a
+    /// shed-rate win: without it the tail sits on the full-buffer
+    /// sojourn plateau in both arms. 0 disables (rejection-only spill).
+    pub prespill_frac: f64,
+    /// Federation exchange period (seconds).
+    pub exchange_s: f64,
+}
+
+impl Default for SpillConfig {
+    fn default() -> Self {
+        SpillConfig {
+            enabled: true,
+            bandwidth_bps: 200e6,
+            base_latency_s: 0.002,
+            fixed_s: 0.005,
+            min_residual: 6,
+            prespill_frac: 0.5,
+            exchange_s: 15.0,
+        }
+    }
+}
+
+/// Everything one regional gateway runs over.
+pub struct RegionShard {
+    pub cluster: ClusterConfig,
+    pub workload: WorkloadConfig,
+    pub gateway_cfg: GatewayConfig,
+    pub coord_cfg: CoordinatorConfig,
+}
+
+fn task_index(task: TaskKind) -> usize {
+    TaskKind::all().iter().position(|&t| t == task).unwrap()
+}
+
+/// The multi-gateway orchestrator (see the module docs).
+pub struct MultiGateway {
+    pub topology: RegionTopology,
+    pub gateways: Vec<Gateway>,
+    pub spill_cfg: SpillConfig,
+    /// FIFO region-to-region links the forwards ride.
+    inter_net: NetModel,
+    /// activation-row bytes per prompt token (forward payload sizing)
+    token_bytes: f64,
+    /// per-task expert activation mass (flattened `l·E + e`), for the
+    /// spill-derived autoscaler boost
+    task_mass: Vec<Vec<f64>>,
+    /// latest exchanged windows — the federated signal spill routes on
+    windows: Vec<RegionWindow>,
+    buses: Vec<RegionBus>,
+    next_exchange: f64,
+    /// in-flight forwards: min-heap of (delivery-time bits, FIFO seq,
+    /// slot) over `pending_reqs[slot]` (times are non-negative, so the
+    /// IEEE bit pattern orders like the float; the monotone seq breaks
+    /// equal-time ties in forward order)
+    pending: BinaryHeap<Reverse<(u64, u64, u32)>>,
+    /// forward payload slab: slots recycle through `pending_free`, so
+    /// storage is bounded by forwards *in flight*, not total forwards
+    /// (the same free-list discipline as the engine's event slab)
+    pending_reqs: Vec<Option<(Request, usize, usize)>>,
+    pending_free: Vec<u32>,
+    seq: u64,
+    /// spilled-request counts per (destination region, task) since the
+    /// last exchange (feeds the receiving region's expert boost)
+    spill_tasks: Vec<Vec<u64>>,
+    // ---- accounting ------------------------------------------------
+    /// forwards attempted, by origin region
+    pub spilled_out: Vec<u64>,
+    /// forwards admitted, by destination region
+    pub spilled_in: Vec<u64>,
+    /// forwards that found no room on delivery, by origin region
+    pub spill_shed: Vec<u64>,
+    /// federation exchanges run
+    pub exchanges: u64,
+    /// non-neutral spill boosts handed out, counted per receiving region
+    /// per exchange (so this can exceed `exchanges` when several regions
+    /// received spill in one window)
+    pub boost_publishes: u64,
+}
+
+impl MultiGateway {
+    /// Build one gateway per shard over `topology` (shard `i` = region
+    /// `i`). Regions own disjoint clusters; the topology's job here is
+    /// the inter-region link costs.
+    pub fn new(
+        model: &ModelConfig,
+        shards: Vec<RegionShard>,
+        topology: RegionTopology,
+        spill_cfg: SpillConfig,
+    ) -> MultiGateway {
+        assert_eq!(
+            topology.num_regions(),
+            shards.len(),
+            "one shard per region"
+        );
+        assert!(spill_cfg.exchange_s > 0.0, "exchange period must be > 0");
+        let nr = shards.len();
+        let mut gateways = Vec::with_capacity(nr);
+        for shard in shards {
+            let initial = uniform::place(model, &shard.cluster);
+            gateways.push(Gateway::new(
+                model,
+                &shard.cluster,
+                &shard.workload,
+                initial,
+                shard.gateway_cfg,
+                shard.coord_cfg,
+            ));
+        }
+        let inter_net = NetModel::inter_region(
+            &topology,
+            spill_cfg.bandwidth_bps,
+            spill_cfg.base_latency_s,
+        );
+        let task_mass: Vec<Vec<f64>> = TaskKind::all()
+            .into_iter()
+            .map(|t| {
+                let prof = TaskProfile::build(t, model);
+                let mut mass =
+                    vec![0.0; model.num_layers * model.num_experts];
+                for (l, dist) in prof.dist.iter().enumerate() {
+                    for (e, &f) in dist.iter().enumerate() {
+                        mass[l * model.num_experts + e] = f;
+                    }
+                }
+                mass
+            })
+            .collect();
+        let slo_s = gateways
+            .first()
+            .map(|g| g.cfg.slo_s)
+            .unwrap_or(0.0);
+        MultiGateway {
+            topology,
+            inter_net,
+            token_bytes: model.token_bytes as f64,
+            task_mass,
+            windows: vec![RegionWindow::default(); nr],
+            buses: (0..nr).map(|_| RegionBus::new(slo_s)).collect(),
+            next_exchange: 0.0,
+            pending: BinaryHeap::new(),
+            pending_reqs: Vec::new(),
+            pending_free: Vec::new(),
+            seq: 0,
+            spill_tasks: vec![vec![0; TaskKind::all().len()]; nr],
+            spilled_out: vec![0; nr],
+            spilled_in: vec![0; nr],
+            spill_shed: vec![0; nr],
+            exchanges: 0,
+            boost_publishes: 0,
+            gateways,
+            spill_cfg,
+        }
+    }
+
+    /// Drive every regional gateway (and the spill mesh) to completion
+    /// on one virtual clock. Single-shot, like [`Gateway::run`].
+    pub fn run(&mut self) -> RegionsReport {
+        let mut now = 0.0;
+        loop {
+            let mut work = !self.pending.is_empty();
+            for gw in &self.gateways {
+                work = work || gw.has_work();
+            }
+            if !work {
+                break;
+            }
+            // earliest actionable time across regions, the federation
+            // exchange, and pending forward deliveries
+            let mut t_next = self.next_exchange;
+            for gw in &self.gateways {
+                if let Some(t) = gw.next_action_time(now) {
+                    t_next = t_next.min(t);
+                }
+                if gw.next_interval.is_finite() {
+                    t_next = t_next.min(gw.next_interval);
+                }
+            }
+            if let Some(&Reverse((bits, _, _))) = self.pending.peek() {
+                t_next = t_next.min(f64::from_bits(bits));
+            }
+            for gw in &mut self.gateways {
+                gw.advance_to(t_next);
+            }
+            now = t_next;
+            for gw in &mut self.gateways {
+                gw.tick_due(now);
+            }
+            if now + 1e-9 >= self.next_exchange {
+                self.exchange();
+                self.next_exchange += self.spill_cfg.exchange_s;
+            }
+            self.deliver_due(now);
+            self.drain_arrivals(now);
+            for gw in &mut self.gateways {
+                gw.dispatch_ready(now);
+            }
+        }
+        for gw in &mut self.gateways {
+            gw.engine.finalize();
+        }
+        self.build_report()
+    }
+
+    /// Process every region's arrivals due at `now`. A request forwards
+    /// to the best peer when its tenant's local headroom is under the
+    /// pre-spill watermark, or — the backstop — when every local queue
+    /// rejected it; with no willing peer it is shed at home.
+    fn drain_arrivals(&mut self, now: f64) {
+        for r in 0..self.gateways.len() {
+            while let Some(req) = self.gateways[r].pop_arrival_due(now) {
+                if self.spill_cfg.enabled && self.under_watermark(r, req.tenant)
+                {
+                    if let Some(q) = self.spill_target(r, req.tenant) {
+                        // counted offered at home like any arrival, then
+                        // forwarded ahead of the shed cliff
+                        self.gateways[r].offered += 1;
+                        self.forward(r, q, req, now);
+                        continue;
+                    }
+                }
+                match self.gateways[r].try_admit(req, now) {
+                    Ok(()) => {}
+                    Err(rej) => match self.spill_target(r, rej.tenant) {
+                        Some(q) => self.forward(r, q, rej, now),
+                        None => self.gateways[r]
+                            .admission
+                            .record_shed_tenant(rej.tenant),
+                    },
+                }
+            }
+        }
+    }
+
+    /// Is `tenant`'s region-wide admission headroom at region `r` below
+    /// the pre-spill watermark?
+    fn under_watermark(&self, r: usize, tenant: usize) -> bool {
+        if self.spill_cfg.prespill_frac <= 0.0 {
+            return false;
+        }
+        let adm = &self.gateways[r].admission;
+        let n = adm.num_servers();
+        let mut residual = 0usize;
+        for s in 0..n {
+            residual += adm.tenant_residual(s, tenant);
+        }
+        let cap = adm.tenant_cap(tenant) * n;
+        (residual as f64) < self.spill_cfg.prespill_frac * cap as f64
+    }
+
+    /// Spill destination for region `src`'s overflow of `tenant`: the
+    /// peer advertising the most admission headroom in the last
+    /// federation exchange, discounted by the inter-region latency to
+    /// reach it. Peers under the headroom floor, without room in *this
+    /// tenant's* own queues, or already pressured are skipped (a tenant
+    /// saturated everywhere sheds at home immediately instead of paying
+    /// a forward that is doomed on delivery). `None` = shed at home.
+    fn spill_target(&self, src: usize, tenant: usize) -> Option<usize> {
+        if !self.spill_cfg.enabled {
+            return None;
+        }
+        let mut best: Option<(f64, usize)> = None;
+        for q in 0..self.gateways.len() {
+            if q == src {
+                continue;
+            }
+            let w = &self.windows[q];
+            if w.residual < self.spill_cfg.min_residual {
+                continue;
+            }
+            if w.residual_by_tenant.get(tenant).copied().unwrap_or(0) == 0 {
+                continue;
+            }
+            if w.pressure > SPILL_MAX_PRESSURE {
+                continue;
+            }
+            let score = w.residual as f64
+                / (1.0 + self.topology.extra_latency(src, q));
+            if best.map(|(s, _)| score > s).unwrap_or(true) {
+                best = Some((score, q));
+            }
+        }
+        best.map(|(_, q)| q)
+    }
+
+    /// Forward a rejected request from `src` to `dst`: book the prompt
+    /// payload on the inter-region link (FIFO contention) and schedule
+    /// the delivery.
+    fn forward(&mut self, src: usize, dst: usize, req: Request, now: f64) {
+        self.spilled_out[src] += 1;
+        self.spill_tasks[dst][task_index(req.task)] += 1;
+        let bytes = req.prompt_tokens as f64 * self.token_bytes;
+        let at = self.inter_net.book_transfer(
+            src,
+            dst,
+            bytes,
+            now,
+            self.spill_cfg.fixed_s,
+        );
+        let seq = self.seq;
+        self.seq += 1;
+        let slot = match self.pending_free.pop() {
+            Some(s) => {
+                self.pending_reqs[s as usize] = Some((req, src, dst));
+                s
+            }
+            None => {
+                let s = self.pending_reqs.len() as u32;
+                self.pending_reqs.push(Some((req, src, dst)));
+                s
+            }
+        };
+        self.pending.push(Reverse((at.to_bits(), seq, slot)));
+    }
+
+    /// Admit every forward whose transfer has landed by `now`. The entry
+    /// server is the destination's most-headroom server for the
+    /// request's tenant; from there the normal preference walk applies.
+    /// A forward that finds no room is shed, attributed to its origin.
+    fn deliver_due(&mut self, now: f64) {
+        while let Some(&Reverse((bits, _, slot))) = self.pending.peek() {
+            if f64::from_bits(bits) > now + 1e-9 {
+                break;
+            }
+            self.pending.pop();
+            let (mut req, src, dst) = self.pending_reqs[slot as usize]
+                .take()
+                .expect("pending forward slot");
+            self.pending_free.push(slot);
+            let tenant = req.tenant;
+            let admitted = {
+                let gw = &mut self.gateways[dst];
+                let mut entry = 0usize;
+                let mut best = 0usize;
+                for s in 0..gw.admission.num_servers() {
+                    let res = gw.admission.tenant_residual(s, tenant);
+                    if res > best {
+                        best = res;
+                        entry = s;
+                    }
+                }
+                req.server = entry;
+                gw.admit_forwarded(req, now)
+            };
+            if admitted {
+                self.spilled_in[dst] += 1;
+            } else {
+                self.spill_shed[src] += 1;
+                self.gateways[src].admission.record_shed_tenant(tenant);
+            }
+        }
+    }
+
+    /// One federation exchange: publish every region's window, then hand
+    /// each coordinator its own pressure plus the expert boost derived
+    /// from the traffic spilled *into* it since the last exchange.
+    fn exchange(&mut self) {
+        for r in 0..self.gateways.len() {
+            let gw = &self.gateways[r];
+            let queued = gw.admission.total_queued();
+            let residual = gw.admission.total_residual();
+            let by_tenant: Vec<usize> = (0..gw.admission.num_tenants())
+                .map(|t| gw.admission.tenant_residual_total(t))
+                .collect();
+            self.windows[r] = self.buses[r].collect(
+                &gw.engine.report,
+                gw.admission.shed,
+                queued,
+                residual,
+                by_tenant,
+            );
+        }
+        for r in 0..self.gateways.len() {
+            let boost = self.spill_boost(r);
+            if !boost.is_empty() {
+                self.boost_publishes += 1;
+            }
+            let pressure = self.windows[r].pressure;
+            self.gateways[r]
+                .coordinator
+                .note_region_pressure(pressure, boost);
+            for c in &mut self.spill_tasks[r] {
+                *c = 0;
+            }
+        }
+        self.exchanges += 1;
+    }
+
+    /// Expert boost for a region that received spill: `1 + share_t ·
+    /// mass_t` summed over the spilled tasks, capped like the tenant
+    /// boost — the receiving autoscaler prefers replicating exactly what
+    /// the spill activates. Empty (neutral) when nothing spilled in.
+    fn spill_boost(&self, region: usize) -> Vec<f64> {
+        let counts = &self.spill_tasks[region];
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return Vec::new();
+        }
+        let n = self.task_mass.first().map(|m| m.len()).unwrap_or(0);
+        let mut boost = vec![1.0; n];
+        for (ti, &c) in counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let share = c as f64 / total as f64;
+            for (b, &m) in boost.iter_mut().zip(&self.task_mass[ti]) {
+                *b += share * m;
+            }
+        }
+        for b in &mut boost {
+            *b = b.min(crate::serve::tenant::MAX_EXPERT_BOOST);
+        }
+        boost
+    }
+
+    /// The thin global coordination view: per-region ledger/placement
+    /// memory accounting, aggregated for consistency checks.
+    pub fn global_view(&self) -> GlobalView {
+        let rows: Vec<RegionLedgerRow> = self
+            .gateways
+            .iter()
+            .enumerate()
+            .map(|(r, gw)| {
+                let cluster = &gw.engine.cluster_cfg;
+                let mut used = 0u64;
+                let mut cap = 0u64;
+                let mut reserved = 0u64;
+                for (s, srv) in cluster.servers.iter().enumerate() {
+                    for g in 0..srv.gpus.len() {
+                        used += gw.engine.placement.mem_used(s, g);
+                        cap += gw.coordinator.ledger.capacity(s, g);
+                        reserved += gw.coordinator.ledger.reserved(s, g);
+                    }
+                }
+                RegionLedgerRow {
+                    name: self.topology.regions[r].name.clone(),
+                    used,
+                    reserved,
+                    cap,
+                }
+            })
+            .collect();
+        GlobalView { rows }
+    }
+
+    fn build_report(&mut self) -> RegionsReport {
+        let slo_s = self
+            .gateways
+            .first()
+            .map(|g| g.cfg.slo_s)
+            .unwrap_or(0.0);
+        let mut regions = Vec::with_capacity(self.gateways.len());
+        let mut all_lat: Vec<f64> = Vec::new();
+        for (r, gw) in self.gateways.iter_mut().enumerate() {
+            let rep = gw.build_report();
+            let lat: Vec<f64> =
+                rep.serve.records.iter().map(|x| x.latency_s).collect();
+            all_lat.extend_from_slice(&lat);
+            regions.push(RegionSummary {
+                name: self.topology.regions[r].name.clone(),
+                spilled_out: self.spilled_out[r],
+                spilled_in: self.spilled_in[r],
+                spill_shed: self.spill_shed[r],
+                p50_s: crate::util::stats::percentile(&lat, 0.50),
+                p95_s: crate::util::stats::percentile(&lat, 0.95),
+                p99_s: crate::util::stats::percentile(&lat, 0.99),
+                gateway: rep,
+            });
+        }
+        let offered: u64 = regions.iter().map(|r| r.gateway.offered).sum();
+        let admitted: u64 =
+            regions.iter().map(|r| r.gateway.admitted).sum();
+        let shed: u64 = regions.iter().map(|r| r.gateway.shed).sum();
+        let completed: u64 = regions
+            .iter()
+            .map(|r| r.gateway.serve.records.len() as u64)
+            .sum();
+        let violations_completed: u64 = regions
+            .iter()
+            .map(|r| r.gateway.slo_violations_completed())
+            .sum();
+        RegionsReport {
+            spill_enabled: self.spill_cfg.enabled,
+            slo_s,
+            spilled: self.spilled_out.iter().sum(),
+            spill_shed: self.spill_shed.iter().sum(),
+            exchanges: self.exchanges,
+            boost_publishes: self.boost_publishes,
+            offered,
+            admitted,
+            shed,
+            completed,
+            violations_completed,
+            p50_s: crate::util::stats::percentile(&all_lat, 0.50),
+            p95_s: crate::util::stats::percentile(&all_lat, 0.95),
+            p99_s: crate::util::stats::percentile(&all_lat, 0.99),
+            regions,
+        }
+    }
+}
+
+/// One region's slice of a multi-gateway run.
+#[derive(Debug, Clone)]
+pub struct RegionSummary {
+    pub name: String,
+    /// Forwards attempted from here (origin accounting).
+    pub spilled_out: u64,
+    /// Forwards admitted here (destination accounting).
+    pub spilled_in: u64,
+    /// Forwards from here that found no room on delivery (shed at
+    /// origin).
+    pub spill_shed: u64,
+    /// Latency percentiles over requests *served in* this region
+    /// (including spilled-in traffic).
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub p99_s: f64,
+    /// The region's full gateway report (`offered` counts only this
+    /// region's own arrivals; `admitted`/`shed` include spilled-in
+    /// admissions / spill-sheds attributed here).
+    pub gateway: GatewayReport,
+}
+
+/// Everything a multi-gateway run observed, aggregated.
+#[derive(Debug, Clone)]
+pub struct RegionsReport {
+    pub spill_enabled: bool,
+    pub slo_s: f64,
+    pub regions: Vec<RegionSummary>,
+    /// Σ forwards attempted.
+    pub spilled: u64,
+    /// Σ forwards that shed on delivery.
+    pub spill_shed: u64,
+    pub exchanges: u64,
+    pub boost_publishes: u64,
+    pub offered: u64,
+    pub admitted: u64,
+    pub shed: u64,
+    pub completed: u64,
+    pub violations_completed: u64,
+    /// Latency percentiles over every completed request, all regions.
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub p99_s: f64,
+}
+
+impl RegionsReport {
+    /// Fraction of offered requests shed (anywhere, attributed to
+    /// origin).
+    pub fn shed_rate(&self) -> f64 {
+        if self.offered == 0 {
+            0.0
+        } else {
+            self.shed as f64 / self.offered as f64
+        }
+    }
+
+    /// Fraction of offered requests forwarded across regions.
+    pub fn spill_rate(&self) -> f64 {
+        if self.offered == 0 {
+            0.0
+        } else {
+            self.spilled as f64 / self.offered as f64
+        }
+    }
+
+    /// SLO attainment over the offered load: completions within the SLO
+    /// divided by everything offered (sheds count against, exactly like
+    /// [`crate::serve::tenant::TenantReport::attainment`]).
+    pub fn attainment(&self) -> f64 {
+        if self.offered == 0 {
+            1.0
+        } else {
+            (self.completed - self.violations_completed) as f64
+                / self.offered as f64
+        }
+    }
+}
+
+/// One region's row of the global memory view.
+#[derive(Debug, Clone)]
+pub struct RegionLedgerRow {
+    pub name: String,
+    /// Bytes resident in the region's placement (active + draining).
+    pub used: u64,
+    /// Bytes reserved in the region's ledger (in-flight operations).
+    pub reserved: u64,
+    /// Region GPU capacity.
+    pub cap: u64,
+}
+
+/// Thin global coordination view over the per-region ledgers — regions
+/// own disjoint memory, so global consistency is "every region's
+/// resident + reserved bytes fit its own capacity", checked in one
+/// place.
+#[derive(Debug, Clone)]
+pub struct GlobalView {
+    pub rows: Vec<RegionLedgerRow>,
+}
+
+impl GlobalView {
+    pub fn total_reserved(&self) -> u64 {
+        self.rows.iter().map(|r| r.reserved).sum()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        for row in &self.rows {
+            if row.used + row.reserved > row.cap {
+                return Err(Error::Placement(format!(
+                    "{}: resident {} + reserved {} exceeds capacity {}",
+                    row.name, row.used, row.reserved, row.cap
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The canonical regionalized scenario: `num_regions` independent
+/// 3-server edge testbeds with **edge-grade accelerators**
+/// (`gpu_scale` × an A100), each offering `rps_per_region` of the
+/// bigbench mix under a diurnal profile whose phase is staggered by
+/// `period_s / num_regions` per region. The staggering keeps the
+/// cluster-wide offered load constant while every region periodically
+/// runs past its own capacity — the regime where cross-gateway spill
+/// converts sheds into served requests.
+///
+/// With the default `gpu_scale` the bottleneck is GPU compute (≈ 0.48 s
+/// of GPU time per request over 3.75 effective GPUs ⇒ ≈ 7.8 req/s per
+/// region), which placement changes cannot move — so "peak overloads,
+/// trough idles, mean fits" holds by construction rather than by tuning:
+/// the default mean of 5.5 req/s sits ~30 % under capacity while the
+/// 2× diurnal peak sits ~40 % over it, and a fluid-model sensitivity
+/// sweep (capacity mis-estimated by ±25 %) keeps both acceptance
+/// deltas — spill cuts shed rate AND p95 — comfortably positive. The
+/// p95 cut is structural: the pre-spill watermark
+/// ([`SpillConfig::prespill_frac`]) keeps a saturated region's queues
+/// hovering at half depth, below the full-buffer sojourn plateau the
+/// isolated baseline's tail sits on.
+#[derive(Debug, Clone)]
+pub struct RegionsScenario {
+    pub num_regions: usize,
+    /// Mean aggregate arrival rate per region (req/s).
+    pub rps_per_region: f64,
+    pub horizon_s: f64,
+    /// Diurnal period; region `r` is phase-shifted by `r · period / R`.
+    pub period_s: f64,
+    pub amplitude: f64,
+    /// Edge-accelerator compute as a fraction of an A100.
+    pub gpu_scale: f64,
+    pub queue_cap: usize,
+    pub max_inflight: usize,
+    /// Stats-bus / placement-refresh interval per region.
+    pub interval_s: f64,
+    pub slo_s: f64,
+    pub spill: bool,
+    /// Run the (region-aware) replica autoscaler in every region.
+    pub autoscale: bool,
+    /// Multi-tenant regions: every region serves this tenant set through
+    /// its own per-(region, tenant) DRR queues; forwarded requests keep
+    /// their tenant tag on arrival at the peer. `None` = single-tenant.
+    /// Tenant profiles replace the diurnal profile, but each region's
+    /// phase offset still applies to them.
+    pub tenants: Option<crate::serve::TenantSet>,
+    /// Extra one-way latency between any two regions.
+    pub inter_latency_s: f64,
+    pub seed: u64,
+}
+
+impl Default for RegionsScenario {
+    fn default() -> Self {
+        RegionsScenario {
+            num_regions: 3,
+            rps_per_region: 5.5,
+            horizon_s: 480.0,
+            period_s: 240.0,
+            amplitude: 1.0,
+            gpu_scale: 0.01,
+            queue_cap: 8,
+            max_inflight: 6,
+            interval_s: 30.0,
+            slo_s: 3.0,
+            spill: true,
+            autoscale: false,
+            tenants: None,
+            inter_latency_s: 0.03,
+            seed: 0,
+        }
+    }
+}
+
+impl RegionsScenario {
+    /// The model every region serves (trimmed Mixtral, like the other
+    /// serving harnesses).
+    pub fn model(&self) -> ModelConfig {
+        let mut m = ModelConfig::mixtral_8x7b_sim();
+        m.num_layers = 4;
+        m
+    }
+
+    /// One region's cluster: the paper's 3-server edge testbed with
+    /// compute scaled down to edge-grade accelerators.
+    fn region_cluster(&self, model: &ModelConfig) -> ClusterConfig {
+        let mut c = ClusterConfig::edge_testbed_3_for(model);
+        for s in &mut c.servers {
+            for g in &mut s.gpus {
+                g.flops *= self.gpu_scale.max(1e-4);
+            }
+        }
+        c
+    }
+
+    /// Region `r`'s phase offset on the diurnal clock.
+    pub fn phase(&self, region: usize) -> f64 {
+        region as f64 * self.period_s / self.num_regions as f64
+    }
+
+    fn profile(&self) -> ArrivalProfile {
+        ArrivalProfile::Diurnal {
+            amplitude: self.amplitude,
+            period_s: self.period_s,
+        }
+    }
+
+    fn autoscale_cfg(&self) -> Option<crate::autoscale::AutoscaleConfig> {
+        self.autoscale
+            .then(crate::autoscale::AutoscaleConfig::default)
+    }
+
+    /// The topology: `num_regions` regions of 3 servers each, every
+    /// cross-region pair at `inter_latency_s` / half bandwidth.
+    pub fn topology(&self) -> RegionTopology {
+        RegionTopology::contiguous(
+            &vec![3usize; self.num_regions],
+            self.inter_latency_s,
+            0.5,
+        )
+    }
+
+    /// Build the multi-gateway system (spill per `self.spill`).
+    pub fn build(&self) -> MultiGateway {
+        let model = self.model();
+        let mut shards = Vec::with_capacity(self.num_regions);
+        for r in 0..self.num_regions {
+            let cluster = self.region_cluster(&model);
+            // mean aggregate rate spread evenly over the 3 streams
+            let workload = WorkloadConfig::bigbench(
+                cluster.num_servers() as f64 / self.rps_per_region,
+            );
+            let phase = self.phase(r);
+            shards.push(RegionShard {
+                gateway_cfg: GatewayConfig {
+                    horizon_s: self.horizon_s,
+                    profile: self.profile(),
+                    queue_cap: self.queue_cap,
+                    max_inflight: self.max_inflight,
+                    slo_s: self.slo_s,
+                    tenants: self.tenants.clone(),
+                    stream_phases: Some(vec![
+                        phase;
+                        cluster.num_servers()
+                    ]),
+                    // region seeds decorrelate the arrival streams
+                    seed: self.seed + 1000 * r as u64,
+                    ..GatewayConfig::default()
+                },
+                coord_cfg: CoordinatorConfig {
+                    interval_s: self.interval_s,
+                    seed: self.seed + 1000 * r as u64,
+                    autoscale: self.autoscale_cfg(),
+                    ..CoordinatorConfig::default()
+                },
+                cluster,
+                workload,
+            });
+        }
+        let spill_cfg = SpillConfig {
+            enabled: self.spill,
+            ..SpillConfig::default()
+        };
+        MultiGateway::new(&model, shards, self.topology(), spill_cfg)
+    }
+
+    /// The single-global-gateway baseline: one gateway over every
+    /// region's servers merged into one cluster, with the region
+    /// topology pricing its network (cross-region remote expert calls
+    /// pay the inter-region cost inside the engine) and the same
+    /// per-server diurnal phases. No spill concept — its admission
+    /// preference walk already spans all servers.
+    pub fn build_global(&self) -> Gateway {
+        let model = self.model();
+        let mut servers = Vec::new();
+        let mut streams = Vec::new();
+        let mut phases = Vec::new();
+        for r in 0..self.num_regions {
+            let shard = self.region_cluster(&model);
+            let workload = WorkloadConfig::bigbench(
+                shard.num_servers() as f64 / self.rps_per_region,
+            );
+            for (i, s) in shard.servers.into_iter().enumerate() {
+                let mut s = s;
+                s.name = format!("r{r}-{}", s.name);
+                servers.push(s);
+                streams.push(workload.streams[i].clone());
+                phases.push(self.phase(r));
+            }
+        }
+        let base = self.region_cluster(&model);
+        let merged = ClusterConfig {
+            name: format!("regions-{}-merged", self.num_regions),
+            servers,
+            bandwidth_bps: base.bandwidth_bps,
+            rtt_s: base.rtt_s,
+        };
+        let workload = WorkloadConfig {
+            name: "regions-merged".into(),
+            streams,
+        };
+        let initial = uniform::place(&model, &merged);
+        Gateway::new(
+            &model,
+            &merged,
+            &workload,
+            initial,
+            GatewayConfig {
+                horizon_s: self.horizon_s,
+                profile: self.profile(),
+                queue_cap: self.queue_cap,
+                max_inflight: self.max_inflight,
+                slo_s: self.slo_s,
+                tenants: self.tenants.clone(),
+                stream_phases: Some(phases),
+                topology: Some(self.topology()),
+                seed: self.seed,
+                ..GatewayConfig::default()
+            },
+            CoordinatorConfig {
+                interval_s: self.interval_s,
+                seed: self.seed,
+                autoscale: self.autoscale_cfg(),
+                ..CoordinatorConfig::default()
+            },
+        )
+    }
+}
+
+/// The canonical three-way comparison behind the `regions` CLI, the
+/// acceptance criterion and `BENCH_regions.json`: the default
+/// [`RegionsScenario`] with spill, without spill (isolated regions),
+/// and as one global gateway. Deterministic per (seed, horizon).
+pub fn regions_comparison(
+    seed: u64,
+    horizon_s: f64,
+) -> (RegionsReport, RegionsReport, GatewayReport) {
+    let scenario = RegionsScenario {
+        seed,
+        horizon_s,
+        ..RegionsScenario::default()
+    };
+    let spill = scenario.build().run();
+    let isolated = RegionsScenario {
+        spill: false,
+        ..scenario.clone()
+    }
+    .build()
+    .run();
+    let global = scenario.build_global().run();
+    (spill, isolated, global)
+}
+
+/// Deterministic metrics for `BENCH_regions.json`: per-region and
+/// aggregate serving outcomes for all three arms, plus the spill-vs-
+/// isolated deltas the CI guard checks. No wall-clock quantities — the
+/// same (seed, horizon) serializes byte-identically across runs.
+pub fn comparison_metrics(
+    spill: &RegionsReport,
+    isolated: &RegionsReport,
+    global: &GatewayReport,
+) -> Json {
+    let mut j = Json::obj();
+    for (mode, rep) in [("spill", spill), ("isolated", isolated)] {
+        j.set(&format!("{mode}_offered"), Json::Num(rep.offered as f64));
+        j.set(&format!("{mode}_shed"), Json::Num(rep.shed as f64));
+        j.set(&format!("{mode}_spilled"), Json::Num(rep.spilled as f64));
+        j.set(&format!("{mode}_shed_rate"), Json::Num(rep.shed_rate()));
+        j.set(&format!("{mode}_spill_rate"), Json::Num(rep.spill_rate()));
+        j.set(&format!("{mode}_p50_s"), Json::Num(rep.p50_s));
+        j.set(&format!("{mode}_p95_s"), Json::Num(rep.p95_s));
+        j.set(&format!("{mode}_p99_s"), Json::Num(rep.p99_s));
+        j.set(
+            &format!("{mode}_slo_attainment"),
+            Json::Num(rep.attainment()),
+        );
+        for region in &rep.regions {
+            let base = format!("{mode}_{}", region.name);
+            j.set(
+                &format!("{base}_offered"),
+                Json::Num(region.gateway.offered as f64),
+            );
+            j.set(
+                &format!("{base}_shed"),
+                Json::Num(region.gateway.shed as f64),
+            );
+            j.set(
+                &format!("{base}_spilled_out"),
+                Json::Num(region.spilled_out as f64),
+            );
+            j.set(
+                &format!("{base}_spilled_in"),
+                Json::Num(region.spilled_in as f64),
+            );
+            j.set(&format!("{base}_p95_s"), Json::Num(region.p95_s));
+        }
+    }
+    j.set("global_offered", Json::Num(global.offered as f64));
+    j.set("global_shed", Json::Num(global.shed as f64));
+    j.set("global_p95_s", Json::Num(global.latency_percentile(0.95)));
+    j.set("global_p99_s", Json::Num(global.latency_percentile(0.99)));
+    j.set(
+        "spill_p95_improvement_s",
+        Json::Num(isolated.p95_s - spill.p95_s),
+    );
+    j.set(
+        "spill_shed_rate_reduction",
+        Json::Num(isolated.shed_rate() - spill.shed_rate()),
+    );
+    j
+}
+
+/// The complete `BENCH_regions.json` document (no wall-clock block, so
+/// the file is byte-identical across runs at the same seed — the replay
+/// regression in `tests/region_properties.rs` locks exactly this).
+pub fn bench_file_json(
+    spill: &RegionsReport,
+    isolated: &RegionsReport,
+    global: &GatewayReport,
+) -> Json {
+    Json::from_pairs(vec![
+        ("suite", Json::Str("regions".into())),
+        ("metrics", comparison_metrics(spill, isolated, global)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TaskKind;
+    use crate::serve::TenantSet;
+
+    #[test]
+    fn forwarded_requests_respect_receiving_drr_weights() {
+        // Spill drops a forward into the receiving region's
+        // per-(region, tenant) DRR queues under its own tenant tag — so
+        // a backlog of forwarded requests dequeues by the receiving
+        // region's weights (pair preset: 4:1).
+        let mut m = ModelConfig::mixtral_8x7b_sim();
+        m.num_layers = 4;
+        let c = ClusterConfig::edge_testbed_3_for(&m);
+        let w = WorkloadConfig::bigbench(10.0);
+        let mut gw = Gateway::new(
+            &m,
+            &c,
+            &w,
+            uniform::place(&m, &c),
+            GatewayConfig {
+                tenants: Some(TenantSet::pair()),
+                locality_routing: false,
+                seed: 3,
+                ..GatewayConfig::default()
+            },
+            CoordinatorConfig::default(),
+        );
+        for i in 0..20 {
+            let req = Request {
+                id: i,
+                server: 0,
+                arrival_s: 0.0,
+                prompt_tokens: 16,
+                output_tokens: 4,
+                task: TaskKind::Arithmetic,
+                tenant: i % 2,
+            };
+            assert!(gw.admit_forwarded(req, 0.0), "forward {i} must land");
+        }
+        assert_eq!(gw.forwarded_in, 20);
+        assert_eq!(gw.offered, 0, "forwards are not locally offered");
+        let popped = gw.admission.pop(0, 10);
+        let t0 = popped.iter().filter(|q| q.req.tenant == 0).count();
+        assert_eq!(
+            (t0, popped.len() - t0),
+            (8, 2),
+            "10 pops at 4:1 weights dequeue 8:2"
+        );
+    }
+
+    #[test]
+    fn spill_moves_load_and_keeps_books_straight() {
+        // A short canonical run with spill + autoscalers: forwards
+        // happen, every counter reconciles, the federated boost reaches
+        // the receiving coordinators, and the global ledger view stays
+        // consistent.
+        let scenario = RegionsScenario {
+            horizon_s: 200.0,
+            autoscale: true,
+            seed: 5,
+            ..RegionsScenario::default()
+        };
+        let mut multi = scenario.build();
+        let report = multi.run();
+        assert!(report.spill_enabled);
+        assert!(report.offered > 0);
+        assert!(report.spilled > 0, "staggered peaks must spill");
+        assert!(report.exchanges >= 2);
+        assert!(
+            multi.boost_publishes > 0,
+            "spilled-in traffic must publish an expert boost"
+        );
+        // per-region and global conservation (the property suite in
+        // tests/region_properties.rs re-checks this through the public
+        // API; this is the in-tree smoke)
+        for region in &report.regions {
+            let g = &region.gateway;
+            assert_eq!(
+                g.offered,
+                (g.admitted - region.spilled_in)
+                    + (g.shed - region.spill_shed)
+                    + region.spilled_out,
+                "{} books must balance",
+                region.name
+            );
+            assert_eq!(g.forwarded_in, region.spilled_in);
+            assert_eq!(g.serve.records.len() as u64, g.admitted);
+        }
+        assert_eq!(report.offered, report.admitted + report.shed);
+        let spilled_in: u64 =
+            report.regions.iter().map(|r| r.spilled_in).sum();
+        assert_eq!(report.spilled, spilled_in + report.spill_shed);
+        multi.global_view().validate().unwrap();
+        assert!(multi.pending.is_empty(), "no forward left in flight");
+        // slot recycling: forward storage is bounded by in-flight
+        // forwards, not total forwards (every slot freed at the end)
+        assert_eq!(
+            multi.pending_free.len(),
+            multi.pending_reqs.len(),
+            "all forward slots recycled"
+        );
+    }
+
+    #[test]
+    fn multi_tenant_regions_spill_under_tenant_tags() {
+        // per-(region, tenant) DRR queues end to end: every region runs
+        // the bursty pair preset; the batch tenant's flash crowds (40 s of
+        // every 120 s, staggered 80 s per region so exactly one region
+        // bursts at a time) overflow and spill, forwards keep their
+        // tenant tag, and the per-tenant books still balance per region.
+        let scenario = RegionsScenario {
+            horizon_s: 150.0,
+            tenants: Some(TenantSet::pair()),
+            seed: 13,
+            ..RegionsScenario::default()
+        };
+        let report = scenario.build().run();
+        assert!(report.offered > 0);
+        assert!(
+            report.spilled > 0,
+            "staggered batch bursts must overflow into peers"
+        );
+        assert_eq!(report.offered, report.admitted + report.shed);
+        for region in &report.regions {
+            let g = &region.gateway;
+            assert_eq!(g.tenants.len(), 2, "{}", region.name);
+            assert_eq!(
+                g.offered,
+                (g.admitted - region.spilled_in)
+                    + (g.shed - region.spill_shed)
+                    + region.spilled_out,
+                "{} books must balance",
+                region.name
+            );
+            // the per-tenant slices cover every admission and shed that
+            // happened at this region's queues, forwarded traffic
+            // included — spill lands under real tenant tags
+            let adm: u64 = g.tenants.iter().map(|t| t.admitted).sum();
+            let shed: u64 = g.tenants.iter().map(|t| t.shed).sum();
+            assert_eq!(adm, g.admitted, "{}", region.name);
+            assert_eq!(shed, g.shed, "{}", region.name);
+        }
+    }
+
+    #[test]
+    fn isolated_regions_never_spill() {
+        let scenario = RegionsScenario {
+            horizon_s: 120.0,
+            spill: false,
+            seed: 7,
+            ..RegionsScenario::default()
+        };
+        let report = scenario.build().run();
+        assert!(!report.spill_enabled);
+        assert_eq!(report.spilled, 0);
+        assert_eq!(report.spill_rate(), 0.0);
+        assert_eq!(report.offered, report.admitted + report.shed);
+        for region in &report.regions {
+            assert_eq!(region.spilled_in, 0);
+            assert_eq!(region.gateway.forwarded_in, 0);
+        }
+    }
+
+    #[test]
+    fn global_baseline_builds_and_serves() {
+        let scenario = RegionsScenario {
+            horizon_s: 90.0,
+            seed: 11,
+            ..RegionsScenario::default()
+        };
+        let mut gw = scenario.build_global();
+        let report = gw.run();
+        assert!(report.offered > 0);
+        assert_eq!(report.offered, report.admitted + report.shed);
+        assert_eq!(report.serve.records.len() as u64, report.admitted);
+    }
+}

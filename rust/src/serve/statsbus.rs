@@ -160,6 +160,101 @@ impl TenantBus {
     }
 }
 
+/// One region's serving observations over a federation-exchange window —
+/// the cross-gateway pressure signal regional gateways trade (the
+/// region-level analogue of [`TenantWindow`], plus live capacity).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RegionWindow {
+    /// Requests this region's engine completed in the window.
+    pub completed: u64,
+    /// Requests shed at this region's admission in the window.
+    pub shed: u64,
+    /// p95 latency over the window's completions (0 when idle).
+    pub p95_s: f64,
+    /// Live admission queue depth at publish time (not a delta).
+    pub queued: usize,
+    /// Live admission headroom at publish time (Σ queue bounds − depths):
+    /// the spill room this region advertises to its peers.
+    pub residual: usize,
+    /// Per-tenant slices of `residual` (`[tenant]`, hard bounds only):
+    /// spill targeting requires headroom in the *forwarded tenant's* own
+    /// queues, not just somewhere in the region.
+    pub residual_by_tenant: Vec<usize>,
+    /// Derived scalar pressure — relative p95 overshoot + window shed
+    /// fraction, capped like tenant pressure. Peers avoid spilling into a
+    /// pressured region; the region's own coordinator relaxes its
+    /// migration threshold under it. Forwarded-in completions count here
+    /// under their *origin* arrival clock, but they leave the origin at
+    /// arrival time (spill happens before any queueing there), so the
+    /// only latency a receiver inherits is the inter-region transfer —
+    /// it cannot be pushed over the spill threshold by congestion it
+    /// did not cause.
+    pub pressure: f64,
+}
+
+/// Snapshot-differencing bus for one region's gateway: completions and
+/// sheds since the previous exchange (the same differencing pattern as
+/// [`TenantBus`], aggregated across tenants), annotated with the live
+/// queue state the spill policy routes on.
+#[derive(Debug, Clone)]
+pub struct RegionBus {
+    /// Region-level latency SLO the windows are scored against.
+    slo_s: f64,
+    records_seen: usize,
+    shed_seen: u64,
+}
+
+impl RegionBus {
+    pub fn new(slo_s: f64) -> RegionBus {
+        RegionBus {
+            slo_s,
+            records_seen: 0,
+            shed_seen: 0,
+        }
+    }
+
+    /// Publish the window covering everything since the last `collect`:
+    /// new completion records in `report` plus the growth of the
+    /// cumulative shed counter, stamped with the live `queued`/`residual`
+    /// admission state (`residual_by_tenant` = the per-tenant slices).
+    pub fn collect(
+        &mut self,
+        report: &ServeReport,
+        shed_cum: u64,
+        queued: usize,
+        residual: usize,
+        residual_by_tenant: Vec<usize>,
+    ) -> RegionWindow {
+        let recs = &report.records[self.records_seen..];
+        self.records_seen = report.records.len();
+        let lat: Vec<f64> =
+            recs.iter().map(|r| r.latency_s).collect();
+        let completed = lat.len() as u64;
+        let p95_s = crate::util::stats::percentile(&lat, 0.95);
+        let shed = shed_cum.saturating_sub(self.shed_seen);
+        self.shed_seen = shed_cum;
+        let mut pressure = 0.0;
+        if completed > 0 && self.slo_s > 0.0 {
+            pressure += (p95_s / self.slo_s - 1.0).max(0.0);
+        }
+        let offered = completed + shed;
+        if offered > 0 {
+            pressure += shed as f64 / offered as f64;
+        }
+        pressure =
+            pressure.min(crate::serve::tenant::MAX_TENANT_PRESSURE);
+        RegionWindow {
+            completed,
+            shed,
+            p95_s,
+            queued,
+            residual,
+            residual_by_tenant,
+            pressure,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -232,6 +327,35 @@ mod tests {
         // an idle interval publishes empty windows
         let w = bus.collect(&report, &[1, 4]);
         assert!(w.iter().all(|x| *x == TenantWindow::default()));
+    }
+
+    #[test]
+    fn region_windows_difference_and_pressure() {
+        let mut report = ServeReport::new(1, 60.0);
+        let mut bus = RegionBus::new(4.0);
+        // inside the SLO, nothing shed: zero pressure
+        push_rec(&mut report, 0, 0, 1.0);
+        push_rec(&mut report, 1, 0, 2.0);
+        let w = bus.collect(&report, 0, 5, 11, vec![7, 4]);
+        assert_eq!(w.completed, 2);
+        assert_eq!(w.shed, 0);
+        assert_eq!(w.queued, 5);
+        assert_eq!(w.residual, 11);
+        assert_eq!(w.residual_by_tenant, vec![7, 4]);
+        assert_eq!(w.pressure, 0.0);
+        // the next window sees only increments; overshoot + sheds build
+        // pressure (p95 8.0 at SLO 4.0 → +1.0; 2 shed of 4 offered → +0.5)
+        push_rec(&mut report, 2, 0, 8.0);
+        push_rec(&mut report, 3, 0, 8.0);
+        let w = bus.collect(&report, 2, 0, 0, vec![0, 0]);
+        assert_eq!(w.completed, 2);
+        assert_eq!(w.shed, 2);
+        assert!((w.pressure - 1.5).abs() < 1e-12, "pressure {}", w.pressure);
+        // idle window: no completions, no new sheds, no pressure
+        let w = bus.collect(&report, 2, 0, 16, vec![8, 8]);
+        assert_eq!(w.completed, 0);
+        assert_eq!(w.shed, 0);
+        assert_eq!(w.pressure, 0.0);
     }
 
     #[test]

@@ -1,0 +1,173 @@
+//! Property/invariant suite for the regionalized serving stack.
+//!
+//! Locks the spill conservation contract — cross-region spill never
+//! duplicates or drops a request: per region and globally, every arrival
+//! is exactly one of {admitted, shed, spilled-and-admitted-elsewhere,
+//! spilled-and-shed} — plus the acceptance comparison (cross-gateway
+//! spill reduces both p95 and shed-rate against the no-spill isolated
+//! baseline on the staggered-diurnal scenario) and the deterministic-
+//! replay regression for `BENCH_regions.json` (same seed + config ⇒
+//! byte-identical metrics across two runs, at two seeds, matching the
+//! PR 3/4 pattern). Everything is deterministic and single-threaded per
+//! test, so it passes under any `--test-threads` setting.
+
+use dancemoe::serve::regions::{
+    bench_file_json, regions_comparison, RegionsReport,
+};
+use dancemoe::serve::RegionsScenario;
+
+/// Per-region and global conservation: admitted + shed + spilled ==
+/// arrivals, with spill resolving to exactly one of admitted-at-peer or
+/// shed-at-origin.
+fn assert_conservation(report: &RegionsReport) {
+    let mut spilled_in_total = 0u64;
+    for region in &report.regions {
+        let g = &region.gateway;
+        // arrivals partition: locally admitted + locally shed + forwarded
+        assert_eq!(
+            g.offered,
+            (g.admitted - region.spilled_in)
+                + (g.shed - region.spill_shed)
+                + region.spilled_out,
+            "{}: offered must partition into local admits, local sheds \
+             and forwards",
+            region.name
+        );
+        // the receiving side saw exactly the forwards that were admitted
+        assert_eq!(g.forwarded_in, region.spilled_in, "{}", region.name);
+        // every admission (local or forwarded) completes exactly once
+        assert_eq!(
+            g.serve.records.len() as u64,
+            g.admitted,
+            "{}: admitted requests must complete exactly once",
+            region.name
+        );
+        spilled_in_total += region.spilled_in;
+    }
+    // globally nothing vanishes and nothing duplicates
+    assert_eq!(report.offered, report.admitted + report.shed);
+    assert_eq!(
+        report.spilled,
+        spilled_in_total + report.spill_shed,
+        "every forward resolves to a peer admission or an origin shed"
+    );
+    assert_eq!(report.completed, report.admitted);
+}
+
+#[test]
+fn spill_conserves_requests_per_region_and_globally() {
+    for seed in [3u64, 19] {
+        let scenario = RegionsScenario {
+            seed,
+            horizon_s: 260.0,
+            ..RegionsScenario::default()
+        };
+        let report = scenario.build().run();
+        assert!(report.offered > 0);
+        assert!(
+            report.spilled > 0,
+            "seed {seed}: staggered peaks must exercise spill"
+        );
+        assert_conservation(&report);
+    }
+}
+
+#[test]
+fn isolated_baseline_conserves_without_spill() {
+    let scenario = RegionsScenario {
+        seed: 3,
+        horizon_s: 260.0,
+        spill: false,
+        ..RegionsScenario::default()
+    };
+    let report = scenario.build().run();
+    assert_eq!(report.spilled, 0);
+    assert_eq!(report.spill_shed, 0);
+    assert_conservation(&report);
+}
+
+#[test]
+fn spill_and_isolated_offer_identical_arrivals() {
+    // the comparison is apples-to-apples: spill toggling must not change
+    // the open-loop arrival streams
+    let mk = |spill: bool| {
+        RegionsScenario {
+            seed: 11,
+            horizon_s: 200.0,
+            spill,
+            ..RegionsScenario::default()
+        }
+        .build()
+        .run()
+    };
+    let with = mk(true);
+    let without = mk(false);
+    assert_eq!(with.offered, without.offered);
+    for (a, b) in with.regions.iter().zip(&without.regions) {
+        assert_eq!(a.gateway.offered, b.gateway.offered, "{}", a.name);
+    }
+}
+
+#[test]
+fn spill_improves_p95_and_shed_rate_vs_isolated() {
+    // The acceptance comparison: on the staggered-diurnal 3-region
+    // scenario (each region periodically past its own capacity while the
+    // cluster-wide load stays constant), cross-gateway spill must reduce
+    // both the aggregate p95 and the shed rate against the isolated
+    // baseline running identical arrivals.
+    let (spill, isolated, _global) = regions_comparison(7, 480.0);
+    assert!(isolated.shed > 0, "isolated peaks must shed");
+    assert!(spill.spilled > 0, "spill must engage");
+    assert!(
+        spill.shed_rate() < isolated.shed_rate(),
+        "spill must reduce the shed rate ({:.4} vs {:.4})",
+        spill.shed_rate(),
+        isolated.shed_rate()
+    );
+    assert!(
+        spill.p95_s < isolated.p95_s,
+        "spill must reduce aggregate p95 ({:.3}s vs {:.3}s)",
+        spill.p95_s,
+        isolated.p95_s
+    );
+    assert!(
+        spill.attainment() > isolated.attainment(),
+        "spill must improve SLO attainment ({:.3} vs {:.3})",
+        spill.attainment(),
+        isolated.attainment()
+    );
+    assert_conservation(&spill);
+    assert_conservation(&isolated);
+}
+
+#[test]
+fn bench_metrics_byte_identical_across_runs() {
+    // The deterministic-replay regression (the PR 3/4 pattern): the same
+    // seed + config must serialize a byte-identical BENCH_regions metrics
+    // document on a re-run — any iteration-order nondeterminism in the
+    // multi-gateway loop, the spill mesh or the exchange breaks this
+    // immediately. Two seeds, as the acceptance criterion requires.
+    for seed in [7u64, 21] {
+        let (s1, i1, g1) = regions_comparison(seed, 200.0);
+        let (s2, i2, g2) = regions_comparison(seed, 200.0);
+        let a = bench_file_json(&s1, &i1, &g1);
+        let b = bench_file_json(&s2, &i2, &g2);
+        assert_eq!(
+            a.pretty(),
+            b.pretty(),
+            "seed {seed}: metrics must serialize identically"
+        );
+        let dir = std::env::temp_dir();
+        let p1 = dir.join(format!("dancemoe_regions_replay_{seed}_a.json"));
+        let p2 = dir.join(format!("dancemoe_regions_replay_{seed}_b.json"));
+        a.write_file(&p1).unwrap();
+        b.write_file(&p2).unwrap();
+        assert_eq!(
+            std::fs::read(&p1).unwrap(),
+            std::fs::read(&p2).unwrap(),
+            "seed {seed}: the written document must be byte-identical"
+        );
+        let _ = std::fs::remove_file(&p1);
+        let _ = std::fs::remove_file(&p2);
+    }
+}
