@@ -15,6 +15,7 @@
 use dancemoe::config::{ClusterConfig, ModelConfig, TaskKind, WorkloadConfig};
 use dancemoe::engine::reference::{ref_sample_batch, RefEngine};
 use dancemoe::engine::{warm_stats, CostModel, Engine, EngineConfig};
+use dancemoe::obs::ObsConfig;
 use dancemoe::placement::PlacementAlgo;
 use dancemoe::trace::{TaskProfile, TraceGenerator};
 use dancemoe::util::bench::Bencher;
@@ -108,6 +109,35 @@ fn main() {
                 "latencies diverged — fix determinism before benching"
             );
         }
+        // tracing is result-neutral: a traced run reproduces the
+        // untraced records bit-for-bit (the recorder observes the
+        // co-simulation without touching it)
+        let mut traced =
+            Engine::new(&m, &c, pl.clone(), cfg.clone(), CostModel::default());
+        traced.obs.enable(ObsConfig::default());
+        traced.push_trace(&trace);
+        traced.run();
+        assert_eq!(
+            traced.events_processed(),
+            optimized.events_processed(),
+            "tracing altered the event stream"
+        );
+        for (a, x) in optimized
+            .report
+            .records
+            .iter()
+            .zip(&traced.report.records)
+        {
+            assert_eq!(
+                a.latency_s.to_bits(),
+                x.latency_s.to_bits(),
+                "tracing altered results — the recorder must be inert"
+            );
+        }
+        assert!(
+            !traced.obs.events.is_empty(),
+            "the traced run must actually record spans"
+        );
         (
             optimized.events_processed() as f64,
             optimized.event_slab_high_water(),
@@ -143,9 +173,38 @@ fn main() {
             Bencher::black_box(eng.events_processed());
         })
         .clone();
+    // tracing-enabled run: measures the recorder's overhead. The perf
+    // floor below guards the DISABLED path only — tracing is opt-in.
+    let traced = b
+        .bench("engine full run — optimized + tracing", || {
+            let mut eng = Engine::new(
+                &m,
+                &c,
+                pl.clone(),
+                cfg.clone(),
+                CostModel::default(),
+            );
+            eng.obs.enable(ObsConfig::default());
+            eng.push_trace(&trace);
+            eng.run();
+            Bencher::black_box(eng.events_processed());
+        })
+        .clone();
 
     let base_eps = base.throughput(events);
     let opt_eps = opt.throughput(events);
+    let traced_eps = traced.throughput(events);
+    let tracing_overhead = if opt.mean_ns > 0.0 {
+        traced.mean_ns / opt.mean_ns - 1.0
+    } else {
+        0.0
+    };
+    println!(
+        "  -> tracing enabled: {:.2} M events/s ({:+.1}% overhead; \
+         floor applies to the disabled path)",
+        traced_eps / 1e6,
+        100.0 * tracing_overhead
+    );
     let speedup = if base.mean_ns > 0.0 {
         base.mean_ns / opt.mean_ns
     } else {
@@ -167,6 +226,8 @@ fn main() {
     let metrics = Json::from_pairs(vec![
         ("events_per_s", Json::Num(opt_eps)),
         ("baseline_events_per_s", Json::Num(base_eps)),
+        ("events_per_s_traced", Json::Num(traced_eps)),
+        ("tracing_overhead", Json::Num(tracing_overhead)),
         ("speedup", Json::Num(speedup)),
         ("events_per_run", Json::Num(events)),
         ("ns_per_draw_reference", Json::Num(ref_draw.mean_ns)),

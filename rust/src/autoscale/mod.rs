@@ -142,6 +142,27 @@ pub struct AutoscaleLog {
     pub scale_ins_applied: u64,
 }
 
+impl AutoscaleLog {
+    /// One metrics-snapshot row (`kind: "autoscale"`) for the unified
+    /// observability stream ([`crate::obs`]).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::from_pairs(vec![
+            ("t_s", Json::Num(self.t_s)),
+            ("kind", Json::Str("autoscale".into())),
+            ("hot_layer", Json::Num(self.hot_layer as f64)),
+            ("hot_expert", Json::Num(self.hot_expert as f64)),
+            ("hot_load_tps", Json::Num(self.hot_load_tps)),
+            ("hot_ratio", Json::Num(self.hot_ratio)),
+            ("hot_replicas", Json::Num(self.hot_replicas as f64)),
+            ("extra_replicas", Json::Num(self.extra_replicas as f64)),
+            ("draining", Json::Num(self.draining as f64)),
+            ("scale_outs_applied", Json::Num(self.scale_outs_applied as f64)),
+            ("scale_ins_applied", Json::Num(self.scale_ins_applied as f64)),
+        ])
+    }
+}
+
 /// The replica-count controller (one per [`crate::coordinator::Coordinator`]).
 pub struct Autoscaler {
     pub cfg: AutoscaleConfig,

@@ -102,6 +102,30 @@ pub struct IntervalLog {
     pub slo_pressure: f64,
 }
 
+impl IntervalLog {
+    /// One metrics-snapshot row (`kind: "interval"`) for the unified
+    /// observability stream ([`crate::obs`]).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut j = Json::from_pairs(vec![
+            ("t_s", Json::Num(self.t_s)),
+            ("kind", Json::Str("interval".into())),
+            ("remote_penalty_s", Json::Num(self.remote_penalty_s)),
+            ("observed_tokens", Json::Num(self.observed_tokens)),
+            ("slo_pressure", Json::Num(self.slo_pressure)),
+            ("evaluated", Json::Bool(self.decision.is_some())),
+        ]);
+        if let Some(d) = &self.decision {
+            j.set("adopted", Json::Bool(d.adopt));
+            j.set("replicas_moved", Json::Num(d.replicas_moved as f64));
+            j.set("t_mig_s", Json::Num(d.t_mig_s));
+            j.set("cost_old_s", Json::Num(d.cost_old_s));
+            j.set("cost_new_s", Json::Num(d.cost_new_s));
+        }
+        j
+    }
+}
+
 /// The global scheduler wrapping an [`Engine`].
 pub struct Coordinator {
     pub cfg: CoordinatorConfig,

@@ -55,6 +55,7 @@ use crate::cluster::Cluster;
 use crate::config::{ClusterConfig, ModelConfig, TaskKind, WorkloadConfig};
 use crate::moe::ActivationStats;
 use crate::net::NetModel;
+use crate::obs::{Obs, SpanKind};
 use crate::placement::{dancemoe_place, Placement};
 use crate::trace::{GateScratch, Request, TaskProfile, Trace, TraceGenerator};
 use crate::util::rng::Rng;
@@ -214,6 +215,10 @@ pub struct Engine {
     /// activation statistics observed during the run (feeds the scheduler)
     pub stats: ActivationStats,
     pub report: ServeReport,
+    /// span recorder + latency decomposition (disabled by default; every
+    /// hook is result-neutral — it never books resources or reorders
+    /// events, so enabling it cannot change simulated outcomes)
+    pub obs: Obs,
     rng: Rng,
     /// Pending events as packed `(queue_key, slab slot)` pairs (see
     /// [`queue_key`]); pop order is identical to the historical
@@ -271,6 +276,7 @@ impl Engine {
             net: NetModel::new(cluster_cfg),
             stats: ActivationStats::new(model, cluster_cfg.num_servers()),
             report: ServeReport::new(cluster_cfg.num_servers(), cfg.bucket_s),
+            obs: Obs::new(),
             rng: Rng::new(cfg.seed ^ 0xe961_e001),
             queue: BinaryHeap::new(),
             events: Vec::new(),
@@ -462,6 +468,7 @@ impl Engine {
         self.pending_placement = Some(new_placement);
         self.push_event(apply_at, Ev::ApplyPlacement);
         self.report.migrations.push((self.now, moved, t_mig_total));
+        self.obs.on_migration(self.now, moved, apply_at - self.now);
         apply_at
     }
 
@@ -607,6 +614,7 @@ impl Engine {
                     gpu: g,
                     applied,
                 });
+                self.obs.on_scale(true, l, e, s, g, self.now);
             }
             Ev::ApplyScaleIn(s, g, l, e) => {
                 self.drains_pending -= 1;
@@ -620,6 +628,7 @@ impl Engine {
                     gpu: g,
                     applied,
                 });
+                self.obs.on_scale(false, l, e, s, g, self.now);
             }
         }
     }
@@ -644,18 +653,26 @@ impl Engine {
             }
         }
         self.active[self.reqs[r].exec_server] += 1;
+        if self.obs.enabled() {
+            let (req_id, tenant, arrival_s, exec) = {
+                let rq = &self.reqs[r];
+                (rq.req.id as u64, rq.req.tenant, rq.req.arrival_s, rq.exec_server)
+            };
+            self.obs.on_arrive(r, req_id, tenant, arrival_s, exec, self.now);
+        }
         self.start_layer_pass(r, self.now);
     }
 
     fn start_layer_pass(&mut self, r: usize, ready: f64) {
-        let (server, tokens) = {
+        let (server, tokens, layer) = {
             let rq = &self.reqs[r];
-            (rq.exec_server, rq.pass_tokens)
+            (rq.exec_server, rq.pass_tokens, rq.layer)
         };
         let gpu = self.cluster.earliest_gpu(server);
         let flops = self.cluster.servers[server].gpus[gpu].flops;
         let dur = self.cost.home_s(&self.model, tokens, flops);
-        let (_, end) = self.cluster.book(server, gpu, ready, dur);
+        let (start, end) = self.cluster.book(server, gpu, ready, dur);
+        self.obs.span_home(r, layer, server, gpu, start, end);
         self.push_event(end, Ev::HomeDone(r));
     }
 
@@ -726,6 +743,7 @@ impl Engine {
             rq.layer_deadline = now;
             rq.invs = invs;
         }
+        self.obs.on_home_done(r, now, pending);
         if pending == 0 {
             // degenerate (no experts routed) — advance directly
             self.advance_after_layer(r, now);
@@ -748,6 +766,8 @@ impl Engine {
                 self.reqs[r].invs[i].t0 = now;
                 let fx = self.cost.remote_fixed_s / 2.0;
                 let t = self.net.book_transfer(exec, inv.server, bytes, now, fx);
+                self.obs
+                    .span_net(SpanKind::NetSend, r, layer, inv.expert, exec, now, t);
                 self.push_event(t, Ev::SendDone(r, i));
             } else {
                 self.book_expert_compute(r, i, now);
@@ -866,21 +886,36 @@ impl Engine {
             dur += self.cost.load_s(&self.model, pcie)
                 * (1.0 - self.cost.offload_prefetch_overlap);
         }
-        let (_, end) = self.cluster.book(inv.server, inv.gpu, ready, dur);
+        let (start, end) = self.cluster.book(inv.server, inv.gpu, ready, dur);
+        self.obs
+            .span_expert(r, layer, inv.expert, inv.server, inv.gpu, start, end);
         self.push_event(end, Ev::ExpertDone(r, i));
     }
 
     fn on_send_done(&mut self, r: usize, i: usize) {
+        self.obs.on_send_done(r, i, self.now);
         self.book_expert_compute(r, i, self.now);
     }
 
     fn on_expert_done(&mut self, r: usize, i: usize) {
+        self.obs.on_expert_done(r, i, self.now);
         let inv = self.reqs[r].invs[i];
         if inv.remote {
             let exec = self.reqs[r].exec_server;
+            let layer = self.reqs[r].layer;
             let bytes = inv.tokens * self.model.token_bytes as f64;
             let fx = self.cost.remote_fixed_s / 2.0;
-            let t = self.net.book_transfer(inv.server, exec, bytes, self.now, fx);
+            let now = self.now;
+            let t = self.net.book_transfer(inv.server, exec, bytes, now, fx);
+            self.obs.span_net(
+                SpanKind::NetReturn,
+                r,
+                layer,
+                inv.expert,
+                inv.server,
+                now,
+                t,
+            );
             self.push_event(t, Ev::ReturnDone(r, i));
         } else {
             self.on_invocation_complete(r, i);
@@ -898,6 +933,7 @@ impl Engine {
             self.remote_extra_s += ((now - inv.t0) - comp).max(0.0);
             self.remote_invocations += inv.tokens;
         }
+        self.obs.on_inv_complete(r, i, inv.remote, now);
         let deadline = {
             let rq = &mut self.reqs[r];
             rq.layer_deadline = rq.layer_deadline.max(now);
@@ -911,6 +947,7 @@ impl Engine {
     }
 
     fn advance_after_layer(&mut self, r: usize, t: f64) {
+        self.obs.on_layer_complete(r, t);
         let layers = self.model.num_layers;
         let chunk = self.cfg.decode_chunk.max(1);
         {
@@ -966,7 +1003,9 @@ impl Engine {
             local_token_invocations: rq.local_tok,
             remote_token_invocations: rq.remote_tok,
         };
+        let (req_id, home) = (rq.req.id as u64, rq.req.server);
         self.report.push(rec);
+        self.obs.on_finish(r, req_id, home, t);
     }
 }
 

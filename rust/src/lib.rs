@@ -26,6 +26,7 @@
 //! | [`cluster`] | edge server + GPU state, memory accounting, offload store, region topology |
 //! | [`runtime`] | PJRT client (feature `pjrt`) or stub backend, HLO artifact loading, typed execution, calibration |
 //! | [`engine`] | discrete-event serving engine + MoE-Infinity offload baseline |
+//! | [`obs`] | deterministic tracing: span recorder, latency decomposition, Chrome trace-event export, flight recorder |
 //! | [`serve`] | online gateway: open-loop arrivals, admission control, continuous batching, replica-aware locality routing, live stats bus; regionalized multi-gateway serving with cross-region spill ([`serve::regions`]) |
 //! | [`autoscale`] | expert replica autoscaler: load EWMAs with hysteresis, scale-out/drained scale-in decisions |
 //! | [`coordinator`] | global scheduler: stats collection, periodic placement refresh, migration execution, migration↔autoscale arbitration |
@@ -85,6 +86,7 @@ pub mod engine;
 pub mod exp;
 pub mod moe;
 pub mod net;
+pub mod obs;
 pub mod placement;
 pub mod runtime;
 pub mod serve;
@@ -99,6 +101,7 @@ pub mod prelude {
     pub use crate::coordinator::{Coordinator, CoordinatorConfig};
     pub use crate::engine::{Engine, EngineConfig, ServeReport, World};
     pub use crate::moe::{ActivationStats, ExpertId, LayerId, ServerId};
+    pub use crate::obs::{DecompReport, ObsConfig};
     pub use crate::placement::{Placement, PlacementAlgo};
     pub use crate::serve::{
         ArrivalProfile, Gateway, GatewayConfig, GatewayReport, MultiGateway,

@@ -12,6 +12,7 @@ use dancemoe::config::{presets, ClusterConfig, ModelConfig, WorkloadConfig};
 use dancemoe::coordinator::CoordinatorConfig;
 use dancemoe::engine::{warm_stats, ScaleKind};
 use dancemoe::exp::runner::RunSpec;
+use dancemoe::obs::{DecompReport, ObsConfig};
 use dancemoe::placement::{objective, uniform, PlacementAlgo};
 use dancemoe::runtime::{calibrate, forward, weights, Runtime};
 use dancemoe::serve::{
@@ -58,7 +59,14 @@ fn cli() -> Cli {
                 .flag("algo", Some("dancemoe"), "placement algorithm for refreshes")
                 .flag("seed", Some("0"), "rng seed")
                 .switch("no-migrate", "disable live migration")
-                .switch("home-routing", "disable locality-aware routing"),
+                .switch("home-routing", "disable locality-aware routing")
+                .switch("trace", "record spans and print the latency decomposition")
+                .opt_flag("trace-out", "write Chrome trace-event JSON here \
+                           (implies --trace; open in Perfetto)")
+                .opt_flag("metrics-out", "write the per-interval metrics \
+                           snapshots here as JSONL (implies --trace)")
+                .opt_flag("flight-out", "write flight-recorder dumps here \
+                           as JSON (implies --trace)"),
             Command::new("autoscale", "online serving with the expert \
                           replica autoscaler: live-load-driven scale-out, \
                           replica-aware routing, drained scale-in")
@@ -80,7 +88,14 @@ fn cli() -> Cli {
                        (0 = hard bounds; note the baselines keep hard \
                        bounds either way)")
                 .flag("seed", Some("0"), "rng seed")
-                .switch("no-baseline", "skip the fixed-placement comparison run"),
+                .switch("no-baseline", "skip the fixed-placement comparison run")
+                .switch("trace", "record spans and print the latency decomposition")
+                .opt_flag("trace-out", "write Chrome trace-event JSON here \
+                           (implies --trace; open in Perfetto)")
+                .opt_flag("metrics-out", "write the per-interval metrics \
+                           snapshots here as JSONL (implies --trace)")
+                .opt_flag("flight-out", "write flight-recorder dumps here \
+                           as JSON (implies --trace)"),
             Command::new("tenants", "multi-tenant online serving: per-tenant \
                           queues, weighted-deficit admission, per-tenant \
                           SLOs driving placement refresh and autoscaling")
@@ -96,7 +111,14 @@ fn cli() -> Cli {
                 .flag("seed", Some("0"), "rng seed")
                 .switch("no-migrate", "disable live migration")
                 .switch("autoscale", "run the SLO-boosted replica autoscaler too")
-                .switch("no-baseline", "skip the shared-queue comparison run"),
+                .switch("no-baseline", "skip the shared-queue comparison run")
+                .switch("trace", "record spans and print the latency decomposition")
+                .opt_flag("trace-out", "write Chrome trace-event JSON here \
+                           (implies --trace; open in Perfetto)")
+                .opt_flag("metrics-out", "write the per-interval metrics \
+                           snapshots here as JSONL (implies --trace)")
+                .opt_flag("flight-out", "write flight-recorder dumps here \
+                           as JSON (implies --trace)"),
             Command::new("regions", "regionalized serving: one gateway \
                           per region with staggered diurnal peaks, a \
                           federated pressure exchange, and cross-gateway \
@@ -121,7 +143,14 @@ fn cli() -> Cli {
                 .switch("no-spill", "isolate the regions (disable cross-gateway spill)")
                 .switch("autoscale", "run the replica autoscaler in every region")
                 .switch("no-baseline", "skip the isolated and single-global-gateway \
-                         comparison runs"),
+                         comparison runs")
+                .switch("trace", "record spans and print the latency decomposition")
+                .opt_flag("trace-out", "write one Chrome trace-event JSON over \
+                           every region here (implies --trace)")
+                .opt_flag("metrics-out", "write the region-tagged metrics \
+                           snapshots here as JSONL (implies --trace)")
+                .opt_flag("flight-out", "write every region's flight-recorder \
+                           dumps here as JSON (implies --trace)"),
             Command::new("exp", "regenerate a paper table/figure \
                           (table1|table2|fig2|fig3|fig5|fig6|fig7|fig8|ablations|all)")
                 .flag("seed", Some("7"), "rng seed")
@@ -289,6 +318,73 @@ fn online_setup(
     Ok((model, cluster, workload, rps))
 }
 
+/// Any tracing flag turns the recorder on for the online commands.
+fn obs_wanted(args: &Args) -> bool {
+    args.switch("trace")
+        || args.get("trace-out").is_some()
+        || args.get("metrics-out").is_some()
+        || args.get("flight-out").is_some()
+}
+
+/// Write whichever observability outputs were requested. The closures
+/// build each document lazily so unrequested exports cost nothing.
+fn write_obs_files(
+    args: &Args,
+    trace: impl FnOnce() -> dancemoe::util::json::Json,
+    metrics: impl FnOnce() -> String,
+    flight: impl FnOnce() -> dancemoe::util::json::Json,
+) -> Result<(), String> {
+    if let Some(path) = args.get("trace-out") {
+        trace()
+            .write_file(&PathBuf::from(path))
+            .map_err(|e: Error| e.to_string())?;
+        println!("wrote Chrome trace to {path} (open in Perfetto)");
+    }
+    if let Some(path) = args.get("metrics-out") {
+        std::fs::write(path, metrics()).map_err(|e| e.to_string())?;
+        println!("wrote metrics snapshots to {path}");
+    }
+    if let Some(path) = args.get("flight-out") {
+        flight()
+            .write_file(&PathBuf::from(path))
+            .map_err(|e: Error| e.to_string())?;
+        println!("wrote flight-recorder dumps to {path}");
+    }
+    Ok(())
+}
+
+/// Render a run's latency decomposition (present when tracing was on).
+fn print_decomp(decomp: &Option<DecompReport>) {
+    let Some(d) = decomp else { return };
+    let mut t = Table::new(
+        &format!("latency decomposition ({} traced requests)", d.count),
+        &["stage", "p50 (s)", "p95 (s)", "p99 (s)", "mean (s)", "share"],
+    );
+    for s in &d.stages {
+        t.row(vec![
+            s.stage.to_string(),
+            format!("{:.3}", s.p50_s),
+            format!("{:.3}", s.p95_s),
+            format!("{:.3}", s.p99_s),
+            format!("{:.3}", s.mean_s),
+            format!("{:.1}%", 100.0 * s.share),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "comms share {:.1}%   compute share {:.1}%",
+        100.0 * d.comms_share,
+        100.0 * d.compute_share,
+    );
+    for (tenant, stages) in &d.per_tenant {
+        let shares: Vec<String> = stages
+            .iter()
+            .map(|s| format!("{} {:.1}%", s.stage, 100.0 * s.share))
+            .collect();
+        println!("tenant {tenant}: {}", shares.join("  "));
+    }
+}
+
 fn cmd_gateway(args: &Args) -> Result<(), String> {
     let (model, cluster, workload, rps) = online_setup(args)?;
     let profile = ArrivalProfile::from_name(&args.get_str("profile"))
@@ -329,6 +425,9 @@ fn cmd_gateway(args: &Args) -> Result<(), String> {
     let initial = uniform::place(&model, &cluster);
     let mut gw =
         Gateway::new(&model, &cluster, &workload, initial, cfg, coord_cfg);
+    if obs_wanted(args) {
+        gw.enable_obs(ObsConfig::default());
+    }
     let report = gw.run();
 
     let mut t = Table::new(
@@ -401,6 +500,13 @@ fn cmd_gateway(args: &Args) -> Result<(), String> {
              T_mig {t_mig:.2}s (from online stats)"
         );
     }
+    print_decomp(&report.decomp);
+    write_obs_files(
+        args,
+        || gw.trace_json(),
+        || gw.metrics_jsonl(),
+        || gw.flight_json(),
+    )?;
     Ok(())
 }
 
@@ -457,6 +563,9 @@ fn cmd_autoscale(args: &Args) -> Result<(), String> {
             ..CoordinatorConfig::default()
         },
     );
+    if obs_wanted(args) {
+        gw.enable_obs(ObsConfig::default());
+    }
     let report = gw.run();
 
     println!(
@@ -551,6 +660,13 @@ fn cmd_autoscale(args: &Args) -> Result<(), String> {
         report.scale_outs,
         report.scale_ins,
     );
+    print_decomp(&report.decomp);
+    write_obs_files(
+        args,
+        || gw.trace_json(),
+        || gw.metrics_jsonl(),
+        || gw.flight_json(),
+    )?;
     if !args.switch("no-baseline") {
         // two baselines at the same arrival stream: migrate-only isolates
         // what the autoscaler adds on top of migration; fixed is the
@@ -688,6 +804,9 @@ fn cmd_tenants(args: &Args) -> Result<(), String> {
         gcfg.clone(),
         coord_cfg.clone(),
     );
+    if obs_wanted(args) {
+        gw.enable_obs(ObsConfig::default());
+    }
     let report = gw.run();
 
     println!(
@@ -723,6 +842,13 @@ fn cmd_tenants(args: &Args) -> Result<(), String> {
         report.scale_ins,
         max_pressure,
     );
+    print_decomp(&report.decomp);
+    write_obs_files(
+        args,
+        || gw.trace_json(),
+        || gw.metrics_jsonl(),
+        || gw.flight_json(),
+    )?;
 
     if !args.switch("no-baseline") {
         // Shared-queue baseline: same arrivals, one FIFO per server.
@@ -815,6 +941,9 @@ fn cmd_regions(args: &Args) -> Result<(), String> {
     );
 
     let mut multi = scenario.build();
+    if obs_wanted(args) {
+        multi.enable_obs(ObsConfig::default());
+    }
     let report = multi.run();
     let mut t = Table::new(
         "per-region serving (spilled-in traffic completes where it lands)",
@@ -849,6 +978,18 @@ fn cmd_regions(args: &Args) -> Result<(), String> {
         100.0 * report.attainment(),
         report.exchanges,
     );
+    for region in &report.regions {
+        if region.gateway.decomp.is_some() {
+            println!("-- {}", region.name);
+            print_decomp(&region.gateway.decomp);
+        }
+    }
+    write_obs_files(
+        args,
+        || multi.trace_json(),
+        || multi.metrics_jsonl(),
+        || multi.flight_json(),
+    )?;
     let view = multi.global_view();
     view.validate().map_err(|e| e.to_string())?;
     for row in &view.rows {

@@ -1,0 +1,216 @@
+//! Chrome trace-event JSON exporter (Perfetto / `chrome://tracing`).
+//!
+//! Maps the recorder's [`SpanEvent`]s onto the trace-event format's
+//! process/thread grid: **pid = server** (offset per region in
+//! multi-gateway runs), **tid = GPU** for compute spans, plus three
+//! synthetic lanes per server — `gateway` (arrivals, sheds, batch
+//! formation, completions), `net` (activation transfers), and `control`
+//! (migrations, scale operations, flight-recorder triggers). Cross-region
+//! forwards are emitted as flow events (`ph: "s"` at the origin, `"f"` at
+//! the destination) so Perfetto draws an arrow from the forwarding
+//! region's lane to the receiving one.
+//!
+//! Output is built exclusively from recorder state (virtual clock, no
+//! wall time) through [`crate::util::json::Json`]'s ordered maps, so the
+//! same seed serializes byte-identically — the property the trace
+//! determinism suite locks.
+
+use super::{Obs, SpanEvent, SpanKind, NO_REQ};
+use crate::util::json::Json;
+use std::collections::BTreeSet;
+
+/// Synthetic tid for migration / scale / flight-trigger marks.
+pub const TID_CONTROL: u32 = 70;
+/// Synthetic tid for gateway lifecycle marks (arrive/shed/batch/done).
+pub const TID_GATEWAY: u32 = 80;
+/// Synthetic tid for network transfer spans.
+pub const TID_NET: u32 = 90;
+
+/// One recorder's slice of the export: its label (region name, empty for
+/// single-gateway runs), the pid offset its servers map to, and the
+/// cluster's server names for the process-name metadata.
+pub struct ExportPart<'a> {
+    pub label: String,
+    pub pid_base: u32,
+    pub obs: &'a Obs,
+    pub server_names: Vec<String>,
+}
+
+/// Build the complete Chrome trace-event document for one or more
+/// recorders (one per gateway).
+pub fn export(parts: &[ExportPart]) -> Json {
+    let mut events: Vec<Json> = Vec::new();
+    // ---- metadata: name every process and synthetic thread -------------
+    for part in parts {
+        // GPU lanes actually used, so idle GPUs do not clutter the view
+        let mut gpu_lanes: BTreeSet<(u16, u16)> = BTreeSet::new();
+        for ev in &part.obs.events {
+            if matches!(
+                ev.kind,
+                SpanKind::HomeCompute | SpanKind::ExpertCompute
+            ) {
+                gpu_lanes.insert((ev.server, ev.gpu));
+            }
+        }
+        for (s, name) in part.server_names.iter().enumerate() {
+            let pid = part.pid_base + s as u32;
+            let pname = if part.label.is_empty() {
+                name.clone()
+            } else {
+                format!("{}/{name}", part.label)
+            };
+            events.push(meta(pid, None, "process_name", &pname));
+            for (tid, tname) in [
+                (TID_CONTROL, "control"),
+                (TID_GATEWAY, "gateway"),
+                (TID_NET, "net"),
+            ] {
+                events.push(meta(pid, Some(tid), "thread_name", tname));
+            }
+        }
+        for &(s, g) in &gpu_lanes {
+            let pid = part.pid_base + s as u32;
+            events.push(meta(
+                pid,
+                Some(g as u32),
+                "thread_name",
+                &format!("gpu{g}"),
+            ));
+        }
+    }
+    // ---- span events, in recorder (= virtual clock dispatch) order -----
+    for part in parts {
+        for ev in &part.obs.events {
+            emit(&mut events, part.pid_base, ev);
+        }
+    }
+    Json::from_pairs(vec![
+        ("displayTimeUnit", Json::Str("ms".into())),
+        ("traceEvents", Json::Arr(events)),
+    ])
+}
+
+fn meta(pid: u32, tid: Option<u32>, name: &str, value: &str) -> Json {
+    let mut j = Json::from_pairs(vec![
+        ("ph", Json::Str("M".into())),
+        ("pid", Json::Num(pid as f64)),
+        ("name", Json::Str(name.into())),
+        (
+            "args",
+            Json::from_pairs(vec![("name", Json::Str(value.into()))]),
+        ),
+    ]);
+    if let Some(t) = tid {
+        j.set("tid", Json::Num(t as f64));
+    }
+    j
+}
+
+fn base(ev: &SpanEvent, ph: &str, pid: u32, tid: u32) -> Json {
+    Json::from_pairs(vec![
+        ("name", Json::Str(ev.kind.name().into())),
+        ("ph", Json::Str(ph.into())),
+        ("ts", Json::Num(ev.t_s * 1e6)),
+        ("pid", Json::Num(pid as f64)),
+        ("tid", Json::Num(tid as f64)),
+        ("args", args_of(ev)),
+    ])
+}
+
+/// Human-readable args per span kind (see [`SpanEvent`]'s `a`/`b` docs).
+fn args_of(ev: &SpanEvent) -> Json {
+    let mut a = Json::obj();
+    if ev.req != NO_REQ {
+        a.set("req", Json::Num(ev.req as f64));
+    }
+    match ev.kind {
+        SpanKind::Arrive | SpanKind::Shed | SpanKind::Complete => {
+            a.set("tenant", Json::Num(ev.a as f64));
+        }
+        SpanKind::BatchForm => {
+            a.set("bucket", Json::Num(ev.a as f64));
+            a.set("requests", Json::Num(ev.b as f64));
+        }
+        SpanKind::HomeCompute => {
+            a.set("layer", Json::Num(ev.a as f64));
+        }
+        SpanKind::NetSend
+        | SpanKind::NetReturn
+        | SpanKind::ExpertCompute
+        | SpanKind::ScaleOut
+        | SpanKind::ScaleIn => {
+            a.set("layer", Json::Num(ev.a as f64));
+            a.set("expert", Json::Num(ev.b as f64));
+        }
+        SpanKind::SpillForward | SpanKind::SpillDeliver => {
+            a.set("flow", Json::Num(ev.a as f64));
+            a.set("src_region", Json::Num((ev.b >> 16) as f64));
+            a.set("dst_region", Json::Num((ev.b & 0xffff) as f64));
+        }
+        SpanKind::Migration => {
+            a.set("replicas_moved", Json::Num(ev.a as f64));
+        }
+        SpanKind::FlightTrigger => {}
+    }
+    a
+}
+
+fn complete(ev: &SpanEvent, pid: u32, tid: u32) -> Json {
+    let mut j = base(ev, "X", pid, tid);
+    j.set("dur", Json::Num(ev.dur_s.max(0.0) * 1e6));
+    j
+}
+
+fn instant(ev: &SpanEvent, pid: u32, tid: u32) -> Json {
+    let mut j = base(ev, "i", pid, tid);
+    j.set("s", Json::Str("t".into()));
+    j
+}
+
+fn flow(ev: &SpanEvent, ph: &str, pid: u32, tid: u32, t_s: f64) -> Json {
+    let mut j = Json::from_pairs(vec![
+        ("name", Json::Str("spill".into())),
+        ("cat", Json::Str("spill".into())),
+        ("ph", Json::Str(ph.into())),
+        ("id", Json::Num(ev.a as f64)),
+        ("ts", Json::Num(t_s * 1e6)),
+        ("pid", Json::Num(pid as f64)),
+        ("tid", Json::Num(tid as f64)),
+    ]);
+    if ph == "f" {
+        j.set("bp", Json::Str("e".into()));
+    }
+    j
+}
+
+fn emit(out: &mut Vec<Json>, pid_base: u32, ev: &SpanEvent) {
+    let pid = pid_base + ev.server as u32;
+    match ev.kind {
+        SpanKind::HomeCompute | SpanKind::ExpertCompute => {
+            out.push(complete(ev, pid, ev.gpu as u32));
+        }
+        SpanKind::NetSend | SpanKind::NetReturn => {
+            out.push(complete(ev, pid, TID_NET));
+        }
+        SpanKind::BatchForm => {
+            out.push(complete(ev, pid, TID_GATEWAY));
+        }
+        SpanKind::Arrive | SpanKind::Shed | SpanKind::Complete => {
+            out.push(instant(ev, pid, TID_GATEWAY));
+        }
+        SpanKind::Migration => {
+            out.push(complete(ev, pid, TID_CONTROL));
+        }
+        SpanKind::ScaleOut | SpanKind::ScaleIn | SpanKind::FlightTrigger => {
+            out.push(instant(ev, pid, TID_CONTROL));
+        }
+        SpanKind::SpillForward => {
+            out.push(complete(ev, pid, TID_NET));
+            out.push(flow(ev, "s", pid, TID_NET, ev.t_s));
+        }
+        SpanKind::SpillDeliver => {
+            out.push(instant(ev, pid, TID_NET));
+            out.push(flow(ev, "f", pid, TID_NET, ev.t_s));
+        }
+    }
+}

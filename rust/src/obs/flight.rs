@@ -1,0 +1,123 @@
+//! Flight recorder: a fixed-size ring of the most recent span events.
+//!
+//! The ring overwrites its oldest entry on overflow, so memory is bounded
+//! by construction no matter how long a run is. When the gateway detects
+//! an SLO-window breach or a shed spike it snapshots the ring into a
+//! [`FlightDump`] — the forensic record of "what the system was doing
+//! right before things went wrong" that post-hoc percentiles cannot give.
+
+use super::SpanEvent;
+
+/// Bounded ring buffer of recent [`SpanEvent`]s.
+#[derive(Debug, Clone)]
+pub struct FlightRing {
+    buf: Vec<SpanEvent>,
+    cap: usize,
+    /// index of the oldest entry once the ring has wrapped
+    head: usize,
+    wrapped: bool,
+}
+
+impl FlightRing {
+    pub fn new(cap: usize) -> FlightRing {
+        FlightRing {
+            buf: Vec::with_capacity(cap.min(65_536)),
+            cap,
+            head: 0,
+            wrapped: false,
+        }
+    }
+
+    #[inline]
+    pub fn push(&mut self, ev: SpanEvent) {
+        if self.cap == 0 {
+            return;
+        }
+        if self.buf.len() < self.cap {
+            self.buf.push(ev);
+        } else {
+            self.buf[self.head] = ev;
+            self.head = (self.head + 1) % self.cap;
+            self.wrapped = true;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// The ring's contents in chronological (insertion) order.
+    pub fn snapshot(&self) -> Vec<SpanEvent> {
+        if !self.wrapped {
+            return self.buf.clone();
+        }
+        let mut out = Vec::with_capacity(self.buf.len());
+        out.extend_from_slice(&self.buf[self.head..]);
+        out.extend_from_slice(&self.buf[..self.head]);
+        out
+    }
+}
+
+/// One auto-dump of the flight ring.
+#[derive(Debug, Clone)]
+pub struct FlightDump {
+    /// Virtual time of the trigger (an interval boundary).
+    pub t_s: f64,
+    /// What tripped it: `"slo_breach"` or `"shed_spike"`.
+    pub reason: &'static str,
+    /// Ring contents at the trigger, oldest first.
+    pub events: Vec<SpanEvent>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::SpanKind;
+
+    fn ev(t: f64) -> SpanEvent {
+        SpanEvent {
+            t_s: t,
+            dur_s: 0.0,
+            kind: SpanKind::Arrive,
+            req: 0,
+            server: 0,
+            gpu: 0,
+            a: 0,
+            b: 0,
+        }
+    }
+
+    #[test]
+    fn ring_wraps_and_keeps_order() {
+        let mut r = FlightRing::new(4);
+        for i in 0..10 {
+            r.push(ev(i as f64));
+        }
+        assert_eq!(r.len(), 4);
+        let snap = r.snapshot();
+        let ts: Vec<f64> = snap.iter().map(|e| e.t_s).collect();
+        assert_eq!(ts, vec![6.0, 7.0, 8.0, 9.0], "oldest first after wrap");
+    }
+
+    #[test]
+    fn ring_under_capacity_is_plain() {
+        let mut r = FlightRing::new(8);
+        for i in 0..3 {
+            r.push(ev(i as f64));
+        }
+        let ts: Vec<f64> = r.snapshot().iter().map(|e| e.t_s).collect();
+        assert_eq!(ts, vec![0.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn zero_capacity_ring_is_inert() {
+        let mut r = FlightRing::new(0);
+        r.push(ev(1.0));
+        assert!(r.is_empty());
+        assert!(r.snapshot().is_empty());
+    }
+}

@@ -1,0 +1,1099 @@
+//! Deterministic end-to-end tracing for the serving stack.
+//!
+//! The paper's Global Scheduler runs on *attributed* measurements —
+//! logged gating decisions and per-expert invocation costs (§III-A) —
+//! and its headline claims are attributions too (latency reduced up to
+//! 30.6%, communication cost lowered). This module gives the stack the
+//! matching visibility: every request carries an implicit trace context
+//! (its engine slab index) and each lifecycle stage emits a
+//! virtual-clock-stamped [`SpanEvent`] into a bounded [`Obs`] recorder:
+//!
+//! - **arrival → queue/batch → per-layer home pass → per-invocation
+//!   network transfer and expert compute → completion**, plus spill
+//!   forwarding, migrations and scale operations;
+//! - a **latency decomposition** ([`DecompReport`]) that partitions each
+//!   request's end-to-end latency *exactly* (to float rounding) into
+//!   `spill + queue + home + net + expert`, using the critical (deadline-
+//!   setting) invocation of each layer pass to split waiting into
+//!   comms vs compute — so "30% faster" can finally say *where*;
+//! - a **Chrome trace-event exporter** ([`chrome`]) viewable in Perfetto
+//!   (tracks = servers/GPUs, flow arrows for cross-region forwards);
+//! - a **flight recorder** ([`flight`]) — a fixed ring of recent spans
+//!   auto-dumped on SLO breach or shed spike.
+//!
+//! Two invariants the rest of the stack relies on:
+//!
+//! 1. **Result-neutral**: the recorder never books resources and never
+//!    reorders events — enabling it cannot change a single simulated
+//!    outcome (the hot-path bench asserts bit-identical records with
+//!    tracing on).
+//! 2. **Near-zero cost when off**: every hook is `#[inline]` and checks
+//!    one `bool` first; the disabled path is a branch on hot data the
+//!    caller already holds. The hot-path bench's 500k events/s floor is
+//!    enforced on exactly this path.
+//!
+//! Determinism: events are timestamped with the virtual clock and stored
+//! in dispatch order; exports go through [`crate::util::json::Json`]'s
+//! ordered maps with no wall-clock fields, so the same seed produces
+//! byte-identical trace files (property-locked in
+//! `tests/trace_determinism.rs`).
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+pub mod chrome;
+pub mod flight;
+
+pub use flight::{FlightDump, FlightRing};
+
+/// `req` value for spans not tied to a request.
+pub const NO_REQ: u32 = u32::MAX;
+
+/// Lifecycle stage a [`SpanEvent`] records.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum SpanKind {
+    /// Request entered the engine (instant; `a` = tenant).
+    Arrive,
+    /// Request rejected everywhere (instant; `a` = tenant).
+    Shed,
+    /// Batch formation → dispatch window (`a` = bucket, `b` = requests).
+    BatchForm,
+    /// Home-GPU attention/gating pass (`a` = layer).
+    HomeCompute,
+    /// Activation transfer to a remote expert (`a` = layer, `b` = expert).
+    NetSend,
+    /// Expert FFN execution (`a` = layer, `b` = expert).
+    ExpertCompute,
+    /// Activation transfer back home (`a` = layer, `b` = expert).
+    NetReturn,
+    /// Request completed (instant; `a` = tenant).
+    Complete,
+    /// Cross-region forward in flight (`a` = flow id,
+    /// `b` = `src_region << 16 | dst_region`).
+    SpillForward,
+    /// Cross-region forward delivered (instant; same `a`/`b`).
+    SpillDeliver,
+    /// Migration staged (`dur_s` = transfer time, `a` = replicas moved).
+    Migration,
+    /// Scale-out applied (instant; `a` = layer, `b` = expert).
+    ScaleOut,
+    /// Scale-in applied (instant; `a` = layer, `b` = expert).
+    ScaleIn,
+    /// Flight-recorder dump triggered (instant).
+    FlightTrigger,
+}
+
+impl SpanKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Arrive => "arrive",
+            SpanKind::Shed => "shed",
+            SpanKind::BatchForm => "batch_form",
+            SpanKind::HomeCompute => "home_compute",
+            SpanKind::NetSend => "net_send",
+            SpanKind::ExpertCompute => "expert_compute",
+            SpanKind::NetReturn => "net_return",
+            SpanKind::Complete => "complete",
+            SpanKind::SpillForward => "spill_forward",
+            SpanKind::SpillDeliver => "spill_deliver",
+            SpanKind::Migration => "migration",
+            SpanKind::ScaleOut => "scale_out",
+            SpanKind::ScaleIn => "scale_in",
+            SpanKind::FlightTrigger => "flight_trigger",
+        }
+    }
+}
+
+/// One virtual-clock-stamped span. Fixed-size and `Copy` — the recorder
+/// never allocates per event, only when its backing vectors grow.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SpanEvent {
+    /// Span start (virtual seconds).
+    pub t_s: f64,
+    /// Span duration (0 for instants).
+    pub dur_s: f64,
+    pub kind: SpanKind,
+    /// Engine request slab index ([`NO_REQ`] when not request-bound).
+    pub req: u32,
+    pub server: u16,
+    pub gpu: u16,
+    /// Kind-specific aux fields — see each [`SpanKind`] variant.
+    pub a: u32,
+    pub b: u32,
+}
+
+impl SpanEvent {
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("t_s", Json::Num(self.t_s)),
+            ("dur_s", Json::Num(self.dur_s)),
+            ("kind", Json::Str(self.kind.name().into())),
+            (
+                "req",
+                if self.req == NO_REQ {
+                    Json::Null
+                } else {
+                    Json::Num(self.req as f64)
+                },
+            ),
+            ("server", Json::Num(self.server as f64)),
+            ("gpu", Json::Num(self.gpu as f64)),
+            ("a", Json::Num(self.a as f64)),
+            ("b", Json::Num(self.b as f64)),
+        ])
+    }
+}
+
+/// Exact partition of one request's end-to-end latency.
+///
+/// `spill + queue + home + net + expert == latency` to float rounding:
+/// every instant between arrival and completion is attributed to exactly
+/// one stage (the per-layer comms/compute split follows the critical —
+/// deadline-setting — invocation of each layer pass).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct StageBreakdown {
+    /// Inter-region transfer before (re-)admission (forwarded requests).
+    pub spill_s: f64,
+    /// Admission queue + batch-formation wait before the engine starts.
+    pub queue_s: f64,
+    /// Home-GPU attention/gating passes (including home-GPU queueing).
+    pub home_s: f64,
+    /// Critical-path network time (send + return of the invocation that
+    /// set each layer deadline).
+    pub net_s: f64,
+    /// Critical-path expert compute (including expert-GPU queueing).
+    pub expert_s: f64,
+}
+
+/// Stage names, in [`StageBreakdown::get`] index order.
+pub const STAGE_NAMES: [&str; 5] = ["spill", "queue", "home", "net", "expert"];
+
+impl StageBreakdown {
+    pub fn get(&self, i: usize) -> f64 {
+        match i {
+            0 => self.spill_s,
+            1 => self.queue_s,
+            2 => self.home_s,
+            3 => self.net_s,
+            _ => self.expert_s,
+        }
+    }
+
+    pub fn total(&self) -> f64 {
+        self.spill_s + self.queue_s + self.home_s + self.net_s + self.expert_s
+    }
+
+    /// Communication share of the total (spill + net).
+    pub fn comms_s(&self) -> f64 {
+        self.spill_s + self.net_s
+    }
+
+    /// Compute share of the total (home + expert).
+    pub fn compute_s(&self) -> f64 {
+        self.home_s + self.expert_s
+    }
+}
+
+/// One completed request's decomposition record.
+#[derive(Debug, Clone)]
+pub struct StageRecord {
+    pub req_id: u64,
+    pub server: usize,
+    pub tenant: usize,
+    pub done_s: f64,
+    pub latency_s: f64,
+    pub stages: StageBreakdown,
+}
+
+/// Per-stage latency statistics over a set of [`StageRecord`]s.
+#[derive(Debug, Clone)]
+pub struct StageStats {
+    pub stage: &'static str,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub p99_s: f64,
+    pub mean_s: f64,
+    /// This stage's fraction of summed end-to-end latency.
+    pub share: f64,
+}
+
+fn stage_stats(recs: &[&StageRecord]) -> Vec<StageStats> {
+    let grand: f64 = recs.iter().map(|r| r.stages.total()).sum();
+    let mut out = Vec::with_capacity(STAGE_NAMES.len());
+    let mut vals = Vec::with_capacity(recs.len());
+    for (i, &stage) in STAGE_NAMES.iter().enumerate() {
+        vals.clear();
+        vals.extend(recs.iter().map(|r| r.stages.get(i)));
+        let qs =
+            crate::util::stats::percentiles(&vals, &[0.50, 0.95, 0.99]);
+        let sum: f64 = vals.iter().sum();
+        out.push(StageStats {
+            stage,
+            p50_s: qs[0],
+            p95_s: qs[1],
+            p99_s: qs[2],
+            mean_s: crate::util::stats::mean(&vals),
+            share: if grand > 0.0 { sum / grand } else { 0.0 },
+        });
+    }
+    out
+}
+
+/// The latency-decomposition report: per-stage percentiles and the
+/// comms-vs-compute split, overall and sliced per tenant. (Per-region
+/// slicing falls out of the architecture — each regional gateway owns
+/// its own recorder, so `RegionSummary.gateway.decomp` *is* the region
+/// slice.)
+#[derive(Debug, Clone)]
+pub struct DecompReport {
+    pub count: usize,
+    pub stages: Vec<StageStats>,
+    pub comms_share: f64,
+    pub compute_share: f64,
+    /// `(tenant, per-stage stats)` for every tenant seen, ascending.
+    pub per_tenant: Vec<(usize, Vec<StageStats>)>,
+}
+
+impl DecompReport {
+    pub fn from_records(recs: &[StageRecord]) -> DecompReport {
+        let all: Vec<&StageRecord> = recs.iter().collect();
+        let stages = stage_stats(&all);
+        let grand: f64 = recs.iter().map(|r| r.stages.total()).sum();
+        let comms: f64 = recs.iter().map(|r| r.stages.comms_s()).sum();
+        let compute: f64 = recs.iter().map(|r| r.stages.compute_s()).sum();
+        let mut by_tenant: BTreeMap<usize, Vec<&StageRecord>> =
+            BTreeMap::new();
+        for r in recs {
+            by_tenant.entry(r.tenant).or_default().push(r);
+        }
+        DecompReport {
+            count: recs.len(),
+            stages,
+            comms_share: if grand > 0.0 { comms / grand } else { 0.0 },
+            compute_share: if grand > 0.0 { compute / grand } else { 0.0 },
+            per_tenant: by_tenant
+                .into_iter()
+                .map(|(t, rs)| (t, stage_stats(&rs)))
+                .collect(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        fn rows(stats: &[StageStats]) -> Json {
+            Json::Arr(
+                stats
+                    .iter()
+                    .map(|s| {
+                        Json::from_pairs(vec![
+                            ("stage", Json::Str(s.stage.into())),
+                            ("p50_s", Json::Num(s.p50_s)),
+                            ("p95_s", Json::Num(s.p95_s)),
+                            ("p99_s", Json::Num(s.p99_s)),
+                            ("mean_s", Json::Num(s.mean_s)),
+                            ("share", Json::Num(s.share)),
+                        ])
+                    })
+                    .collect(),
+            )
+        }
+        let tenants = Json::Obj(
+            self.per_tenant
+                .iter()
+                .map(|(t, s)| (t.to_string(), rows(s)))
+                .collect(),
+        );
+        Json::from_pairs(vec![
+            ("count", Json::Num(self.count as f64)),
+            ("comms_share", Json::Num(self.comms_share)),
+            ("compute_share", Json::Num(self.compute_share)),
+            ("stages", rows(&self.stages)),
+            ("tenants", tenants),
+        ])
+    }
+}
+
+/// Recorder policy knobs.
+#[derive(Debug, Clone)]
+pub struct ObsConfig {
+    /// Bound on the main span store; overflow increments
+    /// [`Obs::dropped`] instead of allocating (the flight ring keeps
+    /// recording regardless).
+    pub max_events: usize,
+    /// Flight-ring capacity (recent spans kept for forensic dumps).
+    pub flight_capacity: usize,
+    /// At most this many auto-dumps are retained per recorder.
+    pub max_flight_dumps: usize,
+    /// Window shed count at or above which a dump triggers.
+    pub flight_shed_spike: u64,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        ObsConfig {
+            max_events: 1_000_000,
+            flight_capacity: 4096,
+            max_flight_dumps: 8,
+            flight_shed_spike: 5,
+        }
+    }
+}
+
+/// Per-request live decomposition state (indexed by engine slab index —
+/// request slots are never recycled, so the index is a stable trace id).
+#[derive(Debug, Clone, Default)]
+struct ReqTrace {
+    stages: StageBreakdown,
+    arrival_s: f64,
+    /// Last instant already attributed to a stage.
+    last_t: f64,
+    /// Dispatch time of the current layer pass (`on_home_done`).
+    pass_start: f64,
+    /// Latest invocation completion seen this pass (the deadline).
+    crit_t: f64,
+    /// Network component of the deadline-setting invocation.
+    crit_net: f64,
+    tenant: u32,
+    /// Per-invocation `(send_done, expert_done)` marks for this pass.
+    marks: Vec<(f64, f64)>,
+}
+
+/// The bounded, allocation-conscious span recorder. One per [`Engine`]
+/// (`engine.obs`), so every gateway — and every region — owns its own.
+///
+/// All hooks are `#[inline]` and test [`Obs::enabled`] first: disabled,
+/// each is a single predictable branch.
+///
+/// [`Engine`]: crate::engine::Engine
+#[derive(Debug)]
+pub struct Obs {
+    enabled: bool,
+    pub cfg: ObsConfig,
+    /// Span store, virtual-clock dispatch order.
+    pub events: Vec<SpanEvent>,
+    /// Spans dropped after `cfg.max_events` filled up.
+    pub dropped: u64,
+    pub flight: FlightRing,
+    /// Auto-dumps taken so far (bounded by `cfg.max_flight_dumps`).
+    pub dumps: Vec<FlightDump>,
+    /// Completed-request decomposition records.
+    pub completed: Vec<StageRecord>,
+    /// Metrics-snapshot rows (one JSONL line each), in emission order.
+    pub metrics_rows: Vec<Json>,
+    reqs: Vec<ReqTrace>,
+    /// Pre-admission transfer time by (request id, arrival-time bits) —
+    /// cross-region forwards keep their origin-generated id, which can
+    /// collide with the receiving gateway's own dense id space, so the
+    /// origin arrival clock disambiguates.
+    prearrival: BTreeMap<(u64, u64), f64>,
+}
+
+impl Default for Obs {
+    fn default() -> Self {
+        Obs::new()
+    }
+}
+
+impl Obs {
+    /// A disabled recorder: no storage allocated, every hook a no-op.
+    pub fn new() -> Obs {
+        Obs {
+            enabled: false,
+            cfg: ObsConfig::default(),
+            events: Vec::new(),
+            dropped: 0,
+            flight: FlightRing::new(0),
+            dumps: Vec::new(),
+            completed: Vec::new(),
+            metrics_rows: Vec::new(),
+            reqs: Vec::new(),
+            prearrival: BTreeMap::new(),
+        }
+    }
+
+    /// Turn recording on (the runtime switch).
+    pub fn enable(&mut self, cfg: ObsConfig) {
+        self.flight = FlightRing::new(cfg.flight_capacity);
+        self.cfg = cfg;
+        self.enabled = true;
+    }
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    #[inline]
+    fn record(&mut self, ev: SpanEvent) {
+        if self.events.len() < self.cfg.max_events {
+            self.events.push(ev);
+        } else {
+            self.dropped += 1;
+        }
+        self.flight.push(ev);
+    }
+
+    fn req_mut(&mut self, r: usize) -> &mut ReqTrace {
+        if self.reqs.len() <= r {
+            self.reqs.resize_with(r + 1, ReqTrace::default);
+        }
+        &mut self.reqs[r]
+    }
+
+    // ---- engine hooks (hot path) ---------------------------------------
+
+    /// Request `r` entered the engine at `now`.
+    #[inline]
+    pub fn on_arrive(
+        &mut self,
+        r: usize,
+        req_id: u64,
+        tenant: usize,
+        arrival_s: f64,
+        server: usize,
+        now: f64,
+    ) {
+        if !self.enabled {
+            return;
+        }
+        let spill = self
+            .prearrival
+            .remove(&(req_id, arrival_s.to_bits()))
+            .unwrap_or(0.0);
+        let st = self.req_mut(r);
+        st.arrival_s = arrival_s;
+        st.tenant = tenant as u32;
+        st.stages = StageBreakdown {
+            spill_s: spill,
+            queue_s: (now - arrival_s - spill).max(0.0),
+            ..StageBreakdown::default()
+        };
+        st.last_t = now;
+        self.record(SpanEvent {
+            t_s: now,
+            dur_s: 0.0,
+            kind: SpanKind::Arrive,
+            req: r as u32,
+            server: server as u16,
+            gpu: 0,
+            a: tenant as u32,
+            b: 0,
+        });
+    }
+
+    /// Home-GPU pass booked on `[start, end]` for layer `layer`.
+    #[inline]
+    pub fn span_home(
+        &mut self,
+        r: usize,
+        layer: usize,
+        server: usize,
+        gpu: usize,
+        start: f64,
+        end: f64,
+    ) {
+        if !self.enabled {
+            return;
+        }
+        self.record(SpanEvent {
+            t_s: start,
+            dur_s: end - start,
+            kind: SpanKind::HomeCompute,
+            req: r as u32,
+            server: server as u16,
+            gpu: gpu as u16,
+            a: layer as u32,
+            b: 0,
+        });
+    }
+
+    /// Layer pass dispatched at `now` with `ninvs` expert invocations:
+    /// attribute the home interval, reset the critical-path tracker.
+    #[inline]
+    pub fn on_home_done(&mut self, r: usize, now: f64, ninvs: usize) {
+        if !self.enabled {
+            return;
+        }
+        let st = self.req_mut(r);
+        st.stages.home_s += now - st.last_t;
+        st.last_t = now;
+        st.pass_start = now;
+        st.crit_t = now;
+        st.crit_net = 0.0;
+        st.marks.clear();
+        st.marks.resize(ninvs, (now, now));
+    }
+
+    /// A network transfer span (`NetSend` or `NetReturn`) occupying
+    /// `[t0, t1]` on `server`'s uplink.
+    #[inline]
+    #[allow(clippy::too_many_arguments)]
+    pub fn span_net(
+        &mut self,
+        kind: SpanKind,
+        r: usize,
+        layer: usize,
+        expert: usize,
+        server: usize,
+        t0: f64,
+        t1: f64,
+    ) {
+        if !self.enabled {
+            return;
+        }
+        self.record(SpanEvent {
+            t_s: t0,
+            dur_s: t1 - t0,
+            kind,
+            req: r as u32,
+            server: server as u16,
+            gpu: 0,
+            a: layer as u32,
+            b: expert as u32,
+        });
+    }
+
+    /// Expert compute booked on `[start, end]`.
+    #[inline]
+    #[allow(clippy::too_many_arguments)]
+    pub fn span_expert(
+        &mut self,
+        r: usize,
+        layer: usize,
+        expert: usize,
+        server: usize,
+        gpu: usize,
+        start: f64,
+        end: f64,
+    ) {
+        if !self.enabled {
+            return;
+        }
+        self.record(SpanEvent {
+            t_s: start,
+            dur_s: end - start,
+            kind: SpanKind::ExpertCompute,
+            req: r as u32,
+            server: server as u16,
+            gpu: gpu as u16,
+            a: layer as u32,
+            b: expert as u32,
+        });
+    }
+
+    /// Invocation `i`'s forward transfer landed at `now`.
+    #[inline]
+    pub fn on_send_done(&mut self, r: usize, i: usize, now: f64) {
+        if !self.enabled {
+            return;
+        }
+        let st = self.req_mut(r);
+        if let Some(m) = st.marks.get_mut(i) {
+            m.0 = now;
+        }
+    }
+
+    /// Invocation `i`'s expert compute finished at `now`.
+    #[inline]
+    pub fn on_expert_done(&mut self, r: usize, i: usize, now: f64) {
+        if !self.enabled {
+            return;
+        }
+        let st = self.req_mut(r);
+        if let Some(m) = st.marks.get_mut(i) {
+            m.1 = now;
+        }
+    }
+
+    /// Invocation `i` fully completed at `now`. The latest completion of
+    /// a pass sets the layer deadline, so its comms/compute split is the
+    /// critical one (`>=` keeps the latest on ties, matching the
+    /// engine's `max`).
+    #[inline]
+    pub fn on_inv_complete(
+        &mut self,
+        r: usize,
+        i: usize,
+        remote: bool,
+        now: f64,
+    ) {
+        if !self.enabled {
+            return;
+        }
+        let st = self.req_mut(r);
+        if now >= st.crit_t {
+            st.crit_t = now;
+            st.crit_net = if remote {
+                let (send_done, expert_done) =
+                    st.marks.get(i).copied().unwrap_or((now, now));
+                (send_done - st.pass_start) + (now - expert_done)
+            } else {
+                0.0
+            };
+        }
+    }
+
+    /// Layer pass settled at `t`: split the interval since dispatch into
+    /// the critical invocation's net share and the expert remainder.
+    #[inline]
+    pub fn on_layer_complete(&mut self, r: usize, t: f64) {
+        if !self.enabled {
+            return;
+        }
+        let st = self.req_mut(r);
+        let interval = t - st.last_t;
+        let net = st.crit_net.clamp(0.0, interval);
+        st.stages.net_s += net;
+        st.stages.expert_s += interval - net;
+        st.last_t = t;
+        st.crit_net = 0.0;
+    }
+
+    /// Request `r` finished at `t`: close out its decomposition record.
+    #[inline]
+    pub fn on_finish(
+        &mut self,
+        r: usize,
+        req_id: u64,
+        server: usize,
+        t: f64,
+    ) {
+        if !self.enabled {
+            return;
+        }
+        let st = self.req_mut(r);
+        // any residual tail (none on current engine paths, but the
+        // partition must stay exact if a future path finishes later)
+        st.stages.expert_s += t - st.last_t;
+        st.last_t = t;
+        let tenant = st.tenant as usize;
+        let rec = StageRecord {
+            req_id,
+            server,
+            tenant,
+            done_s: t,
+            latency_s: t - st.arrival_s,
+            stages: st.stages,
+        };
+        self.completed.push(rec);
+        self.record(SpanEvent {
+            t_s: t,
+            dur_s: 0.0,
+            kind: SpanKind::Complete,
+            req: r as u32,
+            server: server as u16,
+            gpu: 0,
+            a: tenant as u32,
+            b: 0,
+        });
+    }
+
+    /// A migration staged at `now` (applies after `dur_s`).
+    #[inline]
+    pub fn on_migration(&mut self, now: f64, moved: usize, dur_s: f64) {
+        if !self.enabled {
+            return;
+        }
+        self.record(SpanEvent {
+            t_s: now,
+            dur_s,
+            kind: SpanKind::Migration,
+            req: NO_REQ,
+            server: 0,
+            gpu: 0,
+            a: moved as u32,
+            b: 0,
+        });
+    }
+
+    /// A scale operation applied at `now`.
+    #[inline]
+    pub fn on_scale(
+        &mut self,
+        out: bool,
+        layer: usize,
+        expert: usize,
+        server: usize,
+        gpu: usize,
+        now: f64,
+    ) {
+        if !self.enabled {
+            return;
+        }
+        self.record(SpanEvent {
+            t_s: now,
+            dur_s: 0.0,
+            kind: if out {
+                SpanKind::ScaleOut
+            } else {
+                SpanKind::ScaleIn
+            },
+            req: NO_REQ,
+            server: server as u16,
+            gpu: gpu as u16,
+            a: layer as u32,
+            b: expert as u32,
+        });
+    }
+
+    // ---- gateway / regions hooks ---------------------------------------
+
+    /// A request was shed at admission.
+    #[inline]
+    pub fn on_shed(&mut self, tenant: usize, server: usize, now: f64) {
+        if !self.enabled {
+            return;
+        }
+        self.record(SpanEvent {
+            t_s: now,
+            dur_s: 0.0,
+            kind: SpanKind::Shed,
+            req: NO_REQ,
+            server: server as u16,
+            gpu: 0,
+            a: tenant as u32,
+            b: 0,
+        });
+    }
+
+    /// A batch formed at `formed_s` dispatched at `now`.
+    #[inline]
+    pub fn on_batch(
+        &mut self,
+        server: usize,
+        bucket: usize,
+        requests: usize,
+        formed_s: f64,
+        now: f64,
+    ) {
+        if !self.enabled {
+            return;
+        }
+        self.record(SpanEvent {
+            t_s: formed_s,
+            dur_s: now - formed_s,
+            kind: SpanKind::BatchForm,
+            req: NO_REQ,
+            server: server as u16,
+            gpu: 0,
+            a: bucket as u32,
+            b: requests as u32,
+        });
+    }
+
+    /// A cross-region forward left `src` at `now`, landing at `deliver_t`
+    /// (recorded on the *origin* gateway).
+    #[inline]
+    pub fn on_spill_forward(
+        &mut self,
+        flow: u32,
+        src: usize,
+        dst: usize,
+        now: f64,
+        deliver_t: f64,
+    ) {
+        if !self.enabled {
+            return;
+        }
+        self.record(SpanEvent {
+            t_s: now,
+            dur_s: deliver_t - now,
+            kind: SpanKind::SpillForward,
+            req: NO_REQ,
+            server: 0,
+            gpu: 0,
+            a: flow,
+            b: ((src as u32) << 16) | (dst as u32 & 0xffff),
+        });
+    }
+
+    /// A cross-region forward landed (recorded on the *destination*).
+    #[inline]
+    pub fn on_spill_deliver(
+        &mut self,
+        flow: u32,
+        src: usize,
+        dst: usize,
+        now: f64,
+    ) {
+        if !self.enabled {
+            return;
+        }
+        self.record(SpanEvent {
+            t_s: now,
+            dur_s: 0.0,
+            kind: SpanKind::SpillDeliver,
+            req: NO_REQ,
+            server: 0,
+            gpu: 0,
+            a: flow,
+            b: ((src as u32) << 16) | (dst as u32 & 0xffff),
+        });
+    }
+
+    /// Note a forwarded request's inter-region transfer time so its
+    /// decomposition books the pre-admission leg as `spill`, not
+    /// `queue`. Keyed by (id, origin arrival time) — see the field docs.
+    pub fn note_prearrival_transfer(
+        &mut self,
+        req_id: u64,
+        arrival_s: f64,
+        dur_s: f64,
+    ) {
+        if !self.enabled {
+            return;
+        }
+        self.prearrival.insert((req_id, arrival_s.to_bits()), dur_s);
+    }
+
+    /// Forget a pre-arrival note (the forward was shed on delivery).
+    pub fn clear_prearrival(&mut self, req_id: u64, arrival_s: f64) {
+        self.prearrival.remove(&(req_id, arrival_s.to_bits()));
+    }
+
+    /// Append one metrics-snapshot row (a JSONL line).
+    pub fn push_metrics_row(&mut self, row: Json) {
+        if !self.enabled {
+            return;
+        }
+        self.metrics_rows.push(row);
+    }
+
+    /// Snapshot the flight ring (SLO breach / shed spike). Dumps beyond
+    /// `cfg.max_flight_dumps` are dropped — the first breaches are the
+    /// forensically interesting ones.
+    pub fn flight_trigger(&mut self, now: f64, reason: &'static str) {
+        if !self.enabled || self.dumps.len() >= self.cfg.max_flight_dumps {
+            return;
+        }
+        self.record(SpanEvent {
+            t_s: now,
+            dur_s: 0.0,
+            kind: SpanKind::FlightTrigger,
+            req: NO_REQ,
+            server: 0,
+            gpu: 0,
+            a: self.dumps.len() as u32,
+            b: 0,
+        });
+        self.dumps.push(FlightDump {
+            t_s: now,
+            reason,
+            events: self.flight.snapshot(),
+        });
+    }
+
+    // ---- reports --------------------------------------------------------
+
+    /// The latency-decomposition report over every completed request.
+    pub fn decomp(&self) -> DecompReport {
+        DecompReport::from_records(&self.completed)
+    }
+
+    /// The metrics-snapshot stream as JSONL (one compact object per line).
+    pub fn metrics_jsonl(&self) -> String {
+        let mut s = String::new();
+        for row in &self.metrics_rows {
+            s.push_str(&row.to_string());
+            s.push('\n');
+        }
+        s
+    }
+
+    /// Flight-recorder dumps as a JSON document.
+    pub fn flight_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("flight_capacity", Json::Num(self.cfg.flight_capacity as f64)),
+            (
+                "dumps",
+                Json::Arr(
+                    self.dumps
+                        .iter()
+                        .map(|d| {
+                            Json::from_pairs(vec![
+                                ("t_s", Json::Num(d.t_s)),
+                                ("reason", Json::Str(d.reason.into())),
+                                (
+                                    "events",
+                                    Json::Arr(
+                                        d.events
+                                            .iter()
+                                            .map(|e| e.to_json())
+                                            .collect(),
+                                    ),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(t: f64) -> SpanEvent {
+        SpanEvent {
+            t_s: t,
+            dur_s: 0.0,
+            kind: SpanKind::Arrive,
+            req: 0,
+            server: 0,
+            gpu: 0,
+            a: 0,
+            b: 0,
+        }
+    }
+
+    #[test]
+    fn disabled_recorder_is_inert() {
+        let mut o = Obs::new();
+        assert!(!o.enabled());
+        o.on_arrive(0, 1, 0, 0.0, 0, 1.0);
+        o.on_home_done(0, 2.0, 1);
+        o.on_finish(0, 1, 0, 3.0);
+        o.on_shed(0, 0, 1.0);
+        o.push_metrics_row(Json::obj());
+        o.flight_trigger(1.0, "slo_breach");
+        assert!(o.events.is_empty());
+        assert!(o.completed.is_empty());
+        assert!(o.metrics_rows.is_empty());
+        assert!(o.dumps.is_empty());
+        assert_eq!(o.dropped, 0);
+    }
+
+    #[test]
+    fn event_store_is_bounded_with_drop_counter() {
+        let mut o = Obs::new();
+        o.enable(ObsConfig {
+            max_events: 3,
+            flight_capacity: 2,
+            ..ObsConfig::default()
+        });
+        for i in 0..5 {
+            o.on_shed(0, 0, i as f64);
+        }
+        assert_eq!(o.events.len(), 3);
+        assert_eq!(o.dropped, 2);
+        // the flight ring keeps rolling past the main-store bound
+        let snap = o.flight.snapshot();
+        assert_eq!(snap.len(), 2);
+        assert_eq!(snap[1].t_s, 4.0);
+    }
+
+    #[test]
+    fn flight_dumps_are_bounded() {
+        let mut o = Obs::new();
+        o.enable(ObsConfig {
+            max_flight_dumps: 2,
+            ..ObsConfig::default()
+        });
+        o.flight.push(span(1.0));
+        for i in 0..4 {
+            o.flight_trigger(10.0 + i as f64, "shed_spike");
+        }
+        assert_eq!(o.dumps.len(), 2);
+        assert_eq!(o.dumps[0].reason, "shed_spike");
+        assert!(!o.dumps[0].events.is_empty());
+    }
+
+    #[test]
+    fn decomposition_partitions_latency_exactly() {
+        let mut o = Obs::new();
+        o.enable(ObsConfig::default());
+        // arrival 0, engine start 2 (queue 2), home until 3, one remote
+        // inv: send done 3.5, expert done 4.0, return done 4.6; plus one
+        // local inv done at 4.2 (non-critical).
+        o.on_arrive(0, 7, 1, 0.0, 0, 2.0);
+        o.on_home_done(0, 3.0, 2);
+        o.on_send_done(0, 0, 3.5);
+        o.on_expert_done(0, 0, 4.0);
+        o.on_expert_done(0, 1, 4.2);
+        o.on_inv_complete(0, 1, false, 4.2);
+        o.on_inv_complete(0, 0, true, 4.6);
+        o.on_layer_complete(0, 4.6);
+        o.on_finish(0, 7, 0, 4.6);
+        let rec = &o.completed[0];
+        let s = rec.stages;
+        assert_eq!(rec.tenant, 1);
+        assert!((s.queue_s - 2.0).abs() < 1e-12);
+        assert!((s.home_s - 1.0).abs() < 1e-12);
+        // critical (remote) inv: net = (3.5-3.0) + (4.6-4.0) = 1.1
+        assert!((s.net_s - 1.1).abs() < 1e-12);
+        assert!((s.expert_s - 0.5).abs() < 1e-12);
+        assert!((s.total() - rec.latency_s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prearrival_transfer_books_as_spill() {
+        let mut o = Obs::new();
+        o.enable(ObsConfig::default());
+        o.note_prearrival_transfer(42, 1.0, 0.75);
+        o.on_arrive(0, 42, 0, 1.0, 2, 3.0);
+        o.on_home_done(0, 3.0, 0);
+        o.on_layer_complete(0, 3.0);
+        o.on_finish(0, 42, 2, 3.0);
+        let s = o.completed[0].stages;
+        assert!((s.spill_s - 0.75).abs() < 1e-12);
+        assert!((s.queue_s - 1.25).abs() < 1e-12);
+        assert!((s.total() - o.completed[0].latency_s).abs() < 1e-12);
+        // the note is consumed
+        o.on_arrive(1, 42, 0, 1.0, 2, 3.0);
+        assert_eq!(o.reqs[1].stages.spill_s, 0.0);
+    }
+
+    #[test]
+    fn decomp_report_slices_tenants_and_shares() {
+        let rec = |tenant: usize, net: f64, expert: f64| StageRecord {
+            req_id: 0,
+            server: 0,
+            tenant,
+            done_s: 10.0,
+            latency_s: net + expert,
+            stages: StageBreakdown {
+                net_s: net,
+                expert_s: expert,
+                ..StageBreakdown::default()
+            },
+        };
+        let d = DecompReport::from_records(&[
+            rec(0, 1.0, 3.0),
+            rec(1, 2.0, 2.0),
+        ]);
+        assert_eq!(d.count, 2);
+        assert!((d.comms_share - 3.0 / 8.0).abs() < 1e-12);
+        assert!((d.compute_share - 5.0 / 8.0).abs() < 1e-12);
+        assert_eq!(d.per_tenant.len(), 2);
+        assert_eq!(d.per_tenant[0].0, 0);
+        let shares: f64 = d.stages.iter().map(|s| s.share).sum();
+        assert!((shares - 1.0).abs() < 1e-12);
+        // serializes with stable keys
+        let j = d.to_json();
+        assert_eq!(j.get("count").and_then(|c| c.as_f64()), Some(2.0));
+    }
+
+    #[test]
+    fn metrics_rows_serialize_as_jsonl() {
+        let mut o = Obs::new();
+        o.enable(ObsConfig::default());
+        o.push_metrics_row(Json::from_pairs(vec![
+            ("t_s", Json::Num(30.0)),
+            ("kind", Json::Str("gateway".into())),
+        ]));
+        o.push_metrics_row(Json::from_pairs(vec![
+            ("t_s", Json::Num(60.0)),
+            ("kind", Json::Str("gateway".into())),
+        ]));
+        let s = o.metrics_jsonl();
+        assert_eq!(s.lines().count(), 2);
+        for line in s.lines() {
+            let j = Json::parse(line).unwrap();
+            assert!(j.get("t_s").is_some());
+            assert!(j.get("kind").is_some());
+        }
+    }
+}

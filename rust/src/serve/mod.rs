@@ -50,9 +50,11 @@ use crate::cluster::RegionTopology;
 use crate::config::{ClusterConfig, ModelConfig, WorkloadConfig};
 use crate::coordinator::{Coordinator, CoordinatorConfig};
 use crate::engine::{CostModel, Engine, EngineConfig, ServeReport};
+use crate::obs::{chrome, DecompReport, ObsConfig};
 use crate::placement::Placement;
 use crate::serve::statsbus::TenantBus;
 use crate::trace::Request;
+use crate::util::json::Json;
 
 /// Gateway tuning knobs.
 #[derive(Debug, Clone)]
@@ -170,6 +172,9 @@ pub struct GatewayReport {
     /// Per-tenant slices (empty for single-tenant runs): offered /
     /// admitted / shed, latency percentiles, and SLO attainment.
     pub tenants: Vec<TenantReport>,
+    /// Latency decomposition over every traced request (`None` unless
+    /// tracing was enabled via [`Gateway::enable_obs`]).
+    pub decomp: Option<DecompReport>,
 }
 
 impl GatewayReport {
@@ -260,6 +265,14 @@ pub struct Gateway {
     /// expert-activation masses the boost is built from.
     tenant_bus: Option<TenantBus>,
     tenant_masses: Vec<Vec<f64>>,
+    /// Flight-recorder trigger state: completion/shed counts already
+    /// inspected at previous interval boundaries.
+    obs_records_seen: usize,
+    obs_shed_seen: u64,
+    /// Metrics-stream cursors into the coordinator's interval/autoscale
+    /// log vectors (rows are emitted once, at the tick that produced them).
+    obs_coord_logs_seen: usize,
+    obs_autoscale_logs_seen: usize,
 }
 
 impl Gateway {
@@ -371,8 +384,50 @@ impl Gateway {
             route_residual: Vec::new(),
             tenant_bus,
             tenant_masses,
+            obs_records_seen: 0,
+            obs_shed_seen: 0,
+            obs_coord_logs_seen: 0,
+            obs_autoscale_logs_seen: 0,
             cfg,
         }
+    }
+
+    /// Turn on the tracing layer (span recorder + latency decomposition +
+    /// flight recorder) for this gateway's engine. Result-neutral: the
+    /// recorder observes the co-simulation without touching it, so traced
+    /// and untraced runs at one seed produce identical reports.
+    pub fn enable_obs(&mut self, cfg: ObsConfig) {
+        self.engine.obs.enable(cfg);
+    }
+
+    /// Chrome trace-event JSON for this gateway (Perfetto-viewable).
+    /// Deterministic: same seed ⇒ byte-identical serialization.
+    pub fn trace_json(&self) -> Json {
+        chrome::export(&[chrome::ExportPart {
+            label: String::new(),
+            pid_base: 0,
+            obs: &self.engine.obs,
+            server_names: self
+                .engine
+                .cluster_cfg
+                .servers
+                .iter()
+                .map(|s| s.name.clone())
+                .collect(),
+        }])
+    }
+
+    /// The per-interval metrics-snapshot stream (JSONL, one object per
+    /// line): gateway counters, coordinator interval logs, autoscaler
+    /// decisions, and per-tenant SLO windows under one registry.
+    pub fn metrics_jsonl(&self) -> String {
+        self.engine.obs.metrics_jsonl()
+    }
+
+    /// Flight-recorder dumps (ring snapshots taken on SLO breach / shed
+    /// spike) as one JSON document.
+    pub fn flight_json(&self) -> Json {
+        self.engine.obs.flight_json()
     }
 
     /// Drive the co-simulation to completion: arrivals over
@@ -399,6 +454,7 @@ impl Gateway {
             self.tick_due(now);
             while let Some(req) = self.pop_arrival_due(now) {
                 if let Err(rej) = self.try_admit(req, now) {
+                    self.engine.obs.on_shed(rej.tenant, rej.server, now);
                     self.admission.record_shed_tenant(rej.tenant);
                 }
             }
@@ -559,6 +615,13 @@ impl Gateway {
     /// Inject every dispatchable batch into the engine at `now`.
     fn dispatch_ready(&mut self, now: f64) {
         for batch in self.batcher.drain_ready(&mut self.admission, now) {
+            self.engine.obs.on_batch(
+                batch.server,
+                batch.bucket,
+                batch.requests.len(),
+                batch.formed_s,
+                now,
+            );
             for req in batch.requests {
                 self.engine.push_request_at(req, now);
             }
@@ -591,6 +654,19 @@ impl Gateway {
         if let Some(bus) = &mut self.tenant_bus {
             let windows = bus
                 .collect(&self.engine.report, &self.admission.shed_by_tenant);
+            if self.engine.obs.enabled() {
+                for (ti, w) in windows.iter().enumerate() {
+                    self.engine.obs.push_metrics_row(Json::from_pairs(vec![
+                        ("t_s", Json::Num(t)),
+                        ("kind", Json::Str("tenant_window".into())),
+                        ("tenant", Json::Num(ti as f64)),
+                        ("completed", Json::Num(w.completed as f64)),
+                        ("violations", Json::Num(w.violations as f64)),
+                        ("shed", Json::Num(w.shed as f64)),
+                        ("p95_s", Json::Num(w.p95_s)),
+                    ]));
+                }
+            }
             let pressures: Vec<f64> = windows
                 .iter()
                 .zip(bus.slos())
@@ -601,6 +677,7 @@ impl Gateway {
             self.coordinator.note_tenant_pressure(pressures, boost);
         }
         self.coordinator.on_interval(&mut self.engine, t);
+        self.obs_interval_tick(t);
         self.router.rebuild(self.engine.target_placement());
         // autoscale-aware admission: refresh the per-server borrow credit
         // from the copies in flight after this tick's decisions — shed
@@ -616,6 +693,67 @@ impl Gateway {
                 }
             }
         }
+    }
+
+    /// One interval's observability work: evaluate the flight-recorder
+    /// triggers over the window just ended, then append this interval's
+    /// metrics-snapshot rows (gateway counters + the coordinator interval
+    /// and autoscaler logs produced by this tick). No-op when tracing is
+    /// off — one branch, no state touched.
+    fn obs_interval_tick(&mut self, t: f64) {
+        if !self.engine.obs.enabled() {
+            return;
+        }
+        // ---- flight triggers: the window that just ended ----------------
+        let records = &self.engine.report.records;
+        let completed_total = records.len();
+        let window: Vec<f64> = records[self.obs_records_seen..]
+            .iter()
+            .map(|r| r.latency_s)
+            .collect();
+        self.obs_records_seen = completed_total;
+        let window_p95 = crate::util::stats::percentile(&window, 0.95);
+        let window_shed = self.admission.shed - self.obs_shed_seen;
+        self.obs_shed_seen = self.admission.shed;
+        if !window.is_empty() && window_p95 > self.cfg.slo_s {
+            self.engine.obs.flight_trigger(t, "slo_breach");
+        }
+        if window_shed >= self.engine.obs.cfg.flight_shed_spike {
+            self.engine.obs.flight_trigger(t, "shed_spike");
+        }
+        // ---- gateway counters row ---------------------------------------
+        let gpu_busy_s: f64 = self
+            .engine
+            .cluster
+            .servers
+            .iter()
+            .map(|s| s.gpus.iter().map(|g| g.busy_s).sum::<f64>())
+            .sum();
+        self.engine.obs.push_metrics_row(Json::from_pairs(vec![
+            ("t_s", Json::Num(t)),
+            ("kind", Json::Str("gateway".into())),
+            ("offered", Json::Num(self.offered as f64)),
+            ("admitted", Json::Num(self.admission.admitted as f64)),
+            ("shed", Json::Num(self.admission.shed as f64)),
+            ("completed", Json::Num(completed_total as f64)),
+            ("queued", Json::Num(self.admission.total_queued() as f64)),
+            ("window_p95_s", Json::Num(window_p95)),
+            ("window_shed", Json::Num(window_shed as f64)),
+            ("events", Json::Num(self.engine.events_processed() as f64)),
+            ("net_bytes", Json::Num(self.engine.net.total_bytes())),
+            ("gpu_busy_s", Json::Num(gpu_busy_s)),
+        ]));
+        // ---- coordinator interval + autoscaler decision rows ------------
+        for log in &self.coordinator.logs[self.obs_coord_logs_seen..] {
+            self.engine.obs.push_metrics_row(log.to_json());
+        }
+        self.obs_coord_logs_seen = self.coordinator.logs.len();
+        for log in
+            &self.coordinator.autoscale_logs[self.obs_autoscale_logs_seen..]
+        {
+            self.engine.obs.push_metrics_row(log.to_json());
+        }
+        self.obs_autoscale_logs_seen = self.coordinator.autoscale_logs.len();
     }
 
     fn build_report(&mut self) -> GatewayReport {
@@ -651,21 +789,27 @@ impl Gateway {
                 set.tenants
                     .iter()
                     .enumerate()
-                    .map(|(t, tc)| TenantReport {
-                        name: tc.name.clone(),
-                        weight: tc.weight,
-                        slo_s: tc.slo_s,
-                        // every arrival is either admitted or shed, so
-                        // the offered load is derived, not tracked
-                        offered: self.admission.admitted_by_tenant[t]
-                            + self.admission.shed_by_tenant[t],
-                        admitted: self.admission.admitted_by_tenant[t],
-                        shed: self.admission.shed_by_tenant[t],
-                        completed: lat[t].len() as u64,
-                        p50_s: crate::util::stats::percentile(&lat[t], 0.50),
-                        p95_s: crate::util::stats::percentile(&lat[t], 0.95),
-                        p99_s: crate::util::stats::percentile(&lat[t], 0.99),
-                        violations_completed: violations[t],
+                    .map(|(t, tc)| {
+                        let qs = crate::util::stats::percentiles(
+                            &lat[t],
+                            &[0.50, 0.95, 0.99],
+                        );
+                        TenantReport {
+                            name: tc.name.clone(),
+                            weight: tc.weight,
+                            slo_s: tc.slo_s,
+                            // every arrival is either admitted or shed, so
+                            // the offered load is derived, not tracked
+                            offered: self.admission.admitted_by_tenant[t]
+                                + self.admission.shed_by_tenant[t],
+                            admitted: self.admission.admitted_by_tenant[t],
+                            shed: self.admission.shed_by_tenant[t],
+                            completed: lat[t].len() as u64,
+                            p50_s: qs[0],
+                            p95_s: qs[1],
+                            p99_s: qs[2],
+                            violations_completed: violations[t],
+                        }
                     })
                     .collect()
             }
@@ -687,6 +831,11 @@ impl Gateway {
             forwarded_in: self.forwarded_in,
             slo_s: self.cfg.slo_s,
             tenants,
+            decomp: self
+                .engine
+                .obs
+                .enabled()
+                .then(|| self.engine.obs.decomp()),
             serve,
         }
     }
@@ -937,6 +1086,59 @@ mod tests {
         // borrowed admissions are real admissions: they all complete
         assert_eq!(with.serve.records.len() as u64, with.admitted);
         assert_eq!(with.offered, with.admitted + with.shed);
+    }
+
+    #[test]
+    fn tracing_is_result_neutral_and_decomposes() {
+        let mk = |trace: bool| {
+            let mut gw = gateway(
+                GatewayConfig {
+                    horizon_s: 120.0,
+                    seed: 3,
+                    ..GatewayConfig::default()
+                },
+                CoordinatorConfig {
+                    interval_s: 30.0,
+                    ..CoordinatorConfig::default()
+                },
+            );
+            if trace {
+                gw.enable_obs(ObsConfig::default());
+            }
+            let report = gw.run();
+            let sums: Vec<(f64, f64)> = gw
+                .engine
+                .obs
+                .completed
+                .iter()
+                .map(|r| (r.stages.total(), r.latency_s))
+                .collect();
+            (report, sums, gw.metrics_jsonl(), gw.trace_json().to_string())
+        };
+        let (plain, no_sums, no_rows, _) = mk(false);
+        let (traced, sums, rows, trace_a) = mk(true);
+        // result-neutral: identical records bit-for-bit
+        assert_eq!(plain.serve.records.len(), traced.serve.records.len());
+        for (a, b) in plain.serve.records.iter().zip(&traced.serve.records) {
+            assert_eq!(a.latency_s.to_bits(), b.latency_s.to_bits());
+        }
+        assert!(plain.decomp.is_none());
+        assert!(no_sums.is_empty() && no_rows.is_empty());
+        // every traced request decomposes exactly
+        assert_eq!(sums.len(), traced.serve.records.len());
+        for (total, latency) in &sums {
+            assert!(
+                (total - latency).abs() <= 1e-6 * latency.max(1e-9),
+                "stage sum {total} != latency {latency}"
+            );
+        }
+        let d = traced.decomp.expect("decomp present when traced");
+        assert_eq!(d.count, sums.len());
+        assert!((d.comms_share + d.compute_share) < 1.0 + 1e-9);
+        // metrics stream and trace export are non-empty and deterministic
+        assert!(rows.lines().count() >= 3, "one row per interval minimum");
+        let (_, _, _, trace_b) = mk(true);
+        assert_eq!(trace_a, trace_b, "same seed ⇒ byte-identical trace");
     }
 
     #[test]

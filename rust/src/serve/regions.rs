@@ -50,6 +50,7 @@ use crate::cluster::RegionTopology;
 use crate::config::{ClusterConfig, ModelConfig, TaskKind, WorkloadConfig};
 use crate::coordinator::CoordinatorConfig;
 use crate::net::NetModel;
+use crate::obs::{chrome, ObsConfig};
 use crate::placement::uniform;
 use crate::serve::statsbus::{RegionBus, RegionWindow};
 use crate::serve::{
@@ -143,8 +144,10 @@ pub struct MultiGateway {
     pending: BinaryHeap<Reverse<(u64, u64, u32)>>,
     /// forward payload slab: slots recycle through `pending_free`, so
     /// storage is bounded by forwards *in flight*, not total forwards
-    /// (the same free-list discipline as the engine's event slab)
-    pending_reqs: Vec<Option<(Request, usize, usize)>>,
+    /// (the same free-list discipline as the engine's event slab); the
+    /// trailing f64 is the transfer duration, carried for the receiving
+    /// recorder's pre-arrival spill booking
+    pending_reqs: Vec<Option<(Request, usize, usize, f64)>>,
     pending_free: Vec<u32>,
     seq: u64,
     /// spilled-request counts per (destination region, task) since the
@@ -274,7 +277,7 @@ impl MultiGateway {
                 gw.tick_due(now);
             }
             if now + 1e-9 >= self.next_exchange {
-                self.exchange();
+                self.exchange(now);
                 self.next_exchange += self.spill_cfg.exchange_s;
             }
             self.deliver_due(now);
@@ -310,9 +313,13 @@ impl MultiGateway {
                     Ok(()) => {}
                     Err(rej) => match self.spill_target(r, rej.tenant) {
                         Some(q) => self.forward(r, q, rej, now),
-                        None => self.gateways[r]
-                            .admission
-                            .record_shed_tenant(rej.tenant),
+                        None => {
+                            let gw = &mut self.gateways[r];
+                            gw.admission.record_shed_tenant(rej.tenant);
+                            gw.engine
+                                .obs
+                                .on_shed(rej.tenant, rej.server, now);
+                        }
                     },
                 }
             }
@@ -386,14 +393,19 @@ impl MultiGateway {
         );
         let seq = self.seq;
         self.seq += 1;
+        self.gateways[src]
+            .engine
+            .obs
+            .on_spill_forward(seq as u32, src, dst, now, at);
+        let dur = at - now;
         let slot = match self.pending_free.pop() {
             Some(s) => {
-                self.pending_reqs[s as usize] = Some((req, src, dst));
+                self.pending_reqs[s as usize] = Some((req, src, dst, dur));
                 s
             }
             None => {
                 let s = self.pending_reqs.len() as u32;
-                self.pending_reqs.push(Some((req, src, dst)));
+                self.pending_reqs.push(Some((req, src, dst, dur)));
                 s
             }
         };
@@ -405,16 +417,20 @@ impl MultiGateway {
     /// request's tenant; from there the normal preference walk applies.
     /// A forward that finds no room is shed, attributed to its origin.
     fn deliver_due(&mut self, now: f64) {
-        while let Some(&Reverse((bits, _, slot))) = self.pending.peek() {
+        while let Some(&Reverse((bits, seq, slot))) = self.pending.peek() {
             if f64::from_bits(bits) > now + 1e-9 {
                 break;
             }
             self.pending.pop();
-            let (mut req, src, dst) = self.pending_reqs[slot as usize]
+            let (mut req, src, dst, dur) = self.pending_reqs
+                [slot as usize]
                 .take()
                 .expect("pending forward slot");
             self.pending_free.push(slot);
             let tenant = req.tenant;
+            let req_id = req.id as u64;
+            let arrival = req.arrival_s;
+            let home = req.server;
             let admitted = {
                 let gw = &mut self.gateways[dst];
                 let mut entry = 0usize;
@@ -427,13 +443,20 @@ impl MultiGateway {
                     }
                 }
                 req.server = entry;
+                gw.engine.obs.on_spill_deliver(seq as u32, src, dst, now);
+                gw.engine.obs.note_prearrival_transfer(req_id, arrival, dur);
                 gw.admit_forwarded(req, now)
             };
             if admitted {
                 self.spilled_in[dst] += 1;
             } else {
                 self.spill_shed[src] += 1;
+                self.gateways[dst]
+                    .engine
+                    .obs
+                    .clear_prearrival(req_id, arrival);
                 self.gateways[src].admission.record_shed_tenant(tenant);
+                self.gateways[src].engine.obs.on_shed(tenant, home, now);
             }
         }
     }
@@ -441,7 +464,7 @@ impl MultiGateway {
     /// One federation exchange: publish every region's window, then hand
     /// each coordinator its own pressure plus the expert boost derived
     /// from the traffic spilled *into* it since the last exchange.
-    fn exchange(&mut self) {
+    fn exchange(&mut self, now: f64) {
         for r in 0..self.gateways.len() {
             let gw = &self.gateways[r];
             let queued = gw.admission.total_queued();
@@ -456,6 +479,26 @@ impl MultiGateway {
                 residual,
                 by_tenant,
             );
+            if self.gateways[r].engine.obs.enabled() {
+                let w = &self.windows[r];
+                let row = Json::from_pairs(vec![
+                    ("t_s", Json::Num(now)),
+                    ("kind", Json::Str("region_window".into())),
+                    ("completed", Json::Num(w.completed as f64)),
+                    ("shed", Json::Num(w.shed as f64)),
+                    ("p95_s", Json::Num(w.p95_s)),
+                    ("queued", Json::Num(w.queued as f64)),
+                    ("residual", Json::Num(w.residual as f64)),
+                    ("pressure", Json::Num(w.pressure)),
+                    (
+                        "spilled_out",
+                        Json::Num(self.spilled_out[r] as f64),
+                    ),
+                    ("spilled_in", Json::Num(self.spilled_in[r] as f64)),
+                    ("spill_shed", Json::Num(self.spill_shed[r] as f64)),
+                ]);
+                self.gateways[r].engine.obs.push_metrics_row(row);
+            }
         }
         for r in 0..self.gateways.len() {
             let boost = self.spill_boost(r);
@@ -498,6 +541,90 @@ impl MultiGateway {
             *b = b.min(crate::serve::tenant::MAX_EXPERT_BOOST);
         }
         boost
+    }
+
+    /// Turn on the tracing layer in every regional gateway. Result-
+    /// neutral, like [`Gateway::enable_obs`]: traced and untraced runs
+    /// at one seed produce identical reports.
+    pub fn enable_obs(&mut self, cfg: ObsConfig) {
+        for gw in &mut self.gateways {
+            gw.enable_obs(cfg.clone());
+        }
+    }
+
+    /// One Chrome trace-event document over every region: region `r`'s
+    /// tracks live under pid base `100·r` (named by region), and
+    /// cross-region forwards appear as flow arrows between the origin's
+    /// and destination's gateway tracks.
+    pub fn trace_json(&self) -> Json {
+        let parts: Vec<chrome::ExportPart> = self
+            .gateways
+            .iter()
+            .enumerate()
+            .map(|(r, gw)| chrome::ExportPart {
+                label: self.topology.regions[r].name.clone(),
+                pid_base: (r * 100) as u32,
+                obs: &gw.engine.obs,
+                server_names: gw
+                    .engine
+                    .cluster_cfg
+                    .servers
+                    .iter()
+                    .map(|s| s.name.clone())
+                    .collect(),
+            })
+            .collect();
+        chrome::export(&parts)
+    }
+
+    /// The unified metrics-snapshot stream over every region: each
+    /// region's rows tagged with its name, merged in virtual-clock order
+    /// (stable — ties keep region order), one JSON object per line.
+    pub fn metrics_jsonl(&self) -> String {
+        let mut rows: Vec<(f64, Json)> = Vec::new();
+        for (r, gw) in self.gateways.iter().enumerate() {
+            let name = &self.topology.regions[r].name;
+            for row in &gw.engine.obs.metrics_rows {
+                let mut tagged = row.clone();
+                tagged.set("region", Json::Str(name.clone()));
+                let t = tagged
+                    .get("t_s")
+                    .and_then(|v| v.as_f64())
+                    .unwrap_or(0.0);
+                rows.push((t, tagged));
+            }
+        }
+        rows.sort_by(|a, b| a.0.total_cmp(&b.0));
+        let mut s = String::new();
+        for (_, row) in &rows {
+            s.push_str(&row.to_string());
+            s.push('\n');
+        }
+        s
+    }
+
+    /// Flight-recorder dumps from every region, as one JSON document.
+    pub fn flight_json(&self) -> Json {
+        Json::from_pairs(vec![(
+            "regions",
+            Json::Arr(
+                self.gateways
+                    .iter()
+                    .enumerate()
+                    .map(|(r, gw)| {
+                        Json::from_pairs(vec![
+                            (
+                                "region",
+                                Json::Str(
+                                    self.topology.regions[r].name.clone(),
+                                ),
+                            ),
+                            ("flight", gw.engine.obs.flight_json()),
+                        ])
+                    })
+                    .collect(),
+            ),
+        )])
     }
 
     /// The thin global coordination view: per-region ledger/placement
@@ -543,14 +670,18 @@ impl MultiGateway {
             let lat: Vec<f64> =
                 rep.serve.records.iter().map(|x| x.latency_s).collect();
             all_lat.extend_from_slice(&lat);
+            let p = crate::util::stats::percentiles(
+                &lat,
+                &[0.50, 0.95, 0.99],
+            );
             regions.push(RegionSummary {
                 name: self.topology.regions[r].name.clone(),
                 spilled_out: self.spilled_out[r],
                 spilled_in: self.spilled_in[r],
                 spill_shed: self.spill_shed[r],
-                p50_s: crate::util::stats::percentile(&lat, 0.50),
-                p95_s: crate::util::stats::percentile(&lat, 0.95),
-                p99_s: crate::util::stats::percentile(&lat, 0.99),
+                p50_s: p[0],
+                p95_s: p[1],
+                p99_s: p[2],
                 gateway: rep,
             });
         }
@@ -566,6 +697,10 @@ impl MultiGateway {
             .iter()
             .map(|r| r.gateway.slo_violations_completed())
             .sum();
+        let p = crate::util::stats::percentiles(
+            &all_lat,
+            &[0.50, 0.95, 0.99],
+        );
         RegionsReport {
             spill_enabled: self.spill_cfg.enabled,
             slo_s,
@@ -578,9 +713,9 @@ impl MultiGateway {
             shed,
             completed,
             violations_completed,
-            p50_s: crate::util::stats::percentile(&all_lat, 0.50),
-            p95_s: crate::util::stats::percentile(&all_lat, 0.95),
-            p99_s: crate::util::stats::percentile(&all_lat, 0.99),
+            p50_s: p[0],
+            p95_s: p[1],
+            p99_s: p[2],
             regions,
         }
     }

@@ -359,6 +359,91 @@ mod tests {
     }
 
     #[test]
+    fn zero_width_windows_clamp_not_divide_by_zero() {
+        // two collects at the same instant: the second window's length
+        // clamps to the epsilon floor instead of 0, so downstream
+        // rates (tokens / window_s) stay finite
+        let m = ModelConfig::tiny();
+        let mut bus = StatsBus::new(&m, 1);
+        let mut cum = ActivationStats::new(&m, 1);
+        cum.record(0, 0, 0, 3.0);
+        let d1 = bus.collect(&cum, 30.0);
+        assert_eq!(d1.window_s, 30.0);
+        cum.record(0, 0, 0, 2.0);
+        let d2 = bus.collect(&cum, 30.0);
+        assert!(d2.window_s > 0.0, "zero-width window must clamp");
+        assert_eq!(d2.tokens, 2.0);
+        let rate = d2.tokens / d2.window_s;
+        assert!(rate.is_finite());
+        // time moving backwards (a mis-ordered publisher) also clamps
+        let d3 = bus.collect(&cum, 20.0);
+        assert!(d3.window_s > 0.0);
+    }
+
+    #[test]
+    fn counter_resets_publish_empty_not_negative() {
+        // A cumulative table that goes backwards (engine swap/reset
+        // between collects) must difference to an empty delta, not a
+        // negative one — the bus clamps per-cell increments at 0 and
+        // re-snapshots, so the stream recovers on the next interval.
+        let m = ModelConfig::tiny();
+        let mut bus = StatsBus::new(&m, 1);
+        let mut cum = ActivationStats::new(&m, 1);
+        cum.record(0, 0, 0, 10.0);
+        let _ = bus.collect(&cum, 30.0);
+        // reset: a fresh table with *less* accumulated than the snapshot
+        let mut fresh = ActivationStats::new(&m, 1);
+        fresh.record(0, 0, 0, 4.0);
+        let d = bus.collect(&fresh, 60.0);
+        assert_eq!(d.tokens, 0.0, "backwards counters clamp to empty");
+        assert_eq!(d.stats.raw(0, 0, 0), 0.0);
+        // growth after the reset differences against the new snapshot
+        fresh.record(0, 0, 0, 6.0);
+        let d = bus.collect(&fresh, 90.0);
+        assert_eq!(d.tokens, 6.0);
+
+        // the shed counters of the tenant and region buses saturate the
+        // same way instead of wrapping
+        let report = ServeReport::new(1, 60.0);
+        let mut tbus = TenantBus::new(&[2.0]);
+        let _ = tbus.collect(&report, &[5]);
+        let w = tbus.collect(&report, &[1]); // counter went backwards
+        assert_eq!(w[0].shed, 0, "tenant shed saturates at 0");
+        let w = tbus.collect(&report, &[3]);
+        assert_eq!(w[0].shed, 2, "recovers against the new snapshot");
+        let mut rbus = RegionBus::new(4.0);
+        let _ = rbus.collect(&report, 5, 0, 0, vec![]);
+        let w = rbus.collect(&report, 1, 0, 0, vec![]);
+        assert_eq!(w.shed, 0, "region shed saturates at 0");
+    }
+
+    #[test]
+    fn first_window_covers_everything_since_construction() {
+        // A bus built after traffic started still publishes a correct
+        // first window: everything in the report / counters to date, and
+        // a StatsBus first window spans from t = 0.
+        let m = ModelConfig::tiny();
+        let mut bus = StatsBus::new(&m, 1);
+        let cum = ActivationStats::new(&m, 1);
+        let d = bus.collect(&cum, 45.0);
+        assert_eq!(d.window_s, 45.0, "first window starts at t = 0");
+        assert_eq!(d.tokens, 0.0);
+
+        let mut report = ServeReport::new(1, 60.0);
+        push_rec(&mut report, 0, 0, 1.0);
+        push_rec(&mut report, 1, 0, 9.0);
+        let mut tbus = TenantBus::new(&[2.0]);
+        let w = tbus.collect(&report, &[3]);
+        assert_eq!(w[0].completed, 2, "pre-construction records counted");
+        assert_eq!(w[0].violations, 1);
+        assert_eq!(w[0].shed, 3, "first window takes the full counter");
+        let mut rbus = RegionBus::new(4.0);
+        let w = rbus.collect(&report, 3, 1, 2, vec![2]);
+        assert_eq!(w.completed, 2);
+        assert_eq!(w.shed, 3);
+    }
+
+    #[test]
     fn delta_sum_reconstructs_cumulative() {
         let m = ModelConfig::tiny();
         let mut bus = StatsBus::new(&m, 1);

@@ -41,13 +41,20 @@ impl Level {
     }
 }
 
-static THRESHOLD: AtomicU8 = AtomicU8::new(u8::MAX); // unset sentinel
+/// `u8::MAX` = "unset" — the next [`log`] call reads `DANCEMOE_LOG`.
+static THRESHOLD: AtomicU8 = AtomicU8::new(u8::MAX);
 static CAPTURE: Mutex<Option<Vec<String>>> = Mutex::new(None);
+/// Serializes capture sessions so parallel tests cannot interleave
+/// records or clobber each other's threshold.
+static CAPTURE_GATE: Mutex<()> = Mutex::new(());
 
 fn threshold() -> Level {
     let raw = THRESHOLD.load(Ordering::Relaxed);
     if raw == u8::MAX {
         let lvl = Level::from_env();
+        // another thread may race this store with the same env-derived
+        // value, or with an explicit `set_level` — last writer wins,
+        // which `reset_for_test` can always undo
         THRESHOLD.store(lvl as u8, Ordering::Relaxed);
         lvl
     } else {
@@ -65,14 +72,54 @@ pub fn set_level(level: Level) {
     THRESHOLD.store(level as u8, Ordering::Relaxed);
 }
 
-/// Begin capturing records in memory (tests); returns previous capture.
-pub fn capture_start() {
-    *CAPTURE.lock().unwrap() = Some(Vec::new());
+/// Drop the cached threshold so the next record re-reads `DANCEMOE_LOG`.
+/// Without this the first `log` call pins the level for the whole
+/// process and later env changes are silently ignored.
+pub fn reset_for_test() {
+    THRESHOLD.store(u8::MAX, Ordering::Relaxed);
 }
 
-/// Stop capturing and return the captured records.
-pub fn capture_take() -> Vec<String> {
-    CAPTURE.lock().unwrap().take().unwrap_or_default()
+fn lock_gate() -> std::sync::MutexGuard<'static, ()> {
+    // a panicking capture test must not wedge every later one
+    CAPTURE_GATE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// In-memory capture session for tests. Holding the guard serializes
+/// concurrent captures (parallel `cargo test` threads queue instead of
+/// mixing records); dropping it restores the prior threshold and stops
+/// capturing, even on panic.
+pub struct Capture {
+    prev_raw: u8,
+    _gate: std::sync::MutexGuard<'static, ()>,
+}
+
+/// Begin capturing records at `level`; returns the session guard.
+pub fn capture_at(level: Level) -> Capture {
+    let gate = lock_gate();
+    let prev_raw = THRESHOLD.swap(level as u8, Ordering::Relaxed);
+    *CAPTURE.lock().unwrap_or_else(|e| e.into_inner()) = Some(Vec::new());
+    Capture {
+        prev_raw,
+        _gate: gate,
+    }
+}
+
+impl Capture {
+    /// Drain the records captured so far.
+    pub fn take(&mut self) -> Vec<String> {
+        CAPTURE
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .replace(Vec::new())
+            .unwrap_or_default()
+    }
+}
+
+impl Drop for Capture {
+    fn drop(&mut self) {
+        *CAPTURE.lock().unwrap_or_else(|e| e.into_inner()) = None;
+        THRESHOLD.store(self.prev_raw, Ordering::Relaxed);
+    }
 }
 
 /// Emit a record at `level` under a `target` tag.
@@ -106,28 +153,66 @@ mod tests {
 
     #[test]
     fn levels_filter_and_capture() {
-        set_level(Level::Info);
-        capture_start();
+        let mut cap = capture_at(Level::Info);
         info("test", "hello");
         debug("test", "hidden");
         warn("test", "warned");
-        let got = capture_take();
+        let got = cap.take();
         assert_eq!(got.len(), 2);
         assert!(got[0].contains("INFO"));
         assert!(got[0].contains("hello"));
         assert!(got[1].contains("warned"));
-        set_level(Level::Warn);
     }
 
     #[test]
     fn error_always_passes() {
-        set_level(Level::Error);
-        capture_start();
+        let mut cap = capture_at(Level::Error);
         log(Level::Error, "x", "boom");
         warn("x", "quiet");
-        let got = capture_take();
+        let got = cap.take();
         assert_eq!(got.len(), 1);
         assert!(got[0].contains("boom"));
+    }
+
+    #[test]
+    fn capture_guard_restores_threshold_on_drop() {
         set_level(Level::Warn);
+        {
+            let mut cap = capture_at(Level::Debug);
+            debug("t", "seen");
+            assert_eq!(cap.take().len(), 1);
+        }
+        // back to Warn, and no longer capturing
+        let mut cap = capture_at(Level::Warn);
+        debug("t", "hidden again");
+        assert!(cap.take().is_empty());
+    }
+
+    #[test]
+    fn take_drains_incrementally() {
+        let mut cap = capture_at(Level::Info);
+        info("t", "one");
+        assert_eq!(cap.take().len(), 1);
+        info("t", "two");
+        let got = cap.take();
+        assert_eq!(got.len(), 1);
+        assert!(got[0].contains("two"));
+    }
+
+    #[test]
+    fn reset_rereads_environment() {
+        // serialize with other capture tests — we poke global state
+        let _cap = capture_at(Level::Info);
+        set_level(Level::Error);
+        reset_for_test();
+        // next record re-derives from env (default warn unless set)
+        let expected = Level::from_env();
+        log(expected, "t", "after reset");
+        // the lazy path cached it again
+        assert_ne!(
+            THRESHOLD.load(Ordering::Relaxed),
+            u8::MAX,
+            "threshold should be re-cached after first log"
+        );
     }
 }

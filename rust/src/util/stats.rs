@@ -41,14 +41,34 @@ pub fn mean(xs: &[f64]) -> f64 {
 }
 
 /// Percentile (nearest-rank on a sorted copy); `q` in [0,1].
+///
+/// The one shared implementation for the whole crate (engine metrics,
+/// stats bus, gateway/regions reports, latency decomposition). NaN inputs
+/// are ignored, so the result is never NaN; an empty (or all-NaN) slice
+/// yields 0.
 pub fn percentile(xs: &[f64], q: f64) -> f64 {
-    if xs.is_empty() {
-        return 0.0;
+    percentiles(xs, &[q])[0]
+}
+
+/// Several percentiles of the same sample in one sort; `qs` in [0,1].
+///
+/// Same nearest-rank and NaN-ignoring semantics as [`percentile`] —
+/// `percentiles(xs, &[q])[0] == percentile(xs, q)` — but pays the
+/// sort once for a whole p50/p95/p99 triple.
+pub fn percentiles(xs: &[f64], qs: &[f64]) -> Vec<f64> {
+    let mut v: Vec<f64> =
+        xs.iter().copied().filter(|x| !x.is_nan()).collect();
+    if v.is_empty() {
+        return vec![0.0; qs.len()];
     }
-    let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let idx = ((v.len() as f64 - 1.0) * q.clamp(0.0, 1.0)).round() as usize;
-    v[idx]
+    v.sort_by(f64::total_cmp);
+    qs.iter()
+        .map(|q| {
+            let idx = ((v.len() as f64 - 1.0) * q.clamp(0.0, 1.0)).round()
+                as usize;
+            v[idx]
+        })
+        .collect()
 }
 
 /// Indices that would sort `xs` descending (stable for equal keys).
@@ -265,6 +285,41 @@ mod tests {
         assert_eq!(percentile(&xs, 0.5), 3.0);
         assert_eq!(percentile(&xs, 1.0), 5.0);
         assert_eq!(percentile(&[], 0.5), 0.0);
+    }
+
+    #[test]
+    fn percentile_edge_cases() {
+        // single sample: every quantile is that sample
+        assert_eq!(percentile(&[7.5], 0.0), 7.5);
+        assert_eq!(percentile(&[7.5], 0.5), 7.5);
+        assert_eq!(percentile(&[7.5], 1.0), 7.5);
+        // out-of-range q clamps rather than panics
+        assert_eq!(percentile(&[1.0, 2.0], -0.5), 1.0);
+        assert_eq!(percentile(&[1.0, 2.0], 2.0), 2.0);
+    }
+
+    #[test]
+    fn percentile_never_nan() {
+        // NaN inputs are ignored, not propagated (and never panic)
+        let xs = [3.0, f64::NAN, 1.0, f64::NAN, 2.0];
+        let p = percentile(&xs, 0.5);
+        assert!(!p.is_nan());
+        assert_eq!(p, 2.0);
+        // all-NaN behaves like empty
+        assert_eq!(percentile(&[f64::NAN, f64::NAN], 0.9), 0.0);
+        assert!(!percentile(&[], 0.5).is_nan());
+    }
+
+    #[test]
+    fn percentiles_match_percentile() {
+        let xs = [0.9, 0.1, 0.5, 0.7, 0.3, 0.2, 0.8];
+        let qs = [0.0, 0.25, 0.5, 0.95, 0.99, 1.0];
+        let multi = percentiles(&xs, &qs);
+        for (i, &q) in qs.iter().enumerate() {
+            assert_eq!(multi[i], percentile(&xs, q));
+        }
+        assert_eq!(percentiles(&[], &[0.5, 0.9]), vec![0.0, 0.0]);
+        assert!(percentiles(&xs, &[]).is_empty());
     }
 
     #[test]

@@ -208,8 +208,7 @@ fn coordinator_logs_adoptions_to_observability_stream() {
     let c = tight_cluster(&m);
     let w = WorkloadConfig::bigbench(4.0);
     let trace = TraceGenerator::new(&m, &w, 51).gen_count(80);
-    log::set_level(log::Level::Info);
-    log::capture_start();
+    let mut cap = log::capture_at(log::Level::Info);
     let mut coord = Coordinator::new(
         &m,
         &c,
@@ -232,8 +231,8 @@ fn coordinator_logs_adoptions_to_observability_stream() {
         ),
         &trace,
     );
-    let records = log::capture_take();
-    log::set_level(log::Level::Warn);
+    let records = cap.take();
+    drop(cap);
     if report.migrations.is_empty() {
         return; // nothing to log in this seeding — other tests cover adoption
     }

@@ -1,0 +1,220 @@
+//! End-to-end properties of the tracing layer: byte-determinism of the
+//! exported artifacts, exact latency decomposition (gateway and
+//! multi-region runs, spill stage included), result-neutrality, recorder
+//! bounds, and flight-recorder triggering.
+
+use dancemoe::config::{ClusterConfig, ModelConfig, WorkloadConfig};
+use dancemoe::coordinator::CoordinatorConfig;
+use dancemoe::obs::ObsConfig;
+use dancemoe::placement::uniform;
+use dancemoe::serve::{
+    Gateway, GatewayConfig, RegionsScenario, TenantSet,
+};
+use dancemoe::util::json::Json;
+
+fn gateway(gcfg: GatewayConfig) -> Gateway {
+    let mut m = ModelConfig::mixtral_8x7b_sim();
+    m.num_layers = 4;
+    let c = ClusterConfig::edge_testbed_3_for(&m);
+    let w = WorkloadConfig::bigbench(1.0);
+    let initial = uniform::place(&m, &c);
+    Gateway::new(
+        &m,
+        &c,
+        &w,
+        initial,
+        gcfg,
+        CoordinatorConfig {
+            interval_s: 30.0,
+            ..CoordinatorConfig::default()
+        },
+    )
+}
+
+/// One traced gateway run's exported artifacts.
+fn run_traced(seed: u64) -> (String, String) {
+    let mut gw = gateway(GatewayConfig {
+        horizon_s: 120.0,
+        seed,
+        ..GatewayConfig::default()
+    });
+    gw.enable_obs(ObsConfig::default());
+    let _ = gw.run();
+    (gw.trace_json().to_string(), gw.metrics_jsonl())
+}
+
+#[test]
+fn same_seed_artifacts_are_byte_identical() {
+    let (t1, m1) = run_traced(11);
+    let (t2, m2) = run_traced(11);
+    assert_eq!(t1, t2, "same seed ⇒ byte-identical Chrome trace");
+    assert_eq!(m1, m2, "same seed ⇒ byte-identical metrics JSONL");
+    let (t3, m3) = run_traced(12);
+    assert_ne!(t1, t3, "a different seed must change the trace");
+    assert_ne!(m1, m3, "a different seed must change the metrics");
+}
+
+#[test]
+fn chrome_trace_document_is_wellformed() {
+    let (trace, metrics) = run_traced(11);
+    let j = Json::parse(&trace).expect("trace must parse as JSON");
+    let evs = match j.get("traceEvents") {
+        Some(Json::Arr(v)) => v,
+        other => panic!("traceEvents must be an array, got {other:?}"),
+    };
+    assert!(!evs.is_empty(), "a served run must emit events");
+    for e in evs {
+        assert!(e.get("ph").is_some(), "every event has a phase");
+        assert!(e.get("pid").is_some(), "every event has a process");
+        assert!(e.get("name").is_some(), "every event has a name");
+    }
+    // every metrics row is one valid JSON object with t_s and kind
+    assert!(metrics.lines().count() >= 3);
+    for line in metrics.lines() {
+        let row = Json::parse(line).expect("each JSONL row parses");
+        assert!(row.get("t_s").and_then(|v| v.as_f64()).is_some());
+        assert!(row.get("kind").is_some());
+    }
+}
+
+#[test]
+fn regions_trace_covers_spill_and_decomposes_exactly() {
+    // the canonical staggered-diurnal scenario: forwards happen, so the
+    // decomposition must book non-zero spill time somewhere — and every
+    // traced request must still decompose to its exact latency
+    let scenario = RegionsScenario {
+        horizon_s: 200.0,
+        autoscale: true,
+        seed: 5,
+        ..RegionsScenario::default()
+    };
+    let mut multi = scenario.build();
+    multi.enable_obs(ObsConfig::default());
+    let report = multi.run();
+    assert!(report.spilled > 0, "scenario must spill");
+    let mut checked = 0usize;
+    let mut spill_total = 0.0;
+    for gw in &multi.gateways {
+        for rec in &gw.engine.obs.completed {
+            let total = rec.stages.total();
+            assert!(
+                (total - rec.latency_s).abs()
+                    <= 1e-6 * rec.latency_s.max(1e-9),
+                "stage sum {total} != latency {}",
+                rec.latency_s
+            );
+            spill_total += rec.stages.spill_s;
+            checked += 1;
+        }
+    }
+    assert!(checked > 0, "completions must be traced");
+    assert!(
+        spill_total > 0.0,
+        "forwarded completions must book inter-region transfer as spill"
+    );
+    for region in &report.regions {
+        let d = region.gateway.decomp.as_ref().expect("per-region decomp");
+        assert!(d.comms_share + d.compute_share <= 1.0 + 1e-9);
+    }
+}
+
+#[test]
+fn regions_artifacts_are_deterministic() {
+    let run = || {
+        let mut multi = RegionsScenario {
+            horizon_s: 150.0,
+            seed: 7,
+            ..RegionsScenario::default()
+        }
+        .build();
+        multi.enable_obs(ObsConfig::default());
+        let _ = multi.run();
+        (multi.trace_json().to_string(), multi.metrics_jsonl())
+    };
+    let (t1, m1) = run();
+    let (t2, m2) = run();
+    assert_eq!(t1, t2);
+    assert_eq!(m1, m2);
+    // region-tagged rows, merged in clock order
+    let mut last = f64::NEG_INFINITY;
+    let mut regions_seen = std::collections::BTreeSet::new();
+    for line in m1.lines() {
+        let row = Json::parse(line).unwrap();
+        let t = row.get("t_s").and_then(|v| v.as_f64()).unwrap();
+        assert!(t >= last, "rows must be in virtual-clock order");
+        last = t;
+        if let Some(Json::Str(r)) = row.get("region") {
+            regions_seen.insert(r.clone());
+        }
+    }
+    assert_eq!(regions_seen.len(), 3, "every region contributes rows");
+}
+
+#[test]
+fn regions_tracing_is_result_neutral() {
+    let run = |trace: bool| {
+        let mut multi = RegionsScenario {
+            horizon_s: 150.0,
+            tenants: Some(TenantSet::pair()),
+            seed: 13,
+            ..RegionsScenario::default()
+        }
+        .build();
+        if trace {
+            multi.enable_obs(ObsConfig::default());
+        }
+        multi.run()
+    };
+    let plain = run(false);
+    let traced = run(true);
+    assert_eq!(plain.offered, traced.offered);
+    assert_eq!(plain.admitted, traced.admitted);
+    assert_eq!(plain.shed, traced.shed);
+    assert_eq!(plain.spilled, traced.spilled);
+    assert_eq!(plain.completed, traced.completed);
+    assert_eq!(plain.p95_s.to_bits(), traced.p95_s.to_bits());
+    assert_eq!(plain.p99_s.to_bits(), traced.p99_s.to_bits());
+}
+
+#[test]
+fn event_store_bound_holds_end_to_end() {
+    let mut gw = gateway(GatewayConfig {
+        horizon_s: 120.0,
+        seed: 17,
+        ..GatewayConfig::default()
+    });
+    gw.enable_obs(ObsConfig {
+        max_events: 64,
+        ..ObsConfig::default()
+    });
+    let _ = gw.run();
+    let obs = &gw.engine.obs;
+    assert!(obs.events.len() <= 64, "span store must stay bounded");
+    assert!(obs.dropped > 0, "a 2-minute run overflows 64 slots");
+}
+
+#[test]
+fn slo_breach_dumps_the_flight_ring() {
+    // a sub-millisecond SLO: every interval window with completions
+    // breaches, so dumps fire and cap at the configured bound
+    let mut gw = gateway(GatewayConfig {
+        horizon_s: 120.0,
+        slo_s: 1e-3,
+        seed: 9,
+        ..GatewayConfig::default()
+    });
+    gw.enable_obs(ObsConfig::default());
+    let _ = gw.run();
+    let obs = &gw.engine.obs;
+    assert!(!obs.dumps.is_empty(), "sub-millisecond SLO must breach");
+    assert!(obs.dumps.len() <= obs.cfg.max_flight_dumps);
+    for d in &obs.dumps {
+        assert_eq!(d.reason, "slo_breach");
+        assert!(!d.events.is_empty(), "the ring had recent spans");
+        for w in d.events.windows(2) {
+            assert!(w[0].t_s <= w[1].t_s, "ring snapshots chronological");
+        }
+    }
+    let flight = gw.flight_json().to_string();
+    assert!(flight.contains("slo_breach"));
+}
