@@ -1,0 +1,155 @@
+//! Communication-cost accounting benchmark: two gateway co-simulations
+//! on the canonical migration scenario (the one
+//! `tests/gateway_integration.rs` locks migration adoption on) — live
+//! migration vs. fixed placement at the same seed — written to
+//! `BENCH_comms.json` so the byte trajectory of the serving stack is
+//! tracked across PRs machine-readably.
+//!
+//! Like `BENCH_regions.json`, the document carries **no wall-clock
+//! timings**: it is byte-identical across runs at the same seed, so CI
+//! artifact diffs show only real byte-flow changes. Wall-clock for the
+//! two runs is still printed via the bench harness.
+//!
+//! The bench exits non-zero if either guard fails:
+//! (a) attribution exactness — re-summing the (src, dst, purpose) link
+//!     matrix in flat traversal order must reproduce
+//!     `NetModel::total_bytes()` and every purpose total bit-exactly,
+//! (b) migration payback — the migrating run must move strictly fewer
+//!     remote request bytes (expert calls + result returns) than the
+//!     fixed-placement run over the same arrivals.
+
+use dancemoe::config::{ClusterConfig, ModelConfig, WorkloadConfig};
+use dancemoe::coordinator::CoordinatorConfig;
+use dancemoe::obs::comms::purpose_json;
+use dancemoe::obs::{ObsConfig, TransferPurpose, NUM_PURPOSES};
+use dancemoe::placement::uniform;
+use dancemoe::serve::{Gateway, GatewayConfig, GatewayReport};
+use dancemoe::util::bench::Bencher;
+use dancemoe::util::json::Json;
+
+/// The canonical scenario: 4-layer mixtral on the 3-server edge preset,
+/// home routing, uniform start, online stats only (480 virtual seconds,
+/// refresh every 60 s, seed 23 — migration adoption on this exact run
+/// is asserted by `online_migration_converges_to_offline_seeding`).
+fn scenario(migrate: bool, traced: bool) -> GatewayReport {
+    let mut m = ModelConfig::mixtral_8x7b_sim();
+    m.num_layers = 4;
+    let c = ClusterConfig::edge_testbed_3_for(&m);
+    let w = WorkloadConfig::bigbench(5.0);
+    let mut gw = Gateway::new(
+        &m,
+        &c,
+        &w,
+        uniform::place(&m, &c),
+        GatewayConfig {
+            horizon_s: 480.0,
+            locality_routing: false,
+            seed: 23,
+            ..GatewayConfig::default()
+        },
+        CoordinatorConfig {
+            interval_s: 60.0,
+            migrate,
+            seed: 23,
+            ..CoordinatorConfig::default()
+        },
+    );
+    if traced {
+        gw.enable_obs(ObsConfig::default());
+    }
+    gw.run()
+}
+
+/// Remote request bytes: what a better placement avoids.
+fn remote_bytes(r: &GatewayReport) -> f64 {
+    r.comms.purpose_bytes[TransferPurpose::ExpertCall.index()]
+        + r.comms.purpose_bytes[TransferPurpose::ResultReturn.index()]
+}
+
+/// One run's byte metrics (deterministic: no timings).
+fn run_metrics(r: &GatewayReport) -> Json {
+    Json::from_pairs(vec![
+        ("net_bytes", Json::Num(r.comms.total_bytes)),
+        ("purposes", purpose_json(&r.comms.purpose_bytes)),
+        ("pcie_copy_bytes", Json::Num(r.comms.pcie_copy_bytes)),
+        ("links", Json::Num(r.comms.links.len() as f64)),
+        ("migrations", Json::Num(r.migrations as f64)),
+        ("p95_s", Json::Num(r.latency_percentile(0.95))),
+        ("ledger", r.comms.ledger.json()),
+    ])
+}
+
+fn main() {
+    let mut b = Bencher::new("comms");
+    let mut migrated = None;
+    b.run_once("migrating gateway run (480 s, traced)", || {
+        migrated = Some(scenario(true, true));
+    });
+    let mut fixed = None;
+    b.run_once("fixed-placement gateway run (480 s)", || {
+        fixed = Some(scenario(false, false));
+    });
+    let migrated = migrated.expect("migrating run executed");
+    let fixed = fixed.expect("fixed run executed");
+
+    // ---- guard (a): attribution exactness ------------------------------
+    // Re-summing the link matrix in flat traversal order reproduces the
+    // single purpose-keyed store's totals bit for bit (skipped all-zero
+    // links add exactly 0.0).
+    for (label, r) in [("migrating", &migrated), ("fixed", &fixed)] {
+        let mut total = 0.0f64;
+        let mut per_purpose = [0.0f64; NUM_PURPOSES];
+        for (_, _, by) in &r.comms.links {
+            for (p, bytes) in by.iter().enumerate() {
+                total += bytes;
+                per_purpose[p] += bytes;
+            }
+        }
+        if total != r.comms.total_bytes || per_purpose != r.comms.purpose_bytes
+        {
+            eprintln!(
+                "comms bench FAILED: {label} run attribution is inexact \
+                 (links sum {total} vs total {}, purposes {per_purpose:?} \
+                 vs {:?})",
+                r.comms.total_bytes, r.comms.purpose_bytes,
+            );
+            std::process::exit(1);
+        }
+    }
+
+    // ---- guard (b): migration nets positive bytes saved ----------------
+    let saved = remote_bytes(&fixed) - remote_bytes(&migrated);
+    println!(
+        "  remote request bytes: fixed {:.2} MB vs migrating {:.2} MB \
+         ({:.2} MB saved, {} migrations, {:.2} MB staged over PCIe)",
+        remote_bytes(&fixed) / 1e6,
+        remote_bytes(&migrated) / 1e6,
+        saved / 1e6,
+        migrated.migrations,
+        migrated.comms.pcie_copy_bytes / 1e6,
+    );
+    if migrated.migrations == 0 || saved <= 0.0 {
+        eprintln!(
+            "comms bench FAILED: migration must net positive remote bytes \
+             saved ({} migrations, {saved} bytes saved)",
+            migrated.migrations,
+        );
+        std::process::exit(1);
+    }
+
+    let out = std::path::Path::new("BENCH_comms.json");
+    Json::from_pairs(vec![
+        (
+            "scenario",
+            Json::Str(
+                "mixtral-4l edge3 bigbench 480s interval 60s seed 23".into(),
+            ),
+        ),
+        ("migrating", run_metrics(&migrated)),
+        ("fixed", run_metrics(&fixed)),
+        ("remote_bytes_saved", Json::Num(saved)),
+    ])
+    .write_file(out)
+    .expect("write BENCH_comms.json");
+    println!("  wrote {}", out.display());
+}

@@ -150,6 +150,10 @@ impl AutoscaleLog {
         Json::from_pairs(vec![
             ("t_s", Json::Num(self.t_s)),
             ("kind", Json::Str("autoscale".into())),
+            (
+                "schema",
+                Json::Num(crate::obs::comms::OBS_SCHEMA_VERSION as f64),
+            ),
             ("hot_layer", Json::Num(self.hot_layer as f64)),
             ("hot_expert", Json::Num(self.hot_expert as f64)),
             ("hot_load_tps", Json::Num(self.hot_load_tps)),

@@ -113,6 +113,12 @@ impl RegionTopology {
         &self.regions[region].servers
     }
 
+    /// Region name, for comms-matrix labels and report rows (regions are
+    /// addressed by dense index everywhere else).
+    pub fn region_name(&self, region: usize) -> &str {
+        &self.regions[region].name
+    }
+
     /// Extra one-way latency from region `a` to region `b` (0 within a
     /// region).
     pub fn extra_latency(&self, a: usize, b: usize) -> f64 {

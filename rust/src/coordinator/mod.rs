@@ -110,6 +110,10 @@ impl IntervalLog {
         let mut j = Json::from_pairs(vec![
             ("t_s", Json::Num(self.t_s)),
             ("kind", Json::Str("interval".into())),
+            (
+                "schema",
+                Json::Num(crate::obs::comms::OBS_SCHEMA_VERSION as f64),
+            ),
             ("remote_penalty_s", Json::Num(self.remote_penalty_s)),
             ("observed_tokens", Json::Num(self.observed_tokens)),
             ("slo_pressure", Json::Num(self.slo_pressure)),

@@ -1,6 +1,7 @@
 //! Serving metrics: per-request latency, per-server aggregates, and the
 //! time-bucketed local-compute-ratio series behind Figs. 6 and 7.
 
+use crate::obs::comms::NUM_PURPOSES;
 use crate::util::stats::{mean, Online};
 
 /// One completed request's record.
@@ -57,6 +58,12 @@ pub struct ServeReport {
     pub makespan_s: f64,
     /// total activation bytes that crossed the network
     pub net_bytes: f64,
+    /// network bytes attributed per [`TransferPurpose`] (same order as
+    /// `TransferPurpose::ALL`; sums exactly to `net_bytes`)
+    pub net_purpose_bytes: [f64; NUM_PURPOSES],
+    /// expert-weight bytes staged over PCIe by migrations + scale-outs
+    /// (host→device loads — never crosses the request network)
+    pub pcie_copy_bytes: f64,
     /// per-(server) GPU busy seconds (utilization accounting)
     pub gpu_busy_s: Vec<f64>,
     /// migrations adopted during the run (time, moved replicas, t_mig)
@@ -72,6 +79,8 @@ impl ServeReport {
             timeline: Vec::new(),
             makespan_s: 0.0,
             net_bytes: 0.0,
+            net_purpose_bytes: [0.0; NUM_PURPOSES],
+            pcie_copy_bytes: 0.0,
             gpu_busy_s: vec![0.0; num_servers],
             migrations: Vec::new(),
         }

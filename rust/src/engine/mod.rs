@@ -55,7 +55,7 @@ use crate::cluster::Cluster;
 use crate::config::{ClusterConfig, ModelConfig, TaskKind, WorkloadConfig};
 use crate::moe::ActivationStats;
 use crate::net::NetModel;
-use crate::obs::{Obs, SpanKind};
+use crate::obs::{Obs, SpanKind, TransferPurpose};
 use crate::placement::{dancemoe_place, Placement};
 use crate::trace::{GateScratch, Request, TaskProfile, Trace, TraceGenerator};
 use crate::util::rng::Rng;
@@ -458,6 +458,8 @@ impl Engine {
             *per_gpu.entry((*s, *g)).or_insert(0) += 1;
         }
         let mut t_mig_total = 0.0;
+        self.report.pcie_copy_bytes +=
+            moved as f64 * self.model.expert_bytes as f64;
         for ((s, g), n) in per_gpu {
             let pcie = self.cluster.servers[s].gpus[g].pcie_bps;
             let dur = n as f64 * self.model.expert_bytes as f64 / pcie;
@@ -514,18 +516,28 @@ impl Engine {
         let now = self.now;
         let bytes = self.model.expert_bytes as f64;
         let ready = if src_server != dst_server {
-            self.net.book_transfer(
+            let r = self.net.book_transfer(
                 src_server,
                 dst_server,
                 bytes,
                 now,
                 self.cost.remote_fixed_s,
-            )
+                TransferPurpose::ScaleOutCopy,
+            );
+            self.obs.on_transfer(
+                TransferPurpose::ScaleOutCopy,
+                None,
+                layer,
+                expert,
+                bytes,
+            );
+            r
         } else {
             now
         };
         let pcie = self.cluster.servers[dst_server].gpus[dst_gpu].pcie_bps;
         let dur = self.model.expert_bytes as f64 / pcie;
+        self.report.pcie_copy_bytes += bytes;
         let (_, end) = self.cluster.book(dst_server, dst_gpu, ready, dur);
         self.scale_outs_pending += 1;
         self.push_event(
@@ -581,6 +593,7 @@ impl Engine {
     /// Flush accounting into the report (also used after segmented runs).
     pub fn finalize(&mut self) {
         self.report.net_bytes = self.net.total_bytes();
+        self.report.net_purpose_bytes = self.net.purpose_totals();
         for (s, srv) in self.cluster.servers.iter().enumerate() {
             self.report.gpu_busy_s[s] =
                 srv.gpus.iter().map(|g| g.busy_s).sum();
@@ -765,7 +778,21 @@ impl Engine {
                 let bytes = inv.tokens * self.model.token_bytes as f64;
                 self.reqs[r].invs[i].t0 = now;
                 let fx = self.cost.remote_fixed_s / 2.0;
-                let t = self.net.book_transfer(exec, inv.server, bytes, now, fx);
+                let t = self.net.book_transfer(
+                    exec,
+                    inv.server,
+                    bytes,
+                    now,
+                    fx,
+                    TransferPurpose::ExpertCall,
+                );
+                self.obs.on_transfer(
+                    TransferPurpose::ExpertCall,
+                    Some(self.reqs[r].req.tenant),
+                    layer,
+                    inv.expert,
+                    bytes,
+                );
                 self.obs
                     .span_net(SpanKind::NetSend, r, layer, inv.expert, exec, now, t);
                 self.push_event(t, Ev::SendDone(r, i));
@@ -906,7 +933,21 @@ impl Engine {
             let bytes = inv.tokens * self.model.token_bytes as f64;
             let fx = self.cost.remote_fixed_s / 2.0;
             let now = self.now;
-            let t = self.net.book_transfer(inv.server, exec, bytes, now, fx);
+            let t = self.net.book_transfer(
+                inv.server,
+                exec,
+                bytes,
+                now,
+                fx,
+                TransferPurpose::ResultReturn,
+            );
+            self.obs.on_transfer(
+                TransferPurpose::ResultReturn,
+                Some(self.reqs[r].req.tenant),
+                layer,
+                inv.expert,
+                bytes,
+            );
             self.obs.span_net(
                 SpanKind::NetReturn,
                 r,

@@ -34,6 +34,7 @@ use crate::engine::{
 };
 use crate::moe::ActivationStats;
 use crate::net::NetModel;
+use crate::obs::TransferPurpose;
 use crate::placement::Placement;
 use crate::trace::{Request, TaskProfile, Trace};
 use crate::util::rng::Rng;
@@ -410,6 +411,7 @@ impl RefEngine {
                 bytes,
                 now,
                 self.cost.remote_fixed_s,
+                TransferPurpose::ScaleOutCopy,
             )
         } else {
             now
@@ -600,7 +602,14 @@ impl RefEngine {
                 let bytes = inv.tokens * self.model.token_bytes as f64;
                 self.reqs[r].invs[i].t0 = now;
                 let fx = self.cost.remote_fixed_s / 2.0;
-                let t = self.net.book_transfer(exec, inv.server, bytes, now, fx);
+                let t = self.net.book_transfer(
+                    exec,
+                    inv.server,
+                    bytes,
+                    now,
+                    fx,
+                    TransferPurpose::ExpertCall,
+                );
                 self.push_event(t, Ev::SendDone(r, i));
             } else {
                 self.book_expert_compute(r, i, now);
@@ -720,7 +729,14 @@ impl RefEngine {
             let exec = self.reqs[r].exec_server;
             let bytes = inv.tokens * self.model.token_bytes as f64;
             let fx = self.cost.remote_fixed_s / 2.0;
-            let t = self.net.book_transfer(inv.server, exec, bytes, self.now, fx);
+            let t = self.net.book_transfer(
+                inv.server,
+                exec,
+                bytes,
+                self.now,
+                fx,
+                TransferPurpose::ResultReturn,
+            );
             self.push_event(t, Ev::ReturnDone(r, i));
         } else {
             self.on_invocation_complete(r, i);

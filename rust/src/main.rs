@@ -12,12 +12,12 @@ use dancemoe::config::{presets, ClusterConfig, ModelConfig, WorkloadConfig};
 use dancemoe::coordinator::CoordinatorConfig;
 use dancemoe::engine::{warm_stats, ScaleKind};
 use dancemoe::exp::runner::RunSpec;
-use dancemoe::obs::{DecompReport, ObsConfig};
+use dancemoe::obs::{DecompReport, ObsConfig, TransferPurpose};
 use dancemoe::placement::{objective, uniform, PlacementAlgo};
 use dancemoe::runtime::{calibrate, forward, weights, Runtime};
 use dancemoe::serve::{
-    ArrivalProfile, Gateway, GatewayConfig, RegionsScenario, TenantReport,
-    TenantSet,
+    ArrivalProfile, Gateway, GatewayConfig, GatewayReport, RegionsScenario,
+    TenantReport, TenantSet,
 };
 use dancemoe::util::cli::{Args, Cli, Command};
 use dancemoe::util::table::Table;
@@ -60,6 +60,8 @@ fn cli() -> Cli {
                 .flag("seed", Some("0"), "rng seed")
                 .switch("no-migrate", "disable live migration")
                 .switch("home-routing", "disable locality-aware routing")
+                .switch("comms", "print the purpose-attributed byte matrix \
+                         and decision payback ledger")
                 .switch("trace", "record spans and print the latency decomposition")
                 .opt_flag("trace-out", "write Chrome trace-event JSON here \
                            (implies --trace; open in Perfetto)")
@@ -89,6 +91,8 @@ fn cli() -> Cli {
                        bounds either way)")
                 .flag("seed", Some("0"), "rng seed")
                 .switch("no-baseline", "skip the fixed-placement comparison run")
+                .switch("comms", "print the purpose-attributed byte matrix \
+                         and decision payback ledger")
                 .switch("trace", "record spans and print the latency decomposition")
                 .opt_flag("trace-out", "write Chrome trace-event JSON here \
                            (implies --trace; open in Perfetto)")
@@ -112,6 +116,8 @@ fn cli() -> Cli {
                 .switch("no-migrate", "disable live migration")
                 .switch("autoscale", "run the SLO-boosted replica autoscaler too")
                 .switch("no-baseline", "skip the shared-queue comparison run")
+                .switch("comms", "print the purpose-attributed byte matrix \
+                         and decision payback ledger")
                 .switch("trace", "record spans and print the latency decomposition")
                 .opt_flag("trace-out", "write Chrome trace-event JSON here \
                            (implies --trace; open in Perfetto)")
@@ -144,6 +150,8 @@ fn cli() -> Cli {
                 .switch("autoscale", "run the replica autoscaler in every region")
                 .switch("no-baseline", "skip the isolated and single-global-gateway \
                          comparison runs")
+                .switch("comms", "print per-region byte matrices, the \
+                         inter-region mesh, and decision payback ledgers")
                 .switch("trace", "record spans and print the latency decomposition")
                 .opt_flag("trace-out", "write one Chrome trace-event JSON over \
                            every region here (implies --trace)")
@@ -385,6 +393,156 @@ fn print_decomp(decomp: &Option<DecompReport>) {
     }
 }
 
+/// One visible line per observability data-loss counter — silent loss is
+/// exactly the failure mode these counters exist to surface.
+fn warn_obs_drops(dropped: u64, dumps_dropped: u64) {
+    if dropped > 0 {
+        println!(
+            "WARNING: tracing ring dropped {dropped} spans — \
+             trace-derived reports (decomposition, comms slices) \
+             undercount this run"
+        );
+    }
+    if dumps_dropped > 0 {
+        println!(
+            "WARNING: {dumps_dropped} flight-recorder dumps discarded \
+             after the dump cap filled — later breaches left no snapshot"
+        );
+    }
+}
+
+/// Render a gateway's communication-cost account: the purpose-tagged
+/// byte totals, the per-link matrix, and — when tracing was enabled —
+/// the traced tenant/expert slices plus the decision payback ledger.
+fn print_comms(report: &GatewayReport, server_names: &[String]) {
+    let comms = &report.comms;
+    let name = |s: usize| {
+        server_names
+            .get(s)
+            .cloned()
+            .unwrap_or_else(|| format!("s{s}"))
+    };
+    let mut t = Table::new(
+        "communication cost by purpose (request network)",
+        &["purpose", "bytes (MB)", "share"],
+    );
+    for p in TransferPurpose::ALL {
+        let b = comms.purpose_bytes[p.index()];
+        let share = if comms.total_bytes > 0.0 {
+            b / comms.total_bytes
+        } else {
+            0.0
+        };
+        t.row(vec![
+            p.name().into(),
+            format!("{:.2}", b / 1e6),
+            format!("{:.1}%", 100.0 * share),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "network total {:.2} MB   staged PCIe copies {:.2} MB \
+         (migration + scale-out weights move over PCIe, not the \
+         request network)",
+        comms.total_bytes / 1e6,
+        comms.pcie_copy_bytes / 1e6,
+    );
+    if !comms.links.is_empty() {
+        let mut lt = Table::new(
+            "per-link attributed bytes (MB)",
+            &["link", "expert call", "result", "scale-out", "spill",
+              "total"],
+        );
+        for (src, dst, by) in &comms.links {
+            let total: f64 = by.iter().sum();
+            lt.row(vec![
+                format!("{} → {}", name(*src), name(*dst)),
+                format!(
+                    "{:.2}",
+                    by[TransferPurpose::ExpertCall.index()] / 1e6
+                ),
+                format!(
+                    "{:.2}",
+                    by[TransferPurpose::ResultReturn.index()] / 1e6
+                ),
+                format!(
+                    "{:.2}",
+                    by[TransferPurpose::ScaleOutCopy.index()] / 1e6
+                ),
+                format!(
+                    "{:.2}",
+                    by[TransferPurpose::RegionSpill.index()] / 1e6
+                ),
+                format!("{:.2}", total / 1e6),
+            ]);
+        }
+        println!("{}", lt.render());
+    }
+    if !comms.account.is_empty() {
+        for (i, by) in comms.account.per_tenant.iter().enumerate() {
+            let label = report
+                .tenants
+                .get(i)
+                .map(|t| t.name.clone())
+                .unwrap_or_else(|| format!("tenant {i}"));
+            println!(
+                "traced   {:<12} expert calls {:.2} MB   results {:.2} MB",
+                label,
+                by[TransferPurpose::ExpertCall.index()] / 1e6,
+                by[TransferPurpose::ResultReturn.index()] / 1e6,
+            );
+        }
+        let top = comms.account.top_experts(5);
+        if !top.is_empty() {
+            let items: Vec<String> = top
+                .iter()
+                .map(|(l, e, b)| format!("l{l}e{e} {:.2} MB", b / 1e6))
+                .collect();
+            println!(
+                "traced   hottest experts by attributed bytes: {}",
+                items.join("   ")
+            );
+        }
+    }
+    let ledger = &comms.ledger;
+    if !ledger.decisions.is_empty() {
+        let mean = match ledger.mean_payback_s() {
+            Some(m) => format!("{m:.0}s mean payback"),
+            None => "no decision paid back yet".into(),
+        };
+        println!(
+            "payback  {} decisions   {} paid   {} unpaid   {}",
+            ledger.decisions.len(),
+            ledger.paid_count(),
+            ledger.unpaid_count(),
+            mean,
+        );
+        for d in &ledger.decisions {
+            let status = match d.payback_s() {
+                Some(dt) => format!("paid back in {dt:.0}s"),
+                None => format!(
+                    "UNPAID ({:.0}% credited{})",
+                    if d.cost_bytes > 0.0 {
+                        100.0 * d.credited_bytes / d.cost_bytes
+                    } else {
+                        100.0
+                    },
+                    if d.dumped { ", flight dump fired" } else { "" },
+                ),
+            };
+            println!(
+                "         #{:<3} t={:>6.1}s  {:<10} {:<22} cost {:.2} MB  \
+                 {status}",
+                d.id,
+                d.t_s,
+                d.kind.name(),
+                d.detail,
+                d.cost_bytes / 1e6,
+            );
+        }
+    }
+}
+
 fn cmd_gateway(args: &Args) -> Result<(), String> {
     let (model, cluster, workload, rps) = online_setup(args)?;
     let profile = ArrivalProfile::from_name(&args.get_str("profile"))
@@ -501,6 +659,12 @@ fn cmd_gateway(args: &Args) -> Result<(), String> {
         );
     }
     print_decomp(&report.decomp);
+    if args.switch("comms") {
+        let names: Vec<String> =
+            cluster.servers.iter().map(|s| s.name.clone()).collect();
+        print_comms(&report, &names);
+    }
+    warn_obs_drops(report.obs_dropped, report.flight_dumps_dropped);
     write_obs_files(
         args,
         || gw.trace_json(),
@@ -661,6 +825,12 @@ fn cmd_autoscale(args: &Args) -> Result<(), String> {
         report.scale_ins,
     );
     print_decomp(&report.decomp);
+    if args.switch("comms") {
+        let names: Vec<String> =
+            cluster.servers.iter().map(|s| s.name.clone()).collect();
+        print_comms(&report, &names);
+    }
+    warn_obs_drops(report.obs_dropped, report.flight_dumps_dropped);
     write_obs_files(
         args,
         || gw.trace_json(),
@@ -843,6 +1013,12 @@ fn cmd_tenants(args: &Args) -> Result<(), String> {
         max_pressure,
     );
     print_decomp(&report.decomp);
+    if args.switch("comms") {
+        let names: Vec<String> =
+            cluster.servers.iter().map(|s| s.name.clone()).collect();
+        print_comms(&report, &names);
+    }
+    warn_obs_drops(report.obs_dropped, report.flight_dumps_dropped);
     write_obs_files(
         args,
         || gw.trace_json(),
@@ -984,6 +1160,34 @@ fn cmd_regions(args: &Args) -> Result<(), String> {
             print_decomp(&region.gateway.decomp);
         }
     }
+    if args.switch("comms") {
+        for region in &report.regions {
+            println!("-- {}", region.name);
+            print_comms(&region.gateway, &[]);
+        }
+        if !report.mesh_links.is_empty() {
+            let mut mt = Table::new(
+                "inter-region mesh (spill forwards)",
+                &["link", "bytes (MB)"],
+            );
+            let rname = |r: usize| {
+                report
+                    .regions
+                    .get(r)
+                    .map(|x| x.name.clone())
+                    .unwrap_or_else(|| format!("region{r}"))
+            };
+            for (src, dst, by) in &report.mesh_links {
+                mt.row(vec![
+                    format!("{} → {}", rname(*src), rname(*dst)),
+                    format!("{:.2}", by.iter().sum::<f64>() / 1e6),
+                ]);
+            }
+            println!("{}", mt.render());
+            println!("mesh total {:.2} MB", report.mesh_bytes / 1e6);
+        }
+    }
+    warn_obs_drops(report.obs_dropped, report.flight_dumps_dropped);
     write_obs_files(
         args,
         || multi.trace_json(),

@@ -9,6 +9,7 @@
 
 use crate::cluster::topology::RegionTopology;
 use crate::config::ClusterConfig;
+use crate::obs::comms::{TransferPurpose, NUM_PURPOSES};
 
 /// A directed link's state: bandwidth + busy-until timeline, plus the
 /// link's extra propagation latency (zero on flat networks; the
@@ -21,14 +22,20 @@ struct Link {
 }
 
 /// Cluster network with per-directed-link FIFO contention.
+///
+/// Byte accounting is keyed by (src, dst, [`TransferPurpose`]) — every
+/// booked byte carries exactly one purpose, so the purpose slices sum to
+/// [`NetModel::total_bytes`] by construction (the property suite locks
+/// that no call site bypasses the tag).
 #[derive(Debug, Clone)]
 pub struct NetModel {
     num_servers: usize,
     /// one-way latency (s)
     pub latency_s: f64,
     links: Vec<Link>, // [src * n + dst]
-    /// cumulative bytes sent per link (observability)
-    pub bytes_sent: Vec<f64>,
+    /// cumulative bytes per link and purpose:
+    /// `[(src * n + dst) * NUM_PURPOSES + purpose]`
+    purpose_bytes: Vec<f64>,
 }
 
 impl NetModel {
@@ -45,7 +52,7 @@ impl NetModel {
                     extra_latency_s: 0.0,
                 })
                 .collect(),
-            bytes_sent: vec![0.0; n * n],
+            purpose_bytes: vec![0.0; n * n * NUM_PURPOSES],
         }
     }
 
@@ -94,7 +101,7 @@ impl NetModel {
                     extra_latency_s: topo.extra_latency(i / r, i % r),
                 })
                 .collect(),
-            bytes_sent: vec![0.0; r * r],
+            purpose_bytes: vec![0.0; r * r * NUM_PURPOSES],
         }
     }
 
@@ -125,6 +132,7 @@ impl NetModel {
     /// completion time. The link serializes transfers (FIFO): the transfer
     /// begins at `max(ready_s, link.busy_until)`. `fixed_s` occupies the
     /// link like payload does (the staging pipeline is per-call).
+    /// `purpose` attributes the bytes in the (src, dst, purpose) matrix.
     pub fn book_transfer(
         &mut self,
         src: usize,
@@ -132,6 +140,7 @@ impl NetModel {
         bytes: f64,
         ready_s: f64,
         fixed_s: f64,
+        purpose: TransferPurpose,
     ) -> f64 {
         if src == dst {
             return ready_s;
@@ -140,7 +149,7 @@ impl NetModel {
         let start = ready_s.max(self.links[i].busy_until);
         let done = start + fixed_s + bytes / self.links[i].bytes_per_s;
         self.links[i].busy_until = done;
-        self.bytes_sent[i] += bytes;
+        self.purpose_bytes[i * NUM_PURPOSES + purpose.index()] += bytes;
         // propagation latency (base + any inter-region extra) is not
         // link-occupying
         done + self.latency_s + self.links[i].extra_latency_s
@@ -151,12 +160,56 @@ impl NetModel {
         for l in &mut self.links {
             l.busy_until = 0.0;
         }
-        self.bytes_sent.iter_mut().for_each(|b| *b = 0.0);
+        self.purpose_bytes.iter_mut().for_each(|b| *b = 0.0);
     }
 
     /// Total bytes that crossed the network.
     pub fn total_bytes(&self) -> f64 {
-        self.bytes_sent.iter().sum()
+        self.purpose_bytes.iter().sum()
+    }
+
+    /// Cumulative bytes sent on the directed link `src → dst`.
+    pub fn link_bytes(&self, src: usize, dst: usize) -> f64 {
+        let i = self.idx(src, dst) * NUM_PURPOSES;
+        self.purpose_bytes[i..i + NUM_PURPOSES].iter().sum()
+    }
+
+    /// Bytes of one purpose on the directed link `src → dst`.
+    pub fn link_purpose_bytes(
+        &self,
+        src: usize,
+        dst: usize,
+        purpose: TransferPurpose,
+    ) -> f64 {
+        self.purpose_bytes[self.idx(src, dst) * NUM_PURPOSES + purpose.index()]
+    }
+
+    /// Run-total bytes per purpose across all links.
+    pub fn purpose_totals(&self) -> [f64; NUM_PURPOSES] {
+        let mut out = [0.0; NUM_PURPOSES];
+        for (i, b) in self.purpose_bytes.iter().enumerate() {
+            out[i % NUM_PURPOSES] += b;
+        }
+        out
+    }
+
+    /// Per-purpose bytes of every non-empty link: (src, dst, slice).
+    pub fn nonzero_links(&self) -> Vec<(usize, usize, [f64; NUM_PURPOSES])> {
+        let n = self.num_servers;
+        let mut out = Vec::new();
+        for src in 0..n {
+            for dst in 0..n {
+                let i = (src * n + dst) * NUM_PURPOSES;
+                let slice: [f64; NUM_PURPOSES] = self.purpose_bytes
+                    [i..i + NUM_PURPOSES]
+                    .try_into()
+                    .unwrap();
+                if slice.iter().any(|&b| b > 0.0) {
+                    out.push((src, dst, slice));
+                }
+            }
+        }
+        out
     }
 
     pub fn num_servers(&self) -> usize {
@@ -186,26 +239,26 @@ mod tests {
     #[test]
     fn fifo_contention_serializes() {
         let mut n = net();
-        let t1 = n.book_transfer(0, 1, 62.5e6, 0.0, 0.0);
-        let t2 = n.book_transfer(0, 1, 62.5e6, 0.0, 0.0);
+        let t1 = n.book_transfer(0, 1, 62.5e6, 0.0, 0.0, TransferPurpose::ExpertCall);
+        let t2 = n.book_transfer(0, 1, 62.5e6, 0.0, 0.0, TransferPurpose::ExpertCall);
         assert!((t1 - 1.002).abs() < 1e-9);
         assert!((t2 - 2.002).abs() < 1e-9, "second transfer must queue");
         // opposite direction is a different link: no contention
-        let t3 = n.book_transfer(1, 0, 62.5e6, 0.0, 0.0);
+        let t3 = n.book_transfer(1, 0, 62.5e6, 0.0, 0.0, TransferPurpose::ExpertCall);
         assert!((t3 - 1.002).abs() < 1e-9);
     }
 
     #[test]
     fn ready_time_respected() {
         let mut n = net();
-        let t = n.book_transfer(0, 2, 6.25e6, 10.0, 0.0);
+        let t = n.book_transfer(0, 2, 6.25e6, 10.0, 0.0, TransferPurpose::ExpertCall);
         assert!((t - (10.0 + 0.1 + 0.002)).abs() < 1e-9);
     }
 
     #[test]
     fn local_transfer_free() {
         let mut n = net();
-        assert_eq!(n.book_transfer(2, 2, 1e12, 5.0, 0.0), 5.0);
+        assert_eq!(n.book_transfer(2, 2, 1e12, 5.0, 0.0, TransferPurpose::ExpertCall), 5.0);
         assert_eq!(n.total_bytes(), 0.0);
     }
 
@@ -228,7 +281,7 @@ mod tests {
         // cross-region: halved bandwidth (2 s payload) + 50 ms extra
         let cross = net.transfer_estimate_s(0, 1, 62.5e6, 0.0);
         assert!((cross - (2.0 + 0.002 + 0.05)).abs() < 1e-9, "{cross}");
-        let done = net.book_transfer(0, 1, 62.5e6, 0.0, 0.0);
+        let done = net.book_transfer(0, 1, 62.5e6, 0.0, 0.0, TransferPurpose::ExpertCall);
         assert!((done - (2.0 + 0.002 + 0.05)).abs() < 1e-9, "{done}");
         // a one-region topology degenerates to the flat network
         let single = NetModel::with_topology(
@@ -251,25 +304,66 @@ mod tests {
         let mut mesh = NetModel::inter_region(&topo, 200e6, 0.002);
         assert_eq!(mesh.num_servers(), 3);
         // 200 Mbps = 25 MB/s: a 1 MB forward takes 40 ms + 2 ms + 30 ms
-        let t1 = mesh.book_transfer(0, 1, 1e6, 0.0, 0.0);
+        let t1 = mesh.book_transfer(0, 1, 1e6, 0.0, 0.0, TransferPurpose::RegionSpill);
         assert!((t1 - (0.04 + 0.002 + 0.03)).abs() < 1e-9, "{t1}");
         // second forward on the same region pair queues behind the first
-        let t2 = mesh.book_transfer(0, 1, 1e6, 0.0, 0.0);
+        let t2 = mesh.book_transfer(0, 1, 1e6, 0.0, 0.0, TransferPurpose::RegionSpill);
         assert!((t2 - (0.08 + 0.002 + 0.03)).abs() < 1e-9, "{t2}");
         // a different pair is a different link
-        let t3 = mesh.book_transfer(1, 2, 1e6, 0.0, 0.0);
+        let t3 = mesh.book_transfer(1, 2, 1e6, 0.0, 0.0, TransferPurpose::RegionSpill);
         assert!((t3 - t1).abs() < 1e-12);
     }
 
     #[test]
     fn accounting_and_reset() {
         let mut n = net();
-        n.book_transfer(0, 1, 100.0, 0.0, 0.0);
-        n.book_transfer(2, 1, 50.0, 0.0, 0.0);
+        n.book_transfer(0, 1, 100.0, 0.0, 0.0, TransferPurpose::ExpertCall);
+        n.book_transfer(2, 1, 50.0, 0.0, 0.0, TransferPurpose::ExpertCall);
         assert_eq!(n.total_bytes(), 150.0);
         n.reset();
         assert_eq!(n.total_bytes(), 0.0);
-        let t = n.book_transfer(0, 1, 62.5e6, 0.0, 0.0);
+        let t = n.book_transfer(0, 1, 62.5e6, 0.0, 0.0, TransferPurpose::ExpertCall);
         assert!((t - 1.002).abs() < 1e-9);
+    }
+
+    #[test]
+    fn purpose_attribution_is_exact() {
+        let mut n = net();
+        n.book_transfer(0, 1, 100.0, 0.0, 0.0, TransferPurpose::ExpertCall);
+        n.book_transfer(0, 1, 40.0, 0.0, 0.0, TransferPurpose::ResultReturn);
+        n.book_transfer(0, 1, 7.0, 0.0, 0.0, TransferPurpose::ExpertCall);
+        n.book_transfer(1, 2, 9.0, 0.0, 0.0, TransferPurpose::ScaleOutCopy);
+        // per-link, per-purpose slices
+        assert_eq!(
+            n.link_purpose_bytes(0, 1, TransferPurpose::ExpertCall),
+            107.0
+        );
+        assert_eq!(
+            n.link_purpose_bytes(0, 1, TransferPurpose::ResultReturn),
+            40.0
+        );
+        assert_eq!(n.link_bytes(0, 1), 147.0);
+        assert_eq!(
+            n.link_purpose_bytes(1, 2, TransferPurpose::ScaleOutCopy),
+            9.0
+        );
+        // attributed bytes sum exactly to the run total
+        let totals = n.purpose_totals();
+        assert_eq!(totals[TransferPurpose::ExpertCall.index()], 107.0);
+        assert_eq!(totals[TransferPurpose::ScaleOutCopy.index()], 9.0);
+        assert_eq!(totals.iter().sum::<f64>(), n.total_bytes());
+        // nonzero_links covers exactly the two links that carried bytes
+        let links = n.nonzero_links();
+        assert_eq!(
+            links.iter().map(|(s, d, _)| (*s, *d)).collect::<Vec<_>>(),
+            vec![(0, 1), (1, 2)]
+        );
+        assert_eq!(
+            links
+                .iter()
+                .map(|(_, _, b)| b.iter().sum::<f64>())
+                .sum::<f64>(),
+            n.total_bytes()
+        );
     }
 }

@@ -214,3 +214,178 @@ fn emit(out: &mut Vec<Json>, pid_base: u32, ev: &SpanEvent) {
         }
     }
 }
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn part<'a>(
+        label: &str,
+        pid_base: u32,
+        obs: &'a Obs,
+        servers: usize,
+    ) -> ExportPart<'a> {
+        ExportPart {
+            label: label.into(),
+            pid_base,
+            obs,
+            server_names: (0..servers)
+                .map(|s| format!("server{}", s + 1))
+                .collect(),
+        }
+    }
+
+    fn events_of(doc: &Json) -> Vec<Json> {
+        match doc.get("traceEvents") {
+            Some(Json::Arr(v)) => v.clone(),
+            other => panic!("traceEvents must be an array, got {other:?}"),
+        }
+    }
+
+    fn ph(ev: &Json) -> String {
+        ev.get("ph")
+            .and_then(|v| v.as_str().map(str::to_string))
+            .expect("every event has a phase")
+    }
+
+    #[test]
+    fn empty_trace_exports_metadata_only() {
+        // a recorder that never saw a span still yields a well-formed,
+        // openable document: process/thread names, zero span events
+        let obs = Obs::new();
+        let doc = export(&[part("", 0, &obs, 2)]);
+        assert!(doc.get("displayTimeUnit").is_some());
+        let evs = events_of(&doc);
+        // 1 process_name + 3 synthetic thread lanes per server, no GPUs
+        assert_eq!(evs.len(), 2 * 4);
+        for e in &evs {
+            assert_eq!(ph(e), "M", "only metadata in an empty trace");
+        }
+    }
+
+    #[test]
+    fn spill_forward_without_delivery_keeps_open_arrow() {
+        // a forward whose delivery shed: the flow start ("s") is emitted
+        // with no matching finish ("f") — the arrow renders dangling at
+        // the origin instead of corrupting the document
+        let mut obs = Obs::new();
+        obs.events.push(SpanEvent {
+            t_s: 1.0,
+            dur_s: 0.5,
+            kind: SpanKind::SpillForward,
+            req: 3,
+            server: 0,
+            gpu: 0,
+            a: 7,
+            b: 1, // src region 0 → dst region 1
+        });
+        let doc = export(&[part("region0", 0, &obs, 1)]);
+        let evs = events_of(&doc);
+        let starts: Vec<&Json> =
+            evs.iter().filter(|e| ph(e) == "s").collect();
+        assert_eq!(starts.len(), 1, "one flow start per forward");
+        assert_eq!(
+            starts[0].get("id").and_then(|v| v.as_f64()),
+            Some(7.0),
+            "the arrow carries the forward's flow id"
+        );
+        assert!(
+            !evs.iter().any(|e| ph(e) == "f"),
+            "no delivery ⇒ no flow finish"
+        );
+        // the transfer span itself is still drawn on the net lane
+        let span = evs
+            .iter()
+            .find(|e| ph(e) == "X")
+            .expect("the forward books a complete span");
+        assert_eq!(
+            span.get("tid").and_then(|v| v.as_f64()),
+            Some(TID_NET as f64)
+        );
+        assert_eq!(
+            span.get("args")
+                .and_then(|a| a.get("dst_region"))
+                .and_then(|v| v.as_f64()),
+            Some(1.0)
+        );
+    }
+
+    #[test]
+    fn multi_region_pids_are_offset_and_stable() {
+        // two regional recorders exported together: every event of the
+        // second region lives at pid ≥ its pid_base (no lane collisions),
+        // and re-exporting serializes byte-identically
+        let mk = |server: u16| SpanEvent {
+            t_s: 2.0,
+            dur_s: 0.1,
+            kind: SpanKind::ExpertCompute,
+            req: 1,
+            server,
+            gpu: 1,
+            a: 0,
+            b: 4,
+        };
+        let mut obs_a = Obs::new();
+        obs_a.events.push(mk(0));
+        let mut obs_b = Obs::new();
+        obs_b.events.push(mk(1));
+        obs_b.events.push(SpanEvent {
+            t_s: 3.0,
+            dur_s: 0.0,
+            kind: SpanKind::SpillDeliver,
+            req: 2,
+            server: 0,
+            gpu: 0,
+            a: 9,
+            b: 1 << 16, // src region 1 → dst region 0
+        });
+        let run = || {
+            export(&[
+                part("region0", 0, &obs_a, 2),
+                part("region1", 100, &obs_b, 2),
+            ])
+            .to_string()
+        };
+        let first = run();
+        assert_eq!(first, run(), "same parts ⇒ byte-identical export");
+        let doc = export(&[
+            part("region0", 0, &obs_a, 2),
+            part("region1", 100, &obs_b, 2),
+        ]);
+        let evs = events_of(&doc);
+        // region1's span landed at its offset pid; region0's did not move
+        let pids: Vec<f64> = evs
+            .iter()
+            .filter(|e| ph(e) == "X")
+            .map(|e| e.get("pid").and_then(|v| v.as_f64()).unwrap())
+            .collect();
+        assert_eq!(pids, vec![0.0, 101.0]);
+        // the delivery's flow finish rides region1's net lane
+        let fin = evs
+            .iter()
+            .find(|e| ph(e) == "f")
+            .expect("delivery emits a flow finish");
+        assert_eq!(fin.get("pid").and_then(|v| v.as_f64()), Some(100.0));
+        assert_eq!(
+            fin.get("bp").and_then(|v| v.as_str().map(str::to_string)),
+            Some("e".into())
+        );
+        // both regions' processes are named with their region prefix
+        let names: Vec<String> = evs
+            .iter()
+            .filter(|e| {
+                ph(e) == "M"
+                    && e.get("name").and_then(|v| v.as_str())
+                        == Some("process_name")
+            })
+            .map(|e| {
+                e.get("args")
+                    .and_then(|a| a.get("name"))
+                    .and_then(|v| v.as_str().map(str::to_string))
+                    .unwrap()
+            })
+            .collect();
+        assert!(names.contains(&"region0/server1".to_string()));
+        assert!(names.contains(&"region1/server2".to_string()));
+    }
+}

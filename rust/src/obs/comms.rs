@@ -1,0 +1,501 @@
+//! Communication-cost accounting and the decision payback ledger.
+//!
+//! PR 6 decomposed every nanosecond of latency; this module does the same
+//! for every byte. Three pieces:
+//!
+//! 1. [`TransferPurpose`] — the taxonomy every transfer entering
+//!    [`crate::net::NetModel`] (including the inter-region mesh) is tagged
+//!    with. The net model keys its byte matrix by (src, dst, purpose), so
+//!    attributed bytes sum to `total_bytes()` *by construction* — the
+//!    property suite locks that no call site can bypass the tag.
+//! 2. [`CommsAccount`] — opt-in per-tenant and per-expert byte slices,
+//!    recorded by the engine at the call sites where it knows the tenant
+//!    and expert (the always-on net matrix only knows endpoints).
+//! 3. [`PaybackLedger`] — every scale operation and migration adoption
+//!    opens a [`DecisionRecord`] with its copy-byte/latency cost, then
+//!    accrues credited savings (remote bytes avoided) from subsequent
+//!    windows until the copy cost is paid back — or never is, which the
+//!    serving layer turns into a flight-recorder dump.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+/// Version stamped on every metrics JSONL row (`schema` field). Bump when
+/// a row type changes shape; `docs/OBS_SCHEMA.md` documents each version.
+pub const OBS_SCHEMA_VERSION: u32 = 2;
+
+/// Why a transfer crossed the network. Every byte booked on a
+/// [`crate::net::NetModel`] carries exactly one purpose.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TransferPurpose {
+    /// Activations shipped to a remote expert replica (request path).
+    ExpertCall,
+    /// Expert outputs returned to the executing server (request path).
+    ResultReturn,
+    /// Expert weights copied by an adopted migration. Today's migration
+    /// path stages weights over PCIe only (host RAM already holds them),
+    /// so this purpose is zero on the request network — it exists so a
+    /// future cross-region migration planner books against it, and the
+    /// payback ledger prices migration PCIe copies under this label.
+    MigrationCopy,
+    /// Expert weights streamed to a scale-out replica target.
+    ScaleOutCopy,
+    /// A whole request forwarded to a peer region (cross-region spill).
+    RegionSpill,
+}
+
+/// Number of [`TransferPurpose`] variants (stride of per-link slices).
+pub const NUM_PURPOSES: usize = 5;
+
+impl TransferPurpose {
+    pub const ALL: [TransferPurpose; NUM_PURPOSES] = [
+        TransferPurpose::ExpertCall,
+        TransferPurpose::ResultReturn,
+        TransferPurpose::MigrationCopy,
+        TransferPurpose::ScaleOutCopy,
+        TransferPurpose::RegionSpill,
+    ];
+
+    #[inline]
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    /// Stable snake_case label used in JSON artifacts and CLI tables.
+    pub fn name(self) -> &'static str {
+        match self {
+            TransferPurpose::ExpertCall => "expert_call",
+            TransferPurpose::ResultReturn => "result_return",
+            TransferPurpose::MigrationCopy => "migration_copy",
+            TransferPurpose::ScaleOutCopy => "scaleout_copy",
+            TransferPurpose::RegionSpill => "region_spill",
+        }
+    }
+}
+
+/// Purpose-keyed byte totals as a JSON object (`expert_call: …`, …).
+pub fn purpose_json(bytes: &[f64; NUM_PURPOSES]) -> Json {
+    let mut o = Json::obj();
+    for p in TransferPurpose::ALL {
+        o.set(p.name(), Json::Num(bytes[p.index()]));
+    }
+    o
+}
+
+/// Opt-in per-tenant / per-expert byte attribution. The engine records
+/// into this only when the observability layer is enabled; the always-on
+/// (src, dst, purpose) matrix lives in [`crate::net::NetModel`].
+#[derive(Debug, Clone, Default)]
+pub struct CommsAccount {
+    /// bytes per purpose, indexed by tenant id (grown on demand)
+    pub per_tenant: Vec<[f64; NUM_PURPOSES]>,
+    /// bytes per purpose keyed by (layer, expert)
+    pub per_expert: BTreeMap<(usize, usize), [f64; NUM_PURPOSES]>,
+}
+
+impl CommsAccount {
+    /// Attribute `bytes` of `purpose` traffic to a tenant.
+    pub fn add_tenant(
+        &mut self,
+        purpose: TransferPurpose,
+        tenant: usize,
+        bytes: f64,
+    ) {
+        if tenant >= self.per_tenant.len() {
+            self.per_tenant.resize(tenant + 1, [0.0; NUM_PURPOSES]);
+        }
+        self.per_tenant[tenant][purpose.index()] += bytes;
+    }
+
+    /// Attribute `bytes` of `purpose` traffic to an expert.
+    pub fn add_expert(
+        &mut self,
+        purpose: TransferPurpose,
+        layer: usize,
+        expert: usize,
+        bytes: f64,
+    ) {
+        self.per_expert.entry((layer, expert)).or_default()[purpose.index()] +=
+            bytes;
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.per_tenant.is_empty() && self.per_expert.is_empty()
+    }
+
+    /// Experts ranked by total attributed bytes, heaviest first.
+    pub fn top_experts(&self, k: usize) -> Vec<(usize, usize, f64)> {
+        let mut v: Vec<(usize, usize, f64)> = self
+            .per_expert
+            .iter()
+            .map(|(&(l, e), b)| (l, e, b.iter().sum()))
+            .collect();
+        // BTreeMap iteration is already (layer, expert)-ordered, so the
+        // sort below is deterministic under equal byte totals
+        v.sort_by(|a, b| b.2.total_cmp(&a.2));
+        v.truncate(k);
+        v
+    }
+
+    pub fn json(&self) -> Json {
+        let mut o = Json::obj();
+        let mut tenants = Json::obj();
+        for (t, b) in self.per_tenant.iter().enumerate() {
+            tenants.set(&format!("tenant_{t}"), purpose_json(b));
+        }
+        o.set("per_tenant", tenants);
+        let mut experts = Json::obj();
+        for ((l, e), b) in &self.per_expert {
+            experts.set(&format!("l{l}e{e}"), purpose_json(b));
+        }
+        o.set("per_expert", experts);
+        o
+    }
+}
+
+/// What kind of control decision a payback record tracks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DecisionKind {
+    ScaleOut,
+    ScaleIn,
+    Migration,
+}
+
+impl DecisionKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            DecisionKind::ScaleOut => "scale_out",
+            DecisionKind::ScaleIn => "scale_in",
+            DecisionKind::Migration => "migration",
+        }
+    }
+}
+
+/// One control decision's cost and accrued savings. Opened when the
+/// decision applies; credited each metrics window until paid.
+#[derive(Debug, Clone)]
+pub struct DecisionRecord {
+    pub id: usize,
+    /// Virtual time the decision applied.
+    pub t_s: f64,
+    pub kind: DecisionKind,
+    /// Human-readable target, e.g. `l2e5 -> s1g0` or `3 replicas`.
+    pub detail: String,
+    /// Copy bytes paid up front (network and/or PCIe staging).
+    pub cost_bytes: f64,
+    /// Copy latency paid up front (link + PCIe occupancy).
+    pub cost_s: f64,
+    /// Remote bytes avoided so far, accrued from subsequent windows.
+    pub credited_bytes: f64,
+    /// Virtual time the credited savings first covered the cost.
+    pub paid_at_s: Option<f64>,
+    /// An unpaid-decision flight dump already fired for this record.
+    pub dumped: bool,
+    /// Crediting anchors (scale ops): target replica and the activation
+    /// mass observed at the anchor when the decision opened.
+    pub layer: usize,
+    pub expert: usize,
+    pub server: usize,
+    pub baseline: f64,
+}
+
+impl DecisionRecord {
+    pub fn paid(&self) -> bool {
+        self.paid_at_s.is_some()
+    }
+
+    /// Payback time (s after the decision applied), when paid.
+    pub fn payback_s(&self) -> Option<f64> {
+        self.paid_at_s.map(|t| t - self.t_s)
+    }
+
+    /// A `kind: "decision"` metrics JSONL row. `event` is `open`
+    /// (decision applied), `paid` (cost covered) or `unpaid`
+    /// (patience expired — the flight-dump trigger).
+    pub fn to_row(&self, t_s: f64, event: &str) -> Json {
+        Json::from_pairs(vec![
+            ("t_s", Json::Num(t_s)),
+            ("kind", Json::Str("decision".into())),
+            ("schema", Json::Num(OBS_SCHEMA_VERSION as f64)),
+            ("event", Json::Str(event.into())),
+            ("decision_id", Json::Num(self.id as f64)),
+            ("decision", Json::Str(self.kind.name().into())),
+            ("detail", Json::Str(self.detail.clone())),
+            ("applied_t_s", Json::Num(self.t_s)),
+            ("cost_bytes", Json::Num(self.cost_bytes)),
+            ("cost_s", Json::Num(self.cost_s)),
+            ("credited_bytes", Json::Num(self.credited_bytes)),
+            (
+                "paid_at_s",
+                match self.paid_at_s {
+                    Some(t) => Json::Num(t),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+}
+
+/// The run's decision history: costs paid, savings accrued, payback
+/// status. Owned by the serving layer; windows feed credits in.
+#[derive(Debug, Clone, Default)]
+pub struct PaybackLedger {
+    pub decisions: Vec<DecisionRecord>,
+}
+
+impl PaybackLedger {
+    /// Open a record for a decision that just applied; returns its id.
+    /// Zero-cost decisions (scale-in frees memory, pays nothing) are
+    /// marked paid immediately.
+    #[allow(clippy::too_many_arguments)]
+    pub fn open(
+        &mut self,
+        t_s: f64,
+        kind: DecisionKind,
+        detail: String,
+        cost_bytes: f64,
+        cost_s: f64,
+        anchor: (usize, usize, usize),
+        baseline: f64,
+    ) -> usize {
+        let id = self.decisions.len();
+        self.decisions.push(DecisionRecord {
+            id,
+            t_s,
+            kind,
+            detail,
+            cost_bytes,
+            cost_s,
+            credited_bytes: 0.0,
+            paid_at_s: if cost_bytes <= 0.0 { Some(t_s) } else { None },
+            dumped: false,
+            layer: anchor.0,
+            expert: anchor.1,
+            server: anchor.2,
+            baseline,
+        });
+        id
+    }
+
+    /// Accrue `bytes` of savings to decision `id` at time `now`.
+    /// Returns `true` when this credit newly covered the cost.
+    pub fn credit(&mut self, id: usize, bytes: f64, now: f64) -> bool {
+        let d = &mut self.decisions[id];
+        if bytes > 0.0 {
+            d.credited_bytes += bytes;
+        }
+        if d.paid_at_s.is_none() && d.credited_bytes >= d.cost_bytes {
+            d.paid_at_s = Some(now);
+            return true;
+        }
+        false
+    }
+
+    /// Unpaid decisions older than `patience_s` that have not yet fired
+    /// a flight dump; marks them dumped and returns their ids.
+    pub fn take_overdue(&mut self, now: f64, patience_s: f64) -> Vec<usize> {
+        let mut out = Vec::new();
+        for d in &mut self.decisions {
+            if !d.paid() && !d.dumped && now - d.t_s >= patience_s {
+                d.dumped = true;
+                out.push(d.id);
+            }
+        }
+        out
+    }
+
+    pub fn paid_count(&self) -> usize {
+        self.decisions.iter().filter(|d| d.paid()).count()
+    }
+
+    pub fn unpaid_count(&self) -> usize {
+        self.decisions.len() - self.paid_count()
+    }
+
+    /// Mean payback time over paid decisions (s), if any paid.
+    pub fn mean_payback_s(&self) -> Option<f64> {
+        let paid: Vec<f64> =
+            self.decisions.iter().filter_map(|d| d.payback_s()).collect();
+        if paid.is_empty() {
+            None
+        } else {
+            Some(paid.iter().sum::<f64>() / paid.len() as f64)
+        }
+    }
+
+    pub fn json(&self) -> Json {
+        let mut arr = Vec::new();
+        for d in &self.decisions {
+            arr.push(Json::from_pairs(vec![
+                ("id", Json::Num(d.id as f64)),
+                ("t_s", Json::Num(d.t_s)),
+                ("kind", Json::Str(d.kind.name().into())),
+                ("detail", Json::Str(d.detail.clone())),
+                ("cost_bytes", Json::Num(d.cost_bytes)),
+                ("cost_s", Json::Num(d.cost_s)),
+                ("credited_bytes", Json::Num(d.credited_bytes)),
+                (
+                    "paid_at_s",
+                    match d.paid_at_s {
+                        Some(t) => Json::Num(t),
+                        None => Json::Null,
+                    },
+                ),
+            ]));
+        }
+        Json::from_pairs(vec![
+            ("decisions", Json::Arr(arr)),
+            ("paid", Json::Num(self.paid_count() as f64)),
+            ("unpaid", Json::Num(self.unpaid_count() as f64)),
+            (
+                "mean_payback_s",
+                match self.mean_payback_s() {
+                    Some(t) => Json::Num(t),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+}
+
+/// The comms side of a serving report: the always-on (src, dst, purpose)
+/// matrix, the opt-in tenant/expert slices, and the payback ledger.
+#[derive(Debug, Clone, Default)]
+pub struct CommsReport {
+    /// run-total bytes per purpose on the request network
+    pub purpose_bytes: [f64; NUM_PURPOSES],
+    /// `NetModel::total_bytes()` at run end
+    pub total_bytes: f64,
+    /// non-empty links: (src, dst, per-purpose bytes)
+    pub links: Vec<(usize, usize, [f64; NUM_PURPOSES])>,
+    /// expert-weight bytes staged over PCIe by migrations + scale-outs
+    /// (never crosses the request network; priced as `migration_copy` /
+    /// `scaleout_copy` in the payback ledger)
+    pub pcie_copy_bytes: f64,
+    /// opt-in per-tenant / per-expert slices (empty when tracing is off)
+    pub account: CommsAccount,
+    pub ledger: PaybackLedger,
+}
+
+impl CommsReport {
+    pub fn json(&self) -> Json {
+        let mut links = Vec::new();
+        for (src, dst, b) in &self.links {
+            let mut o = purpose_json(b);
+            o.set("src", Json::Num(*src as f64));
+            o.set("dst", Json::Num(*dst as f64));
+            links.push(o);
+        }
+        Json::from_pairs(vec![
+            ("purpose_bytes", purpose_json(&self.purpose_bytes)),
+            ("total_bytes", Json::Num(self.total_bytes)),
+            ("links", Json::Arr(links)),
+            ("pcie_copy_bytes", Json::Num(self.pcie_copy_bytes)),
+            ("slices", self.account.json()),
+            ("payback", self.ledger.json()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn purpose_indices_are_dense_and_named() {
+        for (i, p) in TransferPurpose::ALL.iter().enumerate() {
+            assert_eq!(p.index(), i);
+            assert!(!p.name().is_empty());
+        }
+        let names: std::collections::BTreeSet<&str> =
+            TransferPurpose::ALL.iter().map(|p| p.name()).collect();
+        assert_eq!(names.len(), NUM_PURPOSES, "names must be unique");
+    }
+
+    #[test]
+    fn account_slices_accumulate() {
+        let mut a = CommsAccount::default();
+        a.add_tenant(TransferPurpose::ExpertCall, 2, 100.0);
+        a.add_tenant(TransferPurpose::ExpertCall, 2, 50.0);
+        a.add_tenant(TransferPurpose::ResultReturn, 0, 10.0);
+        a.add_expert(TransferPurpose::ExpertCall, 1, 7, 30.0);
+        a.add_expert(TransferPurpose::ExpertCall, 1, 7, 5.0);
+        a.add_expert(TransferPurpose::ResultReturn, 0, 3, 100.0);
+        assert_eq!(a.per_tenant.len(), 3);
+        assert_eq!(
+            a.per_tenant[2][TransferPurpose::ExpertCall.index()],
+            150.0
+        );
+        assert_eq!(
+            a.per_expert[&(1, 7)][TransferPurpose::ExpertCall.index()],
+            35.0
+        );
+        let top = a.top_experts(1);
+        assert_eq!(top, vec![(0, 3, 100.0)]);
+    }
+
+    #[test]
+    fn ledger_pays_back_and_flags_overdue() {
+        let mut led = PaybackLedger::default();
+        let a = led.open(
+            10.0,
+            DecisionKind::ScaleOut,
+            "l0e1 -> s2g0".into(),
+            1000.0,
+            0.5,
+            (0, 1, 2),
+            0.0,
+        );
+        let b = led.open(
+            12.0,
+            DecisionKind::ScaleIn,
+            "l0e9 @ s1g0".into(),
+            0.0,
+            0.0,
+            (0, 9, 1),
+            0.0,
+        );
+        assert!(led.decisions[b].paid(), "zero-cost decisions pay instantly");
+        assert!(!led.credit(a, 400.0, 20.0));
+        assert!(led.credit(a, 700.0, 30.0), "credit crossing cost pays");
+        assert_eq!(led.decisions[a].payback_s(), Some(20.0));
+        assert_eq!(led.paid_count(), 2);
+        // an expensive decision that never pays becomes overdue exactly once
+        let c = led.open(
+            40.0,
+            DecisionKind::Migration,
+            "3 replicas".into(),
+            5e6,
+            1.2,
+            (0, 0, 0),
+            0.0,
+        );
+        assert!(led.take_overdue(50.0, 60.0).is_empty(), "not old enough");
+        assert_eq!(led.take_overdue(200.0, 60.0), vec![c]);
+        assert!(led.take_overdue(300.0, 60.0).is_empty(), "dumps once");
+        assert_eq!(led.unpaid_count(), 1);
+    }
+
+    #[test]
+    fn decision_row_shape() {
+        let mut led = PaybackLedger::default();
+        let id = led.open(
+            5.0,
+            DecisionKind::ScaleOut,
+            "l1e2 -> s0g0".into(),
+            100.0,
+            0.1,
+            (1, 2, 0),
+            0.0,
+        );
+        let row = led.decisions[id].to_row(5.0, "open");
+        assert_eq!(row.get("kind").unwrap().as_str(), Some("decision"));
+        assert_eq!(row.get("event").unwrap().as_str(), Some("open"));
+        assert_eq!(
+            row.get("schema").unwrap().as_f64(),
+            Some(OBS_SCHEMA_VERSION as f64)
+        );
+        assert_eq!(row.get("paid_at_s"), Some(&Json::Null));
+    }
+}

@@ -43,8 +43,13 @@ use std::collections::BTreeMap;
 use crate::util::json::Json;
 
 pub mod chrome;
+pub mod comms;
 pub mod flight;
 
+pub use comms::{
+    CommsAccount, CommsReport, DecisionKind, DecisionRecord, PaybackLedger,
+    TransferPurpose, NUM_PURPOSES, OBS_SCHEMA_VERSION,
+};
 pub use flight::{FlightDump, FlightRing};
 
 /// `req` value for spans not tied to a request.
@@ -327,6 +332,9 @@ pub struct ObsConfig {
     pub max_flight_dumps: usize,
     /// Window shed count at or above which a dump triggers.
     pub flight_shed_spike: u64,
+    /// A control decision (scale-out / migration) still unpaid in the
+    /// payback ledger after this long triggers a flight dump.
+    pub payback_patience_s: f64,
 }
 
 impl Default for ObsConfig {
@@ -336,6 +344,7 @@ impl Default for ObsConfig {
             flight_capacity: 4096,
             max_flight_dumps: 8,
             flight_shed_spike: 5,
+            payback_patience_s: 120.0,
         }
     }
 }
@@ -377,6 +386,11 @@ pub struct Obs {
     pub flight: FlightRing,
     /// Auto-dumps taken so far (bounded by `cfg.max_flight_dumps`).
     pub dumps: Vec<FlightDump>,
+    /// Dump triggers that fired after `cfg.max_flight_dumps` filled up.
+    pub dumps_dropped: u64,
+    /// Per-tenant / per-expert byte attribution (the always-on
+    /// (src, dst, purpose) matrix lives in [`crate::net::NetModel`]).
+    pub comms: comms::CommsAccount,
     /// Completed-request decomposition records.
     pub completed: Vec<StageRecord>,
     /// Metrics-snapshot rows (one JSONL line each), in emission order.
@@ -405,6 +419,8 @@ impl Obs {
             dropped: 0,
             flight: FlightRing::new(0),
             dumps: Vec::new(),
+            dumps_dropped: 0,
+            comms: comms::CommsAccount::default(),
             completed: Vec::new(),
             metrics_rows: Vec::new(),
             reqs: Vec::new(),
@@ -852,19 +868,53 @@ impl Obs {
         self.prearrival.remove(&(req_id, arrival_s.to_bits()));
     }
 
-    /// Append one metrics-snapshot row (a JSONL line).
-    pub fn push_metrics_row(&mut self, row: Json) {
+    /// Attribute `bytes` of network traffic to the tenant/expert slices
+    /// (the engine calls this at every transfer it books; the always-on
+    /// endpoint matrix is accumulated inside the net model itself).
+    #[inline]
+    pub fn on_transfer(
+        &mut self,
+        purpose: comms::TransferPurpose,
+        tenant: Option<usize>,
+        layer: usize,
+        expert: usize,
+        bytes: f64,
+    ) {
         if !self.enabled {
             return;
+        }
+        if let Some(t) = tenant {
+            self.comms.add_tenant(purpose, t, bytes);
+        }
+        self.comms.add_expert(purpose, layer, expert, bytes);
+    }
+
+    /// Append one metrics-snapshot row (a JSONL line). Every row is
+    /// stamped with the stream's `schema` version (row builders may
+    /// pre-set it; this is the backstop that keeps the invariant).
+    pub fn push_metrics_row(&mut self, mut row: Json) {
+        if !self.enabled {
+            return;
+        }
+        if row.get("schema").is_none() {
+            row.set(
+                "schema",
+                Json::Num(comms::OBS_SCHEMA_VERSION as f64),
+            );
         }
         self.metrics_rows.push(row);
     }
 
     /// Snapshot the flight ring (SLO breach / shed spike). Dumps beyond
-    /// `cfg.max_flight_dumps` are dropped — the first breaches are the
-    /// forensically interesting ones.
+    /// `cfg.max_flight_dumps` are dropped (counted in
+    /// [`Obs::dumps_dropped`]) — the first breaches are the forensically
+    /// interesting ones.
     pub fn flight_trigger(&mut self, now: f64, reason: &'static str) {
-        if !self.enabled || self.dumps.len() >= self.cfg.max_flight_dumps {
+        if !self.enabled {
+            return;
+        }
+        if self.dumps.len() >= self.cfg.max_flight_dumps {
+            self.dumps_dropped += 1;
             return;
         }
         self.record(SpanEvent {
@@ -905,6 +955,7 @@ impl Obs {
     pub fn flight_json(&self) -> Json {
         Json::from_pairs(vec![
             ("flight_capacity", Json::Num(self.cfg.flight_capacity as f64)),
+            ("dumps_dropped", Json::Num(self.dumps_dropped as f64)),
             (
                 "dumps",
                 Json::Arr(

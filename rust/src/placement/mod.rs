@@ -519,6 +519,30 @@ impl Placement {
         self.assign.iter().map(|w| w.count_ones() as usize).sum()
     }
 
+    /// Replica-count dispersion across all (layer, expert) pairs:
+    /// `(min, max, mean)` of the per-expert replica counts. Feeds the
+    /// `placement_window` telemetry row — a wide spread means scale-out
+    /// concentrated copies on a few hot experts.
+    pub fn replica_dispersion(&self) -> (usize, usize, f64) {
+        let mut min = usize::MAX;
+        let mut max = 0usize;
+        let mut sum = 0usize;
+        let mut n = 0usize;
+        for l in 0..self.num_layers {
+            for e in 0..self.num_experts {
+                let c = self.active_count(l, e);
+                min = min.min(c);
+                max = max.max(c);
+                sum += c;
+                n += 1;
+            }
+        }
+        if n == 0 {
+            return (0, 0, 0.0);
+        }
+        (min, max, sum as f64 / n as f64)
+    }
+
     /// Full-coverage check: every (layer, expert) on ≥ 1 GPU (first
     /// constraint of §III-B). Returns the missing pairs.
     pub fn missing_experts(&self) -> Vec<(LayerId, ExpertId)> {

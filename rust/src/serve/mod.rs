@@ -50,6 +50,10 @@ use crate::cluster::RegionTopology;
 use crate::config::{ClusterConfig, ModelConfig, WorkloadConfig};
 use crate::coordinator::{Coordinator, CoordinatorConfig};
 use crate::engine::{CostModel, Engine, EngineConfig, ServeReport};
+use crate::obs::comms::{
+    purpose_json, CommsReport, DecisionKind, PaybackLedger, TransferPurpose,
+    NUM_PURPOSES, OBS_SCHEMA_VERSION,
+};
 use crate::obs::{chrome, DecompReport, ObsConfig};
 use crate::placement::Placement;
 use crate::serve::statsbus::TenantBus;
@@ -175,6 +179,16 @@ pub struct GatewayReport {
     /// Latency decomposition over every traced request (`None` unless
     /// tracing was enabled via [`Gateway::enable_obs`]).
     pub decomp: Option<DecompReport>,
+    /// Communication-cost accounting: the always-on (src, dst, purpose)
+    /// byte matrix plus — when tracing was enabled — the per-tenant /
+    /// per-expert slices and the decision payback ledger.
+    pub comms: CommsReport,
+    /// Spans dropped by the tracing ring (0 = the trace is complete;
+    /// anything else means trace-derived reports undercount).
+    pub obs_dropped: u64,
+    /// Flight dumps discarded after `max_flight_dumps` filled (visible
+    /// data loss: later breaches in the run left no forensic snapshot).
+    pub flight_dumps_dropped: u64,
 }
 
 impl GatewayReport {
@@ -273,6 +287,21 @@ pub struct Gateway {
     /// log vectors (rows are emitted once, at the tick that produced them).
     obs_coord_logs_seen: usize,
     obs_autoscale_logs_seen: usize,
+    /// Decision payback ledger: scale ops and migration adoptions opened
+    /// at interval ticks, credited with avoided remote bytes from every
+    /// later window. Only fed while tracing is enabled.
+    payback: PaybackLedger,
+    /// Payback cursors into the engine's migration / scale-event logs.
+    obs_migrations_seen: usize,
+    obs_scale_events_seen: usize,
+    /// Previous tick's cumulative per-purpose network bytes (the
+    /// comms-window delta base).
+    obs_prev_purpose: [f64; NUM_PURPOSES],
+    /// Previous tick's cumulative timeline token sums (coverage window).
+    obs_prev_local: f64,
+    obs_prev_remote: f64,
+    /// Previous tick time (window-rate normalization).
+    obs_prev_tick_s: f64,
 }
 
 impl Gateway {
@@ -388,6 +417,13 @@ impl Gateway {
             obs_shed_seen: 0,
             obs_coord_logs_seen: 0,
             obs_autoscale_logs_seen: 0,
+            payback: PaybackLedger::default(),
+            obs_migrations_seen: 0,
+            obs_scale_events_seen: 0,
+            obs_prev_purpose: [0.0; NUM_PURPOSES],
+            obs_prev_local: 0.0,
+            obs_prev_remote: 0.0,
+            obs_prev_tick_s: 0.0,
             cfg,
         }
     }
@@ -754,6 +790,184 @@ impl Gateway {
             self.engine.obs.push_metrics_row(log.to_json());
         }
         self.obs_autoscale_logs_seen = self.coordinator.autoscale_logs.len();
+        // ---- comms window: purpose-attributed byte deltas ---------------
+        let cur_purpose = self.engine.net.purpose_totals();
+        let mut window_purpose = [0.0; NUM_PURPOSES];
+        for p in 0..NUM_PURPOSES {
+            window_purpose[p] = cur_purpose[p] - self.obs_prev_purpose[p];
+        }
+        let dt = (t - self.obs_prev_tick_s).max(1e-9);
+        let window_remote = window_purpose
+            [TransferPurpose::ExpertCall.index()]
+            + window_purpose[TransferPurpose::ResultReturn.index()];
+        // ---- payback: credit open decisions from the ended window -------
+        // (before ingesting this tick's decisions, so none credits the
+        // window that preceded it)
+        for d in self.payback.decisions.iter_mut() {
+            if d.paid() {
+                continue;
+            }
+            let earned = match d.kind {
+                DecisionKind::ScaleOut => {
+                    // remote bytes avoided ≈ growth of the target server's
+                    // activation mass on the replicated expert, which the
+                    // new replica serves locally (send + return both saved)
+                    let raw =
+                        self.engine.stats.raw(d.server, d.layer, d.expert);
+                    let grown = (raw - d.baseline).max(0.0);
+                    d.baseline = raw;
+                    grown * 2.0 * self.engine.model.token_bytes as f64
+                }
+                DecisionKind::Migration => {
+                    // remote bytes below the pre-adoption rate
+                    (d.baseline * dt - window_remote).max(0.0)
+                }
+                DecisionKind::ScaleIn => 0.0,
+            };
+            if earned > 0.0 {
+                d.credited_bytes += earned;
+            }
+            if d.credited_bytes >= d.cost_bytes {
+                d.paid_at_s = Some(t);
+                let row = d.to_row(t, "paid");
+                self.engine.obs.push_metrics_row(row);
+            }
+        }
+        // ---- payback: open records for decisions applied this window ----
+        let new_scales: Vec<crate::engine::ScaleEvent> =
+            self.engine.scale_events[self.obs_scale_events_seen..].to_vec();
+        self.obs_scale_events_seen = self.engine.scale_events.len();
+        for ev in new_scales {
+            if !ev.applied {
+                continue;
+            }
+            let (kind, cost_bytes, cost_s, baseline, detail) = match ev.kind
+            {
+                crate::engine::ScaleKind::Out => {
+                    let bytes = self.engine.model.expert_bytes as f64;
+                    let pcie = self.engine.cluster.servers[ev.server].gpus
+                        [ev.gpu]
+                        .pcie_bps;
+                    let raw =
+                        self.engine.stats.raw(ev.server, ev.layer, ev.expert);
+                    (
+                        DecisionKind::ScaleOut,
+                        bytes,
+                        bytes / pcie,
+                        raw,
+                        format!(
+                            "l{}e{} -> s{}g{}",
+                            ev.layer, ev.expert, ev.server, ev.gpu
+                        ),
+                    )
+                }
+                crate::engine::ScaleKind::In => (
+                    DecisionKind::ScaleIn,
+                    0.0,
+                    0.0,
+                    0.0,
+                    format!(
+                        "l{}e{} drop s{}g{}",
+                        ev.layer, ev.expert, ev.server, ev.gpu
+                    ),
+                ),
+            };
+            let id = self.payback.open(
+                ev.t_s,
+                kind,
+                detail,
+                cost_bytes,
+                cost_s,
+                (ev.layer, ev.expert, ev.server),
+                baseline,
+            );
+            let row = self.payback.decisions[id].to_row(t, "open");
+            self.engine.obs.push_metrics_row(row);
+        }
+        let new_migs: Vec<(f64, usize, f64)> =
+            self.engine.report.migrations[self.obs_migrations_seen..]
+                .to_vec();
+        self.obs_migrations_seen = self.engine.report.migrations.len();
+        for (t_mig, moved, t_total) in new_migs {
+            // adopted by this tick's coordinator pass, so the window that
+            // just ended is entirely pre-adoption: its remote-byte rate is
+            // the baseline the migration must beat to earn credit
+            let cost = moved as f64 * self.engine.model.expert_bytes as f64;
+            let id = self.payback.open(
+                t_mig,
+                DecisionKind::Migration,
+                format!("{moved} replicas"),
+                cost,
+                t_total,
+                (0, 0, 0),
+                window_remote / dt,
+            );
+            let row = self.payback.decisions[id].to_row(t, "open");
+            self.engine.obs.push_metrics_row(row);
+        }
+        // ---- payback: unpaid past patience → flight dump ----------------
+        let patience = self.engine.obs.cfg.payback_patience_s;
+        let overdue = self.payback.take_overdue(t, patience);
+        if !overdue.is_empty() {
+            self.engine.obs.flight_trigger(t, "unpaid_decision");
+        }
+        for id in overdue {
+            let row = self.payback.decisions[id].to_row(t, "unpaid");
+            self.engine.obs.push_metrics_row(row);
+        }
+        // ---- comms_window + placement_window rows -----------------------
+        let mut comms_row = Json::from_pairs(vec![
+            ("t_s", Json::Num(t)),
+            ("kind", Json::Str("comms_window".into())),
+            ("schema", Json::Num(OBS_SCHEMA_VERSION as f64)),
+            ("total_bytes", Json::Num(self.engine.net.total_bytes())),
+            (
+                "pcie_copy_bytes",
+                Json::Num(self.engine.report.pcie_copy_bytes),
+            ),
+        ]);
+        comms_row.set("window", purpose_json(&window_purpose));
+        comms_row.set("total", purpose_json(&cur_purpose));
+        self.engine.obs.push_metrics_row(comms_row);
+        let timeline = &self.engine.report.timeline;
+        let lsum: f64 = timeline.iter().map(|b| b.local).sum();
+        let rsum: f64 = timeline.iter().map(|b| b.remote).sum();
+        let wl = lsum - self.obs_prev_local;
+        let wr = rsum - self.obs_prev_remote;
+        let window_local_ratio =
+            if wl + wr > 0.0 { wl / (wl + wr) } else { 1.0 };
+        let nservers = self.engine.cluster_cfg.num_servers();
+        let mut mem_util = Vec::with_capacity(nservers);
+        for s in 0..nservers {
+            let mut used = 0.0;
+            let mut cap = 0.0;
+            for g in 0..self.engine.placement.gpus[s] {
+                used += self.engine.placement.mem_used(s, g) as f64
+                    + self.coordinator.ledger.reserved(s, g) as f64;
+                cap += self.coordinator.ledger.capacity(s, g) as f64;
+            }
+            mem_util.push(if cap > 0.0 { used / cap } else { 0.0 });
+        }
+        let (rmin, rmax, rmean) = self.engine.placement.replica_dispersion();
+        self.engine.obs.push_metrics_row(Json::from_pairs(vec![
+            ("t_s", Json::Num(t)),
+            ("kind", Json::Str("placement_window".into())),
+            ("schema", Json::Num(OBS_SCHEMA_VERSION as f64)),
+            ("window_local_ratio", Json::Num(window_local_ratio)),
+            ("local_ratio", Json::Num(self.engine.report.local_ratio())),
+            ("mem_util", Json::arr_f64(&mem_util)),
+            ("replicas_min", Json::Num(rmin as f64)),
+            ("replicas_max", Json::Num(rmax as f64)),
+            ("replicas_mean", Json::Num(rmean)),
+            (
+                "total_replicas",
+                Json::Num(self.engine.placement.total_replicas() as f64),
+            ),
+        ]));
+        self.obs_prev_purpose = cur_purpose;
+        self.obs_prev_local = lsum;
+        self.obs_prev_remote = rsum;
+        self.obs_prev_tick_s = t;
     }
 
     fn build_report(&mut self) -> GatewayReport {
@@ -836,6 +1050,16 @@ impl Gateway {
                 .obs
                 .enabled()
                 .then(|| self.engine.obs.decomp()),
+            comms: CommsReport {
+                purpose_bytes: serve.net_purpose_bytes,
+                total_bytes: serve.net_bytes,
+                links: self.engine.net.nonzero_links(),
+                pcie_copy_bytes: serve.pcie_copy_bytes,
+                account: self.engine.obs.comms.clone(),
+                ledger: self.payback.clone(),
+            },
+            obs_dropped: self.engine.obs.dropped,
+            flight_dumps_dropped: self.engine.obs.dumps_dropped,
             serve,
         }
     }

@@ -50,7 +50,8 @@ use crate::cluster::RegionTopology;
 use crate::config::{ClusterConfig, ModelConfig, TaskKind, WorkloadConfig};
 use crate::coordinator::CoordinatorConfig;
 use crate::net::NetModel;
-use crate::obs::{chrome, ObsConfig};
+use crate::obs::comms::{NUM_PURPOSES, OBS_SCHEMA_VERSION};
+use crate::obs::{chrome, ObsConfig, TransferPurpose};
 use crate::placement::uniform;
 use crate::serve::statsbus::{RegionBus, RegionWindow};
 use crate::serve::{
@@ -390,6 +391,7 @@ impl MultiGateway {
             bytes,
             now,
             self.spill_cfg.fixed_s,
+            TransferPurpose::RegionSpill,
         );
         let seq = self.seq;
         self.seq += 1;
@@ -480,10 +482,16 @@ impl MultiGateway {
                 by_tenant,
             );
             if self.gateways[r].engine.obs.enabled() {
+                // cumulative spill bytes this region pushed onto the
+                // inter-region mesh (purpose-attributed at the mesh)
+                let spill_bytes: f64 = (0..self.gateways.len())
+                    .map(|q| self.inter_net.link_bytes(r, q))
+                    .sum();
                 let w = &self.windows[r];
                 let row = Json::from_pairs(vec![
                     ("t_s", Json::Num(now)),
                     ("kind", Json::Str("region_window".into())),
+                    ("schema", Json::Num(OBS_SCHEMA_VERSION as f64)),
                     ("completed", Json::Num(w.completed as f64)),
                     ("shed", Json::Num(w.shed as f64)),
                     ("p95_s", Json::Num(w.p95_s)),
@@ -496,6 +504,7 @@ impl MultiGateway {
                     ),
                     ("spilled_in", Json::Num(self.spilled_in[r] as f64)),
                     ("spill_shed", Json::Num(self.spill_shed[r] as f64)),
+                    ("spill_bytes", Json::Num(spill_bytes)),
                 ]);
                 self.gateways[r].engine.obs.push_metrics_row(row);
             }
@@ -701,6 +710,12 @@ impl MultiGateway {
             &all_lat,
             &[0.50, 0.95, 0.99],
         );
+        let obs_dropped: u64 =
+            regions.iter().map(|r| r.gateway.obs_dropped).sum();
+        let flight_dumps_dropped: u64 = regions
+            .iter()
+            .map(|r| r.gateway.flight_dumps_dropped)
+            .sum();
         RegionsReport {
             spill_enabled: self.spill_cfg.enabled,
             slo_s,
@@ -716,6 +731,10 @@ impl MultiGateway {
             p50_s: p[0],
             p95_s: p[1],
             p99_s: p[2],
+            mesh_links: self.inter_net.nonzero_links(),
+            mesh_bytes: self.inter_net.total_bytes(),
+            obs_dropped,
+            flight_dumps_dropped,
             regions,
         }
     }
@@ -764,6 +783,16 @@ pub struct RegionsReport {
     pub p50_s: f64,
     pub p95_s: f64,
     pub p99_s: f64,
+    /// Inter-region mesh byte matrix: non-empty (src, dst) links with
+    /// per-purpose bytes (spill forwards are the mesh's only traffic
+    /// today, so only the `region_spill` slice is non-zero).
+    pub mesh_links: Vec<(usize, usize, [f64; NUM_PURPOSES])>,
+    /// Σ bytes over the inter-region mesh.
+    pub mesh_bytes: f64,
+    /// Σ spans dropped across every regional recorder (0 = complete).
+    pub obs_dropped: u64,
+    /// Σ flight dumps discarded across every regional recorder.
+    pub flight_dumps_dropped: u64,
 }
 
 impl RegionsReport {
@@ -1145,6 +1174,11 @@ pub fn comparison_metrics(
     j.set(
         "spill_shed_rate_reduction",
         Json::Num(isolated.shed_rate() - spill.shed_rate()),
+    );
+    j.set("spill_mesh_bytes", Json::Num(spill.mesh_bytes));
+    j.set(
+        "isolated_mesh_bytes",
+        Json::Num(isolated.mesh_bytes),
     );
     j
 }

@@ -1,0 +1,250 @@
+//! End-to-end properties of the communication-cost accounting layer:
+//! byte-attribution exactness (flat network, topology-priced merged
+//! cluster, inter-region mesh), result-neutrality of the traced
+//! slices, and the decision payback ledger's row stream.
+
+use dancemoe::config::{ClusterConfig, ModelConfig, WorkloadConfig};
+use dancemoe::coordinator::CoordinatorConfig;
+use dancemoe::obs::{
+    CommsReport, ObsConfig, TransferPurpose, NUM_PURPOSES,
+};
+use dancemoe::placement::uniform;
+use dancemoe::serve::{Gateway, GatewayConfig, RegionsScenario};
+use dancemoe::util::json::Json;
+
+/// The canonical migration scenario (the run
+/// `tests/gateway_integration.rs` locks adoption on): 4-layer mixtral,
+/// 3-server edge preset, home routing, uniform start, online stats only.
+fn migration_gateway(migrate: bool, seed: u64) -> Gateway {
+    let mut m = ModelConfig::mixtral_8x7b_sim();
+    m.num_layers = 4;
+    let c = ClusterConfig::edge_testbed_3_for(&m);
+    let w = WorkloadConfig::bigbench(5.0);
+    Gateway::new(
+        &m,
+        &c,
+        &w,
+        uniform::place(&m, &c),
+        GatewayConfig {
+            horizon_s: 480.0,
+            locality_routing: false,
+            seed,
+            ..GatewayConfig::default()
+        },
+        CoordinatorConfig {
+            interval_s: 60.0,
+            migrate,
+            seed,
+            ..CoordinatorConfig::default()
+        },
+    )
+}
+
+/// Re-sum the (src, dst, purpose) link matrix in flat traversal order;
+/// the result must reproduce the store's totals **bit for bit** —
+/// skipped all-zero links contribute exactly 0.0, so the floating-point
+/// addition sequence is identical to the store's own.
+fn assert_exact(comms: &CommsReport, label: &str) {
+    let mut total = 0.0f64;
+    let mut per_purpose = [0.0f64; NUM_PURPOSES];
+    for (_, _, by) in &comms.links {
+        for (p, b) in by.iter().enumerate() {
+            total += b;
+            per_purpose[p] += b;
+        }
+    }
+    assert_eq!(
+        total.to_bits(),
+        comms.total_bytes.to_bits(),
+        "{label}: links must re-sum to total_bytes exactly \
+         ({total} vs {})",
+        comms.total_bytes
+    );
+    for p in TransferPurpose::ALL {
+        let i = p.index();
+        assert_eq!(
+            per_purpose[i].to_bits(),
+            comms.purpose_bytes[i].to_bits(),
+            "{label}: {} links must re-sum to the purpose total exactly",
+            p.name()
+        );
+    }
+}
+
+#[test]
+fn flat_gateway_attribution_is_exact() {
+    let mut gw = migration_gateway(true, 23);
+    let report = gw.run();
+    assert!(report.comms.total_bytes > 0.0, "remote traffic must flow");
+    assert_exact(&report.comms, "flat gateway");
+    // migration weight copies ride PCIe, never the request network
+    assert_eq!(
+        report.comms.purpose_bytes[TransferPurpose::MigrationCopy.index()],
+        0.0
+    );
+    assert!(report.migrations > 0, "the canonical scenario migrates");
+    assert!(
+        report.comms.pcie_copy_bytes > 0.0,
+        "adopted migrations must stage weight bytes over PCIe"
+    );
+    // spill is a regions-mode purpose; a single gateway never books it
+    assert_eq!(
+        report.comms.purpose_bytes[TransferPurpose::RegionSpill.index()],
+        0.0
+    );
+}
+
+#[test]
+fn topology_priced_attribution_is_exact() {
+    // the single-global-gateway baseline: one engine over the merged
+    // cluster with cross-region links priced by the topology
+    let global = RegionsScenario {
+        horizon_s: 200.0,
+        seed: 7,
+        ..RegionsScenario::default()
+    }
+    .build_global();
+    let mut gw = global;
+    let report = gw.run();
+    assert!(report.comms.total_bytes > 0.0);
+    assert_exact(&report.comms, "topology-priced global gateway");
+}
+
+#[test]
+fn mesh_attribution_is_exact_and_spill_only() {
+    let mut multi = RegionsScenario {
+        horizon_s: 200.0,
+        seed: 5,
+        ..RegionsScenario::default()
+    }
+    .build();
+    let report = multi.run();
+    assert!(report.spilled > 0, "the staggered scenario must spill");
+    // the inter-region mesh re-sums exactly, and spill forwards are its
+    // only traffic
+    let mut total = 0.0f64;
+    for (src, dst, by) in &report.mesh_links {
+        assert_ne!(src, dst, "mesh links are cross-region");
+        for p in TransferPurpose::ALL {
+            if p == TransferPurpose::RegionSpill {
+                assert!(by[p.index()] > 0.0);
+            } else {
+                assert_eq!(by[p.index()], 0.0);
+            }
+        }
+        total += by.iter().sum::<f64>();
+    }
+    assert!(total > 0.0);
+    assert_eq!(total.to_bits(), report.mesh_bytes.to_bits());
+    // every regional request network re-sums exactly too
+    for region in &report.regions {
+        assert_exact(&region.gateway.comms, &region.name);
+    }
+}
+
+#[test]
+fn traced_slices_match_untraced_bytes() {
+    // tracing is result-neutral on the byte axis: the purpose totals of
+    // a traced run are bit-identical to the untraced run, and the traced
+    // per-expert account covers the request-path purposes exactly (up to
+    // summation order).
+    let plain = migration_gateway(true, 23).run();
+    let mut traced_gw = migration_gateway(true, 23);
+    traced_gw.enable_obs(ObsConfig::default());
+    let traced = traced_gw.run();
+    for p in 0..NUM_PURPOSES {
+        assert_eq!(
+            plain.comms.purpose_bytes[p].to_bits(),
+            traced.comms.purpose_bytes[p].to_bits(),
+            "tracing must not change purpose totals"
+        );
+    }
+    assert!(plain.comms.account.is_empty(), "untraced runs keep no slices");
+    assert!(!traced.comms.account.is_empty());
+    for p in [TransferPurpose::ExpertCall, TransferPurpose::ResultReturn] {
+        let account: f64 = traced
+            .comms
+            .account
+            .per_expert
+            .values()
+            .map(|by| by[p.index()])
+            .sum();
+        let net = traced.comms.purpose_bytes[p.index()];
+        assert!(
+            (account - net).abs() <= 1e-9 * net.max(1.0),
+            "traced {} slices must cover the network total \
+             ({account} vs {net})",
+            p.name()
+        );
+    }
+}
+
+#[test]
+fn payback_ledger_credits_migrations_and_emits_rows() {
+    let mut gw = migration_gateway(true, 23);
+    gw.enable_obs(ObsConfig::default());
+    let report = gw.run();
+    assert!(report.migrations > 0);
+    let ledger = &report.comms.ledger;
+    assert!(
+        !ledger.decisions.is_empty(),
+        "adopted migrations must open payback records"
+    );
+    for d in &ledger.decisions {
+        assert!(d.cost_bytes >= 0.0);
+        assert!(d.credited_bytes >= 0.0);
+        if let Some(dt) = d.payback_s() {
+            assert!(dt >= 0.0, "payback cannot precede the decision");
+        }
+    }
+    // the metrics stream carries the new row kinds, schema-stamped and
+    // clock-ordered
+    let metrics = gw.metrics_jsonl();
+    let mut kinds = std::collections::BTreeSet::new();
+    let mut last = f64::NEG_INFINITY;
+    for line in metrics.lines() {
+        let row = Json::parse(line).expect("row parses");
+        let t = row.get("t_s").and_then(|v| v.as_f64()).unwrap();
+        assert!(t >= last, "rows must stay in virtual-clock order");
+        last = t;
+        assert_eq!(
+            row.get("schema").and_then(|v| v.as_f64()),
+            Some(2.0),
+            "every row carries the schema version"
+        );
+        if let Some(Json::Str(k)) = row.get("kind") {
+            kinds.insert(k.clone());
+        }
+    }
+    for required in ["comms_window", "placement_window", "decision"] {
+        assert!(
+            kinds.contains(required),
+            "metrics stream must emit {required} rows (saw {kinds:?})"
+        );
+    }
+}
+
+#[test]
+fn unpaid_decision_triggers_flight_dump() {
+    // zero patience: any decision with an upfront cost goes overdue at
+    // the next interval tick, so the flight recorder must fire
+    let mut gw = migration_gateway(true, 23);
+    gw.enable_obs(ObsConfig {
+        payback_patience_s: 0.0,
+        ..ObsConfig::default()
+    });
+    let report = gw.run();
+    assert!(report.migrations > 0);
+    assert!(
+        gw.engine
+            .obs
+            .dumps
+            .iter()
+            .any(|d| d.reason == "unpaid_decision"),
+        "an overdue decision must dump the flight ring"
+    );
+    assert!(
+        report.comms.ledger.decisions.iter().any(|d| d.dumped),
+        "the overdue record must be marked dumped"
+    );
+}
