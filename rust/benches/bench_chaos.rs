@@ -1,0 +1,54 @@
+//! Chaos recovery benchmark: the canonical fault schedule (one crash
+//! with staged rejoin, a two-way partition with restore, a flash crowd,
+//! and a link degradation) driven through the default 3-region
+//! scenario with the autoscaler on, written to `BENCH_chaos.json` so
+//! recovery time and SLO attainment through faults are tracked across
+//! PRs machine-readably.
+//!
+//! Like the other serving bench files, the document carries **no
+//! wall-clock timings**: it is byte-identical across runs at the same
+//! seed (the replay regression in `tests/chaos_properties.rs` locks
+//! that), so CI artifact diffs show only real behavior changes.
+//! Wall-clock for the run is still printed via the bench harness.
+//!
+//! The bench exits non-zero unless the run's verdicts all hold on the
+//! canonical schedule: every crash's coverage recovered, request
+//! conservation stayed exact through every fault, and the memory
+//! ledger balanced to zero outstanding reservations — the chaos
+//! analogue of the hot-path bench's events/s floor.
+
+use dancemoe::chaos::{bench_file_json, ChaosScenario};
+use dancemoe::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::new("chaos");
+    let mut outcome = None;
+    b.run_once("canonical fault schedule (480 s, 3 regions)", || {
+        outcome = Some(ChaosScenario::canonical(0).run());
+    });
+    let report = outcome.expect("chaos run executed");
+    let out = std::path::Path::new("BENCH_chaos.json");
+    bench_file_json(&report)
+        .write_file(out)
+        .expect("write BENCH_chaos.json");
+    println!(
+        "  wrote {} (crashes {}, recoveries {}, max recovery {:.1}s; \
+         attainment {:.1}%, shed {:.1}%)",
+        out.display(),
+        report.crashes,
+        report.recoveries,
+        report.max_recovery_s,
+        100.0 * report.regions.attainment(),
+        100.0 * report.regions.shed_rate(),
+    );
+    if !report.ok() {
+        eprintln!(
+            "chaos bench FAILED: recovery_complete={} \
+             conservation_exact={} ledger_balanced={}",
+            report.recovery_complete,
+            report.conservation_exact,
+            report.ledger_balanced,
+        );
+        std::process::exit(1);
+    }
+}

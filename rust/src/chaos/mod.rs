@@ -1,0 +1,571 @@
+//! **Chaos engineering**: scripted fault schedules injected into the
+//! multi-gateway co-simulation's virtual clock, and the recovery report
+//! that says whether the stack survived them with its books intact.
+//!
+//! A [`FaultSchedule`] is a time-sorted list of [`FaultEvent`]s:
+//!
+//! - **Server crashes** ([`FaultKind::ServerCrash`]) — the server
+//!   fail-stops at its exact virtual time inside the owning region's
+//!   engine ([`crate::engine::Engine::schedule_server_crash`]): every
+//!   expert replica it holds is lost, requests already admitted complete
+//!   normally (fail-stop *with drain* — conservation is preserved by
+//!   construction), and no new admissions or replica copies land on it
+//!   until a [`FaultKind::ServerRejoin`] brings it back **empty**.
+//! - **Link faults** — [`FaultKind::LinkDegrade`] reprices one
+//!   inter-region link (finite bandwidth scale + extra latency;
+//!   [`crate::net::NetModel::degrade_link`]), [`FaultKind::LinkPartition`]
+//!   masks the pair out of spill routing entirely (in-flight forwards
+//!   still deliver — a partition must never strand booked traffic, and
+//!   zero bandwidth would break termination), and
+//!   [`FaultKind::LinkRestore`] undoes both, bit-exactly.
+//! - **Flash crowds** ([`FaultKind::FlashCrowd`]) — a burst of
+//!   deterministic synthetic requests for one (region, tenant) offered
+//!   through the normal admission path at the fault instant, so every
+//!   injected request is conserved like any arrival (admitted, shed, or
+//!   spilled).
+//!
+//! Recovery is the coordinator's job, not the schedule's: a crash that
+//! zeroes an expert's coverage triggers **emergency re-placement**
+//! (`Coordinator::recover_missing`, run at every scheduling boundary even
+//! while ordinary scale ops are in flight) — survivors are preferred as
+//! copy sources, with a host-RAM reload on the destination as the
+//! fallback when the crash took the last replica. The ledger releases
+//! each crashed copy's reservation **exactly once**, including the
+//! copy-races-crash window where a scale-out lands on a server that died
+//! mid-flight ([`crate::coordinator::Coordinator::fold_completions`]).
+//!
+//! [`ChaosScenario::run`] drives the canonical staggered-diurnal regions
+//! scenario ([`RegionsScenario`]) through a schedule and returns a
+//! [`ChaosReport`]: per-fault recovery time split into detection
+//! (crash → first boundary that staged re-covers) and re-copy (staging →
+//! coverage restored), SLO attainment through each fault window, and the
+//! conservation / ledger-balance verdicts the property suite
+//! (`tests/chaos_properties.rs`) and `benches/bench_chaos.rs` lock.
+
+use crate::serve::regions::{RegionsReport, RegionsScenario};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// One kind of injected fault. Region/server/tenant indices refer to the
+/// scenario the schedule is run against; out-of-range tenants are
+/// clamped, out-of-range regions/servers are a caller bug (panics).
+#[derive(Debug, Clone, PartialEq)]
+pub enum FaultKind {
+    /// Fail-stop `server` (region-local index) of `region` — replicas
+    /// lost, admissions refused, in-flight work drains.
+    ServerCrash { region: usize, server: usize },
+    /// Bring a crashed server back **empty** (its experts must be
+    /// re-covered by the coordinator before it serves them again).
+    ServerRejoin { region: usize, server: usize },
+    /// Reprice the directed inter-region link `src → dst`:
+    /// `bandwidth_scale` (must stay > 0) multiplies the base bandwidth,
+    /// `extra_latency_s` adds to the base latency.
+    LinkDegrade {
+        src: usize,
+        dst: usize,
+        bandwidth_scale: f64,
+        extra_latency_s: f64,
+    },
+    /// Mask `src → dst` out of spill routing (directed; partition both
+    /// directions with two events). In-flight forwards still deliver.
+    LinkPartition { src: usize, dst: usize },
+    /// Undo a partition **and** any degradation on `src → dst`
+    /// (bit-exact restore of the base link parameters).
+    LinkRestore { src: usize, dst: usize },
+    /// Inject `count` synthetic requests for `tenant` at `region`,
+    /// offered through normal admission at the fault instant (tenant is
+    /// clamped to the scenario's tenant count).
+    FlashCrowd {
+        region: usize,
+        tenant: usize,
+        count: usize,
+    },
+}
+
+impl FaultKind {
+    /// Stable short label (report rows, bench metric keys).
+    pub fn label(&self) -> String {
+        match self {
+            FaultKind::ServerCrash { region, server } => {
+                format!("crash_r{region}s{server}")
+            }
+            FaultKind::ServerRejoin { region, server } => {
+                format!("rejoin_r{region}s{server}")
+            }
+            FaultKind::LinkDegrade { src, dst, .. } => {
+                format!("degrade_{src}to{dst}")
+            }
+            FaultKind::LinkPartition { src, dst } => {
+                format!("partition_{src}to{dst}")
+            }
+            FaultKind::LinkRestore { src, dst } => {
+                format!("restore_{src}to{dst}")
+            }
+            FaultKind::FlashCrowd { region, tenant, count } => {
+                format!("flashcrowd_r{region}t{tenant}x{count}")
+            }
+        }
+    }
+}
+
+/// One scheduled fault.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultEvent {
+    /// Virtual time the fault fires.
+    pub t_s: f64,
+    pub kind: FaultKind,
+}
+
+/// A time-sorted fault script. Construction sorts (stably) by time, so
+/// generators can emit events in any order; same-time events apply in
+/// their post-sort order.
+#[derive(Debug, Clone, Default)]
+pub struct FaultSchedule {
+    pub events: Vec<FaultEvent>,
+}
+
+/// The randomized schedule classes the property suite sweeps
+/// ([`FaultSchedule::random`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChaosClass {
+    /// Crashes (with staged rejoins) only.
+    CrashOnly,
+    /// Inter-region link partitions/degradations (with restores) only.
+    PartitionOnly,
+    /// Crashes + link faults + one flash crowd.
+    Mixed,
+    /// A flash crowd provokes scale-out copies, then a crash lands just
+    /// after a scheduling boundary — aimed at the copy-races-crash
+    /// ledger window.
+    CrashRace,
+}
+
+impl ChaosClass {
+    pub const ALL: [ChaosClass; 4] = [
+        ChaosClass::CrashOnly,
+        ChaosClass::PartitionOnly,
+        ChaosClass::Mixed,
+        ChaosClass::CrashRace,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ChaosClass::CrashOnly => "crash_only",
+            ChaosClass::PartitionOnly => "partition_only",
+            ChaosClass::Mixed => "mixed",
+            ChaosClass::CrashRace => "crash_race",
+        }
+    }
+}
+
+impl FaultSchedule {
+    /// Sort `events` by time (stable — generator order breaks ties).
+    pub fn new(mut events: Vec<FaultEvent>) -> FaultSchedule {
+        events.sort_by(|a, b| a.t_s.total_cmp(&b.t_s));
+        FaultSchedule { events }
+    }
+
+    /// The canonical fault script behind `BENCH_chaos.json` and the
+    /// `chaos` CLI default: one crash with a staged rejoin, a two-way
+    /// partition with restore, a flash crowd, and a link degradation —
+    /// every fault class, on the default 3-region scenario, with enough
+    /// post-rejoin horizon that recovery must complete.
+    pub fn canonical() -> FaultSchedule {
+        use FaultKind::*;
+        FaultSchedule::new(vec![
+            FaultEvent { t_s: 60.0, kind: ServerCrash { region: 0, server: 1 } },
+            FaultEvent { t_s: 100.0, kind: LinkPartition { src: 0, dst: 2 } },
+            FaultEvent { t_s: 100.0, kind: LinkPartition { src: 2, dst: 0 } },
+            FaultEvent {
+                t_s: 120.0,
+                kind: FlashCrowd { region: 1, tenant: 0, count: 40 },
+            },
+            FaultEvent {
+                t_s: 150.0,
+                kind: LinkDegrade {
+                    src: 1,
+                    dst: 2,
+                    bandwidth_scale: 0.25,
+                    extra_latency_s: 0.05,
+                },
+            },
+            FaultEvent { t_s: 200.0, kind: ServerRejoin { region: 0, server: 1 } },
+            FaultEvent { t_s: 220.0, kind: LinkRestore { src: 0, dst: 2 } },
+            FaultEvent { t_s: 220.0, kind: LinkRestore { src: 2, dst: 0 } },
+            FaultEvent { t_s: 240.0, kind: LinkRestore { src: 1, dst: 2 } },
+        ])
+    }
+
+    /// A randomized schedule of `class` over `horizon_s`, deterministic
+    /// per (class, seed). Faults land in the middle 60 % of the horizon
+    /// and every crash gets a rejoin (staged recovery), so short
+    /// property-test runs still exercise the full fault lifecycle.
+    pub fn random(
+        class: ChaosClass,
+        seed: u64,
+        horizon_s: f64,
+        num_regions: usize,
+        servers_per_region: usize,
+        interval_s: f64,
+    ) -> FaultSchedule {
+        let mut rng = Rng::new(seed ^ 0xc4a0_55ed);
+        let lo = 0.2 * horizon_s;
+        let hi = 0.8 * horizon_s;
+        let mut events = Vec::new();
+        let crash = |rng: &mut Rng, events: &mut Vec<FaultEvent>, t: f64| {
+            let region = rng.below(num_regions);
+            let server = rng.below(servers_per_region);
+            events.push(FaultEvent {
+                t_s: t,
+                kind: FaultKind::ServerCrash { region, server },
+            });
+            let back = t + rng.range_f64(0.25, 0.5) * (horizon_s - t);
+            events.push(FaultEvent {
+                t_s: back,
+                kind: FaultKind::ServerRejoin { region, server },
+            });
+        };
+        let link_fault =
+            |rng: &mut Rng, events: &mut Vec<FaultEvent>, t: f64| {
+                let src = rng.below(num_regions);
+                let mut dst = rng.below(num_regions);
+                if dst == src {
+                    dst = (dst + 1) % num_regions;
+                }
+                let kind = if rng.bool(0.5) {
+                    FaultKind::LinkPartition { src, dst }
+                } else {
+                    FaultKind::LinkDegrade {
+                        src,
+                        dst,
+                        bandwidth_scale: rng.range_f64(0.1, 0.6),
+                        extra_latency_s: rng.range_f64(0.0, 0.2),
+                    }
+                };
+                events.push(FaultEvent { t_s: t, kind });
+                let back = t + rng.range_f64(0.25, 0.5) * (horizon_s - t);
+                events.push(FaultEvent {
+                    t_s: back,
+                    kind: FaultKind::LinkRestore { src, dst },
+                });
+            };
+        match class {
+            ChaosClass::CrashOnly => {
+                for _ in 0..1 + rng.below(2) {
+                    let t = rng.range_f64(lo, hi);
+                    crash(&mut rng, &mut events, t);
+                }
+            }
+            ChaosClass::PartitionOnly => {
+                for _ in 0..1 + rng.below(2) {
+                    let t = rng.range_f64(lo, hi);
+                    link_fault(&mut rng, &mut events, t);
+                }
+            }
+            ChaosClass::Mixed => {
+                let t = rng.range_f64(lo, hi);
+                crash(&mut rng, &mut events, t);
+                let t = rng.range_f64(lo, hi);
+                link_fault(&mut rng, &mut events, t);
+                events.push(FaultEvent {
+                    t_s: rng.range_f64(lo, hi),
+                    kind: FaultKind::FlashCrowd {
+                        region: rng.below(num_regions),
+                        tenant: 0,
+                        count: 10 + rng.below(30),
+                    },
+                });
+            }
+            ChaosClass::CrashRace => {
+                // a flash crowd pressures the autoscaler into scale-out
+                // copies, then the crash lands a hair after the next
+                // scheduling boundary — while those copies are in flight
+                let boundary =
+                    (rng.range_f64(lo, hi) / interval_s).ceil() * interval_s;
+                events.push(FaultEvent {
+                    t_s: boundary - 0.5 * interval_s,
+                    kind: FaultKind::FlashCrowd {
+                        region: rng.below(num_regions),
+                        tenant: 0,
+                        count: 20 + rng.below(30),
+                    },
+                });
+                crash(
+                    &mut rng,
+                    &mut events,
+                    boundary + rng.range_f64(0.05, 0.5),
+                );
+            }
+        }
+        FaultSchedule::new(events)
+    }
+}
+
+/// Per-fault outcome row (one per [`FaultEvent`]). The fault's window
+/// runs from its own instant to the next fault's (or the end of the
+/// run), so windows tile the run deterministically.
+#[derive(Debug, Clone)]
+pub struct FaultRecord {
+    pub t_s: f64,
+    /// Stable label ([`FaultKind::label`]).
+    pub label: String,
+    /// Crash faults: seconds from the crash until every lost expert's
+    /// coverage was restored. −1.0 = never recovered (or not a crash).
+    pub recovery_s: f64,
+    /// Crash faults: crash → the boundary that staged the emergency
+    /// re-covers (detection + re-queue share of recovery). −1.0 = n/a.
+    pub detect_s: f64,
+    /// Crash faults: staging → coverage restored (the re-copy share).
+    /// −1.0 = n/a.
+    pub recopy_s: f64,
+    /// Requests offered anywhere during the fault's window.
+    pub offered_during: u64,
+    /// Requests shed anywhere during the window.
+    pub shed_during: u64,
+    /// Requests completed anywhere during the window.
+    pub completed_during: u64,
+    /// Window completions that blew the SLO.
+    pub violations_during: u64,
+}
+
+impl FaultRecord {
+    /// SLO attainment *through* this fault's window: completions within
+    /// the SLO over everything offered in the window (sheds count
+    /// against; 1.0 when the window offered nothing). Completions are
+    /// attributed to the window they finish in — a throughput-style
+    /// attainment, deterministic and exactly conserved across windows.
+    pub fn attainment(&self) -> f64 {
+        if self.offered_during == 0 {
+            1.0
+        } else {
+            (self.completed_during.saturating_sub(self.violations_during))
+                as f64
+                / self.offered_during as f64
+        }
+    }
+}
+
+/// Everything one chaos run observed: the full regions report, the
+/// per-fault rows, and the pass/fail verdicts the bench guard enforces.
+#[derive(Debug, Clone)]
+pub struct ChaosReport {
+    pub regions: RegionsReport,
+    pub faults: Vec<FaultRecord>,
+    /// Server crashes processed across every region.
+    pub crashes: u64,
+    /// Emergency re-cover copies that landed.
+    pub recoveries: u64,
+    /// Every crash fault's coverage was restored and no emergency
+    /// reservation was left pending at the end of the run.
+    pub recovery_complete: bool,
+    /// Exact request conservation: per-region
+    /// `offered == (admitted − spilled_in) + (shed − spill_shed) +
+    /// spilled_out`, `forwarded_in == spilled_in`,
+    /// `completed == admitted`, and the global aggregates.
+    pub conservation_exact: bool,
+    /// Ledger balance at the end of the run: zero outstanding
+    /// reservations and every region's resident + reserved ≤ capacity.
+    pub ledger_balanced: bool,
+    /// Max recovery time over crash faults (−1.0 with no crashes, or if
+    /// any crash never recovered).
+    pub max_recovery_s: f64,
+}
+
+impl ChaosReport {
+    /// The bench/CI pass condition: recovery completed and the books
+    /// stayed exact through every fault.
+    pub fn ok(&self) -> bool {
+        self.recovery_complete && self.conservation_exact && self.ledger_balanced
+    }
+}
+
+/// A chaos experiment: the canonical regions scenario plus a fault
+/// script. Deterministic per (scenario seed, schedule) — same inputs,
+/// byte-identical [`ChaosReport`] serialization.
+#[derive(Debug, Clone)]
+pub struct ChaosScenario {
+    pub base: RegionsScenario,
+    pub schedule: FaultSchedule,
+}
+
+impl ChaosScenario {
+    /// The canonical chaos run (`BENCH_chaos.json`, the `chaos` CLI
+    /// default): the default staggered-diurnal 3-region scenario with
+    /// the autoscaler on (so copy-races-crash windows exist), a 15 s
+    /// control interval (detection latency is part of what the report
+    /// measures), and [`FaultSchedule::canonical`].
+    pub fn canonical(seed: u64) -> ChaosScenario {
+        ChaosScenario {
+            base: RegionsScenario {
+                autoscale: true,
+                interval_s: 15.0,
+                seed,
+                ..RegionsScenario::default()
+            },
+            schedule: FaultSchedule::canonical(),
+        }
+    }
+
+    /// Run the scenario through the schedule.
+    pub fn run(&self) -> ChaosReport {
+        self.base.build().run_chaos(&self.schedule)
+    }
+}
+
+/// Deterministic metrics for `BENCH_chaos.json`: recovery, per-fault
+/// attainment, and the verdict booleans (as 0/1 numbers, like every
+/// other bench file). No wall-clock quantities.
+pub fn chaos_metrics(report: &ChaosReport) -> Json {
+    let r = &report.regions;
+    let mut j = Json::obj();
+    j.set("offered", Json::Num(r.offered as f64));
+    j.set("admitted", Json::Num(r.admitted as f64));
+    j.set("shed", Json::Num(r.shed as f64));
+    j.set("completed", Json::Num(r.completed as f64));
+    j.set("spilled", Json::Num(r.spilled as f64));
+    j.set("spill_shed", Json::Num(r.spill_shed as f64));
+    j.set("shed_rate", Json::Num(r.shed_rate()));
+    j.set("p50_s", Json::Num(r.p50_s));
+    j.set("p95_s", Json::Num(r.p95_s));
+    j.set("p99_s", Json::Num(r.p99_s));
+    j.set("slo_attainment", Json::Num(r.attainment()));
+    j.set("crashes", Json::Num(report.crashes as f64));
+    j.set("recoveries", Json::Num(report.recoveries as f64));
+    j.set("max_recovery_s", Json::Num(report.max_recovery_s));
+    j.set(
+        "recovery_complete",
+        Json::Num(report.recovery_complete as u64 as f64),
+    );
+    j.set(
+        "conservation_exact",
+        Json::Num(report.conservation_exact as u64 as f64),
+    );
+    j.set(
+        "ledger_balanced",
+        Json::Num(report.ledger_balanced as u64 as f64),
+    );
+    j.set("faults", Json::Num(report.faults.len() as f64));
+    for (i, f) in report.faults.iter().enumerate() {
+        let base = format!("fault{i}_{}", f.label);
+        j.set(&format!("{base}_t_s"), Json::Num(f.t_s));
+        j.set(&format!("{base}_recovery_s"), Json::Num(f.recovery_s));
+        j.set(&format!("{base}_detect_s"), Json::Num(f.detect_s));
+        j.set(&format!("{base}_recopy_s"), Json::Num(f.recopy_s));
+        j.set(
+            &format!("{base}_offered"),
+            Json::Num(f.offered_during as f64),
+        );
+        j.set(&format!("{base}_shed"), Json::Num(f.shed_during as f64));
+        j.set(&format!("{base}_attainment"), Json::Num(f.attainment()));
+    }
+    j
+}
+
+/// The complete `BENCH_chaos.json` document (byte-identical across runs
+/// at the same seed — the replay regression in
+/// `tests/chaos_properties.rs` locks exactly this).
+pub fn bench_file_json(report: &ChaosReport) -> Json {
+    Json::from_pairs(vec![
+        ("suite", Json::Str("chaos".into())),
+        ("metrics", chaos_metrics(report)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedules_are_sorted_and_deterministic() {
+        let a = FaultSchedule::random(
+            ChaosClass::Mixed,
+            42,
+            300.0,
+            3,
+            3,
+            15.0,
+        );
+        let b = FaultSchedule::random(
+            ChaosClass::Mixed,
+            42,
+            300.0,
+            3,
+            3,
+            15.0,
+        );
+        assert_eq!(a.events, b.events, "same seed, same schedule");
+        for w in a.events.windows(2) {
+            assert!(w[0].t_s <= w[1].t_s, "sorted by time");
+        }
+        assert!(!a.events.is_empty());
+    }
+
+    #[test]
+    fn every_crash_gets_a_rejoin_inside_the_horizon() {
+        for seed in 0..20u64 {
+            for class in [ChaosClass::CrashOnly, ChaosClass::CrashRace] {
+                let s = FaultSchedule::random(
+                    class, seed, 240.0, 3, 3, 15.0,
+                );
+                let crashes: Vec<(usize, usize, f64)> = s
+                    .events
+                    .iter()
+                    .filter_map(|e| match e.kind {
+                        FaultKind::ServerCrash { region, server } => {
+                            Some((region, server, e.t_s))
+                        }
+                        _ => None,
+                    })
+                    .collect();
+                assert!(!crashes.is_empty(), "{} must crash", class.name());
+                for (region, server, t) in crashes {
+                    let rejoin = s.events.iter().any(|e| {
+                        e.t_s > t
+                            && e.t_s < 240.0
+                            && e.kind
+                                == (FaultKind::ServerRejoin {
+                                    region,
+                                    server,
+                                })
+                    });
+                    assert!(
+                        rejoin,
+                        "crash r{region}s{server} at {t:.1}s needs a rejoin"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn canonical_schedule_restores_every_fault() {
+        let s = FaultSchedule::canonical();
+        let mut crashed = std::collections::HashSet::new();
+        let mut partitioned = std::collections::HashSet::new();
+        let mut degraded = std::collections::HashSet::new();
+        for e in &s.events {
+            match e.kind {
+                FaultKind::ServerCrash { region, server } => {
+                    crashed.insert((region, server));
+                }
+                FaultKind::ServerRejoin { region, server } => {
+                    crashed.remove(&(region, server));
+                }
+                FaultKind::LinkPartition { src, dst } => {
+                    partitioned.insert((src, dst));
+                }
+                FaultKind::LinkDegrade { src, dst, .. } => {
+                    degraded.insert((src, dst));
+                }
+                FaultKind::LinkRestore { src, dst } => {
+                    partitioned.remove(&(src, dst));
+                    degraded.remove(&(src, dst));
+                }
+                FaultKind::FlashCrowd { .. } => {}
+            }
+        }
+        assert!(crashed.is_empty(), "every crash rejoins");
+        assert!(partitioned.is_empty(), "every partition restores");
+        assert!(degraded.is_empty(), "every degradation restores");
+    }
+}

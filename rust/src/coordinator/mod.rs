@@ -41,7 +41,9 @@ use crate::autoscale::{
     AutoscaleConfig, AutoscaleLog, Autoscaler, ScaleDecision,
 };
 use crate::config::{ClusterConfig, ModelConfig};
-use crate::engine::{CostModel, Engine, EngineConfig, ServeReport};
+use crate::engine::{
+    CostModel, Engine, EngineConfig, ScaleEvent, ScaleKind, ServeReport,
+};
 use crate::moe::ActivationStats;
 use crate::placement::migration::{self, MigrationCtx, MigrationDecision};
 use crate::placement::{MemoryLedger, Placement, PlacementAlgo};
@@ -162,6 +164,20 @@ pub struct Coordinator {
     /// expert boost derived from traffic spilled *into* this region: the
     /// receiving autoscaler prefers replicating what the spill activates
     region_boost: Vec<f64>,
+    /// Emergency re-cover copies in flight, keyed
+    /// `(layer, expert, dst_server, dst_gpu)`. These ledger reservations
+    /// are owned by the *coordinator* (not the autoscaler's `pending_out`),
+    /// booked when a crash leaves an expert with zero coverage; each is
+    /// released exactly once when its completion folds back in — whether
+    /// or not the copy applied (the destination may itself have died).
+    pub recover_pending: Vec<(usize, usize, usize, usize)>,
+    /// Emergency re-cover copies that landed (observability).
+    pub recoveries: u64,
+    /// Sticky "a fault has happened" latch: once any server has been seen
+    /// dead, the (cheap, read-only) coverage check runs at every boundary
+    /// for the rest of the run — a crash-then-rejoin must not strand
+    /// still-missing experts just because nobody is dead *right now*.
+    fault_seen: bool,
 }
 
 impl Coordinator {
@@ -186,6 +202,9 @@ impl Coordinator {
             tenant_boost: Vec::new(),
             region_pressure: 0.0,
             region_boost: Vec::new(),
+            recover_pending: Vec::new(),
+            recoveries: 0,
+            fault_seen: false,
             model: model.clone(),
             cluster: cluster.clone(),
             cfg,
@@ -331,10 +350,15 @@ impl Coordinator {
         // (a burst arriving while a migration is in flight would otherwise
         // be invisible and the scale-out reaction delayed past the burst)
         let completions = engine.take_scale_completions();
+        self.fold_completions(&completions);
         if let Some(a) = &mut self.autoscaler {
-            a.on_completions(&completions, &mut self.ledger);
             a.observe(&delta, &engine.placement);
         }
+        // Emergency re-cover: runs *before* arbitration and even when scale
+        // ops are in flight — a crash that zeroed an expert's coverage
+        // cannot wait out rule 2a. No-op whenever coverage is full, so the
+        // no-fault path is byte-identical.
+        self.recover_missing(engine, t);
         // observability snapshot: replica state as of this boundary
         // (completions folded, this tick's decisions not yet taken)
         if let Some(a) = &self.autoscaler {
@@ -378,6 +402,121 @@ impl Coordinator {
             self.autoscale_step(engine, t);
         }
         adopted
+    }
+
+    /// Fold completed scale operations back into planner state: the
+    /// autoscaler settles its own `pending_out` reservations, then any
+    /// completion matching an emergency re-cover entry releases the
+    /// coordinator-owned reservation — **exactly once, applied or not**
+    /// (a copy racing a crash still refunds; the crashed destination's
+    /// memory is never double-released). Both the offline driver
+    /// ([`Coordinator::on_interval`]) and the gateway's final report pass
+    /// route through here so no completion is ever folded twice.
+    pub fn fold_completions(&mut self, completions: &[ScaleEvent]) {
+        if let Some(a) = &mut self.autoscaler {
+            a.on_completions(completions, &mut self.ledger);
+        }
+        if self.recover_pending.is_empty() {
+            return;
+        }
+        for ev in completions {
+            if ev.kind != ScaleKind::Out {
+                continue;
+            }
+            let key = (ev.layer, ev.expert, ev.server, ev.gpu);
+            if let Some(pos) =
+                self.recover_pending.iter().position(|&k| k == key)
+            {
+                self.recover_pending.swap_remove(pos);
+                self.ledger.release(ev.server, ev.gpu, self.model.expert_bytes);
+                if ev.applied {
+                    self.recoveries += 1;
+                }
+            }
+        }
+    }
+
+    /// Emergency re-placement (chaos recovery): for every expert a crash
+    /// left with **zero coverage**, stage one replica copy onto the live
+    /// GPU with the most ledger-free memory, sourced from a surviving
+    /// holder (active *or* draining) when one exists, else reloaded from
+    /// the destination's own host RAM (`src == dst` books no network
+    /// transfer). Reservations go through the shared [`MemoryLedger`] like
+    /// every other planner, and in-flight entries are tracked in
+    /// `recover_pending` so a slow copy is never double-staged.
+    fn recover_missing(&mut self, engine: &mut Engine, t: f64) {
+        if engine.crashes > 0 {
+            self.fault_seen = true;
+        }
+        if !self.fault_seen {
+            return;
+        }
+        let missing = engine.placement.missing_experts();
+        for (layer, expert) in missing {
+            if self
+                .recover_pending
+                .iter()
+                .any(|&(l, e, _, _)| l == layer && e == expert)
+            {
+                continue;
+            }
+            // destination: live GPU with the most ledger-free bytes
+            // (first-index tie-break keeps this deterministic)
+            let mut best: Option<(usize, usize, u64)> = None;
+            for s in 0..engine.placement.gpus.len() {
+                if engine.server_dead(s) {
+                    continue;
+                }
+                for g in 0..engine.placement.gpus[s] {
+                    let free = self.ledger.free(&engine.placement, s, g);
+                    if free >= self.model.expert_bytes
+                        && best.map(|(_, _, bf)| free > bf).unwrap_or(true)
+                    {
+                        best = Some((s, g, free));
+                    }
+                }
+            }
+            let Some((dst_server, dst_gpu, _)) = best else {
+                continue; // no live GPU fits — retry next boundary
+            };
+            let src_server = (0..engine.placement.gpus.len())
+                .find(|&s| {
+                    !engine.server_dead(s)
+                        && engine.placement.server_holds(s, layer, expert)
+                })
+                .unwrap_or(dst_server);
+            if !self.ledger.try_reserve(
+                &engine.placement,
+                dst_server,
+                dst_gpu,
+                self.model.expert_bytes,
+            ) {
+                continue;
+            }
+            match engine.schedule_scale_out(
+                layer, expert, dst_server, dst_gpu, src_server,
+            ) {
+                Ok(at) => {
+                    self.recover_pending
+                        .push((layer, expert, dst_server, dst_gpu));
+                    crate::util::log::info(
+                        "recover",
+                        &format!(
+                            "t={t:.0}s emergency re-cover l{layer}e{expert} \
+                             -> s{dst_server}g{dst_gpu} (from s{src_server}, \
+                             applies t={at:.1}s)"
+                        ),
+                    );
+                }
+                Err(_) => {
+                    self.ledger.release(
+                        dst_server,
+                        dst_gpu,
+                        self.model.expert_bytes,
+                    );
+                }
+            }
+        }
     }
 
     /// One replica-control pass: plan against the current placement (with

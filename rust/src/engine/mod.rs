@@ -137,6 +137,11 @@ enum Ev {
     ApplyScaleOut(usize, usize, usize, usize),
     /// Drain window elapsed, evict the replica: (server, gpu, layer, expert).
     ApplyScaleIn(usize, usize, usize, usize),
+    /// Fault injection: the server fail-stops, losing its GPU-resident
+    /// experts (chaos schedule).
+    ServerCrash(usize),
+    /// Fault recovery: the crashed server rejoins empty.
+    ServerRejoin(usize),
 }
 
 /// Which direction a completed scale operation went.
@@ -257,6 +262,14 @@ pub struct Engine {
     scale_outs_pending: usize,
     /// replicas currently draining toward eviction
     drains_pending: usize,
+    /// crashed (fail-stopped) servers: no new admissions, no new replica
+    /// bookings, no scale-out applies land here until rejoin. Always
+    /// all-false outside chaos runs, so the no-fault path is untouched.
+    dead: Vec<bool>,
+    /// cumulative server crashes processed (0 outside chaos runs); lets
+    /// the coordinator notice a crash-and-rejoin that both landed inside
+    /// one control interval
+    pub crashes: u64,
 }
 
 impl Engine {
@@ -295,6 +308,8 @@ impl Engine {
             scale_events_read: 0,
             scale_outs_pending: 0,
             drains_pending: 0,
+            dead: vec![false; cluster_cfg.num_servers()],
+            crashes: 0,
             placement,
             pending_placement: None,
             model: model.clone(),
@@ -513,6 +528,16 @@ impl Engine {
                  l{layer}e{expert}"
             )));
         }
+        if self.dead[dst_server] {
+            return Err(crate::Error::Placement(format!(
+                "scale-out target s{dst_server} is crashed"
+            )));
+        }
+        if self.dead[src_server] {
+            return Err(crate::Error::Placement(format!(
+                "scale-out source s{src_server} is crashed"
+            )));
+        }
         let now = self.now;
         let bytes = self.model.expert_bytes as f64;
         let ready = if src_server != dst_server {
@@ -567,6 +592,53 @@ impl Engine {
         Ok(at)
     }
 
+    /// Schedule a **server crash** at virtual time `at` (≥ now): the
+    /// server fail-stops, every expert replica it holds is lost, and it
+    /// takes no new admissions or replica bookings until a rejoin. The
+    /// event is processed at its exact virtual time inside
+    /// [`Engine::run_until`], so whole fault schedules can be installed
+    /// upfront.
+    pub fn schedule_server_crash(&mut self, at: f64, server: usize) {
+        self.push_event(at.max(self.now), Ev::ServerCrash(server));
+    }
+
+    /// Schedule a **server rejoin** at virtual time `at`: the server
+    /// comes back empty (its experts must be re-covered by the
+    /// coordinator) and starts taking admissions and bookings again.
+    pub fn schedule_server_rejoin(&mut self, at: f64, server: usize) {
+        self.push_event(at.max(self.now), Ev::ServerRejoin(server));
+    }
+
+    /// Is the server currently crashed?
+    #[inline]
+    pub fn server_dead(&self, server: usize) -> bool {
+        self.dead[server]
+    }
+
+    /// Any server currently crashed? (Cheap guard for no-fault paths.)
+    #[inline]
+    pub fn any_server_dead(&self) -> bool {
+        self.dead.iter().any(|&d| d)
+    }
+
+    /// Drop every replica (active or draining) the server holds from the
+    /// placement. Used on crash, and again after a stale migration
+    /// placement installs while the server is down — a crashed server
+    /// must never resurrect with experts it no longer has in memory.
+    fn purge_server_replicas(&mut self, server: usize) {
+        for g in 0..self.placement.gpus[server] {
+            for l in 0..self.model.num_layers {
+                for e in 0..self.model.num_experts {
+                    if self.placement.gpu_has(server, g, l, e) {
+                        self.placement
+                            .remove(server, g, l, e)
+                            .expect("replica present by gpu_has");
+                    }
+                }
+            }
+        }
+    }
+
     /// Run until the event queue is empty or `until` is passed. Returns
     /// the time of the next pending event (if stopped early).
     pub fn run_until(&mut self, until: f64) -> Option<f64> {
@@ -610,14 +682,27 @@ impl Engine {
             Ev::ApplyPlacement => {
                 if let Some(p) = self.pending_placement.take() {
                     self.placement = p;
+                    // a migration staged before a crash still carries the
+                    // dead server's old replicas — strip them so the
+                    // placement never claims memory a crashed server lost
+                    for s in 0..self.dead.len() {
+                        if self.dead[s] {
+                            self.purge_server_replicas(s);
+                        }
+                    }
                 }
             }
             Ev::ApplyScaleOut(s, g, l, e) => {
                 self.scale_outs_pending -= 1;
                 // a migration may have replaced the placement (or filled
                 // the GPU) while the copy was in flight — then the copy is
-                // dropped, reported as applied = false
-                let applied = self.placement.place(s, g, l, e).is_ok();
+                // dropped, reported as applied = false; likewise a copy
+                // racing a crash: the destination died while the weights
+                // were in flight, so the replica never materializes (the
+                // coordinator still sees the completion and refunds the
+                // ledger reservation exactly once)
+                let applied =
+                    !self.dead[s] && self.placement.place(s, g, l, e).is_ok();
                 self.scale_events.push(ScaleEvent {
                     t_s: self.now,
                     kind: ScaleKind::Out,
@@ -642,6 +727,21 @@ impl Engine {
                     applied,
                 });
                 self.obs.on_scale(false, l, e, s, g, self.now);
+            }
+            Ev::ServerCrash(s) => {
+                if !self.dead[s] {
+                    self.dead[s] = true;
+                    self.crashes += 1;
+                    self.purge_server_replicas(s);
+                    self.obs.on_fault(true, s, self.now);
+                    self.obs.flight_trigger(self.now, "fault_crash");
+                }
+            }
+            Ev::ServerRejoin(s) => {
+                if self.dead[s] {
+                    self.dead[s] = false;
+                    self.obs.on_fault(false, s, self.now);
+                }
             }
         }
     }

@@ -29,7 +29,8 @@
 //! | [`obs`] | deterministic tracing: span recorder, latency decomposition, Chrome trace-event export, flight recorder |
 //! | [`serve`] | online gateway: open-loop arrivals, admission control, continuous batching, replica-aware locality routing, live stats bus; regionalized multi-gateway serving with cross-region spill ([`serve::regions`]) |
 //! | [`autoscale`] | expert replica autoscaler: load EWMAs with hysteresis, scale-out/drained scale-in decisions |
-//! | [`coordinator`] | global scheduler: stats collection, periodic placement refresh, migration execution, migration↔autoscale arbitration |
+//! | [`coordinator`] | global scheduler: stats collection, periodic placement refresh, migration execution, migration↔autoscale arbitration, emergency re-placement after crashes |
+//! | [`chaos`] | fault injection: scripted fault schedules (crashes, link degradation/partition, flash crowds), recovery/SLO-through-fault reporting |
 //! | [`exp`] | one harness per paper table/figure (Table I/II, Fig 2/3/5/6/7/8) |
 //!
 //! ## Quickstart (offline trace replay)
@@ -79,6 +80,7 @@
 //! ```
 
 pub mod autoscale;
+pub mod chaos;
 pub mod cluster;
 pub mod config;
 pub mod coordinator;
@@ -96,6 +98,10 @@ pub mod util;
 /// Convenience re-exports for examples and downstream users.
 pub mod prelude {
     pub use crate::autoscale::{AutoscaleConfig, Autoscaler, ScaleDecision};
+    pub use crate::chaos::{
+        ChaosClass, ChaosReport, ChaosScenario, FaultEvent, FaultKind,
+        FaultSchedule,
+    };
     pub use crate::cluster::{Cluster, RegionTopology};
     pub use crate::config::{ClusterConfig, ModelConfig, WorkloadConfig};
     pub use crate::coordinator::{Coordinator, CoordinatorConfig};

@@ -8,6 +8,7 @@ use std::path::PathBuf;
 use std::process::ExitCode;
 
 use dancemoe::autoscale::AutoscaleConfig;
+use dancemoe::chaos::{ChaosClass, ChaosScenario, FaultSchedule};
 use dancemoe::config::{presets, ClusterConfig, ModelConfig, WorkloadConfig};
 use dancemoe::coordinator::CoordinatorConfig;
 use dancemoe::engine::{warm_stats, ScaleKind};
@@ -159,6 +160,31 @@ fn cli() -> Cli {
                            snapshots here as JSONL (implies --trace)")
                 .opt_flag("flight-out", "write every region's flight-recorder \
                            dumps here as JSON (implies --trace)"),
+            Command::new("chaos", "fault-injected regionalized serving: \
+                          scripted crashes, link partitions/degradations, \
+                          and flash crowds, with emergency re-placement; \
+                          reports recovery time and SLO attainment \
+                          through each fault")
+                .flag("schedule", Some("canonical"), "fault schedule \
+                       (canonical|crash_only|partition_only|mixed|crash_race; \
+                       non-canonical schedules are randomized per --seed)")
+                .flag("regions", Some("3"), "number of regions (3 edge \
+                       servers each; canonical schedule needs exactly 3)")
+                .flag("rps", Some("5.5"), "mean arrival rate per region (req/s)")
+                .flag("horizon", Some("480"), "virtual seconds of arrivals")
+                .flag("interval", Some("15"), "per-region stats-bus / refresh \
+                       interval (s); bounds crash-detection latency")
+                .flag("slo", Some("3"), "latency SLO (s)")
+                .flag("seed", Some("0"), "rng seed (arrivals and randomized \
+                       schedules)")
+                .switch("trace", "record spans and print the latency decomposition")
+                .opt_flag("trace-out", "write one Chrome trace-event JSON over \
+                           every region here (implies --trace)")
+                .opt_flag("metrics-out", "write the region-tagged metrics \
+                           snapshots here as JSONL (implies --trace)")
+                .opt_flag("flight-out", "write every region's flight-recorder \
+                           dumps here as JSON (implies --trace; fault dumps \
+                           land here)"),
             Command::new("exp", "regenerate a paper table/figure \
                           (table1|table2|fig2|fig3|fig5|fig6|fig7|fig8|ablations|all)")
                 .flag("seed", Some("7"), "rng seed")
@@ -409,6 +435,22 @@ fn warn_obs_drops(dropped: u64, dumps_dropped: u64) {
              after the dump cap filled — later breaches left no snapshot"
         );
     }
+}
+
+/// The shared observability epilogue every serving command ends with:
+/// surface the data-loss counters, then write whichever exports were
+/// requested. One funnel, so a new command can't forget the warnings
+/// and the warning/export pairing can't drift between commands.
+fn obs_epilogue(
+    args: &Args,
+    dropped: u64,
+    dumps_dropped: u64,
+    trace: impl FnOnce() -> dancemoe::util::json::Json,
+    metrics: impl FnOnce() -> String,
+    flight: impl FnOnce() -> dancemoe::util::json::Json,
+) -> Result<(), String> {
+    warn_obs_drops(dropped, dumps_dropped);
+    write_obs_files(args, trace, metrics, flight)
 }
 
 /// Render a gateway's communication-cost account: the purpose-tagged
@@ -664,9 +706,10 @@ fn cmd_gateway(args: &Args) -> Result<(), String> {
             cluster.servers.iter().map(|s| s.name.clone()).collect();
         print_comms(&report, &names);
     }
-    warn_obs_drops(report.obs_dropped, report.flight_dumps_dropped);
-    write_obs_files(
+    obs_epilogue(
         args,
+        report.obs_dropped,
+        report.flight_dumps_dropped,
         || gw.trace_json(),
         || gw.metrics_jsonl(),
         || gw.flight_json(),
@@ -830,9 +873,10 @@ fn cmd_autoscale(args: &Args) -> Result<(), String> {
             cluster.servers.iter().map(|s| s.name.clone()).collect();
         print_comms(&report, &names);
     }
-    warn_obs_drops(report.obs_dropped, report.flight_dumps_dropped);
-    write_obs_files(
+    obs_epilogue(
         args,
+        report.obs_dropped,
+        report.flight_dumps_dropped,
         || gw.trace_json(),
         || gw.metrics_jsonl(),
         || gw.flight_json(),
@@ -1018,9 +1062,10 @@ fn cmd_tenants(args: &Args) -> Result<(), String> {
             cluster.servers.iter().map(|s| s.name.clone()).collect();
         print_comms(&report, &names);
     }
-    warn_obs_drops(report.obs_dropped, report.flight_dumps_dropped);
-    write_obs_files(
+    obs_epilogue(
         args,
+        report.obs_dropped,
+        report.flight_dumps_dropped,
         || gw.trace_json(),
         || gw.metrics_jsonl(),
         || gw.flight_json(),
@@ -1187,9 +1232,10 @@ fn cmd_regions(args: &Args) -> Result<(), String> {
             println!("mesh total {:.2} MB", report.mesh_bytes / 1e6);
         }
     }
-    warn_obs_drops(report.obs_dropped, report.flight_dumps_dropped);
-    write_obs_files(
+    obs_epilogue(
         args,
+        report.obs_dropped,
+        report.flight_dumps_dropped,
         || multi.trace_json(),
         || multi.metrics_jsonl(),
         || multi.flight_json(),
@@ -1245,6 +1291,147 @@ fn cmd_regions(args: &Args) -> Result<(), String> {
             100.0 * global.shed_rate(),
             scenario.num_regions * 3,
         );
+    }
+    Ok(())
+}
+
+fn cmd_chaos(args: &Args) -> Result<(), String> {
+    let num_regions = args.get_usize("regions")?;
+    if num_regions < 2 {
+        return Err("--regions must be at least 2 (spill needs a peer)".into());
+    }
+    let interval_s = args.get_f64("interval")?;
+    if interval_s <= 0.0 {
+        return Err("--interval must be positive".into());
+    }
+    let horizon_s = args.get_f64("horizon")?;
+    let seed = args.get_u64("seed")?;
+    let sched_name = args.get_str("schedule");
+    let mut scenario = ChaosScenario::canonical(seed);
+    scenario.base.num_regions = num_regions;
+    scenario.base.rps_per_region = args.get_f64("rps")?;
+    scenario.base.horizon_s = horizon_s;
+    scenario.base.interval_s = interval_s;
+    scenario.base.slo_s = args.get_f64("slo")?;
+    scenario.schedule = match sched_name.as_str() {
+        "canonical" => {
+            if num_regions != 3 {
+                return Err(
+                    "the canonical schedule scripts faults on regions 0–2; \
+                     use --regions 3 or a randomized schedule"
+                        .into(),
+                );
+            }
+            FaultSchedule::canonical()
+        }
+        name => {
+            let class = ChaosClass::ALL
+                .iter()
+                .copied()
+                .find(|c| c.name() == name)
+                .ok_or_else(|| {
+                    format!(
+                        "unknown schedule '{name}' (canonical|crash_only|\
+                         partition_only|mixed|crash_race)"
+                    )
+                })?;
+            FaultSchedule::random(
+                class,
+                seed,
+                horizon_s,
+                num_regions,
+                3,
+                interval_s,
+            )
+        }
+    };
+    println!(
+        "chaos: {} regions, schedule '{}' ({} faults), {:.0}s horizon, \
+         {:.0}s control interval, autoscale on",
+        num_regions,
+        sched_name,
+        scenario.schedule.events.len(),
+        horizon_s,
+        interval_s,
+    );
+
+    let mut multi = scenario.base.build();
+    if obs_wanted(args) {
+        multi.enable_obs(ObsConfig::default());
+    }
+    let report = multi.run_chaos(&scenario.schedule);
+
+    let na = |v: f64, unit: &str| {
+        if v < 0.0 {
+            "—".to_string()
+        } else {
+            format!("{v:.1}{unit}")
+        }
+    };
+    let mut t = Table::new(
+        "faults (window = fault instant → next fault / end of run)",
+        &["fault", "t (s)", "recovery", "detect", "re-copy", "offered",
+          "shed", "attainment"],
+    );
+    for f in &report.faults {
+        t.row(vec![
+            f.label.clone(),
+            format!("{:.0}", f.t_s),
+            na(f.recovery_s, "s"),
+            na(f.detect_s, "s"),
+            na(f.recopy_s, "s"),
+            format!("{}", f.offered_during),
+            format!("{}", f.shed_during),
+            format!("{:.1}%", 100.0 * f.attainment()),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "aggregate  p50 {:.2}s  p95 {:.2}s  p99 {:.2}s   shed rate {:.1}%  \
+         attainment {:.1}%   crashes {}  recoveries {}  max recovery {}",
+        report.regions.p50_s,
+        report.regions.p95_s,
+        report.regions.p99_s,
+        100.0 * report.regions.shed_rate(),
+        100.0 * report.regions.attainment(),
+        report.crashes,
+        report.recoveries,
+        na(report.max_recovery_s, "s"),
+    );
+    println!(
+        "verdicts   recovery_complete {}  conservation_exact {}  \
+         ledger_balanced {}",
+        report.recovery_complete,
+        report.conservation_exact,
+        report.ledger_balanced,
+    );
+    let view = multi.global_view();
+    for row in &view.rows {
+        println!(
+            "ledger   {:<10} resident {:.1} GB  reserved {:.1} GB  of \
+             {:.1} GB",
+            row.name,
+            row.used as f64 / 1e9,
+            row.reserved as f64 / 1e9,
+            row.cap as f64 / 1e9,
+        );
+    }
+    obs_epilogue(
+        args,
+        report.regions.obs_dropped,
+        report.regions.flight_dumps_dropped,
+        || multi.trace_json(),
+        || multi.metrics_jsonl(),
+        || multi.flight_json(),
+    )?;
+    if !report.ok() {
+        return Err(format!(
+            "chaos verdicts failed (recovery_complete={} \
+             conservation_exact={} ledger_balanced={})",
+            report.recovery_complete,
+            report.conservation_exact,
+            report.ledger_balanced,
+        ));
     }
     Ok(())
 }
@@ -1426,6 +1613,7 @@ fn main() -> ExitCode {
         "autoscale" => cmd_autoscale(&args),
         "tenants" => cmd_tenants(&args),
         "regions" => cmd_regions(&args),
+        "chaos" => cmd_chaos(&args),
         "exp" => cmd_exp(&args),
         "calibrate" => cmd_calibrate(&args),
         "forward" => cmd_forward(&args),

@@ -19,6 +19,10 @@ struct Link {
     bytes_per_s: f64,
     busy_until: f64,
     extra_latency_s: f64,
+    /// healthy-state parameters, restored when a chaos-injected
+    /// degradation lifts ([`NetModel::restore_link`])
+    base_bytes_per_s: f64,
+    base_extra_latency_s: f64,
 }
 
 /// Cluster network with per-directed-link FIFO contention.
@@ -50,6 +54,8 @@ impl NetModel {
                     bytes_per_s: bps,
                     busy_until: 0.0,
                     extra_latency_s: 0.0,
+                    base_bytes_per_s: bps,
+                    base_extra_latency_s: 0.0,
                 })
                 .collect(),
             purpose_bytes: vec![0.0; n * n * NUM_PURPOSES],
@@ -74,6 +80,9 @@ impl NetModel {
                     let i = src * n + dst;
                     net.links[i].bytes_per_s *= topo.bandwidth_scale(a, b);
                     net.links[i].extra_latency_s = topo.extra_latency(a, b);
+                    net.links[i].base_bytes_per_s = net.links[i].bytes_per_s;
+                    net.links[i].base_extra_latency_s =
+                        net.links[i].extra_latency_s;
                 }
             }
         }
@@ -99,6 +108,8 @@ impl NetModel {
                     bytes_per_s: bandwidth_bps / 8.0,
                     busy_until: 0.0,
                     extra_latency_s: topo.extra_latency(i / r, i % r),
+                    base_bytes_per_s: bandwidth_bps / 8.0,
+                    base_extra_latency_s: topo.extra_latency(i / r, i % r),
                 })
                 .collect(),
             purpose_bytes: vec![0.0; r * r * NUM_PURPOSES],
@@ -153,6 +164,38 @@ impl NetModel {
         // propagation latency (base + any inter-region extra) is not
         // link-occupying
         done + self.latency_s + self.links[i].extra_latency_s
+    }
+
+    /// Degrade the directed link `src → dst` (chaos fault): bandwidth
+    /// drops to `bandwidth_scale ×` its healthy value and the transfer
+    /// pays `extra_latency_s` on top of the healthy propagation delay.
+    /// `bandwidth_scale` must be positive — a zero-bandwidth link would
+    /// book infinite transfer times, breaking run termination; full
+    /// partitions are masked at the routing layer instead, with this
+    /// pricing covering any traffic already committed to the link.
+    pub fn degrade_link(
+        &mut self,
+        src: usize,
+        dst: usize,
+        bandwidth_scale: f64,
+        extra_latency_s: f64,
+    ) {
+        assert!(
+            bandwidth_scale > 0.0 && bandwidth_scale.is_finite(),
+            "degraded bandwidth must stay positive and finite"
+        );
+        let i = self.idx(src, dst);
+        let l = &mut self.links[i];
+        l.bytes_per_s = l.base_bytes_per_s * bandwidth_scale;
+        l.extra_latency_s = l.base_extra_latency_s + extra_latency_s.max(0.0);
+    }
+
+    /// Restore the directed link `src → dst` to its healthy parameters.
+    pub fn restore_link(&mut self, src: usize, dst: usize) {
+        let i = self.idx(src, dst);
+        let l = &mut self.links[i];
+        l.bytes_per_s = l.base_bytes_per_s;
+        l.extra_latency_s = l.base_extra_latency_s;
     }
 
     /// Reset all timelines (new run) but keep topology.
@@ -312,6 +355,48 @@ mod tests {
         // a different pair is a different link
         let t3 = mesh.book_transfer(1, 2, 1e6, 0.0, 0.0, TransferPurpose::RegionSpill);
         assert!((t3 - t1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degrade_and_restore_reprice_one_link() {
+        let mut n = net();
+        // healthy: 62.5 MB @ 500 Mbps = 1 s payload + 2 ms latency
+        let healthy = n.transfer_estimate_s(0, 1, 62.5e6, 0.0);
+        assert!((healthy - 1.002).abs() < 1e-9);
+        // quarter bandwidth + 100 ms extra: 4 s payload + 2 ms + 100 ms
+        n.degrade_link(0, 1, 0.25, 0.1);
+        let t = n.book_transfer(0, 1, 62.5e6, 0.0, 0.0, TransferPurpose::RegionSpill);
+        assert!((t - (4.0 + 0.002 + 0.1)).abs() < 1e-9, "{t}");
+        // the reverse direction is untouched
+        let rev = n.transfer_estimate_s(1, 0, 62.5e6, 0.0);
+        assert_eq!(rev.to_bits(), healthy.to_bits());
+        // restore returns the exact healthy pricing
+        n.restore_link(0, 1);
+        let back = n.transfer_estimate_s(0, 1, 62.5e6, 0.0);
+        assert_eq!(back.to_bits(), healthy.to_bits());
+        // degrading a topology-priced link compounds on its scaled base
+        let m = ModelConfig::mixtral_8x7b_sim();
+        let c = ClusterConfig::edge_testbed_3_for(&m);
+        let topo = crate::cluster::topology::RegionTopology::contiguous(
+            &[1, 2],
+            0.05,
+            0.5,
+        );
+        let mut priced = NetModel::with_topology(&c, &topo);
+        priced.degrade_link(0, 1, 0.5, 0.0);
+        // 500 Mbps × 0.5 (region) × 0.5 (fault) = 4 s for 62.5 MB
+        let cross = priced.transfer_estimate_s(0, 1, 62.5e6, 0.0);
+        assert!((cross - (4.0 + 0.002 + 0.05)).abs() < 1e-9, "{cross}");
+        priced.restore_link(0, 1);
+        let healed = priced.transfer_estimate_s(0, 1, 62.5e6, 0.0);
+        assert!((healed - (2.0 + 0.002 + 0.05)).abs() < 1e-9, "{healed}");
+    }
+
+    #[test]
+    #[should_panic(expected = "positive")]
+    fn zero_bandwidth_degradation_is_rejected() {
+        let mut n = net();
+        n.degrade_link(0, 1, 0.0, 0.0);
     }
 
     #[test]

@@ -151,6 +151,12 @@ fn args_of(ev: &SpanEvent) -> Json {
             a.set("replicas_moved", Json::Num(ev.a as f64));
         }
         SpanKind::FlightTrigger => {}
+        SpanKind::Fault => {
+            a.set(
+                "event",
+                Json::Str(if ev.a == 1 { "crash" } else { "rejoin" }.into()),
+            );
+        }
     }
     a
 }
@@ -201,7 +207,10 @@ fn emit(out: &mut Vec<Json>, pid_base: u32, ev: &SpanEvent) {
         SpanKind::Migration => {
             out.push(complete(ev, pid, TID_CONTROL));
         }
-        SpanKind::ScaleOut | SpanKind::ScaleIn | SpanKind::FlightTrigger => {
+        SpanKind::ScaleOut
+        | SpanKind::ScaleIn
+        | SpanKind::FlightTrigger
+        | SpanKind::Fault => {
             out.push(instant(ev, pid, TID_CONTROL));
         }
         SpanKind::SpillForward => {

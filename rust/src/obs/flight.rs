@@ -2,7 +2,8 @@
 //!
 //! The ring overwrites its oldest entry on overflow, so memory is bounded
 //! by construction no matter how long a run is. When the gateway detects
-//! an SLO-window breach or a shed spike it snapshots the ring into a
+//! an SLO-window breach or a shed spike — or the engine injects a server
+//! crash from a chaos schedule — it snapshots the ring into a
 //! [`FlightDump`] — the forensic record of "what the system was doing
 //! right before things went wrong" that post-hoc percentiles cannot give.
 
@@ -67,7 +68,10 @@ impl FlightRing {
 pub struct FlightDump {
     /// Virtual time of the trigger (an interval boundary).
     pub t_s: f64,
-    /// What tripped it: `"slo_breach"` or `"shed_spike"`.
+    /// What tripped it: `"slo_breach"`, `"shed_spike"`,
+    /// `"unpaid_decision"`, or — in chaos runs — `"fault_crash"` (the
+    /// engine snapshots the ring the instant a server fail-stops, so the
+    /// dump ends at the fault timestamp).
     pub reason: &'static str,
     /// Ring contents at the trigger, oldest first.
     pub events: Vec<SpanEvent>,

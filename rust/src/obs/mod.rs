@@ -88,6 +88,8 @@ pub enum SpanKind {
     ScaleIn,
     /// Flight-recorder dump triggered (instant).
     FlightTrigger,
+    /// Fault injected or recovered (instant; `a` = 1 crash / 0 rejoin).
+    Fault,
 }
 
 impl SpanKind {
@@ -107,6 +109,7 @@ impl SpanKind {
             SpanKind::ScaleOut => "scale_out",
             SpanKind::ScaleIn => "scale_in",
             SpanKind::FlightTrigger => "flight_trigger",
+            SpanKind::Fault => "fault",
         }
     }
 }
@@ -750,6 +753,28 @@ impl Obs {
             gpu: gpu as u16,
             a: layer as u32,
             b: expert as u32,
+        });
+    }
+
+    /// A fault event hit `server` at `now` (`crash` = true for the
+    /// fail-stop, false for the rejoin). Recorded as an instant span on
+    /// the server's control lane; the engine pairs the crash with a
+    /// `"fault_crash"` flight trigger so the ring snapshot ends exactly
+    /// at the fault timestamp.
+    #[inline]
+    pub fn on_fault(&mut self, crash: bool, server: usize, now: f64) {
+        if !self.enabled {
+            return;
+        }
+        self.record(SpanEvent {
+            t_s: now,
+            dur_s: 0.0,
+            kind: SpanKind::Fault,
+            req: NO_REQ,
+            server: server as u16,
+            gpu: 0,
+            a: crash as u32,
+            b: 0,
         });
     }
 

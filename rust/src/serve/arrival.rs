@@ -305,6 +305,16 @@ impl ArrivalSource {
     pub fn issued(&self) -> usize {
         self.issued
     }
+
+    /// Mint a fresh request id from the same dense space scheduled
+    /// arrivals draw from. Used by chaos fault injection (flash crowds)
+    /// so synthetic requests stay unique per gateway without inflating
+    /// the id range the observability layer indexes by.
+    pub fn mint_id(&mut self) -> usize {
+        let id = self.issued;
+        self.issued += 1;
+        id
+    }
 }
 
 #[cfg(test)]

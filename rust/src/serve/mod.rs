@@ -633,6 +633,12 @@ impl Gateway {
             std::slice::from_ref(&home)
         };
         for (rank, &server) in order.iter().enumerate() {
+            // never admit onto a crashed server (chaos runs): the walk
+            // falls through to the next preference, so faults degrade to
+            // re-routes instead of black holes
+            if self.engine.server_dead(server) {
+                continue;
+            }
             let mut routed = req.clone();
             routed.server = server;
             if self.admission.offer(server, routed, now) {
@@ -975,9 +981,7 @@ impl Gateway {
         // post-run consumers of the coordinator's ledger / autoscaler
         // state see no phantom reservations or unpromoted replicas
         let completions = self.engine.take_scale_completions();
-        if let Some(a) = &mut self.coordinator.autoscaler {
-            a.on_completions(&completions, &mut self.coordinator.ledger);
-        }
+        self.coordinator.fold_completions(&completions);
         let serve = std::mem::replace(
             &mut self.engine.report,
             ServeReport::new(

@@ -154,6 +154,11 @@ pub struct MultiGateway {
     /// spilled-request counts per (destination region, task) since the
     /// last exchange (feeds the receiving region's expert boost)
     spill_tasks: Vec<Vec<u64>>,
+    /// partitioned inter-region links (`src·R + dst`), masked out of
+    /// spill routing while a chaos partition is in force. In-flight
+    /// forwards still deliver (a partition must never strand booked
+    /// traffic). Always all-false outside chaos runs.
+    partitioned: Vec<bool>,
     // ---- accounting ------------------------------------------------
     /// forwards attempted, by origin region
     pub spilled_out: Vec<u64>,
@@ -234,6 +239,7 @@ impl MultiGateway {
             pending_free: Vec::new(),
             seq: 0,
             spill_tasks: vec![vec![0; TaskKind::all().len()]; nr],
+            partitioned: vec![false; nr * nr],
             spilled_out: vec![0; nr],
             spilled_in: vec![0; nr],
             spill_shed: vec![0; nr],
@@ -293,6 +299,347 @@ impl MultiGateway {
         self.build_report()
     }
 
+    /// Drive every regional gateway to completion like
+    /// [`MultiGateway::run`], injecting `schedule`'s faults at their
+    /// exact virtual times, and measure recovery.
+    ///
+    /// Engine-level faults (crashes, rejoins) are installed upfront into
+    /// the owning region's event queue and fire at their exact virtual
+    /// times inside the engine; orchestrator-level faults (link
+    /// degradation/partition/restore, flash crowds) are applied by this
+    /// loop, whose step times include the next pending fault so no fault
+    /// is ever applied late. Recovery is tracked per crash: *detection*
+    /// ends at the scheduling boundary that staged the emergency
+    /// re-covers, *re-copy* ends when every lost expert's coverage is
+    /// restored.
+    pub fn run_chaos(
+        &mut self,
+        schedule: &crate::chaos::FaultSchedule,
+    ) -> crate::chaos::ChaosReport {
+        use crate::chaos::{ChaosReport, FaultKind, FaultRecord};
+        struct CrashTrack {
+            fault: usize,
+            region: usize,
+            server: usize,
+            t_crash: f64,
+            seen_dead: bool,
+            t_staged: Option<f64>,
+            done: bool,
+        }
+        let nr = self.gateways.len();
+        for ev in &schedule.events {
+            match ev.kind {
+                FaultKind::ServerCrash { region, server } => self.gateways
+                    [region]
+                    .engine
+                    .schedule_server_crash(ev.t_s, server),
+                FaultKind::ServerRejoin { region, server } => self.gateways
+                    [region]
+                    .engine
+                    .schedule_server_rejoin(ev.t_s, server),
+                _ => {}
+            }
+        }
+        let n = schedule.events.len();
+        let mut records: Vec<FaultRecord> = schedule
+            .events
+            .iter()
+            .map(|ev| FaultRecord {
+                t_s: ev.t_s,
+                label: ev.kind.label(),
+                recovery_s: -1.0,
+                detect_s: -1.0,
+                recopy_s: -1.0,
+                offered_during: 0,
+                shed_during: 0,
+                completed_during: 0,
+                violations_during: 0,
+            })
+            .collect();
+        let mut crash_tracks: Vec<CrashTrack> = Vec::new();
+        // fault windows tile the run: each opens at its fault's instant
+        // and closes at the next fault's (or the end of the run)
+        let mut open: Option<(usize, (u64, u64, Vec<usize>))> = None;
+        let mut fault_idx = 0usize;
+        let mut now = 0.0;
+        loop {
+            let mut work = !self.pending.is_empty() || fault_idx < n;
+            for gw in &self.gateways {
+                work = work || gw.has_work();
+            }
+            if !work {
+                break;
+            }
+            let mut t_next = self.next_exchange;
+            for gw in &self.gateways {
+                if let Some(t) = gw.next_action_time(now) {
+                    t_next = t_next.min(t);
+                }
+                if gw.next_interval.is_finite() {
+                    t_next = t_next.min(gw.next_interval);
+                }
+            }
+            if let Some(&Reverse((bits, _, _))) = self.pending.peek() {
+                t_next = t_next.min(f64::from_bits(bits));
+            }
+            if fault_idx < n {
+                t_next = t_next.min(schedule.events[fault_idx].t_s);
+            }
+            for gw in &mut self.gateways {
+                gw.advance_to(t_next);
+            }
+            now = t_next;
+            // apply orchestrator-level faults due now (crashes/rejoins
+            // were installed upfront and already fired inside advance_to)
+            while fault_idx < n
+                && schedule.events[fault_idx].t_s <= now + 1e-9
+            {
+                if let Some((i, snap)) = open.take() {
+                    self.close_fault_window(&mut records[i], snap);
+                }
+                open = Some((fault_idx, self.chaos_totals()));
+                match schedule.events[fault_idx].kind {
+                    FaultKind::ServerCrash { region, server } => {
+                        crash_tracks.push(CrashTrack {
+                            fault: fault_idx,
+                            region,
+                            server,
+                            t_crash: now,
+                            seen_dead: false,
+                            t_staged: None,
+                            done: false,
+                        });
+                    }
+                    FaultKind::ServerRejoin { .. } => {}
+                    FaultKind::LinkDegrade {
+                        src,
+                        dst,
+                        bandwidth_scale,
+                        extra_latency_s,
+                    } => self.inter_net.degrade_link(
+                        src,
+                        dst,
+                        bandwidth_scale,
+                        extra_latency_s,
+                    ),
+                    FaultKind::LinkPartition { src, dst } => {
+                        self.partitioned[src * nr + dst] = true;
+                    }
+                    FaultKind::LinkRestore { src, dst } => {
+                        self.partitioned[src * nr + dst] = false;
+                        self.inter_net.restore_link(src, dst);
+                    }
+                    FaultKind::FlashCrowd {
+                        region,
+                        tenant,
+                        count,
+                    } => self.inject_flash_crowd(region, tenant, count, now),
+                }
+                fault_idx += 1;
+            }
+            for gw in &mut self.gateways {
+                gw.tick_due(now);
+            }
+            if now + 1e-9 >= self.next_exchange {
+                self.exchange(now);
+                self.next_exchange += self.spill_cfg.exchange_s;
+            }
+            self.deliver_due(now);
+            self.drain_arrivals(now);
+            for gw in &mut self.gateways {
+                gw.dispatch_ready(now);
+            }
+            // recovery bookkeeping per open crash
+            for tr in &mut crash_tracks {
+                if tr.done {
+                    continue;
+                }
+                let gw = &self.gateways[tr.region];
+                if !tr.seen_dead {
+                    if gw.engine.server_dead(tr.server) {
+                        tr.seen_dead = true;
+                    } else {
+                        continue;
+                    }
+                }
+                if tr.t_staged.is_none()
+                    && !gw.coordinator.recover_pending.is_empty()
+                {
+                    tr.t_staged = Some(now);
+                }
+                if gw.engine.placement.missing_experts().is_empty() {
+                    tr.done = true;
+                    records[tr.fault].recovery_s = now - tr.t_crash;
+                    match tr.t_staged {
+                        Some(ts) => {
+                            records[tr.fault].detect_s = ts - tr.t_crash;
+                            records[tr.fault].recopy_s = now - ts;
+                        }
+                        None => {
+                            // surviving replicas covered everything —
+                            // nothing needed staging
+                            records[tr.fault].detect_s = 0.0;
+                            records[tr.fault].recopy_s = 0.0;
+                        }
+                    }
+                }
+            }
+        }
+        for gw in &mut self.gateways {
+            gw.engine.finalize();
+        }
+        // build_report folds the final scale completions into each
+        // coordinator (releasing tail-end reservations and counting the
+        // recoveries that applied after the last boundary), so every
+        // verdict below must read post-fold state
+        let regions = self.build_report();
+        if let Some((i, snap)) = open.take() {
+            self.close_fault_window(&mut records[i], snap);
+        }
+        // a crash whose dead window fell between loop steps still counts
+        // as recovered if the end state has full coverage
+        for tr in &mut crash_tracks {
+            if !tr.done {
+                let gw = &self.gateways[tr.region];
+                if gw.engine.placement.missing_experts().is_empty()
+                    && gw.coordinator.recover_pending.is_empty()
+                {
+                    tr.done = true;
+                    records[tr.fault].recovery_s = now - tr.t_crash;
+                }
+            }
+        }
+        let crashes: u64 =
+            self.gateways.iter().map(|g| g.engine.crashes).sum();
+        let recoveries: u64 = self
+            .gateways
+            .iter()
+            .map(|g| g.coordinator.recoveries)
+            .sum();
+        let mut recovery_complete = crash_tracks.iter().all(|t| t.done);
+        for gw in &self.gateways {
+            recovery_complete &=
+                gw.engine.placement.missing_experts().is_empty();
+            recovery_complete &= gw.coordinator.recover_pending.is_empty();
+        }
+        let view = self.global_view();
+        let ledger_balanced =
+            view.validate().is_ok() && view.total_reserved() == 0;
+        // exact conservation, in wide arithmetic so broken books report
+        // as `false` instead of underflowing
+        let mut conservation_exact = regions.offered as i128
+            == regions.admitted as i128 + regions.shed as i128;
+        let mut spilled_in_total: i128 = 0;
+        for region in &regions.regions {
+            let g = &region.gateway;
+            conservation_exact &= g.offered as i128
+                == (g.admitted as i128 - region.spilled_in as i128)
+                    + (g.shed as i128 - region.spill_shed as i128)
+                    + region.spilled_out as i128;
+            conservation_exact &= g.forwarded_in == region.spilled_in;
+            conservation_exact &=
+                g.serve.records.len() as u64 == g.admitted;
+            spilled_in_total += region.spilled_in as i128;
+        }
+        conservation_exact &= regions.spilled as i128
+            == spilled_in_total + regions.spill_shed as i128;
+        let mut max_recovery_s = -1.0f64;
+        let mut any_crash = false;
+        let mut all_recovered = true;
+        for (i, ev) in schedule.events.iter().enumerate() {
+            if matches!(ev.kind, FaultKind::ServerCrash { .. }) {
+                any_crash = true;
+                if records[i].recovery_s < 0.0 {
+                    all_recovered = false;
+                } else {
+                    max_recovery_s =
+                        max_recovery_s.max(records[i].recovery_s);
+                }
+            }
+        }
+        if !any_crash || !all_recovered {
+            max_recovery_s = -1.0;
+        }
+        ChaosReport {
+            regions,
+            faults: records,
+            crashes,
+            recoveries,
+            recovery_complete,
+            conservation_exact,
+            ledger_balanced,
+            max_recovery_s,
+        }
+    }
+
+    /// Cumulative (offered, shed, per-region completion counts) — the
+    /// snapshot a fault window opens with.
+    fn chaos_totals(&self) -> (u64, u64, Vec<usize>) {
+        let mut offered = 0u64;
+        let mut shed = 0u64;
+        let mut recs = Vec::with_capacity(self.gateways.len());
+        for gw in &self.gateways {
+            offered += gw.offered;
+            shed += gw.admission.shed;
+            recs.push(gw.engine.report.records.len());
+        }
+        (offered, shed, recs)
+    }
+
+    /// Close one fault window: deltas vs the opening snapshot, with
+    /// window completions scanned for SLO violations.
+    fn close_fault_window(
+        &self,
+        rec: &mut crate::chaos::FaultRecord,
+        snap: (u64, u64, Vec<usize>),
+    ) {
+        let (off, shed, _) = self.chaos_totals();
+        rec.offered_during = off - snap.0;
+        rec.shed_during = shed - snap.1;
+        let mut completed = 0u64;
+        let mut violations = 0u64;
+        for (g, gw) in self.gateways.iter().enumerate() {
+            let new = &gw.engine.report.records[snap.2[g]..];
+            completed += new.len() as u64;
+            violations += new
+                .iter()
+                .filter(|x| x.latency_s > gw.cfg.slo_s)
+                .count() as u64;
+        }
+        rec.completed_during = completed;
+        rec.violations_during = violations;
+    }
+
+    /// Inject a chaos flash crowd: `count` deterministic requests for
+    /// `tenant` (clamped to the region's tenant set) offered at `region`
+    /// through the normal admission path — conserved like any arrival.
+    /// Ids are minted from the gateway's own arrival id space so they
+    /// never collide with scheduled arrivals.
+    fn inject_flash_crowd(
+        &mut self,
+        region: usize,
+        tenant: usize,
+        count: usize,
+        now: f64,
+    ) {
+        let gw = &self.gateways[region];
+        let tenant = tenant.min(gw.admission.num_tenants().saturating_sub(1));
+        let num_servers = gw.admission.num_servers();
+        for i in 0..count {
+            let id = self.gateways[region].arrivals.mint_id();
+            let req = Request {
+                id,
+                server: i % num_servers,
+                arrival_s: now,
+                prompt_tokens: 64,
+                output_tokens: 16,
+                task: TaskKind::Arithmetic,
+                tenant,
+            };
+            self.route_arrival(region, req, now);
+        }
+    }
+
     /// Process every region's arrivals due at `now`. A request forwards
     /// to the best peer when its tenant's local headroom is under the
     /// pre-spill watermark, or — the backstop — when every local queue
@@ -300,30 +647,34 @@ impl MultiGateway {
     fn drain_arrivals(&mut self, now: f64) {
         for r in 0..self.gateways.len() {
             while let Some(req) = self.gateways[r].pop_arrival_due(now) {
-                if self.spill_cfg.enabled && self.under_watermark(r, req.tenant)
-                {
-                    if let Some(q) = self.spill_target(r, req.tenant) {
-                        // counted offered at home like any arrival, then
-                        // forwarded ahead of the shed cliff
-                        self.gateways[r].offered += 1;
-                        self.forward(r, q, req, now);
-                        continue;
-                    }
-                }
-                match self.gateways[r].try_admit(req, now) {
-                    Ok(()) => {}
-                    Err(rej) => match self.spill_target(r, rej.tenant) {
-                        Some(q) => self.forward(r, q, rej, now),
-                        None => {
-                            let gw = &mut self.gateways[r];
-                            gw.admission.record_shed_tenant(rej.tenant);
-                            gw.engine
-                                .obs
-                                .on_shed(rej.tenant, rej.server, now);
-                        }
-                    },
-                }
+                self.route_arrival(r, req, now);
             }
+        }
+    }
+
+    /// Route one request arriving at region `r` — the shared
+    /// pre-spill / admit / backstop-spill / shed path for scheduled
+    /// arrivals and chaos flash-crowd injections alike.
+    fn route_arrival(&mut self, r: usize, req: Request, now: f64) {
+        if self.spill_cfg.enabled && self.under_watermark(r, req.tenant) {
+            if let Some(q) = self.spill_target(r, req.tenant) {
+                // counted offered at home like any arrival, then
+                // forwarded ahead of the shed cliff
+                self.gateways[r].offered += 1;
+                self.forward(r, q, req, now);
+                return;
+            }
+        }
+        match self.gateways[r].try_admit(req, now) {
+            Ok(()) => {}
+            Err(rej) => match self.spill_target(r, rej.tenant) {
+                Some(q) => self.forward(r, q, rej, now),
+                None => {
+                    let gw = &mut self.gateways[r];
+                    gw.admission.record_shed_tenant(rej.tenant);
+                    gw.engine.obs.on_shed(rej.tenant, rej.server, now);
+                }
+            },
         }
     }
 
@@ -357,6 +708,9 @@ impl MultiGateway {
         let mut best: Option<(f64, usize)> = None;
         for q in 0..self.gateways.len() {
             if q == src {
+                continue;
+            }
+            if self.partitioned[src * self.gateways.len() + q] {
                 continue;
             }
             let w = &self.windows[q];

@@ -1,0 +1,391 @@
+//! Property/invariant suite for the chaos subsystem.
+//!
+//! Locks the recovery contracts faults must never break:
+//!
+//! - **Conservation**: per region and globally, every arrival is exactly
+//!   one of {admitted, shed, spilled-and-admitted-elsewhere,
+//!   spilled-and-shed} across randomized fault schedules of every class
+//!   (crash-only, partition-only, mixed, crash-racing-scale-out).
+//! - **Ledger balance**: the run ends with zero outstanding memory
+//!   reservations — a crash refunds every in-flight copy exactly once.
+//! - **The copy-races-crash regression**: a scale-out copy in flight to
+//!   a server that dies must refund its reservation exactly once and
+//!   never produce a routable phantom replica.
+//! - **Fault-triggered flight dumps**: at most one dump per fault
+//!   event, ring contents end at the fault timestamp, and the dump-cap
+//!   drop counter surfaces overflow.
+//! - **Deterministic replay**: same seed + schedule ⇒ byte-identical
+//!   `BENCH_chaos.json` serialization (two seeds, matching the pattern
+//!   of the other serving suites), and an empty schedule is
+//!   byte-identical to the plain (fault-free) regions run.
+//!
+//! Everything is deterministic and single-threaded per test, so the
+//! suite passes under any `--test-threads` setting.
+
+use dancemoe::chaos::{
+    bench_file_json, ChaosClass, ChaosReport, ChaosScenario, FaultSchedule,
+};
+use dancemoe::config::{ClusterConfig, ModelConfig};
+use dancemoe::coordinator::{Coordinator, CoordinatorConfig};
+use dancemoe::engine::{CostModel, Engine, EngineConfig, ScaleKind};
+use dancemoe::obs::ObsConfig;
+use dancemoe::placement::uniform;
+use dancemoe::serve::RegionsScenario;
+
+/// Re-assert the spill conservation equations directly on the report —
+/// the suite must not trust `conservation_exact`'s own bookkeeping.
+fn assert_conservation(report: &ChaosReport) {
+    let r = &report.regions;
+    let mut spilled_in_total = 0u64;
+    for region in &r.regions {
+        let g = &region.gateway;
+        assert_eq!(
+            g.offered,
+            (g.admitted - region.spilled_in)
+                + (g.shed - region.spill_shed)
+                + region.spilled_out,
+            "{}: offered must partition into local admits, local sheds \
+             and forwards",
+            region.name
+        );
+        assert_eq!(g.forwarded_in, region.spilled_in, "{}", region.name);
+        assert_eq!(
+            g.serve.records.len() as u64,
+            g.admitted,
+            "{}: admitted requests must complete exactly once",
+            region.name
+        );
+        spilled_in_total += region.spilled_in;
+    }
+    assert_eq!(r.offered, r.admitted + r.shed);
+    assert_eq!(
+        r.spilled,
+        spilled_in_total + r.spill_shed,
+        "every forward resolves to a peer admission or an origin shed"
+    );
+    assert_eq!(r.completed, r.admitted);
+    assert!(report.conservation_exact, "report must agree with the books");
+    assert!(report.ledger_balanced, "reservations must balance to zero");
+}
+
+/// The property-suite scenario: the canonical chaos base (autoscale on,
+/// 15 s control interval) on a shorter horizon so randomized schedules
+/// stay cheap while still leaving post-rejoin room for recovery.
+fn short_base(seed: u64) -> RegionsScenario {
+    RegionsScenario {
+        autoscale: true,
+        interval_s: 15.0,
+        horizon_s: 240.0,
+        seed,
+        ..RegionsScenario::default()
+    }
+}
+
+// ---- satellite 1: conservation + ledger across every fault class ------
+
+#[test]
+fn randomized_crash_only_schedules_conserve_and_recover() {
+    for seed in [5u64, 23] {
+        let base = short_base(seed);
+        let schedule = FaultSchedule::random(
+            ChaosClass::CrashOnly,
+            seed,
+            base.horizon_s,
+            base.num_regions,
+            3,
+            base.interval_s,
+        );
+        let report = ChaosScenario { base, schedule }.run();
+        assert!(report.regions.offered > 0);
+        assert!(report.crashes >= 1, "seed {seed}: schedule must crash");
+        assert!(
+            report.recovery_complete,
+            "seed {seed}: every crash must recover inside the horizon"
+        );
+        assert_conservation(&report);
+    }
+}
+
+#[test]
+fn randomized_partition_only_schedules_conserve() {
+    for seed in [5u64, 23] {
+        let base = short_base(seed);
+        let schedule = FaultSchedule::random(
+            ChaosClass::PartitionOnly,
+            seed,
+            base.horizon_s,
+            base.num_regions,
+            3,
+            base.interval_s,
+        );
+        let report = ChaosScenario { base, schedule }.run();
+        assert!(report.regions.offered > 0);
+        assert_eq!(report.crashes, 0);
+        assert!(report.recovery_complete, "vacuously true without crashes");
+        assert_eq!(report.max_recovery_s, -1.0);
+        assert_conservation(&report);
+    }
+}
+
+#[test]
+fn randomized_mixed_schedules_conserve_and_recover() {
+    for seed in [5u64, 23] {
+        let base = short_base(seed);
+        let schedule = FaultSchedule::random(
+            ChaosClass::Mixed,
+            seed,
+            base.horizon_s,
+            base.num_regions,
+            3,
+            base.interval_s,
+        );
+        let report = ChaosScenario { base, schedule }.run();
+        assert!(report.regions.offered > 0);
+        assert!(report.crashes >= 1);
+        assert!(report.recovery_complete, "seed {seed}");
+        assert_conservation(&report);
+    }
+}
+
+#[test]
+fn crash_racing_scale_out_copies_conserves_the_ledger() {
+    for seed in [5u64, 23] {
+        let base = short_base(seed);
+        let schedule = FaultSchedule::random(
+            ChaosClass::CrashRace,
+            seed,
+            base.horizon_s,
+            base.num_regions,
+            3,
+            base.interval_s,
+        );
+        let report = ChaosScenario { base, schedule }.run();
+        assert!(report.regions.offered > 0);
+        assert!(report.crashes >= 1);
+        assert!(report.recovery_complete, "seed {seed}");
+        // the whole point of the class: a crash landing just after a
+        // boundary (while flash-crowd-provoked copies may be in flight)
+        // still refunds every reservation
+        assert_conservation(&report);
+    }
+}
+
+// ---- satellite 1 (cont.): byte-identical replay ------------------------
+
+#[test]
+fn chaos_replay_is_byte_identical_across_seeds() {
+    for seed in [3u64, 11] {
+        let a = ChaosScenario::canonical(seed).run();
+        let b = ChaosScenario::canonical(seed).run();
+        assert_eq!(
+            bench_file_json(&a).pretty(),
+            bench_file_json(&b).pretty(),
+            "seed {seed}: same seed + schedule must serialize \
+             byte-identically"
+        );
+    }
+}
+
+#[test]
+fn empty_schedule_matches_the_plain_regions_run() {
+    let scenario = RegionsScenario {
+        horizon_s: 200.0,
+        seed: 9,
+        ..RegionsScenario::default()
+    };
+    let plain = scenario.build().run();
+    let chaos = scenario.build().run_chaos(&FaultSchedule::default());
+    // the chaos machinery must be a no-op when no faults are scheduled
+    assert_eq!(plain.offered, chaos.regions.offered);
+    assert_eq!(plain.admitted, chaos.regions.admitted);
+    assert_eq!(plain.shed, chaos.regions.shed);
+    assert_eq!(plain.spilled, chaos.regions.spilled);
+    assert_eq!(plain.p50_s.to_bits(), chaos.regions.p50_s.to_bits());
+    assert_eq!(plain.p99_s.to_bits(), chaos.regions.p99_s.to_bits());
+    assert!(chaos.faults.is_empty());
+    assert_eq!(chaos.crashes, 0);
+    assert_eq!(chaos.max_recovery_s, -1.0);
+    assert!(chaos.recovery_complete);
+    assert_conservation(&chaos);
+}
+
+#[test]
+fn canonical_run_recovers_and_passes_every_verdict() {
+    let report = ChaosScenario::canonical(0).run();
+    assert!(report.crashes >= 1, "canonical schedule crashes r0s1");
+    assert!(report.recoveries >= 1, "emergency re-covers must land");
+    assert!(report.recovery_complete);
+    assert!(
+        report.max_recovery_s > 0.0,
+        "a real crash recovery takes virtual time"
+    );
+    assert!(report.ok(), "the bench/CI pass condition");
+    assert_conservation(&report);
+    // the crash fault's row carries the recovery decomposition
+    let crash = report
+        .faults
+        .iter()
+        .find(|f| f.label.starts_with("crash_"))
+        .expect("canonical schedule has a crash fault");
+    assert!(crash.recovery_s > 0.0);
+    assert!(crash.detect_s >= 0.0);
+    assert!(crash.recopy_s >= 0.0);
+    assert!(crash.recovery_s >= crash.detect_s);
+}
+
+// ---- satellite 2: the copy-races-crash ledger regression ---------------
+
+/// Trimmed topology with proportionally tight GPU memory (the
+/// autoscale-suite preset), so replica placement decisions are real.
+fn small_tight() -> (ModelConfig, ClusterConfig) {
+    let mut m = ModelConfig::mixtral_8x7b_sim();
+    m.num_layers = 4;
+    let mut c = ClusterConfig::edge_testbed_3_for(&m);
+    let slots = (m.total_experts() as f64 * 1.3 / 4.0).ceil() as u64;
+    for s in &mut c.servers {
+        for g in &mut s.gpus {
+            g.mem_bytes = m.expert_bytes * slots;
+        }
+    }
+    (m, c)
+}
+
+#[test]
+fn scale_out_copy_racing_a_crash_refunds_exactly_once() {
+    let (m, c) = small_tight();
+    let mut engine = Engine::new(
+        &m,
+        &c,
+        uniform::place(&m, &c),
+        EngineConfig::default(),
+        CostModel::default(),
+    );
+    let mut coord = Coordinator::new(&m, &c, CoordinatorConfig::default());
+    let (l, e) = (0, 0);
+    let src = engine.placement.owners_ref(l, e)[0].0;
+    let dst = (0..3)
+        .find(|&s| !engine.placement.server_holds(s, l, e))
+        .unwrap();
+    assert!(coord.ledger.try_reserve(
+        &engine.placement,
+        dst,
+        0,
+        m.expert_bytes
+    ));
+    coord.recover_pending.push((l, e, dst, 0));
+    assert_eq!(coord.ledger.reserved(dst, 0), m.expert_bytes);
+
+    let apply_at = engine.schedule_scale_out(l, e, dst, 0, src).unwrap();
+    // the destination dies while the weights are on the wire
+    engine.schedule_server_crash(apply_at * 0.5, dst);
+    engine.run_until(apply_at + 1.0);
+
+    let completions = engine.take_scale_completions();
+    let outs: Vec<_> = completions
+        .iter()
+        .filter(|ev| ev.kind == ScaleKind::Out)
+        .collect();
+    assert_eq!(outs.len(), 1, "the in-flight copy still completes");
+    assert!(
+        !outs[0].applied,
+        "a copy landing on a dead server must not apply"
+    );
+    assert!(
+        !engine.placement.server_holds(dst, l, e),
+        "no routable phantom replica on the dead server"
+    );
+    engine.placement.validate().unwrap();
+
+    coord.fold_completions(&completions);
+    assert_eq!(
+        coord.ledger.reserved(dst, 0),
+        0,
+        "the reservation is refunded exactly once"
+    );
+    assert!(coord.recover_pending.is_empty());
+
+    // replaying the same completions must not refund a second time
+    // (saturating release would mask a double-refund bug; the pending
+    // entry being gone is the real guard)
+    coord.fold_completions(&completions);
+    assert_eq!(coord.ledger.reserved(dst, 0), 0, "no double refund");
+}
+
+// ---- satellite 3: fault-triggered flight-dump edge cases ---------------
+
+fn bare_engine() -> Engine {
+    let m = ModelConfig::tiny();
+    let c = ClusterConfig::edge_testbed_3_for(&m);
+    Engine::new(
+        &m,
+        &c,
+        uniform::place(&m, &c),
+        EngineConfig::default(),
+        CostModel::default(),
+    )
+}
+
+#[test]
+fn crash_triggers_exactly_one_dump_ending_at_the_fault_time() {
+    let mut engine = bare_engine();
+    engine.obs.enable(ObsConfig::default());
+    engine.schedule_server_crash(10.0, 1);
+    engine.run_until(50.0);
+    assert_eq!(engine.obs.dumps.len(), 1, "one crash, one dump");
+    let dump = &engine.obs.dumps[0];
+    assert_eq!(dump.reason, "fault_crash");
+    assert_eq!(dump.t_s, 10.0, "dump taken at the fault instant");
+    assert!(!dump.events.is_empty(), "the fault span itself is captured");
+    for ev in &dump.events {
+        assert!(
+            ev.t_s <= dump.t_s + 1e-9,
+            "ring contents must end at the fault timestamp"
+        );
+    }
+}
+
+#[test]
+fn crashing_an_already_dead_server_does_not_dump_again() {
+    let mut engine = bare_engine();
+    engine.obs.enable(ObsConfig::default());
+    engine.schedule_server_crash(10.0, 1);
+    engine.schedule_server_crash(20.0, 1); // no-op: already dead
+    engine.run_until(50.0);
+    assert_eq!(
+        engine.obs.dumps.len(),
+        1,
+        "a crash on a dead server is not a new fault event"
+    );
+    assert_eq!(engine.crashes, 1);
+}
+
+#[test]
+fn rejoin_then_crash_dumps_once_per_real_fault() {
+    let mut engine = bare_engine();
+    engine.obs.enable(ObsConfig::default());
+    engine.schedule_server_crash(10.0, 1);
+    engine.schedule_server_rejoin(20.0, 1);
+    engine.schedule_server_crash(30.0, 1);
+    engine.run_until(50.0);
+    assert_eq!(engine.obs.dumps.len(), 2, "two real crashes, two dumps");
+    assert_eq!(engine.crashes, 2);
+    assert_eq!(engine.obs.dumps[0].t_s, 10.0);
+    assert_eq!(engine.obs.dumps[1].t_s, 30.0);
+}
+
+#[test]
+fn dump_cap_overflow_is_surfaced_not_silent() {
+    let mut engine = bare_engine();
+    engine.obs.enable(ObsConfig {
+        max_flight_dumps: 1,
+        ..ObsConfig::default()
+    });
+    engine.schedule_server_crash(10.0, 0);
+    engine.schedule_server_crash(20.0, 1);
+    engine.run_until(50.0);
+    assert_eq!(engine.obs.dumps.len(), 1, "cap keeps the first dump");
+    assert!(
+        engine.obs.dumps_dropped >= 1,
+        "the dropped dump must be counted, not silently lost"
+    );
+}
