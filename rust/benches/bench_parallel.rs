@@ -1,0 +1,170 @@
+//! Sharded-engine benchmark: proves the two claims the parallel engine
+//! makes, machine-readably, in `BENCH_parallel.json`.
+//!
+//! 1. **Byte identity** — the canonical regions scenario (with tracing
+//!    on, so the merged metrics stream is compared too) and the
+//!    canonical chaos scenario produce *identical* reports at 1 shard
+//!    and 4 shards. The bench exits non-zero if any comparison differs;
+//!    CI additionally asserts the `byte_identity` verdict in the JSON.
+//! 2. **Throughput** — the 10×-larger [`RegionsScenario::big`] (12
+//!    regions × 84 servers) runs sequentially and on 4 shards; the file
+//!    records aggregate engine events/s for both, the speedup, and the
+//!    committed floor (≥ 2× at 4 shards). The floor is enforced by the
+//!    CI guard *only on runners with ≥ 4 cores* — the verdict here is
+//!    recorded, not asserted, so single-core machines can still run the
+//!    identity half.
+//!
+//! Unlike `BENCH_regions.json` this file carries wall-clock numbers by
+//! design (it is a throughput benchmark); the determinism claims are
+//! carried by the `*_identical` verdicts, not by file-level replay.
+
+use dancemoe::chaos::{self, ChaosScenario};
+use dancemoe::obs::ObsConfig;
+use dancemoe::serve::regions::{ParallelMultiGateway, RegionsScenario};
+use dancemoe::util::bench::Bencher;
+use dancemoe::util::json::Json;
+
+/// Committed aggregate-events/s speedup at 4 shards on the big
+/// scenario (enforced by CI on ≥ 4-core runners).
+const SPEEDUP_FLOOR: f64 = 2.0;
+
+fn main() {
+    let mut b = Bencher::new("parallel");
+
+    // ---- byte identity: canonical regions scenario, tracing on ------
+    let canon = RegionsScenario {
+        seed: 7,
+        ..RegionsScenario::default()
+    };
+    let mut seq_report = String::new();
+    let mut seq_metrics = String::new();
+    b.run_once("canonical regions, 1 shard (480 s)", || {
+        let mut m = canon.build();
+        m.enable_obs(ObsConfig::default());
+        let rep = m.run();
+        seq_report = format!("{rep:?}");
+        seq_metrics = m.metrics_jsonl();
+    });
+    let mut par_report = String::new();
+    let mut par_metrics = String::new();
+    b.run_once("canonical regions, 4 shards (480 s)", || {
+        let mut m = ParallelMultiGateway::new(canon.build(), 4);
+        m.0.enable_obs(ObsConfig::default());
+        let rep = m.run();
+        par_report = format!("{rep:?}");
+        par_metrics = m.0.metrics_jsonl();
+    });
+    let regions_report_identical = seq_report == par_report;
+    let regions_metrics_identical = seq_metrics == par_metrics;
+
+    // ---- byte identity: canonical chaos scenario ---------------------
+    let chaos_scn = ChaosScenario::canonical(7);
+    let mut chaos_seq = String::new();
+    b.run_once("canonical chaos, 1 shard (480 s)", || {
+        let rep = chaos_scn.run_with_shards(1);
+        chaos_seq =
+            format!("{:?}\n{}", rep, chaos::bench_file_json(&rep).pretty());
+    });
+    let mut chaos_par = String::new();
+    b.run_once("canonical chaos, 4 shards (480 s)", || {
+        let rep = chaos_scn.run_with_shards(4);
+        chaos_par =
+            format!("{:?}\n{}", rep, chaos::bench_file_json(&rep).pretty());
+    });
+    let chaos_identical = chaos_seq == chaos_par;
+
+    // ---- throughput: the big scenario, sequential vs 4 shards --------
+    let big = RegionsScenario::big(7);
+    let mut big_seq_report = String::new();
+    let mut seq_events = 0usize;
+    let seq_wall_s = b
+        .run_once("big regions, 1 shard (12 × 84 servers, 60 s)", || {
+            let mut m = big.build();
+            let rep = m.run();
+            seq_events = m.events_processed();
+            big_seq_report = format!("{rep:?}");
+        })
+        .total
+        .as_secs_f64();
+    let mut big_par_report = String::new();
+    let mut par_events = 0usize;
+    let par_wall_s = b
+        .run_once("big regions, 4 shards (12 × 84 servers, 60 s)", || {
+            let mut m = ParallelMultiGateway::new(big.build(), 4);
+            let rep = m.run();
+            par_events = m.0.events_processed();
+            big_par_report = format!("{rep:?}");
+        })
+        .total
+        .as_secs_f64();
+    let big_report_identical = big_seq_report == big_par_report;
+
+    let seq_eps = seq_events as f64 / seq_wall_s.max(1e-9);
+    let par_eps = par_events as f64 / par_wall_s.max(1e-9);
+    let speedup = par_eps / seq_eps.max(1e-9);
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let byte_identity = regions_report_identical
+        && regions_metrics_identical
+        && chaos_identical
+        && big_report_identical
+        && seq_events == par_events;
+
+    let metrics = Json::from_pairs(vec![
+        ("available_parallelism", Json::Num(cores as f64)),
+        ("shards", Json::Num(4.0)),
+        ("byte_identity", Json::Num(byte_identity as u64 as f64)),
+        (
+            "regions_report_identical",
+            Json::Num(regions_report_identical as u64 as f64),
+        ),
+        (
+            "regions_metrics_identical",
+            Json::Num(regions_metrics_identical as u64 as f64),
+        ),
+        (
+            "chaos_identical",
+            Json::Num(chaos_identical as u64 as f64),
+        ),
+        (
+            "big_report_identical",
+            Json::Num(big_report_identical as u64 as f64),
+        ),
+        ("seq_events", Json::Num(seq_events as f64)),
+        ("par_events", Json::Num(par_events as f64)),
+        ("seq_events_per_s", Json::Num(seq_eps)),
+        ("par_events_per_s", Json::Num(par_eps)),
+        ("speedup", Json::Num(speedup)),
+        ("speedup_floor", Json::Num(SPEEDUP_FLOOR)),
+    ]);
+    let out = std::path::Path::new("BENCH_parallel.json");
+    b.write_json(out, metrics).expect("write BENCH_parallel.json");
+    println!(
+        "  wrote {} (identity {}; {:.0} events/s sequential vs {:.0} on 4 \
+         shards = {:.2}× on {} core(s))",
+        out.display(),
+        if byte_identity { "OK" } else { "BROKEN" },
+        seq_eps,
+        par_eps,
+        speedup,
+        cores,
+    );
+    if !byte_identity {
+        eprintln!(
+            "parallel bench FAILED: 4-shard output must be byte-identical \
+             to sequential (regions report {regions_report_identical}, \
+             metrics {regions_metrics_identical}, chaos {chaos_identical}, \
+             big {big_report_identical}, events {seq_events}/{par_events})",
+        );
+        std::process::exit(1);
+    }
+    if cores >= 4 && speedup < SPEEDUP_FLOOR {
+        // recorded in the JSON and enforced by the CI guard on ≥ 4-core
+        // runners; warn here so local runs surface regressions too
+        eprintln!(
+            "parallel bench WARNING: speedup {speedup:.2}× below the \
+             {SPEEDUP_FLOOR:.1}× floor on {cores} cores",
+        );
+    }
+}

@@ -406,9 +406,20 @@ impl ChaosScenario {
         }
     }
 
-    /// Run the scenario through the schedule.
+    /// Run the scenario through the schedule (on the scenario's own
+    /// shard count — 1 unless overridden).
     pub fn run(&self) -> ChaosReport {
         self.base.build().run_chaos(&self.schedule)
+    }
+
+    /// Run the scenario through the schedule on `shards` worker threads.
+    /// Chaos faults ride the same conservative-window machinery as
+    /// everything else, so the report is byte-identical at any shard
+    /// count — `tests/parallel_determinism.rs` locks this.
+    pub fn run_with_shards(&self, shards: usize) -> ChaosReport {
+        let mut multi = self.base.build();
+        multi.shards = shards.max(1);
+        multi.run_chaos(&self.schedule)
     }
 }
 

@@ -143,6 +143,32 @@ impl ClusterConfig {
         }
     }
 
+    /// The edge testbed generalized to `n` servers for the large sharded
+    /// scenarios: cycles the three per-server GPU allocations of
+    /// [`ClusterConfig::edge_testbed_3_for`] (1×1.0, 1×0.9, 2×{1.0,0.85})
+    /// so every third server is the fat two-GPU node. `n == 3` reproduces
+    /// the paper testbed bit-for-bit (same name, same servers).
+    pub fn edge_testbed_n_for(model: &ModelConfig, n: usize) -> ClusterConfig {
+        assert!(n >= 1, "cluster needs at least one server");
+        if n == 3 {
+            return ClusterConfig::edge_testbed_3_for(model);
+        }
+        let mf = model.mem_fraction();
+        let pattern: [&[(f64, f64)]; 3] = [&[(mf, 1.0)], &[(mf, 0.9)], &[(mf, 1.0), (mf, 0.85)]];
+        let servers = (0..n)
+            .map(|i| ServerConfig {
+                name: format!("server{}", i + 1),
+                gpus: pattern[i % 3].iter().map(|&(m, s)| gpu(m, s)).collect(),
+            })
+            .collect();
+        ClusterConfig {
+            name: format!("edge-testbed-{n}"),
+            servers,
+            bandwidth_bps: EDGE_BANDWIDTH_BPS,
+            rtt_s: EDGE_RTT_S,
+        }
+    }
+
     /// Fig. 8 scaling clusters: `num_gpus` GPUs grouped 2 per server (so
     /// even the 4-GPU point is genuinely distributed, like the paper's 3
     /// simulated servers over 4 GPUs), heterogeneous speeds cycling
@@ -195,6 +221,30 @@ impl WorkloadConfig {
                 mk(TaskKind::Arithmetic),
                 mk(TaskKind::AsciiRecognition),
             ],
+        }
+    }
+
+    /// [`WorkloadConfig::bigbench`] generalized to `n` per-server streams
+    /// (the arrival sampler builds one stream per server): cycles the
+    /// three BIG-bench task types. `n == 3` reproduces `bigbench`
+    /// bit-for-bit.
+    pub fn bigbench_n(mean_interarrival_s: f64, n: usize) -> WorkloadConfig {
+        assert!(n >= 1, "workload needs at least one stream");
+        let tasks = [
+            TaskKind::AbstractNarrative,
+            TaskKind::Arithmetic,
+            TaskKind::AsciiRecognition,
+        ];
+        WorkloadConfig {
+            name: "bigbench".into(),
+            streams: (0..n)
+                .map(|i| StreamConfig {
+                    task: tasks[i % 3],
+                    mean_interarrival_s,
+                    mean_prompt_tokens: 128,
+                    output_tokens: 8,
+                })
+                .collect(),
         }
     }
 

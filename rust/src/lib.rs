@@ -111,7 +111,8 @@ pub mod prelude {
     pub use crate::placement::{Placement, PlacementAlgo};
     pub use crate::serve::{
         ArrivalProfile, Gateway, GatewayConfig, GatewayReport, MultiGateway,
-        RegionsReport, RegionsScenario, SpillConfig, TenantReport, TenantSet,
+        ParallelMultiGateway, RegionsReport, RegionsScenario, SpillConfig,
+        TenantReport, TenantSet,
     };
     pub use crate::trace::{TaskProfile, Trace, TraceGenerator};
 }

@@ -130,7 +130,11 @@ fn cli() -> Cli {
                           per region with staggered diurnal peaks, a \
                           federated pressure exchange, and cross-gateway \
                           spill over inter-region links")
-                .flag("regions", Some("3"), "number of regions (3 edge servers each)")
+                .flag("regions", Some("3"), "number of regions")
+                .flag("servers", Some("3"), "edge servers per region")
+                .flag("shards", Some("1"), "worker threads to shard the \
+                       regions onto (1 = sequential; output is \
+                       byte-identical at any value)")
                 .flag("rps", Some("5.5"), "mean arrival rate per region (req/s)")
                 .flag("horizon", Some("480"), "virtual seconds of arrivals")
                 .flag("period", Some("240"), "diurnal period (s); region r is \
@@ -170,6 +174,9 @@ fn cli() -> Cli {
                        non-canonical schedules are randomized per --seed)")
                 .flag("regions", Some("3"), "number of regions (3 edge \
                        servers each; canonical schedule needs exactly 3)")
+                .flag("shards", Some("1"), "worker threads to shard the \
+                       regions onto (1 = sequential; output is \
+                       byte-identical at any value)")
                 .flag("rps", Some("5.5"), "mean arrival rate per region (req/s)")
                 .flag("horizon", Some("480"), "virtual seconds of arrivals")
                 .flag("interval", Some("15"), "per-region stats-bus / refresh \
@@ -1131,8 +1138,13 @@ fn cmd_regions(args: &Args) -> Result<(), String> {
             format!("unknown tenant preset '{name}' (none|pair|trio)")
         })?),
     };
+    let servers_per_region = args.get_usize("servers")?;
+    if servers_per_region == 0 {
+        return Err("--servers must be at least 1".into());
+    }
     let scenario = RegionsScenario {
         num_regions,
+        servers_per_region,
         rps_per_region: rps,
         horizon_s: args.get_f64("horizon")?,
         period_s,
@@ -1146,19 +1158,22 @@ fn cmd_regions(args: &Args) -> Result<(), String> {
         autoscale: args.switch("autoscale"),
         tenants,
         inter_latency_s: args.get_f64("latency")?,
+        shards: args.get_usize("shards")?,
         seed: args.get_u64("seed")?,
     };
     println!(
-        "regions: {} × edge3 @ {:.0}% A100 — {:.1} req/s/region diurnal \
+        "regions: {} × edge{} @ {:.0}% A100 — {:.1} req/s/region diurnal \
          (period {:.0}s, phases staggered by {:.0}s), {:.0}s horizon, \
-         spill {}",
+         spill {}, {} shard(s)",
         scenario.num_regions,
+        scenario.servers_per_region,
         100.0 * scenario.gpu_scale,
         scenario.rps_per_region,
         scenario.period_s,
         scenario.phase(1),
         scenario.horizon_s,
         if scenario.spill { "on" } else { "off" },
+        scenario.shards.max(1),
     );
 
     let mut multi = scenario.build();
@@ -1289,7 +1304,7 @@ fn cmd_regions(args: &Args) -> Result<(), String> {
             global.latency_percentile(0.95),
             global.latency_percentile(0.99),
             100.0 * global.shed_rate(),
-            scenario.num_regions * 3,
+            scenario.num_regions * scenario.servers_per_region,
         );
     }
     Ok(())
@@ -1313,6 +1328,7 @@ fn cmd_chaos(args: &Args) -> Result<(), String> {
     scenario.base.horizon_s = horizon_s;
     scenario.base.interval_s = interval_s;
     scenario.base.slo_s = args.get_f64("slo")?;
+    scenario.base.shards = args.get_usize("shards")?;
     scenario.schedule = match sched_name.as_str() {
         "canonical" => {
             if num_regions != 3 {
@@ -1347,12 +1363,13 @@ fn cmd_chaos(args: &Args) -> Result<(), String> {
     };
     println!(
         "chaos: {} regions, schedule '{}' ({} faults), {:.0}s horizon, \
-         {:.0}s control interval, autoscale on",
+         {:.0}s control interval, autoscale on, {} shard(s)",
         num_regions,
         sched_name,
         scenario.schedule.events.len(),
         horizon_s,
         interval_s,
+        scenario.base.shards.max(1),
     );
 
     let mut multi = scenario.base.build();

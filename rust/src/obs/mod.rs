@@ -1008,6 +1008,44 @@ impl Obs {
     }
 }
 
+/// Stable k-way merge of per-region metrics streams into one JSONL
+/// document. Each input stream must already be in emission (clock) order —
+/// true for every [`Obs`] instance, whose rows are pushed as its virtual
+/// clock advances. The merge key is `(t_s, within-stream row index,
+/// stream index)`: exact time ties (e.g. the per-region `region_window`
+/// rows all stamped at the same exchange barrier) stay deterministically
+/// ordered no matter how many shards produced them. Times are
+/// non-negative virtual-clock seconds, so the raw IEEE-754 bit pattern
+/// orders them.
+pub fn merge_metrics_streams(streams: Vec<Vec<Json>>) -> String {
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+    fn key(row: &Json) -> u64 {
+        row.get("t_s").and_then(|t| t.as_f64()).unwrap_or(0.0).to_bits()
+    }
+    let mut iters: Vec<std::vec::IntoIter<Json>> =
+        streams.into_iter().map(|s| s.into_iter()).collect();
+    let mut heads: Vec<Option<Json>> = iters.iter_mut().map(|it| it.next()).collect();
+    let mut seq = vec![0usize; iters.len()];
+    let mut heap: BinaryHeap<Reverse<(u64, usize, usize)>> = heads
+        .iter()
+        .enumerate()
+        .filter_map(|(s, h)| h.as_ref().map(|row| Reverse((key(row), 0, s))))
+        .collect();
+    let mut out = String::new();
+    while let Some(Reverse((_, _, s))) = heap.pop() {
+        let row = heads[s].take().expect("head present for popped stream");
+        out.push_str(&row.to_string());
+        out.push('\n');
+        if let Some(next) = iters[s].next() {
+            seq[s] += 1;
+            heap.push(Reverse((key(&next), seq[s], s)));
+            heads[s] = Some(next);
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1171,5 +1209,33 @@ mod tests {
             assert!(j.get("t_s").is_some());
             assert!(j.get("kind").is_some());
         }
+    }
+
+    #[test]
+    fn metrics_merge_is_stable_on_exact_time_ties() {
+        let row = |t: f64, tag: &str| {
+            Json::from_pairs(vec![
+                ("t_s", Json::Num(t)),
+                ("tag", Json::Str(tag.into())),
+            ])
+        };
+        // Three streams with exact ties at t=30: the merge key
+        // (t, within-stream index, stream index) puts the first row of
+        // every stream before any second row, and breaks the remaining
+        // tie by stream index.
+        let streams = vec![
+            vec![row(30.0, "a0"), row(30.0, "a1"), row(90.0, "a2")],
+            vec![row(15.0, "b0"), row(30.0, "b1")],
+            vec![row(30.0, "c0"), row(60.0, "c1")],
+        ];
+        let merged = merge_metrics_streams(streams);
+        let tags: Vec<String> = merged
+            .lines()
+            .map(|l| {
+                let j = Json::parse(l).unwrap();
+                j.get("tag").and_then(|t| t.as_str().map(String::from)).unwrap()
+            })
+            .collect();
+        assert_eq!(tags, vec!["b0", "a0", "c0", "a1", "b1", "c1", "a2"]);
     }
 }

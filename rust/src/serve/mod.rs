@@ -40,7 +40,8 @@ pub use admission::AdmissionController;
 pub use arrival::{ArrivalProfile, ArrivalSource};
 pub use batcher::{Batch, Batcher};
 pub use regions::{
-    MultiGateway, RegionsReport, RegionsScenario, SpillConfig,
+    MultiGateway, ParallelMultiGateway, RegionsReport, RegionsScenario,
+    SpillConfig,
 };
 pub use router::LocalityRouter;
 pub use statsbus::{RegionWindow, StatsBus, StatsDelta, TenantWindow};

@@ -1,49 +1,64 @@
 //! **Regionalized serving**: one gateway per region, federated over a
-//! region topology with cross-gateway spill.
+//! region topology with cross-gateway spill — now driven by a
+//! conservative-time **sharded engine** that runs regions on worker
+//! threads with byte-identical output at any shard count.
 //!
 //! The single-gateway stack assumed one cluster behind one front door;
 //! this module runs one full [`Gateway`] (admission, DRR tenant queues,
 //! batcher, locality router, coordinator, optional autoscaler) per
 //! **region** of a [`RegionTopology`], and federates them:
 //!
-//! 1. **One virtual clock** — the orchestrator interleaves every regional
-//!    gateway's stepping API ([`Gateway::run`] is the one-region special
-//!    case of this loop), so regions co-simulate deterministically.
+//! 1. **Conservative windows, one virtual clock** — every region is a
+//!    [`RegionRunner`] owning its gateway, its slice of the inter-region
+//!    mesh and its inbox of cross-region messages. The orchestrator
+//!    advances all runners window by window: each window ends at
+//!    `min(next exchange, next fault, earliest next event + lookahead)`
+//!    where the lookahead is the smallest possible cross-region message
+//!    latency (`SpillConfig::fixed_s + base_latency_s + min extra
+//!    latency`). No message can arrive inside the window it was sent in,
+//!    so runners are independent within a window — they execute inline
+//!    (`shards == 1`, the sequential special case) or on a
+//!    [`WorkerCrew`] (`--shards N`) with **byte-identical** results:
+//!    same windows, same per-runner steps, same merged message order.
 //! 2. **Federated pressure signal** — every `exchange_s` seconds each
 //!    region publishes a [`RegionWindow`] (completions, sheds, window
-//!    p95, live queue headroom) the way the tenant layer publishes
-//!    [`crate::serve::statsbus::TenantWindow`]s; the table of peer
-//!    windows is what spill decisions route on (deliberately a little
-//!    stale — regions exchange signals, they do not share memory).
-//! 3. **Cross-gateway spill** — when a region's queues run past the
-//!    pre-spill watermark (half their bound, by default), or at the
-//!    latest when its admission rejects a request everywhere, the
-//!    request is *forwarded* to a peer advertising headroom instead of
-//!    shed: it pays the inter-region link cost on a FIFO region-to-region
-//!    mesh ([`crate::net::NetModel::inter_region`]), then joins the
-//!    peer's per-(region, tenant) DRR queues under its own tenant tag.
-//!    Forwards never re-spill; a forward that finds no room on arrival is
-//!    accounted as shed at its origin region.
-//! 4. **Federated autoscaling** — each exchange also tells a region's
-//!    coordinator its own pressure (relaxing its migration-adoption
-//!    threshold, like tenant SLO pressure does) and hands regions that
-//!    *received* spill an expert-boost vector built from the spilled
-//!    tasks' activation profiles, so the receiving autoscaler prefers
-//!    replicating exactly the experts the spill activates — scale-out
-//!    lands in the spill-target region scored by activation locality.
+//!    p95, live queue headroom); the table of peer windows is what spill
+//!    decisions route on (deliberately a little stale — regions exchange
+//!    signals, they do not share memory).
+//! 3. **Cross-gateway spill** — overflow forwards to a peer advertising
+//!    headroom instead of shedding: it pays the inter-region link cost
+//!    on the region's row of the FIFO mesh
+//!    ([`crate::net::NetModel::inter_region`]), travels as a
+//!    [`RegionMsg`] over the shard lanes, and is merged into the
+//!    destination inbox by the packed `(arrival time, sender, sender
+//!    seq)` key. Forwards never re-spill; a forward that finds no room
+//!    on delivery sheds at its *origin* when the timed shed-note makes
+//!    it back over the same mesh latency.
+//! 4. **Federated autoscaling** — each exchange tells a region's
+//!    coordinator its own pressure and hands regions that *received*
+//!    spill an expert-boost vector built from the spilled tasks'
+//!    activation profiles.
 //! 5. **Thin global view** — regions own disjoint clusters and ledgers;
-//!    [`MultiGateway::global_view`] aggregates them so operators (and
-//!    tests) can check the memory ledgers stay consistent globally.
+//!    [`MultiGateway::global_view`] aggregates them for consistency
+//!    checks.
+//!
+//! Chaos faults ride the same machinery: engine-level crashes/rejoins
+//! are pre-installed and fire on the owning shard's own clock inside
+//! `advance_to`; orchestrator-level faults (link degrade / partition /
+//! restore, flash crowds) are barriers — windows never step past the
+//! next fault's time, and the fault command goes to the owning runner
+//! exactly at it. See `docs/PARALLEL.md` for the full determinism
+//! argument.
 //!
 //! The canonical 3-region scenario ([`RegionsScenario`]) staggers each
-//! region's diurnal peak by a third of the period: the cluster-wide
-//! offered load is constant while every region periodically exceeds its
-//! own capacity — exactly the regime where spill converts sheds into
-//! served requests. `regions_comparison` runs it three ways (spill,
-//! isolated, single global gateway) and `bench_file_json` serializes the
-//! deterministic comparison for `BENCH_regions.json`.
+//! region's diurnal peak by a third of the period; `regions_comparison`
+//! runs it three ways (spill, isolated, single global gateway) and
+//! `bench_file_json` serializes the deterministic comparison for
+//! `BENCH_regions.json`. [`RegionsScenario::big`] is the 10×-larger
+//! sharding showcase (12 regions × 84 servers) behind
+//! `BENCH_parallel.json`.
 
-use std::cmp::Reverse;
+use std::cmp::{Ordering, Reverse};
 use std::collections::BinaryHeap;
 
 use crate::cluster::RegionTopology;
@@ -59,6 +74,7 @@ use crate::serve::{
 };
 use crate::trace::{Request, TaskProfile};
 use crate::util::json::Json;
+use crate::util::threadpool::WorkerCrew;
 use crate::{Error, Result};
 
 /// Peers whose published pressure exceeds this are not spill targets —
@@ -122,43 +138,698 @@ fn task_index(task: TaskKind) -> usize {
     TaskKind::all().iter().position(|&t| t == task).unwrap()
 }
 
-/// The multi-gateway orchestrator (see the module docs).
+/// The cross-region recorder flow id: packed (sender region, per-sender
+/// sequence). Identical at the forward and deliver ends regardless of
+/// sharding, so trace flow arrows pair up byte-identically.
+fn flow_id(src: usize, seq: u64) -> u32 {
+    ((src << 24) as u32) | ((seq & 0xFF_FFFF) as u32)
+}
+
+/// One cross-shard message on the bounded lanes.
+#[derive(Debug, Clone)]
+struct RegionMsg {
+    src: usize,
+    dst: usize,
+    /// Per-sender FIFO sequence (shared across payload kinds).
+    seq: u64,
+    arrive_s: f64,
+    /// Link occupancy of the transfer (pre-arrival spill booking).
+    dur_s: f64,
+    payload: MsgPayload,
+}
+
+#[derive(Debug, Clone)]
+enum MsgPayload {
+    /// A spilled request riding the inter-region mesh.
+    Forward(Request),
+    /// Origin-bound notice that a forward found no room on delivery:
+    /// the origin sheds it (tenant books + recorder) when the notice
+    /// arrives, paying the reverse mesh latency. A zero-latency origin
+    /// write would break both shard isolation and the lookahead bound.
+    ShedNote { tenant: usize, server: usize },
+}
+
+/// Inbox entry ordered by the packed `(arrival time, sender region,
+/// sender sequence)` key — a total, shard-invariant delivery order even
+/// on exact time ties.
+#[derive(Debug)]
+struct InboxEntry {
+    arrive_bits: u64,
+    src: usize,
+    seq: u64,
+    msg: RegionMsg,
+}
+
+impl InboxEntry {
+    fn key(&self) -> (u64, usize, u64) {
+        (self.arrive_bits, self.src, self.seq)
+    }
+}
+
+impl PartialEq for InboxEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.key() == other.key()
+    }
+}
+
+impl Eq for InboxEntry {}
+
+impl PartialOrd for InboxEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for InboxEntry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.key().cmp(&other.key())
+    }
+}
+
+/// Exchange phase-1 payload: this region's published window plus the
+/// drained per-(destination, task) spilled-request counts.
+type ExchangePayload = (RegionWindow, Vec<Vec<u64>>);
+
+/// Fault-window snapshot: cumulative (offered, shed, per-region
+/// completion counts) at the instant a fault window opened.
+type FaultSnap = (u64, u64, Vec<usize>);
+
+/// Fault-window probe: one region's cumulative counters, plus SLO
+/// violations over its completions since a snapshot index.
+#[derive(Debug, Clone, Copy)]
+struct ProbeReply {
+    offered: u64,
+    shed: u64,
+    recs: usize,
+    violations: u64,
+}
+
+/// One crash being tracked to recovery, runner-side. Timestamps are
+/// recorded against the runner's own clock at its (shard-invariant)
+/// step bottoms; the orchestrator folds them into [`FaultRecord`]s
+/// after the runners are reassembled.
+#[derive(Debug, Clone)]
+struct CrashTrack {
+    fault: usize,
+    server: usize,
+    t_crash: f64,
+    seen_dead: bool,
+    t_staged: Option<f64>,
+    done: bool,
+    t_done: f64,
+}
+
+/// Commands the orchestrator sends a runner (inline or over the crew
+/// lanes). Every command returns a [`Reply`] carrying the runner's
+/// refreshed work hint plus any cross-region messages it produced.
+enum Cmd {
+    /// Pure hint query (no side effects) — seeds the scheduler state.
+    Hint,
+    /// Advance through the window `(now, end]`: deliver handed-over
+    /// messages, process every local event strictly before `end`, then
+    /// park the engine exactly at `end`.
+    RunWindow { end: f64, msgs: Vec<RegionMsg> },
+    /// Fire the gateway interval tick if due at `t` (barrier ordering:
+    /// faults → tick → exchange, matching the sequential step).
+    Tick(f64),
+    /// Exchange phase 1: publish this region's window (and drain the
+    /// per-destination spilled-task counts for the boost).
+    Exchange { t: f64 },
+    /// Exchange phase 2: install the full window table and the
+    /// coordinator's pressure + expert boost.
+    ApplyExchange {
+        windows: Vec<RegionWindow>,
+        pressure: f64,
+        boost: Vec<f64>,
+    },
+    /// Fault-window probe (see [`ProbeReply`]); `from` is this region's
+    /// completion-count snapshot from the window being closed.
+    FaultProbe { from: usize },
+    /// Start tracking a pre-installed engine crash to recovery.
+    Crash { fault: usize, server: usize, t: f64 },
+    DegradeLink {
+        dst: usize,
+        bandwidth_scale: f64,
+        extra_latency_s: f64,
+    },
+    Partition { dst: usize },
+    RestoreLink { dst: usize },
+    FlashCrowd { tenant: usize, count: usize, t: f64 },
+    /// End of run: flush the engine.
+    Finalize,
+}
+
+/// A runner's answer to one [`Cmd`].
+struct Reply {
+    /// Cross-region messages produced while handling the command; the
+    /// orchestrator stages them for the destination's next window.
+    outgoing: Vec<RegionMsg>,
+    /// Anything left to do (gateway work or undelivered inbox)?
+    has_work: bool,
+    /// Earliest local event time (arrivals, batch deadlines, engine
+    /// events, interval ticks, inbox arrivals); `INFINITY` when idle.
+    next_t: f64,
+    /// Exchange phase-1 payload.
+    exchange: Option<ExchangePayload>,
+    /// Fault-probe payload.
+    probe: Option<ProbeReply>,
+}
+
+/// One region's complete serving stack plus its shard-local view of the
+/// federation: the unit of parallelism. Within a window a runner touches
+/// nothing outside itself, so regions execute concurrently and
+/// byte-identically to the inline order.
+struct RegionRunner {
+    region: usize,
+    nr: usize,
+    gw: Gateway,
+    bus: RegionBus,
+    /// This region's private copy of the inter-region mesh. Only row
+    /// `region` is ever booked (each region owns its *outgoing* links),
+    /// so per-region byte totals re-sum to the sequential mesh exactly.
+    net: NetModel,
+    now: f64,
+    /// Per-sender message sequence (forwards and shed-notes share it).
+    seq: u64,
+    token_bytes: f64,
+    spill_cfg: SpillConfig,
+    topology: RegionTopology,
+    /// Latest exchanged window table — the federated signal spill
+    /// routes on.
+    windows: Vec<RegionWindow>,
+    /// This region's outgoing links masked by a chaos partition.
+    partitioned_row: Vec<bool>,
+    inbox: BinaryHeap<Reverse<InboxEntry>>,
+    outgoing: Vec<RegionMsg>,
+    spilled_out: u64,
+    spilled_in: u64,
+    spill_shed: u64,
+    /// Spilled-request counts per (destination region, task) since the
+    /// last exchange (feeds the receiving region's expert boost).
+    spill_tasks_to: Vec<Vec<u64>>,
+    crash_tracks: Vec<CrashTrack>,
+}
+
+impl RegionRunner {
+    fn fresh_task_counts(nr: usize) -> Vec<Vec<u64>> {
+        vec![vec![0; TaskKind::all().len()]; nr]
+    }
+
+    fn next_seq(&mut self) -> u64 {
+        let s = self.seq;
+        self.seq += 1;
+        s
+    }
+
+    fn push_inbox(&mut self, msg: RegionMsg) {
+        self.inbox.push(Reverse(InboxEntry {
+            arrive_bits: msg.arrive_s.to_bits(),
+            src: msg.src,
+            seq: msg.seq,
+            msg,
+        }));
+    }
+
+    fn inbox_peek_t(&self) -> Option<f64> {
+        self.inbox
+            .peek()
+            .map(|Reverse(e)| f64::from_bits(e.arrive_bits))
+    }
+
+    /// Earliest local event time: arrivals / batch deadlines / engine
+    /// events via the gateway, the interval tick, and inbox arrivals.
+    fn hint_next_t(&self) -> f64 {
+        let mut t = f64::INFINITY;
+        if let Some(x) = self.gw.next_action_time(self.now) {
+            t = t.min(x);
+        }
+        if self.gw.next_interval.is_finite() {
+            t = t.min(self.gw.next_interval);
+        }
+        if let Some(a) = self.inbox_peek_t() {
+            t = t.min(a);
+        }
+        t
+    }
+
+    fn reply(&mut self) -> Reply {
+        Reply {
+            outgoing: std::mem::take(&mut self.outgoing),
+            has_work: self.gw.has_work() || !self.inbox.is_empty(),
+            next_t: self.hint_next_t(),
+            exchange: None,
+            probe: None,
+        }
+    }
+
+    /// The per-step tail every virtual time `t` gets, in the sequential
+    /// step order: interval tick, message deliveries, arrival drain,
+    /// batch dispatch, crash bookkeeping. (At barrier starts the tick
+    /// already fired in the barrier's own Tick round, so it no-ops.)
+    fn step_tail(&mut self, t: f64) {
+        self.gw.tick_due(t);
+        self.deliver_due(t);
+        self.drain_arrivals(t);
+        self.gw.dispatch_ready(t);
+        self.poll_crash(t);
+    }
+
+    /// Advance through `(self.now, end]`: run the start tail (barrier
+    /// effects land at window start), process every local event strictly
+    /// before `end`, then park the engine exactly at `end`.
+    fn run_window(&mut self, end: f64, msgs: Vec<RegionMsg>) -> Reply {
+        for m in msgs {
+            self.push_inbox(m);
+        }
+        let start = self.now;
+        self.step_tail(start);
+        loop {
+            let t = self.hint_next_t();
+            if t >= end {
+                break;
+            }
+            self.gw.advance_to(t);
+            self.now = t;
+            self.step_tail(t);
+        }
+        self.gw.advance_to(end);
+        self.now = end;
+        self.poll_crash(end);
+        self.reply()
+    }
+
+    /// Deliver every inbox message due by `now`, in `(arrival, sender,
+    /// seq)` order. Forwards re-enter admission through the
+    /// most-headroom server for their tenant; a forward that finds no
+    /// room sends a timed shed-note back to its origin.
+    fn deliver_due(&mut self, now: f64) {
+        while let Some(Reverse(e)) = self.inbox.peek() {
+            if f64::from_bits(e.arrive_bits) > now + 1e-9 {
+                break;
+            }
+            let Reverse(e) = self.inbox.pop().expect("peeked inbox entry");
+            let RegionMsg {
+                src,
+                seq,
+                dur_s,
+                payload,
+                ..
+            } = e.msg;
+            match payload {
+                MsgPayload::Forward(mut req) => {
+                    let tenant = req.tenant;
+                    let req_id = req.id as u64;
+                    let arrival = req.arrival_s;
+                    let home = req.server;
+                    let mut entry = 0usize;
+                    let mut best = 0usize;
+                    for s in 0..self.gw.admission.num_servers() {
+                        let res = self.gw.admission.tenant_residual(s, tenant);
+                        if res > best {
+                            best = res;
+                            entry = s;
+                        }
+                    }
+                    req.server = entry;
+                    let obs = &mut self.gw.engine.obs;
+                    obs.on_spill_deliver(flow_id(src, seq), src, self.region, now);
+                    obs.note_prearrival_transfer(req_id, arrival, dur_s);
+                    if self.gw.admit_forwarded(req, now) {
+                        self.spilled_in += 1;
+                    } else {
+                        self.gw.engine.obs.clear_prearrival(req_id, arrival);
+                        let back = self.shed_note_latency(src);
+                        let nseq = self.next_seq();
+                        self.outgoing.push(RegionMsg {
+                            src: self.region,
+                            dst: src,
+                            seq: nseq,
+                            arrive_s: now + back,
+                            dur_s: back,
+                            payload: MsgPayload::ShedNote {
+                                tenant,
+                                server: home,
+                            },
+                        });
+                    }
+                }
+                MsgPayload::ShedNote { tenant, server } => {
+                    self.spill_shed += 1;
+                    self.gw.admission.record_shed_tenant(tenant);
+                    self.gw.engine.obs.on_shed(tenant, server, now);
+                }
+            }
+        }
+    }
+
+    /// Static one-way latency of a shed-note back to `dst` — the same
+    /// fixed + base + pair-extra floor every mesh transfer pays, so it
+    /// can never undercut the conservative lookahead.
+    fn shed_note_latency(&self, dst: usize) -> f64 {
+        self.spill_cfg.fixed_s
+            + self.spill_cfg.base_latency_s
+            + self.topology.extra_latency(self.region, dst)
+    }
+
+    fn drain_arrivals(&mut self, now: f64) {
+        while let Some(req) = self.gw.pop_arrival_due(now) {
+            self.route_arrival(req, now);
+        }
+    }
+
+    /// Route one request arriving at this region — the shared
+    /// pre-spill / admit / backstop-spill / shed path for scheduled
+    /// arrivals and chaos flash-crowd injections alike.
+    fn route_arrival(&mut self, req: Request, now: f64) {
+        if self.spill_cfg.enabled && self.under_watermark(req.tenant) {
+            if let Some(q) = self.spill_target(req.tenant) {
+                // counted offered at home like any arrival, then
+                // forwarded ahead of the shed cliff
+                self.gw.offered += 1;
+                self.forward(q, req, now);
+                return;
+            }
+        }
+        match self.gw.try_admit(req, now) {
+            Ok(()) => {}
+            Err(rej) => match self.spill_target(rej.tenant) {
+                Some(q) => self.forward(q, rej, now),
+                None => {
+                    self.gw.admission.record_shed_tenant(rej.tenant);
+                    self.gw.engine.obs.on_shed(rej.tenant, rej.server, now);
+                }
+            },
+        }
+    }
+
+    /// Is `tenant`'s region-wide admission headroom below the pre-spill
+    /// watermark?
+    fn under_watermark(&self, tenant: usize) -> bool {
+        if self.spill_cfg.prespill_frac <= 0.0 {
+            return false;
+        }
+        let adm = &self.gw.admission;
+        let n = adm.num_servers();
+        let mut residual = 0usize;
+        for s in 0..n {
+            residual += adm.tenant_residual(s, tenant);
+        }
+        let cap = adm.tenant_cap(tenant) * n;
+        (residual as f64) < self.spill_cfg.prespill_frac * cap as f64
+    }
+
+    /// Spill destination for this region's overflow of `tenant`: the
+    /// peer advertising the most admission headroom in the last
+    /// federation exchange, discounted by the inter-region latency to
+    /// reach it. Peers under the headroom floor, without room in *this
+    /// tenant's* own queues, or already pressured are skipped. `None` =
+    /// shed at home.
+    fn spill_target(&self, tenant: usize) -> Option<usize> {
+        if !self.spill_cfg.enabled {
+            return None;
+        }
+        let mut best: Option<(f64, usize)> = None;
+        for q in 0..self.nr {
+            if q == self.region || self.partitioned_row[q] {
+                continue;
+            }
+            let w = &self.windows[q];
+            if w.residual < self.spill_cfg.min_residual {
+                continue;
+            }
+            if w.residual_by_tenant.get(tenant).copied().unwrap_or(0) == 0 {
+                continue;
+            }
+            if w.pressure > SPILL_MAX_PRESSURE {
+                continue;
+            }
+            let score = w.residual as f64
+                / (1.0 + self.topology.extra_latency(self.region, q));
+            if best.map(|(s, _)| score > s).unwrap_or(true) {
+                best = Some((score, q));
+            }
+        }
+        best.map(|(_, q)| q)
+    }
+
+    /// Forward a request to `dst`: book the prompt payload on this
+    /// region's row of the mesh (FIFO contention) and emit the message;
+    /// the orchestrator hands it to `dst` before any window that could
+    /// contain its arrival.
+    fn forward(&mut self, dst: usize, req: Request, now: f64) {
+        self.spilled_out += 1;
+        self.spill_tasks_to[dst][task_index(req.task)] += 1;
+        let bytes = req.prompt_tokens as f64 * self.token_bytes;
+        let at = self.net.book_transfer(
+            self.region,
+            dst,
+            bytes,
+            now,
+            self.spill_cfg.fixed_s,
+            TransferPurpose::RegionSpill,
+        );
+        let seq = self.next_seq();
+        self.gw
+            .engine
+            .obs
+            .on_spill_forward(flow_id(self.region, seq), self.region, dst, now, at);
+        self.outgoing.push(RegionMsg {
+            src: self.region,
+            dst,
+            seq,
+            arrive_s: at,
+            dur_s: at - now,
+            payload: MsgPayload::Forward(req),
+        });
+    }
+
+    /// Exchange phase 1: collect this region's window (emitting the
+    /// `region_window` metrics row) and drain the per-destination
+    /// spilled-task counts.
+    fn exchange_window(&mut self, now: f64) -> ExchangePayload {
+        let queued = self.gw.admission.total_queued();
+        let residual = self.gw.admission.total_residual();
+        let by_tenant: Vec<usize> = (0..self.gw.admission.num_tenants())
+            .map(|tn| self.gw.admission.tenant_residual_total(tn))
+            .collect();
+        let w = self.bus.collect(
+            &self.gw.engine.report,
+            self.gw.admission.shed,
+            queued,
+            residual,
+            by_tenant,
+        );
+        if self.gw.engine.obs.enabled() {
+            // cumulative spill bytes this region pushed onto the
+            // inter-region mesh (purpose-attributed at the mesh)
+            let spill_bytes: f64 = (0..self.nr)
+                .map(|q| self.net.link_bytes(self.region, q))
+                .sum();
+            let row = Json::from_pairs(vec![
+                ("t_s", Json::Num(now)),
+                ("kind", Json::Str("region_window".into())),
+                ("schema", Json::Num(OBS_SCHEMA_VERSION as f64)),
+                ("completed", Json::Num(w.completed as f64)),
+                ("shed", Json::Num(w.shed as f64)),
+                ("p95_s", Json::Num(w.p95_s)),
+                ("queued", Json::Num(w.queued as f64)),
+                ("residual", Json::Num(w.residual as f64)),
+                ("pressure", Json::Num(w.pressure)),
+                ("spilled_out", Json::Num(self.spilled_out as f64)),
+                ("spilled_in", Json::Num(self.spilled_in as f64)),
+                ("spill_shed", Json::Num(self.spill_shed as f64)),
+                ("spill_bytes", Json::Num(spill_bytes)),
+            ]);
+            self.gw.engine.obs.push_metrics_row(row);
+        }
+        let drained = std::mem::replace(
+            &mut self.spill_tasks_to,
+            RegionRunner::fresh_task_counts(self.nr),
+        );
+        (w, drained)
+    }
+
+    /// Fault-window probe: cumulative counters plus SLO violations over
+    /// completions since the `from` snapshot.
+    fn probe(&self, from: usize) -> ProbeReply {
+        let recs = &self.gw.engine.report.records;
+        let violations = recs[from.min(recs.len())..]
+            .iter()
+            .filter(|x| x.latency_s > self.gw.cfg.slo_s)
+            .count() as u64;
+        ProbeReply {
+            offered: self.gw.offered,
+            shed: self.gw.admission.shed,
+            recs: recs.len(),
+            violations,
+        }
+    }
+
+    /// Inject a chaos flash crowd: `count` deterministic requests for
+    /// `tenant` (clamped to the region's tenant set) offered through the
+    /// normal admission path — conserved like any arrival. Ids are
+    /// minted from the gateway's own arrival id space so they never
+    /// collide with scheduled arrivals.
+    fn inject_flash_crowd(&mut self, tenant: usize, count: usize, now: f64) {
+        let tenant = tenant.min(self.gw.admission.num_tenants().saturating_sub(1));
+        let num_servers = self.gw.admission.num_servers();
+        for i in 0..count {
+            let id = self.gw.arrivals.mint_id();
+            let req = Request {
+                id,
+                server: i % num_servers,
+                arrival_s: now,
+                prompt_tokens: 64,
+                output_tokens: 16,
+                task: TaskKind::Arithmetic,
+                tenant,
+            };
+            self.route_arrival(req, now);
+        }
+    }
+
+    /// Recovery bookkeeping per open crash, against this runner's own
+    /// clock (times are step bottoms — shard-invariant).
+    fn poll_crash(&mut self, now: f64) {
+        for tr in &mut self.crash_tracks {
+            if tr.done {
+                continue;
+            }
+            if !tr.seen_dead {
+                if self.gw.engine.server_dead(tr.server) {
+                    tr.seen_dead = true;
+                } else {
+                    continue;
+                }
+            }
+            if tr.t_staged.is_none()
+                && !self.gw.coordinator.recover_pending.is_empty()
+            {
+                tr.t_staged = Some(now);
+            }
+            if self.gw.engine.placement.missing_experts().is_empty() {
+                tr.done = true;
+                tr.t_done = now;
+            }
+        }
+    }
+}
+
+/// The command dispatcher — the one function both executors run, so the
+/// inline path and the worker threads are the same code by construction.
+fn handle(rr: &mut RegionRunner, cmd: Cmd) -> Reply {
+    match cmd {
+        Cmd::Hint => {}
+        Cmd::RunWindow { end, msgs } => return rr.run_window(end, msgs),
+        Cmd::Tick(t) => rr.gw.tick_due(t),
+        Cmd::Exchange { t } => {
+            let payload = rr.exchange_window(t);
+            let mut reply = rr.reply();
+            reply.exchange = Some(payload);
+            return reply;
+        }
+        Cmd::ApplyExchange {
+            windows,
+            pressure,
+            boost,
+        } => {
+            rr.windows = windows;
+            rr.gw.coordinator.note_region_pressure(pressure, boost);
+        }
+        Cmd::FaultProbe { from } => {
+            let probe = rr.probe(from);
+            let mut reply = rr.reply();
+            reply.probe = Some(probe);
+            return reply;
+        }
+        Cmd::Crash { fault, server, t } => rr.crash_tracks.push(CrashTrack {
+            fault,
+            server,
+            t_crash: t,
+            seen_dead: false,
+            t_staged: None,
+            done: false,
+            t_done: t,
+        }),
+        Cmd::DegradeLink {
+            dst,
+            bandwidth_scale,
+            extra_latency_s,
+        } => rr
+            .net
+            .degrade_link(rr.region, dst, bandwidth_scale, extra_latency_s),
+        Cmd::Partition { dst } => rr.partitioned_row[dst] = true,
+        Cmd::RestoreLink { dst } => {
+            rr.partitioned_row[dst] = false;
+            rr.net.restore_link(rr.region, dst);
+        }
+        Cmd::FlashCrowd { tenant, count, t } => {
+            rr.inject_flash_crowd(tenant, count, t)
+        }
+        Cmd::Finalize => rr.gw.engine.finalize(),
+    }
+    rr.reply()
+}
+
+/// Where the runners execute: inline in region order (`shards == 1`,
+/// the sequential special case) or on a [`WorkerCrew`]. Both paths call
+/// [`handle`] per region in the same per-region order and collect
+/// replies in region order, so they are byte-identical by construction.
+enum Executor {
+    Inline(Vec<RegionRunner>),
+    Crew(WorkerCrew<RegionRunner, Cmd, Reply>),
+}
+
+impl Executor {
+    fn broadcast<M: FnMut(usize) -> Cmd>(&mut self, mut mk: M) -> Vec<Reply> {
+        match self {
+            Executor::Inline(rs) => rs
+                .iter_mut()
+                .enumerate()
+                .map(|(i, r)| handle(r, mk(i)))
+                .collect(),
+            Executor::Crew(c) => c.broadcast(mk),
+        }
+    }
+
+    fn send_one(&mut self, i: usize, cmd: Cmd) -> Reply {
+        match self {
+            Executor::Inline(rs) => handle(&mut rs[i], cmd),
+            Executor::Crew(c) => c.send_one(i, cmd),
+        }
+    }
+
+    fn finish(self) -> Vec<RegionRunner> {
+        match self {
+            Executor::Inline(rs) => rs,
+            Executor::Crew(c) => c.finish(),
+        }
+    }
+}
+
+/// The federation of regional gateways — and the conservative-time
+/// orchestrator that drives its [`RegionRunner`]s window by window,
+/// inline or sharded onto worker threads ([`MultiGateway::shards`]),
+/// with byte-identical results either way.
 pub struct MultiGateway {
     pub topology: RegionTopology,
     pub gateways: Vec<Gateway>,
     pub spill_cfg: SpillConfig,
-    /// FIFO region-to-region links the forwards ride.
-    inter_net: NetModel,
+    /// Worker threads to shard the regions onto (1 = run inline — the
+    /// sequential special case). The window schedule never depends on
+    /// this, so any shard count produces byte-identical output.
+    pub shards: usize,
+    /// Per-region copies of the FIFO inter-region mesh; region `r` only
+    /// ever books row `r` (its outgoing links), so the per-region byte
+    /// matrices re-assemble into the sequential mesh exactly.
+    nets: Vec<NetModel>,
     /// activation-row bytes per prompt token (forward payload sizing)
     token_bytes: f64,
     /// per-task expert activation mass (flattened `l·E + e`), for the
     /// spill-derived autoscaler boost
     task_mass: Vec<Vec<f64>>,
-    /// latest exchanged windows — the federated signal spill routes on
-    windows: Vec<RegionWindow>,
     buses: Vec<RegionBus>,
     next_exchange: f64,
-    /// in-flight forwards: min-heap of (delivery-time bits, FIFO seq,
-    /// slot) over `pending_reqs[slot]` (times are non-negative, so the
-    /// IEEE bit pattern orders like the float; the monotone seq breaks
-    /// equal-time ties in forward order)
-    pending: BinaryHeap<Reverse<(u64, u64, u32)>>,
-    /// forward payload slab: slots recycle through `pending_free`, so
-    /// storage is bounded by forwards *in flight*, not total forwards
-    /// (the same free-list discipline as the engine's event slab); the
-    /// trailing f64 is the transfer duration, carried for the receiving
-    /// recorder's pre-arrival spill booking
-    pending_reqs: Vec<Option<(Request, usize, usize, f64)>>,
-    pending_free: Vec<u32>,
-    seq: u64,
-    /// spilled-request counts per (destination region, task) since the
-    /// last exchange (feeds the receiving region's expert boost)
-    spill_tasks: Vec<Vec<u64>>,
-    /// partitioned inter-region links (`src·R + dst`), masked out of
-    /// spill routing while a chaos partition is in force. In-flight
-    /// forwards still deliver (a partition must never strand booked
-    /// traffic). Always all-false outside chaos runs.
-    partitioned: Vec<bool>,
     // ---- accounting ------------------------------------------------
     /// forwards attempted, by origin region
     pub spilled_out: Vec<u64>,
@@ -203,11 +874,15 @@ impl MultiGateway {
                 shard.coord_cfg,
             ));
         }
-        let inter_net = NetModel::inter_region(
-            &topology,
-            spill_cfg.bandwidth_bps,
-            spill_cfg.base_latency_s,
-        );
+        let nets = (0..nr)
+            .map(|_| {
+                NetModel::inter_region(
+                    &topology,
+                    spill_cfg.bandwidth_bps,
+                    spill_cfg.base_latency_s,
+                )
+            })
+            .collect();
         let task_mass: Vec<Vec<f64>> = TaskKind::all()
             .into_iter()
             .map(|t| {
@@ -228,18 +903,12 @@ impl MultiGateway {
             .unwrap_or(0.0);
         MultiGateway {
             topology,
-            inter_net,
+            shards: 1,
+            nets,
             token_bytes: model.token_bytes as f64,
             task_mass,
-            windows: vec![RegionWindow::default(); nr],
             buses: (0..nr).map(|_| RegionBus::new(slo_s)).collect(),
             next_exchange: 0.0,
-            pending: BinaryHeap::new(),
-            pending_reqs: Vec::new(),
-            pending_free: Vec::new(),
-            seq: 0,
-            spill_tasks: vec![vec![0; TaskKind::all().len()]; nr],
-            partitioned: vec![false; nr * nr],
             spilled_out: vec![0; nr],
             spilled_in: vec![0; nr],
             spill_shed: vec![0; nr],
@@ -250,81 +919,73 @@ impl MultiGateway {
         }
     }
 
+    /// The conservative lookahead: the smallest latency any cross-region
+    /// message can pay (`fixed_s + base_latency_s + min pair extra`).
+    /// A window ending at `earliest event + lookahead` therefore cannot
+    /// contain the arrival of any message created inside it — the
+    /// condition that makes regions independent within a window. Chaos
+    /// link degradation only *adds* latency, so the static floor stays
+    /// valid. `INFINITY` when no cross-region message can exist (spill
+    /// disabled, or fewer than two regions).
+    fn lookahead(&self) -> f64 {
+        let nr = self.topology.num_regions();
+        if !self.spill_cfg.enabled || nr <= 1 {
+            return f64::INFINITY;
+        }
+        let mut extra = f64::INFINITY;
+        for r in 0..nr {
+            for q in 0..nr {
+                if r != q {
+                    extra = extra.min(self.topology.extra_latency(r, q));
+                }
+            }
+        }
+        let l = self.spill_cfg.fixed_s + self.spill_cfg.base_latency_s + extra;
+        assert!(
+            l > 1e-6,
+            "conservative lookahead must exceed the time tolerance"
+        );
+        l
+    }
+
     /// Drive every regional gateway (and the spill mesh) to completion
     /// on one virtual clock. Single-shot, like [`Gateway::run`].
     pub fn run(&mut self) -> RegionsReport {
-        let mut now = 0.0;
-        loop {
-            let mut work = !self.pending.is_empty();
-            for gw in &self.gateways {
-                work = work || gw.has_work();
-            }
-            if !work {
-                break;
-            }
-            // earliest actionable time across regions, the federation
-            // exchange, and pending forward deliveries
-            let mut t_next = self.next_exchange;
-            for gw in &self.gateways {
-                if let Some(t) = gw.next_action_time(now) {
-                    t_next = t_next.min(t);
-                }
-                if gw.next_interval.is_finite() {
-                    t_next = t_next.min(gw.next_interval);
-                }
-            }
-            if let Some(&Reverse((bits, _, _))) = self.pending.peek() {
-                t_next = t_next.min(f64::from_bits(bits));
-            }
-            for gw in &mut self.gateways {
-                gw.advance_to(t_next);
-            }
-            now = t_next;
-            for gw in &mut self.gateways {
-                gw.tick_due(now);
-            }
-            if now + 1e-9 >= self.next_exchange {
-                self.exchange(now);
-                self.next_exchange += self.spill_cfg.exchange_s;
-            }
-            self.deliver_due(now);
-            self.drain_arrivals(now);
-            for gw in &mut self.gateways {
-                gw.dispatch_ready(now);
-            }
-        }
-        for gw in &mut self.gateways {
-            gw.engine.finalize();
-        }
-        self.build_report()
+        self.run_chaos(&crate::chaos::FaultSchedule::default()).regions
     }
 
-    /// Drive every regional gateway to completion like
-    /// [`MultiGateway::run`], injecting `schedule`'s faults at their
-    /// exact virtual times, and measure recovery.
+    /// Drive every regional gateway to completion, injecting
+    /// `schedule`'s faults at their exact virtual times, and measure
+    /// recovery. The plain [`MultiGateway::run`] is this with an empty
+    /// schedule.
     ///
     /// Engine-level faults (crashes, rejoins) are installed upfront into
     /// the owning region's event queue and fire at their exact virtual
-    /// times inside the engine; orchestrator-level faults (link
-    /// degradation/partition/restore, flash crowds) are applied by this
-    /// loop, whose step times include the next pending fault so no fault
-    /// is ever applied late. Recovery is tracked per crash: *detection*
-    /// ends at the scheduling boundary that staged the emergency
-    /// re-covers, *re-copy* ends when every lost expert's coverage is
-    /// restored.
+    /// times inside the engine — on the owning shard's own clock;
+    /// orchestrator-level faults (link degradation/partition/restore,
+    /// flash crowds) are barriers: no window ever steps past the next
+    /// pending fault, and the fault command goes to the owning runner
+    /// exactly at it. Recovery is tracked per crash: *detection* ends at
+    /// the scheduling boundary that staged the emergency re-covers,
+    /// *re-copy* ends when every lost expert's coverage is restored.
     pub fn run_chaos(
         &mut self,
         schedule: &crate::chaos::FaultSchedule,
     ) -> crate::chaos::ChaosReport {
         use crate::chaos::{ChaosReport, FaultKind, FaultRecord};
-        struct CrashTrack {
-            fault: usize,
-            region: usize,
-            server: usize,
-            t_crash: f64,
-            seen_dead: bool,
-            t_staged: Option<f64>,
-            done: bool,
+        // stage replies into the scheduler state: refresh the region's
+        // work hint, route produced messages to their destinations
+        fn absorb(
+            hints: &mut [(bool, f64)],
+            staged: &mut [Vec<RegionMsg>],
+            r: usize,
+            rep: Reply,
+        ) -> (Option<ExchangePayload>, Option<ProbeReply>) {
+            hints[r] = (rep.has_work, rep.next_t);
+            for m in rep.outgoing {
+                staged[m.dst].push(m);
+            }
+            (rep.exchange, rep.probe)
         }
         let nr = self.gateways.len();
         for ev in &schedule.events {
@@ -356,156 +1017,310 @@ impl MultiGateway {
                 violations_during: 0,
             })
             .collect();
-        let mut crash_tracks: Vec<CrashTrack> = Vec::new();
+        let lookahead = self.lookahead();
+        // hand each region's stack to its runner (reassembled at the end)
+        let gateways = std::mem::take(&mut self.gateways);
+        let buses = std::mem::take(&mut self.buses);
+        let nets = std::mem::take(&mut self.nets);
+        let mut runners = Vec::with_capacity(nr);
+        for (r, ((gw, bus), net)) in
+            gateways.into_iter().zip(buses).zip(nets).enumerate()
+        {
+            runners.push(RegionRunner {
+                region: r,
+                nr,
+                gw,
+                bus,
+                net,
+                now: 0.0,
+                seq: 0,
+                token_bytes: self.token_bytes,
+                spill_cfg: self.spill_cfg.clone(),
+                topology: self.topology.clone(),
+                windows: vec![RegionWindow::default(); nr],
+                partitioned_row: vec![false; nr],
+                inbox: BinaryHeap::new(),
+                outgoing: Vec::new(),
+                spilled_out: 0,
+                spilled_in: 0,
+                spill_shed: 0,
+                spill_tasks_to: RegionRunner::fresh_task_counts(nr),
+                crash_tracks: Vec::new(),
+            });
+        }
+        let workers = self.shards.clamp(1, nr.max(1));
+        let mut exec = if workers <= 1 {
+            Executor::Inline(runners)
+        } else {
+            Executor::Crew(WorkerCrew::new(runners, workers, handle))
+        };
+        let mut hints: Vec<(bool, f64)> = vec![(false, f64::INFINITY); nr];
+        let mut staged: Vec<Vec<RegionMsg>> =
+            (0..nr).map(|_| Vec::new()).collect();
+        for (r, rep) in exec.broadcast(|_| Cmd::Hint).into_iter().enumerate()
+        {
+            absorb(&mut hints, &mut staged, r, rep);
+        }
         // fault windows tile the run: each opens at its fault's instant
         // and closes at the next fault's (or the end of the run)
-        let mut open: Option<(usize, (u64, u64, Vec<usize>))> = None;
+        let mut open: Option<(usize, FaultSnap)> = None;
         let mut fault_idx = 0usize;
-        let mut now = 0.0;
+        let mut start = 0.0f64;
         loop {
-            let mut work = !self.pending.is_empty() || fault_idx < n;
-            for gw in &self.gateways {
-                work = work || gw.has_work();
-            }
-            if !work {
+            let any_staged = staged.iter().any(|s| !s.is_empty());
+            if fault_idx >= n && !any_staged && !hints.iter().any(|h| h.0) {
                 break;
             }
-            let mut t_next = self.next_exchange;
-            for gw in &self.gateways {
-                if let Some(t) = gw.next_action_time(now) {
-                    t_next = t_next.min(t);
-                }
-                if gw.next_interval.is_finite() {
-                    t_next = t_next.min(gw.next_interval);
+            // earliest possible next event anywhere: region hints plus
+            // staged (not yet handed over) message arrivals
+            let mut t0 = f64::INFINITY;
+            for h in &hints {
+                t0 = t0.min(h.1);
+            }
+            for msgs in &staged {
+                for m in msgs {
+                    t0 = t0.min(m.arrive_s);
                 }
             }
-            if let Some(&Reverse((bits, _, _))) = self.pending.peek() {
-                t_next = t_next.min(f64::from_bits(bits));
-            }
+            // conservative window end: nothing created after t0 can
+            // arrive before t0 + lookahead, and exchanges/faults are
+            // hard barriers
+            let mut end = self.next_exchange;
             if fault_idx < n {
-                t_next = t_next.min(schedule.events[fault_idx].t_s);
+                end = end.min(schedule.events[fault_idx].t_s);
             }
-            for gw in &mut self.gateways {
-                gw.advance_to(t_next);
-            }
-            now = t_next;
-            // apply orchestrator-level faults due now (crashes/rejoins
-            // were installed upfront and already fired inside advance_to)
-            while fault_idx < n
-                && schedule.events[fault_idx].t_s <= now + 1e-9
+            end = end.min(t0 + lookahead);
+            for (r, rep) in exec
+                .broadcast(|r| Cmd::RunWindow {
+                    end,
+                    msgs: std::mem::take(&mut staged[r]),
+                })
+                .into_iter()
+                .enumerate()
             {
-                if let Some((i, snap)) = open.take() {
-                    self.close_fault_window(&mut records[i], snap);
+                absorb(&mut hints, &mut staged, r, rep);
+            }
+            start = end;
+            // ---- fault barrier -------------------------------------
+            let mut fault_applied = false;
+            while fault_idx < n
+                && schedule.events[fault_idx].t_s <= start + 1e-9
+            {
+                // one probe round per fault: closes the previous window
+                // and opens this one from the same snapshot
+                let from: Vec<usize> = match &open {
+                    Some((_, snap)) => snap.2.clone(),
+                    None => vec![0; nr],
+                };
+                let mut probes: Vec<ProbeReply> = Vec::with_capacity(nr);
+                for (r, rep) in exec
+                    .broadcast(|r| Cmd::FaultProbe { from: from[r] })
+                    .into_iter()
+                    .enumerate()
+                {
+                    let (_, p) = absorb(&mut hints, &mut staged, r, rep);
+                    probes.push(p.expect("fault probe reply"));
                 }
-                open = Some((fault_idx, self.chaos_totals()));
-                match schedule.events[fault_idx].kind {
-                    FaultKind::ServerCrash { region, server } => {
-                        crash_tracks.push(CrashTrack {
-                            fault: fault_idx,
-                            region,
-                            server,
-                            t_crash: now,
-                            seen_dead: false,
-                            t_staged: None,
-                            done: false,
-                        });
-                    }
-                    FaultKind::ServerRejoin { .. } => {}
+                let off: u64 = probes.iter().map(|p| p.offered).sum();
+                let shed: u64 = probes.iter().map(|p| p.shed).sum();
+                let recs: Vec<usize> =
+                    probes.iter().map(|p| p.recs).collect();
+                if let Some((i, snap)) = open.take() {
+                    let rec = &mut records[i];
+                    rec.offered_during = off - snap.0;
+                    rec.shed_during = shed - snap.1;
+                    rec.completed_during = probes
+                        .iter()
+                        .enumerate()
+                        .map(|(g, p)| (p.recs - snap.2[g]) as u64)
+                        .sum();
+                    rec.violations_during =
+                        probes.iter().map(|p| p.violations).sum();
+                }
+                open = Some((fault_idx, (off, shed, recs)));
+                let cmd = match schedule.events[fault_idx].kind {
+                    FaultKind::ServerCrash { region, server } => Some((
+                        region,
+                        Cmd::Crash { fault: fault_idx, server, t: start },
+                    )),
+                    FaultKind::ServerRejoin { .. } => None,
                     FaultKind::LinkDegrade {
                         src,
                         dst,
                         bandwidth_scale,
                         extra_latency_s,
-                    } => self.inter_net.degrade_link(
+                    } => Some((
                         src,
-                        dst,
-                        bandwidth_scale,
-                        extra_latency_s,
-                    ),
+                        Cmd::DegradeLink {
+                            dst,
+                            bandwidth_scale,
+                            extra_latency_s,
+                        },
+                    )),
                     FaultKind::LinkPartition { src, dst } => {
-                        self.partitioned[src * nr + dst] = true;
+                        Some((src, Cmd::Partition { dst }))
                     }
                     FaultKind::LinkRestore { src, dst } => {
-                        self.partitioned[src * nr + dst] = false;
-                        self.inter_net.restore_link(src, dst);
+                        Some((src, Cmd::RestoreLink { dst }))
                     }
-                    FaultKind::FlashCrowd {
+                    FaultKind::FlashCrowd { region, tenant, count } => Some((
                         region,
-                        tenant,
-                        count,
-                    } => self.inject_flash_crowd(region, tenant, count, now),
+                        Cmd::FlashCrowd { tenant, count, t: start },
+                    )),
+                };
+                if let Some((r, cmd)) = cmd {
+                    let rep = exec.send_one(r, cmd);
+                    absorb(&mut hints, &mut staged, r, rep);
                 }
+                fault_applied = true;
                 fault_idx += 1;
             }
-            for gw in &mut self.gateways {
-                gw.tick_due(now);
-            }
-            if now + 1e-9 >= self.next_exchange {
-                self.exchange(now);
-                self.next_exchange += self.spill_cfg.exchange_s;
-            }
-            self.deliver_due(now);
-            self.drain_arrivals(now);
-            for gw in &mut self.gateways {
-                gw.dispatch_ready(now);
-            }
-            // recovery bookkeeping per open crash
-            for tr in &mut crash_tracks {
-                if tr.done {
-                    continue;
-                }
-                let gw = &self.gateways[tr.region];
-                if !tr.seen_dead {
-                    if gw.engine.server_dead(tr.server) {
-                        tr.seen_dead = true;
-                    } else {
-                        continue;
-                    }
-                }
-                if tr.t_staged.is_none()
-                    && !gw.coordinator.recover_pending.is_empty()
+            // ---- exchange barrier ----------------------------------
+            let exchange_due = start + 1e-9 >= self.next_exchange;
+            if fault_applied || exchange_due {
+                // explicit tick round so the sequential step order at a
+                // barrier (faults → tick → exchange → deliveries) holds;
+                // the next window's start tail re-runs it as a no-op
+                for (r, rep) in
+                    exec.broadcast(|_| Cmd::Tick(start)).into_iter().enumerate()
                 {
-                    tr.t_staged = Some(now);
+                    absorb(&mut hints, &mut staged, r, rep);
                 }
-                if gw.engine.placement.missing_experts().is_empty() {
-                    tr.done = true;
-                    records[tr.fault].recovery_s = now - tr.t_crash;
-                    match tr.t_staged {
-                        Some(ts) => {
-                            records[tr.fault].detect_s = ts - tr.t_crash;
-                            records[tr.fault].recopy_s = now - ts;
-                        }
-                        None => {
-                            // surviving replicas covered everything —
-                            // nothing needed staging
-                            records[tr.fault].detect_s = 0.0;
-                            records[tr.fault].recopy_s = 0.0;
+            }
+            if exchange_due {
+                let mut payloads: Vec<ExchangePayload> =
+                    Vec::with_capacity(nr);
+                for (r, rep) in exec
+                    .broadcast(|_| Cmd::Exchange { t: start })
+                    .into_iter()
+                    .enumerate()
+                {
+                    let (ex, _) = absorb(&mut hints, &mut staged, r, rep);
+                    payloads.push(ex.expect("exchange payload"));
+                }
+                let windows: Vec<RegionWindow> =
+                    payloads.iter().map(|(w, _)| w.clone()).collect();
+                // aggregate the per-origin spilled-task counts by
+                // destination (order-free u64 sums)
+                let mut spill_tasks = RegionRunner::fresh_task_counts(nr);
+                for (_, drained) in &payloads {
+                    for (dst, counts) in drained.iter().enumerate() {
+                        for (ti, &c) in counts.iter().enumerate() {
+                            spill_tasks[dst][ti] += c;
                         }
                     }
+                }
+                let boosts: Vec<Vec<f64>> = (0..nr)
+                    .map(|r| self.spill_boost(&spill_tasks[r]))
+                    .collect();
+                for b in &boosts {
+                    if !b.is_empty() {
+                        self.boost_publishes += 1;
+                    }
+                }
+                self.exchanges += 1;
+                self.next_exchange += self.spill_cfg.exchange_s;
+                for (r, rep) in exec
+                    .broadcast(|r| Cmd::ApplyExchange {
+                        windows: windows.clone(),
+                        pressure: windows[r].pressure,
+                        boost: boosts[r].clone(),
+                    })
+                    .into_iter()
+                    .enumerate()
+                {
+                    absorb(&mut hints, &mut staged, r, rep);
                 }
             }
         }
-        for gw in &mut self.gateways {
-            gw.engine.finalize();
+        for (r, rep) in
+            exec.broadcast(|_| Cmd::Finalize).into_iter().enumerate()
+        {
+            absorb(&mut hints, &mut staged, r, rep);
+        }
+        // close the last fault window over the finalized state (before
+        // build_report drains the per-region completion records)
+        if let Some((i, snap)) = open.take() {
+            let mut probes: Vec<ProbeReply> = Vec::with_capacity(nr);
+            for (r, rep) in exec
+                .broadcast(|r| Cmd::FaultProbe { from: snap.2[r] })
+                .into_iter()
+                .enumerate()
+            {
+                let (_, p) = absorb(&mut hints, &mut staged, r, rep);
+                probes.push(p.expect("fault probe reply"));
+            }
+            let rec = &mut records[i];
+            rec.offered_during =
+                probes.iter().map(|p| p.offered).sum::<u64>() - snap.0;
+            rec.shed_during =
+                probes.iter().map(|p| p.shed).sum::<u64>() - snap.1;
+            rec.completed_during = probes
+                .iter()
+                .enumerate()
+                .map(|(g, p)| (p.recs - snap.2[g]) as u64)
+                .sum();
+            rec.violations_during =
+                probes.iter().map(|p| p.violations).sum();
+        }
+        // reassemble: runners come back in region order from both
+        // executors (contiguous chunks, concatenated in order)
+        self.spilled_out.clear();
+        self.spilled_in.clear();
+        self.spill_shed.clear();
+        let mut crash_tracks: Vec<(usize, CrashTrack)> = Vec::new();
+        for (r, rr) in exec.finish().into_iter().enumerate() {
+            let RegionRunner {
+                gw,
+                bus,
+                net,
+                spilled_out,
+                spilled_in,
+                spill_shed,
+                crash_tracks: tracks,
+                ..
+            } = rr;
+            self.gateways.push(gw);
+            self.buses.push(bus);
+            self.nets.push(net);
+            self.spilled_out.push(spilled_out);
+            self.spilled_in.push(spilled_in);
+            self.spill_shed.push(spill_shed);
+            crash_tracks.extend(tracks.into_iter().map(|t| (r, t)));
+        }
+        for (_, tr) in &crash_tracks {
+            if tr.done {
+                let rec = &mut records[tr.fault];
+                rec.recovery_s = tr.t_done - tr.t_crash;
+                match tr.t_staged {
+                    Some(ts) => {
+                        rec.detect_s = ts - tr.t_crash;
+                        rec.recopy_s = tr.t_done - ts;
+                    }
+                    None => {
+                        // surviving replicas covered everything —
+                        // nothing needed staging
+                        rec.detect_s = 0.0;
+                        rec.recopy_s = 0.0;
+                    }
+                }
+            }
         }
         // build_report folds the final scale completions into each
         // coordinator (releasing tail-end reservations and counting the
         // recoveries that applied after the last boundary), so every
         // verdict below must read post-fold state
         let regions = self.build_report();
-        if let Some((i, snap)) = open.take() {
-            self.close_fault_window(&mut records[i], snap);
-        }
-        // a crash whose dead window fell between loop steps still counts
-        // as recovered if the end state has full coverage
-        for tr in &mut crash_tracks {
+        // a crash whose dead window fell between window boundaries still
+        // counts as recovered if the end state has full coverage
+        for (r, tr) in &mut crash_tracks {
             if !tr.done {
-                let gw = &self.gateways[tr.region];
+                let gw = &self.gateways[*r];
                 if gw.engine.placement.missing_experts().is_empty()
                     && gw.coordinator.recover_pending.is_empty()
                 {
                     tr.done = true;
-                    records[tr.fault].recovery_s = now - tr.t_crash;
+                    records[tr.fault].recovery_s = start - tr.t_crash;
                 }
             }
         }
@@ -516,7 +1331,8 @@ impl MultiGateway {
             .iter()
             .map(|g| g.coordinator.recoveries)
             .sum();
-        let mut recovery_complete = crash_tracks.iter().all(|t| t.done);
+        let mut recovery_complete =
+            crash_tracks.iter().all(|(_, t)| t.done);
         for gw in &self.gateways {
             recovery_complete &=
                 gw.engine.placement.missing_experts().is_empty();
@@ -572,319 +1388,11 @@ impl MultiGateway {
         }
     }
 
-    /// Cumulative (offered, shed, per-region completion counts) — the
-    /// snapshot a fault window opens with.
-    fn chaos_totals(&self) -> (u64, u64, Vec<usize>) {
-        let mut offered = 0u64;
-        let mut shed = 0u64;
-        let mut recs = Vec::with_capacity(self.gateways.len());
-        for gw in &self.gateways {
-            offered += gw.offered;
-            shed += gw.admission.shed;
-            recs.push(gw.engine.report.records.len());
-        }
-        (offered, shed, recs)
-    }
-
-    /// Close one fault window: deltas vs the opening snapshot, with
-    /// window completions scanned for SLO violations.
-    fn close_fault_window(
-        &self,
-        rec: &mut crate::chaos::FaultRecord,
-        snap: (u64, u64, Vec<usize>),
-    ) {
-        let (off, shed, _) = self.chaos_totals();
-        rec.offered_during = off - snap.0;
-        rec.shed_during = shed - snap.1;
-        let mut completed = 0u64;
-        let mut violations = 0u64;
-        for (g, gw) in self.gateways.iter().enumerate() {
-            let new = &gw.engine.report.records[snap.2[g]..];
-            completed += new.len() as u64;
-            violations += new
-                .iter()
-                .filter(|x| x.latency_s > gw.cfg.slo_s)
-                .count() as u64;
-        }
-        rec.completed_during = completed;
-        rec.violations_during = violations;
-    }
-
-    /// Inject a chaos flash crowd: `count` deterministic requests for
-    /// `tenant` (clamped to the region's tenant set) offered at `region`
-    /// through the normal admission path — conserved like any arrival.
-    /// Ids are minted from the gateway's own arrival id space so they
-    /// never collide with scheduled arrivals.
-    fn inject_flash_crowd(
-        &mut self,
-        region: usize,
-        tenant: usize,
-        count: usize,
-        now: f64,
-    ) {
-        let gw = &self.gateways[region];
-        let tenant = tenant.min(gw.admission.num_tenants().saturating_sub(1));
-        let num_servers = gw.admission.num_servers();
-        for i in 0..count {
-            let id = self.gateways[region].arrivals.mint_id();
-            let req = Request {
-                id,
-                server: i % num_servers,
-                arrival_s: now,
-                prompt_tokens: 64,
-                output_tokens: 16,
-                task: TaskKind::Arithmetic,
-                tenant,
-            };
-            self.route_arrival(region, req, now);
-        }
-    }
-
-    /// Process every region's arrivals due at `now`. A request forwards
-    /// to the best peer when its tenant's local headroom is under the
-    /// pre-spill watermark, or — the backstop — when every local queue
-    /// rejected it; with no willing peer it is shed at home.
-    fn drain_arrivals(&mut self, now: f64) {
-        for r in 0..self.gateways.len() {
-            while let Some(req) = self.gateways[r].pop_arrival_due(now) {
-                self.route_arrival(r, req, now);
-            }
-        }
-    }
-
-    /// Route one request arriving at region `r` — the shared
-    /// pre-spill / admit / backstop-spill / shed path for scheduled
-    /// arrivals and chaos flash-crowd injections alike.
-    fn route_arrival(&mut self, r: usize, req: Request, now: f64) {
-        if self.spill_cfg.enabled && self.under_watermark(r, req.tenant) {
-            if let Some(q) = self.spill_target(r, req.tenant) {
-                // counted offered at home like any arrival, then
-                // forwarded ahead of the shed cliff
-                self.gateways[r].offered += 1;
-                self.forward(r, q, req, now);
-                return;
-            }
-        }
-        match self.gateways[r].try_admit(req, now) {
-            Ok(()) => {}
-            Err(rej) => match self.spill_target(r, rej.tenant) {
-                Some(q) => self.forward(r, q, rej, now),
-                None => {
-                    let gw = &mut self.gateways[r];
-                    gw.admission.record_shed_tenant(rej.tenant);
-                    gw.engine.obs.on_shed(rej.tenant, rej.server, now);
-                }
-            },
-        }
-    }
-
-    /// Is `tenant`'s region-wide admission headroom at region `r` below
-    /// the pre-spill watermark?
-    fn under_watermark(&self, r: usize, tenant: usize) -> bool {
-        if self.spill_cfg.prespill_frac <= 0.0 {
-            return false;
-        }
-        let adm = &self.gateways[r].admission;
-        let n = adm.num_servers();
-        let mut residual = 0usize;
-        for s in 0..n {
-            residual += adm.tenant_residual(s, tenant);
-        }
-        let cap = adm.tenant_cap(tenant) * n;
-        (residual as f64) < self.spill_cfg.prespill_frac * cap as f64
-    }
-
-    /// Spill destination for region `src`'s overflow of `tenant`: the
-    /// peer advertising the most admission headroom in the last
-    /// federation exchange, discounted by the inter-region latency to
-    /// reach it. Peers under the headroom floor, without room in *this
-    /// tenant's* own queues, or already pressured are skipped (a tenant
-    /// saturated everywhere sheds at home immediately instead of paying
-    /// a forward that is doomed on delivery). `None` = shed at home.
-    fn spill_target(&self, src: usize, tenant: usize) -> Option<usize> {
-        if !self.spill_cfg.enabled {
-            return None;
-        }
-        let mut best: Option<(f64, usize)> = None;
-        for q in 0..self.gateways.len() {
-            if q == src {
-                continue;
-            }
-            if self.partitioned[src * self.gateways.len() + q] {
-                continue;
-            }
-            let w = &self.windows[q];
-            if w.residual < self.spill_cfg.min_residual {
-                continue;
-            }
-            if w.residual_by_tenant.get(tenant).copied().unwrap_or(0) == 0 {
-                continue;
-            }
-            if w.pressure > SPILL_MAX_PRESSURE {
-                continue;
-            }
-            let score = w.residual as f64
-                / (1.0 + self.topology.extra_latency(src, q));
-            if best.map(|(s, _)| score > s).unwrap_or(true) {
-                best = Some((score, q));
-            }
-        }
-        best.map(|(_, q)| q)
-    }
-
-    /// Forward a rejected request from `src` to `dst`: book the prompt
-    /// payload on the inter-region link (FIFO contention) and schedule
-    /// the delivery.
-    fn forward(&mut self, src: usize, dst: usize, req: Request, now: f64) {
-        self.spilled_out[src] += 1;
-        self.spill_tasks[dst][task_index(req.task)] += 1;
-        let bytes = req.prompt_tokens as f64 * self.token_bytes;
-        let at = self.inter_net.book_transfer(
-            src,
-            dst,
-            bytes,
-            now,
-            self.spill_cfg.fixed_s,
-            TransferPurpose::RegionSpill,
-        );
-        let seq = self.seq;
-        self.seq += 1;
-        self.gateways[src]
-            .engine
-            .obs
-            .on_spill_forward(seq as u32, src, dst, now, at);
-        let dur = at - now;
-        let slot = match self.pending_free.pop() {
-            Some(s) => {
-                self.pending_reqs[s as usize] = Some((req, src, dst, dur));
-                s
-            }
-            None => {
-                let s = self.pending_reqs.len() as u32;
-                self.pending_reqs.push(Some((req, src, dst, dur)));
-                s
-            }
-        };
-        self.pending.push(Reverse((at.to_bits(), seq, slot)));
-    }
-
-    /// Admit every forward whose transfer has landed by `now`. The entry
-    /// server is the destination's most-headroom server for the
-    /// request's tenant; from there the normal preference walk applies.
-    /// A forward that finds no room is shed, attributed to its origin.
-    fn deliver_due(&mut self, now: f64) {
-        while let Some(&Reverse((bits, seq, slot))) = self.pending.peek() {
-            if f64::from_bits(bits) > now + 1e-9 {
-                break;
-            }
-            self.pending.pop();
-            let (mut req, src, dst, dur) = self.pending_reqs
-                [slot as usize]
-                .take()
-                .expect("pending forward slot");
-            self.pending_free.push(slot);
-            let tenant = req.tenant;
-            let req_id = req.id as u64;
-            let arrival = req.arrival_s;
-            let home = req.server;
-            let admitted = {
-                let gw = &mut self.gateways[dst];
-                let mut entry = 0usize;
-                let mut best = 0usize;
-                for s in 0..gw.admission.num_servers() {
-                    let res = gw.admission.tenant_residual(s, tenant);
-                    if res > best {
-                        best = res;
-                        entry = s;
-                    }
-                }
-                req.server = entry;
-                gw.engine.obs.on_spill_deliver(seq as u32, src, dst, now);
-                gw.engine.obs.note_prearrival_transfer(req_id, arrival, dur);
-                gw.admit_forwarded(req, now)
-            };
-            if admitted {
-                self.spilled_in[dst] += 1;
-            } else {
-                self.spill_shed[src] += 1;
-                self.gateways[dst]
-                    .engine
-                    .obs
-                    .clear_prearrival(req_id, arrival);
-                self.gateways[src].admission.record_shed_tenant(tenant);
-                self.gateways[src].engine.obs.on_shed(tenant, home, now);
-            }
-        }
-    }
-
-    /// One federation exchange: publish every region's window, then hand
-    /// each coordinator its own pressure plus the expert boost derived
-    /// from the traffic spilled *into* it since the last exchange.
-    fn exchange(&mut self, now: f64) {
-        for r in 0..self.gateways.len() {
-            let gw = &self.gateways[r];
-            let queued = gw.admission.total_queued();
-            let residual = gw.admission.total_residual();
-            let by_tenant: Vec<usize> = (0..gw.admission.num_tenants())
-                .map(|t| gw.admission.tenant_residual_total(t))
-                .collect();
-            self.windows[r] = self.buses[r].collect(
-                &gw.engine.report,
-                gw.admission.shed,
-                queued,
-                residual,
-                by_tenant,
-            );
-            if self.gateways[r].engine.obs.enabled() {
-                // cumulative spill bytes this region pushed onto the
-                // inter-region mesh (purpose-attributed at the mesh)
-                let spill_bytes: f64 = (0..self.gateways.len())
-                    .map(|q| self.inter_net.link_bytes(r, q))
-                    .sum();
-                let w = &self.windows[r];
-                let row = Json::from_pairs(vec![
-                    ("t_s", Json::Num(now)),
-                    ("kind", Json::Str("region_window".into())),
-                    ("schema", Json::Num(OBS_SCHEMA_VERSION as f64)),
-                    ("completed", Json::Num(w.completed as f64)),
-                    ("shed", Json::Num(w.shed as f64)),
-                    ("p95_s", Json::Num(w.p95_s)),
-                    ("queued", Json::Num(w.queued as f64)),
-                    ("residual", Json::Num(w.residual as f64)),
-                    ("pressure", Json::Num(w.pressure)),
-                    (
-                        "spilled_out",
-                        Json::Num(self.spilled_out[r] as f64),
-                    ),
-                    ("spilled_in", Json::Num(self.spilled_in[r] as f64)),
-                    ("spill_shed", Json::Num(self.spill_shed[r] as f64)),
-                    ("spill_bytes", Json::Num(spill_bytes)),
-                ]);
-                self.gateways[r].engine.obs.push_metrics_row(row);
-            }
-        }
-        for r in 0..self.gateways.len() {
-            let boost = self.spill_boost(r);
-            if !boost.is_empty() {
-                self.boost_publishes += 1;
-            }
-            let pressure = self.windows[r].pressure;
-            self.gateways[r]
-                .coordinator
-                .note_region_pressure(pressure, boost);
-            for c in &mut self.spill_tasks[r] {
-                *c = 0;
-            }
-        }
-        self.exchanges += 1;
-    }
-
     /// Expert boost for a region that received spill: `1 + share_t ·
     /// mass_t` summed over the spilled tasks, capped like the tenant
     /// boost — the receiving autoscaler prefers replicating exactly what
     /// the spill activates. Empty (neutral) when nothing spilled in.
-    fn spill_boost(&self, region: usize) -> Vec<f64> {
-        let counts = &self.spill_tasks[region];
+    fn spill_boost(&self, counts: &[u64]) -> Vec<f64> {
         let total: u64 = counts.iter().sum();
         if total == 0 {
             return Vec::new();
@@ -941,29 +1449,30 @@ impl MultiGateway {
     }
 
     /// The unified metrics-snapshot stream over every region: each
-    /// region's rows tagged with its name, merged in virtual-clock order
-    /// (stable — ties keep region order), one JSON object per line.
+    /// region's rows tagged with its name, merged by the stable k-way
+    /// `(time, within-region index, region)` key
+    /// ([`crate::obs::merge_metrics_streams`]) — deterministic even on
+    /// exact time ties, and independent of how regions were sharded.
     pub fn metrics_jsonl(&self) -> String {
-        let mut rows: Vec<(f64, Json)> = Vec::new();
-        for (r, gw) in self.gateways.iter().enumerate() {
-            let name = &self.topology.regions[r].name;
-            for row in &gw.engine.obs.metrics_rows {
-                let mut tagged = row.clone();
-                tagged.set("region", Json::Str(name.clone()));
-                let t = tagged
-                    .get("t_s")
-                    .and_then(|v| v.as_f64())
-                    .unwrap_or(0.0);
-                rows.push((t, tagged));
-            }
-        }
-        rows.sort_by(|a, b| a.0.total_cmp(&b.0));
-        let mut s = String::new();
-        for (_, row) in &rows {
-            s.push_str(&row.to_string());
-            s.push('\n');
-        }
-        s
+        let streams: Vec<Vec<Json>> = self
+            .gateways
+            .iter()
+            .enumerate()
+            .map(|(r, gw)| {
+                let name = &self.topology.regions[r].name;
+                gw.engine
+                    .obs
+                    .metrics_rows
+                    .iter()
+                    .map(|row| {
+                        let mut tagged = row.clone();
+                        tagged.set("region", Json::Str(name.clone()));
+                        tagged
+                    })
+                    .collect()
+            })
+            .collect();
+        crate::obs::merge_metrics_streams(streams)
     }
 
     /// Flight-recorder dumps from every region, as one JSON document.
@@ -1020,6 +1529,16 @@ impl MultiGateway {
         GlobalView { rows }
     }
 
+    /// Aggregate wall-clock-free engine work across every region
+    /// (completed engine events) — the numerator of the sharded engine's
+    /// aggregate events/s throughput metric.
+    pub fn events_processed(&self) -> usize {
+        self.gateways
+            .iter()
+            .map(|g| g.engine.events_processed())
+            .sum()
+    }
+
     fn build_report(&mut self) -> RegionsReport {
         let slo_s = self
             .gateways
@@ -1070,6 +1589,16 @@ impl MultiGateway {
             .iter()
             .map(|r| r.gateway.flight_dumps_dropped)
             .sum();
+        // each region only books its own row, so the per-region link
+        // matrices concatenate (in region = src-major order) into
+        // exactly the sequential mesh
+        let mesh_links: Vec<(usize, usize, [f64; NUM_PURPOSES])> = self
+            .nets
+            .iter()
+            .flat_map(|n| n.nonzero_links())
+            .collect();
+        let mesh_bytes: f64 =
+            self.nets.iter().map(|n| n.total_bytes()).sum();
         RegionsReport {
             spill_enabled: self.spill_cfg.enabled,
             slo_s,
@@ -1085,12 +1614,39 @@ impl MultiGateway {
             p50_s: p[0],
             p95_s: p[1],
             p99_s: p[2],
-            mesh_links: self.inter_net.nonzero_links(),
-            mesh_bytes: self.inter_net.total_bytes(),
+            mesh_links,
+            mesh_bytes,
             obs_dropped,
             flight_dumps_dropped,
             regions,
         }
+    }
+}
+
+/// The sharded-engine entry point: a [`MultiGateway`] pinned to a shard
+/// count. Pure convenience — `shards == 1` *is* the sequential engine,
+/// and any other count is byte-identical to it; this wrapper just makes
+/// the parallel intent explicit at call sites (CLI, benches, tests).
+pub struct ParallelMultiGateway(pub MultiGateway);
+
+impl ParallelMultiGateway {
+    /// Wrap `inner`, running its regions on `shards` worker threads
+    /// (clamped to at least 1; counts above the region count are
+    /// clamped down by the crew).
+    pub fn new(mut inner: MultiGateway, shards: usize) -> Self {
+        inner.shards = shards.max(1);
+        ParallelMultiGateway(inner)
+    }
+
+    pub fn run(&mut self) -> RegionsReport {
+        self.0.run()
+    }
+
+    pub fn run_chaos(
+        &mut self,
+        schedule: &crate::chaos::FaultSchedule,
+    ) -> crate::chaos::ChaosReport {
+        self.0.run_chaos(schedule)
     }
 }
 
@@ -1222,13 +1778,13 @@ impl GlobalView {
 }
 
 /// The canonical regionalized scenario: `num_regions` independent
-/// 3-server edge testbeds with **edge-grade accelerators**
-/// (`gpu_scale` × an A100), each offering `rps_per_region` of the
-/// bigbench mix under a diurnal profile whose phase is staggered by
-/// `period_s / num_regions` per region. The staggering keeps the
-/// cluster-wide offered load constant while every region periodically
-/// runs past its own capacity — the regime where cross-gateway spill
-/// converts sheds into served requests.
+/// `servers_per_region`-server edge testbeds with **edge-grade
+/// accelerators** (`gpu_scale` × an A100), each offering
+/// `rps_per_region` of the bigbench mix under a diurnal profile whose
+/// phase is staggered by `period_s / num_regions` per region. The
+/// staggering keeps the cluster-wide offered load constant while every
+/// region periodically runs past its own capacity — the regime where
+/// cross-gateway spill converts sheds into served requests.
 ///
 /// With the default `gpu_scale` the bottleneck is GPU compute (≈ 0.48 s
 /// of GPU time per request over 3.75 effective GPUs ⇒ ≈ 7.8 req/s per
@@ -1245,6 +1801,9 @@ impl GlobalView {
 #[derive(Debug, Clone)]
 pub struct RegionsScenario {
     pub num_regions: usize,
+    /// Servers in each region's cluster (the default 3 is the paper's
+    /// edge testbed; [`RegionsScenario::big`] scales it up).
+    pub servers_per_region: usize,
     /// Mean aggregate arrival rate per region (req/s).
     pub rps_per_region: f64,
     pub horizon_s: f64,
@@ -1269,6 +1828,9 @@ pub struct RegionsScenario {
     pub tenants: Option<crate::serve::TenantSet>,
     /// Extra one-way latency between any two regions.
     pub inter_latency_s: f64,
+    /// Worker threads for the sharded engine (1 = inline; output is
+    /// byte-identical at any value).
+    pub shards: usize,
     pub seed: u64,
 }
 
@@ -1276,6 +1838,7 @@ impl Default for RegionsScenario {
     fn default() -> Self {
         RegionsScenario {
             num_regions: 3,
+            servers_per_region: 3,
             rps_per_region: 5.5,
             horizon_s: 480.0,
             period_s: 240.0,
@@ -1289,12 +1852,29 @@ impl Default for RegionsScenario {
             autoscale: false,
             tenants: None,
             inter_latency_s: 0.03,
+            shards: 1,
             seed: 0,
         }
     }
 }
 
 impl RegionsScenario {
+    /// The 10×-larger sharding showcase behind `BENCH_parallel.json`:
+    /// 12 regions × 84 servers = 1008 servers, offered-load-per-server
+    /// held at the canonical scenario's operating point, over a short
+    /// horizon (this is a throughput benchmark, not an SLO study).
+    pub fn big(seed: u64) -> RegionsScenario {
+        RegionsScenario {
+            num_regions: 12,
+            servers_per_region: 84,
+            // the canonical 5.5 req/s over 3 servers, scaled to 84
+            rps_per_region: 154.0,
+            horizon_s: 60.0,
+            seed,
+            ..RegionsScenario::default()
+        }
+    }
+
     /// The model every region serves (trimmed Mixtral, like the other
     /// serving harnesses).
     pub fn model(&self) -> ModelConfig {
@@ -1303,10 +1883,14 @@ impl RegionsScenario {
         m
     }
 
-    /// One region's cluster: the paper's 3-server edge testbed with
-    /// compute scaled down to edge-grade accelerators.
+    /// One region's cluster: the paper's edge testbed pattern at
+    /// `servers_per_region` servers, with compute scaled down to
+    /// edge-grade accelerators.
     fn region_cluster(&self, model: &ModelConfig) -> ClusterConfig {
-        let mut c = ClusterConfig::edge_testbed_3_for(model);
+        let mut c = ClusterConfig::edge_testbed_n_for(
+            model,
+            self.servers_per_region,
+        );
         for s in &mut c.servers {
             for g in &mut s.gpus {
                 g.flops *= self.gpu_scale.max(1e-4);
@@ -1332,25 +1916,28 @@ impl RegionsScenario {
             .then(crate::autoscale::AutoscaleConfig::default)
     }
 
-    /// The topology: `num_regions` regions of 3 servers each, every
-    /// cross-region pair at `inter_latency_s` / half bandwidth.
+    /// The topology: `num_regions` regions of `servers_per_region`
+    /// servers each, every cross-region pair at `inter_latency_s` / half
+    /// bandwidth.
     pub fn topology(&self) -> RegionTopology {
         RegionTopology::contiguous(
-            &vec![3usize; self.num_regions],
+            &vec![self.servers_per_region; self.num_regions],
             self.inter_latency_s,
             0.5,
         )
     }
 
-    /// Build the multi-gateway system (spill per `self.spill`).
+    /// Build the multi-gateway system (spill per `self.spill`, sharded
+    /// onto `self.shards` worker threads).
     pub fn build(&self) -> MultiGateway {
         let model = self.model();
         let mut shards = Vec::with_capacity(self.num_regions);
         for r in 0..self.num_regions {
             let cluster = self.region_cluster(&model);
-            // mean aggregate rate spread evenly over the 3 streams
-            let workload = WorkloadConfig::bigbench(
+            // mean aggregate rate spread evenly over the streams
+            let workload = WorkloadConfig::bigbench_n(
                 cluster.num_servers() as f64 / self.rps_per_region,
+                cluster.num_servers(),
             );
             let phase = self.phase(r);
             shards.push(RegionShard {
@@ -1383,7 +1970,10 @@ impl RegionsScenario {
             enabled: self.spill,
             ..SpillConfig::default()
         };
-        MultiGateway::new(&model, shards, self.topology(), spill_cfg)
+        let mut multi =
+            MultiGateway::new(&model, shards, self.topology(), spill_cfg);
+        multi.shards = self.shards;
+        multi
     }
 
     /// The single-global-gateway baseline: one gateway over every
@@ -1399,8 +1989,9 @@ impl RegionsScenario {
         let mut phases = Vec::new();
         for r in 0..self.num_regions {
             let shard = self.region_cluster(&model);
-            let workload = WorkloadConfig::bigbench(
+            let workload = WorkloadConfig::bigbench_n(
                 shard.num_servers() as f64 / self.rps_per_region,
+                shard.num_servers(),
             );
             for (i, s) in shard.servers.into_iter().enumerate() {
                 let mut s = s;
@@ -1646,13 +2237,25 @@ mod tests {
             report.regions.iter().map(|r| r.spilled_in).sum();
         assert_eq!(report.spilled, spilled_in + report.spill_shed);
         multi.global_view().validate().unwrap();
-        assert!(multi.pending.is_empty(), "no forward left in flight");
-        // slot recycling: forward storage is bounded by in-flight
-        // forwards, not total forwards (every slot freed at the end)
+    }
+
+    #[test]
+    fn sharded_run_is_byte_identical_to_inline() {
+        // The tentpole invariant, in-tree: the same scenario run inline
+        // and on 2 worker shards serializes identically (the full
+        // report, down to every float). tests/parallel_determinism.rs
+        // sweeps seeds × shard counts × chaos through the public API.
+        let scenario = RegionsScenario {
+            horizon_s: 120.0,
+            seed: 9,
+            ..RegionsScenario::default()
+        };
+        let seq = scenario.build().run();
+        let par = ParallelMultiGateway::new(scenario.build(), 2).run();
         assert_eq!(
-            multi.pending_free.len(),
-            multi.pending_reqs.len(),
-            "all forward slots recycled"
+            format!("{seq:?}"),
+            format!("{par:?}"),
+            "2-shard run must be byte-identical to inline"
         );
     }
 

@@ -1,8 +1,13 @@
 //! A small fixed-size worker pool + `parallel_map` (replaces tokio for the
 //! CPU-bound fan-out in the benchmark sweeps; the request path itself is a
 //! single-threaded discrete-event loop, which is both faster and exactly
-//! reproducible).
+//! reproducible), plus `WorkerCrew`: long-lived workers that each own a
+//! contiguous chunk of stateful items and answer addressed commands over
+//! bounded channels. The crew is the substrate for the sharded region
+//! engine — worker panics propagate to the caller instead of hanging the
+//! orchestrator, and dropping the crew shuts the workers down.
 
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread;
@@ -67,9 +72,25 @@ impl Drop for ThreadPool {
     }
 }
 
+/// Render a panic payload (the `Box<dyn Any>` from `catch_unwind`) as the
+/// original message when it was a string, so the re-raised panic on the
+/// calling thread keeps the worker's diagnostic.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
 /// Apply `f` to every item on a transient pool and return results in input
 /// order. Used by the experiment sweeps (each item is an independent
 /// simulation run with its own RNG, so parallelism preserves determinism).
+/// A panic inside `f` is resumed on the calling thread instead of leaving
+/// a hole in the results (the old behaviour was a confusing
+/// "worker completed" panic with the original message lost).
 pub fn parallel_map<T, R, F>(items: Vec<T>, threads: usize, f: F) -> Vec<R>
 where
     T: Send + 'static,
@@ -80,27 +101,228 @@ where
     if n == 0 {
         return Vec::new();
     }
-    let threads = threads.max(1).min(n);
+    let threads = threads.clamp(1, n);
     if threads == 1 {
         return items.into_iter().map(f).collect();
     }
     let pool = ThreadPool::new(threads);
     let f = Arc::new(f);
-    let (tx, rx) = mpsc::channel::<(usize, R)>();
+    let (tx, rx) = mpsc::channel::<(usize, thread::Result<R>)>();
     for (i, item) in items.into_iter().enumerate() {
         let tx = tx.clone();
         let f = Arc::clone(&f);
         pool.execute(move || {
-            let r = f(item);
+            let r = catch_unwind(AssertUnwindSafe(|| f(item)));
             let _ = tx.send((i, r));
         });
     }
     drop(tx);
     let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
     for (i, r) in rx {
-        out[i] = Some(r);
+        match r {
+            Ok(r) => out[i] = Some(r),
+            Err(payload) => resume_unwind(payload),
+        }
     }
     out.into_iter().map(|r| r.expect("worker completed")).collect()
+}
+
+type CrewCmdLane<C> = mpsc::SyncSender<(usize, C)>;
+type CrewReplyLane<Rp> = mpsc::Receiver<(usize, Rp)>;
+
+/// Long-lived worker threads that each own a contiguous chunk of items
+/// (`S`) and apply a shared handler to addressed commands. Commands and
+/// replies travel over bounded (`sync_channel`) lanes sized to the chunk,
+/// which is exactly enough for the crew's send-all-then-collect-all usage
+/// pattern; a worker that panics stores the panic message and drops its
+/// reply lane, so the next collect raises on the calling thread instead
+/// of blocking forever. `finish` returns the items (in their original
+/// order) for reassembly; dropping the crew without `finish` still joins
+/// every worker.
+pub struct WorkerCrew<S, C, Rp> {
+    cmd_txs: Vec<CrewCmdLane<C>>,
+    reply_rxs: Vec<CrewReplyLane<Rp>>,
+    handles: Vec<thread::JoinHandle<Vec<S>>>,
+    /// `ranges[w]` is the global item range owned by worker `w`.
+    ranges: Vec<std::ops::Range<usize>>,
+    /// Global item index -> owning worker.
+    owner: Vec<usize>,
+    panic_slot: Arc<Mutex<Option<String>>>,
+}
+
+impl<S, C, Rp> WorkerCrew<S, C, Rp>
+where
+    S: Send + 'static,
+    C: Send + 'static,
+    Rp: Send + 'static,
+{
+    /// Spawn `workers` threads (clamped to `[1, items.len()]`), splitting
+    /// `items` into contiguous chunks by ceiling division. The handler runs
+    /// on the owning worker with exclusive access to the item.
+    pub fn new<H>(items: Vec<S>, workers: usize, handler: H) -> WorkerCrew<S, C, Rp>
+    where
+        H: Fn(&mut S, C) -> Rp + Send + Sync + 'static,
+    {
+        let n = items.len();
+        if n == 0 {
+            return WorkerCrew {
+                cmd_txs: Vec::new(),
+                reply_rxs: Vec::new(),
+                handles: Vec::new(),
+                ranges: Vec::new(),
+                owner: Vec::new(),
+                panic_slot: Arc::new(Mutex::new(None)),
+            };
+        }
+        let workers = workers.clamp(1, n);
+        let chunk = n.div_ceil(workers);
+        let handler = Arc::new(handler);
+        let panic_slot = Arc::new(Mutex::new(None));
+        let mut cmd_txs = Vec::with_capacity(workers);
+        let mut reply_rxs = Vec::with_capacity(workers);
+        let mut handles = Vec::with_capacity(workers);
+        let mut ranges = Vec::with_capacity(workers);
+        let mut owner = vec![0usize; n];
+        let mut items = items.into_iter();
+        let mut base = 0usize;
+        for w in 0..workers {
+            let take = chunk.min(n - base);
+            let mine: Vec<S> = items.by_ref().take(take).collect();
+            for o in owner.iter_mut().skip(base).take(take) {
+                *o = w;
+            }
+            ranges.push(base..base + take);
+            let (cmd_tx, cmd_rx) = mpsc::sync_channel::<(usize, C)>(take.max(1));
+            let (reply_tx, reply_rx) = mpsc::sync_channel::<(usize, Rp)>(take.max(1));
+            let handler = Arc::clone(&handler);
+            let slot = Arc::clone(&panic_slot);
+            let handle = thread::Builder::new()
+                .name(format!("dancemoe-crew-{w}"))
+                .spawn(move || {
+                    let mut mine = mine;
+                    while let Ok((local, cmd)) = cmd_rx.recv() {
+                        let run = AssertUnwindSafe(|| handler(&mut mine[local], cmd));
+                        match catch_unwind(run) {
+                            Ok(reply) => {
+                                if reply_tx.send((base + local, reply)).is_err() {
+                                    break;
+                                }
+                            }
+                            Err(payload) => {
+                                let msg = panic_message(payload.as_ref());
+                                *slot.lock().unwrap() = Some(msg);
+                                // Dropping the reply lane wakes the caller,
+                                // which re-raises the stored message.
+                                break;
+                            }
+                        }
+                    }
+                    mine
+                })
+                .expect("spawn crew worker");
+            cmd_txs.push(cmd_tx);
+            reply_rxs.push(reply_rx);
+            handles.push(handle);
+            base += take;
+        }
+        WorkerCrew {
+            cmd_txs,
+            reply_rxs,
+            handles,
+            ranges,
+            owner,
+            panic_slot,
+        }
+    }
+
+    /// Number of items the crew owns.
+    pub fn len(&self) -> usize {
+        self.owner.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.owner.is_empty()
+    }
+
+    /// Number of worker threads.
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    fn raise_if_panicked(&self) -> ! {
+        let msg = self
+            .panic_slot
+            .lock()
+            .unwrap()
+            .take()
+            .unwrap_or_else(|| "worker disconnected".to_string());
+        panic!("crew worker panicked: {msg}");
+    }
+
+    fn send(&self, i: usize, cmd: C) {
+        let w = self.owner[i];
+        let local = i - self.ranges[w].start;
+        if self.cmd_txs[w].send((local, cmd)).is_err() {
+            self.raise_if_panicked();
+        }
+    }
+
+    fn recv_from(&self, w: usize, expect_item: usize) -> Rp {
+        match self.reply_rxs[w].recv() {
+            Ok((i, reply)) => {
+                assert_eq!(i, expect_item, "crew reply out of order");
+                reply
+            }
+            Err(_) => self.raise_if_panicked(),
+        }
+    }
+
+    /// Send `mk(i)` to every item in index order, then collect one reply
+    /// per item, returned in index order. Workers process their chunks
+    /// concurrently; the bounded lanes hold a full round without blocking
+    /// the sender.
+    pub fn broadcast<M: FnMut(usize) -> C>(&self, mut mk: M) -> Vec<Rp> {
+        let n = self.len();
+        for i in 0..n {
+            self.send(i, mk(i));
+        }
+        (0..n).map(|i| self.recv_from(self.owner[i], i)).collect()
+    }
+
+    /// Send one command to one item and wait for its reply.
+    pub fn send_one(&self, i: usize, cmd: C) -> Rp {
+        self.send(i, cmd);
+        self.recv_from(self.owner[i], i)
+    }
+
+    /// Shut the workers down and return the items in their original order.
+    pub fn finish(mut self) -> Vec<S> {
+        self.cmd_txs.clear();
+        self.reply_rxs.clear();
+        let handles = std::mem::take(&mut self.handles);
+        let mut out = Vec::with_capacity(self.owner.len());
+        for h in handles {
+            match h.join() {
+                Ok(chunk) => out.extend(chunk),
+                Err(payload) => {
+                    panic!("crew worker panicked: {}", panic_message(payload.as_ref()))
+                }
+            }
+        }
+        out
+    }
+}
+
+impl<S, C, Rp> Drop for WorkerCrew<S, C, Rp> {
+    fn drop(&mut self) {
+        // Closing the command lanes ends each worker's recv loop; join so
+        // no detached thread outlives the crew.
+        self.cmd_txs.clear();
+        self.reply_rxs.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
 }
 
 #[cfg(test)]
@@ -135,5 +357,93 @@ mod tests {
         assert_eq!(parallel_map(vec![1, 2, 3], 1, |x| x + 1), vec![2, 3, 4]);
         let empty: Vec<usize> = vec![];
         assert!(parallel_map(empty, 4, |x: usize| x).is_empty());
+    }
+
+    #[test]
+    fn parallel_map_propagates_worker_panics() {
+        let res = catch_unwind(AssertUnwindSafe(|| {
+            parallel_map((0..16).collect::<Vec<usize>>(), 4, |x| {
+                if x == 7 {
+                    panic!("item seven exploded");
+                }
+                x
+            })
+        }));
+        let payload = res.expect_err("panic must propagate");
+        assert_eq!(panic_message(payload.as_ref()), "item seven exploded");
+    }
+
+    #[test]
+    fn crew_broadcast_and_finish_preserve_order() {
+        let crew: WorkerCrew<usize, usize, usize> =
+            WorkerCrew::new((0..10).collect(), 3, |item, add| {
+                *item += add;
+                *item
+            });
+        let replies = crew.broadcast(|i| i * 100);
+        assert_eq!(replies, (0..10).map(|i| i + i * 100).collect::<Vec<usize>>());
+        assert_eq!(crew.send_one(4, 1), 4 + 400 + 1);
+        let items = crew.finish();
+        let mut want: Vec<usize> = (0..10).map(|i| i + i * 100).collect();
+        want[4] += 1;
+        assert_eq!(items, want);
+    }
+
+    #[test]
+    fn crew_propagates_worker_panic_instead_of_hanging() {
+        let crew: WorkerCrew<usize, usize, usize> =
+            WorkerCrew::new((0..8).collect(), 4, |item, cmd| {
+                if *item == 5 {
+                    panic!("shard five died");
+                }
+                *item + cmd
+            });
+        let res = catch_unwind(AssertUnwindSafe(|| crew.broadcast(|_| 1)));
+        let payload = res.expect_err("crew panic must propagate");
+        let msg = panic_message(payload.as_ref());
+        assert!(msg.contains("shard five died"), "got: {msg}");
+    }
+
+    #[test]
+    fn crew_zero_workers_clamps_to_one() {
+        let crew: WorkerCrew<usize, usize, usize> =
+            WorkerCrew::new(vec![10, 20], 0, |item, cmd| *item + cmd);
+        assert_eq!(crew.workers(), 1);
+        assert_eq!(crew.broadcast(|_| 5), vec![15, 25]);
+        assert_eq!(crew.finish(), vec![10, 20]);
+    }
+
+    #[test]
+    fn crew_oversubscribed_clamps_to_item_count() {
+        let crew: WorkerCrew<usize, usize, usize> =
+            WorkerCrew::new(vec![1, 2, 3], 16, |item, cmd| *item * cmd);
+        assert_eq!(crew.workers(), 3);
+        assert_eq!(crew.broadcast(|_| 2), vec![2, 4, 6]);
+        assert_eq!(crew.finish(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn crew_empty_items() {
+        let crew: WorkerCrew<usize, usize, usize> =
+            WorkerCrew::new(Vec::new(), 4, |item, _cmd: usize| *item);
+        assert!(crew.is_empty());
+        assert!(crew.broadcast(|_| 0).is_empty());
+        assert!(crew.finish().is_empty());
+    }
+
+    #[test]
+    fn crew_shutdown_on_drop_joins_workers() {
+        let touched = Arc::new(AtomicUsize::new(0));
+        {
+            let t = Arc::clone(&touched);
+            let crew: WorkerCrew<usize, usize, usize> =
+                WorkerCrew::new((0..6).collect(), 2, move |item, cmd| {
+                    t.fetch_add(1, Ordering::SeqCst);
+                    *item + cmd
+                });
+            let _ = crew.broadcast(|_| 0);
+            // Dropped without finish(): must join, not hang or leak.
+        }
+        assert_eq!(touched.load(Ordering::SeqCst), 6);
     }
 }

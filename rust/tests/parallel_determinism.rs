@@ -1,0 +1,156 @@
+//! Byte-identity suite for the sharded region engine: the same scenario
+//! run inline (`shards == 1`, the sequential special case) and on 2 or
+//! 4 worker shards must produce **identical** output — the full regions
+//! report (every counter and float), the merged metrics JSONL stream,
+//! the `BENCH_regions.json`-style comparison document, and the chaos
+//! report with its per-fault rows and verdicts.
+//!
+//! The window schedule depends only on shard-invariant inputs (per-
+//! region work hints and staged message arrival times), and both
+//! executors run the same command dispatcher per region in the same
+//! per-region order — so identity is by construction; this suite is the
+//! regression lock. Seeds {7, 21} cover two arrival realizations; the
+//! chaos case scripts a crash on region 2, which at 2 shards lives
+//! alone on the *second* worker (ceiling-division chunks are {0, 1} and
+//! {2}), so crash tracking, emergency re-placement, and the rejoin all
+//! execute off the first worker thread.
+
+use dancemoe::chaos::{
+    self, ChaosScenario, FaultEvent, FaultKind, FaultSchedule,
+};
+use dancemoe::obs::ObsConfig;
+use dancemoe::serve::regions::{
+    bench_file_json, ParallelMultiGateway, RegionsScenario,
+};
+
+/// Run `scn` on `shards` worker threads with tracing on and fingerprint
+/// everything observable: the debug-formatted report (every field, full
+/// float precision) plus the merged metrics stream.
+fn fingerprint(scn: &RegionsScenario, shards: usize) -> (String, String) {
+    let mut m = ParallelMultiGateway::new(scn.build(), shards);
+    m.0.enable_obs(ObsConfig::default());
+    let rep = m.run();
+    (format!("{rep:?}"), m.0.metrics_jsonl())
+}
+
+#[test]
+fn regions_runs_are_byte_identical_across_shard_counts() {
+    for seed in [7u64, 21] {
+        let scn = RegionsScenario {
+            horizon_s: 180.0,
+            seed,
+            ..RegionsScenario::default()
+        };
+        let (seq_report, seq_metrics) = fingerprint(&scn, 1);
+        assert!(
+            seq_metrics.contains("region_window"),
+            "metrics stream must carry exchange rows"
+        );
+        for shards in [2usize, 4] {
+            let (report, metrics) = fingerprint(&scn, shards);
+            assert_eq!(
+                seq_report, report,
+                "seed {seed}, {shards} shards: report diverged"
+            );
+            assert_eq!(
+                seq_metrics, metrics,
+                "seed {seed}, {shards} shards: metrics stream diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn multi_tenant_runs_are_byte_identical_across_shard_counts() {
+    let scn = RegionsScenario {
+        horizon_s: 150.0,
+        tenants: Some(dancemoe::serve::TenantSet::pair()),
+        autoscale: true,
+        seed: 21,
+        ..RegionsScenario::default()
+    };
+    let seq = fingerprint(&scn, 1);
+    for shards in [2usize, 4] {
+        assert_eq!(seq, fingerprint(&scn, shards), "{shards} shards");
+    }
+}
+
+#[test]
+fn bench_document_is_byte_identical_across_shard_counts() {
+    // The full BENCH_regions.json-style comparison (spill + isolated +
+    // global arms) — the isolated arm exercises the infinite-lookahead
+    // path (no cross-region messages ⇒ windows span whole exchange
+    // periods), the global arm is shard-free by construction.
+    let doc = |shards: usize| {
+        let scn = RegionsScenario {
+            horizon_s: 180.0,
+            seed: 7,
+            shards,
+            ..RegionsScenario::default()
+        };
+        let spill = scn.build().run();
+        let isolated = RegionsScenario {
+            spill: false,
+            ..scn.clone()
+        }
+        .build()
+        .run();
+        let global = scn.build_global().run();
+        bench_file_json(&spill, &isolated, &global).pretty()
+    };
+    let seq = doc(1);
+    assert_eq!(seq, doc(2), "2 shards");
+    assert_eq!(seq, doc(4), "4 shards");
+}
+
+#[test]
+fn chaos_with_crash_on_nonzero_shard_is_byte_identical() {
+    let schedule = FaultSchedule::new(vec![
+        FaultEvent {
+            t_s: 50.0,
+            kind: FaultKind::ServerCrash { region: 2, server: 1 },
+        },
+        FaultEvent {
+            t_s: 90.0,
+            kind: FaultKind::FlashCrowd { region: 1, tenant: 0, count: 30 },
+        },
+        FaultEvent {
+            t_s: 100.0,
+            kind: FaultKind::LinkPartition { src: 2, dst: 0 },
+        },
+        FaultEvent {
+            t_s: 130.0,
+            kind: FaultKind::ServerRejoin { region: 2, server: 1 },
+        },
+        FaultEvent {
+            t_s: 150.0,
+            kind: FaultKind::LinkRestore { src: 2, dst: 0 },
+        },
+    ]);
+    let run = |shards: usize| {
+        let mut scn = ChaosScenario::canonical(21);
+        scn.base.horizon_s = 240.0;
+        scn.schedule = schedule.clone();
+        let rep = scn.run_with_shards(shards);
+        assert!(
+            rep.conservation_exact && rep.ledger_balanced,
+            "{shards} shards: books must stay exact through the faults"
+        );
+        format!("{:?}\n{}", rep, chaos::bench_file_json(&rep).pretty())
+    };
+    let seq = run(1);
+    for shards in [2usize, 4] {
+        assert_eq!(seq, run(shards), "{shards} shards: chaos diverged");
+    }
+}
+
+#[test]
+fn canonical_chaos_is_byte_identical_across_shard_counts() {
+    let run = |shards: usize| {
+        let rep = ChaosScenario::canonical(7).run_with_shards(shards);
+        format!("{:?}\n{}", rep, chaos::bench_file_json(&rep).pretty())
+    };
+    let seq = run(1);
+    assert_eq!(seq, run(2), "2 shards");
+    assert_eq!(seq, run(4), "4 shards");
+}
