@@ -1,0 +1,230 @@
+//! Tiered expert-cache benchmark: two gateway co-simulations at the same
+//! arrivals — host-DRAM tier enabled vs the two-state (HBM/remote)
+//! baseline — written to `BENCH_cache.json` so the cache's effect on tail
+//! latency and remote traffic is tracked across PRs machine-readably.
+//!
+//! Scenario: 4-layer deepseek-lite (64 experts/layer, 17 MB experts — a
+//! prefetch costs ~0.3 s on the 500 Mbps edge links, so staging traffic
+//! cannot dominate the request network) on the 3-server edge preset,
+//! bursty arrivals (the rising EWMA edge every burst onset is the
+//! prefetch signal), EWMA-only autoscaler (bands at infinity: it feeds
+//! the fast/slow load EWMAs the cache pass plans from but never adds or
+//! drains replicas), no migration. The runs differ ONLY in
+//! `host_mem_bytes`.
+//!
+//! Like `BENCH_comms.json`, the document carries **no wall-clock
+//! timings**: it is byte-identical across runs at the same seed.
+//!
+//! The bench exits non-zero if any guard fails:
+//! (a) attribution exactness — re-summing the (src, dst, purpose) link
+//!     matrix (now including `prefetch_copy`) must reproduce
+//!     `NetModel::total_bytes()` and every purpose total bit-exactly,
+//! (b) engagement — the tiered run must record host-tier hits and
+//!     prefetches, and the two-state run must record none (and move
+//!     zero prefetch bytes),
+//! (c) payback — the tiered run must not worsen p95 AND must move
+//!     strictly fewer remote request bytes (expert calls + result
+//!     returns) than the two-state run over the same arrivals.
+
+use dancemoe::autoscale::AutoscaleConfig;
+use dancemoe::config::{ClusterConfig, ModelConfig, WorkloadConfig};
+use dancemoe::coordinator::CoordinatorConfig;
+use dancemoe::engine::CacheStats;
+use dancemoe::obs::comms::purpose_json;
+use dancemoe::obs::{ObsConfig, TransferPurpose, NUM_PURPOSES};
+use dancemoe::placement::uniform;
+use dancemoe::serve::{
+    ArrivalProfile, Gateway, GatewayConfig, GatewayReport,
+};
+use dancemoe::util::bench::Bencher;
+use dancemoe::util::json::Json;
+
+/// Host-DRAM budget of the tiered run, in experts per server.
+const HOST_EXPERTS: u64 = 16;
+
+/// One gateway run; `host_experts == 0` is the two-state baseline.
+fn scenario(host_experts: u64, traced: bool) -> GatewayReport {
+    let mut m = ModelConfig::deepseek_v2_lite_sim();
+    m.num_layers = 4;
+    let mut c = ClusterConfig::edge_testbed_3_for(&m);
+    for s in &mut c.servers {
+        s.host_mem_bytes = host_experts * m.expert_bytes;
+    }
+    let w = WorkloadConfig::bigbench(5.0);
+    let mut gw = Gateway::new(
+        &m,
+        &c,
+        &w,
+        uniform::place(&m, &c),
+        GatewayConfig {
+            horizon_s: 480.0,
+            profile: ArrivalProfile::Bursty {
+                factor: 6.0,
+                burst_s: 30.0,
+                period_s: 120.0,
+            },
+            seed: 7,
+            ..GatewayConfig::default()
+        },
+        CoordinatorConfig {
+            interval_s: 15.0,
+            migrate: false,
+            seed: 7,
+            autoscale: Some(AutoscaleConfig {
+                hi_ratio: f64::INFINITY,
+                util_hi_tps: f64::INFINITY,
+                min_load_tps: 1.0,
+                ..AutoscaleConfig::default()
+            }),
+            ..CoordinatorConfig::default()
+        },
+    );
+    if traced {
+        gw.enable_obs(ObsConfig::default());
+    }
+    gw.run()
+}
+
+/// Remote request bytes: what the cache converts into local hits.
+fn remote_bytes(r: &GatewayReport) -> f64 {
+    r.comms.purpose_bytes[TransferPurpose::ExpertCall.index()]
+        + r.comms.purpose_bytes[TransferPurpose::ResultReturn.index()]
+}
+
+fn cache_json(c: &CacheStats) -> Json {
+    let lookups = (c.hbm_hits + c.host_hits + c.remote_misses).max(1) as f64;
+    Json::from_pairs(vec![
+        ("hbm_hits", Json::Num(c.hbm_hits as f64)),
+        ("host_hits", Json::Num(c.host_hits as f64)),
+        ("remote_misses", Json::Num(c.remote_misses as f64)),
+        ("hbm_hit_rate", Json::Num(c.hbm_hits as f64 / lookups)),
+        ("host_hit_rate", Json::Num(c.host_hits as f64 / lookups)),
+        ("remote_miss_rate", Json::Num(c.remote_misses as f64 / lookups)),
+        ("prefetches", Json::Num(c.prefetches as f64)),
+        ("promotions", Json::Num(c.promotions as f64)),
+        ("demotions", Json::Num(c.demotions as f64)),
+        ("prefetch_bytes", Json::Num(c.prefetch_bytes)),
+        ("promotion_bytes", Json::Num(c.promotion_bytes)),
+        ("demotion_bytes", Json::Num(c.demotion_bytes)),
+    ])
+}
+
+/// One run's byte + cache metrics (deterministic: no timings).
+fn run_metrics(r: &GatewayReport) -> Json {
+    Json::from_pairs(vec![
+        ("net_bytes", Json::Num(r.comms.total_bytes)),
+        ("purposes", purpose_json(&r.comms.purpose_bytes)),
+        ("pcie_copy_bytes", Json::Num(r.comms.pcie_copy_bytes)),
+        ("remote_request_bytes", Json::Num(remote_bytes(r))),
+        ("cache", cache_json(&r.cache)),
+        ("p95_s", Json::Num(r.latency_percentile(0.95))),
+        ("shed", Json::Num(r.shed as f64)),
+    ])
+}
+
+fn main() {
+    let mut b = Bencher::new("cache");
+    let mut tiered = None;
+    b.run_once("tiered gateway run (480 s, 16-expert host tier, traced)", || {
+        tiered = Some(scenario(HOST_EXPERTS, true));
+    });
+    let mut base = None;
+    b.run_once("two-state gateway run (480 s, no host tier)", || {
+        base = Some(scenario(0, false));
+    });
+    let tiered = tiered.expect("tiered run executed");
+    let base = base.expect("two-state run executed");
+
+    // ---- guard (a): attribution exactness ------------------------------
+    // Re-summing the link matrix in flat traversal order reproduces the
+    // purpose-keyed store's totals bit for bit — prefetch_copy included.
+    for (label, r) in [("tiered", &tiered), ("two-state", &base)] {
+        let mut total = 0.0f64;
+        let mut per_purpose = [0.0f64; NUM_PURPOSES];
+        for (_, _, by) in &r.comms.links {
+            for (p, bytes) in by.iter().enumerate() {
+                total += bytes;
+                per_purpose[p] += bytes;
+            }
+        }
+        if total != r.comms.total_bytes || per_purpose != r.comms.purpose_bytes
+        {
+            eprintln!(
+                "cache bench FAILED: {label} run attribution is inexact \
+                 (links sum {total} vs total {}, purposes {per_purpose:?} \
+                 vs {:?})",
+                r.comms.total_bytes, r.comms.purpose_bytes,
+            );
+            std::process::exit(1);
+        }
+    }
+
+    // ---- guard (b): the tier engages, and only when budgeted ------------
+    let c = tiered.cache;
+    println!(
+        "  tiered lookups: {} HBM, {} host, {} remote \
+         ({} prefetches, {} promotions, {} demotions)",
+        c.hbm_hits, c.host_hits, c.remote_misses, c.prefetches,
+        c.promotions, c.demotions,
+    );
+    if c.host_hits == 0 || c.prefetches == 0 {
+        eprintln!(
+            "cache bench FAILED: host tier never engaged \
+             ({} host hits, {} prefetches)",
+            c.host_hits, c.prefetches,
+        );
+        std::process::exit(1);
+    }
+    let bc = base.cache;
+    let base_prefetch_bytes =
+        base.comms.purpose_bytes[TransferPurpose::PrefetchCopy.index()];
+    if bc.host_hits != 0 || bc.prefetches != 0 || base_prefetch_bytes != 0.0 {
+        eprintln!(
+            "cache bench FAILED: the two-state run touched the host tier \
+             ({} host hits, {} prefetches, {base_prefetch_bytes} prefetch \
+             bytes) — zero host budget must reproduce today's engine",
+            bc.host_hits, bc.prefetches,
+        );
+        std::process::exit(1);
+    }
+
+    // ---- guard (c): the cache pays for itself --------------------------
+    let t95 = tiered.latency_percentile(0.95);
+    let b95 = base.latency_percentile(0.95);
+    let saved = remote_bytes(&base) - remote_bytes(&tiered);
+    println!(
+        "  p95: two-state {b95:.3}s vs tiered {t95:.3}s   remote request \
+         bytes: {:.2} MB vs {:.2} MB ({:.2} MB saved, {:.2} MB prefetched)",
+        remote_bytes(&base) / 1e6,
+        remote_bytes(&tiered) / 1e6,
+        saved / 1e6,
+        c.prefetch_bytes / 1e6,
+    );
+    if t95 > b95 || saved <= 0.0 {
+        eprintln!(
+            "cache bench FAILED: the tiered run must improve both p95 \
+             (tiered {t95}s vs two-state {b95}s) and remote request bytes \
+             ({saved} bytes saved)",
+        );
+        std::process::exit(1);
+    }
+
+    let out = std::path::Path::new("BENCH_cache.json");
+    Json::from_pairs(vec![
+        (
+            "scenario",
+            Json::Str(
+                "deepseek-4l edge3 bigbench 480s bursty interval 15s \
+                 seed 7, host tier 16 experts/server vs none"
+                    .into(),
+            ),
+        ),
+        ("tiered", run_metrics(&tiered)),
+        ("two_state", run_metrics(&base)),
+        ("remote_bytes_saved", Json::Num(saved)),
+        ("p95_delta_s", Json::Num(t95 - b95)),
+    ])
+    .write_file(out)
+    .expect("write BENCH_cache.json");
+    println!("  wrote {}", out.display());
+}

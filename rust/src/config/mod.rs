@@ -128,6 +128,10 @@ pub struct GpuConfig {
 pub struct ServerConfig {
     pub name: String,
     pub gpus: Vec<GpuConfig>,
+    /// Host-DRAM budget for the tiered expert cache in bytes. `0` (the
+    /// default everywhere) disables the host tier entirely — the two-state
+    /// HBM/remote model — so legacy configs behave bit-for-bit as before.
+    pub host_mem_bytes: u64,
 }
 
 impl ServerConfig {
@@ -186,6 +190,10 @@ impl ClusterConfig {
                         .map(|s| {
                             Json::from_pairs(vec![
                                 ("name", Json::Str(s.name.clone())),
+                                (
+                                    "host_mem_bytes",
+                                    Json::Num(s.host_mem_bytes as f64),
+                                ),
                                 (
                                     "gpus",
                                     Json::Arr(
@@ -251,6 +259,12 @@ impl ClusterConfig {
                         .unwrap_or("server")
                         .to_string(),
                     gpus,
+                    // legacy cluster files predate the host tier: a missing
+                    // key means "no host cache", not a parse error
+                    host_mem_bytes: s
+                        .get("host_mem_bytes")
+                        .and_then(|v| v.as_f64())
+                        .unwrap_or(0.0) as u64,
                 })
             })
             .collect::<Result<Vec<_>>>()?;
@@ -389,6 +403,31 @@ mod tests {
         );
         let back = ClusterConfig::from_json(&c.to_json()).unwrap();
         assert_eq!(c, back);
+    }
+
+    #[test]
+    fn host_mem_roundtrips_and_defaults_for_legacy_files() {
+        // nonzero host tier survives the JSON round trip
+        let mut c = ClusterConfig::edge_testbed_3_for(
+            &ModelConfig::mixtral_8x7b_sim(),
+        );
+        c.servers[0].host_mem_bytes = 64 << 30;
+        c.servers[2].host_mem_bytes = 16 << 30;
+        let back = ClusterConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c, back);
+        // legacy files without the key parse with the tier disabled
+        let mut j = c.to_json();
+        if let Json::Obj(top) = &mut j {
+            if let Some(Json::Arr(servers)) = top.get_mut("servers") {
+                for s in servers.iter_mut() {
+                    if let Json::Obj(sm) = s {
+                        sm.remove("host_mem_bytes");
+                    }
+                }
+            }
+        }
+        let legacy = ClusterConfig::from_json(&j).unwrap();
+        assert!(legacy.servers.iter().all(|s| s.host_mem_bytes == 0));
     }
 
     #[test]

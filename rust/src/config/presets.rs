@@ -128,14 +128,17 @@ impl ClusterConfig {
                 ServerConfig {
                     name: "server1".into(),
                     gpus: vec![gpu(mf, 1.0)],
+                    host_mem_bytes: 0,
                 },
                 ServerConfig {
                     name: "server2".into(),
                     gpus: vec![gpu(mf, 0.9)],
+                    host_mem_bytes: 0,
                 },
                 ServerConfig {
                     name: "server3".into(),
                     gpus: vec![gpu(mf, 1.0), gpu(mf, 0.85)],
+                    host_mem_bytes: 0,
                 },
             ],
             bandwidth_bps: EDGE_BANDWIDTH_BPS,
@@ -159,6 +162,7 @@ impl ClusterConfig {
             .map(|i| ServerConfig {
                 name: format!("server{}", i + 1),
                 gpus: pattern[i % 3].iter().map(|&(m, s)| gpu(m, s)).collect(),
+                host_mem_bytes: 0,
             })
             .collect();
         ClusterConfig {
@@ -190,6 +194,7 @@ impl ClusterConfig {
                 gpus: (0..n)
                     .map(|g| gpu(0.3, speeds[(s + g) % speeds.len()]))
                     .collect(),
+                host_mem_bytes: 0,
             });
         }
         ClusterConfig {

@@ -91,6 +91,21 @@ impl Default for CoordinatorConfig {
     }
 }
 
+/// Fast/slow EWMA ratio above which an expert counts as **rising** for
+/// the cache tier. Deliberately below the autoscaler's scale-out band
+/// (`hi_ratio`, default 1.5): prefetch acts earlier than replication, so
+/// the staged copy is already in host DRAM when the burst peaks and a
+/// later scale-out (or demand promotion) pays PCIe instead of the WAN.
+pub const PREFETCH_RISE_RATIO: f64 = 1.15;
+
+/// Cache-tier operations (demotes + prefetches + promotions) per boundary.
+const CACHE_OPS_PER_INTERVAL: usize = 8;
+
+/// Intervals an expert is left alone after any cache-tier operation, so
+/// the demote and prefetch passes cannot ping-pong one expert between
+/// HBM and host DRAM on EWMA noise.
+const CACHE_COOLDOWN_INTERVALS: u64 = 2;
+
 /// One interval's scheduling record (observability).
 #[derive(Debug, Clone)]
 pub struct IntervalLog {
@@ -178,6 +193,10 @@ pub struct Coordinator {
     /// for the rest of the run — a crash-then-rejoin must not strand
     /// still-missing experts just because nobody is dead *right now*.
     fault_seen: bool,
+    /// Per-expert cooldown (intervals remaining) after a cache-tier
+    /// operation — see [`CACHE_COOLDOWN_INTERVALS`]. All-zero (and never
+    /// touched) when no server has a host-DRAM budget.
+    cache_cooldown: Vec<u64>,
 }
 
 impl Coordinator {
@@ -205,6 +224,7 @@ impl Coordinator {
             recover_pending: Vec::new(),
             recoveries: 0,
             fault_seen: false,
+            cache_cooldown: vec![0; model.num_layers * model.num_experts],
             model: model.clone(),
             cluster: cluster.clone(),
             cfg,
@@ -359,6 +379,11 @@ impl Coordinator {
         // cannot wait out rule 2a. No-op whenever coverage is full, so the
         // no-fault path is byte-identical.
         self.recover_missing(engine, t);
+        // Host-DRAM cache maintenance (tiered expert cache): refund landed
+        // prefetch reservations, demote cold HBM replicas, stage and
+        // promote rising experts. Returns immediately when no server has
+        // a host budget, so the two-state model is byte-identical.
+        self.cache_step(engine, t);
         // observability snapshot: replica state as of this boundary
         // (completions folded, this tick's decisions not yet taken)
         if let Some(a) = &self.autoscaler {
@@ -513,6 +538,217 @@ impl Coordinator {
                         dst_server,
                         dst_gpu,
                         self.model.expert_bytes,
+                    );
+                }
+            }
+        }
+    }
+
+    /// Fold completed prefetch copies back in: each completion releases
+    /// exactly one host-DRAM reservation — **applied or not** (a copy that
+    /// raced a crash or a duplicate stage still refunds its bytes). The
+    /// interval boundary ([`Coordinator::cache_step`]) and the gateway's
+    /// final report pass both route through here.
+    pub fn fold_prefetch_completions(&mut self, engine: &mut Engine) {
+        for ev in engine.take_prefetch_completions() {
+            self.ledger.release_host(ev.server, self.model.expert_bytes);
+        }
+    }
+
+    /// One tiered-cache maintenance pass (runs every boundary, after
+    /// emergency re-cover, before the autoscale arbitration):
+    ///
+    /// 1. **demote** — redundant HBM replicas of *falling, cold* experts
+    ///    (fast EWMA below the slow baseline and below the autoscaler's
+    ///    per-replica cold floor) drop back to their server's host DRAM,
+    ///    freeing HBM. The engine refuses the last active replica, so
+    ///    availability is never at stake.
+    /// 2. **prefetch** — *rising* experts (fast/slow above
+    ///    [`PREFETCH_RISE_RATIO`]) are staged into host DRAM on the
+    ///    server with the most historical demand that lacks a copy, paid
+    ///    over the WAN as a `prefetch_copy` transfer. Bytes are reserved
+    ///    in the shared ledger's host tier first and refunded when the
+    ///    copy lands ([`Coordinator::fold_prefetch_completions`]).
+    /// 3. **promote** — staged experts that are rising get lifted into
+    ///    HBM ahead of the peak (one PCIe load, off the request path);
+    ///    everything else waits for demand promotion in the engine.
+    ///
+    /// The EWMA signals come from the autoscaler, so the pass is inert
+    /// until one is configured and warmed up; it is a strict no-op when
+    /// no server has `host_mem_bytes`.
+    fn cache_step(&mut self, engine: &mut Engine, t: f64) {
+        if !engine.placement.has_host_tier() {
+            return;
+        }
+        self.fold_prefetch_completions(engine);
+        let nl = self.model.num_layers;
+        let ne = self.model.num_experts;
+        let bytes = self.model.expert_bytes;
+        // snapshot the EWMAs (sidesteps borrowing the autoscaler across
+        // the ledger mutations below)
+        let (fast, slow, min_tps) = match &self.autoscaler {
+            Some(a) if a.ticks > a.cfg.warmup_intervals => {
+                let mut f = vec![0.0; nl * ne];
+                let mut s = vec![0.0; nl * ne];
+                for l in 0..nl {
+                    for e in 0..ne {
+                        f[l * ne + e] = a.fast_tps(l, e);
+                        s[l * ne + e] = a.slow_tps(l, e);
+                    }
+                }
+                (f, s, a.cfg.min_load_tps)
+            }
+            _ => return,
+        };
+        for c in &mut self.cache_cooldown {
+            *c = c.saturating_sub(1);
+        }
+        let num_servers = engine.placement.gpus.len();
+        let mut ops = 0usize;
+
+        // ---- demote pass: cold redundant HBM replicas -> host DRAM ------
+        'demote: for l in 0..nl {
+            for e in 0..ne {
+                if ops >= CACHE_OPS_PER_INTERVAL {
+                    break 'demote;
+                }
+                let eid = l * ne + e;
+                if self.cache_cooldown[eid] > 0 {
+                    continue;
+                }
+                let active = engine.placement.active_count(l, e);
+                if active <= 1 {
+                    continue;
+                }
+                let falling = fast[eid] < slow[eid];
+                let cold = fast[eid] / active as f64 < min_tps;
+                if !(falling && cold) {
+                    continue;
+                }
+                let owners = engine.placement.owners_ref(l, e).to_vec();
+                for (s, g) in owners {
+                    if engine.server_dead(s)
+                        || self.ledger.host_free(&engine.placement, s) < bytes
+                    {
+                        continue;
+                    }
+                    if engine.demote_to_host(l, e, s, g).is_ok() {
+                        self.cache_cooldown[eid] = CACHE_COOLDOWN_INTERVALS;
+                        ops += 1;
+                        crate::util::log::debug(
+                            "cache",
+                            &format!(
+                                "t={t:.0}s demote l{l}e{e} s{s}g{g} -> host"
+                            ),
+                        );
+                        break;
+                    }
+                }
+            }
+        }
+
+        // ---- prefetch pass: stage rising experts where demand lives -----
+        'prefetch: for l in 0..nl {
+            for e in 0..ne {
+                if ops >= CACHE_OPS_PER_INTERVAL {
+                    break 'prefetch;
+                }
+                let eid = l * ne + e;
+                if self.cache_cooldown[eid] > 0 {
+                    continue;
+                }
+                let rising = fast[eid] > slow[eid] * PREFETCH_RISE_RATIO;
+                if !rising || fast[eid] < min_tps {
+                    continue;
+                }
+                // destination: live server with host room, no copy in
+                // either tier, ranked by its historical demand for the
+                // expert (first-index tie-break keeps this deterministic)
+                let mut best: Option<(f64, usize)> = None;
+                for s in 0..num_servers {
+                    if engine.server_dead(s)
+                        || engine.placement.host_capacity(s) == 0
+                        || engine.placement.server_has(s, l, e)
+                        || engine.placement.server_staged(s, l, e)
+                        || self.ledger.host_free(&engine.placement, s) < bytes
+                    {
+                        continue;
+                    }
+                    let mass = self.history.raw(s, l, e);
+                    if mass > 0.0
+                        && best.map(|(bm, _)| mass > bm).unwrap_or(true)
+                    {
+                        best = Some((mass, s));
+                    }
+                }
+                let Some((_, dst)) = best else { continue };
+                let Some(src) = (0..num_servers).find(|&s| {
+                    !engine.server_dead(s)
+                        && engine.placement.server_has(s, l, e)
+                }) else {
+                    continue; // zero coverage is recover_missing's job
+                };
+                if !self.ledger.try_reserve_host(
+                    &engine.placement,
+                    dst,
+                    bytes,
+                ) {
+                    continue;
+                }
+                match engine.schedule_prefetch(l, e, dst, src) {
+                    Ok(at) => {
+                        self.cache_cooldown[eid] = CACHE_COOLDOWN_INTERVALS;
+                        ops += 1;
+                        crate::util::log::info(
+                            "cache",
+                            &format!(
+                                "t={t:.0}s prefetch l{l}e{e} -> s{dst} host \
+                                 (from s{src}, lands t={at:.1}s)"
+                            ),
+                        );
+                    }
+                    Err(_) => self.ledger.release_host(dst, bytes),
+                }
+            }
+        }
+
+        // ---- promote pass: rising staged experts -> HBM ahead of peak ---
+        'promote: for s in 0..num_servers {
+            if engine.server_dead(s) {
+                continue;
+            }
+            for (l, e) in engine.placement.staged_experts(s) {
+                if ops >= CACHE_OPS_PER_INTERVAL {
+                    break 'promote;
+                }
+                let eid = l * ne + e;
+                if self.cache_cooldown[eid] > 0
+                    || fast[eid] <= slow[eid] * PREFETCH_RISE_RATIO
+                    || fast[eid] < min_tps
+                    || engine.placement.server_has(s, l, e)
+                {
+                    continue;
+                }
+                // GPU with the most ledger-free bytes (deterministic
+                // first-index tie-break)
+                let mut best: Option<(u64, usize)> = None;
+                for g in 0..engine.placement.gpus[s] {
+                    let free = self.ledger.free(&engine.placement, s, g);
+                    if free >= bytes
+                        && best.map(|(bf, _)| free > bf).unwrap_or(true)
+                    {
+                        best = Some((free, g));
+                    }
+                }
+                let Some((_, g)) = best else { continue };
+                if engine.promote_from_host(l, e, s, g).is_ok() {
+                    self.cache_cooldown[eid] = CACHE_COOLDOWN_INTERVALS;
+                    ops += 1;
+                    crate::util::log::info(
+                        "cache",
+                        &format!(
+                            "t={t:.0}s promote l{l}e{e} s{s}g{g} host -> HBM"
+                        ),
                     );
                 }
             }
@@ -1006,5 +1242,122 @@ mod tests {
         assert!(coord.logs.len() >= 2);
         // observed token counts were logged per interval
         assert!(coord.logs.iter().any(|l| l.observed_tokens > 0.0));
+    }
+
+    /// Autoscale config that feeds the cache pass its EWMAs but never
+    /// emits scale decisions itself (bands pushed out of reach).
+    fn ewma_only() -> crate::autoscale::AutoscaleConfig {
+        crate::autoscale::AutoscaleConfig {
+            hi_ratio: 1e18,
+            util_hi_tps: 1e18,
+            min_load_tps: 20.0,
+            warmup_intervals: 1,
+            ..crate::autoscale::AutoscaleConfig::default()
+        }
+    }
+
+    #[test]
+    fn cache_step_inert_without_host_budget() {
+        let (m, c, _) = small();
+        let mut engine = Engine::new(
+            &m,
+            &c,
+            uniform::place(&m, &c),
+            EngineConfig::default(),
+            CostModel::default(),
+        );
+        let mut coord = Coordinator::new(
+            &m,
+            &c,
+            CoordinatorConfig {
+                interval_s: 60.0,
+                migrate: false,
+                autoscale: Some(ewma_only()),
+                ..CoordinatorConfig::default()
+            },
+        );
+        // a rising expert, but no server has host DRAM: nothing may move
+        engine.stats.record(0, 0, 0, 600.0);
+        let _ = coord.on_interval(&mut engine, 60.0);
+        engine.stats.record(0, 0, 0, 6000.0);
+        let _ = coord.on_interval(&mut engine, 120.0);
+        assert_eq!(engine.cache.prefetches, 0);
+        assert_eq!(engine.prefetches_in_flight(), 0);
+        assert_eq!(coord.ledger.total_host_reserved(), 0);
+    }
+
+    #[test]
+    fn cache_pass_prefetches_promotes_then_demotes() {
+        let (m, mut c, _) = small();
+        for s in &mut c.servers {
+            s.host_mem_bytes = m.expert_bytes * 4;
+            for g in &mut s.gpus {
+                g.mem_bytes += m.expert_bytes * 4; // HBM headroom to promote
+            }
+        }
+        let mut engine = Engine::new(
+            &m,
+            &c,
+            uniform::place(&m, &c),
+            EngineConfig::default(),
+            CostModel::default(),
+        );
+        let mut coord = Coordinator::new(
+            &m,
+            &c,
+            CoordinatorConfig {
+                interval_s: 60.0,
+                migrate: false,
+                autoscale: Some(ewma_only()),
+                ..CoordinatorConfig::default()
+            },
+        );
+        let s_orig = engine.placement.owners_ref(0, 0)[0].0;
+        let srv = (0..3)
+            .find(|&s| !engine.placement.server_has(s, 0, 0))
+            .unwrap();
+
+        // b1: warmup tick — demand for (0,0) appears on `srv`
+        engine.stats.record(srv, 0, 0, 600.0);
+        let _ = coord.on_interval(&mut engine, 60.0);
+        assert_eq!(engine.cache.prefetches, 0, "EWMAs still warming");
+
+        // b2: burst — fast/slow ≈ 2.1 crosses the rise band: a prefetch
+        // is staged to the demand server, host bytes reserved
+        engine.stats.record(srv, 0, 0, 3000.0);
+        let _ = coord.on_interval(&mut engine, 120.0);
+        assert_eq!(engine.cache.prefetches, 1);
+        assert_eq!(engine.prefetches_in_flight(), 1);
+        assert_eq!(coord.ledger.host_reserved(srv), m.expert_bytes);
+
+        // the copy lands in host DRAM
+        assert!(engine.run_until(1e9).is_none());
+        assert!(engine.placement.server_staged(srv, 0, 0));
+
+        // b3: still rising, but the per-expert cooldown holds promotion;
+        // the landed copy refunds its reservation
+        engine.stats.record(srv, 0, 0, 5000.0);
+        let _ = coord.on_interval(&mut engine, 180.0);
+        assert_eq!(coord.ledger.host_reserved(srv), 0);
+        assert!(!engine.placement.server_has(srv, 0, 0));
+
+        // b4: cooldown expired — the staged rising expert lifts into HBM
+        engine.stats.record(srv, 0, 0, 5000.0);
+        let _ = coord.on_interval(&mut engine, 240.0);
+        assert_eq!(engine.cache.promotions, 1);
+        assert!(engine.placement.server_has(srv, 0, 0));
+        assert!(!engine.placement.server_staged(srv, 0, 0));
+        assert_eq!(engine.placement.active_count(0, 0), 2);
+
+        // b5+b6: load collapses — once falling below the baseline and the
+        // cold floor, the redundant replica demotes back to host DRAM
+        let _ = coord.on_interval(&mut engine, 300.0);
+        assert_eq!(engine.cache.demotions, 0, "not falling yet");
+        let _ = coord.on_interval(&mut engine, 360.0);
+        assert_eq!(engine.cache.demotions, 1);
+        assert_eq!(engine.placement.active_count(0, 0), 1);
+        assert!(engine.placement.server_staged(s_orig, 0, 0));
+        assert!(!engine.placement.server_has(s_orig, 0, 0));
+        assert_eq!(coord.ledger.total_host_reserved(), 0);
     }
 }

@@ -137,6 +137,8 @@ enum Ev {
     ApplyScaleOut(usize, usize, usize, usize),
     /// Drain window elapsed, evict the replica: (server, gpu, layer, expert).
     ApplyScaleIn(usize, usize, usize, usize),
+    /// Prefetch copy landed in host DRAM: (server, layer, expert).
+    ApplyPrefetch(usize, usize, usize),
     /// Fault injection: the server fail-stops, losing its GPU-resident
     /// experts (chaos schedule).
     ServerCrash(usize),
@@ -168,6 +170,46 @@ pub struct ScaleEvent {
     pub applied: bool,
 }
 
+/// One completed host-tier prefetch stage (tiered-cache fill).
+#[derive(Debug, Clone, Copy)]
+pub struct PrefetchEvent {
+    /// Virtual time the stage applied.
+    pub t_s: f64,
+    pub layer: usize,
+    pub expert: usize,
+    pub server: usize,
+    /// `false` when the stage was skipped — the server crashed, the host
+    /// budget filled, or the expert became HBM-resident while the copy
+    /// was in flight. The coordinator still sees the completion and
+    /// refunds its host-ledger reservation exactly once.
+    pub applied: bool,
+}
+
+/// Cumulative tiered-cache counters (pure observability: never consulted
+/// by any simulation decision, so reading them cannot perturb results).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CacheStats {
+    /// Local invocations served straight from an HBM-resident replica.
+    pub hbm_hits: u64,
+    /// Invocations served from the host-DRAM tier (paid a PCIe promotion
+    /// instead of a remote round trip).
+    pub host_hits: u64,
+    /// Invocations that missed both local tiers (remote call, or the
+    /// emergency RAM load of an uncovered expert).
+    pub remote_misses: u64,
+    /// Host→HBM promotions that landed as resident replicas (demand
+    /// promotions on a host hit + predictive promotions by the
+    /// coordinator).
+    pub promotions: u64,
+    /// HBM→host demotions (cold replicas pushed down a tier).
+    pub demotions: u64,
+    /// Prefetch copies scheduled (remote HBM owner → host DRAM).
+    pub prefetches: u64,
+    pub promotion_bytes: f64,
+    pub demotion_bytes: f64,
+    pub prefetch_bytes: f64,
+}
+
 /// One expert invocation in flight.
 #[derive(Debug, Clone, Copy)]
 struct Inv {
@@ -179,6 +221,9 @@ struct Inv {
     /// uncovered expert served from host RAM (pays a load like a cache
     /// miss); only set by the emergency fallback of an infeasible placement
     ram_load: bool,
+    /// host-tier cache hit: the expert pays a PCIe promotion load before
+    /// computing (mutually exclusive with `ram_load`)
+    host_promote: bool,
     /// dispatch time of a remote invocation (penalty measurement)
     t0: f64,
 }
@@ -270,6 +315,14 @@ pub struct Engine {
     /// the coordinator notice a crash-and-rejoin that both landed inside
     /// one control interval
     pub crashes: u64,
+    /// cumulative tiered-cache counters (all-zero without a host tier)
+    pub cache: CacheStats,
+    /// every completed prefetch stage, in apply order (observability)
+    pub prefetch_events: Vec<PrefetchEvent>,
+    /// `prefetch_events` prefix already drained by the coordinator
+    prefetch_events_read: usize,
+    /// scheduled-but-unapplied prefetch copies
+    prefetches_pending: usize,
 }
 
 impl Engine {
@@ -310,6 +363,10 @@ impl Engine {
             drains_pending: 0,
             dead: vec![false; cluster_cfg.num_servers()],
             crashes: 0,
+            cache: CacheStats::default(),
+            prefetch_events: Vec::new(),
+            prefetch_events_read: 0,
+            prefetches_pending: 0,
             placement,
             pending_placement: None,
             model: model.clone(),
@@ -592,6 +649,160 @@ impl Engine {
         Ok(at)
     }
 
+    /// Prefetch stages applied since the last call (coordinator feedback:
+    /// refunds host-ledger reservations).
+    pub fn take_prefetch_completions(&mut self) -> Vec<PrefetchEvent> {
+        let out = self.prefetch_events[self.prefetch_events_read..].to_vec();
+        self.prefetch_events_read = self.prefetch_events.len();
+        out
+    }
+
+    /// Prefetch copies scheduled but not yet applied.
+    pub fn prefetches_in_flight(&self) -> usize {
+        self.prefetches_pending
+    }
+
+    /// Stage a **prefetch** into the host-DRAM cache tier: copy one
+    /// expert's weights from a remote HBM owner into `dst_server`'s host
+    /// RAM over the inter-server link (purpose `prefetch_copy`, so the
+    /// comms matrix still re-sums exactly). The expert becomes
+    /// host-staged — promotable for one PCIe load instead of a remote
+    /// round trip — when the transfer completes. Returns the apply time.
+    pub fn schedule_prefetch(
+        &mut self,
+        layer: usize,
+        expert: usize,
+        dst_server: usize,
+        src_server: usize,
+    ) -> crate::Result<f64> {
+        if self.placement.host_capacity(dst_server) == 0 {
+            return Err(crate::Error::Placement(format!(
+                "prefetch target s{dst_server} has no host-DRAM tier"
+            )));
+        }
+        if src_server == dst_server {
+            return Err(crate::Error::Placement(format!(
+                "prefetch of l{layer}e{expert} needs a remote source"
+            )));
+        }
+        if self.placement.server_staged(dst_server, layer, expert) {
+            return Err(crate::Error::Placement(format!(
+                "l{layer}e{expert} already staged on s{dst_server}"
+            )));
+        }
+        if self.placement.server_has(dst_server, layer, expert) {
+            return Err(crate::Error::Placement(format!(
+                "l{layer}e{expert} already HBM-resident on s{dst_server}"
+            )));
+        }
+        if self.dead[dst_server] {
+            return Err(crate::Error::Placement(format!(
+                "prefetch target s{dst_server} is crashed"
+            )));
+        }
+        if self.dead[src_server] {
+            return Err(crate::Error::Placement(format!(
+                "prefetch source s{src_server} is crashed"
+            )));
+        }
+        let now = self.now;
+        let bytes = self.model.expert_bytes as f64;
+        let ready = self.net.book_transfer(
+            src_server,
+            dst_server,
+            bytes,
+            now,
+            self.cost.remote_fixed_s,
+            TransferPurpose::PrefetchCopy,
+        );
+        self.obs.on_transfer(
+            TransferPurpose::PrefetchCopy,
+            None,
+            layer,
+            expert,
+            bytes,
+        );
+        self.cache.prefetches += 1;
+        self.cache.prefetch_bytes += bytes;
+        self.prefetches_pending += 1;
+        self.push_event(ready, Ev::ApplyPrefetch(dst_server, layer, expert));
+        Ok(ready)
+    }
+
+    /// **Demote** a resident replica HBM → host DRAM: the replica leaves
+    /// the placement immediately (in-flight invocations finish normally,
+    /// exactly as on a crash purge) and its weights land in the server's
+    /// host cache, promotable later for one PCIe load. Refuses to demote
+    /// the last active replica (coverage must hold) or overflow the host
+    /// budget. The device→host copy books PCIe bytes but no GPU time —
+    /// readback does not occupy the compute stream.
+    pub fn demote_to_host(
+        &mut self,
+        layer: usize,
+        expert: usize,
+        server: usize,
+        gpu: usize,
+    ) -> crate::Result<()> {
+        if !self.placement.gpu_has(server, gpu, layer, expert)
+            || self.placement.is_draining(server, gpu, layer, expert)
+        {
+            return Err(crate::Error::Placement(format!(
+                "no active replica of l{layer}e{expert} on s{server}g{gpu}"
+            )));
+        }
+        if self.placement.active_count(layer, expert) <= 1 {
+            return Err(crate::Error::Placement(format!(
+                "cannot demote the last active replica of l{layer}e{expert}"
+            )));
+        }
+        self.placement.stage_host(server, layer, expert)?;
+        self.placement
+            .remove(server, gpu, layer, expert)
+            .expect("replica present by gpu_has");
+        let bytes = self.model.expert_bytes as f64;
+        self.report.pcie_copy_bytes += bytes;
+        self.cache.demotions += 1;
+        self.cache.demotion_bytes += bytes;
+        Ok(())
+    }
+
+    /// **Promote** a host-staged expert into HBM ahead of demand (the
+    /// coordinator's predictive pre-peak promotion): the host→device load
+    /// blocks the destination GPU like a scale-out load does, and the
+    /// replica joins the placement immediately. Errors if the expert is
+    /// not staged there or the GPU cannot take it. Returns the load's
+    /// completion time.
+    pub fn promote_from_host(
+        &mut self,
+        layer: usize,
+        expert: usize,
+        server: usize,
+        gpu: usize,
+    ) -> crate::Result<f64> {
+        if !self.placement.server_staged(server, layer, expert) {
+            return Err(crate::Error::Placement(format!(
+                "l{layer}e{expert} not staged on s{server}"
+            )));
+        }
+        if self.dead[server] {
+            return Err(crate::Error::Placement(format!(
+                "promotion target s{server} is crashed"
+            )));
+        }
+        self.placement.place(server, gpu, layer, expert)?;
+        self.placement
+            .unstage_host(server, layer, expert)
+            .expect("staged by server_staged");
+        let bytes = self.model.expert_bytes as f64;
+        let pcie = self.cluster.servers[server].gpus[gpu].pcie_bps;
+        let dur = bytes / pcie;
+        let (_, end) = self.cluster.book(server, gpu, self.now, dur);
+        self.report.pcie_copy_bytes += bytes;
+        self.cache.promotions += 1;
+        self.cache.promotion_bytes += bytes;
+        Ok(end)
+    }
+
     /// Schedule a **server crash** at virtual time `at` (≥ now): the
     /// server fail-stops, every expert replica it holds is lost, and it
     /// takes no new admissions or replica bookings until a rejoin. The
@@ -635,6 +846,14 @@ impl Engine {
                             .expect("replica present by gpu_has");
                     }
                 }
+            }
+        }
+        // host DRAM dies with the server too: drop its staged experts
+        if self.placement.has_host_tier() {
+            for (l, e) in self.placement.staged_experts(server) {
+                self.placement
+                    .unstage_host(server, l, e)
+                    .expect("staged by scan");
             }
         }
     }
@@ -727,6 +946,22 @@ impl Engine {
                     applied,
                 });
                 self.obs.on_scale(false, l, e, s, g, self.now);
+            }
+            Ev::ApplyPrefetch(s, l, e) => {
+                self.prefetches_pending -= 1;
+                // the copy raced a crash, a host-budget fill, or a
+                // scale-out that made the expert HBM-resident — then the
+                // stage is dropped, reported as applied = false
+                let applied = !self.dead[s]
+                    && !self.placement.server_has(s, l, e)
+                    && self.placement.stage_host(s, l, e).is_ok();
+                self.prefetch_events.push(PrefetchEvent {
+                    t_s: self.now,
+                    layer: l,
+                    expert: e,
+                    server: s,
+                    applied,
+                });
             }
             Ev::ServerCrash(s) => {
                 if !self.dead[s] {
@@ -916,11 +1151,13 @@ impl Engine {
                     gpu,
                     remote: false,
                     ram_load: false,
+                    host_promote: false,
                     t0: 0.0,
                 }
             }
             Mode::Collaborative => {
                 if self.placement.server_has(exec, layer, e) {
+                    self.cache.hbm_hits += 1;
                     let owners = self.placement.owners_ref(layer, e);
                     let (s, g) = owners
                         .iter()
@@ -941,9 +1178,38 @@ impl Engine {
                         gpu: g,
                         remote: false,
                         ram_load: false,
+                        host_promote: false,
+                        t0: 0.0,
+                    }
+                } else if self.placement.server_staged(exec, layer, e) {
+                    // host-tier hit: the expert is one PCIe promotion away
+                    // instead of a remote round trip. Promote it into HBM
+                    // when a GPU has room — it serves from HBM from then
+                    // on; otherwise the load is transient and the staged
+                    // copy stays in host RAM for the next hit.
+                    self.cache.host_hits += 1;
+                    let gpu = self.cluster.earliest_gpu(exec);
+                    let bytes = self.model.expert_bytes as f64;
+                    self.report.pcie_copy_bytes += bytes;
+                    if self.placement.place(exec, gpu, layer, e).is_ok() {
+                        self.placement
+                            .unstage_host(exec, layer, e)
+                            .expect("staged by server_staged");
+                        self.cache.promotions += 1;
+                        self.cache.promotion_bytes += bytes;
+                    }
+                    Inv {
+                        expert: e,
+                        tokens,
+                        server: exec,
+                        gpu,
+                        remote: false,
+                        ram_load: false,
+                        host_promote: true,
                         t0: 0.0,
                     }
                 } else {
+                    self.cache.remote_misses += 1;
                     // choose the replica minimizing queue + transfer estimate
                     let owners = self.placement.owners_ref(layer, e);
                     let now = self.now;
@@ -979,6 +1245,7 @@ impl Engine {
                         gpu: g,
                         remote: s != exec,
                         ram_load,
+                        host_promote: false,
                         t0: 0.0,
                     }
                 }
@@ -1006,9 +1273,10 @@ impl Engine {
                 dur += self.cost.load_s(&self.model, pcie)
                     * (1.0 - self.cost.offload_prefetch_overlap);
             }
-        } else if inv.ram_load {
-            // collaborative fallback for an uncovered expert: the weights
-            // come from host RAM like an offload miss
+        } else if inv.ram_load || inv.host_promote {
+            // collaborative host-RAM paths: the uncovered-expert fallback
+            // and the host-tier promotion both load the weights over PCIe
+            // like an offload miss, partially hidden behind compute
             let pcie = self.cluster.servers[inv.server].gpus[inv.gpu].pcie_bps;
             dur += self.cost.load_s(&self.model, pcie)
                 * (1.0 - self.cost.offload_prefetch_overlap);
@@ -1622,6 +1890,121 @@ mod tests {
         assert_eq!(owners.len(), 1, "uniform places each expert once");
         let (s, g) = owners[0];
         assert!(eng.schedule_scale_in(l, e, s, g, 5.0).is_err());
+    }
+
+    #[test]
+    fn prefetch_stage_promote_demote_cycle() {
+        let (m, mut c, _) = small_world();
+        c.servers[0].host_mem_bytes = m.expert_bytes * 4;
+        // room on s0g0 so the promotion can land
+        c.servers[0].gpus[0].mem_bytes += m.expert_bytes * 4;
+        let mut eng = Engine::new(
+            &m,
+            &c,
+            uniform::place(&m, &c),
+            EngineConfig::default(),
+            CostModel::default(),
+        );
+        // an expert server 0 does not hold, owned remotely
+        let (l, e) = (0..m.num_layers)
+            .flat_map(|l| (0..m.num_experts).map(move |e| (l, e)))
+            .find(|&(l, e)| !eng.placement.server_has(0, l, e))
+            .expect("uniform leaves server 0 without some expert");
+        let src = eng.placement.owners_ref(l, e)[0].0;
+        let net0 = eng.net.total_bytes();
+        let at = eng.schedule_prefetch(l, e, 0, src).unwrap();
+        assert!(at > 0.0, "copy takes time");
+        assert_eq!(eng.prefetches_in_flight(), 1);
+        assert!(eng.net.total_bytes() > net0, "copy hit the network");
+        assert!(!eng.placement.server_staged(0, l, e), "not yet applied");
+        // double-schedule guards
+        assert!(eng.schedule_prefetch(l, e, 1, src).is_err(), "no host tier");
+        assert!(eng.schedule_prefetch(l, e, 0, 0).is_err(), "local source");
+        eng.run_until(at + 1.0);
+        assert!(eng.placement.server_staged(0, l, e));
+        assert!(eng.schedule_prefetch(l, e, 0, src).is_err(), "double stage");
+        let evs = eng.take_prefetch_completions();
+        assert_eq!(evs.len(), 1);
+        assert!(evs[0].applied);
+        assert_eq!((evs[0].layer, evs[0].expert, evs[0].server), (l, e, 0));
+        assert_eq!(eng.prefetches_in_flight(), 0);
+        assert!(eng.take_prefetch_completions().is_empty(), "drained once");
+        // the copy's bytes are attributed to the prefetch purpose exactly
+        let totals = eng.net.purpose_totals();
+        assert_eq!(
+            totals[TransferPurpose::PrefetchCopy.index()],
+            m.expert_bytes as f64
+        );
+        // promote: staged → HBM-resident, GPU blocked for the load
+        let pcie0 = eng.report.pcie_copy_bytes;
+        let end = eng.promote_from_host(l, e, 0, 0).unwrap();
+        assert!(end > eng.now());
+        assert!(eng.placement.server_has(0, l, e));
+        assert!(!eng.placement.server_staged(0, l, e));
+        assert_eq!(eng.cache.promotions, 1);
+        assert_eq!(
+            eng.report.pcie_copy_bytes,
+            pcie0 + m.expert_bytes as f64
+        );
+        assert!(eng.promote_from_host(l, e, 0, 0).is_err(), "not staged");
+        // demote: HBM → host (the original owner keeps coverage)
+        eng.demote_to_host(l, e, 0, 0).unwrap();
+        assert!(!eng.placement.server_has(0, l, e));
+        assert!(eng.placement.server_staged(0, l, e));
+        assert_eq!(eng.cache.demotions, 1);
+        // the last active replica can never be demoted
+        let (ls, lg) = eng.placement.owners_ref(l, e)[0];
+        assert!(eng.demote_to_host(l, e, ls, lg).is_err(), "last replica");
+    }
+
+    #[test]
+    fn host_staged_hits_replace_remote_calls() {
+        let (m, base, w) = small_world();
+        let trace = TraceGenerator::new(&m, &w, 31).gen_count(10);
+        let run = |stage: bool| {
+            let mut c = base.clone();
+            c.servers[0].host_mem_bytes =
+                m.expert_bytes * m.total_experts() as u64;
+            c.servers[0].gpus[0].mem_bytes +=
+                m.expert_bytes * m.total_experts() as u64;
+            let mut eng = Engine::new(
+                &m,
+                &c,
+                uniform::place(&m, &c),
+                EngineConfig {
+                    seed: 31,
+                    ..EngineConfig::default()
+                },
+                CostModel::default(),
+            );
+            if stage {
+                for l in 0..m.num_layers {
+                    for e in 0..m.num_experts {
+                        if !eng.placement.server_has(0, l, e) {
+                            eng.placement.stage_host(0, l, e).unwrap();
+                        }
+                    }
+                }
+            }
+            eng.push_trace(&trace);
+            eng.run();
+            (eng.cache, eng.report.net_bytes)
+        };
+        let (cold, cold_bytes) = run(false);
+        let (warm, warm_bytes) = run(true);
+        assert_eq!(cold.host_hits, 0, "nothing staged, nothing hits");
+        assert!(warm.host_hits > 0, "staged experts serve from the host tier");
+        assert!(warm.promotions > 0, "headroom lets hot hits promote to HBM");
+        assert!(
+            warm.remote_misses < cold.remote_misses,
+            "host hits replace remote calls: {} vs {}",
+            warm.remote_misses,
+            cold.remote_misses
+        );
+        assert!(
+            warm_bytes < cold_bytes,
+            "host hits keep activations off the network"
+        );
     }
 
     #[test]

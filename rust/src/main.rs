@@ -101,6 +101,39 @@ fn cli() -> Cli {
                            snapshots here as JSONL (implies --trace)")
                 .opt_flag("flight-out", "write flight-recorder dumps here \
                            as JSON (implies --trace)"),
+            Command::new("cache", "tiered expert cache: HBM → host DRAM → \
+                          remote, with cache-aware routing, EWMA-driven \
+                          prefetch and demotion, and demand promotion; \
+                          compares against the two-state (no host tier) \
+                          baseline at the same arrivals")
+                .flag("preset", Some("edge3"), "cluster preset (edge3|scaling<N>)")
+                .flag("model", Some("deepseek"), "model preset")
+                .flag("workload", Some("bigbench"), "bigbench|multidata")
+                .flag("rps", Some("8"), "aggregate arrival rate (req/s, whole cluster)")
+                .flag("profile", Some("bursty"), "arrival profile (poisson|bursty|diurnal)")
+                .flag("horizon", Some("600"), "virtual seconds of arrivals")
+                .flag("interval", Some("15"), "stats-bus / cache-control interval (s)")
+                .flag("slo", Some("15"), "latency SLO (s)")
+                .flag("algo", Some("dancemoe"), "placement algorithm for refreshes")
+                .flag("host-mem", Some("8"), "per-server host-DRAM budget, \
+                       in experts (0 reproduces the two-state engine \
+                       bit-for-bit)")
+                .flag("min-load", Some("5"), "cold floor (tok/s): below it a \
+                       falling expert demotes to host; a rising expert \
+                       must clear it to prefetch or promote")
+                .flag("seed", Some("0"), "rng seed")
+                .switch("migrate", "also run the live-migration loop \
+                         (in the baseline run too)")
+                .switch("no-baseline", "skip the two-state comparison run")
+                .switch("comms", "print the purpose-attributed byte matrix \
+                         and decision payback ledger")
+                .switch("trace", "record spans and print the latency decomposition")
+                .opt_flag("trace-out", "write Chrome trace-event JSON here \
+                           (implies --trace; open in Perfetto)")
+                .opt_flag("metrics-out", "write the per-interval metrics \
+                           snapshots here as JSONL (implies --trace)")
+                .opt_flag("flight-out", "write flight-recorder dumps here \
+                           as JSON (implies --trace)"),
             Command::new("tenants", "multi-tenant online serving: per-tenant \
                           queues, weighted-deficit admission, per-tenant \
                           SLOs driving placement refresh and autoscaling")
@@ -956,6 +989,198 @@ fn cmd_autoscale(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+fn cmd_cache(args: &Args) -> Result<(), String> {
+    let (model, mut cluster, workload, rps) = online_setup(args)?;
+    let profile = ArrivalProfile::from_name(&args.get_str("profile"))
+        .ok_or_else(|| {
+            format!("unknown profile '{}'", args.get_str("profile"))
+        })?;
+    let algo = PlacementAlgo::from_name(&args.get_str("algo"))
+        .map_err(|e| e.to_string())?;
+    let seed = args.get_u64("seed")?;
+    let horizon_s = args.get_f64("horizon")?;
+    let interval_s = args.get_f64("interval")?;
+    if interval_s <= 0.0 {
+        return Err("--interval must be positive".into());
+    }
+    let host_experts = args.get_u64("host-mem")?;
+    let min_load = args.get_f64("min-load")?;
+    if min_load < 0.0 {
+        return Err("--min-load must be non-negative".into());
+    }
+    for s in &mut cluster.servers {
+        s.host_mem_bytes = host_experts * model.expert_bytes;
+    }
+    let mut two_state = cluster.clone();
+    for s in &mut two_state.servers {
+        s.host_mem_bytes = 0;
+    }
+
+    // The autoscaler runs EWMA-only here: both bands are pushed out of
+    // reach so it never adds or drains replicas, but observe() still
+    // feeds the fast/slow load EWMAs the cache pass plans from. The
+    // tiered and two-state runs then differ ONLY in the host tier.
+    let acfg = AutoscaleConfig {
+        hi_ratio: f64::INFINITY,
+        util_hi_tps: f64::INFINITY,
+        min_load_tps: min_load,
+        ..AutoscaleConfig::default()
+    };
+    let gcfg = GatewayConfig {
+        horizon_s,
+        profile,
+        slo_s: args.get_f64("slo")?,
+        seed,
+        ..GatewayConfig::default()
+    };
+    let coord_cfg = CoordinatorConfig {
+        interval_s,
+        algo,
+        migrate: args.switch("migrate"),
+        seed,
+        autoscale: Some(acfg),
+        ..CoordinatorConfig::default()
+    };
+
+    // Same online-first start as the gateway. uniform::place is
+    // capacity-independent, so both runs start from the same GPU layout;
+    // only the host-tier budget differs between the two placements.
+    let mut gw = Gateway::new(
+        &model,
+        &cluster,
+        &workload,
+        uniform::place(&model, &cluster),
+        gcfg.clone(),
+        coord_cfg.clone(),
+    );
+    if obs_wanted(args) {
+        gw.enable_obs(ObsConfig::default());
+    }
+    let report = gw.run();
+
+    println!(
+        "cache: {} on {} — {:.1} req/s {} arrivals, {:.0}s horizon, \
+         {} experts of host DRAM per server",
+        model.name, cluster.name, rps, profile.name(), horizon_s,
+        host_experts,
+    );
+    let c = report.cache;
+    let lookups = c.hbm_hits + c.host_hits + c.remote_misses;
+    let share = |n: u64| {
+        if lookups > 0 {
+            format!("{:.1}%", 100.0 * n as f64 / lookups as f64)
+        } else {
+            "-".into()
+        }
+    };
+    let mut t = Table::new(
+        "expert lookups by tier (collaborative fallback path)",
+        &["tier", "lookups", "share", "cost model"],
+    );
+    t.row(vec![
+        "HBM hit".into(),
+        format!("{}", c.hbm_hits),
+        share(c.hbm_hits),
+        "local compute".into(),
+    ]);
+    t.row(vec![
+        "host hit".into(),
+        format!("{}", c.host_hits),
+        share(c.host_hits),
+        "PCIe promotion + local compute".into(),
+    ]);
+    t.row(vec![
+        "remote miss".into(),
+        format!("{}", c.remote_misses),
+        share(c.remote_misses),
+        "network round-trip to an owner".into(),
+    ]);
+    println!("{}", t.render());
+    println!(
+        "ops      {} prefetches ({:.2} MB over the network)   \
+         {} promotions ({:.2} MB over PCIe)   {} demotions ({:.2} MB)",
+        c.prefetches,
+        c.prefetch_bytes / 1e6,
+        c.promotions,
+        c.promotion_bytes / 1e6,
+        c.demotions,
+        c.demotion_bytes / 1e6,
+    );
+    let staged: Vec<String> = (0..cluster.num_servers())
+        .map(|s| {
+            format!(
+                "{} {}",
+                cluster.servers[s].name,
+                gw.engine.placement.host_mem_used(s)
+                    / model.expert_bytes.max(1)
+            )
+        })
+        .collect();
+    println!("staged   experts held in host DRAM at end: {}", staged.join("   "));
+    let remote_req_mb = |r: &GatewayReport| {
+        (r.comms.purpose_bytes[TransferPurpose::ExpertCall.index()]
+            + r.comms.purpose_bytes[TransferPurpose::ResultReturn.index()])
+            / 1e6
+    };
+    println!(
+        "tiered   p50 {:.2}s  p95 {:.2}s  p99 {:.2}s  shed {}  \
+         remote request bytes {:.2} MB",
+        report.latency_percentile(0.50),
+        report.latency_percentile(0.95),
+        report.latency_percentile(0.99),
+        report.shed,
+        remote_req_mb(&report),
+    );
+    print_decomp(&report.decomp);
+    if args.switch("comms") {
+        let names: Vec<String> =
+            cluster.servers.iter().map(|s| s.name.clone()).collect();
+        print_comms(&report, &names);
+    }
+    obs_epilogue(
+        args,
+        report.obs_dropped,
+        report.flight_dumps_dropped,
+        || gw.trace_json(),
+        || gw.metrics_jsonl(),
+        || gw.flight_json(),
+    )?;
+    if !args.switch("no-baseline") {
+        // the acceptance comparison: same arrivals, same control loop,
+        // host tier zeroed — today's two-state engine bit-for-bit
+        let mut base_gw = Gateway::new(
+            &model,
+            &two_state,
+            &workload,
+            uniform::place(&model, &two_state),
+            gcfg,
+            coord_cfg,
+        );
+        let base = base_gw.run();
+        println!(
+            "2-state  p50 {:.2}s  p95 {:.2}s  p99 {:.2}s  shed {}  \
+             remote request bytes {:.2} MB  (same arrivals, no host tier)",
+            base.latency_percentile(0.50),
+            base.latency_percentile(0.95),
+            base.latency_percentile(0.99),
+            base.shed,
+            remote_req_mb(&base),
+        );
+        let t95 = report.latency_percentile(0.95);
+        let b95 = base.latency_percentile(0.95);
+        let tmb = remote_req_mb(&report);
+        let bmb = remote_req_mb(&base);
+        if b95 > 0.0 && bmb > 0.0 {
+            println!(
+                "delta    p95 {:+.1}%   remote request bytes {:+.1}%",
+                100.0 * (t95 - b95) / b95,
+                100.0 * (tmb - bmb) / bmb,
+            );
+        }
+    }
+    Ok(())
+}
+
 /// Render one run's per-tenant rows.
 fn tenant_table(title: &str, tenants: &[TenantReport]) -> Table {
     let mut t = Table::new(
@@ -1628,6 +1853,7 @@ fn main() -> ExitCode {
         "serve" => cmd_serve(&args),
         "gateway" => cmd_gateway(&args),
         "autoscale" => cmd_autoscale(&args),
+        "cache" => cmd_cache(&args),
         "tenants" => cmd_tenants(&args),
         "regions" => cmd_regions(&args),
         "chaos" => cmd_chaos(&args),

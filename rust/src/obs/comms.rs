@@ -23,7 +23,7 @@ use crate::util::json::Json;
 
 /// Version stamped on every metrics JSONL row (`schema` field). Bump when
 /// a row type changes shape; `docs/OBS_SCHEMA.md` documents each version.
-pub const OBS_SCHEMA_VERSION: u32 = 2;
+pub const OBS_SCHEMA_VERSION: u32 = 3;
 
 /// Why a transfer crossed the network. Every byte booked on a
 /// [`crate::net::NetModel`] carries exactly one purpose.
@@ -43,10 +43,15 @@ pub enum TransferPurpose {
     ScaleOutCopy,
     /// A whole request forwarded to a peer region (cross-region spill).
     RegionSpill,
+    /// Expert weights fetched from a remote HBM owner into a server's
+    /// host-DRAM cache tier (predictive prefetch staging, and the cold-miss
+    /// fill of the tiered expert cache). Appended after the original five
+    /// purposes so historical indices stay stable.
+    PrefetchCopy,
 }
 
 /// Number of [`TransferPurpose`] variants (stride of per-link slices).
-pub const NUM_PURPOSES: usize = 5;
+pub const NUM_PURPOSES: usize = 6;
 
 impl TransferPurpose {
     pub const ALL: [TransferPurpose; NUM_PURPOSES] = [
@@ -55,6 +60,7 @@ impl TransferPurpose {
         TransferPurpose::MigrationCopy,
         TransferPurpose::ScaleOutCopy,
         TransferPurpose::RegionSpill,
+        TransferPurpose::PrefetchCopy,
     ];
 
     #[inline]
@@ -70,6 +76,7 @@ impl TransferPurpose {
             TransferPurpose::MigrationCopy => "migration_copy",
             TransferPurpose::ScaleOutCopy => "scaleout_copy",
             TransferPurpose::RegionSpill => "region_spill",
+            TransferPurpose::PrefetchCopy => "prefetch_copy",
         }
     }
 }

@@ -19,11 +19,15 @@ use crate::config::ClusterConfig;
 use crate::moe::ServerId;
 use crate::placement::Placement;
 
-/// Per-(server, GPU) reservation table over the cluster's capacities.
+/// Per-(server, GPU) reservation table over the cluster's capacities,
+/// plus the per-*server* host-DRAM tier of the expert cache (host memory
+/// is a server resource — staged experts live in host RAM, not on a GPU).
 #[derive(Debug, Clone)]
 pub struct MemoryLedger {
     cap: Vec<Vec<u64>>,
     reserved: Vec<Vec<u64>>,
+    host_cap: Vec<u64>,
+    host_reserved: Vec<u64>,
 }
 
 impl MemoryLedger {
@@ -39,6 +43,12 @@ impl MemoryLedger {
                 .iter()
                 .map(|s| vec![0; s.gpus.len()])
                 .collect(),
+            host_cap: cluster
+                .servers
+                .iter()
+                .map(|s| s.host_mem_bytes)
+                .collect(),
+            host_reserved: vec![0; cluster.servers.len()],
         }
     }
 
@@ -82,6 +92,50 @@ impl MemoryLedger {
 
     pub fn capacity(&self, server: ServerId, gpu: usize) -> u64 {
         self.cap[server][gpu]
+    }
+
+    // ---- host-DRAM tier -------------------------------------------------
+
+    /// Host bytes still spendable on a server: host capacity minus what
+    /// the placement has staged there minus in-flight reservations
+    /// (prefetch copies en route).
+    pub fn host_free(&self, p: &Placement, server: ServerId) -> u64 {
+        self.host_cap[server].saturating_sub(
+            p.host_mem_used(server) + self.host_reserved[server],
+        )
+    }
+
+    /// Reserve `bytes` of host DRAM on a server if they fit.
+    pub fn try_reserve_host(
+        &mut self,
+        p: &Placement,
+        server: ServerId,
+        bytes: u64,
+    ) -> bool {
+        if self.host_free(p, server) >= bytes {
+            self.host_reserved[server] += bytes;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Release a host-tier reservation (stage applied or abandoned).
+    pub fn release_host(&mut self, server: ServerId, bytes: u64) {
+        self.host_reserved[server] =
+            self.host_reserved[server].saturating_sub(bytes);
+    }
+
+    pub fn host_reserved(&self, server: ServerId) -> u64 {
+        self.host_reserved[server]
+    }
+
+    pub fn total_host_reserved(&self) -> u64 {
+        self.host_reserved.iter().sum()
+    }
+
+    pub fn host_capacity(&self, server: ServerId) -> u64 {
+        self.host_cap[server]
     }
 }
 

@@ -150,6 +150,18 @@ pub struct Placement {
     /// (O(replicas) instead of an O(servers × GPUs) scan per remote
     /// invocation). Draining replicas are excluded.
     owner_cache: Vec<Vec<(ServerId, usize)>>,
+    /// Host-DRAM cache tier: per-server bitset rows (shaped like
+    /// `server_bits`) of experts *staged* in host RAM. Staged copies are
+    /// not replicas — they are excluded from `server_has`, the owner
+    /// cache, coverage and validation — but a staged expert can be
+    /// promoted to HBM for one PCIe load instead of a remote fetch. All
+    /// rows stay zero when no server has `host_mem_bytes`, so the
+    /// two-state model (and `PartialEq` on placements) is untouched.
+    staged: Vec<u64>,
+    /// Host bytes held by staged experts, per server.
+    host_used: Vec<u64>,
+    /// Host-DRAM capacity per server (from `ServerConfig::host_mem_bytes`).
+    host_cap: Vec<u64>,
 }
 
 impl Placement {
@@ -173,6 +185,13 @@ impl Placement {
             server_bits: vec![0; cluster.num_servers() * words],
             mem_used: gpus.iter().map(|&g| vec![0; g]).collect(),
             owner_cache: vec![Vec::new(); total],
+            staged: vec![0; cluster.num_servers() * words],
+            host_used: vec![0; cluster.num_servers()],
+            host_cap: cluster
+                .servers
+                .iter()
+                .map(|s| s.host_mem_bytes)
+                .collect(),
             mem_cap: cluster
                 .servers
                 .iter()
@@ -581,6 +600,108 @@ impl Placement {
         Ok(())
     }
 
+    // ---- host-DRAM cache tier ------------------------------------------
+
+    /// Does any server have a host-DRAM cache budget? Cheap guard all
+    /// cache paths check first: `false` means the two-state model.
+    #[inline]
+    pub fn has_host_tier(&self) -> bool {
+        self.host_cap.iter().any(|&c| c > 0)
+    }
+
+    /// Is the expert staged in `server`'s host DRAM?
+    #[inline]
+    pub fn server_staged(
+        &self,
+        server: ServerId,
+        layer: LayerId,
+        expert: ExpertId,
+    ) -> bool {
+        let (w, m) = self.bit(server, self.eid(layer, expert));
+        self.staged[w] & m != 0
+    }
+
+    /// Stage an expert into a server's host DRAM; errors if already
+    /// staged there or the host budget would overflow.
+    pub fn stage_host(
+        &mut self,
+        server: ServerId,
+        layer: LayerId,
+        expert: ExpertId,
+    ) -> Result<()> {
+        let eid = self.eid(layer, expert);
+        let (w, m) = self.bit(server, eid);
+        if self.staged[w] & m != 0 {
+            return Err(Error::Placement(format!(
+                "expert l{layer}e{expert} already staged on s{server}"
+            )));
+        }
+        if self.host_used[server] + self.expert_bytes > self.host_cap[server]
+        {
+            return Err(Error::Placement(format!(
+                "s{server} host DRAM full staging l{layer}e{expert}"
+            )));
+        }
+        self.staged[w] |= m;
+        self.host_used[server] += self.expert_bytes;
+        Ok(())
+    }
+
+    /// Drop a staged expert from a server's host DRAM (promotion landed
+    /// in HBM, or host-tier eviction). Errors if not staged.
+    pub fn unstage_host(
+        &mut self,
+        server: ServerId,
+        layer: LayerId,
+        expert: ExpertId,
+    ) -> Result<()> {
+        let eid = self.eid(layer, expert);
+        let (w, m) = self.bit(server, eid);
+        if self.staged[w] & m == 0 {
+            return Err(Error::Placement(format!(
+                "expert l{layer}e{expert} not staged on s{server}"
+            )));
+        }
+        self.staged[w] &= !m;
+        self.host_used[server] -= self.expert_bytes;
+        Ok(())
+    }
+
+    /// Host bytes held by staged experts on a server.
+    #[inline]
+    pub fn host_mem_used(&self, server: ServerId) -> u64 {
+        self.host_used[server]
+    }
+
+    /// Host-DRAM capacity of a server.
+    #[inline]
+    pub fn host_capacity(&self, server: ServerId) -> u64 {
+        self.host_cap[server]
+    }
+
+    /// Every staged expert on a server, as (layer, expert) in eid order.
+    pub fn staged_experts(
+        &self,
+        server: ServerId,
+    ) -> Vec<(LayerId, ExpertId)> {
+        let mut out = Vec::new();
+        for w in 0..self.words {
+            let mut bits = self.staged[server * self.words + w];
+            while bits != 0 {
+                let b = bits.trailing_zeros() as usize;
+                bits &= bits - 1;
+                let eid = (w << 6) | b;
+                if eid < self.num_layers * self.num_experts {
+                    out.push((
+                        eid / self.num_experts,
+                        eid % self.num_experts,
+                    ));
+                }
+            }
+        }
+        out
+    }
+
     /// Replicas present in `new` but not in `self` — the transfers a
     /// migration must perform (Eq. 3's `z != z'` set, additions only;
     /// removals are free).
@@ -878,6 +999,41 @@ mod tests {
             vec![(0, 0, 0, 63), (0, 0, 1, 0), (1, 0, 7, 33), (2, 1, 25, 63)]
         );
         assert!(b.added_replicas(&a).is_empty());
+    }
+
+    #[test]
+    fn host_tier_stage_unstage_accounting() {
+        let m = ModelConfig::mixtral_8x7b_sim();
+        let mut c = ClusterConfig::edge_testbed_3_for(&m);
+        c.servers[0].host_mem_bytes = m.expert_bytes * 2;
+        let mut p = Placement::new(&m, &c);
+        assert!(p.has_host_tier());
+        p.stage_host(0, 0, 0).unwrap();
+        p.stage_host(0, 1, 3).unwrap();
+        assert!(p.server_staged(0, 0, 0));
+        assert!(p.server_staged(0, 1, 3));
+        assert_eq!(p.host_mem_used(0), m.expert_bytes * 2);
+        assert_eq!(p.staged_experts(0), vec![(0, 0), (1, 3)]);
+        // staged ≠ resident: routing and coverage ignore the host tier
+        assert!(!p.server_has(0, 0, 0));
+        assert_eq!(p.coverage(0, 0), 0);
+        // budget enforced, double-stage refused
+        assert!(p.stage_host(0, 2, 0).is_err(), "host DRAM full");
+        assert!(p.stage_host(0, 0, 0).is_err(), "double stage");
+        // server 1 has no budget at all
+        assert!(p.stage_host(1, 0, 0).is_err());
+        p.unstage_host(0, 0, 0).unwrap();
+        assert!(!p.server_staged(0, 0, 0));
+        assert_eq!(p.host_mem_used(0), m.expert_bytes);
+        assert!(p.unstage_host(0, 0, 0).is_err(), "double unstage");
+    }
+
+    #[test]
+    fn no_host_budget_means_no_tier() {
+        let m = ModelConfig::mixtral_8x7b_sim();
+        let c = ClusterConfig::edge_testbed_3_for(&m);
+        let p = Placement::new(&m, &c);
+        assert!(!p.has_host_tier());
     }
 
     #[test]

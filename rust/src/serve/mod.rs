@@ -50,7 +50,7 @@ pub use tenant::{TenantConfig, TenantId, TenantReport, TenantSet};
 use crate::cluster::RegionTopology;
 use crate::config::{ClusterConfig, ModelConfig, WorkloadConfig};
 use crate::coordinator::{Coordinator, CoordinatorConfig};
-use crate::engine::{CostModel, Engine, EngineConfig, ServeReport};
+use crate::engine::{CacheStats, CostModel, Engine, EngineConfig, ServeReport};
 use crate::obs::comms::{
     purpose_json, CommsReport, DecisionKind, PaybackLedger, TransferPurpose,
     NUM_PURPOSES, OBS_SCHEMA_VERSION,
@@ -190,6 +190,10 @@ pub struct GatewayReport {
     /// Flight dumps discarded after `max_flight_dumps` filled (visible
     /// data loss: later breaches in the run left no forensic snapshot).
     pub flight_dumps_dropped: u64,
+    /// Tiered expert-cache counters (hits per tier, promotions,
+    /// demotions, prefetches and their bytes). All-zero when no server
+    /// has a host-DRAM budget.
+    pub cache: CacheStats,
 }
 
 impl GatewayReport {
@@ -303,6 +307,9 @@ pub struct Gateway {
     obs_prev_remote: f64,
     /// Previous tick time (window-rate normalization).
     obs_prev_tick_s: f64,
+    /// Previous tick's cumulative cache counters (the `cache_window`
+    /// delta base; only advanced when a host tier exists).
+    obs_prev_cache: CacheStats,
 }
 
 impl Gateway {
@@ -425,6 +432,7 @@ impl Gateway {
             obs_prev_local: 0.0,
             obs_prev_remote: 0.0,
             obs_prev_tick_s: 0.0,
+            obs_prev_cache: CacheStats::default(),
             cfg,
         }
     }
@@ -971,6 +979,62 @@ impl Gateway {
                 Json::Num(self.engine.placement.total_replicas() as f64),
             ),
         ]));
+        // ---- cache_window row: host-tier activity this window -----------
+        // (only with a host tier, so two-state metrics streams carry no
+        // new row kind)
+        if self.engine.placement.has_host_tier() {
+            let cur = self.engine.cache;
+            let prev = self.obs_prev_cache;
+            let eb = self.engine.model.expert_bytes.max(1) as f64;
+            let staged: f64 = (0..nservers)
+                .map(|s| {
+                    self.engine.placement.host_mem_used(s) as f64 / eb
+                })
+                .sum();
+            self.engine.obs.push_metrics_row(Json::from_pairs(vec![
+                ("t_s", Json::Num(t)),
+                ("kind", Json::Str("cache_window".into())),
+                ("schema", Json::Num(OBS_SCHEMA_VERSION as f64)),
+                (
+                    "hbm_hits",
+                    Json::Num((cur.hbm_hits - prev.hbm_hits) as f64),
+                ),
+                (
+                    "host_hits",
+                    Json::Num((cur.host_hits - prev.host_hits) as f64),
+                ),
+                (
+                    "remote_misses",
+                    Json::Num((cur.remote_misses - prev.remote_misses) as f64),
+                ),
+                (
+                    "promotions",
+                    Json::Num((cur.promotions - prev.promotions) as f64),
+                ),
+                (
+                    "demotions",
+                    Json::Num((cur.demotions - prev.demotions) as f64),
+                ),
+                (
+                    "prefetches",
+                    Json::Num((cur.prefetches - prev.prefetches) as f64),
+                ),
+                (
+                    "prefetch_bytes",
+                    Json::Num(cur.prefetch_bytes - prev.prefetch_bytes),
+                ),
+                (
+                    "promotion_bytes",
+                    Json::Num(cur.promotion_bytes - prev.promotion_bytes),
+                ),
+                (
+                    "demotion_bytes",
+                    Json::Num(cur.demotion_bytes - prev.demotion_bytes),
+                ),
+                ("staged_experts", Json::Num(staged)),
+            ]));
+            self.obs_prev_cache = cur;
+        }
         self.obs_prev_purpose = cur_purpose;
         self.obs_prev_local = lsum;
         self.obs_prev_remote = rsum;
@@ -983,6 +1047,8 @@ impl Gateway {
         // state see no phantom reservations or unpromoted replicas
         let completions = self.engine.take_scale_completions();
         self.coordinator.fold_completions(&completions);
+        // likewise for prefetch copies that landed after the last tick
+        self.coordinator.fold_prefetch_completions(&mut self.engine);
         let serve = std::mem::replace(
             &mut self.engine.report,
             ServeReport::new(
@@ -1065,6 +1131,7 @@ impl Gateway {
             },
             obs_dropped: self.engine.obs.dropped,
             flight_dumps_dropped: self.engine.obs.dumps_dropped,
+            cache: self.engine.cache,
             serve,
         }
     }
@@ -1368,6 +1435,56 @@ mod tests {
         assert!(rows.lines().count() >= 3, "one row per interval minimum");
         let (_, _, _, trace_b) = mk(true);
         assert_eq!(trace_a, trace_b, "same seed ⇒ byte-identical trace");
+    }
+
+    #[test]
+    fn host_tier_emits_cache_window_rows() {
+        let (m, c, w) = small();
+        let mut tiered = c.clone();
+        for s in &mut tiered.servers {
+            s.host_mem_bytes = m.expert_bytes * 8;
+        }
+        let run = |cluster: &ClusterConfig| {
+            let mut gw = Gateway::new(
+                &m,
+                cluster,
+                &w,
+                uniform::place(&m, cluster),
+                GatewayConfig {
+                    horizon_s: 120.0,
+                    seed: 3,
+                    ..GatewayConfig::default()
+                },
+                CoordinatorConfig {
+                    interval_s: 30.0,
+                    migrate: false,
+                    autoscale: Some(crate::autoscale::AutoscaleConfig {
+                        min_load_tps: 1.0,
+                        ..crate::autoscale::AutoscaleConfig::default()
+                    }),
+                    ..CoordinatorConfig::default()
+                },
+            );
+            gw.enable_obs(ObsConfig::default());
+            let report = gw.run();
+            (report, gw.metrics_jsonl())
+        };
+        let (tiered_report, tiered_rows) = run(&tiered);
+        assert!(tiered_report.cache.hbm_hits > 0, "local hits count");
+        assert!(
+            tiered_rows.contains("cache_window"),
+            "host tier must emit cache rows"
+        );
+        // no host budget ⇒ no cache row kind, all counters stay zero
+        let (plain_report, plain_rows) = run(&c);
+        assert!(!plain_rows.contains("cache_window"));
+        assert_eq!(plain_report.cache.host_hits, 0);
+        assert_eq!(plain_report.cache.prefetches, 0);
+        // determinism: the cache path replays bit-identically per seed
+        let (again, rows_again) = run(&tiered);
+        assert_eq!(tiered_report.cache.host_hits, again.cache.host_hits);
+        assert_eq!(tiered_report.cache.prefetches, again.cache.prefetches);
+        assert_eq!(tiered_rows, rows_again);
     }
 
     #[test]

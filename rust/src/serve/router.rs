@@ -23,19 +23,38 @@ use crate::config::{ModelConfig, TaskKind};
 use crate::placement::Placement;
 use crate::trace::TaskProfile;
 
+/// Weight a host-staged (not HBM-resident) expert contributes to the
+/// hosted-mass score, relative to an HBM replica's 1.0. A staged expert
+/// is *not* free — a hit pays the PCIe promotion load
+/// (`load_s × (1 − offload_prefetch_overlap)`, ~11 ms for a Mixtral
+/// expert over 16 GB/s under the default cost model) — but it is far
+/// cheaper than re-fetching the weights remotely or round-tripping every
+/// activation batch, so the router must not score it as absent either.
+/// The default halves the credit: the modeled promotion costs roughly
+/// half of what the residual remote traffic it avoids would.
+pub const STAGED_DISCOUNT: f64 = 0.5;
+
 /// Activation mass of `profile` hosted locally by `server` under `p`:
-/// `Σ_l Σ_e profile[l][e] · 1[server holds (l, e)]`. Ranges over
-/// `[0, num_layers]` (each layer's distribution sums to 1).
+/// `Σ_l Σ_e profile[l][e] · 1[server holds (l, e)]`, plus
+/// [`STAGED_DISCOUNT`]` · f` for experts the server only holds in its
+/// host-DRAM cache tier. Ranges over `[0, num_layers]` (each layer's
+/// distribution sums to 1). Without a host tier the staged term is
+/// identically zero, so two-state scores are unchanged.
 pub fn hosted_mass(
     profile: &TaskProfile,
     p: &Placement,
     server: usize,
 ) -> f64 {
+    let tiered = p.has_host_tier();
     let mut acc = 0.0;
     for (l, dist) in profile.dist.iter().enumerate() {
         for (e, &f) in dist.iter().enumerate() {
-            if f > 0.0 && p.server_has(server, l, e) {
-                acc += f;
+            if f > 0.0 {
+                if p.server_has(server, l, e) {
+                    acc += f;
+                } else if tiered && p.server_staged(server, l, e) {
+                    acc += f * STAGED_DISCOUNT;
+                }
             }
         }
     }
@@ -294,6 +313,45 @@ mod tests {
             );
             assert_eq!(r.score(t, 1), 0.0);
             assert_eq!(r.score(t, 2), 0.0);
+        }
+    }
+
+    #[test]
+    fn staged_experts_score_discounted_not_absent() {
+        // Cache-aware routing: a server holding a task's experts only in
+        // its host-DRAM tier earns exactly the discounted mass — more
+        // than absent, strictly less than HBM residency.
+        let m = ModelConfig::tiny();
+        let mut c = ClusterConfig::edge_testbed_3_for(&m);
+        c.servers[1].host_mem_bytes =
+            m.expert_bytes * m.total_experts() as u64;
+        let mut p = crate::placement::Placement::new(&m, &c);
+        for l in 0..m.num_layers {
+            for e in 0..m.num_experts {
+                p.place(0, 0, l, e).unwrap();
+            }
+        }
+        let bare = LocalityRouter::new(&m, &p);
+        for l in 0..m.num_layers {
+            for e in 0..m.num_experts {
+                p.stage_host(1, l, e).unwrap();
+            }
+        }
+        let staged = LocalityRouter::new(&m, &p);
+        for t in crate::config::TaskKind::all() {
+            assert_eq!(bare.score(t, 1), 0.0, "nothing staged yet");
+            assert!(staged.score(t, 1) > 0.0, "staged mass must count");
+            assert!(
+                staged.score(t, 1) < staged.score(t, 0),
+                "HBM residency must still outrank the host tier"
+            );
+            assert!(
+                (staged.score(t, 1) - STAGED_DISCOUNT * staged.score(t, 0))
+                    .abs()
+                    < 1e-12,
+                "staged credit is exactly the discounted full mass"
+            );
+            assert_eq!(staged.best(t, 1), 0, "full residency wins routing");
         }
     }
 

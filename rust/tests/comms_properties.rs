@@ -95,6 +95,87 @@ fn flat_gateway_attribution_is_exact() {
 }
 
 #[test]
+fn tiered_cache_attribution_is_exact_and_conserved() {
+    // The expert cache's host tier books its staging traffic under the
+    // prefetch_copy purpose: the link matrix still re-sums bit-exactly
+    // with the sixth purpose in play, the engine's cache counters agree
+    // with the network account bit for bit, and a zero host budget books
+    // no prefetch bytes at all.
+    let build = |host_experts: u64| {
+        let mut m = ModelConfig::deepseek_v2_lite_sim();
+        m.num_layers = 4;
+        let mut c = ClusterConfig::edge_testbed_3_for(&m);
+        for s in &mut c.servers {
+            s.host_mem_bytes = host_experts * m.expert_bytes;
+        }
+        let w = WorkloadConfig::bigbench(5.0);
+        Gateway::new(
+            &m,
+            &c,
+            &w,
+            uniform::place(&m, &c),
+            GatewayConfig {
+                horizon_s: 240.0,
+                profile: dancemoe::serve::ArrivalProfile::Bursty {
+                    factor: 6.0,
+                    burst_s: 30.0,
+                    period_s: 120.0,
+                },
+                seed: 7,
+                ..GatewayConfig::default()
+            },
+            CoordinatorConfig {
+                interval_s: 15.0,
+                migrate: false,
+                seed: 7,
+                // EWMA-only: feeds the cache pass's load signal, never
+                // adds or drains replicas itself
+                autoscale: Some(dancemoe::autoscale::AutoscaleConfig {
+                    hi_ratio: f64::INFINITY,
+                    util_hi_tps: f64::INFINITY,
+                    min_load_tps: 1.0,
+                    ..dancemoe::autoscale::AutoscaleConfig::default()
+                }),
+                ..CoordinatorConfig::default()
+            },
+        )
+    };
+    let mut tiered = build(16);
+    let report = tiered.run();
+    assert_exact(&report.comms, "tiered gateway");
+    let pf = TransferPurpose::PrefetchCopy.index();
+    assert!(
+        report.comms.purpose_bytes[pf] > 0.0,
+        "the burst onsets must trigger prefetches"
+    );
+    assert_eq!(
+        report.comms.purpose_bytes[pf].to_bits(),
+        report.cache.prefetch_bytes.to_bits(),
+        "network account and cache counters must agree on prefetch bytes"
+    );
+    assert!(report.cache.host_hits > 0, "staged experts must get hits");
+    // every host hit and demotion moves weights over PCIe (promotions on
+    // top), never over the request network
+    let eb = tiered.engine.model.expert_bytes as f64;
+    assert!(
+        report.comms.pcie_copy_bytes
+            >= report.cache.host_hits as f64 * eb
+                + report.cache.demotion_bytes,
+        "host-tier PCIe traffic must be accounted"
+    );
+
+    let mut two_state = build(0);
+    let base = two_state.run();
+    assert_exact(&base.comms, "two-state gateway");
+    assert_eq!(
+        base.comms.purpose_bytes[pf], 0.0,
+        "no host budget, no prefetch traffic"
+    );
+    assert_eq!(base.cache.host_hits, 0);
+    assert_eq!(base.cache.prefetches, 0);
+}
+
+#[test]
 fn topology_priced_attribution_is_exact() {
     // the single-global-gateway baseline: one engine over the merged
     // cluster with cross-region links priced by the topology
@@ -209,7 +290,7 @@ fn payback_ledger_credits_migrations_and_emits_rows() {
         last = t;
         assert_eq!(
             row.get("schema").and_then(|v| v.as_f64()),
-            Some(2.0),
+            Some(3.0),
             "every row carries the schema version"
         );
         if let Some(Json::Str(k)) = row.get("kind") {

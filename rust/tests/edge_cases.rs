@@ -79,6 +79,7 @@ fn single_server_cluster_never_remote() {
                 flops: 100e12,
                 pcie_bps: 16e9,
             }],
+            host_mem_bytes: 0,
         }],
         bandwidth_bps: 500e6,
         rtt_s: 0.002,

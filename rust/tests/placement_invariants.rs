@@ -4,7 +4,8 @@
 use dancemoe::config::{ClusterConfig, GpuConfig, ModelConfig, ServerConfig};
 use dancemoe::moe::ActivationStats;
 use dancemoe::placement::{
-    dancemoe_place, entropy_alloc, migration, objective, PlacementAlgo,
+    dancemoe_place, entropy_alloc, migration, objective, MemoryLedger,
+    Placement, PlacementAlgo,
 };
 use dancemoe::util::prop::{assert_prop, check, Gen};
 
@@ -34,6 +35,7 @@ fn gen_world(g: &mut Gen) -> (ModelConfig, ClusterConfig, ActivationStats) {
                     pcie_bps: 16e9,
                 })
                 .collect(),
+            host_mem_bytes: 0,
         });
     }
     let cluster = ClusterConfig {
@@ -196,6 +198,148 @@ fn prop_migration_adoption_is_consistent() {
             &old, &old, &model, &cluster, &stats, &ctx,
         );
         assert_prop(!d2.adopt, "self migration adopted");
+    });
+}
+
+#[test]
+fn prop_host_tier_ledger_never_overcommits() {
+    // The expert cache's planning protocol — reserve host DRAM, let the
+    // prefetch land (stage + release) or abandon it (release), evict by
+    // unstaging — can never overshoot a server's host budget, and the
+    // tiered free accounting never drifts or underflows.
+    check("host ledger", 60, |g| {
+        let (model, mut cluster, _stats) = gen_world(g);
+        let bytes = model.expert_bytes;
+        for s in &mut cluster.servers {
+            s.host_mem_bytes = bytes * g.usize_in(0, 5) as u64;
+        }
+        let mut p = Placement::new(&model, &cluster);
+        let mut ledger = MemoryLedger::new(&cluster);
+        let nsrv = cluster.num_servers();
+        let mut inflight = vec![0usize; nsrv];
+        for _ in 0..60 {
+            let s = g.usize_in(0, nsrv - 1);
+            match g.usize_in(0, 3) {
+                // plan a prefetch: the reservation must succeed exactly
+                // when the tiered free accounting says the bytes fit
+                0 => {
+                    let fits = ledger.host_free(&p, s) >= bytes;
+                    let got = ledger.try_reserve_host(&p, s, bytes);
+                    assert_prop(
+                        got == fits,
+                        "reserve must match the free accounting",
+                    );
+                    if got {
+                        inflight[s] += 1;
+                    }
+                }
+                // the copy lands: consume the reservation, stage the bits
+                // (the reservation guaranteed the room, so staging one
+                // not-yet-staged expert must succeed)
+                1 if inflight[s] > 0 => {
+                    inflight[s] -= 1;
+                    ledger.release_host(s, bytes);
+                    'find: for l in 0..model.num_layers {
+                        for e in 0..model.num_experts {
+                            if !p.server_staged(s, l, e) {
+                                assert_prop(
+                                    p.stage_host(s, l, e).is_ok(),
+                                    "a reserved stage must fit",
+                                );
+                                break 'find;
+                            }
+                        }
+                    }
+                }
+                // the copy is abandoned: the reservation comes back whole
+                2 if inflight[s] > 0 => {
+                    inflight[s] -= 1;
+                    ledger.release_host(s, bytes);
+                }
+                // eviction: drop a staged expert (no-op when none staged)
+                _ => {
+                    if let Some(&(l, e)) = p.staged_experts(s).first() {
+                        assert_prop(
+                            p.unstage_host(s, l, e).is_ok(),
+                            "unstaging a staged expert succeeds",
+                        );
+                    }
+                }
+            }
+            for n in 0..nsrv {
+                assert_prop(
+                    p.host_mem_used(n) + ledger.host_reserved(n)
+                        <= ledger.host_capacity(n),
+                    "host tier over-committed",
+                );
+                assert_prop(
+                    ledger.host_free(&p, n)
+                        == ledger.host_capacity(n)
+                            - p.host_mem_used(n)
+                            - ledger.host_reserved(n),
+                    "free accounting drifted",
+                );
+            }
+        }
+        // drain everything: the accounting round-trips to pristine
+        for s in 0..nsrv {
+            while inflight[s] > 0 {
+                inflight[s] -= 1;
+                ledger.release_host(s, bytes);
+            }
+            for (l, e) in p.staged_experts(s) {
+                p.unstage_host(s, l, e).unwrap();
+            }
+            assert_prop(p.host_mem_used(s) == 0, "used returns to zero");
+            assert_prop(
+                ledger.host_free(&p, s) == ledger.host_capacity(s),
+                "free returns to capacity",
+            );
+        }
+        assert_prop(
+            ledger.total_host_reserved() == 0,
+            "reservations all returned",
+        );
+    });
+}
+
+#[test]
+fn prop_host_budget_stages_whole_experts_exactly() {
+    // A host budget offset by a fraction of an expert still stages only
+    // whole experts — exactly floor(budget / expert_bytes) of them — and
+    // the used/enumeration accounting agrees with the staged count.
+    check("host slots", 60, |g| {
+        let (model, mut cluster, _stats) = gen_world(g);
+        let slots = g.usize_in(0, 7);
+        let frac =
+            (model.expert_bytes as f64 * g.f64_in(0.0, 0.99)) as u64;
+        for s in &mut cluster.servers {
+            s.host_mem_bytes = model.expert_bytes * slots as u64 + frac;
+        }
+        let mut p = Placement::new(&model, &cluster);
+        let total = model.num_layers * model.num_experts;
+        let s = g.usize_in(0, cluster.num_servers() - 1);
+        let mut staged = 0usize;
+        'fill: for l in 0..model.num_layers {
+            for e in 0..model.num_experts {
+                if p.stage_host(s, l, e).is_err() {
+                    break 'fill;
+                }
+                staged += 1;
+            }
+        }
+        assert_prop(
+            staged == slots.min(total),
+            "stages exactly the whole-expert slots",
+        );
+        assert_prop(
+            p.host_mem_used(s) == model.expert_bytes * staged as u64,
+            "used counts whole experts",
+        );
+        assert_prop(
+            p.staged_experts(s).len() == staged,
+            "enumeration matches the staged count",
+        );
     });
 }
 
